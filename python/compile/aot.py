@@ -1,0 +1,69 @@
+"""AOT lowering: jit the L2 model functions and dump HLO *text* artifacts
+the rust runtime loads through the PJRT CPU client.
+
+HLO text (not a serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate links) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (see Makefile).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import payload as payload_kernel
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_learner() -> str:
+    """Lower learner_update for the fixed artifact shape."""
+    n, k = model.N_WORKERS, model.K_SAMPLES
+    spec = jax.ShapeDtypeStruct((n, k), jnp.float32)
+    cnt = jax.ShapeDtypeStruct((n,), jnp.int32)
+    par = jax.ShapeDtypeStruct((4,), jnp.float32)
+    lowered = jax.jit(model.learner_update).lower(spec, spec, spec, cnt, par)
+    return to_hlo_text(lowered)
+
+
+def lower_payload() -> str:
+    """Lower payload_forward for the fixed artifact shape."""
+    x = jax.ShapeDtypeStruct((payload_kernel.BATCH, payload_kernel.D_IN), jnp.float32)
+    w1 = jax.ShapeDtypeStruct((payload_kernel.D_IN, payload_kernel.D_H), jnp.float32)
+    b1 = jax.ShapeDtypeStruct((payload_kernel.D_H,), jnp.float32)
+    w2 = jax.ShapeDtypeStruct((payload_kernel.D_H, payload_kernel.D_OUT), jnp.float32)
+    b2 = jax.ShapeDtypeStruct((payload_kernel.D_OUT,), jnp.float32)
+    lowered = jax.jit(model.payload_forward).lower(x, w1, b1, w2, b2)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name, text in [("learner", lower_learner()), ("payload", lower_payload())]:
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Pallas kernel: the benchmark-job MLP payload.
+
+The live workers execute this as their "real compute" when serving
+requests (examples/live_serving.rs): a two-layer MLP inference batch.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the matmuls are tiled to the
+128-lane MXU geometry -- D_in = D_out = 128, D_h = 256, so each grid step
+computes a (BLOCK_B, 128) @ (128, 256) and a (BLOCK_B, 256) @ (256, 128)
+contraction entirely from VMEM tiles. ``preferred_element_type=float32``
+keeps the MXU accumulation in f32 (the bfloat16-input variant would halve
+VMEM traffic; we stay f32 end-to-end because the CPU interpret path is the
+correctness oracle).
+
+VMEM per block: x (BLOCK_B x 128) + w1 (128 x 256) + w2 (256 x 128) +
+intermediates ~ (8x128 + 2*128*256 + 8*256 + 8*128) x 4 B ~ 270 KiB --
+comfortably VMEM-resident; weights are reused across the batch grid.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Artifact shapes (kept in sync with rust/src/runtime/payload.rs).
+BATCH = 8
+D_IN = 128
+D_H = 256
+D_OUT = 128
+
+
+def _payload_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """relu(x @ w1 + b1) @ w2 + b2 for one batch block."""
+    x = x_ref[...]
+    h = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    h = jnp.maximum(h + b1_ref[...][None, :], 0.0)
+    o = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = o + b2_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def payload_forward(x, w1, b1, w2, b2, block_b=BATCH):
+    """Pallas-backed MLP forward; same contract as payload_forward_ref."""
+    b, d_in = x.shape
+    d_h = w1.shape[1]
+    d_out = w2.shape[1]
+    assert b % block_b == 0, f"batch {b} not a multiple of block {block_b}"
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _payload_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((d_in, d_h), lambda i: (0, 0)),
+            pl.BlockSpec((d_h,), lambda i: (0,)),
+            pl.BlockSpec((d_h, d_out), lambda i: (0, 0)),
+            pl.BlockSpec((d_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d_out), jnp.float32),
+        interpret=True,
+    )(x, w1, b1, w2, b2)

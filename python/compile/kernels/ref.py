@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signals: every Pallas kernel in this package
+must match its oracle to float32 tolerance across a hypothesis sweep of
+shapes and parameters (see python/tests/).
+
+Two kernels mirror the paper's two compute hot-spots:
+
+* ``learner_aggregate_ref`` — the vectorised LEARNER-AGGREGATE rule
+  (paper Fig. 6) over all workers' service-sample ring buffers. This is the
+  per-publish O(n*L) sweep of Rosella's performance learner; the rust
+  native implementation (rust/src/learner/perf.rs) follows the same rule
+  and the runtime test verifies rust-vs-artifact equivalence.
+
+* ``payload_forward_ref`` — the benchmark-job compute payload: a two-layer
+  MLP inference batch (x @ W1 -> relu -> @ W2 + b), the "resembles recent
+  workloads" stand-in executed by live workers through PJRT.
+"""
+
+import jax.numpy as jnp
+
+
+def learner_aggregate_ref(durations, demands, ages, counts, params):
+    """Vectorised LEARNER-AGGREGATE (paper Fig. 6).
+
+    Args:
+      durations: f32[n, k] -- service durations, newest first, zero-padded.
+      demands:   f32[n, k] -- matching task demands (unit-speed seconds).
+      ages:      f32[n, k] -- now - completion_time for each sample;
+                 padding entries carry a huge value (> horizon).
+      counts:    i32[n]    -- number of valid samples per worker.
+      params:    f32[4]    -- [window L, epsilon, horizon, cold_start_flag].
+
+    Returns:
+      f32[n] -- speed estimates mu_hat, with the paper's semantics:
+        * use the most recent min(count, L) samples with age <= horizon;
+        * a full window of L fresh samples -> (1-eps) * sum(demand)/sum(dur);
+        * fewer (but >0) fresh samples during cold start -> same formula;
+        * otherwise -> 0 (worker discarded / "dead").
+    """
+    n, k = durations.shape
+    window = params[0]
+    eps = params[1]
+    horizon = params[2]
+    cold = params[3] > 0.5
+
+    idx = jnp.arange(k, dtype=jnp.float32)[None, :]  # column index, newest=0
+    valid = idx < jnp.minimum(counts.astype(jnp.float32)[:, None], window)
+    fresh = jnp.logical_and(valid, ages <= horizon)
+    # The paper walks newest-first and stops at the first stale sample;
+    # with monotone ages (newest first) "fresh & within window" is the
+    # same set.
+    used = jnp.sum(fresh.astype(jnp.float32), axis=1)
+    sum_dur = jnp.sum(jnp.where(fresh, durations, 0.0), axis=1)
+    sum_dem = jnp.sum(jnp.where(fresh, demands, 0.0), axis=1)
+    est = (1.0 - eps) * sum_dem / jnp.maximum(sum_dur, 1e-12)
+    full = used >= window
+    some = used > 0.0
+    keep = jnp.logical_or(full, jnp.logical_and(some, cold))
+    return jnp.where(keep, est, 0.0)
+
+
+def payload_forward_ref(x, w1, b1, w2, b2):
+    """Two-layer MLP inference: relu(x @ w1 + b1) @ w2 + b2.
+
+    Shapes: x f32[B, D_in], w1 f32[D_in, D_h], b1 f32[D_h],
+    w2 f32[D_h, D_out], b2 f32[D_out] -> f32[B, D_out].
+    """
+    h = jnp.maximum(x @ w1 + b1, 0.0)
+    return h @ w2 + b2

@@ -1,0 +1,59 @@
+"""Layer-2 JAX model: the computations Rosella's rust coordinator executes
+through PJRT, expressed as jitted JAX functions that call the Layer-1
+Pallas kernels.
+
+Two entry points are AOT-lowered by ``aot.py``:
+
+* ``learner_update`` — the performance learner's publish step for a fixed
+  artifact shape (N_WORKERS x K_SAMPLES ring buffers -> mu_hat vector);
+* ``payload_forward`` — the benchmark/request MLP payload.
+
+Python never runs at serve time: these functions exist only to be lowered
+to HLO text once (``make artifacts``).
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import learner as learner_kernel
+from compile.kernels import payload as payload_kernel
+
+# Artifact shapes (kept in sync with rust/src/runtime/).
+N_WORKERS = 16
+K_SAMPLES = 64
+
+
+def learner_update(durations, demands, ages, counts, params):
+    """LEARNER-AGGREGATE over the full worker set (Pallas-backed).
+
+    Shapes: durations/demands/ages f32[N_WORKERS, K_SAMPLES],
+    counts i32[N_WORKERS], params f32[4] = [L, eps, horizon, cold].
+    Returns f32[N_WORKERS].
+    """
+    return learner_kernel.learner_aggregate(durations, demands, ages, counts, params)
+
+
+def payload_forward(x, w1, b1, w2, b2):
+    """Benchmark-job MLP inference (Pallas-backed).
+
+    Shapes: x f32[BATCH, D_IN], w1 f32[D_IN, D_H], b1 f32[D_H],
+    w2 f32[D_H, D_OUT], b2 f32[D_OUT] -> f32[BATCH, D_OUT].
+    """
+    return payload_kernel.payload_forward(x, w1, b1, w2, b2)
+
+
+def payload_init(seed: int = 0):
+    """Deterministic payload weights used by both pytest and the rust
+    runtime smoke tests (small values keep activations O(1))."""
+    import numpy as np
+
+    rng = np.random.RandomState(seed)
+    w1 = rng.uniform(-0.05, 0.05, (payload_kernel.D_IN, payload_kernel.D_H))
+    b1 = rng.uniform(-0.01, 0.01, payload_kernel.D_H)
+    w2 = rng.uniform(-0.05, 0.05, (payload_kernel.D_H, payload_kernel.D_OUT))
+    b2 = rng.uniform(-0.01, 0.01, payload_kernel.D_OUT)
+    return (
+        jnp.asarray(w1, jnp.float32),
+        jnp.asarray(b1, jnp.float32),
+        jnp.asarray(w2, jnp.float32),
+        jnp.asarray(b2, jnp.float32),
+    )

@@ -1,0 +1,171 @@
+"""Kernel-vs-oracle correctness: the Pallas kernels must match the pure-jnp
+references across a hypothesis sweep of shapes, values, and parameters."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import learner as learner_kernel
+from compile.kernels import payload as payload_kernel
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def make_learner_inputs(rng, n, k, horizon=100.0, full_rows=None):
+    """Random ring-buffer matrices with realistic structure (ages ascend
+    newest-first; padding has huge age)."""
+    durations = rng.uniform(0.01, 0.5, (n, k)).astype(np.float32)
+    demands = rng.uniform(0.01, 0.3, (n, k)).astype(np.float32)
+    counts = rng.randint(0, k + 1, n).astype(np.int32)
+    if full_rows is not None:
+        counts[full_rows] = k
+    ages = np.cumsum(rng.uniform(0.0, 5.0, (n, k)), axis=1).astype(np.float32)
+    idx = np.arange(k)[None, :]
+    ages = np.where(idx < counts[:, None], ages, np.float32(1e30))
+    return durations, demands, ages, counts
+
+
+class TestLearnerKernel:
+    def test_matches_ref_basic(self):
+        rng = np.random.RandomState(0)
+        n, k = 16, 64
+        dur, dem, age, cnt = make_learner_inputs(rng, n, k)
+        params = jnp.asarray([8.0, 0.06, 50.0, 1.0], jnp.float32)
+        got = learner_kernel.learner_aggregate(dur, dem, age, cnt, params)
+        want = ref.learner_aggregate_ref(dur, dem, age, cnt, params)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    @given(
+        n_blocks=st.integers(1, 4),
+        k=st.sampled_from([8, 16, 64]),
+        window=st.floats(1.0, 32.0),
+        eps=st.floats(0.0, 0.3),
+        horizon=st.floats(1.0, 200.0),
+        cold=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref_sweep(self, n_blocks, k, window, eps, horizon, cold, seed):
+        rng = np.random.RandomState(seed)
+        n = n_blocks * learner_kernel.BLOCK_N
+        dur, dem, age, cnt = make_learner_inputs(rng, n, k)
+        params = jnp.asarray(
+            [window, eps, horizon, 1.0 if cold else 0.0], jnp.float32
+        )
+        got = learner_kernel.learner_aggregate(dur, dem, age, cnt, params)
+        want = ref.learner_aggregate_ref(dur, dem, age, cnt, params)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_full_window_estimate_value(self):
+        """A worker with constant duration/demand gets (1-eps)*speed."""
+        n, k = 8, 16
+        speed = 2.0
+        demand = 0.1
+        dur = np.full((n, k), demand / speed, np.float32)
+        dem = np.full((n, k), demand, np.float32)
+        age = np.tile(np.arange(k, dtype=np.float32), (n, 1))
+        cnt = np.full(n, k, np.int32)
+        params = jnp.asarray([8.0, 0.1, 100.0, 0.0], jnp.float32)
+        got = np.asarray(learner_kernel.learner_aggregate(dur, dem, age, cnt, params))
+        np.testing.assert_allclose(got, 0.9 * speed, rtol=1e-5)
+
+    def test_silent_worker_zeroed_when_not_cold(self):
+        n, k = 8, 16
+        dur, dem, age, cnt = make_learner_inputs(np.random.RandomState(1), n, k)
+        cnt[3] = 0
+        params = jnp.asarray([4.0, 0.05, 50.0, 0.0], jnp.float32)
+        got = np.asarray(learner_kernel.learner_aggregate(dur, dem, age, cnt, params))
+        assert got[3] == 0.0
+
+    def test_partial_window_kept_only_during_cold_start(self):
+        n, k = 8, 16
+        dur = np.full((n, k), 0.1, np.float32)
+        dem = np.full((n, k), 0.1, np.float32)
+        age = np.tile(np.arange(k, dtype=np.float32), (n, 1))
+        cnt = np.full(n, 2, np.int32)  # fewer than the window of 8
+        warm = jnp.asarray([8.0, 0.0, 100.0, 0.0], jnp.float32)
+        cold = jnp.asarray([8.0, 0.0, 100.0, 1.0], jnp.float32)
+        got_warm = np.asarray(learner_kernel.learner_aggregate(dur, dem, age, cnt, warm))
+        got_cold = np.asarray(learner_kernel.learner_aggregate(dur, dem, age, cnt, cold))
+        assert np.all(got_warm == 0.0)
+        np.testing.assert_allclose(got_cold, 1.0, rtol=1e-5)
+
+    def test_stale_samples_excluded(self):
+        """Samples older than the horizon must not contribute."""
+        n, k = 8, 8
+        dur = np.full((n, k), 0.1, np.float32)
+        dem = np.full((n, k), 0.1, np.float32)
+        age = np.full((n, k), 1e6, np.float32)  # all stale
+        cnt = np.full(n, k, np.int32)
+        params = jnp.asarray([4.0, 0.0, 10.0, 0.0], jnp.float32)
+        got = np.asarray(learner_kernel.learner_aggregate(dur, dem, age, cnt, params))
+        assert np.all(got == 0.0)
+
+
+class TestPayloadKernel:
+    def test_matches_ref_basic(self):
+        rng = np.random.RandomState(2)
+        x = rng.uniform(-1, 1, (payload_kernel.BATCH, payload_kernel.D_IN)).astype(np.float32)
+        w1 = rng.uniform(-0.1, 0.1, (payload_kernel.D_IN, payload_kernel.D_H)).astype(np.float32)
+        b1 = rng.uniform(-0.1, 0.1, payload_kernel.D_H).astype(np.float32)
+        w2 = rng.uniform(-0.1, 0.1, (payload_kernel.D_H, payload_kernel.D_OUT)).astype(np.float32)
+        b2 = rng.uniform(-0.1, 0.1, payload_kernel.D_OUT).astype(np.float32)
+        got = payload_kernel.payload_forward(x, w1, b1, w2, b2)
+        want = ref.payload_forward_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    @given(
+        blocks=st.integers(1, 3),
+        d_in=st.sampled_from([16, 128]),
+        d_h=st.sampled_from([32, 256]),
+        d_out=st.sampled_from([16, 128]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref_sweep(self, blocks, d_in, d_h, d_out, seed):
+        rng = np.random.RandomState(seed)
+        b = blocks * payload_kernel.BATCH
+        x = rng.uniform(-1, 1, (b, d_in)).astype(np.float32)
+        w1 = rng.uniform(-0.2, 0.2, (d_in, d_h)).astype(np.float32)
+        b1 = rng.uniform(-0.2, 0.2, d_h).astype(np.float32)
+        w2 = rng.uniform(-0.2, 0.2, (d_h, d_out)).astype(np.float32)
+        b2 = rng.uniform(-0.2, 0.2, d_out).astype(np.float32)
+        got = payload_kernel.payload_forward(x, w1, b1, w2, b2)
+        want = ref.payload_forward_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_relu_actually_clips(self):
+        """With a large negative bias the hidden layer saturates to zero and
+        the output equals b2 exactly."""
+        b, d_in, d_h, d_out = payload_kernel.BATCH, 16, 32, 16
+        rng = np.random.RandomState(3)
+        x = rng.uniform(-1, 1, (b, d_in)).astype(np.float32)
+        w1 = rng.uniform(-0.1, 0.1, (d_in, d_h)).astype(np.float32)
+        b1 = np.full(d_h, -100.0, np.float32)
+        w2 = rng.uniform(-0.1, 0.1, (d_h, d_out)).astype(np.float32)
+        b2 = rng.uniform(-0.5, 0.5, d_out).astype(np.float32)
+        got = np.asarray(payload_kernel.payload_forward(x, w1, b1, w2, b2))
+        np.testing.assert_allclose(got, np.tile(b2, (b, 1)), atol=1e-6)
+
+
+class TestModelShapes:
+    def test_learner_update_shape(self):
+        from compile import model
+
+        n, k = model.N_WORKERS, model.K_SAMPLES
+        rng = np.random.RandomState(4)
+        dur, dem, age, cnt = make_learner_inputs(rng, n, k)
+        params = jnp.asarray([8.0, 0.06, 50.0, 1.0], jnp.float32)
+        out = model.learner_update(dur, dem, age, cnt, params)
+        assert out.shape == (n,)
+        assert out.dtype == jnp.float32
+
+    def test_payload_forward_shape(self):
+        from compile import model
+
+        w1, b1, w2, b2 = model.payload_init(0)
+        x = jnp.ones((payload_kernel.BATCH, payload_kernel.D_IN), jnp.float32)
+        out = model.payload_forward(x, w1, b1, w2, b2)
+        assert out.shape == (payload_kernel.BATCH, payload_kernel.D_OUT)
+        assert bool(jnp.all(jnp.isfinite(out)))

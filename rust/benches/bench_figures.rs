@@ -1,0 +1,40 @@
+//! End-to-end figure benchmarks: regenerate every table/figure of the
+//! paper's evaluation section and report wall-clock cost per figure.
+//!
+//! `cargo bench --bench bench_figures` runs all figures at Quick scale;
+//! pass a figure name (and optionally `--full`) to run one at full scale:
+//! `cargo bench --bench bench_figures -- fig9 --full`.
+
+use rosella::experiments::{run_by_name, Scale, ALL};
+use std::time::Instant;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let full = args.iter().any(|a| a == "--full");
+    let wanted: Vec<&str> = args
+        .iter()
+        .filter(|a| !a.starts_with("--"))
+        .map(|s| s.as_str())
+        .collect();
+    let scale = if full { Scale::Full } else { Scale::Quick };
+    let names: Vec<&str> = if wanted.is_empty() {
+        ALL.iter().copied().filter(|&n| n != "all").collect()
+    } else {
+        wanted
+    };
+    println!("== bench_figures (scale: {scale:?}) ==");
+    for name in names {
+        let start = Instant::now();
+        match run_by_name(name, scale) {
+            Ok(report) => {
+                let secs = start.elapsed().as_secs_f64();
+                println!("\n### {name} ({secs:.2}s wall) ###");
+                println!("{report}");
+            }
+            Err(e) => {
+                eprintln!("{name}: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! Runtime benchmarks: PJRT artifact execution latency (the live worker's
+//! per-task compute) and the learner-kernel publish cost, plus the live
+//! coordinator's end-to-end serving throughput.
+//!
+//! Skips PJRT sections when `make artifacts` has not been run.
+
+use rosella::coordinator::{serve, LiveConfig, PayloadMode};
+use rosella::learner::PerfLearner;
+use rosella::runtime::{LearnerKernel, PayloadRunner};
+use rosella::scheduler::PolicyKind;
+use std::time::Instant;
+
+fn bench(name: &str, reps: u64, mut f: impl FnMut()) {
+    f(); // warmup
+    let start = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    let per = start.elapsed().as_secs_f64() / reps as f64;
+    println!("{name:<44} {:>10.1} us/op  {:>10.0} ops/s", per * 1e6, 1.0 / per);
+}
+
+fn main() {
+    println!("== bench_runtime ==");
+    let dir = std::env::var("ROSELLA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if rosella::runtime::artifacts_present(&dir) {
+        // Payload inference latency.
+        let runner = PayloadRunner::load(&dir, 7).expect("load payload");
+        let x = vec![0.25f32; rosella::runtime::BATCH * rosella::runtime::D_IN];
+        bench("payload infer (8x128 MLP batch, PJRT)", 2000, || {
+            std::hint::black_box(runner.infer(&x).unwrap());
+        });
+        bench("payload infer (native rust reference)", 2000, || {
+            std::hint::black_box(runner.infer_native(&x));
+        });
+
+        // Learner kernel publish.
+        let kernel = LearnerKernel::load(&dir).expect("load learner");
+        let mut learner = PerfLearner::new(16, 10.0, 0.1, 160.0, 1.0, 0.0);
+        let mut t = 0.0;
+        for k in 0..2000 {
+            t += 0.01;
+            learner.on_completion(k % 16, t, 0.05 + (k % 7) as f64 * 0.01, 0.1);
+        }
+        let params = learner.publish(t, 100.0);
+        bench("learner publish (native, n=16)", 20_000, || {
+            std::hint::black_box(learner.publish(t, 100.0));
+        });
+        bench("learner publish (PJRT kernel, n=16)", 500, || {
+            std::hint::black_box(kernel.publish(&learner, t, &params, false).unwrap());
+        });
+    } else {
+        println!("(artifacts missing — run `make artifacts` for PJRT benches)");
+    }
+
+    // Live coordinator end-to-end throughput (sleep payload: isolates the
+    // coordination overhead from compute).
+    println!("-- live coordinator (4 workers, 3 s serve) --");
+    for rate in [200.0, 800.0] {
+        let cfg = LiveConfig {
+            speeds: vec![1.0, 1.0, 0.5, 2.0],
+            policy: PolicyKind::parse("ppot").unwrap(),
+            rate,
+            duration: 3.0,
+            mean_demand: 0.002,
+            payload: PayloadMode::Sleep,
+            pjrt_learner: false,
+            seed: 9,
+            publish_interval: 0.25,
+        };
+        match serve(cfg) {
+            Ok(r) => println!(
+                "offered {rate:>6.0} req/s -> served {:>6.0} req/s, p50 {:>7.2} ms, p95 {:>7.2} ms",
+                r.throughput,
+                r.five.p50 * 1e3,
+                r.five.p95 * 1e3
+            ),
+            Err(e) => eprintln!("serve failed: {e}"),
+        }
+    }
+}

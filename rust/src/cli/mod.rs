@@ -1,0 +1,245 @@
+//! Minimal command-line parser (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, and
+//! positional arguments, with generated help text.
+
+use std::collections::BTreeMap;
+
+/// Specification of one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Flags take no value.
+    pub is_flag: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Specification of a (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct CmdSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub positional: Vec<(&'static str, &'static str)>,
+    pub options: Vec<OptSpec>,
+}
+
+impl CmdSpec {
+    /// New command spec.
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, positional: Vec::new(), options: Vec::new() }
+    }
+
+    /// Add a positional argument.
+    pub fn pos(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positional.push((name, help));
+        self
+    }
+
+    /// Add a valued option.
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.options.push(OptSpec { name, help, is_flag: false, default });
+        self
+    }
+
+    /// Add a boolean flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.options.push(OptSpec { name, help, is_flag: true, default: None });
+        self
+    }
+
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut out = format!("{} — {}\n\nusage: rosella {}", self.name, self.about, self.name);
+        for (p, _) in &self.positional {
+            out.push_str(&format!(" <{p}>"));
+        }
+        if !self.options.is_empty() {
+            out.push_str(" [options]");
+        }
+        out.push('\n');
+        if !self.positional.is_empty() {
+            out.push_str("\narguments:\n");
+            for (p, h) in &self.positional {
+                out.push_str(&format!("  {p:<18} {h}\n"));
+            }
+        }
+        if !self.options.is_empty() {
+            out.push_str("\noptions:\n");
+            for o in &self.options {
+                let tag = if o.is_flag {
+                    format!("--{}", o.name)
+                } else {
+                    format!("--{} <v>", o.name)
+                };
+                let default = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+                out.push_str(&format!("  {tag:<18} {}{default}\n", o.help));
+            }
+        }
+        out
+    }
+
+    /// Parse the arguments following the subcommand name.
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut positional: Vec<String> = Vec::new();
+        for o in &self.options {
+            if let Some(d) = o.default {
+                values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .options
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.help()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    flags.push(key);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("option --{key} needs a value"))?
+                        }
+                    };
+                    values.insert(key, v);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        if positional.len() > self.positional.len() {
+            return Err(format!(
+                "too many positional arguments: {positional:?}\n\n{}",
+                self.help()
+            ));
+        }
+        Ok(Parsed { values, flags, positional })
+    }
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Parsed {
+    /// Value of option `name` (default applied), if set.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Required option value.
+    pub fn req(&self, name: &str) -> Result<&str, String> {
+        self.get(name).ok_or_else(|| format!("missing required option --{name}"))
+    }
+
+    /// Parse an option as `T`.
+    pub fn parse_as<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| format!("bad value for --{name}: {e}")),
+        }
+    }
+
+    /// Whether a flag was passed.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Positional argument by index.
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CmdSpec {
+        CmdSpec::new("simulate", "run one simulation")
+            .pos("name", "experiment name")
+            .opt("seed", Some("42"), "rng seed")
+            .opt("load", None, "load ratio")
+            .flag("quick", "scaled-down run")
+    }
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = spec().parse(&args(&["fig8", "--load", "0.9"])).unwrap();
+        assert_eq!(p.get("seed"), Some("42"));
+        assert_eq!(p.get("load"), Some("0.9"));
+        assert_eq!(p.pos(0), Some("fig8"));
+        assert!(!p.flag("quick"));
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let p = spec().parse(&args(&["--seed=7", "--quick"])).unwrap();
+        assert_eq!(p.get("seed"), Some("7"));
+        assert!(p.flag("quick"));
+    }
+
+    #[test]
+    fn typed_parsing() {
+        let p = spec().parse(&args(&["--load", "0.5"])).unwrap();
+        assert_eq!(p.parse_as::<f64>("load").unwrap(), Some(0.5));
+        assert_eq!(p.parse_as::<u64>("seed").unwrap(), Some(42));
+        let bad = spec().parse(&args(&["--load", "xyz"])).unwrap();
+        assert!(bad.parse_as::<f64>("load").is_err());
+    }
+
+    #[test]
+    fn errors() {
+        assert!(spec().parse(&args(&["--unknown", "1"])).is_err());
+        assert!(spec().parse(&args(&["--load"])).is_err());
+        assert!(spec().parse(&args(&["--quick=1"])).is_err());
+        assert!(spec().parse(&args(&["a", "b"])).is_err());
+    }
+
+    #[test]
+    fn help_mentions_everything() {
+        let h = spec().help();
+        assert!(h.contains("--seed"));
+        assert!(h.contains("--quick"));
+        assert!(h.contains("<name>"));
+        assert!(h.contains("default: 42"));
+    }
+
+    #[test]
+    fn req_reports_missing() {
+        let p = spec().parse(&args(&[])).unwrap();
+        assert!(p.req("load").is_err());
+        assert!(p.req("seed").is_ok());
+    }
+}

@@ -1,0 +1,15 @@
+//! Cluster substrate: worker state, speed profiles, and volatility models.
+//!
+//! This module replaces the paper's AWS/EC2 testbed (§6.1) with a faithful,
+//! controllable model: workers with dual priority queues exactly as the
+//! modified Sparrow node monitor (§5), artificial speed multipliers exactly
+//! as the paper's slowed-down Spark executors, and the paper's
+//! random-permutation shock model.
+
+pub mod speed;
+pub mod volatility;
+pub mod worker;
+
+pub use speed::{total_speed, SpeedProfile};
+pub use volatility::Volatility;
+pub use worker::{InService, QueueEntry, Worker};

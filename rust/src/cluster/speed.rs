@@ -1,0 +1,186 @@
+//! Worker speed profiles used across the paper's experiments.
+//!
+//! * §6.1 (TPC-H): speeds from `{0.01, 0.04, …, 0.81}` — the squares
+//!   `((k+1)/10)²` — "to mimic heterogeneous environments".
+//! * §6.2 (synthetic): Zipf-sampled speeds ("a small number of powerful
+//!   servers"), plus the two explicit sets
+//!   `S1 = {0.2, 0.3, …, 1.6}` and
+//!   `S2 = {0.15×5, 0.2, 0.3, 0.4, 0.5, 0.6, 1, 1, 1, 2, 2}`.
+
+use crate::stats::{Rng, Zipf};
+
+/// Named speed profiles from the paper.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SpeedProfile {
+    /// All workers identical (baseline sanity checks).
+    Homogeneous { n: usize, speed: f64 },
+    /// §6.2 set S1: 0.2, 0.3, …, 1.6 (15 workers).
+    S1,
+    /// §6.2 set S2: highly heterogeneous 15-worker set.
+    S2,
+    /// §6.1 TPC-H speeds `((k mod 9 + 1)/10)²` cycled over `n` workers.
+    TpchSquares { n: usize },
+    /// Zipf-sampled speeds: rank `r ~ Zipf(n_ranks, s)` mapped to speed
+    /// `base · ratio^(r − 1)` — rank 1 (most likely) is the slowest; a few
+    /// workers are much faster.
+    Zipf { n: usize, exponent: f64, ranks: usize, base: f64, ratio: f64 },
+    /// The running example of §2.1: nine workers of speed 1, one of 6.
+    Example1,
+    /// Explicit speeds.
+    Explicit(Vec<f64>),
+}
+
+impl SpeedProfile {
+    /// Materialize the speed vector. Random profiles consume `rng`.
+    pub fn speeds(&self, rng: &mut Rng) -> Vec<f64> {
+        match self {
+            SpeedProfile::Homogeneous { n, speed } => vec![*speed; *n],
+            SpeedProfile::S1 => (2..=16).map(|k| k as f64 / 10.0).collect(),
+            SpeedProfile::S2 => vec![
+                0.15, 0.15, 0.15, 0.15, 0.15, 0.2, 0.3, 0.4, 0.5, 0.6, 1.0, 1.0, 1.0, 2.0, 2.0,
+            ],
+            SpeedProfile::TpchSquares { n } => (0..*n)
+                .map(|k| {
+                    let b = (k % 9 + 1) as f64 / 10.0;
+                    b * b
+                })
+                .collect(),
+            SpeedProfile::Zipf { n, exponent, ranks, base, ratio } => {
+                let z = Zipf::new(*ranks, *exponent);
+                (0..*n)
+                    .map(|_| {
+                        let r = z.sample(rng);
+                        base * ratio.powi((r - 1) as i32)
+                    })
+                    .collect()
+            }
+            SpeedProfile::Example1 => {
+                let mut v = vec![1.0; 9];
+                v.push(6.0);
+                v
+            }
+            SpeedProfile::Explicit(v) => v.clone(),
+        }
+    }
+
+    /// Number of workers the profile defines.
+    pub fn n(&self) -> usize {
+        match self {
+            SpeedProfile::Homogeneous { n, .. } => *n,
+            SpeedProfile::S1 | SpeedProfile::S2 => 15,
+            SpeedProfile::TpchSquares { n } => *n,
+            SpeedProfile::Zipf { n, .. } => *n,
+            SpeedProfile::Example1 => 10,
+            SpeedProfile::Explicit(v) => v.len(),
+        }
+    }
+
+    /// Parse a profile from a CLI string: `s1`, `s2`, `example1`,
+    /// `homogeneous:<n>:<speed>`, `tpch:<n>`, `zipf:<n>:<exp>`, or a
+    /// comma-separated explicit list `0.2,0.4,1.0`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let lower = s.to_ascii_lowercase();
+        match lower.as_str() {
+            "s1" => return Ok(SpeedProfile::S1),
+            "s2" => return Ok(SpeedProfile::S2),
+            "example1" => return Ok(SpeedProfile::Example1),
+            _ => {}
+        }
+        let parts: Vec<&str> = lower.split(':').collect();
+        match parts.as_slice() {
+            ["homogeneous", n, sp] => Ok(SpeedProfile::Homogeneous {
+                n: n.parse().map_err(|e| format!("bad n: {e}"))?,
+                speed: sp.parse().map_err(|e| format!("bad speed: {e}"))?,
+            }),
+            ["tpch", n] => Ok(SpeedProfile::TpchSquares {
+                n: n.parse().map_err(|e| format!("bad n: {e}"))?,
+            }),
+            ["zipf", n, exp] => Ok(SpeedProfile::Zipf {
+                n: n.parse().map_err(|e| format!("bad n: {e}"))?,
+                exponent: exp.parse().map_err(|e| format!("bad exponent: {e}"))?,
+                ranks: 5,
+                base: 0.25,
+                ratio: 2.0,
+            }),
+            _ if lower.contains(',') => {
+                let v: Result<Vec<f64>, _> = lower.split(',').map(|x| x.trim().parse()).collect();
+                Ok(SpeedProfile::Explicit(v.map_err(|e| format!("bad speed list: {e}"))?))
+            }
+            _ => Err(format!("unknown speed profile '{s}'")),
+        }
+    }
+}
+
+/// Total processing power `μ = Σ s_i` of a speed vector.
+pub fn total_speed(speeds: &[f64]) -> f64 {
+    speeds.iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn s1_matches_paper() {
+        let mut r = Rng::new(1);
+        let v = SpeedProfile::S1.speeds(&mut r);
+        assert_eq!(v.len(), 15);
+        assert!((v[0] - 0.2).abs() < 1e-12);
+        assert!((v[14] - 1.6).abs() < 1e-12);
+        assert!((total_speed(&v) - 13.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn s2_matches_paper() {
+        let mut r = Rng::new(1);
+        let v = SpeedProfile::S2.speeds(&mut r);
+        assert_eq!(v.len(), 15);
+        assert_eq!(v.iter().filter(|&&s| s == 0.15).count(), 5);
+        assert_eq!(v.iter().filter(|&&s| s == 2.0).count(), 2);
+    }
+
+    #[test]
+    fn example1_matches_paper() {
+        let mut r = Rng::new(1);
+        let v = SpeedProfile::Example1.speeds(&mut r);
+        assert_eq!(v, vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 6.0]);
+        assert_eq!(total_speed(&v), 15.0);
+    }
+
+    #[test]
+    fn tpch_squares_range() {
+        let mut r = Rng::new(1);
+        let v = SpeedProfile::TpchSquares { n: 30 }.speeds(&mut r);
+        assert_eq!(v.len(), 30);
+        assert!((v[0] - 0.01).abs() < 1e-12);
+        assert!((v[8] - 0.81).abs() < 1e-12);
+        assert!(v.iter().all(|&s| (0.01..=0.81).contains(&s)));
+    }
+
+    #[test]
+    fn zipf_profile_has_fast_minority() {
+        let mut r = Rng::new(7);
+        let p = SpeedProfile::Zipf { n: 100, exponent: 1.2, ranks: 5, base: 0.25, ratio: 2.0 };
+        let v = p.speeds(&mut r);
+        assert_eq!(v.len(), 100);
+        let fast = v.iter().filter(|&&s| s >= 2.0).count();
+        let slow = v.iter().filter(|&&s| s <= 0.5).count();
+        assert!(fast < slow, "fast={fast} slow={slow}");
+        assert!(fast > 0);
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        assert_eq!(SpeedProfile::parse("s1").unwrap(), SpeedProfile::S1);
+        assert_eq!(SpeedProfile::parse("S2").unwrap(), SpeedProfile::S2);
+        assert_eq!(
+            SpeedProfile::parse("homogeneous:4:2.0").unwrap(),
+            SpeedProfile::Homogeneous { n: 4, speed: 2.0 }
+        );
+        assert_eq!(
+            SpeedProfile::parse("0.5, 1.0, 2.0").unwrap(),
+            SpeedProfile::Explicit(vec![0.5, 1.0, 2.0])
+        );
+        assert!(SpeedProfile::parse("nope").is_err());
+    }
+}

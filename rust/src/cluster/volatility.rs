@@ -1,0 +1,141 @@
+//! Environment volatility models.
+//!
+//! The paper's evaluation perturbs worker speeds with a *random permutation
+//! shock*: "we randomly permute the worker speeds every two minutes" (§6.1)
+//! / "every minute" (§6.2). Permutation keeps the total throughput constant
+//! so the experiments isolate the schedulers' *learning* behaviour from
+//! overload behaviour. We additionally provide a multiplicative-drift model
+//! (the T-instance / shared-cluster motivation of §1) for extension
+//! experiments.
+
+use crate::stats::Rng;
+
+/// A volatility model mutates the speed vector at shock instants.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Volatility {
+    /// Speeds never change (the paper's "static environment").
+    Static,
+    /// Every `period` seconds, randomly permute the speed vector
+    /// (the paper's model; total throughput invariant).
+    Permute { period: f64 },
+    /// Every `period` seconds, multiply each speed by a log-normal factor
+    /// `exp(sigma · N(0,1))`, clamped to `[min_speed, max_speed]`.
+    /// Changes total throughput — models volatile cloud instances.
+    Drift { period: f64, sigma: f64, min_speed: f64, max_speed: f64 },
+}
+
+impl Volatility {
+    /// Interval between shocks, if any.
+    pub fn period(&self) -> Option<f64> {
+        match self {
+            Volatility::Static => None,
+            Volatility::Permute { period } => Some(*period),
+            Volatility::Drift { period, .. } => Some(*period),
+        }
+    }
+
+    /// Apply one shock in place. Returns `true` if speeds changed.
+    pub fn shock(&self, speeds: &mut [f64], rng: &mut Rng) -> bool {
+        match self {
+            Volatility::Static => false,
+            Volatility::Permute { .. } => {
+                rng.shuffle(speeds);
+                true
+            }
+            Volatility::Drift { sigma, min_speed, max_speed, .. } => {
+                for s in speeds.iter_mut() {
+                    *s = (*s * (sigma * rng.next_gaussian()).exp()).clamp(*min_speed, *max_speed);
+                }
+                true
+            }
+        }
+    }
+
+    /// Parse from CLI: `static`, `permute:<seconds>`, `drift:<seconds>:<sigma>`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let lower = s.to_ascii_lowercase();
+        if lower == "static" {
+            return Ok(Volatility::Static);
+        }
+        let parts: Vec<&str> = lower.split(':').collect();
+        match parts.as_slice() {
+            ["permute", p] => Ok(Volatility::Permute {
+                period: p.parse().map_err(|e| format!("bad period: {e}"))?,
+            }),
+            ["drift", p, sg] => Ok(Volatility::Drift {
+                period: p.parse().map_err(|e| format!("bad period: {e}"))?,
+                sigma: sg.parse().map_err(|e| format!("bad sigma: {e}"))?,
+                min_speed: 0.05,
+                max_speed: 8.0,
+            }),
+            _ => Err(format!("unknown volatility '{s}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_never_shocks() {
+        let mut r = Rng::new(1);
+        let mut v = vec![1.0, 2.0, 3.0];
+        let before = v.clone();
+        assert!(!Volatility::Static.shock(&mut v, &mut r));
+        assert_eq!(v, before);
+        assert_eq!(Volatility::Static.period(), None);
+    }
+
+    #[test]
+    fn permute_preserves_multiset_and_total() {
+        let mut r = Rng::new(2);
+        let mut v: Vec<f64> = (1..=15).map(|k| k as f64 / 10.0).collect();
+        let total: f64 = v.iter().sum();
+        let mut sorted_before = v.clone();
+        sorted_before.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(Volatility::Permute { period: 60.0 }.shock(&mut v, &mut r));
+        let mut sorted_after = v.clone();
+        sorted_after.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(sorted_before, sorted_after);
+        assert!((v.iter().sum::<f64>() - total).abs() < 1e-12);
+    }
+
+    #[test]
+    fn permute_actually_changes_assignment() {
+        let mut r = Rng::new(3);
+        let mut v: Vec<f64> = (1..=15).map(|k| k as f64).collect();
+        let before = v.clone();
+        Volatility::Permute { period: 60.0 }.shock(&mut v, &mut r);
+        assert_ne!(v, before);
+    }
+
+    #[test]
+    fn drift_respects_clamps() {
+        let mut r = Rng::new(4);
+        let model =
+            Volatility::Drift { period: 30.0, sigma: 2.0, min_speed: 0.1, max_speed: 4.0 };
+        let mut v = vec![1.0; 100];
+        for _ in 0..10 {
+            model.shock(&mut v, &mut r);
+        }
+        assert!(v.iter().all(|&s| (0.1..=4.0).contains(&s)));
+    }
+
+    #[test]
+    fn parse_variants() {
+        assert_eq!(Volatility::parse("static").unwrap(), Volatility::Static);
+        assert_eq!(
+            Volatility::parse("permute:120").unwrap(),
+            Volatility::Permute { period: 120.0 }
+        );
+        match Volatility::parse("drift:30:0.5").unwrap() {
+            Volatility::Drift { period, sigma, .. } => {
+                assert_eq!(period, 30.0);
+                assert_eq!(sigma, 0.5);
+            }
+            v => panic!("unexpected {v:?}"),
+        }
+        assert!(Volatility::parse("bogus").is_err());
+    }
+}

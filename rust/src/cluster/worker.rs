@@ -1,0 +1,357 @@
+//! Worker (backend) state: dual priority queues, reservations, and service
+//! accounting.
+//!
+//! Mirrors the paper's node monitor (§5): each backend keeps one queue for
+//! *real* tasks and a second, strictly lower-priority queue for *benchmark*
+//! tasks injected by the performance learner, so benchmark jobs "will not be
+//! executed if other real jobs are waiting". Late-binding reservations
+//! (Sparrow [7]) sit in the real queue as placeholders and are resolved to a
+//! concrete task — or discarded — only when they reach the head.
+
+use crate::types::{JobId, Task, TaskKind};
+use std::collections::VecDeque;
+
+/// An entry in a worker's real queue.
+#[derive(Debug, Clone)]
+pub enum QueueEntry {
+    /// A concrete task pushed by the scheduler.
+    Task(Task),
+    /// A late-binding placeholder: "some task of job `job`, to be fetched
+    /// when I get to it".
+    Reservation { job: JobId },
+}
+
+/// The task currently being served.
+#[derive(Debug, Clone)]
+pub struct InService {
+    pub task: Task,
+    /// Time service started.
+    pub start: f64,
+    /// Time the task entered the worker's queue (for queueing-delay stats).
+    pub enqueued_at: f64,
+    /// Remaining service *demand* (unit-speed seconds) at `last_update`.
+    pub remaining_demand: f64,
+    /// Sim time of the last demand-accounting update (service start or the
+    /// last speed shock).
+    pub last_update: f64,
+}
+
+/// One backend worker.
+#[derive(Debug)]
+pub struct Worker {
+    /// Current true speed multiplier `s > 0`; a task with demand `d` takes
+    /// `d / s` seconds of service.
+    speed: f64,
+    /// Real-task queue (tasks + reservations), FIFO.
+    real: VecDeque<(QueueEntry, f64)>,
+    /// Benchmark-task queue, FIFO, strictly lower priority.
+    bench: VecDeque<(Task, f64)>,
+    /// Task in service, if any.
+    in_service: Option<InService>,
+    /// Guards completion events across speed shocks: completions carry the
+    /// generation they were scheduled under; stale ones are ignored.
+    generation: u64,
+    /// Cached count of *real* entries (queued + in service if real) so the
+    /// scheduler's probe is O(1).
+    real_len: usize,
+    /// Total busy time integrated (for utilization reports).
+    busy_time: f64,
+    busy_since: Option<f64>,
+    /// Completion counters.
+    completed_real: u64,
+    completed_bench: u64,
+}
+
+impl Worker {
+    /// New idle worker with the given speed.
+    pub fn new(speed: f64) -> Self {
+        assert!(speed > 0.0 && speed.is_finite(), "invalid worker speed {speed}");
+        Self {
+            speed,
+            real: VecDeque::new(),
+            bench: VecDeque::new(),
+            in_service: None,
+            generation: 0,
+            real_len: 0,
+            busy_time: 0.0,
+            busy_since: None,
+            completed_real: 0,
+            completed_bench: 0,
+        }
+    }
+
+    /// Current true speed.
+    pub fn speed(&self) -> f64 {
+        self.speed
+    }
+
+    /// Current completion-event generation.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// The queue length the scheduler probes: queued real entries plus the
+    /// in-service task if it is real. Benchmark tasks are invisible to the
+    /// scheduling policy, matching the paper's separation of queues.
+    #[inline]
+    pub fn probe_len(&self) -> usize {
+        self.real_len
+    }
+
+    /// Number of queued (not in-service) benchmark tasks.
+    pub fn bench_backlog(&self) -> usize {
+        self.bench.len()
+    }
+
+    /// Task currently in service.
+    pub fn in_service(&self) -> Option<&InService> {
+        self.in_service.as_ref()
+    }
+
+    /// Completed real-task count.
+    pub fn completed_real(&self) -> u64 {
+        self.completed_real
+    }
+
+    /// Completed benchmark-task count.
+    pub fn completed_bench(&self) -> u64 {
+        self.completed_bench
+    }
+
+    /// Total integrated busy time up to `now`.
+    pub fn busy_time(&self, now: f64) -> f64 {
+        self.busy_time + self.busy_since.map_or(0.0, |s| now - s)
+    }
+
+    /// Enqueue a concrete task (real or benchmark).
+    pub fn enqueue(&mut self, task: Task, now: f64) {
+        match task.kind {
+            TaskKind::Real => {
+                self.real.push_back((QueueEntry::Task(task), now));
+                self.real_len += 1;
+            }
+            TaskKind::Benchmark => self.bench.push_back((task, now)),
+        }
+    }
+
+    /// Enqueue a late-binding reservation for `job`.
+    pub fn enqueue_reservation(&mut self, job: JobId, now: f64) {
+        self.real.push_back((QueueEntry::Reservation { job }, now));
+        self.real_len += 1;
+    }
+
+    /// True when the worker can start a new task (nothing in service).
+    pub fn is_idle(&self) -> bool {
+        self.in_service.is_none()
+    }
+
+    /// Pop the next entry to serve, respecting priorities: real entries
+    /// first, then benchmark tasks. Returns `None` if both queues are empty.
+    ///
+    /// The caller resolves `Reservation` entries against the scheduler's
+    /// unlaunched-task pool and calls `start` / re-polls as appropriate.
+    pub fn next_entry(&mut self) -> Option<(QueueEntry, f64)> {
+        debug_assert!(self.in_service.is_none(), "next_entry while busy");
+        if let Some((entry, t)) = self.real.pop_front() {
+            self.real_len -= 1;
+            return Some((entry, t));
+        }
+        self.bench.pop_front().map(|(t, at)| (QueueEntry::Task(t), at))
+    }
+
+    /// Begin serving `task` at time `now`; returns the scheduled completion
+    /// time under the current speed.
+    pub fn start(&mut self, task: Task, enqueued_at: f64, now: f64) -> f64 {
+        debug_assert!(self.in_service.is_none(), "start while busy");
+        if task.kind == TaskKind::Real {
+            self.real_len += 1; // in-service real task still counts in probes
+        }
+        let completion = now + task.demand / self.speed;
+        self.in_service = Some(InService {
+            remaining_demand: task.demand,
+            task,
+            start: now,
+            enqueued_at,
+            last_update: now,
+        });
+        if self.busy_since.is_none() {
+            self.busy_since = Some(now);
+        }
+        completion
+    }
+
+    /// Complete the in-service task at `now`; returns it together with its
+    /// total service duration (now − start).
+    pub fn complete(&mut self, now: f64) -> (Task, f64, f64) {
+        let s = self.in_service.take().expect("complete with nothing in service");
+        if s.task.kind == TaskKind::Real {
+            self.real_len -= 1;
+            self.completed_real += 1;
+        } else {
+            self.completed_bench += 1;
+        }
+        if self.real.is_empty() && self.bench.is_empty() {
+            if let Some(since) = self.busy_since.take() {
+                self.busy_time += now - since;
+            }
+        }
+        let wait = s.start - s.enqueued_at;
+        (s.task, now - s.start, wait)
+    }
+
+    /// Change the worker's speed at time `now` (a shock). If a task is in
+    /// service, its remaining demand is re-based and the new completion time
+    /// is returned; the generation counter is bumped so the previously
+    /// scheduled completion event becomes stale.
+    pub fn set_speed(&mut self, new_speed: f64, now: f64) -> Option<f64> {
+        assert!(new_speed > 0.0 && new_speed.is_finite());
+        let old_speed = self.speed;
+        self.speed = new_speed;
+        if let Some(s) = self.in_service.as_mut() {
+            let elapsed = now - s.last_update;
+            s.remaining_demand = (s.remaining_demand - elapsed * old_speed).max(0.0);
+            s.last_update = now;
+            self.generation += 1;
+            Some(now + s.remaining_demand / new_speed)
+        } else {
+            None
+        }
+    }
+
+    /// Drop all queued benchmark tasks (throttling, §5: "implementing
+    /// throttling ensures the benchmark jobs will not adversarially affect
+    /// the system"). Returns how many were dropped.
+    pub fn drop_benchmarks(&mut self) -> usize {
+        let n = self.bench.len();
+        self.bench.clear();
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::TaskKind;
+
+    fn task(id: u64, kind: TaskKind, demand: f64) -> Task {
+        Task { id, job: id, kind, demand, arrival: 0.0 }
+    }
+
+    #[test]
+    fn probe_counts_real_only() {
+        let mut w = Worker::new(1.0);
+        w.enqueue(task(1, TaskKind::Real, 0.1), 0.0);
+        w.enqueue(task(2, TaskKind::Benchmark, 0.1), 0.0);
+        w.enqueue(task(3, TaskKind::Real, 0.1), 0.0);
+        assert_eq!(w.probe_len(), 2);
+        assert_eq!(w.bench_backlog(), 1);
+    }
+
+    #[test]
+    fn service_time_scales_with_speed() {
+        let mut w = Worker::new(2.0);
+        let c = w.start(task(1, TaskKind::Real, 1.0), 0.0, 0.0);
+        assert!((c - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn real_before_benchmark() {
+        let mut w = Worker::new(1.0);
+        w.enqueue(task(9, TaskKind::Benchmark, 0.1), 0.0);
+        w.enqueue(task(1, TaskKind::Real, 0.1), 0.0);
+        match w.next_entry().unwrap().0 {
+            QueueEntry::Task(t) => assert_eq!(t.id, 1),
+            e => panic!("unexpected {e:?}"),
+        }
+        match w.next_entry().unwrap().0 {
+            QueueEntry::Task(t) => assert_eq!(t.id, 9),
+            e => panic!("unexpected {e:?}"),
+        }
+    }
+
+    #[test]
+    fn in_service_real_still_counted_in_probe() {
+        let mut w = Worker::new(1.0);
+        w.enqueue(task(1, TaskKind::Real, 1.0), 0.0);
+        let (entry, at) = w.next_entry().unwrap();
+        let t = match entry {
+            QueueEntry::Task(t) => t,
+            e => panic!("unexpected {e:?}"),
+        };
+        assert_eq!(w.probe_len(), 0);
+        w.start(t, at, 0.0);
+        assert_eq!(w.probe_len(), 1);
+        let (done, dur, wait) = w.complete(1.0);
+        assert_eq!(done.id, 1);
+        assert!((dur - 1.0).abs() < 1e-12);
+        assert_eq!(wait, 0.0);
+        assert_eq!(w.probe_len(), 0);
+        assert_eq!(w.completed_real(), 1);
+    }
+
+    #[test]
+    fn speed_shock_rebases_remaining_demand() {
+        let mut w = Worker::new(1.0);
+        w.start(task(1, TaskKind::Real, 1.0), 0.0, 0.0);
+        // At t=0.5, half the demand is done. Speed doubles: remaining 0.5
+        // demand takes 0.25s -> completion at 0.75.
+        let new_completion = w.set_speed(2.0, 0.5).unwrap();
+        assert!((new_completion - 0.75).abs() < 1e-12);
+        assert_eq!(w.generation(), 1);
+    }
+
+    #[test]
+    fn speed_shock_while_idle_returns_none() {
+        let mut w = Worker::new(1.0);
+        assert!(w.set_speed(3.0, 1.0).is_none());
+        assert_eq!(w.generation(), 0);
+        assert_eq!(w.speed(), 3.0);
+    }
+
+    #[test]
+    fn reservations_count_in_probe() {
+        let mut w = Worker::new(1.0);
+        w.enqueue_reservation(42, 0.0);
+        w.enqueue_reservation(43, 0.0);
+        assert_eq!(w.probe_len(), 2);
+        match w.next_entry().unwrap().0 {
+            QueueEntry::Reservation { job } => assert_eq!(job, 42),
+            e => panic!("unexpected {e:?}"),
+        }
+        assert_eq!(w.probe_len(), 1);
+    }
+
+    #[test]
+    fn busy_time_integration() {
+        let mut w = Worker::new(1.0);
+        w.start(task(1, TaskKind::Real, 1.0), 0.0, 0.0);
+        w.complete(1.0);
+        assert!((w.busy_time(2.0) - 1.0).abs() < 1e-12);
+        w.start(task(2, TaskKind::Real, 1.0), 2.0, 2.0);
+        assert!((w.busy_time(2.5) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drop_benchmarks_clears_queue() {
+        let mut w = Worker::new(1.0);
+        w.enqueue(task(1, TaskKind::Benchmark, 0.1), 0.0);
+        w.enqueue(task(2, TaskKind::Benchmark, 0.1), 0.0);
+        assert_eq!(w.drop_benchmarks(), 2);
+        assert_eq!(w.bench_backlog(), 0);
+    }
+
+    #[test]
+    fn queueing_delay_reported() {
+        let mut w = Worker::new(1.0);
+        w.enqueue(task(1, TaskKind::Real, 0.5), 1.0);
+        let (entry, at) = w.next_entry().unwrap();
+        let t = match entry {
+            QueueEntry::Task(t) => t,
+            e => panic!("unexpected {e:?}"),
+        };
+        w.start(t, at, 3.0);
+        let (_, dur, wait) = w.complete(3.5);
+        assert!((wait - 2.0).abs() < 1e-12);
+        assert!((dur - 0.5).abs() < 1e-12);
+    }
+}

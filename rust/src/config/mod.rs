@@ -1,0 +1,234 @@
+//! Configuration system: JSON experiment configs mapped onto [`SimConfig`]
+//! and the live coordinator's settings.
+//!
+//! A config file looks like:
+//!
+//! ```json
+//! {
+//!   "seed": 7,
+//!   "duration": 300.0,
+//!   "warmup": 30.0,
+//!   "speeds": "s1",
+//!   "volatility": "permute:60",
+//!   "workload": "synthetic",
+//!   "load": 0.8,
+//!   "policy": "rosella",
+//!   "learner": {
+//!     "enabled": true, "oracle": false, "fake_jobs": true,
+//!     "c0": 0.1, "window_c": 10.0,
+//!     "arrival_window": 200, "publish_interval": 0.1
+//!   },
+//!   "queue_sample": 0.1
+//! }
+//! ```
+//!
+//! String fields reuse the CLI parsers (`SpeedProfile::parse`,
+//! `Volatility::parse`, `WorkloadKind::parse`, `PolicyKind::parse`), so CLI
+//! flags and config files accept identical syntax.
+
+pub mod json;
+
+pub use json::{parse, to_string, Json, JsonError};
+
+use crate::cluster::{SpeedProfile, Volatility};
+use crate::learner::LearnerConfig;
+use crate::scheduler::PolicyKind;
+use crate::simulator::SimConfig;
+use crate::workload::WorkloadKind;
+
+/// Config-level error.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfigError(pub String);
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+fn bad(msg: impl Into<String>) -> ConfigError {
+    ConfigError(msg.into())
+}
+
+fn f64_field(v: &Json, key: &str, default: f64) -> Result<f64, ConfigError> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => x.as_f64().ok_or_else(|| bad(format!("'{key}' must be a number"))),
+    }
+}
+
+fn bool_field(v: &Json, key: &str, default: bool) -> Result<bool, ConfigError> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => x.as_bool().ok_or_else(|| bad(format!("'{key}' must be a bool"))),
+    }
+}
+
+/// Parse the learner sub-object (all fields optional, defaults from
+/// [`LearnerConfig::default`]).
+pub fn learner_from_json(v: &Json) -> Result<LearnerConfig, ConfigError> {
+    let d = LearnerConfig::default();
+    Ok(LearnerConfig {
+        enabled: bool_field(v, "enabled", d.enabled)?,
+        oracle: bool_field(v, "oracle", d.oracle)?,
+        fake_jobs: bool_field(v, "fake_jobs", d.fake_jobs)?,
+        c0: f64_field(v, "c0", d.c0)?,
+        window_c: f64_field(v, "window_c", d.window_c)?,
+        arrival_window: v
+            .get("arrival_window")
+            .map(|x| x.as_u64().ok_or_else(|| bad("'arrival_window' must be an integer")))
+            .transpose()?
+            .map(|x| x as usize)
+            .unwrap_or(d.arrival_window),
+        publish_interval: f64_field(v, "publish_interval", d.publish_interval)?,
+    })
+}
+
+/// Build a [`SimConfig`] from a parsed JSON document.
+pub fn sim_config_from_json(v: &Json) -> Result<SimConfig, ConfigError> {
+    let base = SimConfig::synthetic_default();
+    let speeds = match v.get("speeds") {
+        None => base.speeds.clone(),
+        Some(x) => SpeedProfile::parse(
+            x.as_str().ok_or_else(|| bad("'speeds' must be a string"))?,
+        )
+        .map_err(bad)?,
+    };
+    let volatility = match v.get("volatility") {
+        None => base.volatility.clone(),
+        Some(x) => Volatility::parse(
+            x.as_str().ok_or_else(|| bad("'volatility' must be a string"))?,
+        )
+        .map_err(bad)?,
+    };
+    let workload = match v.get("workload") {
+        None => base.workload.clone(),
+        Some(x) => WorkloadKind::parse(
+            x.as_str().ok_or_else(|| bad("'workload' must be a string"))?,
+        )
+        .map_err(bad)?,
+    };
+    let policy = match v.get("policy") {
+        None => base.policy.clone(),
+        Some(x) => {
+            PolicyKind::parse(x.as_str().ok_or_else(|| bad("'policy' must be a string"))?)
+                .map_err(bad)?
+        }
+    };
+    let learner = match v.get("learner") {
+        None => base.learner.clone(),
+        Some(sub) => learner_from_json(sub)?,
+    };
+    let cfg = SimConfig {
+        seed: v
+            .get("seed")
+            .map(|x| x.as_u64().ok_or_else(|| bad("'seed' must be an integer")))
+            .transpose()?
+            .unwrap_or(base.seed),
+        duration: f64_field(v, "duration", base.duration)?,
+        warmup: f64_field(v, "warmup", base.warmup)?,
+        speeds,
+        volatility,
+        workload,
+        load: f64_field(v, "load", base.load)?,
+        policy,
+        learner,
+        queue_sample: match v.get("queue_sample") {
+            None | Some(Json::Null) => None,
+            Some(x) => {
+                Some(x.as_f64().ok_or_else(|| bad("'queue_sample' must be a number"))?)
+            }
+        },
+    };
+    validate(&cfg)?;
+    Ok(cfg)
+}
+
+/// Load a [`SimConfig`] from a JSON string.
+pub fn sim_config_from_str(s: &str) -> Result<SimConfig, ConfigError> {
+    let v = parse(s).map_err(|e| bad(e.to_string()))?;
+    sim_config_from_json(&v)
+}
+
+/// Load a [`SimConfig`] from a file path.
+pub fn sim_config_from_file(path: &str) -> Result<SimConfig, ConfigError> {
+    let s = std::fs::read_to_string(path).map_err(|e| bad(format!("read {path}: {e}")))?;
+    sim_config_from_str(&s)
+}
+
+/// Validate cross-field constraints.
+pub fn validate(cfg: &SimConfig) -> Result<(), ConfigError> {
+    if !(cfg.duration > 0.0) {
+        return Err(bad("duration must be positive"));
+    }
+    if cfg.warmup < 0.0 || cfg.warmup >= cfg.duration {
+        return Err(bad("warmup must be in [0, duration)"));
+    }
+    if !(cfg.load > 0.0) {
+        return Err(bad("load must be positive"));
+    }
+    if cfg.load >= 2.0 {
+        return Err(bad("load >= 2.0 is certainly a mistake"));
+    }
+    if let Some(q) = cfg.queue_sample {
+        if !(q > 0.0) {
+            return Err(bad("queue_sample must be positive"));
+        }
+    }
+    if cfg.learner.enabled && cfg.learner.oracle {
+        return Err(bad("learner.enabled and learner.oracle are mutually exclusive"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_config_uses_defaults() {
+        let cfg = sim_config_from_str("{}").unwrap();
+        assert_eq!(cfg.seed, SimConfig::synthetic_default().seed);
+        assert_eq!(cfg.load, 0.8);
+    }
+
+    #[test]
+    fn full_config_round_trip() {
+        let cfg = sim_config_from_str(
+            r#"{
+                "seed": 7, "duration": 100.0, "warmup": 10.0,
+                "speeds": "s2", "volatility": "permute:60",
+                "workload": "tpch:q3", "load": 0.7, "policy": "rosella",
+                "learner": {"fake_jobs": false, "window_c": 30.0},
+                "queue_sample": 0.5
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.speeds, crate::cluster::SpeedProfile::S2);
+        assert_eq!(cfg.volatility, crate::cluster::Volatility::Permute { period: 60.0 });
+        assert!(!cfg.learner.fake_jobs);
+        assert_eq!(cfg.learner.window_c, 30.0);
+        assert_eq!(cfg.queue_sample, Some(0.5));
+    }
+
+    #[test]
+    fn rejects_bad_types() {
+        assert!(sim_config_from_str(r#"{"seed": "x"}"#).is_err());
+        assert!(sim_config_from_str(r#"{"load": true}"#).is_err());
+        assert!(sim_config_from_str(r#"{"policy": "nope"}"#).is_err());
+        assert!(sim_config_from_str("not json").is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_fields() {
+        assert!(sim_config_from_str(r#"{"duration": -5}"#).is_err());
+        assert!(sim_config_from_str(r#"{"duration": 10, "warmup": 20}"#).is_err());
+        assert!(sim_config_from_str(r#"{"load": 5.0}"#).is_err());
+        assert!(
+            sim_config_from_str(r#"{"learner": {"enabled": true, "oracle": true}}"#).is_err()
+        );
+    }
+}

@@ -1,0 +1,260 @@
+//! Live worker threads: the node-monitor + executor pair of the paper's
+//! implementation (§5), as real OS threads.
+//!
+//! Each worker owns two inbound queues — real tasks and benchmark tasks,
+//! the latter strictly lower priority — and an atomic queue-length counter
+//! the scheduler probes without locking. Task execution either sleeps for
+//! `demand / speed` (the paper's §6.1 slow-down trick: execute, then hold
+//! `(k−1)·T`) or additionally runs the AOT-compiled MLP payload through
+//! PJRT, making the serve path a real compute system.
+
+use crate::runtime::PayloadRunner;
+use crate::types::TaskKind;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A unit of work sent to a live worker.
+#[derive(Debug)]
+pub struct LiveTask {
+    pub job: u64,
+    pub kind: TaskKind,
+    /// Service demand in unit-speed seconds.
+    pub demand: f64,
+    /// Wall-clock enqueue instant.
+    pub enqueued: Instant,
+}
+
+/// Completion report sent back to the coordinator.
+#[derive(Debug)]
+pub struct Completion {
+    pub worker: usize,
+    pub job: u64,
+    pub kind: TaskKind,
+    pub demand: f64,
+    /// Measured service duration (seconds).
+    pub duration: f64,
+    /// Total queueing + service time since enqueue (seconds).
+    pub sojourn: f64,
+    /// Completion instant.
+    pub at: Instant,
+}
+
+/// How workers execute tasks.
+#[derive(Debug, Clone)]
+pub enum PayloadMode {
+    /// Pure sleep tasks (§6.2 synthetic).
+    Sleep,
+    /// Run the AOT MLP payload through PJRT once per task, then pad with
+    /// sleep up to the modelled duration.
+    Pjrt { artifacts_dir: String },
+}
+
+/// Handle to one spawned worker.
+pub struct WorkerHandle {
+    pub real_tx: Sender<LiveTask>,
+    pub bench_tx: Sender<LiveTask>,
+    /// Real entries queued or in service (the probe the policy sees).
+    pub qlen: Arc<AtomicUsize>,
+    pub join: std::thread::JoinHandle<()>,
+}
+
+impl WorkerHandle {
+    /// Enqueue a task, bumping the probe counter for real tasks.
+    pub fn enqueue(&self, task: LiveTask) {
+        let tx = match task.kind {
+            TaskKind::Real => {
+                self.qlen.fetch_add(1, Ordering::Relaxed);
+                &self.real_tx
+            }
+            TaskKind::Benchmark => &self.bench_tx,
+        };
+        // A send error just means the worker already stopped at shutdown.
+        let _ = tx.send(task);
+    }
+}
+
+/// Spawn a worker thread with the given relative speed.
+pub fn spawn(
+    id: usize,
+    speed: f64,
+    mode: PayloadMode,
+    completions: Sender<Completion>,
+) -> WorkerHandle {
+    let (real_tx, real_rx) = std::sync::mpsc::channel::<LiveTask>();
+    let (bench_tx, bench_rx) = std::sync::mpsc::channel::<LiveTask>();
+    let qlen = Arc::new(AtomicUsize::new(0));
+    let q = qlen.clone();
+    let join = std::thread::Builder::new()
+        .name(format!("rosella-worker-{id}"))
+        .spawn(move || worker_loop(id, speed, mode, real_rx, bench_rx, q, completions))
+        .expect("spawn worker thread");
+    WorkerHandle { real_tx, bench_tx, qlen, join }
+}
+
+fn worker_loop(
+    id: usize,
+    speed: f64,
+    mode: PayloadMode,
+    real_rx: Receiver<LiveTask>,
+    bench_rx: Receiver<LiveTask>,
+    qlen: Arc<AtomicUsize>,
+    completions: Sender<Completion>,
+) {
+    // The PJRT client/executable are created inside the worker thread: one
+    // compiled payload per executor, mirroring one Spark executor per
+    // backend.
+    let payload = match &mode {
+        PayloadMode::Sleep => None,
+        PayloadMode::Pjrt { artifacts_dir } => {
+            match PayloadRunner::load(artifacts_dir, 1000 + id as u64) {
+                Ok(p) => Some(p),
+                Err(e) => {
+                    eprintln!("worker {id}: payload load failed ({e}); falling back to sleep");
+                    None
+                }
+            }
+        }
+    };
+    let mut x = vec![0.1f32; crate::runtime::BATCH * crate::runtime::D_IN];
+
+    loop {
+        // Priority: drain real tasks first; benchmark tasks only when no
+        // real task is waiting (§5 dual queues).
+        let task = match real_rx.try_recv() {
+            Ok(t) => Some(t),
+            Err(TryRecvError::Empty) => match bench_rx.try_recv() {
+                Ok(t) => Some(t),
+                Err(TryRecvError::Empty) => {
+                    // Nothing queued: block briefly on the real queue so
+                    // new real tasks start immediately.
+                    match real_rx.recv_timeout(Duration::from_millis(1)) {
+                        Ok(t) => Some(t),
+                        Err(RecvTimeoutError::Timeout) => None,
+                        Err(RecvTimeoutError::Disconnected) => return,
+                    }
+                }
+                Err(TryRecvError::Disconnected) => return,
+            },
+            Err(TryRecvError::Disconnected) => return,
+        };
+        let Some(task) = task else { continue };
+
+        let start = Instant::now();
+        let target = Duration::from_secs_f64(task.demand / speed);
+        if let Some(p) = payload.as_ref() {
+            // Real compute: run the MLP batch, vary the input slightly so
+            // XLA cannot cache-trivialize anything.
+            x[0] = (task.job % 97) as f32 * 0.01;
+            if let Ok(y) = p.infer(&x) {
+                // Fold the output back into the input buffer (keeps the
+                // computation live and data-dependent).
+                x[1] = y[0] * 1e-3;
+            }
+        }
+        // Paper §6.1: "the worker holds the task (k−1)·T more time" — pad
+        // the measured compute up to the modelled service duration.
+        let elapsed = start.elapsed();
+        if elapsed < target {
+            std::thread::sleep(target - elapsed);
+        }
+        let end = Instant::now();
+        if task.kind == TaskKind::Real {
+            qlen.fetch_sub(1, Ordering::Relaxed);
+        }
+        let _ = completions.send(Completion {
+            worker: id,
+            job: task.job,
+            kind: task.kind,
+            demand: task.demand,
+            duration: (end - start).as_secs_f64(),
+            sojourn: (end - task.enqueued).as_secs_f64(),
+            at: end,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn executes_and_reports_completion() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let w = spawn(0, 2.0, PayloadMode::Sleep, tx);
+        w.enqueue(LiveTask {
+            job: 1,
+            kind: TaskKind::Real,
+            demand: 0.02,
+            enqueued: Instant::now(),
+        });
+        let c = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(c.worker, 0);
+        assert_eq!(c.job, 1);
+        // Speed 2.0: duration ≈ demand/2 = 10 ms (sleep granularity adds
+        // some slack).
+        assert!(c.duration >= 0.009, "duration {}", c.duration);
+        assert!(c.duration < 0.05, "duration {}", c.duration);
+        assert_eq!(w.qlen.load(Ordering::Relaxed), 0);
+        drop(w.real_tx);
+        drop(w.bench_tx);
+        let _ = w.join.join();
+    }
+
+    #[test]
+    fn real_tasks_preempt_benchmark_queue() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let w = spawn(1, 1.0, PayloadMode::Sleep, tx);
+        // Queue several benchmarks, then a real task. The real task must
+        // not wait behind all benchmarks.
+        for j in 0..5 {
+            w.enqueue(LiveTask {
+                job: 100 + j,
+                kind: TaskKind::Benchmark,
+                demand: 0.02,
+                enqueued: Instant::now(),
+            });
+        }
+        std::thread::sleep(Duration::from_millis(5));
+        w.enqueue(LiveTask {
+            job: 1,
+            kind: TaskKind::Real,
+            demand: 0.01,
+            enqueued: Instant::now(),
+        });
+        let mut order = Vec::new();
+        for _ in 0..6 {
+            let c = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+            order.push((c.kind, c.job));
+        }
+        let real_pos = order.iter().position(|(k, _)| *k == TaskKind::Real).unwrap();
+        assert!(real_pos <= 2, "real task served too late: {order:?}");
+        drop(w.real_tx);
+        drop(w.bench_tx);
+        let _ = w.join.join();
+    }
+
+    #[test]
+    fn qlen_tracks_backlog() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let w = spawn(2, 1.0, PayloadMode::Sleep, tx);
+        for j in 0..4 {
+            w.enqueue(LiveTask {
+                job: j,
+                kind: TaskKind::Real,
+                demand: 0.02,
+                enqueued: Instant::now(),
+            });
+        }
+        assert!(w.qlen.load(Ordering::Relaxed) >= 3);
+        for _ in 0..4 {
+            rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(w.qlen.load(Ordering::Relaxed), 0);
+        drop(w.real_tx);
+        drop(w.bench_tx);
+        let _ = w.join.join();
+    }
+}

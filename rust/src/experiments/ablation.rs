@@ -1,0 +1,202 @@
+//! Ablations of Rosella's design choices (DESIGN.md §5: beyond the paper's
+//! own fake-job ablation of Fig. 12):
+//!
+//! 1. **Tie rule** — SQ(2) vs LL(2) end-to-end response time across loads
+//!    (the paper argues for SQ(2) via Example 3 and Fig. 13's queue
+//!    distributions; this measures the response-time consequence).
+//! 2. **Probe count d** — PPoT generalizes to power-of-d; the paper fixes
+//!    d = 2. More probes help marginally but cost probe traffic.
+//! 3. **Publish interval** — how stale the estimates/alias table may get
+//!    before response times suffer (bounds the learner's required rate).
+//! 4. **Arrival window S** — the §3.3 accuracy/reactivity tradeoff under
+//!    volatile speeds.
+
+use super::harness::{ms, Bench, Scale};
+use crate::cluster::{SpeedProfile, Volatility};
+use crate::learner::LearnerConfig;
+use crate::metrics::report::{format_table, Row};
+use crate::scheduler::{PolicyKind, TieRule};
+use crate::simulator::{run as sim_run, SimConfig};
+
+fn run_one(bench: &Bench, policy: PolicyKind, learner: LearnerConfig) -> f64 {
+    let r = sim_run(SimConfig {
+        seed: bench.seed,
+        duration: bench.duration,
+        warmup: bench.warmup,
+        speeds: bench.speeds.clone(),
+        volatility: bench.volatility.clone(),
+        workload: bench.workload.clone(),
+        load: bench.load,
+        policy,
+        learner,
+        queue_sample: None,
+    });
+    ms(r.responses.mean())
+}
+
+/// Ablation 1: SQ(2) vs LL(2) mean response across loads (oracle speeds).
+pub fn tie_rule(scale: Scale, seed: u64) -> (Vec<f64>, Vec<(String, Vec<f64>)>) {
+    let loads = vec![0.5, 0.7, 0.8, 0.9];
+    let mut rows = Vec::new();
+    for (name, tie) in [("sq2", TieRule::Sq2), ("ll2", TieRule::Ll2)] {
+        let series: Vec<f64> = loads
+            .iter()
+            .map(|&load| {
+                let mut b = Bench::synthetic(scale, SpeedProfile::S1, load);
+                b.seed = seed;
+                run_one(
+                    &b,
+                    PolicyKind::PPoT { tie, late_binding: false },
+                    LearnerConfig::oracle(),
+                )
+            })
+            .collect();
+        rows.push((name.to_string(), series));
+    }
+    (loads, rows)
+}
+
+/// Ablation 2: probe count d ∈ {1, 2, 3} for uniform PoT and, via PSS + d
+/// proportional probes, the d=1 (pure PSS) vs d=2 (PPoT) comparison.
+pub fn probe_count(scale: Scale, seed: u64) -> (Vec<f64>, Vec<(String, Vec<f64>)>) {
+    let loads = vec![0.5, 0.8, 0.9];
+    let mut rows = Vec::new();
+    let mut push = |name: &str, policy: PolicyKind| {
+        let series: Vec<f64> = loads
+            .iter()
+            .map(|&load| {
+                let mut b = Bench::synthetic(scale, SpeedProfile::S1, load);
+                b.seed = seed;
+                run_one(&b, policy.clone(), LearnerConfig::oracle())
+            })
+            .collect();
+        rows.push((name.to_string(), series));
+    };
+    push("pss (d=1)", PolicyKind::Pss);
+    push("ppot (d=2)", PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false });
+    push("pot (d=2 uniform)", PolicyKind::PoT { d: 2 });
+    push("pot (d=3 uniform)", PolicyKind::PoT { d: 3 });
+    (loads, rows)
+}
+
+/// Ablation 3: estimate publish interval under volatile speeds.
+pub fn publish_interval(scale: Scale, seed: u64) -> Vec<(f64, f64)> {
+    [0.05, 0.2, 1.0, 5.0]
+        .iter()
+        .map(|&interval| {
+            let mut b = Bench::synthetic(scale, SpeedProfile::S2, 0.8);
+            b.seed = seed;
+            b.volatility = Volatility::Permute { period: scale.t(60.0) };
+            let learner = LearnerConfig { publish_interval: interval, ..LearnerConfig::default() };
+            let mean = run_one(
+                &b,
+                PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
+                learner,
+            );
+            (interval, mean)
+        })
+        .collect()
+}
+
+/// Ablation 4: arrival-estimator window S under volatile speeds.
+pub fn arrival_window(scale: Scale, seed: u64) -> Vec<(f64, f64)> {
+    [20usize, 200, 2000]
+        .iter()
+        .map(|&s| {
+            let mut b = Bench::synthetic(scale, SpeedProfile::S2, 0.8);
+            b.seed = seed;
+            b.volatility = Volatility::Permute { period: scale.t(60.0) };
+            let learner = LearnerConfig { arrival_window: s, ..LearnerConfig::default() };
+            let mean = run_one(
+                &b,
+                PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
+                learner,
+            );
+            (s as f64, mean)
+        })
+        .collect()
+}
+
+/// Run all ablations and render.
+pub fn run(scale: Scale) -> String {
+    let mut out = String::new();
+    let (loads, rows) = tie_rule(scale, 20200417);
+    let headers: Vec<String> = loads.iter().map(|l| format!("load {l}")).collect();
+    let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    out.push_str(&format_table(
+        "Ablation 1 — SQ(2) vs LL(2), mean response (ms), S1, oracle",
+        &headers_ref,
+        &rows.iter().map(|(n, s)| Row::new(n.clone(), s.clone())).collect::<Vec<_>>(),
+        1,
+    ));
+    let (loads, rows) = probe_count(scale, 20200417);
+    let headers: Vec<String> = loads.iter().map(|l| format!("load {l}")).collect();
+    let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    out.push_str(&format_table(
+        "Ablation 2 — probe count, mean response (ms), S1, oracle",
+        &headers_ref,
+        &rows.iter().map(|(n, s)| Row::new(n.clone(), s.clone())).collect::<Vec<_>>(),
+        1,
+    ));
+    let rows: Vec<Row> = publish_interval(scale, 20200417)
+        .into_iter()
+        .map(|(i, m)| Row::new(format!("publish {i}s"), vec![m]))
+        .collect();
+    out.push_str(&format_table(
+        "Ablation 3 — publish interval, mean response (ms), S2 volatile",
+        &["mean_ms"],
+        &rows,
+        1,
+    ));
+    let rows: Vec<Row> = arrival_window(scale, 20200417)
+        .into_iter()
+        .map(|(s, m)| Row::new(format!("S = {s}"), vec![m]))
+        .collect();
+    out.push_str(&format_table(
+        "Ablation 4 — arrival window S, mean response (ms), S2 volatile",
+        &["mean_ms"],
+        &rows,
+        1,
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sq2_no_worse_than_ll2_at_high_load() {
+        let (_, rows) = tie_rule(Scale::Quick, 21);
+        let sq2 = &rows[0].1;
+        let ll2 = &rows[1].1;
+        // The paper's argument: LL(2) congests fast workers; SQ(2) should
+        // win (or at least tie) at the highest load.
+        assert!(
+            sq2.last().unwrap() <= &(ll2.last().unwrap() * 1.15),
+            "sq2 {sq2:?} vs ll2 {ll2:?}"
+        );
+    }
+
+    #[test]
+    fn second_proportional_probe_helps() {
+        let (_, rows) = probe_count(Scale::Quick, 22);
+        let pss = &rows[0].1; // d = 1
+        let ppot = &rows[1].1; // d = 2
+        assert!(
+            ppot.last().unwrap() < pss.last().unwrap(),
+            "ppot {ppot:?} should beat pss {pss:?} at load 0.9"
+        );
+    }
+
+    #[test]
+    fn stale_estimates_hurt() {
+        let series = publish_interval(Scale::Quick, 23);
+        let fresh = series.first().unwrap().1;
+        let stale = series.last().unwrap().1;
+        assert!(
+            stale > fresh * 0.9,
+            "5s-stale estimates should not beat 50ms-fresh ones: {series:?}"
+        );
+    }
+}

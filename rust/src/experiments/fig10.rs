@@ -1,0 +1,149 @@
+//! Figure 10: schedulers with *known* worker speeds on the synthetic
+//! workload (§6.2, Zipf-flavoured heterogeneity, 15 workers).
+//!
+//! (a) At load 0.9, PoT's response time *grows with the job index*
+//! (non-stationary: the slow majority absorbs more than its capacity)
+//! while PSS/PPoT stay flat. Uniform random grows even faster (the paper
+//! removes it from the chart).
+//!
+//! (b) Mean response time vs load ratio for PoT, PSS, PPoT, and Halo:
+//! PPoT best across all loads, gap widening with load; Halo's benefit over
+//! PSS is limited.
+
+use super::harness::{ms, Baseline, Bench, Scale};
+use crate::cluster::SpeedProfile;
+use crate::metrics::report::{format_series, format_table, Row};
+use crate::stats::linreg_slope;
+
+/// The heterogeneous speed set used for Figure 10 (Zipf-like: a small
+/// number of powerful servers). Fixed (not resampled) so all policies see
+/// the identical cluster.
+pub fn speeds() -> SpeedProfile {
+    SpeedProfile::Explicit(vec![
+        0.25, 0.25, 0.25, 0.25, 0.25, 0.25, 0.25, 0.5, 0.5, 0.5, 0.5, 1.0, 1.0, 2.0, 4.0,
+    ])
+}
+
+/// Panel (a): binned mean response time by job index at load 0.9.
+#[derive(Debug)]
+pub struct Fig10a {
+    /// (policy, per-bin mean response ms, linear trend slope ms/bin).
+    pub rows: Vec<(String, Vec<f64>, f64)>,
+}
+
+/// Run panel (a).
+pub fn run_a(scale: Scale, seed: u64) -> Fig10a {
+    let mut bench = Bench::synthetic(scale, speeds(), 0.9);
+    bench.seed = seed;
+    bench.warmup = 0.0; // panel (a) *wants* the transient growth visible
+    let mut rows = Vec::new();
+    for b in [Baseline::PoT, Baseline::PssLearning, Baseline::PPoTLearning] {
+        let r = bench.run_oracle(b);
+        let bins: Vec<f64> = r.responses.binned_means(20).iter().map(|&v| ms(v)).collect();
+        let slope = linreg_slope(&bins);
+        rows.push((b.name().to_string(), bins, slope));
+    }
+    Fig10a { rows }
+}
+
+/// Panel (b): mean response vs load for each policy, speeds known.
+#[derive(Debug)]
+pub struct Fig10b {
+    pub loads: Vec<f64>,
+    /// (policy, mean response ms per load).
+    pub rows: Vec<(String, Vec<f64>)>,
+}
+
+/// Run panel (b).
+pub fn run_b(scale: Scale, seed: u64) -> Fig10b {
+    let loads = vec![0.3, 0.5, 0.7, 0.8, 0.9];
+    let mut rows = Vec::new();
+    for b in [Baseline::PoT, Baseline::PssLearning, Baseline::Halo, Baseline::PPoTLearning] {
+        let mut series = Vec::new();
+        for &load in &loads {
+            let mut bench = Bench::synthetic(scale, speeds(), load);
+            bench.seed = seed;
+            let r = bench.run_oracle(b);
+            series.push(ms(r.responses.mean()));
+        }
+        rows.push((b.name().to_string(), series));
+    }
+    Fig10b { loads, rows }
+}
+
+/// Run both panels and render.
+pub fn run(scale: Scale) -> String {
+    let mut out = String::new();
+    let a = run_a(scale, 20200417);
+    out.push_str("== Fig 10a — response vs job index, load 0.9, speeds known ==\n");
+    for (name, bins, slope) in &a.rows {
+        out.push_str(&format!("{name:>14}: trend slope {slope:+9.3} ms/bin\n"));
+        let pts: Vec<(f64, f64)> =
+            bins.iter().enumerate().map(|(i, &v)| (i as f64, v)).collect();
+        out.push_str(&format_series(
+            &format!("Fig 10a {name}"),
+            "job_bin",
+            "mean_resp_ms",
+            &pts,
+        ));
+    }
+    let b = run_b(scale, 20200417);
+    let rows: Vec<Row> =
+        b.rows.iter().map(|(n, s)| Row::new(n.clone(), s.clone())).collect();
+    let headers: Vec<String> = b.loads.iter().map(|l| format!("load {l}")).collect();
+    let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    out.push_str(&format_table(
+        "Fig 10b — mean response (ms) vs load, speeds known",
+        &headers_ref,
+        &rows,
+        1,
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pot_grows_ppot_does_not() {
+        let a = run_a(Scale::Quick, 5);
+        let pot = a.rows.iter().find(|(n, _, _)| n == "pot").unwrap();
+        let ppot = a.rows.iter().find(|(n, _, _)| n == "ppot+learning").unwrap();
+        // PoT is non-stationary at load 0.9 on this cluster: strong
+        // positive trend. PPoT stays roughly flat.
+        assert!(pot.2 > 0.0, "pot slope {} should be positive", pot.2);
+        assert!(
+            ppot.2.abs() < pot.2 / 2.0,
+            "ppot slope {} should be flat vs pot {}",
+            ppot.2,
+            pot.2
+        );
+    }
+
+    #[test]
+    fn ppot_best_across_loads() {
+        let b = run_b(Scale::Quick, 6);
+        let ppot = &b.rows.iter().find(|(n, _)| n == "ppot+learning").unwrap().1;
+        let pot = &b.rows.iter().find(|(n, _)| n == "pot").unwrap().1;
+        // At the highest load PPoT must clearly beat PoT.
+        assert!(
+            ppot.last().unwrap() < pot.last().unwrap(),
+            "ppot {:?} vs pot {:?}",
+            ppot,
+            pot
+        );
+    }
+
+    #[test]
+    fn halo_benefit_over_pss_is_limited() {
+        let b = run_b(Scale::Quick, 7);
+        let pss = &b.rows.iter().find(|(n, _)| n == "pss+learning").unwrap().1;
+        let halo = &b.rows.iter().find(|(n, _)| n == "halo").unwrap().1;
+        // Halo should be in the same ballpark as PSS (within 3x either way)
+        // — the paper's point is that its gain is moderate.
+        for (h, p) in halo.iter().zip(pss.iter()) {
+            assert!(*h < p * 3.0 && *p < h * 3.0, "halo {h} vs pss {p}");
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Figure 11: scheduler performance when worker speeds *change* (random
+//! permutation every minute), for speed sets S1 (mild heterogeneity) and
+//! S2 (strong heterogeneity), across load ratios.
+//!
+//! Expected shape: Rosella best across all loads for both sets; the gap
+//! grows with load and with heterogeneity (S2 > S1).
+
+use super::harness::{ms, Baseline, Bench, Scale};
+use crate::cluster::{SpeedProfile, Volatility};
+use crate::metrics::report::{format_table, Row};
+
+/// One panel: a speed set swept over loads.
+#[derive(Debug)]
+pub struct Fig11Panel {
+    pub set_name: &'static str,
+    pub loads: Vec<f64>,
+    /// (policy name, mean response ms per load).
+    pub rows: Vec<(String, Vec<f64>)>,
+}
+
+/// Baselines shown in Figure 11.
+pub fn baselines() -> Vec<Baseline> {
+    vec![Baseline::PoT, Baseline::Bandit02, Baseline::PssLearning, Baseline::RosellaNoLb]
+}
+
+/// Run one panel.
+pub fn run_panel(scale: Scale, set: SpeedProfile, set_name: &'static str, seed: u64) -> Fig11Panel {
+    let loads = vec![0.5, 0.6, 0.7, 0.8, 0.9];
+    let mut rows = Vec::new();
+    for b in baselines() {
+        let mut series = Vec::new();
+        for &load in &loads {
+            let mut bench = Bench::synthetic(scale, set.clone(), load);
+            bench.seed = seed;
+            bench.volatility = Volatility::Permute { period: scale.t(60.0) };
+            let r = bench.run(b);
+            series.push(ms(r.responses.mean()));
+        }
+        rows.push((b.name().to_string(), series));
+    }
+    Fig11Panel { set_name, loads, rows }
+}
+
+/// Run both panels and render.
+pub fn run(scale: Scale) -> String {
+    let mut out = String::new();
+    for (set, name, tag) in
+        [(SpeedProfile::S1, "S1", 'a'), (SpeedProfile::S2, "S2", 'b')]
+    {
+        let p = run_panel(scale, set, name, 20200417);
+        let rows: Vec<Row> =
+            p.rows.iter().map(|(n, s)| Row::new(n.clone(), s.clone())).collect();
+        let headers: Vec<String> = p.loads.iter().map(|l| format!("load {l}")).collect();
+        let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        out.push_str(&format_table(
+            &format!("Fig 11{tag} — mean response (ms), volatile speeds, set {name}"),
+            &headers_ref,
+            &rows,
+            1,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rosella_best_at_high_load_s1() {
+        let p = run_panel(Scale::Quick, SpeedProfile::S1, "S1", 8);
+        let rosella = p.rows.iter().find(|(n, _)| n == "rosella-nolb").unwrap();
+        let last = p.loads.len() - 1;
+        for (name, series) in &p.rows {
+            if name != "rosella-nolb" {
+                assert!(
+                    rosella.1[last] <= series[last] * 1.2,
+                    "rosella {} should beat {name} {}",
+                    rosella.1[last],
+                    series[last]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn response_grows_with_load() {
+        let p = run_panel(Scale::Quick, SpeedProfile::S1, "S1", 9);
+        for (name, series) in &p.rows {
+            assert!(
+                series.last().unwrap() > series.first().unwrap(),
+                "{name}: response must grow with load: {series:?}"
+            );
+        }
+    }
+}

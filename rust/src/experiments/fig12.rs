@@ -1,0 +1,121 @@
+//! Figure 12: the impact of benchmark ("fake") jobs.
+//!
+//! Rosella (fake jobs on, dynamic window c=10) is compared against
+//! PSS+PoT+Learning *without* fake jobs using sliding windows
+//! `c/(1−α)` for c ∈ {10, 20, 30, 40} (labelled w10..w40), under volatile
+//! speeds (permute every minute) for sets S1 and S2.
+//!
+//! Expected shape: longer windows do not buy better response time, while
+//! fake jobs consistently help — increasingly so at high load and high
+//! heterogeneity.
+
+use super::harness::{ms, Baseline, Bench, Scale};
+use crate::cluster::{SpeedProfile, Volatility};
+use crate::learner::LearnerConfig;
+use crate::metrics::report::{format_table, Row};
+use crate::scheduler::{PolicyKind, TieRule};
+use crate::simulator::{run as sim_run, SimConfig};
+
+/// One panel of the ablation.
+#[derive(Debug)]
+pub struct Fig12Panel {
+    pub set_name: &'static str,
+    pub loads: Vec<f64>,
+    /// ("rosella" | "w10".."w40", mean response ms per load).
+    pub rows: Vec<(String, Vec<f64>)>,
+}
+
+fn run_no_fake(bench: &Bench, window_c: f64) -> f64 {
+    let r = sim_run(SimConfig {
+        seed: bench.seed,
+        duration: bench.duration,
+        warmup: bench.warmup,
+        speeds: bench.speeds.clone(),
+        volatility: bench.volatility.clone(),
+        workload: bench.workload.clone(),
+        load: bench.load,
+        policy: PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
+        learner: LearnerConfig::no_fake_jobs(window_c),
+        queue_sample: None,
+    });
+    ms(r.responses.mean())
+}
+
+/// Run one panel.
+pub fn run_panel(scale: Scale, set: SpeedProfile, set_name: &'static str, seed: u64) -> Fig12Panel {
+    let loads = vec![0.5, 0.7, 0.8, 0.9];
+    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+    // Rosella with fake jobs.
+    let mut rosella = Vec::new();
+    for &load in &loads {
+        let mut bench = Bench::synthetic(scale, set.clone(), load);
+        bench.seed = seed;
+        bench.volatility = Volatility::Permute { period: scale.t(60.0) };
+        let r = bench.run(Baseline::RosellaNoLb);
+        rosella.push(ms(r.responses.mean()));
+    }
+    rows.push(("rosella".to_string(), rosella));
+    // Window baselines without fake jobs.
+    for c in [10.0, 20.0, 30.0, 40.0] {
+        let mut series = Vec::new();
+        for &load in &loads {
+            let mut bench = Bench::synthetic(scale, set.clone(), load);
+            bench.seed = seed;
+            bench.volatility = Volatility::Permute { period: scale.t(60.0) };
+            series.push(run_no_fake(&bench, c));
+        }
+        rows.push((format!("w{}", c as u32), series));
+    }
+    Fig12Panel { set_name, loads, rows }
+}
+
+/// Run both panels and render.
+pub fn run(scale: Scale) -> String {
+    let mut out = String::new();
+    for (set, name, tag) in
+        [(SpeedProfile::S1, "S1", 'a'), (SpeedProfile::S2, "S2", 'b')]
+    {
+        let p = run_panel(scale, set, name, 20200417);
+        let rows: Vec<Row> =
+            p.rows.iter().map(|(n, s)| Row::new(n.clone(), s.clone())).collect();
+        let headers: Vec<String> = p.loads.iter().map(|l| format!("load {l}")).collect();
+        let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        out.push_str(&format_table(
+            &format!("Fig 12{tag} — fake-job ablation, mean response (ms), set {name}"),
+            &headers_ref,
+            &rows,
+            1,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fake_jobs_help_at_high_load() {
+        let p = run_panel(Scale::Quick, SpeedProfile::S2, "S2", 10);
+        let rosella = &p.rows[0].1;
+        let last = p.loads.len() - 1;
+        // Rosella (with fake jobs) should beat at least 3 of the 4 window
+        // baselines at the highest load.
+        let beaten = p.rows[1..]
+            .iter()
+            .filter(|(_, s)| rosella[last] <= s[last] * 1.1)
+            .count();
+        assert!(beaten >= 3, "rosella {} beaten only {beaten}: {:?}", rosella[last], p.rows);
+    }
+
+    #[test]
+    fn longer_windows_do_not_dominate() {
+        let p = run_panel(Scale::Quick, SpeedProfile::S1, "S1", 11);
+        let w10 = &p.rows.iter().find(|(n, _)| n == "w10").unwrap().1;
+        let w40 = &p.rows.iter().find(|(n, _)| n == "w40").unwrap().1;
+        // The paper: longer windows improve estimates but not response
+        // times. Check w40 is not dramatically better than w10 everywhere.
+        let w40_dominates = w10.iter().zip(w40.iter()).all(|(a, b)| b < &(a * 0.7));
+        assert!(!w40_dominates, "w40 unexpectedly dominates: w10={w10:?} w40={w40:?}");
+    }
+}

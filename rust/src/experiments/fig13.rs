@@ -1,0 +1,117 @@
+//! Figure 13: queue-length distributions under SQ(2) vs LL(2).
+//!
+//! Static speed set {0.2, …, 1.6} (S1), speeds known. Four workers of
+//! different speeds are sampled and their queue-length histograms compared:
+//!
+//! * under **SQ(2)** the distributions coincide across speeds (the §4.2
+//!   stationary-distribution result: the marginal law is the same for all
+//!   workers regardless of processing power);
+//! * under **LL(2)** fast workers develop long-tailed queues (Example 3:
+//!   everybody ends up as slow as the slowest server).
+
+use super::harness::{Baseline, Bench, Scale};
+use crate::cluster::SpeedProfile;
+use crate::metrics::report::{format_table, Row};
+use crate::scheduler::TieRule;
+
+/// Queue distributions for the four sampled workers under one tie rule.
+#[derive(Debug)]
+pub struct Fig13Panel {
+    pub tie: TieRule,
+    /// (worker speed, queue-length PMF, mean queue length, tail P[q >= 8]).
+    pub workers: Vec<(f64, Vec<f64>, f64, f64)>,
+}
+
+/// Workers plotted (indices into the sorted S1 set: fastest → slowest).
+pub const SAMPLED: [usize; 4] = [14, 9, 4, 0];
+
+/// Run one panel at the given load.
+pub fn run_panel(scale: Scale, tie: TieRule, load: f64, seed: u64) -> Fig13Panel {
+    let mut bench = Bench::synthetic(scale, SpeedProfile::S1, load);
+    bench.seed = seed;
+    bench.queue_sample = Some(0.05);
+    let baseline = match tie {
+        TieRule::Sq2 => Baseline::PPoTLearning,
+        TieRule::Ll2 => Baseline::PPoTLl2,
+    };
+    let r = bench.run_oracle(baseline);
+    let queues = r.queues.expect("queue sampling enabled");
+    let speeds = SpeedProfile::S1.speeds(&mut crate::stats::Rng::new(0));
+    let workers = SAMPLED
+        .iter()
+        .map(|&w| (speeds[w], queues.pmf(w), queues.mean_len(w), queues.tail(w, 8)))
+        .collect();
+    Fig13Panel { tie, workers }
+}
+
+/// Run both panels and render.
+pub fn run(scale: Scale) -> String {
+    let mut out = String::new();
+    for (tie, tag) in [(TieRule::Sq2, 'a'), (TieRule::Ll2, 'b')] {
+        let p = run_panel(scale, tie, 0.9, 20200417);
+        let rows: Vec<Row> = p
+            .workers
+            .iter()
+            .map(|(speed, pmf, mean, tail)| {
+                let mut cells = vec![*mean, *tail];
+                cells.extend(pmf.iter().take(8).cloned());
+                Row::new(format!("speed {speed:.1}"), cells)
+            })
+            .collect();
+        out.push_str(&format_table(
+            &format!("Fig 13{tag} — queue lengths under {tie:?} (load 0.9, static)"),
+            &["mean_q", "P[q>=8]", "P0", "P1", "P2", "P3", "P4", "P5", "P6", "P7"],
+            &rows,
+            3,
+        ));
+    }
+    out
+}
+
+/// Total-variation distance between two PMFs (padded to equal length).
+pub fn tv_distance(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len().max(b.len());
+    let get = |v: &[f64], i: usize| v.get(i).copied().unwrap_or(0.0);
+    (0..n).map(|i| (get(a, i) - get(b, i)).abs()).sum::<f64>() / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sq2_distributions_similar_across_speeds() {
+        let p = run_panel(Scale::Quick, TieRule::Sq2, 0.9, 12);
+        // Fastest vs slowest sampled worker: PMFs should be close.
+        let d = tv_distance(&p.workers[0].1, &p.workers[3].1);
+        assert!(d < 0.45, "SQ2 TV distance fastest-vs-slowest = {d}");
+    }
+
+    #[test]
+    fn ll2_prefers_fast_workers() {
+        let sq = run_panel(Scale::Quick, TieRule::Sq2, 0.9, 13);
+        let ll = run_panel(Scale::Quick, TieRule::Ll2, 0.9, 13);
+        // The fastest worker's mean queue is longer under LL(2)...
+        assert!(
+            ll.workers[0].2 > sq.workers[0].2,
+            "LL2 fast-worker queue {} should exceed SQ2 {}",
+            ll.workers[0].2,
+            sq.workers[0].2
+        );
+        // ...and the slowest worker's queue is shorter (or no longer).
+        assert!(
+            ll.workers[3].2 <= sq.workers[3].2 * 1.5 + 0.5,
+            "LL2 slow-worker queue {} vs SQ2 {}",
+            ll.workers[3].2,
+            sq.workers[3].2
+        );
+    }
+
+    #[test]
+    fn tv_distance_bounds() {
+        assert_eq!(tv_distance(&[1.0], &[1.0]), 0.0);
+        assert_eq!(tv_distance(&[1.0, 0.0], &[0.0, 1.0]), 1.0);
+        let d = tv_distance(&[0.5, 0.5], &[0.5, 0.25, 0.25]);
+        assert!((d - 0.25).abs() < 1e-12);
+    }
+}

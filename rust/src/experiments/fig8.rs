@@ -1,0 +1,101 @@
+//! Figure 8: distribution of response times for unconstrained requests,
+//! Rosella vs Sparrow, under (a) a static environment and (b) a volatile
+//! environment (worker speeds permuted every two minutes).
+//!
+//! The paper's observation: Rosella's distribution "decays exponentially
+//! before 2,000 ms" while Sparrow leaves "a much larger portion of jobs
+//! that cannot be completed in 2,000 ms". We report each scheduler's
+//! response-time PDF, the tail mass beyond 2 s, and the means (paper:
+//! Sparrow 1,901 ms vs Rosella 675 ms — a 65% improvement).
+
+use super::harness::{ms, Baseline, Bench, Scale};
+use crate::cluster::Volatility;
+use crate::metrics::report::format_series;
+use crate::workload::tpch::Query;
+
+/// Result of one Figure 8 panel.
+#[derive(Debug)]
+pub struct Fig8Panel {
+    pub volatile: bool,
+    /// (scheduler name, mean ms, tail fraction > 2000 ms, pdf points).
+    pub rows: Vec<(String, f64, f64, Vec<(f64, f64)>)>,
+}
+
+/// Run one panel (static or volatile).
+pub fn run_panel(scale: Scale, volatile: bool, seed: u64) -> Fig8Panel {
+    let mut bench = Bench::tpch(scale, Query::Q3);
+    bench.seed = seed;
+    if volatile {
+        bench.volatility = Volatility::Permute { period: scale.t(120.0) };
+    }
+    let mut rows = Vec::new();
+    for b in [Baseline::Rosella, Baseline::Sparrow] {
+        let r = bench.run(b);
+        let pdf: Vec<(f64, f64)> =
+            r.responses.histogram().pdf().iter().map(|&(v, p)| (ms(v), p)).collect();
+        rows.push((b.name().to_string(), ms(r.responses.mean()), r.responses.tail_fraction(2.0), pdf));
+    }
+    Fig8Panel { volatile, rows }
+}
+
+/// Run both panels and render the report.
+pub fn run(scale: Scale) -> String {
+    let mut out = String::new();
+    for volatile in [false, true] {
+        let panel = run_panel(scale, volatile, 20200417);
+        let env = if volatile { "volatile" } else { "static" };
+        out.push_str(&format!(
+            "== Fig 8{} — response-time distribution ({env} environment) ==\n",
+            if volatile { 'b' } else { 'a' }
+        ));
+        for (name, mean, tail, _) in &panel.rows {
+            out.push_str(&format!(
+                "{name:>10}: mean = {mean:8.1} ms, P[response > 2000 ms] = {:.3}\n",
+                tail
+            ));
+        }
+        for (name, _, _, pdf) in &panel.rows {
+            out.push_str(&format_series(
+                &format!("Fig 8 PDF [{env}] {name}"),
+                "response_ms",
+                "fraction",
+                &pdf.iter().cloned().take(40).collect::<Vec<_>>(),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rosella_beats_sparrow_static() {
+        let p = run_panel(Scale::Quick, false, 1);
+        let rosella = &p.rows[0];
+        let sparrow = &p.rows[1];
+        assert!(
+            rosella.1 < sparrow.1,
+            "rosella mean {} !< sparrow mean {}",
+            rosella.1,
+            sparrow.1
+        );
+        // Rosella's >2s tail must be smaller.
+        assert!(rosella.2 <= sparrow.2 + 1e-9, "tails: {} vs {}", rosella.2, sparrow.2);
+    }
+
+    #[test]
+    fn volatile_panel_still_favors_rosella() {
+        // Quick-mode volatile runs see only ~3 shock cycles, so the mean is
+        // dominated by a single post-shock transient; the >2 s tail mass is
+        // the stable discriminator (it is also the paper's headline for
+        // Fig. 8). Full-scale runs (EXPERIMENTS.md) compare means directly.
+        let p = run_panel(Scale::Quick, true, 2);
+        let (rosella_tail, sparrow_tail) = (p.rows[0].2, p.rows[1].2);
+        assert!(
+            rosella_tail <= sparrow_tail + 0.05,
+            "rosella tail {rosella_tail} vs sparrow tail {sparrow_tail}"
+        );
+    }
+}

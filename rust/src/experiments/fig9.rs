@@ -1,0 +1,119 @@
+//! Figure 9: response-time percentiles (5th/25th/50th/75th/95th) for TPC-H
+//! queries q3 and q6 at load 0.8, for every baseline, in (a) static and
+//! (b) volatile environments.
+//!
+//! Expected shape (paper): Rosella uniformly best; bandit worst; PSS
+//! improves over Sparrow; PoT and late binding improve further; learning
+//! baselines degrade under volatility while Sparrow/PoT do not.
+
+use super::harness::{ms, Baseline, Bench, Scale};
+use crate::cluster::Volatility;
+use crate::metrics::report::{format_table, Row};
+use crate::workload::tpch::Query;
+
+/// All percentile rows for one (query, environment) cell.
+#[derive(Debug)]
+pub struct Fig9Cell {
+    pub query: Query,
+    pub volatile: bool,
+    /// (baseline name, [p5, p25, p50, p75, p95] in ms, mean ms).
+    pub rows: Vec<(String, [f64; 5], f64)>,
+}
+
+/// Baselines shown in Figure 9.
+pub fn baselines() -> Vec<Baseline> {
+    vec![
+        Baseline::Sparrow,
+        Baseline::PoT,
+        Baseline::Bandit02,
+        Baseline::Bandit03,
+        Baseline::PssLearning,
+        Baseline::PPoTLearning,
+        Baseline::Rosella,
+    ]
+}
+
+/// Run one cell of the figure.
+pub fn run_cell(scale: Scale, query: Query, volatile: bool, seed: u64) -> Fig9Cell {
+    let mut bench = Bench::tpch(scale, query);
+    bench.seed = seed;
+    if volatile {
+        bench.volatility = Volatility::Permute { period: scale.t(120.0) };
+    }
+    let mut rows = Vec::new();
+    for b in baselines() {
+        let r = bench.run(b);
+        let f = r.responses.five_num();
+        rows.push((
+            b.name().to_string(),
+            [ms(f.p5), ms(f.p25), ms(f.p50), ms(f.p75), ms(f.p95)],
+            ms(r.responses.mean()),
+        ));
+    }
+    Fig9Cell { query, volatile, rows }
+}
+
+/// Run the full figure (2 queries × 2 environments).
+pub fn run(scale: Scale) -> String {
+    let mut out = String::new();
+    for volatile in [false, true] {
+        for query in [Query::Q3, Query::Q6] {
+            let cell = run_cell(scale, query, volatile, 20200417);
+            let rows: Vec<Row> = cell
+                .rows
+                .iter()
+                .map(|(name, p, mean)| {
+                    let mut cells = p.to_vec();
+                    cells.push(*mean);
+                    Row::new(name.clone(), cells)
+                })
+                .collect();
+            out.push_str(&format_table(
+                &format!(
+                    "Fig 9{} — {:?} response time (ms), load 0.8, {}",
+                    if volatile { 'b' } else { 'a' },
+                    query,
+                    if volatile { "volatile" } else { "static" }
+                ),
+                &["p5", "p25", "p50", "p75", "p95", "mean"],
+                &rows,
+                1,
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn median_of<'a>(cell: &'a Fig9Cell, name: &str) -> f64 {
+        cell.rows.iter().find(|(n, _, _)| n == name).unwrap().1[2]
+    }
+
+    #[test]
+    fn rosella_best_median_static_q3() {
+        let cell = run_cell(Scale::Quick, Query::Q3, false, 3);
+        let rosella = median_of(&cell, "rosella");
+        for (name, p, _) in &cell.rows {
+            if name != "rosella" {
+                assert!(
+                    rosella <= p[2] * 1.05,
+                    "rosella p50 {rosella} should beat {name} p50 {}",
+                    p[2]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn percentiles_are_monotone() {
+        let cell = run_cell(Scale::Quick, Query::Q6, false, 4);
+        for (name, p, _) in &cell.rows {
+            for w in p.windows(2) {
+                assert!(w[0] <= w[1] + 1e-9, "{name} percentiles not monotone: {p:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! Shared experiment harness: baseline sets, scaled durations, and the
+//! common run helpers every figure driver uses.
+
+use crate::cluster::{SpeedProfile, Volatility};
+use crate::learner::LearnerConfig;
+use crate::scheduler::{PolicyKind, TieRule};
+use crate::simulator::{run, SimConfig, SimResult};
+use crate::workload::WorkloadKind;
+
+/// Time scaling for experiments: `Full` reproduces the paper's horizons,
+/// `Quick` shrinks them ~10x for CI/test runs (shapes survive, absolute
+/// noise grows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Full,
+    Quick,
+}
+
+impl Scale {
+    /// Scale a duration. Quick mode divides by 5 with a 30 s floor: the
+    /// floor keeps shock periods from collapsing below the learner's
+    /// re-learning time, which would measure a permanent transient rather
+    /// than the paper's steady-state-with-shocks regime.
+    pub fn t(&self, full: f64) -> f64 {
+        match self {
+            Scale::Full => full,
+            Scale::Quick => (full / 5.0).max(30.0),
+        }
+    }
+}
+
+/// The named baselines of §6 with the learner wiring each one needs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Baseline {
+    Sparrow,
+    PoT,
+    Bandit02,
+    Bandit03,
+    PssLearning,
+    PPoTLearning,
+    /// Full Rosella: PPoT + learning + fake jobs + late binding.
+    Rosella,
+    /// Rosella without late binding (the §6.2 synthetic configuration).
+    RosellaNoLb,
+    Uniform,
+    Halo,
+    /// PPoT with the LL(2) tie rule (Figure 13).
+    PPoTLl2,
+}
+
+impl Baseline {
+    /// Display name matching the paper's legends.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Baseline::Sparrow => "sparrow",
+            Baseline::PoT => "pot",
+            Baseline::Bandit02 => "bandit-0.2",
+            Baseline::Bandit03 => "bandit-0.3",
+            Baseline::PssLearning => "pss+learning",
+            Baseline::PPoTLearning => "ppot+learning",
+            Baseline::Rosella => "rosella",
+            Baseline::RosellaNoLb => "rosella-nolb",
+            Baseline::Uniform => "uniform",
+            Baseline::Halo => "halo",
+            Baseline::PPoTLl2 => "ppot-ll2",
+        }
+    }
+
+    /// Policy + learner configuration for this baseline.
+    pub fn wire(&self) -> (PolicyKind, LearnerConfig) {
+        match self {
+            Baseline::Sparrow => {
+                (PolicyKind::Sparrow { probes_per_task: 2 }, LearnerConfig::oracle())
+            }
+            Baseline::PoT => (PolicyKind::PoT { d: 2 }, LearnerConfig::oracle()),
+            Baseline::Uniform => (PolicyKind::Uniform, LearnerConfig::oracle()),
+            Baseline::Bandit02 => (PolicyKind::Bandit { eta: 0.2 }, LearnerConfig::default()),
+            Baseline::Bandit03 => (PolicyKind::Bandit { eta: 0.3 }, LearnerConfig::default()),
+            Baseline::PssLearning => (PolicyKind::Pss, LearnerConfig::default()),
+            Baseline::PPoTLearning => (
+                PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
+                LearnerConfig::default(),
+            ),
+            Baseline::Rosella => (
+                PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: true },
+                LearnerConfig::default(),
+            ),
+            Baseline::RosellaNoLb => (
+                PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
+                LearnerConfig::default(),
+            ),
+            Baseline::Halo => (PolicyKind::Halo, LearnerConfig::oracle()),
+            Baseline::PPoTLl2 => (
+                PolicyKind::PPoT { tie: TieRule::Ll2, late_binding: false },
+                LearnerConfig::oracle(),
+            ),
+        }
+    }
+
+    /// Oracle variant: same policy, true speeds known (for the Fig. 10
+    /// "speeds known" settings).
+    pub fn wire_oracle(&self) -> (PolicyKind, LearnerConfig) {
+        let (policy, _) = self.wire();
+        (policy, LearnerConfig::oracle())
+    }
+}
+
+/// Base config shared by one figure's runs.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub seed: u64,
+    pub duration: f64,
+    pub warmup: f64,
+    pub speeds: SpeedProfile,
+    pub volatility: Volatility,
+    pub workload: WorkloadKind,
+    pub load: f64,
+    pub queue_sample: Option<f64>,
+}
+
+impl Bench {
+    /// §6.1 TPC-H setting: 30 workers, squared speeds, load 0.8.
+    pub fn tpch(scale: Scale, query: crate::workload::tpch::Query) -> Self {
+        Self {
+            seed: 20200417,
+            duration: scale.t(600.0),
+            warmup: scale.t(120.0),
+            speeds: SpeedProfile::TpchSquares { n: 30 },
+            volatility: Volatility::Static,
+            workload: WorkloadKind::Tpch { query },
+            load: 0.8,
+            queue_sample: None,
+        }
+    }
+
+    /// §6.2 synthetic setting: 15 workers, load specified per-experiment.
+    pub fn synthetic(scale: Scale, speeds: SpeedProfile, load: f64) -> Self {
+        Self {
+            seed: 20200417,
+            duration: scale.t(600.0),
+            warmup: scale.t(120.0),
+            speeds,
+            volatility: Volatility::Static,
+            workload: WorkloadKind::Synthetic,
+            load,
+            queue_sample: None,
+        }
+    }
+
+    /// Run one baseline under this setting.
+    pub fn run(&self, baseline: Baseline) -> SimResult {
+        let (policy, learner) = baseline.wire();
+        self.run_wired(baseline, policy, learner)
+    }
+
+    /// Run one baseline with oracle speed knowledge.
+    pub fn run_oracle(&self, baseline: Baseline) -> SimResult {
+        let (policy, learner) = baseline.wire_oracle();
+        self.run_wired(baseline, policy, learner)
+    }
+
+    fn run_wired(
+        &self,
+        _baseline: Baseline,
+        policy: PolicyKind,
+        learner: LearnerConfig,
+    ) -> SimResult {
+        run(SimConfig {
+            seed: self.seed,
+            duration: self.duration,
+            warmup: self.warmup,
+            speeds: self.speeds.clone(),
+            volatility: self.volatility.clone(),
+            workload: self.workload.clone(),
+            load: self.load,
+            policy,
+            learner,
+            queue_sample: self.queue_sample,
+        })
+    }
+}
+
+/// Milliseconds helper for reports (the paper reports response times in ms).
+pub fn ms(seconds: f64) -> f64 {
+    seconds * 1000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_quick_shrinks() {
+        assert_eq!(Scale::Full.t(600.0), 600.0);
+        assert!(Scale::Quick.t(600.0) <= 150.0);
+        assert!(Scale::Quick.t(50.0) >= 30.0);
+    }
+
+    #[test]
+    fn all_baselines_have_distinct_names() {
+        let all = [
+            Baseline::Sparrow,
+            Baseline::PoT,
+            Baseline::Bandit02,
+            Baseline::Bandit03,
+            Baseline::PssLearning,
+            Baseline::PPoTLearning,
+            Baseline::Rosella,
+            Baseline::RosellaNoLb,
+            Baseline::Uniform,
+            Baseline::Halo,
+            Baseline::PPoTLl2,
+        ];
+        let mut names: Vec<_> = all.iter().map(|b| b.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), all.len());
+    }
+
+    #[test]
+    fn learning_baselines_enable_learner() {
+        let (_, l) = Baseline::Rosella.wire();
+        assert!(l.enabled && l.fake_jobs);
+        let (_, l) = Baseline::Sparrow.wire();
+        assert!(!l.enabled);
+    }
+
+    #[test]
+    fn quick_tpch_run_completes() {
+        let b = Bench::tpch(Scale::Quick, crate::workload::tpch::Query::Q6);
+        let r = b.run(Baseline::Sparrow);
+        assert!(r.responses.count() > 20, "count={}", r.responses.count());
+    }
+}

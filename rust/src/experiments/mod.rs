@@ -1,0 +1,52 @@
+//! Experiment drivers regenerating every figure of the paper's evaluation
+//! (§6). Each module reproduces one figure; DESIGN.md §5 maps figures to
+//! modules and bench targets.
+
+pub mod ablation;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig8;
+pub mod fig9;
+pub mod harness;
+pub mod theory;
+
+pub use harness::{Baseline, Bench, Scale};
+
+/// All experiment names accepted by `rosella experiment <name>`.
+pub const ALL: &[&str] =
+    &["fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "theory", "ablation", "all"];
+
+/// Run one experiment by name and return its rendered report.
+pub fn run_by_name(name: &str, scale: Scale) -> Result<String, String> {
+    match name {
+        "fig8" => Ok(fig8::run(scale)),
+        "fig9" => Ok(fig9::run(scale)),
+        "fig10" => Ok(fig10::run(scale)),
+        "fig11" => Ok(fig11::run(scale)),
+        "fig12" => Ok(fig12::run(scale)),
+        "fig13" => Ok(fig13::run(scale)),
+        "theory" => Ok(theory::run(scale)),
+        "ablation" => Ok(ablation::run(scale)),
+        "all" => {
+            let mut out = String::new();
+            for n in ALL.iter().filter(|&&n| n != "all") {
+                out.push_str(&run_by_name(n, scale)?);
+                out.push('\n');
+            }
+            Ok(out)
+        }
+        other => Err(format!("unknown experiment '{other}'; expected one of {ALL:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_experiment_is_rejected() {
+        assert!(run_by_name("fig99", Scale::Quick).is_err());
+    }
+}

@@ -1,0 +1,204 @@
+//! Empirical checks of the paper's §4 theory:
+//!
+//! * **Result 1 / Lemma 4** — max queue length under PPoT is O(log log n)
+//!   vs O(log n) for single-sample policies: we sweep the cluster size and
+//!   report the mean per-snapshot maximum queue length.
+//! * **Result 2** — learning time is essentially independent of n: we sweep
+//!   n and report the time for the learner's mean relative error to drop
+//!   below a threshold.
+//! * **Result 3 / Proposition 1** — recovery after a shock is fast: we
+//!   report the estimate-error trace around a permutation shock.
+
+use super::harness::Scale;
+use crate::cluster::{SpeedProfile, Volatility};
+use crate::learner::LearnerConfig;
+use crate::metrics::report::{format_table, Row};
+use crate::scheduler::{PolicyKind, TieRule};
+use crate::simulator::{run as sim_run, SimConfig};
+use crate::workload::WorkloadKind;
+
+/// Mean per-snapshot max queue length for a policy on a homogeneous
+/// cluster of n workers at the given load.
+pub fn max_queue(n: usize, load: f64, policy: PolicyKind, duration: f64, seed: u64) -> f64 {
+    let r = sim_run(SimConfig {
+        seed,
+        duration,
+        warmup: duration * 0.25,
+        speeds: SpeedProfile::Homogeneous { n, speed: 1.0 },
+        volatility: Volatility::Static,
+        workload: WorkloadKind::Synthetic,
+        load,
+        policy,
+        learner: LearnerConfig::oracle(),
+        queue_sample: Some(0.1),
+    });
+    r.queues.unwrap().mean_max()
+}
+
+/// Result 1 sweep: max queue vs n for uniform (log n) and PPoT (log log n).
+pub fn max_queue_scaling(scale: Scale, seed: u64) -> Vec<(usize, f64, f64)> {
+    let duration = scale.t(200.0);
+    let mut out = Vec::new();
+    for &n in &[8usize, 32, 128] {
+        let uni = max_queue(n, 0.9, PolicyKind::Uniform, duration, seed);
+        let ppot = max_queue(
+            n,
+            0.9,
+            PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
+            duration,
+            seed,
+        );
+        out.push((n, uni, ppot));
+    }
+    out
+}
+
+/// Result 2: time for the learner's mean relative estimation error to fall
+/// below `threshold`, as a function of cluster size. Returns
+/// `(n, learn_time_secs)`; `f64::INFINITY` if never reached.
+pub fn learning_time(n: usize, threshold: f64, scale: Scale, seed: u64) -> f64 {
+    // Heterogeneous cluster: half slow (0.5), half fast (1.5).
+    let speeds: Vec<f64> =
+        (0..n).map(|i| if i % 2 == 0 { 0.5 } else { 1.5 }).collect();
+    let r = sim_run(SimConfig {
+        seed,
+        duration: scale.t(300.0),
+        warmup: 0.0,
+        speeds: SpeedProfile::Explicit(speeds),
+        volatility: Volatility::Static,
+        workload: WorkloadKind::Synthetic,
+        load: 0.7,
+        policy: PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
+        learner: LearnerConfig::default(),
+        queue_sample: None,
+    });
+    r.estimate_error
+        .iter()
+        .find(|(_, e)| *e < threshold)
+        .map(|(t, _)| *t)
+        .unwrap_or(f64::INFINITY)
+}
+
+/// Result 2 sweep over n.
+pub fn learning_time_scaling(scale: Scale, seed: u64) -> Vec<(usize, f64)> {
+    [10usize, 20, 40, 80]
+        .iter()
+        .map(|&n| (n, learning_time(n, 0.25, scale, seed)))
+        .collect()
+}
+
+/// Result 3: estimate-error trace around a mid-run permutation shock.
+pub fn shock_recovery_trace(scale: Scale, seed: u64) -> Vec<(f64, f64)> {
+    let shock_at = scale.t(150.0);
+    let r = sim_run(SimConfig {
+        seed,
+        duration: shock_at * 2.0,
+        warmup: 0.0,
+        speeds: SpeedProfile::S2,
+        volatility: Volatility::Permute { period: shock_at },
+        workload: WorkloadKind::Synthetic,
+        load: 0.7,
+        policy: PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
+        learner: LearnerConfig::default(),
+        queue_sample: None,
+    });
+    r.estimate_error
+}
+
+/// Render the theory report.
+pub fn run(scale: Scale) -> String {
+    let mut out = String::new();
+    let sweep = max_queue_scaling(scale, 20200417);
+    let rows: Vec<Row> = sweep
+        .iter()
+        .map(|(n, uni, ppot)| Row::new(format!("n={n}"), vec![*uni, *ppot]))
+        .collect();
+    out.push_str(&format_table(
+        "Theory R1 — mean max queue length (load 0.9, homogeneous)",
+        &["uniform (log n)", "ppot (log log n)"],
+        &rows,
+        2,
+    ));
+    let lt = learning_time_scaling(scale, 20200417);
+    let rows: Vec<Row> =
+        lt.iter().map(|(n, t)| Row::new(format!("n={n}"), vec![*t])).collect();
+    out.push_str(&format_table(
+        "Theory R2 — learning time (secs to error < 0.25)",
+        &["learn_time_s"],
+        &rows,
+        2,
+    ));
+    let trace = shock_recovery_trace(scale, 20200417);
+    let shock_at = scale.t(150.0);
+    let pre: Vec<f64> = trace
+        .iter()
+        .filter(|(t, _)| *t > shock_at * 0.5 && *t < shock_at)
+        .map(|(_, e)| *e)
+        .collect();
+    let post_late: Vec<f64> = trace
+        .iter()
+        .filter(|(t, _)| *t > shock_at * 1.5)
+        .map(|(_, e)| *e)
+        .collect();
+    out.push_str(&format!(
+        "== Theory R3 — shock recovery ==\npre-shock error {:.3}, post-shock (after re-learning) {:.3}\n",
+        crate::stats::mean(&pre),
+        crate::stats::mean(&post_late),
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_queue_grows_slower_under_ppot() {
+        let sweep = max_queue_scaling(Scale::Quick, 14);
+        // Growth factor from the smallest to the largest n.
+        let uni_growth = sweep.last().unwrap().1 / sweep[0].1.max(0.1);
+        let ppot_growth = sweep.last().unwrap().2 / sweep[0].2.max(0.1);
+        assert!(
+            ppot_growth < uni_growth,
+            "ppot growth {ppot_growth} should be below uniform growth {uni_growth} ({sweep:?})"
+        );
+        // And PPoT's absolute max queue is smaller at the largest n.
+        assert!(sweep.last().unwrap().2 < sweep.last().unwrap().1);
+    }
+
+    #[test]
+    fn learning_time_nearly_size_independent() {
+        let lt = learning_time_scaling(Scale::Quick, 15);
+        let t_small = lt[0].1;
+        let t_large = lt.last().unwrap().1;
+        assert!(t_small.is_finite(), "learner never converged on small cluster: {lt:?}");
+        assert!(t_large.is_finite(), "learner never converged on large cluster: {lt:?}");
+        // Doubling n three times should not even double the learning time
+        // (Result 2: log(n) growth at worst).
+        assert!(t_large < t_small * 4.0 + 5.0, "{lt:?}");
+    }
+
+    #[test]
+    fn shock_spikes_then_recovers() {
+        let trace = shock_recovery_trace(Scale::Quick, 16);
+        assert!(!trace.is_empty());
+        let shock_at = Scale::Quick.t(150.0);
+        let just_after: Vec<f64> = trace
+            .iter()
+            .filter(|(t, _)| *t > shock_at && *t < shock_at * 1.2)
+            .map(|(_, e)| *e)
+            .collect();
+        let later: Vec<f64> = trace
+            .iter()
+            .filter(|(t, _)| *t > shock_at * 1.7)
+            .map(|(_, e)| *e)
+            .collect();
+        // Error right after the shock exceeds the eventual recovered error.
+        assert!(
+            crate::stats::mean(&just_after) > crate::stats::mean(&later),
+            "after={:?} later={:?}",
+            crate::stats::mean(&just_after),
+            crate::stats::mean(&later)
+        );
+    }
+}

@@ -1,0 +1,152 @@
+//! Arrival estimator (§3.3).
+//!
+//! Estimates the task arrival rate λ as the reciprocal of the mean
+//! inter-arrival time over the last `S` task arrivals. `S` is the
+//! responsiveness/accuracy knob: large `S` → accurate but slow to react,
+//! small `S` → noisy but fast (the paper discusses exactly this tradeoff).
+
+use crate::stats::SlidingMean;
+
+/// Sliding-window arrival-rate estimator.
+#[derive(Debug, Clone)]
+pub struct ArrivalEstimator {
+    window: SlidingMean,
+    last_arrival: Option<f64>,
+}
+
+impl ArrivalEstimator {
+    /// Estimator over the inter-arrival times of the last `s` arrivals.
+    pub fn new(s: usize) -> Self {
+        Self { window: SlidingMean::new(s.max(1)), last_arrival: None }
+    }
+
+    /// Record `count` task arrivals at time `now` (a job of m tasks counts
+    /// as m simultaneous task arrivals; the m−1 extra arrivals contribute
+    /// zero inter-arrival gaps, correctly inflating the rate estimate).
+    pub fn on_arrival(&mut self, now: f64, count: usize) {
+        if count == 0 {
+            return;
+        }
+        if let Some(prev) = self.last_arrival {
+            let gap = (now - prev).max(0.0);
+            self.window.push(gap);
+            for _ in 1..count {
+                self.window.push(0.0);
+            }
+        } else if count > 1 {
+            for _ in 1..count {
+                self.window.push(0.0);
+            }
+        }
+        self.last_arrival = Some(now);
+    }
+
+    /// Current estimate λ̂ in tasks/second, or `None` before two arrivals.
+    pub fn lambda_hat(&self) -> Option<f64> {
+        match self.window.mean() {
+            Some(m) if m > 0.0 => Some(1.0 / m),
+            Some(_) => None, // all-zero gaps: burst with no measurable rate yet
+            None => None,
+        }
+    }
+
+    /// Estimate with a fallback default.
+    pub fn lambda_or(&self, default: f64) -> f64 {
+        self.lambda_hat().unwrap_or(default)
+    }
+
+    /// Number of samples currently held.
+    pub fn samples(&self) -> usize {
+        self.window.len()
+    }
+
+    /// Forget all history (e.g. after a reconfiguration).
+    pub fn reset(&mut self) {
+        self.window.clear();
+        self.last_arrival = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimates_constant_rate() {
+        let mut e = ArrivalEstimator::new(50);
+        for k in 0..200 {
+            e.on_arrival(k as f64 * 0.1, 1); // 10 tasks/s
+        }
+        let l = e.lambda_hat().unwrap();
+        assert!((l - 10.0).abs() < 1e-9, "lambda={l}");
+    }
+
+    #[test]
+    fn no_estimate_before_two_arrivals() {
+        let mut e = ArrivalEstimator::new(10);
+        assert!(e.lambda_hat().is_none());
+        e.on_arrival(1.0, 1);
+        assert!(e.lambda_hat().is_none());
+        assert_eq!(e.lambda_or(42.0), 42.0);
+        e.on_arrival(1.5, 1);
+        assert!((e.lambda_hat().unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multi_task_jobs_inflate_rate() {
+        let mut e = ArrivalEstimator::new(100);
+        // One 5-task job per second = 5 tasks/s.
+        for k in 0..100 {
+            e.on_arrival(k as f64, 5);
+        }
+        let l = e.lambda_hat().unwrap();
+        assert!((l - 5.0).abs() < 0.3, "lambda={l}");
+    }
+
+    #[test]
+    fn tracks_rate_change_within_window() {
+        let mut e = ArrivalEstimator::new(20);
+        for k in 0..100 {
+            e.on_arrival(k as f64, 1); // 1 task/s
+        }
+        // Rate jumps to 20 tasks/s; after 20+ arrivals the window has
+        // flushed the old gaps.
+        let mut t = 100.0;
+        for _ in 0..40 {
+            t += 0.05;
+            e.on_arrival(t, 1);
+        }
+        let l = e.lambda_hat().unwrap();
+        assert!((l - 20.0).abs() < 1.0, "lambda={l}");
+    }
+
+    #[test]
+    fn small_window_reacts_faster_than_large() {
+        let mut small = ArrivalEstimator::new(5);
+        let mut large = ArrivalEstimator::new(200);
+        for k in 0..300 {
+            let t = k as f64;
+            small.on_arrival(t, 1);
+            large.on_arrival(t, 1);
+        }
+        let mut t = 300.0;
+        for _ in 0..10 {
+            t += 0.1;
+            small.on_arrival(t, 1);
+            large.on_arrival(t, 1);
+        }
+        let ls = small.lambda_hat().unwrap();
+        let ll = large.lambda_hat().unwrap();
+        assert!(ls > ll * 2.0, "small={ls} large={ll}");
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut e = ArrivalEstimator::new(10);
+        e.on_arrival(0.0, 1);
+        e.on_arrival(1.0, 1);
+        e.reset();
+        assert!(e.lambda_hat().is_none());
+        assert_eq!(e.samples(), 0);
+    }
+}

@@ -1,0 +1,115 @@
+//! Benchmark-job ("fake job") dispatcher — LEARNER-DISPATCHER (Fig. 6).
+//!
+//! The learner actively explores the cluster by generating low-priority
+//! benchmark jobs as a Poisson process with rate `c0 · (μ̄ − λ̂)`: a fixed
+//! fraction (c0 = 0.1 in the paper) of the cluster's *residual* throughput.
+//! Each benchmark job goes to a uniformly random worker and resembles the
+//! recent workload (its demand is drawn from the same distribution). This
+//! keeps every worker supplied with ~L fresh service samples per learner
+//! horizon — exactly the rate at which workers faster than μ* can keep up,
+//! so slower-than-μ* workers fall behind and get discarded (§4.3).
+
+use crate::stats::{Exponential, Rng};
+
+/// Poisson dispatcher of benchmark jobs.
+#[derive(Debug, Clone)]
+pub struct FakeJobDispatcher {
+    /// The constant c0 (0.1 in the paper).
+    c0: f64,
+    /// Minimum guaranteed total service throughput μ̄ (tasks/sec).
+    mu_bar: f64,
+    /// Floor on the dispatch rate so learning never fully stalls even when
+    /// λ̂ ≈ μ̄ (residual throughput ≈ 0).
+    min_rate: f64,
+    /// Whether dispatch is enabled at all (Fig. 12 ablates this).
+    enabled: bool,
+}
+
+impl FakeJobDispatcher {
+    /// New dispatcher. `mu_bar` is the guaranteed aggregate throughput.
+    pub fn new(c0: f64, mu_bar: f64, enabled: bool) -> Self {
+        assert!(c0 > 0.0 && mu_bar > 0.0);
+        Self { c0, mu_bar, min_rate: 1e-3 * mu_bar, enabled }
+    }
+
+    /// Whether benchmark jobs are being produced.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Current dispatch rate `c0 · (μ̄ − λ̂)` in benchmark tasks/sec.
+    pub fn rate(&self, lambda_hat: f64) -> f64 {
+        if !self.enabled {
+            return 0.0;
+        }
+        (self.c0 * (self.mu_bar - lambda_hat)).max(self.min_rate)
+    }
+
+    /// Sample the gap until the next benchmark dispatch, given the current
+    /// arrival estimate. Returns `None` when dispatch is disabled.
+    pub fn next_gap(&self, lambda_hat: f64, rng: &mut Rng) -> Option<f64> {
+        if !self.enabled {
+            return None;
+        }
+        Some(Exponential::new(self.rate(lambda_hat)).sample(rng))
+    }
+
+    /// Choose the target worker: uniform over the cluster (Fig. 6 line 4).
+    pub fn pick_worker(&self, n: usize, rng: &mut Rng) -> usize {
+        rng.gen_index(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_tracks_residual_throughput() {
+        let d = FakeJobDispatcher::new(0.1, 150.0, true);
+        // α = 0.8 → residual 30 tasks/s → rate 3/s.
+        assert!((d.rate(120.0) - 3.0).abs() < 1e-12);
+        // α = 0.2 → residual 120 → rate 12/s: lighter load, more probing.
+        assert!((d.rate(30.0) - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rate_floor_under_overload() {
+        let d = FakeJobDispatcher::new(0.1, 100.0, true);
+        assert!(d.rate(99.9) > 0.0);
+        assert!(d.rate(200.0) > 0.0); // λ̂ > μ̄: estimate noise must not kill learning
+    }
+
+    #[test]
+    fn disabled_dispatcher_produces_nothing() {
+        let d = FakeJobDispatcher::new(0.1, 100.0, false);
+        let mut r = Rng::new(1);
+        assert_eq!(d.rate(50.0), 0.0);
+        assert!(d.next_gap(50.0, &mut r).is_none());
+        assert!(!d.enabled());
+    }
+
+    #[test]
+    fn gaps_are_exponential_with_matching_mean() {
+        let d = FakeJobDispatcher::new(0.1, 150.0, true);
+        let mut r = Rng::new(2);
+        let n = 100_000;
+        let mean: f64 =
+            (0..n).map(|_| d.next_gap(120.0, &mut r).unwrap()).sum::<f64>() / n as f64;
+        assert!((mean - 1.0 / 3.0).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn worker_choice_is_uniform() {
+        let d = FakeJobDispatcher::new(0.1, 100.0, true);
+        let mut r = Rng::new(3);
+        let mut counts = [0usize; 5];
+        let n = 50_000;
+        for _ in 0..n {
+            counts[d.pick_worker(5, &mut r)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 / n as f64 - 0.2).abs() < 0.02, "{counts:?}");
+        }
+    }
+}

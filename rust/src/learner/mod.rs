@@ -1,0 +1,94 @@
+//! The self-driving learning stack (§3.2–§3.3): arrival estimator,
+//! performance learner, and the benchmark-job dispatcher.
+//!
+//! The three pieces interact exactly as the paper's Figure 1: arrivals feed
+//! λ̂; λ̂ sets both the dispatcher's probing rate `c0(μ̄ − λ̂)` and the
+//! learner's dynamic window `L = c/(1 − α̂)`; completions (real and
+//! benchmark) feed the per-worker service histories from which μ̂ is
+//! published to the scheduling policy.
+
+pub mod arrival;
+pub mod dispatcher;
+pub mod perf;
+pub mod sync;
+
+pub use arrival::ArrivalEstimator;
+pub use dispatcher::FakeJobDispatcher;
+pub use perf::{LearnerParams, PerfLearner};
+pub use sync::{merge_estimates, throttled_rate, EstimateView};
+
+/// Bundled learner configuration used by the engine and the live
+/// coordinator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LearnerConfig {
+    /// Enable the learning stack at all. When disabled, the scheduler sees
+    /// the configured prior (or oracle speeds if `oracle` is set).
+    pub enabled: bool,
+    /// Publish true speeds instead of learned estimates (the "worker speeds
+    /// are known" settings of §6.2).
+    pub oracle: bool,
+    /// Enable the benchmark-job dispatcher (Fig. 12 ablates this).
+    pub fake_jobs: bool,
+    /// Dispatcher constant c0 (paper: 0.1).
+    pub c0: f64,
+    /// Practical window constant `c` in `L = c/(1 − α̂)` (paper sweeps
+    /// {10, 20, 30, 40}; default 10).
+    pub window_c: f64,
+    /// Arrival-estimator window `S` in samples.
+    pub arrival_window: usize,
+    /// How often estimates are published / the alias table rebuilt (s).
+    pub publish_interval: f64,
+}
+
+impl Default for LearnerConfig {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            oracle: false,
+            fake_jobs: true,
+            c0: 0.1,
+            window_c: 10.0,
+            arrival_window: 200,
+            publish_interval: 0.1,
+        }
+    }
+}
+
+impl LearnerConfig {
+    /// Oracle configuration: speeds known, no learning, no fake jobs.
+    pub fn oracle() -> Self {
+        Self { enabled: false, oracle: true, fake_jobs: false, ..Self::default() }
+    }
+
+    /// Learning without benchmark jobs, fixed window constant `c`
+    /// (the Fig. 12 "w10..w40" baselines).
+    pub fn no_fake_jobs(window_c: f64) -> Self {
+        Self { fake_jobs: false, window_c, ..Self::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_constants() {
+        let c = LearnerConfig::default();
+        assert!(c.enabled && c.fake_jobs && !c.oracle);
+        assert_eq!(c.c0, 0.1);
+        assert_eq!(c.window_c, 10.0);
+    }
+
+    #[test]
+    fn oracle_preset() {
+        let c = LearnerConfig::oracle();
+        assert!(c.oracle && !c.enabled && !c.fake_jobs);
+    }
+
+    #[test]
+    fn ablation_preset() {
+        let c = LearnerConfig::no_fake_jobs(30.0);
+        assert!(c.enabled && !c.fake_jobs);
+        assert_eq!(c.window_c, 30.0);
+    }
+}

@@ -1,0 +1,396 @@
+//! Performance learner (§3.2, pseudocode LEARNER-AGGREGATE in Fig. 6).
+//!
+//! Maintains, per worker, a ring buffer of recent *service-time samples*
+//! (duration and demand of each completed task, real or benchmark) and
+//! computes speed estimates μ̂ on publish:
+//!
+//! * window length `L = ceil(c / (1 − α̂))` — the paper's *practical* window
+//!   (§6.2 "setting it to c/(1−α) achieves the best performance"; the
+//!   asymptotic bound of §4.3 is c/(1−α)², which is "too conservative");
+//! * `ε = (3/10)(1 − α̂)` and the relative speed floor `μ* = (1 − α̂)/10`;
+//! * the *timeout rule*: a worker that did not produce `L` samples within
+//!   `(1+ε)·L·τ̄/μ*` seconds is too slow to matter and its estimate is set
+//!   to 0 — effectively treating it as dead (Lemma 5(i)). During the cold
+//!   start (before one full horizon has elapsed) partial windows are used
+//!   instead, since "cannot measure in time" has not yet been observed;
+//! * the kept estimate is the deliberate underestimate
+//!   `μ̂ = (1 − ε) · Σ demand / Σ duration` (ratio estimator over the last
+//!   `L` samples; for unit demands this is exactly the paper's
+//!   `(1 − ε)/q̂`).
+//!
+//! The same aggregation is implemented as a Pallas kernel
+//! (`python/compile/kernels/learner.py`) and AOT-compiled; the live
+//! coordinator can execute either the native path or the PJRT artifact
+//! (they are verified equivalent in tests).
+
+/// One completed-task observation.
+#[derive(Debug, Clone, Copy)]
+struct Sample {
+    /// Completion time (sim or wall clock).
+    at: f64,
+    /// Observed service duration in seconds.
+    duration: f64,
+    /// Task demand in unit-speed seconds.
+    demand: f64,
+}
+
+/// Ring buffer of the most recent `cap` samples for one worker.
+#[derive(Debug, Clone)]
+struct History {
+    buf: Vec<Sample>,
+    head: usize,
+    len: usize,
+}
+
+impl History {
+    fn new(cap: usize) -> Self {
+        Self { buf: Vec::with_capacity(cap), head: 0, len: 0 }
+    }
+
+    fn push(&mut self, s: Sample) {
+        if self.buf.len() < self.buf.capacity() {
+            self.buf.push(s);
+            self.len += 1;
+        } else {
+            self.buf[self.head] = s;
+            self.head = (self.head + 1) % self.buf.len();
+            self.len = self.buf.len();
+        }
+    }
+}
+
+/// Per-cluster performance learner.
+#[derive(Debug)]
+pub struct PerfLearner {
+    hist: Vec<History>,
+    /// Fraction `c` of the practical window `L = c/(1−α̂)`.
+    window_c: f64,
+    /// Mean task demand τ̄ used to convert counts to times.
+    mean_demand: f64,
+    /// Minimum guaranteed total service throughput μ̄ (tasks/sec).
+    mu_bar: f64,
+    /// Time the learner started (for the cold-start exception).
+    start: f64,
+    /// Prior estimate used before any samples exist (mean relative speed).
+    prior: f64,
+    /// Published estimates.
+    mu_hat: Vec<f64>,
+}
+
+/// Parameters derived from the current load estimate; shared with the
+/// Pallas kernel so both implementations agree bit-for-bit on the rule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LearnerParams {
+    /// Estimated load ratio α̂ = λ̂/μ̄, clamped to [0, 0.99].
+    pub alpha: f64,
+    /// ε = 0.3(1 − α̂).
+    pub epsilon: f64,
+    /// Window length L = ceil(c / (1 − α̂)).
+    pub window: usize,
+    /// Relative speed floor μ* = (1 − α̂)/10.
+    pub mu_star: f64,
+    /// Timeout horizon (1+ε)·L·τ̄/μ* in seconds.
+    pub horizon: f64,
+}
+
+impl LearnerParams {
+    /// Derive parameters from the load estimate.
+    pub fn derive(lambda_hat: f64, mu_bar: f64, window_c: f64, mean_demand: f64) -> Self {
+        let alpha = (lambda_hat / mu_bar).clamp(0.0, 0.99);
+        let epsilon = 0.3 * (1.0 - alpha);
+        // Round (rather than ceil) to dodge f64 artifacts like
+        // 10/0.2 = 50.000000000000007.
+        let window = (window_c / (1.0 - alpha)).round().max(1.0) as usize;
+        let mu_star = (1.0 - alpha) / 10.0;
+        let horizon = (1.0 + epsilon) * window as f64 * mean_demand / mu_star;
+        Self { alpha, epsilon, window, mu_star, horizon }
+    }
+}
+
+impl PerfLearner {
+    /// New learner.
+    ///
+    /// * `n` — number of workers;
+    /// * `window_c` — the practical window constant `c` (§6.2 sweeps
+    ///   {10, 20, 30, 40}; Rosella's default is 10);
+    /// * `mean_demand` — τ̄, mean task demand in seconds (0.1 in §6.2);
+    /// * `mu_bar` — minimum guaranteed total throughput in tasks/sec;
+    /// * `prior` — estimate used for a worker before any samples arrive
+    ///   (the mean relative speed, so cold-start ≈ uniform sampling);
+    /// * `start` — clock value at learner birth.
+    pub fn new(
+        n: usize,
+        window_c: f64,
+        mean_demand: f64,
+        mu_bar: f64,
+        prior: f64,
+        start: f64,
+    ) -> Self {
+        assert!(n > 0 && window_c > 0.0 && mean_demand > 0.0 && mu_bar > 0.0);
+        // Capacity for the largest window we will ever need (α̂ ≤ 0.99).
+        let max_window = (window_c / 0.01).ceil() as usize;
+        Self {
+            hist: (0..n).map(|_| History::new(max_window.min(4096))).collect(),
+            window_c,
+            mean_demand,
+            mu_bar,
+            start,
+            prior,
+            mu_hat: vec![prior; n],
+        }
+    }
+
+    /// Number of workers tracked.
+    pub fn n(&self) -> usize {
+        self.hist.len()
+    }
+
+    /// Record a completed task on `worker`.
+    pub fn on_completion(&mut self, worker: usize, now: f64, duration: f64, demand: f64) {
+        debug_assert!(duration > 0.0 && demand > 0.0);
+        self.hist[worker].push(Sample { at: now, duration, demand });
+    }
+
+    /// Recompute and publish estimates for all workers given the current
+    /// arrival estimate. Returns the derived parameters (for logging).
+    pub fn publish(&mut self, now: f64, lambda_hat: f64) -> LearnerParams {
+        let p = LearnerParams::derive(lambda_hat, self.mu_bar, self.window_c, self.mean_demand);
+        let cold_start = now - self.start < p.horizon;
+        for (w, h) in self.hist.iter().enumerate() {
+            self.mu_hat[w] = Self::estimate_one(h, now, &p, cold_start, self.prior);
+        }
+        p
+    }
+
+    /// LEARNER-AGGREGATE for a single worker.
+    fn estimate_one(
+        h: &History,
+        now: f64,
+        p: &LearnerParams,
+        cold_start: bool,
+        prior: f64,
+    ) -> f64 {
+        // Walk the most recent samples (newest first), keeping those within
+        // the timeout horizon, up to L of them.
+        let cutoff = now - p.horizon;
+        let mut used = 0usize;
+        let mut sum_dur = 0.0;
+        let mut sum_dem = 0.0;
+        let cap = h.buf.len();
+        if cap > 0 {
+            let newest = (h.head + h.len - 1) % cap;
+            for i in 0..h.len.min(p.window) {
+                let s = &h.buf[(newest + cap - i) % cap];
+                if s.at < cutoff {
+                    break;
+                }
+                used += 1;
+                sum_dur += s.duration;
+                sum_dem += s.demand;
+            }
+        }
+        if used >= p.window {
+            // Full window observed in time: the paper's estimate
+            // μ̂ = (1 − ε) / q̂ generalized to heterogeneous demands.
+            (1.0 - p.epsilon) * sum_dem / sum_dur
+        } else if cold_start {
+            // Haven't had a full horizon to fail yet: use what we have.
+            if used > 0 {
+                (1.0 - p.epsilon) * sum_dem / sum_dur
+            } else {
+                prior
+            }
+        } else {
+            // "Cannot measure q̂ in (1+ε)L/μ* time" → worker is slower than
+            // the floor; discard it (Fig. 6, line 11).
+            0.0
+        }
+    }
+
+    /// Latest published estimates (relative speed units; `mu_hat[i] = 0`
+    /// means "treat worker i as dead").
+    pub fn mu_hat(&self) -> &[f64] {
+        &self.mu_hat
+    }
+
+    /// Mean relative estimation error vs true speeds (diagnostics; only the
+    /// engine knows the ground truth). Workers estimated 0 count as full
+    /// error unless they are truly below the floor.
+    pub fn relative_error(&self, true_speeds: &[f64], mu_star_abs: f64) -> f64 {
+        let mut total = 0.0;
+        let mut count = 0usize;
+        for (est, &truth) in self.mu_hat.iter().zip(true_speeds) {
+            if truth <= mu_star_abs {
+                continue; // legitimately discardable
+            }
+            total += (est - truth).abs() / truth;
+            count += 1;
+        }
+        if count == 0 {
+            0.0
+        } else {
+            total / count as f64
+        }
+    }
+
+    /// Export the raw ring buffers as dense matrices for the PJRT learner
+    /// kernel: `(durations, demands, ages, valid_counts)`, each row one
+    /// worker, columns newest-first, padded with zeros. `k` columns.
+    pub fn export_dense(&self, now: f64, k: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<i32>) {
+        let n = self.hist.len();
+        let mut dur = vec![0.0f32; n * k];
+        let mut dem = vec![0.0f32; n * k];
+        let mut age = vec![f32::MAX; n * k];
+        let mut cnt = vec![0i32; n];
+        for (w, h) in self.hist.iter().enumerate() {
+            let cap = h.buf.len();
+            if cap == 0 {
+                continue;
+            }
+            let newest = (h.head + h.len - 1) % cap;
+            let take = h.len.min(k);
+            for i in 0..take {
+                let s = &h.buf[(newest + cap - i) % cap];
+                dur[w * k + i] = s.duration as f32;
+                dem[w * k + i] = s.demand as f32;
+                age[w * k + i] = (now - s.at) as f32;
+            }
+            cnt[w] = take as i32;
+        }
+        (dur, dem, age, cnt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn learner(n: usize) -> PerfLearner {
+        // τ̄ = 0.1s, μ̄ = n workers × 10 tasks/s.
+        PerfLearner::new(n, 10.0, 0.1, n as f64 * 10.0, 1.0, 0.0)
+    }
+
+    #[test]
+    fn params_match_paper_formulas() {
+        let p = LearnerParams::derive(80.0, 100.0, 10.0, 0.1);
+        assert!((p.alpha - 0.8).abs() < 1e-12);
+        assert!((p.epsilon - 0.06).abs() < 1e-12);
+        assert_eq!(p.window, 50); // 10 / 0.2
+        assert!((p.mu_star - 0.02).abs() < 1e-12);
+        assert!((p.horizon - 1.06 * 50.0 * 0.1 / 0.02).abs() < 1e-9);
+    }
+
+    #[test]
+    fn params_clamp_overload() {
+        let p = LearnerParams::derive(500.0, 100.0, 10.0, 0.1);
+        assert!(p.alpha <= 0.99);
+        assert!(p.window >= 1);
+    }
+
+    #[test]
+    fn estimates_speed_of_sampled_worker() {
+        let mut l = learner(2);
+        // Worker 0 has speed 2.0: tasks with demand 0.1 take 0.05 s.
+        let mut t = 0.0;
+        for _ in 0..200 {
+            t += 0.05;
+            l.on_completion(0, t, 0.05, 0.1);
+        }
+        let p = l.publish(t, 10.0);
+        let est = l.mu_hat()[0];
+        assert!((est - (1.0 - p.epsilon) * 2.0).abs() < 1e-9, "est={est}");
+        // Deliberate underestimate: (1-ε)·μ ≤ μ̂ ≤ μ (Lemma 5(ii)).
+        assert!(est <= 2.0 && est >= (1.0 - p.epsilon) * 2.0 - 1e-9);
+    }
+
+    #[test]
+    fn unsampled_worker_keeps_prior_during_cold_start() {
+        let mut l = learner(2);
+        l.publish(0.5, 10.0);
+        assert_eq!(l.mu_hat()[1], 1.0);
+    }
+
+    #[test]
+    fn silent_worker_zeroed_after_horizon() {
+        let mut l = learner(2);
+        // Keep worker 0 lively the whole time; worker 1 never completes.
+        let p0 = LearnerParams::derive(10.0, 20.0, 10.0, 0.1);
+        let end = p0.horizon * 2.0;
+        let mut t = 0.0;
+        while t < end {
+            t += 0.1;
+            l.on_completion(0, t, 0.1, 0.1);
+        }
+        l.publish(end, 10.0);
+        assert!(l.mu_hat()[0] > 0.0);
+        assert_eq!(l.mu_hat()[1], 0.0, "silent worker must be discarded");
+    }
+
+    #[test]
+    fn stale_samples_beyond_horizon_do_not_count() {
+        let mut l = learner(1);
+        let p = LearnerParams::derive(10.0, 10.0, 10.0, 0.1);
+        // Fill a full window early...
+        let mut t = 0.0;
+        for _ in 0..p.window + 5 {
+            t += 0.01;
+            l.on_completion(0, t, 0.1, 0.1);
+        }
+        // ...then go silent for two horizons.
+        let later = t + 2.0 * p.horizon;
+        l.publish(later, 10.0);
+        assert_eq!(l.mu_hat()[0], 0.0, "stale window must not survive");
+    }
+
+    #[test]
+    fn window_uses_most_recent_samples_after_speed_change() {
+        let mut l = learner(1);
+        let mut t = 0.0;
+        // Old slow phase: duration 0.2 (speed 0.5).
+        for _ in 0..500 {
+            t += 0.2;
+            l.on_completion(0, t, 0.2, 0.1);
+        }
+        // New fast phase: duration 0.025 (speed 4.0) — more than L samples.
+        let p = LearnerParams::derive(8.0, 10.0, 10.0, 0.1);
+        for _ in 0..p.window + 10 {
+            t += 0.025;
+            l.on_completion(0, t, 0.025, 0.1);
+        }
+        l.publish(t, 8.0);
+        let est = l.mu_hat()[0];
+        assert!((est - (1.0 - p.epsilon) * 4.0).abs() < 0.05, "est={est}");
+    }
+
+    #[test]
+    fn relative_error_ignores_sub_floor_workers() {
+        let mut l = learner(2);
+        let mut t = 0.0;
+        for _ in 0..200 {
+            t += 0.1;
+            l.on_completion(0, t, 0.1, 0.1);
+        }
+        l.publish(t, 10.0);
+        // Worker 1 (speed 0.001, below floor) is excluded from the metric.
+        // Worker 0 carries the deliberate (1-eps) underestimate bias.
+        let err = l.relative_error(&[1.0, 0.001], 0.01);
+        assert!(err < 0.2, "err={err}");
+    }
+
+    #[test]
+    fn export_dense_shapes_and_padding() {
+        let mut l = learner(3);
+        l.on_completion(1, 1.0, 0.05, 0.1);
+        l.on_completion(1, 2.0, 0.07, 0.1);
+        let (dur, dem, age, cnt) = l.export_dense(3.0, 4);
+        assert_eq!(dur.len(), 12);
+        assert_eq!(cnt, vec![0, 2, 0]);
+        // Newest first for worker 1.
+        assert!((dur[4] - 0.07).abs() < 1e-6);
+        assert!((dur[5] - 0.05).abs() < 1e-6);
+        assert!((age[4] - 1.0).abs() < 1e-6);
+        assert!((age[5] - 2.0).abs() < 1e-6);
+        assert_eq!(dem[0], 0.0);
+        assert_eq!(dur[8], 0.0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Multi-scheduler estimate synchronization (paper §5, "Distributed
+//! scheduler").
+//!
+//! "When there are multiple schedulers, they need only synchronize the
+//! estimates of worker speeds regularly." Each scheduler observes only the
+//! completions of tasks *it* routed (plus its own benchmark jobs), so its
+//! per-worker sample counts differ; the merge rule below combines the
+//! schedulers' views into one vector that every scheduler adopts:
+//!
+//! * per worker, estimates are averaged weighted by each scheduler's
+//!   in-window sample count (a scheduler that saw 40 fresh samples should
+//!   dominate one that saw 2);
+//! * a worker all schedulers discarded (μ̂ = 0 everywhere with samples
+//!   present) stays discarded;
+//! * a worker *no* scheduler has samples for keeps the supplied prior.
+//!
+//! The same rule throttles benchmark traffic: with `k` schedulers each
+//! dispatcher runs at `c0(μ̄ − λ̂)/k` so the aggregate probing rate matches
+//! the single-scheduler design (§5: "excessive amount of benchmark jobs
+//! ... could be sent"; "implementing throttling ensures the benchmark jobs
+//! will not adversarially affect the system").
+
+/// One scheduler's view of one worker at sync time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EstimateView {
+    /// Published estimate μ̂ (0 = discarded).
+    pub mu_hat: f64,
+    /// Number of in-window samples behind the estimate.
+    pub samples: u64,
+}
+
+/// Merge `k` schedulers' estimate vectors into the consensus vector.
+///
+/// `views[s][w]` is scheduler `s`'s view of worker `w`; `prior` fills
+/// workers nobody has sampled. Panics if the views disagree on the worker
+/// count or are empty.
+pub fn merge_estimates(views: &[Vec<EstimateView>], prior: f64) -> Vec<f64> {
+    assert!(!views.is_empty(), "no schedulers to merge");
+    let n = views[0].len();
+    assert!(views.iter().all(|v| v.len() == n), "worker-count mismatch across schedulers");
+    (0..n)
+        .map(|w| {
+            let mut weighted = 0.0;
+            let mut weight = 0u64;
+            for view in views {
+                let v = view[w];
+                if v.samples > 0 {
+                    weighted += v.mu_hat * v.samples as f64;
+                    weight += v.samples;
+                }
+            }
+            if weight == 0 {
+                prior
+            } else {
+                weighted / weight as f64
+            }
+        })
+        .collect()
+}
+
+/// Per-scheduler benchmark dispatch rate under `k` schedulers: the
+/// aggregate probing budget `c0(μ̄ − λ̂)` is split evenly (throttling).
+pub fn throttled_rate(c0: f64, mu_bar: f64, lambda_hat: f64, schedulers: usize) -> f64 {
+    assert!(schedulers >= 1);
+    (c0 * (mu_bar - lambda_hat)).max(0.0) / schedulers as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(mu: f64, s: u64) -> EstimateView {
+        EstimateView { mu_hat: mu, samples: s }
+    }
+
+    #[test]
+    fn weighted_by_sample_counts() {
+        // Scheduler A saw 40 samples of worker 0 (est 2.0); B saw 10 (1.0).
+        let merged = merge_estimates(&[vec![v(2.0, 40)], vec![v(1.0, 10)]], 1.0);
+        assert!((merged[0] - 1.8).abs() < 1e-12, "{merged:?}");
+    }
+
+    #[test]
+    fn unsampled_worker_keeps_prior() {
+        let merged = merge_estimates(&[vec![v(0.0, 0)], vec![v(0.0, 0)]], 0.7);
+        assert_eq!(merged[0], 0.7);
+    }
+
+    #[test]
+    fn unanimous_discard_stays_discarded() {
+        // Both schedulers have samples and both zeroed the worker.
+        let merged = merge_estimates(&[vec![v(0.0, 20)], vec![v(0.0, 30)]], 1.0);
+        assert_eq!(merged[0], 0.0);
+    }
+
+    #[test]
+    fn one_sided_knowledge_wins() {
+        // Only scheduler B has any samples.
+        let merged = merge_estimates(&[vec![v(0.0, 0)], vec![v(1.3, 25)]], 1.0);
+        assert!((merged[0] - 1.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_worker_independence() {
+        let a = vec![v(2.0, 10), v(0.0, 0)];
+        let b = vec![v(2.0, 10), v(0.5, 10)];
+        let merged = merge_estimates(&[a, b], 1.0);
+        assert!((merged[0] - 2.0).abs() < 1e-12);
+        assert!((merged[1] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_worker_counts_rejected() {
+        merge_estimates(&[vec![v(1.0, 1)], vec![v(1.0, 1), v(1.0, 1)]], 1.0);
+    }
+
+    #[test]
+    fn throttling_splits_budget() {
+        let single = throttled_rate(0.1, 150.0, 120.0, 1);
+        let per_of_three = throttled_rate(0.1, 150.0, 120.0, 3);
+        assert!((single - 3.0).abs() < 1e-12);
+        assert!((per_of_three - 1.0).abs() < 1e-12);
+        // Overload clamps to zero rather than going negative.
+        assert_eq!(throttled_rate(0.1, 100.0, 200.0, 2), 0.0);
+    }
+}

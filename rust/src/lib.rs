@@ -1,0 +1,49 @@
+//! # Rosella — a self-driving distributed scheduler for heterogeneous clusters
+//!
+//! Production-quality reproduction of *Rosella: A Self-Driving Distributed
+//! Scheduler for Heterogeneous Clusters* (Wu, Manandhar, Liu — CS.DC 2020).
+//!
+//! The library provides:
+//!
+//! * the paper's **scheduling policy** (proportional sampling +
+//!   power-of-two-choices with SQ(2), [`scheduler::PPoT`]) and every
+//!   baseline evaluated in §6 (uniform, PoT, Sparrow, PSS, ε-greedy bandit,
+//!   Halo, LL(2));
+//! * the **self-driving learning stack** (§3): arrival estimator,
+//!   performance learner with the dynamic window `L = c/(1−α̂)` and the
+//!   timeout/discard rule, and the benchmark-job dispatcher with rate
+//!   `c0(μ̄ − λ̂)`;
+//! * a **discrete-event cluster simulator** reproducing the paper's
+//!   evaluation environment (heterogeneous speeds, permutation shocks,
+//!   dual-priority worker queues, late binding);
+//! * a **live threaded coordinator** ([`coordinator`]) with real worker
+//!   threads that execute AOT-compiled JAX/Pallas payloads through PJRT
+//!   ([`runtime`]);
+//! * **experiment drivers** ([`experiments`]) regenerating every figure of
+//!   the paper's evaluation section.
+//!
+//! ## Quick start
+//!
+//! ```
+//! use rosella::simulator::{run, SimConfig};
+//! let mut cfg = SimConfig::synthetic_default();
+//! cfg.duration = 30.0;
+//! cfg.warmup = 5.0;
+//! let result = run(cfg);
+//! assert!(result.responses.count() > 0);
+//! ```
+
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod learner;
+pub mod metrics;
+pub mod runtime;
+pub mod scheduler;
+pub mod simulator;
+pub mod stats;
+pub mod testkit;
+pub mod types;
+pub mod workload;

@@ -1,0 +1,207 @@
+//! Rosella CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!
+//! * `experiment <name>` — regenerate a paper figure (fig8..fig13, theory,
+//!   all);
+//! * `simulate` — run one simulation from flags or a JSON config;
+//! * `serve` — run the live threaded coordinator with the PJRT payload;
+//! * `list` — show available experiments, policies, speed profiles.
+
+use rosella::cli::CmdSpec;
+use rosella::config;
+use rosella::experiments::{self, Scale};
+use rosella::simulator::{run as sim_run, SimConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("experiment") => cmd_experiment(&args[1..]),
+        Some("simulate") => cmd_simulate(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("list") => cmd_list(),
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "rosella — self-driving distributed scheduler (paper reproduction)\n\n\
+         usage: rosella <subcommand> [options]\n\n\
+         subcommands:\n\
+         \x20 experiment <name>   regenerate a paper figure (fig8..fig13, theory, all)\n\
+         \x20 simulate            run one simulation (flags or --config file.json)\n\
+         \x20 serve               run the live coordinator (PJRT payload workers)\n\
+         \x20 list                list experiments, policies, profiles\n"
+    );
+}
+
+fn cmd_experiment(rest: &[String]) -> i32 {
+    let spec = CmdSpec::new("experiment", "regenerate a paper figure")
+        .pos("name", "fig8 | fig9 | fig10 | fig11 | fig12 | fig13 | theory | all")
+        .flag("quick", "scaled-down run (~10x shorter horizons)");
+    let p = match spec.parse(rest) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let name = match p.pos(0) {
+        Some(n) => n.to_string(),
+        None => {
+            eprintln!("{}", spec.help());
+            return 2;
+        }
+    };
+    let scale = if p.flag("quick") { Scale::Quick } else { Scale::Full };
+    match experiments::run_by_name(&name, scale) {
+        Ok(report) => {
+            println!("{report}");
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            2
+        }
+    }
+}
+
+fn cmd_simulate(rest: &[String]) -> i32 {
+    let spec = CmdSpec::new("simulate", "run one simulation")
+        .opt("config", None, "JSON config file (flags override)")
+        .opt("seed", None, "rng seed")
+        .opt("duration", None, "simulated seconds")
+        .opt("warmup", None, "warmup seconds excluded from metrics")
+        .opt("speeds", None, "speed profile (s1|s2|tpch:<n>|zipf:<n>:<e>|a,b,c)")
+        .opt("volatility", None, "static | permute:<s> | drift:<s>:<sigma>")
+        .opt("workload", None, "synthetic | tpch:q3 | tpch:q6")
+        .opt("load", None, "target load ratio")
+        .opt("policy", None, "uniform|pot|pss|ppot|ppot-ll2|rosella|sparrow|bandit:<eta>|halo")
+        .flag("oracle", "give the policy true speeds (disables learning)")
+        .flag("no-fake-jobs", "disable the benchmark-job dispatcher");
+    let p = match spec.parse(rest) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut cfg: SimConfig = match p.get("config") {
+        Some(path) => match config::sim_config_from_file(path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+        None => SimConfig::synthetic_default(),
+    };
+    if let Err(e) = apply_overrides(&mut cfg, &p) {
+        eprintln!("{e}");
+        return 2;
+    }
+    if let Err(e) = config::validate(&cfg) {
+        eprintln!("{e}");
+        return 2;
+    }
+    let result = sim_run(cfg);
+    let s = result.responses.summary();
+    println!("policy         : {}", result.policy);
+    println!("jobs completed : {}", s.count);
+    println!("mean response  : {:.1} ms", s.mean * 1e3);
+    println!(
+        "percentiles ms : p5 {:.1} | p25 {:.1} | p50 {:.1} | p75 {:.1} | p95 {:.1}",
+        s.five.p5 * 1e3,
+        s.five.p25 * 1e3,
+        s.five.p50 * 1e3,
+        s.five.p75 * 1e3,
+        s.five.p95 * 1e3
+    );
+    println!("utilization    : {:.3}", result.utilization);
+    println!("benchmark frac : {:.4}", result.benchmark_fraction());
+    println!("backlog (jobs) : {}", result.incomplete_jobs);
+    0
+}
+
+fn apply_overrides(cfg: &mut SimConfig, p: &rosella::cli::Parsed) -> Result<(), String> {
+    if let Some(v) = p.parse_as::<u64>("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = p.parse_as::<f64>("duration")? {
+        cfg.duration = v;
+    }
+    if let Some(v) = p.parse_as::<f64>("warmup")? {
+        cfg.warmup = v;
+    }
+    if let Some(v) = p.get("speeds") {
+        cfg.speeds = rosella::cluster::SpeedProfile::parse(v)?;
+    }
+    if let Some(v) = p.get("volatility") {
+        cfg.volatility = rosella::cluster::Volatility::parse(v)?;
+    }
+    if let Some(v) = p.get("workload") {
+        cfg.workload = rosella::workload::WorkloadKind::parse(v)?;
+    }
+    if let Some(v) = p.parse_as::<f64>("load")? {
+        cfg.load = v;
+    }
+    if let Some(v) = p.get("policy") {
+        cfg.policy = rosella::scheduler::PolicyKind::parse(v)?;
+    }
+    if p.flag("oracle") {
+        cfg.learner = rosella::learner::LearnerConfig::oracle();
+    }
+    if p.flag("no-fake-jobs") {
+        cfg.learner.fake_jobs = false;
+    }
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> i32 {
+    let spec = CmdSpec::new("serve", "run the live threaded coordinator")
+        .opt("workers", Some("4"), "number of worker threads")
+        .opt("speeds", None, "speed profile (defaults to 1.0,0.5,0.25,2.0)")
+        .opt("policy", Some("ppot"), "scheduling policy")
+        .opt("rate", Some("50"), "request arrival rate (jobs/sec)")
+        .opt("duration", Some("10"), "wall-clock seconds to serve")
+        .opt("artifacts", Some("artifacts"), "AOT artifact directory")
+        .flag("sleep-payload", "use sleep tasks instead of the PJRT payload");
+    let p = match spec.parse(rest) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    match rosella::coordinator::serve_cli(&p) {
+        Ok(report) => {
+            println!("{report}");
+            0
+        }
+        Err(e) => {
+            eprintln!("serve failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_list() -> i32 {
+    println!("experiments : {}", experiments::ALL.join(", "));
+    println!(
+        "policies    : uniform, pot, pot:<d>, pss, ppot, ppot-ll2, rosella, sparrow, bandit:<eta>, halo"
+    );
+    println!("speeds      : s1, s2, example1, homogeneous:<n>:<s>, tpch:<n>, zipf:<n>:<exp>, a,b,c");
+    println!("volatility  : static, permute:<secs>, drift:<secs>:<sigma>");
+    println!("workloads   : synthetic, tpch:q3, tpch:q6");
+    0
+}

@@ -1,0 +1,10 @@
+//! Measurement: response-time recording, queue-length distributions, and
+//! report formatting for the paper's figures.
+
+pub mod queues;
+pub mod report;
+pub mod response;
+
+pub use queues::QueueStats;
+pub use report::{format_table, Row};
+pub use response::ResponseRecorder;

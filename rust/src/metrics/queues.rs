@@ -1,0 +1,118 @@
+//! Queue-length statistics.
+//!
+//! Figure 13 plots the *distribution* of queue lengths per worker under
+//! SQ(2) vs LL(2); the theory section tracks the *maximum* queue length
+//! (Results 1 and the O(log log n) bound). `QueueStats` samples both from
+//! periodic snapshots supplied by the engine.
+
+use crate::stats::IntHistogram;
+
+/// Accumulates queue-length snapshots per worker.
+#[derive(Debug, Clone)]
+pub struct QueueStats {
+    per_worker: Vec<IntHistogram>,
+    max_hist: IntHistogram,
+    snapshots: u64,
+    max_ever: usize,
+}
+
+impl QueueStats {
+    /// Stats for `n` workers.
+    pub fn new(n: usize) -> Self {
+        Self {
+            per_worker: (0..n).map(|_| IntHistogram::new()).collect(),
+            max_hist: IntHistogram::new(),
+            snapshots: 0,
+            max_ever: 0,
+        }
+    }
+
+    /// Record one snapshot of all queue lengths.
+    pub fn record(&mut self, queue_lens: &[usize]) {
+        debug_assert_eq!(queue_lens.len(), self.per_worker.len());
+        let mut max = 0usize;
+        for (h, &q) in self.per_worker.iter_mut().zip(queue_lens) {
+            h.record(q);
+            max = max.max(q);
+        }
+        self.max_hist.record(max);
+        self.max_ever = self.max_ever.max(max);
+        self.snapshots += 1;
+    }
+
+    /// Number of snapshots taken.
+    pub fn snapshots(&self) -> u64 {
+        self.snapshots
+    }
+
+    /// Queue-length PMF of worker `w` (Figure 13's per-worker histogram).
+    pub fn pmf(&self, w: usize) -> Vec<f64> {
+        self.per_worker[w].pmf()
+    }
+
+    /// Mean queue length of worker `w`.
+    pub fn mean_len(&self, w: usize) -> f64 {
+        self.per_worker[w].mean()
+    }
+
+    /// Largest queue length ever observed on worker `w`.
+    pub fn max_len(&self, w: usize) -> usize {
+        self.per_worker[w].max()
+    }
+
+    /// Mean of the per-snapshot maximum queue length (the quantity bounded
+    /// by O(log log n) in Lemma 4).
+    pub fn mean_max(&self) -> f64 {
+        self.max_hist.mean()
+    }
+
+    /// Largest queue length across all snapshots and workers.
+    pub fn max_ever(&self) -> usize {
+        self.max_ever
+    }
+
+    /// Fraction of snapshots in which worker `w` had ≥ `k` entries.
+    pub fn tail(&self, w: usize, k: usize) -> f64 {
+        self.per_worker[w].tail(k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_snapshots() {
+        let mut s = QueueStats::new(3);
+        s.record(&[1, 2, 3]);
+        s.record(&[3, 2, 1]);
+        assert_eq!(s.snapshots(), 2);
+        assert!((s.mean_len(0) - 2.0).abs() < 1e-12);
+        assert!((s.mean_len(2) - 2.0).abs() < 1e-12);
+        assert_eq!(s.max_ever(), 3);
+        assert!((s.mean_max() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pmf_per_worker() {
+        let mut s = QueueStats::new(1);
+        for q in [0, 0, 1, 1, 1, 2] {
+            s.record(&[q]);
+        }
+        let p = s.pmf(0);
+        assert!((p[0] - 2.0 / 6.0).abs() < 1e-12);
+        assert!((p[1] - 3.0 / 6.0).abs() < 1e-12);
+        assert!((p[2] - 1.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tail_and_max() {
+        let mut s = QueueStats::new(2);
+        for q in 0..10 {
+            s.record(&[q, 0]);
+        }
+        assert!((s.tail(0, 5) - 0.5).abs() < 1e-12);
+        assert_eq!(s.max_len(0), 9);
+        assert_eq!(s.max_len(1), 0);
+    }
+}

@@ -1,0 +1,98 @@
+//! Plain-text table/series formatting for experiment reports.
+//!
+//! Every experiment prints the same rows/series the paper's figure shows;
+//! these helpers keep the output aligned and machine-greppable.
+
+/// One labelled row of numeric cells.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub label: String,
+    pub cells: Vec<f64>,
+}
+
+impl Row {
+    /// Build a row.
+    pub fn new(label: impl Into<String>, cells: Vec<f64>) -> Self {
+        Self { label: label.into(), cells }
+    }
+}
+
+/// Format a table with a header and aligned columns. Values are printed
+/// with `prec` decimal places.
+pub fn format_table(title: &str, header: &[&str], rows: &[Row], prec: usize) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    let label_w = rows
+        .iter()
+        .map(|r| r.label.len())
+        .chain(std::iter::once(4))
+        .max()
+        .unwrap_or(4);
+    for r in rows {
+        for (i, c) in r.cells.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(format!("{c:.prec$}").len());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&format!("{:label_w$}", ""));
+    for (h, w) in header.iter().zip(&widths) {
+        out.push_str(&format!("  {h:>w$}"));
+    }
+    out.push('\n');
+    for r in rows {
+        out.push_str(&format!("{:label_w$}", r.label));
+        for (i, c) in r.cells.iter().enumerate() {
+            let w = widths.get(i).copied().unwrap_or(10);
+            out.push_str(&format!("  {c:>w$.prec$}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Format an `(x, y)` series as two aligned columns.
+pub fn format_series(title: &str, xlabel: &str, ylabel: &str, points: &[(f64, f64)]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n{xlabel:>14}  {ylabel:>14}\n"));
+    for (x, y) in points {
+        out.push_str(&format!("{x:>14.4}  {y:>14.4}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_contains_all_cells() {
+        let rows = vec![
+            Row::new("rosella", vec![1.0, 2.5]),
+            Row::new("sparrow", vec![3.25, 4.0]),
+        ];
+        let t = format_table("demo", &["p50", "p95"], &rows, 2);
+        assert!(t.contains("rosella"));
+        assert!(t.contains("sparrow"));
+        assert!(t.contains("3.25"));
+        assert!(t.contains("p95"));
+    }
+
+    #[test]
+    fn table_aligns_columns() {
+        let rows = vec![Row::new("a", vec![1.0]), Row::new("longer-name", vec![100000.0])];
+        let t = format_table("demo", &["v"], &rows, 1);
+        let lines: Vec<&str> = t.lines().skip(1).collect();
+        // All data lines equal length.
+        assert_eq!(lines[1].len(), lines[2].len());
+    }
+
+    #[test]
+    fn series_formats_points() {
+        let s = format_series("curve", "load", "ms", &[(0.1, 5.0), (0.9, 50.0)]);
+        assert!(s.contains("0.1000"));
+        assert!(s.contains("50.0000"));
+        assert!(s.contains("load"));
+    }
+}

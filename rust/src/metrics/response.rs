@@ -1,0 +1,171 @@
+//! Job response-time recording.
+//!
+//! The response time of a job is "the time between the job arrives at the
+//! scheduler and the time when the last task in the job is executed" (§6.1).
+//! The recorder keeps both the raw series (for Figure 10a's response-vs-
+//! job-index plot and for exact percentiles) and a bounded log histogram
+//! (for the Figure 8 distribution curves).
+
+use crate::stats::{FiveNum, LogHistogram, Summary};
+
+/// Records completed-job response times after an optional warmup.
+#[derive(Debug, Clone)]
+pub struct ResponseRecorder {
+    warmup: f64,
+    samples: Vec<f64>,
+    /// (arrival time, response) pairs in completion order, for trend plots.
+    series: Vec<(f64, f64)>,
+    hist: LogHistogram,
+    dropped_warmup: u64,
+}
+
+impl ResponseRecorder {
+    /// Recorder that ignores jobs *arriving* before `warmup` seconds.
+    pub fn new(warmup: f64) -> Self {
+        Self {
+            warmup,
+            samples: Vec::new(),
+            series: Vec::new(),
+            hist: LogHistogram::latency(),
+            dropped_warmup: 0,
+        }
+    }
+
+    /// Record a job that arrived at `arrival` and completed at `completion`.
+    pub fn record(&mut self, arrival: f64, completion: f64) {
+        debug_assert!(completion >= arrival, "negative response time");
+        if arrival < self.warmup {
+            self.dropped_warmup += 1;
+            return;
+        }
+        let resp = completion - arrival;
+        self.samples.push(resp);
+        self.series.push((arrival, resp));
+        self.hist.record(resp);
+    }
+
+    /// Number of recorded jobs.
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Jobs excluded by warmup.
+    pub fn dropped_warmup(&self) -> u64 {
+        self.dropped_warmup
+    }
+
+    /// Raw response times in completion order.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// `(arrival, response)` series in completion order.
+    pub fn series(&self) -> &[(f64, f64)] {
+        &self.series
+    }
+
+    /// Mean response time (seconds).
+    pub fn mean(&self) -> f64 {
+        crate::stats::mean(&self.samples)
+    }
+
+    /// Exact five-number summary (Figure 9's percentiles).
+    pub fn five_num(&self) -> FiveNum {
+        FiveNum::of(&self.samples)
+    }
+
+    /// Full summary.
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples)
+    }
+
+    /// Distribution histogram (Figure 8 curves).
+    pub fn histogram(&self) -> &LogHistogram {
+        &self.hist
+    }
+
+    /// Fraction of jobs with response time above `threshold` seconds
+    /// (Figure 8 highlights the mass beyond 2,000 ms).
+    pub fn tail_fraction(&self, threshold: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().filter(|&&r| r > threshold).count() as f64 / self.samples.len() as f64
+    }
+
+    /// Mean response over a window of job indices (for Figure 10a's
+    /// per-index growth curve): chunk the completion-ordered series into
+    /// `bins` equal groups and return each group's mean.
+    pub fn binned_means(&self, bins: usize) -> Vec<f64> {
+        if self.samples.is_empty() || bins == 0 {
+            return Vec::new();
+        }
+        let chunk = (self.samples.len() as f64 / bins as f64).ceil().max(1.0) as usize;
+        self.samples.chunks(chunk).map(crate::stats::mean).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_jobs_excluded() {
+        let mut r = ResponseRecorder::new(10.0);
+        r.record(5.0, 6.0); // arrives during warmup
+        r.record(11.0, 12.5);
+        assert_eq!(r.count(), 1);
+        assert_eq!(r.dropped_warmup(), 1);
+        assert!((r.mean() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn five_num_on_known_data() {
+        let mut r = ResponseRecorder::new(0.0);
+        for i in 1..=100 {
+            r.record(0.0, i as f64);
+        }
+        let f = r.five_num();
+        assert!((f.p50 - 50.5).abs() < 1e-9);
+        assert!((f.p95 - 95.05).abs() < 0.1);
+    }
+
+    #[test]
+    fn tail_fraction() {
+        let mut r = ResponseRecorder::new(0.0);
+        for i in 1..=10 {
+            r.record(0.0, i as f64);
+        }
+        assert!((r.tail_fraction(8.0) - 0.2).abs() < 1e-12);
+        assert_eq!(r.tail_fraction(100.0), 0.0);
+    }
+
+    #[test]
+    fn binned_means_track_growth() {
+        let mut r = ResponseRecorder::new(0.0);
+        for i in 0..1000 {
+            r.record(i as f64, i as f64 + 1.0 + i as f64 * 0.01);
+        }
+        let bins = r.binned_means(10);
+        assert_eq!(bins.len(), 10);
+        assert!(bins.last().unwrap() > bins.first().unwrap());
+    }
+
+    #[test]
+    fn histogram_matches_samples() {
+        let mut r = ResponseRecorder::new(0.0);
+        r.record(0.0, 0.5);
+        r.record(0.0, 1.5);
+        assert_eq!(r.histogram().count(), 2);
+        assert!((r.histogram().mean() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_recorder_is_sane() {
+        let r = ResponseRecorder::new(0.0);
+        assert_eq!(r.count(), 0);
+        assert_eq!(r.mean(), 0.0);
+        assert!(r.binned_means(5).is_empty());
+        assert_eq!(r.tail_fraction(1.0), 0.0);
+    }
+}

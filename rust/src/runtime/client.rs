@@ -1,0 +1,113 @@
+//! Thin wrapper around the `xla` crate's PJRT CPU client.
+//!
+//! Interchange format is HLO *text*: jax ≥ 0.5 serializes HloModuleProto
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and aot.py).
+
+use anyhow::{Context, Result};
+
+/// A PJRT client (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load(&self, path: &str) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {path}"))?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with the given input literals; the artifact was lowered with
+    /// `return_tuple=True`, so the single output is a 1-tuple whose element
+    /// is returned.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self.exe.execute::<xla::Literal>(inputs).context("execute artifact")?;
+        let out = result[0][0].to_literal_sync().context("fetch result")?;
+        out.to_tuple1().context("unwrap 1-tuple output")
+    }
+
+    /// Execute and decode the output as a flat f32 vector.
+    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        self.run(inputs)?.to_vec::<f32>().context("decode f32 output")
+    }
+}
+
+/// Build an f32 literal of the given shape from row-major data.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let numel: i64 = dims.iter().product();
+    anyhow::ensure!(numel as usize == data.len(), "shape {dims:?} vs {} elems", data.len());
+    if dims.len() == 1 {
+        return Ok(xla::Literal::vec1(data));
+    }
+    xla::Literal::vec1(data).reshape(dims).context("reshape literal")
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let numel: i64 = dims.iter().product();
+    anyhow::ensure!(numel as usize == data.len(), "shape {dims:?} vs {} elems", data.len());
+    if dims.len() == 1 {
+        return Ok(xla::Literal::vec1(data));
+    }
+    xla::Literal::vec1(data).reshape(dims).context("reshape literal")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT tests only run when `make artifacts` has produced the files
+    // (they are gitignored build outputs).
+    fn artifacts() -> Option<String> {
+        let dir = std::env::var("ROSELLA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        crate::runtime::artifacts_present(&dir).then_some(dir)
+    }
+
+    #[test]
+    fn literal_shape_validation() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
+        assert!(literal_i32(&[1, 2, 3], &[3]).is_ok());
+    }
+
+    #[test]
+    fn load_and_execute_payload_artifact() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load(&crate::runtime::payload_artifact(&dir)).unwrap();
+        // Zero weights -> zero output regardless of x.
+        let x = literal_f32(&vec![1.0; 8 * 128], &[8, 128]).unwrap();
+        let w1 = literal_f32(&vec![0.0; 128 * 256], &[128, 256]).unwrap();
+        let b1 = literal_f32(&vec![0.0; 256], &[256]).unwrap();
+        let w2 = literal_f32(&vec![0.0; 256 * 128], &[256, 128]).unwrap();
+        let b2 = literal_f32(&vec![0.5; 128], &[128]).unwrap();
+        let out = exe.run_f32(&[x, w1, b1, w2, b2]).unwrap();
+        assert_eq!(out.len(), 8 * 128);
+        assert!(out.iter().all(|&v| (v - 0.5).abs() < 1e-6), "out[0..4]={:?}", &out[..4]);
+    }
+}

@@ -1,0 +1,146 @@
+//! PJRT-backed LEARNER-AGGREGATE: executes the Pallas learner kernel
+//! artifact over the dense export of the rust learner's ring buffers.
+//!
+//! The live coordinator can publish estimates either through the native
+//! rust implementation (`learner::PerfLearner::publish`) or through this
+//! artifact; both implement the identical Fig. 6 rule and a test checks
+//! they agree numerically.
+
+use super::client::{literal_f32, literal_i32, Executable, Runtime};
+use crate::learner::{LearnerParams, PerfLearner};
+use anyhow::Result;
+
+/// Worker count baked into the artifact (pad smaller clusters).
+pub const N_WORKERS: usize = 16;
+/// Ring-buffer depth baked into the artifact.
+pub const K_SAMPLES: usize = 64;
+
+/// Loaded learner executable.
+pub struct LearnerKernel {
+    exe: Executable,
+}
+
+impl LearnerKernel {
+    /// Load and compile the learner artifact.
+    pub fn load(dir: &str) -> Result<Self> {
+        let rt = Runtime::cpu()?;
+        Ok(Self { exe: rt.load(&super::learner_artifact(dir))? })
+    }
+
+    /// Execute the aggregation for raw dense inputs.
+    pub fn run_raw(
+        &self,
+        durations: &[f32],
+        demands: &[f32],
+        ages: &[f32],
+        counts: &[i32],
+        window: f32,
+        epsilon: f32,
+        horizon: f32,
+        cold_start: bool,
+    ) -> Result<Vec<f32>> {
+        let n = N_WORKERS as i64;
+        let k = K_SAMPLES as i64;
+        let inputs = [
+            literal_f32(durations, &[n, k])?,
+            literal_f32(demands, &[n, k])?,
+            literal_f32(ages, &[n, k])?,
+            literal_i32(counts, &[n])?,
+            literal_f32(&[window, epsilon, horizon, if cold_start { 1.0 } else { 0.0 }], &[4])?,
+        ];
+        self.exe.run_f32(&inputs)
+    }
+
+    /// Publish estimates for a [`PerfLearner`] through the artifact:
+    /// exports the learner's ring buffers densely (padded to the artifact
+    /// shape) and returns μ̂ for the first `learner.n()` workers.
+    pub fn publish(
+        &self,
+        learner: &PerfLearner,
+        now: f64,
+        params: &LearnerParams,
+        cold_start: bool,
+    ) -> Result<Vec<f32>> {
+        let n = learner.n();
+        anyhow::ensure!(n <= N_WORKERS, "cluster of {n} exceeds artifact capacity {N_WORKERS}");
+        let (dur, dem, age, cnt) = learner.export_dense(now, K_SAMPLES);
+        // Pad to the artifact's worker count.
+        let mut pdur = vec![0.0f32; N_WORKERS * K_SAMPLES];
+        let mut pdem = vec![0.0f32; N_WORKERS * K_SAMPLES];
+        let mut page = vec![f32::MAX; N_WORKERS * K_SAMPLES];
+        let mut pcnt = vec![0i32; N_WORKERS];
+        pdur[..n * K_SAMPLES].copy_from_slice(&dur);
+        pdem[..n * K_SAMPLES].copy_from_slice(&dem);
+        page[..n * K_SAMPLES].copy_from_slice(&age);
+        pcnt[..n].copy_from_slice(&cnt);
+        let out = self.run_raw(
+            &pdur,
+            &pdem,
+            &page,
+            &pcnt,
+            params.window as f32,
+            params.epsilon as f32,
+            params.horizon as f32,
+            cold_start,
+        )?;
+        Ok(out[..n].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learner::PerfLearner;
+
+    fn artifacts() -> Option<String> {
+        let dir = std::env::var("ROSELLA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        crate::runtime::artifacts_present(&dir).then_some(dir)
+    }
+
+    #[test]
+    fn artifact_agrees_with_native_learner() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let kernel = LearnerKernel::load(&dir).unwrap();
+        // Build a learner with three regimes: fast sampled worker, slow
+        // sampled worker, silent worker.
+        let mut l = PerfLearner::new(8, 10.0, 0.1, 80.0, 1.0, 0.0);
+        let mut t = 0.0;
+        for _ in 0..100 {
+            t += 0.05;
+            l.on_completion(0, t, 0.05, 0.1); // speed 2.0
+            l.on_completion(1, t, 0.4, 0.1); // speed 0.25
+        }
+        let params = l.publish(t, 40.0);
+        let native = l.mu_hat().to_vec();
+        let cold = t < params.horizon;
+        let pjrt = kernel.publish(&l, t, &params, cold).unwrap();
+        assert_eq!(pjrt.len(), 8);
+        for (i, (p, nv)) in pjrt.iter().zip(native.iter()).enumerate() {
+            // Silent workers keep the prior natively during cold start but
+            // the kernel reports 0 for empty rows (the prior is a host-side
+            // bootstrap); skip those.
+            if native[i] == 1.0 && *p == 0.0 {
+                continue;
+            }
+            assert!((*p as f64 - nv).abs() < 1e-3, "worker {i}: pjrt {p} native {nv}");
+        }
+        // The two sampled workers must match closely.
+        assert!((pjrt[0] as f64 - native[0]).abs() < 1e-4);
+        assert!((pjrt[1] as f64 - native[1]).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rejects_oversized_cluster() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let kernel = LearnerKernel::load(&dir).unwrap();
+        let l = PerfLearner::new(40, 10.0, 0.1, 400.0, 1.0, 0.0);
+        let params = crate::learner::LearnerParams::derive(100.0, 400.0, 10.0, 0.1);
+        assert!(kernel.publish(&l, 1.0, &params, true).is_err());
+    }
+}

@@ -1,0 +1,31 @@
+//! PJRT runtime: load AOT artifacts (HLO text produced by
+//! `python/compile/aot.py`) and execute them from the rust hot path.
+//!
+//! Python never runs at serve time — `make artifacts` lowers the JAX/Pallas
+//! model once; this module compiles the HLO on the PJRT CPU client and the
+//! live coordinator executes the resulting binaries per request.
+
+pub mod client;
+pub mod learner_exec;
+pub mod payload;
+
+pub use client::{Executable, Runtime};
+pub use learner_exec::LearnerKernel;
+pub use payload::{PayloadRunner, BATCH, D_IN, D_OUT};
+
+/// Default artifact paths relative to an artifacts directory.
+pub fn learner_artifact(dir: &str) -> String {
+    format!("{dir}/learner.hlo.txt")
+}
+
+/// Payload artifact path.
+pub fn payload_artifact(dir: &str) -> String {
+    format!("{dir}/payload.hlo.txt")
+}
+
+/// True when both artifacts exist (used to skip PJRT tests when
+/// `make artifacts` has not been run).
+pub fn artifacts_present(dir: &str) -> bool {
+    std::path::Path::new(&learner_artifact(dir)).exists()
+        && std::path::Path::new(&payload_artifact(dir)).exists()
+}

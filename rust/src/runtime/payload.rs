@@ -1,0 +1,121 @@
+//! The benchmark-job MLP payload, executed through PJRT by live workers.
+//!
+//! Shapes are fixed at AOT time (python/compile/kernels/payload.py):
+//! x f32[8,128] → f32[8,128] through a 128→256→128 MLP.
+
+use super::client::{literal_f32, Executable, Runtime};
+use anyhow::Result;
+
+/// Batch size baked into the artifact.
+pub const BATCH: usize = 8;
+/// Input feature width.
+pub const D_IN: usize = 128;
+/// Hidden width.
+pub const D_H: usize = 256;
+/// Output width.
+pub const D_OUT: usize = 128;
+
+/// A loaded payload executable with resident weights.
+pub struct PayloadRunner {
+    exe: Executable,
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+}
+
+impl PayloadRunner {
+    /// Load the payload artifact and initialize deterministic weights.
+    pub fn load(dir: &str, seed: u64) -> Result<Self> {
+        let rt = Runtime::cpu()?;
+        let exe = rt.load(&super::payload_artifact(dir))?;
+        let mut rng = crate::stats::Rng::new(seed);
+        let mut gen = |n: usize, scale: f32| -> Vec<f32> {
+            (0..n).map(|_| (rng.next_f64() as f32 * 2.0 - 1.0) * scale).collect()
+        };
+        Ok(Self {
+            exe,
+            w1: gen(D_IN * D_H, 0.05),
+            b1: gen(D_H, 0.01),
+            w2: gen(D_H * D_OUT, 0.05),
+            b2: gen(D_OUT, 0.01),
+        })
+    }
+
+    /// Run one inference batch; returns the flat f32[BATCH, D_OUT] output.
+    pub fn infer(&self, x: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(x.len() == BATCH * D_IN, "bad input length {}", x.len());
+        let inputs = [
+            literal_f32(x, &[BATCH as i64, D_IN as i64])?,
+            literal_f32(&self.w1, &[D_IN as i64, D_H as i64])?,
+            literal_f32(&self.b1, &[D_H as i64])?,
+            literal_f32(&self.w2, &[D_H as i64, D_OUT as i64])?,
+            literal_f32(&self.b2, &[D_OUT as i64])?,
+        ];
+        self.exe.run_f32(&inputs)
+    }
+
+    /// Native (pure-rust) reference of the same MLP — used to verify the
+    /// whole python→HLO→PJRT path numerically.
+    pub fn infer_native(&self, x: &[f32]) -> Vec<f32> {
+        let mut h = vec![0.0f32; BATCH * D_H];
+        for b in 0..BATCH {
+            for j in 0..D_H {
+                let mut acc = self.b1[j];
+                for i in 0..D_IN {
+                    acc += x[b * D_IN + i] * self.w1[i * D_H + j];
+                }
+                h[b * D_H + j] = acc.max(0.0);
+            }
+        }
+        let mut y = vec![0.0f32; BATCH * D_OUT];
+        for b in 0..BATCH {
+            for j in 0..D_OUT {
+                let mut acc = self.b2[j];
+                for i in 0..D_H {
+                    acc += h[b * D_H + i] * self.w2[i * D_OUT + j];
+                }
+                y[b * D_OUT + j] = acc;
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<String> {
+        let dir = std::env::var("ROSELLA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        crate::runtime::artifacts_present(&dir).then_some(dir)
+    }
+
+    #[test]
+    fn artifact_matches_native_reference() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let runner = PayloadRunner::load(&dir, 7).unwrap();
+        let mut rng = crate::stats::Rng::new(99);
+        let x: Vec<f32> =
+            (0..BATCH * D_IN).map(|_| rng.next_f64() as f32 * 2.0 - 1.0).collect();
+        let got = runner.infer(&x).unwrap();
+        let want = runner.infer_native(&x);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 1e-3, "pjrt {g} vs native {w}");
+        }
+    }
+
+    #[test]
+    fn infer_rejects_bad_input_length() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let runner = PayloadRunner::load(&dir, 7).unwrap();
+        assert!(runner.infer(&[0.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,120 @@
+//! Multi-armed-bandit baseline (§6, baseline (v)).
+//!
+//! ε-greedy exploration: with probability η the task goes to a uniformly
+//! random worker (explore); with probability 1−η it is placed with PPoT
+//! (exploit). The paper tests η ∈ {0.2, 0.3} and finds this the *worst*
+//! baseline — the uniform exploration stream keeps overloading slow workers
+//! and, unlike Rosella's benchmark jobs, the exploration jobs are real jobs
+//! whose response time counts.
+
+use super::{per_task, Policy, TieRule};
+use crate::stats::Rng;
+use crate::types::{ClusterView, JobPlacement, JobSpec};
+
+/// ε-greedy bandit over PPoT.
+#[derive(Debug)]
+pub struct Bandit {
+    eta: f64,
+    tie: TieRule,
+}
+
+impl Bandit {
+    /// New bandit policy with exploration probability `eta ∈ [0, 1]`.
+    pub fn new(eta: f64) -> Self {
+        assert!((0.0..=1.0).contains(&eta), "bad eta {eta}");
+        Self { eta, tie: TieRule::Sq2 }
+    }
+}
+
+impl Policy for Bandit {
+    fn name(&self) -> String {
+        format!("bandit{:.1}", self.eta)
+    }
+
+    fn schedule_job(
+        &mut self,
+        job: &JobSpec,
+        view: &ClusterView<'_>,
+        rng: &mut Rng,
+    ) -> JobPlacement {
+        let n = view.n();
+        per_task(job, |_| {
+            if rng.gen_bool(self.eta) {
+                rng.gen_index(n)
+            } else {
+                let (a, b) = view.sampler.sample_pair(rng);
+                match self.tie {
+                    TieRule::Sq2 => {
+                        if view.queue_len[b] < view.queue_len[a] {
+                            b
+                        } else {
+                            a
+                        }
+                    }
+                    TieRule::Ll2 => {
+                        if view.expected_wait(b) < view.expected_wait(a) {
+                            b
+                        } else {
+                            a
+                        }
+                    }
+                }
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::AliasTable;
+
+    #[test]
+    fn explores_at_rate_eta() {
+        let mut p = Bandit::new(0.3);
+        let mut rng = Rng::new(31);
+        // Worker 0 has zero estimate: PPoT never probes it, so any placement
+        // on worker 0 must come from the uniform exploration branch.
+        let q = vec![5usize; 10];
+        let mu = {
+            let mut v = vec![1.0; 10];
+            v[0] = 0.0;
+            v
+        };
+        let t = AliasTable::new(&mu);
+        let view = ClusterView { queue_len: &q, mu_hat: &mu, sampler: &t, lambda_hat: 1.0 };
+        let job = JobSpec::single(0.1);
+        let mut zero = 0;
+        let n = 60_000;
+        for _ in 0..n {
+            if let JobPlacement::Single(w0) = p.schedule_job(&job, &view, &mut rng) {
+                zero += (w0 == 0) as usize;
+            }
+        }
+        // P(place at 0) = eta / n = 0.03.
+        let frac = zero as f64 / n as f64;
+        assert!((frac - 0.03).abs() < 0.005, "frac={frac}");
+    }
+
+    #[test]
+    fn eta_zero_is_pure_ppot() {
+        let mut p = Bandit::new(0.0);
+        let mut rng = Rng::new(32);
+        let q = vec![5usize, 5];
+        let mu = vec![0.0, 1.0];
+        let t = AliasTable::new(&mu);
+        let view = ClusterView { queue_len: &q, mu_hat: &mu, sampler: &t, lambda_hat: 1.0 };
+        let job = JobSpec::single(0.1);
+        for _ in 0..5_000 {
+            if let JobPlacement::Single(w0) = p.schedule_job(&job, &view, &mut rng) {
+                assert_eq!(w0, 1, "zero-estimate worker must never be chosen");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_eta() {
+        Bandit::new(1.5);
+    }
+}

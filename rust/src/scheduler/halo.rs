@@ -1,0 +1,184 @@
+//! Halo baseline (Gandhi, Zhang, Mittal — MASCOTS'15, reference [10]):
+//! heterogeneity-aware load balancing with *known* worker speeds and a
+//! single probe.
+//!
+//! Halo routes probabilistically with a routing vector optimized for mean
+//! response time when each worker is an M/M/1 queue: minimize
+//! `Σ_i λ_i / (μ_i − λ_i)` subject to `Σ λ_i = λ`, `0 ≤ λ_i < μ_i`.
+//! The KKT conditions give the classical square-root water-filling rule
+//!
+//! `λ_i = max(0, μ_i − √(μ_i / ν))`
+//!
+//! with `ν > 0` chosen so the rates sum to λ — faster servers absorb
+//! super-proportional load, and sufficiently slow servers are switched off
+//! entirely. The paper evaluates Halo only under known speeds (Fig. 10b)
+//! and observes a limited gain over plain PSS.
+
+use super::{per_task, Policy};
+use crate::stats::{AliasTable, Rng};
+use crate::types::{ClusterView, JobPlacement, JobSpec};
+
+/// Halo oracle router.
+#[derive(Debug)]
+pub struct Halo {
+    /// Optimized routing probabilities (rebuilt on estimate publish).
+    routing: Vec<f64>,
+    table: Option<AliasTable>,
+}
+
+impl Halo {
+    /// New Halo policy for `n` workers (uniform routing until estimates
+    /// arrive).
+    pub fn new(n: usize) -> Self {
+        Self { routing: vec![1.0 / n as f64; n], table: None }
+    }
+
+    /// Water-filling solution: per-worker arrival rates `λ_i` for total
+    /// arrival `lambda` and service rates `mu`. Exposed for tests.
+    pub fn water_fill(mu: &[f64], lambda: f64) -> Vec<f64> {
+        let total: f64 = mu.iter().sum();
+        assert!(lambda >= 0.0);
+        if lambda >= total || total <= 0.0 {
+            // Overloaded or degenerate: fall back to proportional split.
+            return mu.iter().map(|&m| if total > 0.0 { lambda * m / total } else { 0.0 }).collect();
+        }
+        // Find ν by bisection on the monotone residual
+        // f(ν) = Σ max(0, μ_i − √(μ_i/ν)) − λ  (increasing in ν).
+        let assigned = |nu: f64| -> f64 {
+            mu.iter().map(|&m| (m - (m / nu).sqrt()).max(0.0)).sum::<f64>()
+        };
+        let (mut lo, mut hi): (f64, f64) = (1e-12, 1e12);
+        for _ in 0..200 {
+            let mid = (lo * hi).sqrt(); // geometric bisection for scale-freeness
+            if assigned(mid) < lambda {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let nu = (lo * hi).sqrt();
+        mu.iter().map(|&m| (m - (m / nu).sqrt()).max(0.0)).collect()
+    }
+
+    fn rebuild(&mut self, mu_hat: &[f64], lambda_hat: f64) {
+        let rates = Self::water_fill(mu_hat, lambda_hat.max(0.0));
+        let total: f64 = rates.iter().sum();
+        self.routing = if total > 0.0 {
+            rates.iter().map(|r| r / total).collect()
+        } else {
+            vec![1.0 / mu_hat.len() as f64; mu_hat.len()]
+        };
+        self.table = Some(AliasTable::new(&self.routing));
+    }
+
+    /// Current routing probabilities (diagnostics/tests).
+    pub fn routing(&self) -> &[f64] {
+        &self.routing
+    }
+}
+
+impl Policy for Halo {
+    fn name(&self) -> String {
+        "halo".into()
+    }
+
+    fn on_estimates(&mut self, mu_hat: &[f64], lambda_hat: f64) {
+        self.rebuild(mu_hat, lambda_hat);
+    }
+
+    fn schedule_job(
+        &mut self,
+        job: &JobSpec,
+        view: &ClusterView<'_>,
+        rng: &mut Rng,
+    ) -> JobPlacement {
+        // Halo probes a single machine: one sample from the optimized
+        // routing distribution, no queue information.
+        if self.table.is_none() {
+            self.rebuild(view.mu_hat, view.lambda_hat);
+        }
+        let table = self.table.as_ref().unwrap();
+        per_task(job, |_| table.sample(rng))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn water_fill_conserves_total_rate() {
+        let mu = [1.0, 2.0, 4.0];
+        let lambda = 3.5;
+        let rates = Halo::water_fill(&mu, lambda);
+        let total: f64 = rates.iter().sum();
+        assert!((total - lambda).abs() < 1e-6, "rates={rates:?}");
+        for (r, m) in rates.iter().zip(mu.iter()) {
+            assert!(*r >= 0.0 && *r < *m, "rates={rates:?}");
+        }
+    }
+
+    #[test]
+    fn water_fill_switches_off_slow_servers_at_low_load() {
+        // With very low load, only the fastest servers carry traffic.
+        let mu = [0.1, 0.1, 10.0];
+        let rates = Halo::water_fill(&mu, 0.5);
+        assert!(rates[2] > 0.4, "{rates:?}");
+        assert!(rates[0] < 0.05 && rates[1] < 0.05, "{rates:?}");
+    }
+
+    #[test]
+    fn water_fill_homogeneous_is_even() {
+        let mu = [1.0; 4];
+        let rates = Halo::water_fill(&mu, 2.0);
+        for r in &rates {
+            assert!((r - 0.5).abs() < 1e-6, "{rates:?}");
+        }
+    }
+
+    #[test]
+    fn water_fill_faster_gets_superproportional_share() {
+        let mu = [1.0, 4.0];
+        let rates = Halo::water_fill(&mu, 3.0);
+        // Proportional would be 0.6 / 2.4; water-filling shifts even more
+        // to the fast server.
+        assert!(rates[1] / rates[0] > 4.0, "{rates:?}");
+    }
+
+    #[test]
+    fn overload_falls_back_to_proportional() {
+        let mu = [1.0, 3.0];
+        let rates = Halo::water_fill(&mu, 8.0);
+        assert!((rates[0] - 2.0).abs() < 1e-9 && (rates[1] - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn routing_reacts_to_estimates() {
+        let mut h = Halo::new(2);
+        h.on_estimates(&[1.0, 9.0], 5.0);
+        let r = h.routing().to_vec();
+        assert!(r[1] > 0.8, "routing={r:?}");
+        assert!((r.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn schedules_from_routing_distribution() {
+        let mut h = Halo::new(2);
+        h.on_estimates(&[1.0, 9.0], 5.0);
+        let expect = h.routing()[1];
+        let mut rng = Rng::new(41);
+        let q = vec![0, 0];
+        let mu = vec![1.0, 9.0];
+        let t = AliasTable::new(&mu);
+        let view = ClusterView { queue_len: &q, mu_hat: &mu, sampler: &t, lambda_hat: 5.0 };
+        let job = JobSpec::single(0.1);
+        let mut fast = 0;
+        let n = 60_000;
+        for _ in 0..n {
+            if let JobPlacement::Single(w0) = h.schedule_job(&job, &view, &mut rng) {
+                fast += (w0 == 1) as usize;
+            }
+        }
+        assert!((fast as f64 / n as f64 - expect).abs() < 0.01);
+    }
+}

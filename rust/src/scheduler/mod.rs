@@ -1,0 +1,212 @@
+//! Scheduling policies: Rosella's PPoT and every baseline the paper
+//! evaluates (§6).
+//!
+//! | Policy | Paper reference | Probe info | Needs learning |
+//! |---|---|---|---|
+//! | [`Uniform`] | §2.1.1 "uniform algorithm" | none | no |
+//! | [`PoT`] | §2.1.1 power-of-two-choices | 2 queue lengths | no |
+//! | [`Pss`] | §3.1 proportional sampling | none | yes |
+//! | [`PPoT`] | §3.1 Rosella's policy (SQ(2)/LL(2)) | 2 queue lengths | yes |
+//! | [`Sparrow`] | [7] batch sampling + late binding | reservations | no |
+//! | [`Bandit`] | §6 baseline (v): ε-greedy explore | mixed | yes |
+//! | [`Halo`] | [10] oracle water-filling routing | none | oracle |
+//!
+//! All policies implement [`Policy`]; an experiment instantiates one via
+//! [`PolicyKind::build`].
+
+pub mod bandit;
+pub mod halo;
+pub mod pot;
+pub mod ppot;
+pub mod pss;
+pub mod sparrow;
+pub mod uniform;
+
+pub use bandit::Bandit;
+pub use halo::Halo;
+pub use pot::PoT;
+pub use ppot::{PPoT, TieRule};
+pub use pss::Pss;
+pub use sparrow::Sparrow;
+pub use uniform::Uniform;
+
+use crate::stats::Rng;
+use crate::types::{ClusterView, JobPlacement, JobSpec};
+
+/// A task-scheduling policy. One instance serves one scheduler (frontend).
+pub trait Policy: Send {
+    /// Human-readable name used in reports.
+    fn name(&self) -> String;
+
+    /// Place the *unconstrained* tasks of `job`. Constrained tasks are
+    /// routed by the engine directly and never reach the policy.
+    fn schedule_job(
+        &mut self,
+        job: &JobSpec,
+        view: &ClusterView<'_>,
+        rng: &mut Rng,
+    ) -> JobPlacement;
+
+    /// Notification that the learner published fresh estimates. Policies
+    /// that precompute routing tables (Halo) react here. `lambda_hat` is
+    /// expressed in the same service-rate units as `mu_hat` (task arrivals
+    /// per second × mean task demand), so `lambda_hat / sum(mu_hat)` is the
+    /// load ratio.
+    fn on_estimates(&mut self, _mu_hat: &[f64], _lambda_hat: f64) {}
+
+    /// Whether the policy's decisions depend on speed estimates at all.
+    /// Policies that return `false` (uniform, PoT, Sparrow) are insensitive
+    /// to learner state — the property behind Figure 8b's observation that
+    /// Sparrow "does not degrade" under volatility.
+    fn needs_estimates(&self) -> bool {
+        true
+    }
+}
+
+/// Helper: per-task placement via a closure, shared by the simple policies.
+pub(crate) fn per_task<F>(job: &JobSpec, mut pick: F) -> JobPlacement
+where
+    F: FnMut(usize) -> usize,
+{
+    let m = job.unconstrained();
+    if m == 1 {
+        // Allocation-free fast path: single-task jobs dominate serving
+        // workloads and the §4 theoretical model.
+        JobPlacement::Single(pick(0))
+    } else {
+        JobPlacement::PerTask((0..m).map(&mut pick).collect())
+    }
+}
+
+/// Configuration-level policy selector (CLI strings, experiment configs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicyKind {
+    Uniform,
+    /// Power-of-`d`-choices with uniform probes.
+    PoT { d: usize },
+    Pss,
+    /// Rosella's policy. `late_binding` enables Sparrow-style reservations
+    /// on top of proportional PoT (§6.1 "Integration with late-binding").
+    PPoT { tie: TieRule, late_binding: bool },
+    /// Sparrow with batch sampling and late binding; `probes_per_task` = 2
+    /// in the paper.
+    Sparrow { probes_per_task: usize },
+    /// ε-greedy multi-armed bandit, η ∈ {0.2, 0.3} in §6.
+    Bandit { eta: f64 },
+    Halo,
+}
+
+impl PolicyKind {
+    /// Instantiate the policy for a cluster of `n` workers.
+    pub fn build(&self, n: usize) -> Box<dyn Policy> {
+        match *self {
+            PolicyKind::Uniform => Box::new(Uniform::new()),
+            PolicyKind::PoT { d } => Box::new(PoT::new(d)),
+            PolicyKind::Pss => Box::new(Pss::new()),
+            PolicyKind::PPoT { tie, late_binding } => Box::new(PPoT::new(tie, late_binding)),
+            PolicyKind::Sparrow { probes_per_task } => Box::new(Sparrow::new(probes_per_task)),
+            PolicyKind::Bandit { eta } => Box::new(Bandit::new(eta)),
+            PolicyKind::Halo => Box::new(Halo::new(n)),
+        }
+    }
+
+    /// Whether this policy requires the learner to be useful (PSS-family)
+    /// as opposed to ignoring estimates entirely.
+    pub fn needs_estimates(&self) -> bool {
+        !matches!(
+            self,
+            PolicyKind::Uniform | PolicyKind::PoT { .. } | PolicyKind::Sparrow { .. }
+        )
+    }
+
+    /// Parse CLI names: `uniform`, `pot`, `pot:<d>`, `pss`, `ppot`,
+    /// `ppot-ll2`, `rosella` (= ppot + late binding), `sparrow`,
+    /// `bandit:<eta>`, `halo`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let lower = s.to_ascii_lowercase();
+        match lower.as_str() {
+            "uniform" | "random" => return Ok(PolicyKind::Uniform),
+            "pot" => return Ok(PolicyKind::PoT { d: 2 }),
+            "pss" => return Ok(PolicyKind::Pss),
+            "ppot" | "ppot-sq2" => {
+                return Ok(PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false })
+            }
+            "ppot-ll2" => return Ok(PolicyKind::PPoT { tie: TieRule::Ll2, late_binding: false }),
+            "rosella" => return Ok(PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: true }),
+            "sparrow" => return Ok(PolicyKind::Sparrow { probes_per_task: 2 }),
+            "halo" => return Ok(PolicyKind::Halo),
+            _ => {}
+        }
+        let parts: Vec<&str> = lower.split(':').collect();
+        match parts.as_slice() {
+            ["pot", d] => Ok(PolicyKind::PoT { d: d.parse().map_err(|e| format!("bad d: {e}"))? }),
+            ["bandit", eta] => Ok(PolicyKind::Bandit {
+                eta: eta.parse().map_err(|e| format!("bad eta: {e}"))?,
+            }),
+            _ => Err(format!("unknown policy '{s}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_names() {
+        assert_eq!(PolicyKind::parse("uniform").unwrap(), PolicyKind::Uniform);
+        assert_eq!(PolicyKind::parse("pot").unwrap(), PolicyKind::PoT { d: 2 });
+        assert_eq!(PolicyKind::parse("pot:3").unwrap(), PolicyKind::PoT { d: 3 });
+        assert_eq!(PolicyKind::parse("pss").unwrap(), PolicyKind::Pss);
+        assert_eq!(
+            PolicyKind::parse("ppot").unwrap(),
+            PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false }
+        );
+        assert_eq!(
+            PolicyKind::parse("ppot-ll2").unwrap(),
+            PolicyKind::PPoT { tie: TieRule::Ll2, late_binding: false }
+        );
+        assert_eq!(
+            PolicyKind::parse("rosella").unwrap(),
+            PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: true }
+        );
+        assert_eq!(
+            PolicyKind::parse("sparrow").unwrap(),
+            PolicyKind::Sparrow { probes_per_task: 2 }
+        );
+        assert_eq!(PolicyKind::parse("bandit:0.2").unwrap(), PolicyKind::Bandit { eta: 0.2 });
+        assert_eq!(PolicyKind::parse("halo").unwrap(), PolicyKind::Halo);
+        assert!(PolicyKind::parse("wat").is_err());
+    }
+
+    #[test]
+    fn needs_estimates_classification() {
+        assert!(!PolicyKind::Uniform.needs_estimates());
+        assert!(!PolicyKind::PoT { d: 2 }.needs_estimates());
+        assert!(!PolicyKind::Sparrow { probes_per_task: 2 }.needs_estimates());
+        assert!(PolicyKind::Pss.needs_estimates());
+        assert!(PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false }.needs_estimates());
+        assert!(PolicyKind::Halo.needs_estimates());
+    }
+
+    #[test]
+    fn build_produces_named_policies() {
+        let names: Vec<String> = [
+            PolicyKind::Uniform,
+            PolicyKind::PoT { d: 2 },
+            PolicyKind::Pss,
+            PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
+            PolicyKind::Sparrow { probes_per_task: 2 },
+            PolicyKind::Bandit { eta: 0.2 },
+            PolicyKind::Halo,
+        ]
+        .iter()
+        .map(|k| k.build(10).name())
+        .collect();
+        assert!(names.iter().all(|n| !n.is_empty()));
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate names: {names:?}");
+    }
+}

@@ -1,0 +1,153 @@
+//! Power-of-d-choices with uniform probes (§2.1.1).
+//!
+//! Probes `d` workers uniformly at random (distinct) and assigns the task to
+//! the one with the shortest queue. Optimal for homogeneous clusters
+//! (max queue O(log log n), [11]); with heterogeneous speeds the slow
+//! majority still absorbs most of the load (Example 2: 0.81 probability of
+//! picking two slow workers → aggregate 11.34 arrivals vs 9 capacity).
+
+use super::{per_task, Policy};
+use crate::stats::Rng;
+use crate::types::{ClusterView, JobPlacement, JobSpec};
+
+/// Power-of-`d`-choices with uniform sampling (the classical PoT is d = 2).
+#[derive(Debug)]
+pub struct PoT {
+    d: usize,
+}
+
+impl PoT {
+    /// New policy with `d >= 1` probes.
+    pub fn new(d: usize) -> Self {
+        assert!(d >= 1, "pot needs at least one probe");
+        Self { d }
+    }
+}
+
+impl Policy for PoT {
+    fn name(&self) -> String {
+        if self.d == 2 {
+            "pot".into()
+        } else {
+            format!("pot{}", self.d)
+        }
+    }
+
+    fn schedule_job(
+        &mut self,
+        job: &JobSpec,
+        view: &ClusterView<'_>,
+        rng: &mut Rng,
+    ) -> JobPlacement {
+        let n = view.n();
+        let d = self.d.min(n);
+        per_task(job, |_| {
+            let mut best = rng.gen_index(n);
+            for _ in 1..d {
+                let cand = rng.gen_index(n);
+                if view.queue_len[cand] < view.queue_len[best] {
+                    best = cand;
+                }
+            }
+            best
+        })
+    }
+
+    fn needs_estimates(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::AliasTable;
+    use crate::types::TaskSpec;
+
+    fn view<'a>(q: &'a [usize], mu: &'a [f64], t: &'a AliasTable) -> ClusterView<'a> {
+        ClusterView { queue_len: q, mu_hat: mu, sampler: t, lambda_hat: 1.0 }
+    }
+
+    #[test]
+    fn prefers_shorter_queue() {
+        let mut p = PoT::new(2);
+        let mut rng = Rng::new(3);
+        // Worker 0 empty, workers 1..9 heavily loaded.
+        let mut q = vec![100usize; 10];
+        q[0] = 0;
+        let mu = vec![1.0; 10];
+        let t = AliasTable::new(&mu);
+        let job = JobSpec::single(0.1);
+        let mut zero = 0;
+        let n = 20_000;
+        for _ in 0..n {
+            if let JobPlacement::Single(w0) = p.schedule_job(&job, &view(&q, &mu, &t), &mut rng) {
+                if w0 == 0 {
+                    zero += 1;
+                }
+            }
+        }
+        // P(worker 0 among 2 uniform probes) = 1 - (9/10)^2 = 0.19.
+        let frac = zero as f64 / n as f64;
+        assert!((frac - 0.19).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn example2_slow_worker_mass() {
+        // Paper Example 2: 9 slow + 1 fast; with prob 0.81 both probes land
+        // on slow workers. With equal queue lengths the chosen worker is
+        // slow at least 81% of the time.
+        let mut p = PoT::new(2);
+        let mut rng = Rng::new(4);
+        let q = vec![5usize; 10];
+        let mu = vec![1.0; 10];
+        let t = AliasTable::new(&mu);
+        let job = JobSpec::single(0.1);
+        let mut slow = 0;
+        let n = 50_000;
+        for _ in 0..n {
+            if let JobPlacement::Single(w0) = p.schedule_job(&job, &view(&q, &mu, &t), &mut rng) {
+                if w0 != 9 {
+                    slow += 1;
+                }
+            }
+        }
+        let frac = slow as f64 / n as f64;
+        assert!((frac - 0.9).abs() < 0.01, "slow frac {frac}"); // ties keep first probe
+    }
+
+    #[test]
+    fn d1_degenerates_to_uniform() {
+        let mut p = PoT::new(1);
+        let mut rng = Rng::new(5);
+        let q = vec![0, 100];
+        let mu = vec![1.0, 1.0];
+        let t = AliasTable::new(&mu);
+        let job = JobSpec::single(0.1);
+        let mut one = 0;
+        for _ in 0..10_000 {
+            if let JobPlacement::Single(w0) = p.schedule_job(&job, &view(&q, &mu, &t), &mut rng) {
+                one += w0;
+            }
+        }
+        // d=1 ignores queue lengths entirely.
+        assert!((one as f64 / 10_000.0 - 0.5).abs() < 0.03);
+    }
+
+    #[test]
+    fn multi_task_jobs_get_independent_choices() {
+        let mut p = PoT::new(2);
+        let mut rng = Rng::new(6);
+        let q = vec![0; 16];
+        let mu = vec![1.0; 16];
+        let t = AliasTable::new(&mu);
+        let job = JobSpec::new(vec![TaskSpec::new(0.1); 8]);
+        if let JobPlacement::PerTask(ws) = p.schedule_job(&job, &view(&q, &mu, &t), &mut rng) {
+            assert_eq!(ws.len(), 8);
+            let distinct: std::collections::HashSet<_> = ws.iter().collect();
+            assert!(distinct.len() > 1, "all tasks on one worker: {ws:?}");
+        } else {
+            panic!("multi-task job must use PerTask");
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! Rosella's scheduling policy: proportional sampling + power-of-two-choices
+//! (PPoT, §3.1, pseudocode Fig. 5).
+//!
+//! Two candidate workers are drawn from the proportional-sampling
+//! multinomial (with replacement — the paper runs "the proportional sampling
+//! algorithm twice"), then the job is placed using one of two tie rules:
+//!
+//! * **SQ(2)** — join the *shortest queue* (Rosella's choice). Slower
+//!   workers are utilized before fast workers become too full, which is
+//!   what reduces the max queue to O(log log n).
+//! * **LL(2)** — join the *least loaded* queue, i.e. smallest expected wait
+//!   `(q+1)/μ̂`. Provided for the Figure 13 comparison: LL(2) keeps piling
+//!   onto fast workers until everybody is as slow as the slowest server
+//!   (Example 3).
+//!
+//! With `late_binding = true` the policy emits two reservations per task
+//! instead of a direct placement (§6.1 "Integration with late-binding").
+
+use super::{per_task, Policy};
+use crate::stats::Rng;
+use crate::types::{ClusterView, JobPlacement, JobSpec, WorkerId};
+
+/// Rule for choosing between the two probed candidates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TieRule {
+    /// Join the shortest queue (Rosella, §3.1).
+    Sq2,
+    /// Join the least-loaded queue (shortest expected wait).
+    Ll2,
+}
+
+/// Proportional-sampling power-of-two-choices.
+#[derive(Debug)]
+pub struct PPoT {
+    tie: TieRule,
+    late_binding: bool,
+}
+
+impl PPoT {
+    /// New PPoT policy with the given tie rule.
+    pub fn new(tie: TieRule, late_binding: bool) -> Self {
+        Self { tie, late_binding }
+    }
+
+    /// Pick between two candidates using the configured rule.
+    #[inline]
+    fn choose(&self, a: WorkerId, b: WorkerId, view: &ClusterView<'_>) -> WorkerId {
+        match self.tie {
+            TieRule::Sq2 => {
+                if view.queue_len[b] < view.queue_len[a] {
+                    b
+                } else {
+                    a
+                }
+            }
+            TieRule::Ll2 => {
+                if view.expected_wait(b) < view.expected_wait(a) {
+                    b
+                } else {
+                    a
+                }
+            }
+        }
+    }
+}
+
+impl Policy for PPoT {
+    fn name(&self) -> String {
+        let base = match self.tie {
+            TieRule::Sq2 => "ppot-sq2",
+            TieRule::Ll2 => "ppot-ll2",
+        };
+        if self.late_binding {
+            format!("{base}+lb")
+        } else {
+            base.into()
+        }
+    }
+
+    fn schedule_job(
+        &mut self,
+        job: &JobSpec,
+        view: &ClusterView<'_>,
+        rng: &mut Rng,
+    ) -> JobPlacement {
+        if self.late_binding {
+            // Two proportionally-sampled reservations per task; the first
+            // worker to reach a reservation pulls the task (late binding).
+            let m = job.unconstrained();
+            let mut ws = Vec::with_capacity(2 * m);
+            for _ in 0..m {
+                let (a, b) = view.sampler.sample_pair(rng);
+                ws.push(a);
+                ws.push(b);
+            }
+            JobPlacement::Reservations(ws)
+        } else {
+            per_task(job, |_| {
+                let (a, b) = view.sampler.sample_pair(rng);
+                self.choose(a, b, view)
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::AliasTable;
+
+    fn view<'a>(q: &'a [usize], mu: &'a [f64], t: &'a AliasTable) -> ClusterView<'a> {
+        ClusterView { queue_len: q, mu_hat: mu, sampler: t, lambda_hat: 1.0 }
+    }
+
+    #[test]
+    fn sq2_takes_shorter_queue_of_probed_pair() {
+        let mut p = PPoT::new(TieRule::Sq2, false);
+        let mut rng = Rng::new(11);
+        // Two workers only, so both probes hit {0,1}; worker 1 shorter.
+        let q = vec![10, 2];
+        let mu = vec![1.0, 1.0];
+        let t = AliasTable::new(&mu);
+        let job = JobSpec::single(0.1);
+        for _ in 0..200 {
+            if let JobPlacement::Single(w0) = p.schedule_job(&job, &view(&q, &mu, &t), &mut rng)
+            {
+                // Either both probes hit 0 (prob 1/4) or worker 1 wins.
+                assert!(w0 == 1 || w0 == 0);
+            }
+        }
+        // Statistically worker 1 must dominate: P(choose 1) = 3/4.
+        let mut one = 0;
+        let n = 40_000;
+        for _ in 0..n {
+            if let JobPlacement::Single(w0) = p.schedule_job(&job, &view(&q, &mu, &t), &mut rng)
+            {
+                one += w0;
+            }
+        }
+        assert!((one as f64 / n as f64 - 0.75).abs() < 0.01);
+    }
+
+    #[test]
+    fn sq2_vs_ll2_on_figure4_example() {
+        // Paper Figure 4: left worker has the shorter queue but is slower
+        // (longer expected wait). SQ(2) picks left; LL(2) picks right.
+        let q = vec![2usize, 4];
+        let mu = vec![0.5, 4.0]; // waits: 3/0.5 = 6 vs 5/4 = 1.25
+        let t = AliasTable::new(&[1.0, 1.0]); // force both candidates probed
+        let v = view(&q, &mu, &t);
+        let sq = PPoT::new(TieRule::Sq2, false);
+        let ll = PPoT::new(TieRule::Ll2, false);
+        assert_eq!(sq.choose(0, 1, &v), 0, "SQ(2) chooses the shorter queue");
+        assert_eq!(ll.choose(0, 1, &v), 1, "LL(2) chooses the shorter wait");
+    }
+
+    #[test]
+    fn probes_are_proportional() {
+        let mut p = PPoT::new(TieRule::Sq2, false);
+        let mut rng = Rng::new(12);
+        // Equal queues -> choice decided by probes alone. Worker 1 has 4x
+        // the estimate, so P(worker 1 involved) = 1 - (0.2)^2 = 0.96.
+        let q = vec![3, 3];
+        let mu = vec![1.0, 4.0];
+        let t = AliasTable::new(&mu);
+        let job = JobSpec::single(0.1);
+        let mut one = 0;
+        let n = 60_000;
+        for _ in 0..n {
+            if let JobPlacement::Single(w0) = p.schedule_job(&job, &view(&q, &mu, &t), &mut rng)
+            {
+                one += w0;
+            }
+        }
+        // Equal queue lengths: SQ2 keeps the first probe unless the second
+        // is strictly shorter, so P(place at 1) = P(first probe = 1) = 0.8.
+        assert!((one as f64 / n as f64 - 0.8).abs() < 0.01, "frac={}", one as f64 / n as f64);
+    }
+
+    #[test]
+    fn late_binding_emits_two_reservations_per_task() {
+        let mut p = PPoT::new(TieRule::Sq2, true);
+        let mut rng = Rng::new(13);
+        let q = vec![0; 6];
+        let mu = vec![1.0; 6];
+        let t = AliasTable::new(&mu);
+        let job = JobSpec::new(vec![crate::types::TaskSpec::new(0.1); 4]);
+        match p.schedule_job(&job, &view(&q, &mu, &t), &mut rng) {
+            JobPlacement::Reservations(ws) => {
+                assert_eq!(ws.len(), 8);
+                assert!(ws.iter().all(|&w| w < 6));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ll2_treats_zero_estimate_as_infinitely_slow() {
+        let q = vec![0usize, 50];
+        let mu = vec![0.0, 2.0];
+        let t = AliasTable::new(&[1.0, 1.0]);
+        let v = view(&q, &mu, &t);
+        let ll = PPoT::new(TieRule::Ll2, false);
+        assert_eq!(ll.choose(0, 1, &v), 1, "zero-estimate worker must lose");
+    }
+}

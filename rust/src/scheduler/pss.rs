@@ -1,0 +1,88 @@
+//! Proportional sampling schedule (PSS, §3.1).
+//!
+//! Each task is routed to a worker drawn from the multinomial with
+//! `p_i = μ̂_i / Σ μ̂`. With accurate estimates every worker behaves like an
+//! independent queue loaded at the system ratio α, giving max queue O(log n).
+//! The draw is O(1) through the alias table carried in the cluster view.
+
+use super::{per_task, Policy};
+use crate::stats::Rng;
+use crate::types::{ClusterView, JobPlacement, JobSpec};
+
+/// Proportional sampling without queue probes.
+#[derive(Debug, Default)]
+pub struct Pss;
+
+impl Pss {
+    /// New PSS policy.
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Policy for Pss {
+    fn name(&self) -> String {
+        "pss".into()
+    }
+
+    fn schedule_job(
+        &mut self,
+        job: &JobSpec,
+        view: &ClusterView<'_>,
+        rng: &mut Rng,
+    ) -> JobPlacement {
+        per_task(job, |_| view.sampler.sample(rng))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::AliasTable;
+
+    #[test]
+    fn proportional_to_estimates() {
+        let mut p = Pss::new();
+        let mut rng = Rng::new(7);
+        let q = vec![0; 3];
+        let mu = vec![1.0, 2.0, 5.0];
+        let t = AliasTable::new(&mu);
+        let view = ClusterView { queue_len: &q, mu_hat: &mu, sampler: &t, lambda_hat: 1.0 };
+        let job = JobSpec::single(0.1);
+        let mut counts = [0usize; 3];
+        let n = 80_000;
+        for _ in 0..n {
+            if let JobPlacement::Single(w0) = p.schedule_job(&job, &view, &mut rng) {
+                counts[w0] += 1;
+            }
+        }
+        let total: f64 = mu.iter().sum();
+        for i in 0..3 {
+            let frac = counts[i] as f64 / n as f64;
+            assert!((frac - mu[i] / total).abs() < 0.01, "i={i} counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn ignores_queue_lengths() {
+        // PSS has no queue information: a fully loaded fast worker still
+        // receives proportional traffic.
+        let mut p = Pss::new();
+        let mut rng = Rng::new(8);
+        let q = vec![1000, 0];
+        let mu = vec![9.0, 1.0];
+        let t = AliasTable::new(&mu);
+        let view = ClusterView { queue_len: &q, mu_hat: &mu, sampler: &t, lambda_hat: 1.0 };
+        let job = JobSpec::single(0.1);
+        let mut fast = 0;
+        let n = 40_000;
+        for _ in 0..n {
+            if let JobPlacement::Single(w0) = p.schedule_job(&job, &view, &mut rng) {
+                if w0 == 0 {
+                    fast += 1;
+                }
+            }
+        }
+        assert!((fast as f64 / n as f64 - 0.9).abs() < 0.01);
+    }
+}

@@ -1,0 +1,127 @@
+//! Sparrow baseline: batch sampling + late binding (Ousterhout et al.,
+//! SOSP'13 — reference [7] of the paper).
+//!
+//! For a job of `m` tasks, Sparrow probes `d·m` *distinct* workers chosen
+//! uniformly at random and places a lightweight reservation at each. Workers
+//! serve their queues FIFO; when a reservation reaches the head, the worker
+//! asks the scheduler for the next unlaunched task of the job (late
+//! binding). Once all `m` tasks have launched the remaining reservations
+//! are discarded. Sparrow ignores worker speeds entirely — which is why its
+//! performance does not degrade under volatility (§6.1, Fig. 8b) but is far
+//! from Rosella's on heterogeneous clusters.
+
+use super::Policy;
+use crate::stats::Rng;
+use crate::types::{ClusterView, JobPlacement, JobSpec};
+
+/// Sparrow scheduler (batch sampling + late binding).
+#[derive(Debug)]
+pub struct Sparrow {
+    probes_per_task: usize,
+}
+
+impl Sparrow {
+    /// New Sparrow policy; the paper (and the original system) use
+    /// `probes_per_task = 2`.
+    pub fn new(probes_per_task: usize) -> Self {
+        assert!(probes_per_task >= 1);
+        Self { probes_per_task }
+    }
+}
+
+impl Policy for Sparrow {
+    fn name(&self) -> String {
+        "sparrow".into()
+    }
+
+    fn schedule_job(
+        &mut self,
+        job: &JobSpec,
+        view: &ClusterView<'_>,
+        rng: &mut Rng,
+    ) -> JobPlacement {
+        let n = view.n();
+        let m = job.unconstrained();
+        let want = self.probes_per_task * m;
+        if want <= n {
+            JobPlacement::Reservations(rng.sample_distinct(n, want))
+        } else {
+            // Tiny cluster relative to the job: distinct probes are
+            // impossible, fall back to sampling with replacement so every
+            // task still gets `probes_per_task` reservations.
+            JobPlacement::Reservations((0..want).map(|_| rng.gen_index(n)).collect())
+        }
+    }
+
+    fn needs_estimates(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::AliasTable;
+    use crate::types::TaskSpec;
+
+    fn view<'a>(q: &'a [usize], mu: &'a [f64], t: &'a AliasTable) -> ClusterView<'a> {
+        ClusterView { queue_len: q, mu_hat: mu, sampler: t, lambda_hat: 1.0 }
+    }
+
+    #[test]
+    fn probes_two_m_distinct_workers() {
+        let mut p = Sparrow::new(2);
+        let mut rng = Rng::new(21);
+        let q = vec![0; 30];
+        let mu = vec![1.0; 30];
+        let t = AliasTable::new(&mu);
+        let job = JobSpec::new(vec![TaskSpec::new(0.1); 5]);
+        match p.schedule_job(&job, &view(&q, &mu, &t), &mut rng) {
+            JobPlacement::Reservations(ws) => {
+                assert_eq!(ws.len(), 10);
+                let mut d = ws.clone();
+                d.sort_unstable();
+                d.dedup();
+                assert_eq!(d.len(), 10, "probes must be distinct: {ws:?}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn small_cluster_falls_back_to_replacement() {
+        let mut p = Sparrow::new(2);
+        let mut rng = Rng::new(22);
+        let q = vec![0; 4];
+        let mu = vec![1.0; 4];
+        let t = AliasTable::new(&mu);
+        let job = JobSpec::new(vec![TaskSpec::new(0.1); 10]); // 2m = 20 > n = 4
+        match p.schedule_job(&job, &view(&q, &mu, &t), &mut rng) {
+            JobPlacement::Reservations(ws) => {
+                assert_eq!(ws.len(), 20, "every task keeps 2 reservations");
+                assert!(ws.iter().all(|&w| w < 4));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn probes_are_uniform_not_proportional() {
+        let mut p = Sparrow::new(1);
+        let mut rng = Rng::new(23);
+        let q = vec![0; 2];
+        let mu = vec![100.0, 1.0]; // estimates must be ignored
+        let t = AliasTable::new(&mu);
+        let job = JobSpec::single(0.1);
+        let mut first = 0;
+        let n = 40_000;
+        for _ in 0..n {
+            if let JobPlacement::Reservations(ws) =
+                p.schedule_job(&job, &view(&q, &mu, &t), &mut rng)
+            {
+                first += (ws[0] == 0) as usize;
+            }
+        }
+        assert!((first as f64 / n as f64 - 0.5).abs() < 0.02);
+    }
+}

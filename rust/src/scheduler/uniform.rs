@@ -1,0 +1,89 @@
+//! Uniform random placement (§2.1.1).
+//!
+//! The classical baseline: every task goes to a uniformly random worker.
+//! With homogeneous speeds each queue is an independent M/M/1 and the
+//! maximum queue length is O(log n); with heterogeneous speeds slow workers
+//! receive more than they can process and their queues grow without bound
+//! (Example 1: λ₁ = 1.4 > μ₁ = 1).
+
+use super::{per_task, Policy};
+use crate::stats::Rng;
+use crate::types::{ClusterView, JobPlacement, JobSpec};
+
+/// Uniform random scheduler.
+#[derive(Debug, Default)]
+pub struct Uniform;
+
+impl Uniform {
+    /// New uniform policy.
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Policy for Uniform {
+    fn name(&self) -> String {
+        "uniform".into()
+    }
+
+    fn schedule_job(
+        &mut self,
+        job: &JobSpec,
+        view: &ClusterView<'_>,
+        rng: &mut Rng,
+    ) -> JobPlacement {
+        let n = view.n();
+        per_task(job, |_| rng.gen_index(n))
+    }
+
+    fn needs_estimates(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::AliasTable;
+
+    fn view<'a>(q: &'a [usize], mu: &'a [f64], t: &'a AliasTable) -> ClusterView<'a> {
+        ClusterView { queue_len: q, mu_hat: mu, sampler: t, lambda_hat: 1.0 }
+    }
+
+    #[test]
+    fn places_every_unconstrained_task() {
+        let mut p = Uniform::new();
+        let mut rng = Rng::new(1);
+        let q = vec![0; 8];
+        let mu = vec![1.0; 8];
+        let t = AliasTable::new(&mu);
+        let job = JobSpec::new(vec![crate::types::TaskSpec::new(0.1); 5]);
+        match p.schedule_job(&job, &view(&q, &mu, &t), &mut rng) {
+            JobPlacement::PerTask(ws) => {
+                assert_eq!(ws.len(), 5);
+                assert!(ws.iter().all(|&w| w < 8));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn is_uniform_over_workers() {
+        let mut p = Uniform::new();
+        let mut rng = Rng::new(2);
+        let q = vec![0; 4];
+        let mu = vec![1.0, 10.0, 100.0, 1000.0]; // must be ignored
+        let t = AliasTable::new(&mu);
+        let job = JobSpec::single(0.1);
+        let mut counts = [0usize; 4];
+        let n = 40_000;
+        for _ in 0..n {
+            if let JobPlacement::Single(w0) = p.schedule_job(&job, &view(&q, &mu, &t), &mut rng) {
+                counts[w0] += 1;
+            }
+        }
+        for &c in &counts {
+            assert!((c as f64 / n as f64 - 0.25).abs() < 0.02, "{counts:?}");
+        }
+    }
+}

@@ -1,0 +1,671 @@
+//! The discrete-event simulation engine.
+//!
+//! Couples the cluster model (workers with dual queues), a scheduling
+//! policy, the learning stack (arrival estimator, performance learner,
+//! benchmark dispatcher), a workload stream, and the volatility model into
+//! the paper's full system (Figure 1). Time is continuous (f64 seconds);
+//! events are processed in timestamp order with deterministic tie-breaking,
+//! so a fixed seed reproduces a run exactly.
+//!
+//! The engine replaces the paper's 31-node EC2 testbed (§6.1): worker
+//! speeds act exactly like the paper's slowed-down Spark executors (a task
+//! with demand τ takes τ/s seconds on a speed-s worker), and the node
+//! monitor's two-queue priority discipline is implemented verbatim.
+
+use crate::cluster::{SpeedProfile, Volatility, Worker};
+use crate::learner::{ArrivalEstimator, FakeJobDispatcher, LearnerConfig, PerfLearner};
+use crate::metrics::{QueueStats, ResponseRecorder};
+use crate::scheduler::{Policy, PolicyKind};
+use crate::simulator::event::{Event, EventQueue};
+use crate::stats::{AliasTable, Rng};
+use crate::types::{ClusterView, JobPlacement, JobSpec, Task, TaskKind};
+use crate::workload::WorkloadKind;
+use std::collections::HashMap;
+use std::collections::VecDeque;
+
+/// Sentinel job id for single-task jobs tracked without a `jobs` map entry
+/// (hot-path optimization; see `on_job_arrival`).
+const SINGLE_JOB: u64 = u64::MAX - 1;
+
+/// Complete configuration of one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// RNG seed; every stream (arrivals, service, policy, shocks) is forked
+    /// from it.
+    pub seed: u64,
+    /// Simulated duration in seconds.
+    pub duration: f64,
+    /// Jobs arriving before this time are excluded from metrics.
+    pub warmup: f64,
+    /// Worker speed profile.
+    pub speeds: SpeedProfile,
+    /// Speed volatility model.
+    pub volatility: Volatility,
+    /// Workload shape.
+    pub workload: WorkloadKind,
+    /// Target load ratio α = λ/μ.
+    pub load: f64,
+    /// Scheduling policy.
+    pub policy: PolicyKind,
+    /// Learning stack configuration.
+    pub learner: LearnerConfig,
+    /// Queue-length snapshot interval (None disables queue stats).
+    pub queue_sample: Option<f64>,
+}
+
+impl SimConfig {
+    /// Sensible defaults for the §6.2 synthetic setting: 15 workers (S1),
+    /// load 0.8, static speeds, Rosella policy with learning.
+    pub fn synthetic_default() -> Self {
+        Self {
+            seed: 42,
+            duration: 300.0,
+            warmup: 30.0,
+            speeds: SpeedProfile::S1,
+            volatility: Volatility::Static,
+            workload: WorkloadKind::Synthetic,
+            load: 0.8,
+            policy: PolicyKind::PPoT {
+                tie: crate::scheduler::TieRule::Sq2,
+                late_binding: false,
+            },
+            learner: LearnerConfig::default(),
+            queue_sample: None,
+        }
+    }
+}
+
+/// Bookkeeping for an in-flight job.
+#[derive(Debug)]
+struct JobState {
+    arrival: f64,
+    remaining: usize,
+}
+
+/// Everything measured during a run.
+#[derive(Debug)]
+pub struct SimResult {
+    /// Policy name.
+    pub policy: String,
+    /// Response-time recorder (real jobs only, post-warmup).
+    pub responses: ResponseRecorder,
+    /// Queue-length snapshots, if sampling was enabled.
+    pub queues: Option<QueueStats>,
+    /// `(time, mean relative estimation error)` trace at publish instants.
+    pub estimate_error: Vec<(f64, f64)>,
+    /// Completed real tasks.
+    pub completed_real: u64,
+    /// Completed benchmark tasks.
+    pub completed_bench: u64,
+    /// Mean worker utilization (busy fraction) over the run.
+    pub utilization: f64,
+    /// Jobs still incomplete at the end (backlog indicator).
+    pub incomplete_jobs: usize,
+    /// Total simulated time.
+    pub duration: f64,
+}
+
+impl SimResult {
+    /// Fraction of served tasks that were benchmark jobs (overhead of the
+    /// learner's active exploration).
+    pub fn benchmark_fraction(&self) -> f64 {
+        let total = self.completed_real + self.completed_bench;
+        if total == 0 {
+            0.0
+        } else {
+            self.completed_bench as f64 / total as f64
+        }
+    }
+}
+
+/// The engine itself. Construct with [`Simulation::new`], run with
+/// [`Simulation::run`].
+pub struct Simulation {
+    cfg: SimConfig,
+    now: f64,
+    events: EventQueue,
+    workers: Vec<Worker>,
+    speeds: Vec<f64>,
+    qlen: Vec<usize>,
+    policy: Box<dyn Policy>,
+    workload: Box<dyn crate::workload::Workload>,
+    arrival_est: ArrivalEstimator,
+    perf: PerfLearner,
+    dispatcher: FakeJobDispatcher,
+    mu_hat: Vec<f64>,
+    sampler: AliasTable,
+    // RNG streams.
+    rng_arrival: Rng,
+    rng_policy: Rng,
+    rng_shock: Rng,
+    rng_dispatch: Rng,
+    // Job bookkeeping.
+    jobs: HashMap<u64, JobState>,
+    /// Single-task jobs in flight (tracked by a counter instead of a map
+    /// entry — the dominant case in the §4 model and serving workloads).
+    singles_in_flight: usize,
+    unlaunched: HashMap<u64, VecDeque<Task>>,
+    next_job: u64,
+    next_task: u64,
+    // Metrics.
+    responses: ResponseRecorder,
+    queues: Option<QueueStats>,
+    estimate_error: Vec<(f64, f64)>,
+    /// Minimum guaranteed total service throughput μ̄ (tasks/sec).
+    pub mu_bar_tasks: f64,
+}
+
+impl Simulation {
+    /// Build a simulation from a config.
+    pub fn new(cfg: SimConfig) -> Self {
+        let mut seed_rng = Rng::new(cfg.seed);
+        let mut rng_profile = seed_rng.fork();
+        let speeds = cfg.speeds.speeds(&mut rng_profile);
+        let n = speeds.len();
+        assert!(n > 0, "cluster must have workers");
+        let workers: Vec<Worker> = speeds.iter().map(|&s| Worker::new(s)).collect();
+        let total_speed: f64 = speeds.iter().sum();
+        let workload = cfg.workload.build(cfg.load, total_speed, n);
+        let mean_demand = workload.mean_demand();
+        let mu_bar_tasks = total_speed / mean_demand;
+        let prior = total_speed / n as f64;
+        let perf = PerfLearner::new(n, cfg.learner.window_c, mean_demand, mu_bar_tasks, prior, 0.0);
+        let dispatcher = FakeJobDispatcher::new(
+            cfg.learner.c0,
+            mu_bar_tasks,
+            cfg.learner.enabled && cfg.learner.fake_jobs,
+        );
+        let mu_hat: Vec<f64> =
+            if cfg.learner.oracle { speeds.clone() } else { vec![prior; n] };
+        let sampler = AliasTable::new(&mu_hat);
+        let mut policy = cfg.policy.build(n);
+        // Policies receive λ̂ in *service-rate units* (tasks/s × mean
+        // demand), the same units as μ̂, so rate-aware policies (Halo) can
+        // compare them directly.
+        policy.on_estimates(&mu_hat, workload.lambda_tasks() * mean_demand);
+        Self {
+            now: 0.0,
+            events: EventQueue::new(),
+            qlen: vec![0; n],
+            workers,
+            speeds,
+            policy,
+            arrival_est: ArrivalEstimator::new(cfg.learner.arrival_window),
+            perf,
+            dispatcher,
+            mu_hat,
+            sampler,
+            rng_arrival: seed_rng.fork(),
+            rng_policy: seed_rng.fork(),
+            rng_shock: seed_rng.fork(),
+            rng_dispatch: seed_rng.fork(),
+            jobs: HashMap::new(),
+            singles_in_flight: 0,
+            unlaunched: HashMap::new(),
+            next_job: 0,
+            next_task: 0,
+            responses: ResponseRecorder::new(cfg.warmup),
+            queues: cfg.queue_sample.map(|_| QueueStats::new(n)),
+            estimate_error: Vec::new(),
+            mu_bar_tasks,
+            workload,
+            cfg,
+        }
+    }
+
+    /// Number of workers.
+    pub fn n(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Current true speeds (tests/diagnostics).
+    pub fn speeds(&self) -> &[f64] {
+        &self.speeds
+    }
+
+    /// Current published estimates.
+    pub fn mu_hat(&self) -> &[f64] {
+        &self.mu_hat
+    }
+
+    /// Run to completion and return the measurements.
+    pub fn run(mut self) -> SimResult {
+        // Seed the event streams.
+        let first_gap = self.workload.next_gap(&mut self.rng_arrival);
+        self.events.push(first_gap, Event::JobArrival);
+        if let Some(period) = self.cfg.volatility.period() {
+            self.events.push(period, Event::SpeedShock);
+        }
+        if self.dispatcher.enabled() {
+            let lam = self.arrival_est.lambda_or(0.0);
+            if let Some(gap) = self.dispatcher.next_gap(lam, &mut self.rng_dispatch) {
+                self.events.push(gap, Event::BenchmarkDispatch);
+            }
+        }
+        if self.cfg.learner.enabled && !self.cfg.learner.oracle {
+            self.events.push(self.cfg.learner.publish_interval, Event::EstimatePublish);
+        }
+        if let Some(interval) = self.cfg.queue_sample {
+            self.events.push(self.cfg.warmup.max(interval), Event::QueueSample);
+        }
+        self.events.push(self.cfg.duration, Event::EndOfSimulation);
+
+        while let Some((t, ev)) = self.events.pop() {
+            self.now = t;
+            match ev {
+                Event::EndOfSimulation => break,
+                Event::JobArrival => self.on_job_arrival(),
+                Event::TaskCompletion { worker, generation } => {
+                    self.on_completion(worker, generation)
+                }
+                Event::BenchmarkDispatch => self.on_benchmark_dispatch(),
+                Event::EstimatePublish => self.on_publish(),
+                Event::SpeedShock => self.on_shock(),
+                Event::QueueSample => self.on_queue_sample(),
+            }
+        }
+
+        let utilization = {
+            let total: f64 = self.workers.iter().map(|w| w.busy_time(self.cfg.duration)).sum();
+            total / (self.cfg.duration * self.workers.len() as f64)
+        };
+        SimResult {
+            policy: self.policy.name(),
+            responses: self.responses,
+            queues: self.queues,
+            estimate_error: self.estimate_error,
+            completed_real: self.workers.iter().map(|w| w.completed_real()).sum(),
+            completed_bench: self.workers.iter().map(|w| w.completed_bench()).sum(),
+            utilization,
+            incomplete_jobs: self.jobs.len() + self.singles_in_flight,
+            duration: self.cfg.duration,
+        }
+    }
+
+    fn refresh_qlen(&mut self) {
+        for (q, w) in self.qlen.iter_mut().zip(self.workers.iter()) {
+            *q = w.probe_len();
+        }
+    }
+
+    fn on_job_arrival(&mut self) {
+        // Schedule the next arrival first (keeps the stream independent of
+        // scheduling decisions).
+        let gap = self.workload.next_gap(&mut self.rng_arrival);
+        self.events.push(self.now + gap, Event::JobArrival);
+
+        let spec: JobSpec = self.workload.next_job(&mut self.rng_arrival);
+        self.arrival_est.on_arrival(self.now, spec.len());
+        // Hot path: a fully unconstrained single-task job needs no map
+        // entry — its response time is (completion − task.arrival).
+        if spec.len() == 1 && spec.tasks[0].constrained_to.is_none() {
+            self.refresh_qlen();
+            let placement = {
+                let view = ClusterView {
+                    queue_len: &self.qlen,
+                    mu_hat: &self.mu_hat,
+                    sampler: &self.sampler,
+                    lambda_hat: self.arrival_est.lambda_or(0.0),
+                };
+                self.policy.schedule_job(&spec, &view, &mut self.rng_policy)
+            };
+            let w = match placement {
+                JobPlacement::Single(w) => w,
+                JobPlacement::PerTask(ws) => ws[0],
+                JobPlacement::Reservations(ws) => {
+                    // Late binding for a single task: reserve everywhere.
+                    let task = self.make_task(SINGLE_JOB, TaskKind::Real, spec.tasks[0].demand);
+                    let job_id = self.next_job;
+                    self.next_job += 1;
+                    // Late binding still needs the unlaunched pool; fall
+                    // back to the general path for this placement.
+                    self.jobs.insert(job_id, JobState { arrival: self.now, remaining: 1 });
+                    let mut pool = VecDeque::with_capacity(1);
+                    pool.push_back(Task { job: job_id, ..task });
+                    self.unlaunched.insert(job_id, pool);
+                    for &w in &ws {
+                        self.workers[w].enqueue_reservation(job_id, self.now);
+                        self.kick(w);
+                    }
+                    return;
+                }
+            };
+            let task = self.make_task(SINGLE_JOB, TaskKind::Real, spec.tasks[0].demand);
+            self.singles_in_flight += 1;
+            self.workers[w].enqueue(task, self.now);
+            self.kick(w);
+            return;
+        }
+        let job_id = self.next_job;
+        self.next_job += 1;
+        self.jobs.insert(job_id, JobState { arrival: self.now, remaining: spec.len() });
+
+        // Constrained tasks bypass the policy entirely (§6.1).
+        for ts in spec.tasks.iter().filter(|t| t.constrained_to.is_some()) {
+            let w = ts.constrained_to.unwrap();
+            let task = self.make_task(job_id, TaskKind::Real, ts.demand);
+            self.workers[w].enqueue(task, self.now);
+            self.kick(w);
+        }
+
+        let m = spec.unconstrained();
+        if m == 0 {
+            return;
+        }
+        self.refresh_qlen();
+        let placement = {
+            let view = ClusterView {
+                queue_len: &self.qlen,
+                mu_hat: &self.mu_hat,
+                sampler: &self.sampler,
+                lambda_hat: self.arrival_est.lambda_or(0.0),
+            };
+            self.policy.schedule_job(&spec, &view, &mut self.rng_policy)
+        };
+        match placement {
+            JobPlacement::Single(w) => {
+                // Allocation-free path for the dominant single-task case.
+                debug_assert_eq!(m, 1);
+                let demand = spec
+                    .tasks
+                    .iter()
+                    .find(|t| t.constrained_to.is_none())
+                    .map(|t| t.demand)
+                    .expect("unconstrained task exists");
+                let task = self.make_task(job_id, TaskKind::Real, demand);
+                self.workers[w].enqueue(task, self.now);
+                self.kick(w);
+                return;
+            }
+            JobPlacement::PerTask(ws) => {
+                assert_eq!(ws.len(), m, "policy must place every unconstrained task");
+                let unconstrained: Vec<f64> = spec
+                    .tasks
+                    .iter()
+                    .filter(|t| t.constrained_to.is_none())
+                    .map(|t| t.demand)
+                    .collect();
+                for (k, &w) in ws.iter().enumerate() {
+                    let task = self.make_task(job_id, TaskKind::Real, unconstrained[k]);
+                    self.workers[w].enqueue(task, self.now);
+                    self.kick(w);
+                }
+            }
+            JobPlacement::Reservations(ws) => {
+                assert!(ws.len() >= m, "need at least one reservation per task");
+                let pool: VecDeque<Task> = spec
+                    .tasks
+                    .iter()
+                    .filter(|t| t.constrained_to.is_none())
+                    .map(|t| self.make_task(job_id, TaskKind::Real, t.demand))
+                    .collect();
+                self.unlaunched.insert(job_id, pool);
+                for &w in &ws {
+                    self.workers[w].enqueue_reservation(job_id, self.now);
+                    self.kick(w);
+                }
+            }
+        }
+    }
+
+    fn make_task(&mut self, job: u64, kind: TaskKind, demand: f64) -> Task {
+        let id = self.next_task;
+        self.next_task += 1;
+        Task { id, job, kind, demand, arrival: self.now }
+    }
+
+    /// Let `worker` pick up work if idle, resolving reservations.
+    fn kick(&mut self, w: usize) {
+        if !self.workers[w].is_idle() {
+            return;
+        }
+        loop {
+            let entry = match self.workers[w].next_entry() {
+                None => return,
+                Some(e) => e,
+            };
+            match entry {
+                (crate::cluster::QueueEntry::Task(t), at) => {
+                    let completion = self.workers[w].start(t, at, self.now);
+                    let generation = self.workers[w].generation();
+                    self.events.push(completion, Event::TaskCompletion { worker: w, generation });
+                    return;
+                }
+                (crate::cluster::QueueEntry::Reservation { job }, at) => {
+                    // Late binding: fetch the next unlaunched task of the
+                    // job, or discard the reservation if the job is dry.
+                    let task = self.unlaunched.get_mut(&job).and_then(|q| q.pop_front());
+                    if let Some(t) = task {
+                        let completion = self.workers[w].start(t, at, self.now);
+                        let generation = self.workers[w].generation();
+                        self.events
+                            .push(completion, Event::TaskCompletion { worker: w, generation });
+                        return;
+                    }
+                    // else: reservation void; keep draining the queue.
+                }
+            }
+        }
+    }
+
+    fn on_completion(&mut self, w: usize, generation: u64) {
+        if generation != self.workers[w].generation() {
+            return; // stale event from before a speed shock
+        }
+        let (task, duration, _wait) = self.workers[w].complete(self.now);
+        // Every completion (real or benchmark) is a service sample (§5:
+        // "when a benchmark or real task completes, the node monitor
+        // reports an updated estimation of worker speed").
+        if self.cfg.learner.enabled && !self.cfg.learner.oracle {
+            self.perf.on_completion(w, self.now, duration.max(1e-9), task.demand);
+        }
+        if task.kind == TaskKind::Real {
+            if task.job == SINGLE_JOB {
+                self.singles_in_flight -= 1;
+                self.responses.record(task.arrival, self.now);
+                self.kick(w);
+                return;
+            }
+            if let Some(js) = self.jobs.get_mut(&task.job) {
+                js.remaining -= 1;
+                if js.remaining == 0 {
+                    let arrival = js.arrival;
+                    self.jobs.remove(&task.job);
+                    self.unlaunched.remove(&task.job);
+                    self.responses.record(arrival, self.now);
+                }
+            }
+        }
+        self.kick(w);
+    }
+
+    fn on_benchmark_dispatch(&mut self) {
+        let lam = self.arrival_est.lambda_or(0.0);
+        if let Some(gap) = self.dispatcher.next_gap(lam, &mut self.rng_dispatch) {
+            self.events.push(self.now + gap, Event::BenchmarkDispatch);
+        }
+        let w = self.dispatcher.pick_worker(self.workers.len(), &mut self.rng_dispatch);
+        let demand = self.workload.benchmark_demand(&mut self.rng_dispatch);
+        // Throttle: never queue more than a handful of benchmarks at one
+        // worker (§5 "setting priorities ... and implementing throttling").
+        if self.workers[w].bench_backlog() >= 4 {
+            return;
+        }
+        let task = self.make_task(u64::MAX, TaskKind::Benchmark, demand);
+        self.workers[w].enqueue(task, self.now);
+        self.kick(w);
+    }
+
+    fn on_publish(&mut self) {
+        self.events.push(self.now + self.cfg.learner.publish_interval, Event::EstimatePublish);
+        let lam = self.arrival_est.lambda_or(0.0);
+        let params = self.perf.publish(self.now, lam);
+        self.mu_hat.copy_from_slice(self.perf.mu_hat());
+        self.sampler = AliasTable::new(&self.mu_hat);
+        self.policy.on_estimates(&self.mu_hat, lam * self.workload.mean_demand());
+        // Ground-truth error trace for learning-time analyses.
+        let mu_star_abs = params.mu_star;
+        let err = self.perf.relative_error(&self.speeds, mu_star_abs);
+        self.estimate_error.push((self.now, err));
+    }
+
+    fn on_shock(&mut self) {
+        if let Some(period) = self.cfg.volatility.period() {
+            self.events.push(self.now + period, Event::SpeedShock);
+        }
+        if !self.cfg.volatility.shock(&mut self.speeds, &mut self.rng_shock) {
+            return;
+        }
+        for (w, &s) in self.speeds.clone().iter().enumerate() {
+            if let Some(new_completion) = self.workers[w].set_speed(s, self.now) {
+                let generation = self.workers[w].generation();
+                self.events
+                    .push(new_completion, Event::TaskCompletion { worker: w, generation });
+            }
+        }
+        if self.cfg.learner.oracle {
+            // Oracle scheduler instantly knows the new speeds.
+            self.mu_hat.copy_from_slice(&self.speeds);
+            self.sampler = AliasTable::new(&self.mu_hat);
+            self.policy
+                .on_estimates(&self.mu_hat, self.workload.lambda_tasks() * self.workload.mean_demand());
+        }
+    }
+
+    fn on_queue_sample(&mut self) {
+        if let Some(interval) = self.cfg.queue_sample {
+            self.events.push(self.now + interval, Event::QueueSample);
+        }
+        self.refresh_qlen();
+        if let Some(q) = self.queues.as_mut() {
+            q.record(&self.qlen);
+        }
+    }
+}
+
+/// Convenience: build + run in one call.
+pub fn run(cfg: SimConfig) -> SimResult {
+    Simulation::new(cfg).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::TieRule;
+
+    fn base() -> SimConfig {
+        SimConfig {
+            seed: 7,
+            duration: 120.0,
+            warmup: 20.0,
+            speeds: SpeedProfile::S1,
+            volatility: Volatility::Static,
+            workload: WorkloadKind::Synthetic,
+            load: 0.5,
+            policy: PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
+            learner: LearnerConfig::oracle(),
+            queue_sample: Some(0.5),
+        }
+    }
+
+    #[test]
+    fn stable_system_completes_most_jobs() {
+        let r = run(base());
+        assert!(r.responses.count() > 1000, "completed {}", r.responses.count());
+        assert!(r.incomplete_jobs < 50, "backlog {}", r.incomplete_jobs);
+        // Load 0.5 -> utilization near 0.5.
+        assert!((r.utilization - 0.5).abs() < 0.1, "util {}", r.utilization);
+    }
+
+    #[test]
+    fn response_time_at_least_service_time() {
+        let r = run(base());
+        // Mean demand 0.1, mean speed 0.9 -> mean pure service ≈ 0.11.
+        assert!(r.responses.mean() > 0.05, "mean {}", r.responses.mean());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run(base());
+        let b = run(base());
+        assert_eq!(a.responses.count(), b.responses.count());
+        assert!((a.responses.mean() - b.responses.mean()).abs() < 1e-12);
+        assert_eq!(a.completed_real, b.completed_real);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut cfg = base();
+        cfg.seed = 8;
+        let a = run(base());
+        let b = run(cfg);
+        assert_ne!(a.completed_real, b.completed_real);
+    }
+
+    #[test]
+    fn learning_mode_produces_benchmarks_and_estimates() {
+        let mut cfg = base();
+        cfg.learner = LearnerConfig::default();
+        let r = run(cfg);
+        assert!(r.completed_bench > 0, "no benchmark jobs ran");
+        assert!(!r.estimate_error.is_empty());
+        // After warm-up the estimates should be decent.
+        let final_err = r.estimate_error.last().unwrap().1;
+        assert!(final_err < 0.25, "final estimate error {final_err}");
+    }
+
+    #[test]
+    fn fake_jobs_disabled_means_no_benchmarks() {
+        let mut cfg = base();
+        cfg.learner = LearnerConfig::no_fake_jobs(10.0);
+        let r = run(cfg);
+        assert_eq!(r.completed_bench, 0);
+    }
+
+    #[test]
+    fn permutation_shock_keeps_system_running() {
+        let mut cfg = base();
+        cfg.volatility = Volatility::Permute { period: 15.0 };
+        cfg.learner = LearnerConfig::default();
+        let r = run(cfg);
+        assert!(r.responses.count() > 1000);
+    }
+
+    #[test]
+    fn sparrow_late_binding_completes_jobs() {
+        let mut cfg = base();
+        cfg.policy = PolicyKind::Sparrow { probes_per_task: 2 };
+        cfg.workload = WorkloadKind::Tpch { query: crate::workload::tpch::Query::Q6 };
+        cfg.load = 0.5;
+        let r = run(cfg);
+        assert!(r.responses.count() > 200, "completed {}", r.responses.count());
+        assert!(r.incomplete_jobs < 100, "backlog {}", r.incomplete_jobs);
+    }
+
+    #[test]
+    fn rosella_late_binding_completes_jobs() {
+        let mut cfg = base();
+        cfg.policy = PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: true };
+        cfg.workload = WorkloadKind::Tpch { query: crate::workload::tpch::Query::Q3 };
+        let r = run(cfg);
+        assert!(r.responses.count() > 200);
+        assert!(r.incomplete_jobs < 100, "backlog {}", r.incomplete_jobs);
+    }
+
+    #[test]
+    fn queue_sampling_collects_snapshots() {
+        let r = run(base());
+        let q = r.queues.unwrap();
+        assert!(q.snapshots() > 100);
+        assert!(q.mean_max() > 0.0);
+    }
+
+    #[test]
+    fn overload_grows_backlog() {
+        let mut cfg = base();
+        cfg.load = 1.5; // deliberately unstable
+        cfg.duration = 60.0;
+        let r = run(cfg);
+        assert!(r.incomplete_jobs > 100, "overload should leave a backlog");
+    }
+}

@@ -1,0 +1,173 @@
+//! Event types and the time-ordered event queue of the discrete-event
+//! simulator.
+//!
+//! The queue is a binary heap keyed by `(time, seq)`; the sequence number
+//! breaks ties deterministically (FIFO among simultaneous events), which
+//! keeps every experiment bit-reproducible for a fixed seed.
+
+use crate::types::WorkerId;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulation events.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A new job arrives at the scheduler.
+    JobArrival,
+    /// Worker `worker` finishes its in-service task. `generation` guards
+    /// against stale completions after a speed shock rescheduled the
+    /// in-flight task (see `engine.rs`).
+    TaskCompletion { worker: WorkerId, generation: u64 },
+    /// The learner's dispatcher wakes up to inject benchmark jobs
+    /// (LEARNER-DISPATCHER, paper Fig. 6).
+    BenchmarkDispatch,
+    /// The learner publishes fresh estimates and the proportional sampler
+    /// is rebuilt.
+    EstimatePublish,
+    /// The environment shocks: worker speeds are randomly permuted
+    /// (§6.1/§6.2: "randomly permute the worker speeds every X minutes").
+    SpeedShock,
+    /// Periodic queue-length sampling for Figure 13-style distributions.
+    QueueSample,
+    /// Hard stop.
+    EndOfSimulation,
+}
+
+/// A scheduled event.
+#[derive(Debug, Clone)]
+struct Scheduled {
+    time: f64,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for a min-heap on (time, seq).
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-heap event queue ordered by time, FIFO among equal times.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Scheduled>,
+    seq: u64,
+}
+
+impl EventQueue {
+    /// Empty queue.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `event` at absolute time `time`.
+    pub fn push(&mut self, time: f64, event: Event) {
+        debug_assert!(time.is_finite() && time >= 0.0, "bad event time {time}");
+        self.heap.push(Scheduled { time, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Pop the earliest event, if any.
+    pub fn pop(&mut self) -> Option<(f64, Event)> {
+        self.heap.pop().map(|s| (s.time, s.event))
+    }
+
+    /// Time of the next event without removing it.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|s| s.time)
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True if no events are pending.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Drop everything (used between experiment repetitions).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, Event::JobArrival);
+        q.push(1.0, Event::EndOfSimulation);
+        q.push(2.0, Event::BenchmarkDispatch);
+        assert_eq!(q.pop().unwrap().0, 1.0);
+        assert_eq!(q.pop().unwrap().0, 2.0);
+        assert_eq!(q.pop().unwrap().0, 3.0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn fifo_among_equal_times() {
+        let mut q = EventQueue::new();
+        q.push(1.0, Event::TaskCompletion { worker: 0, generation: 0 });
+        q.push(1.0, Event::TaskCompletion { worker: 1, generation: 0 });
+        q.push(1.0, Event::TaskCompletion { worker: 2, generation: 0 });
+        for expect in 0..3 {
+            match q.pop().unwrap().1 {
+                Event::TaskCompletion { worker, .. } => assert_eq!(worker, expect),
+                e => panic!("unexpected {e:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn peek_does_not_remove() {
+        let mut q = EventQueue::new();
+        q.push(5.0, Event::SpeedShock);
+        assert_eq!(q.peek_time(), Some(5.0));
+        assert_eq!(q.len(), 1);
+        assert!(!q.is_empty());
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let mut q = EventQueue::new();
+        q.push(10.0, Event::JobArrival);
+        q.push(1.0, Event::JobArrival);
+        assert_eq!(q.pop().unwrap().0, 1.0);
+        q.push(5.0, Event::JobArrival);
+        q.push(0.5, Event::JobArrival);
+        assert_eq!(q.pop().unwrap().0, 0.5);
+        assert_eq!(q.pop().unwrap().0, 5.0);
+        assert_eq!(q.pop().unwrap().0, 10.0);
+    }
+
+    #[test]
+    fn clear_empties() {
+        let mut q = EventQueue::new();
+        q.push(1.0, Event::JobArrival);
+        q.clear();
+        assert!(q.is_empty());
+    }
+}

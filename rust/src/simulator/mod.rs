@@ -1,0 +1,7 @@
+//! Discrete-event simulation of the full Rosella system.
+
+pub mod engine;
+pub mod event;
+
+pub use engine::{run, SimConfig, SimResult, Simulation};
+pub use event::{Event, EventQueue};

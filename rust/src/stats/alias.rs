@@ -1,0 +1,226 @@
+//! Vose alias method for O(1) multinomial sampling.
+//!
+//! This is the hot path of Rosella's proportional sampling schedule (PSS,
+//! paper §3.1): each scheduling decision samples two workers from the
+//! multinomial `(p_1, ..., p_n)` with `p_i = μ̂_i / Σ μ̂`. A naive CDF walk is
+//! O(n) per task; with millions of tasks per second that dominates the
+//! scheduler. The alias table gives exact O(1) draws after an O(n) build.
+//!
+//! The table is rebuilt only when the learner publishes new estimates (a
+//! rate-limited background event), never per task.
+
+use super::rng::Rng;
+
+/// Precomputed alias table for a fixed discrete distribution.
+#[derive(Debug, Clone)]
+pub struct AliasTable {
+    /// `prob[i]` is the probability of keeping column `i` (scaled to [0,1]).
+    prob: Vec<f64>,
+    /// `alias[i]` is the alternative outcome for column `i`.
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    /// Build an alias table from non-negative weights.
+    ///
+    /// Weights need not be normalized. If every weight is zero (e.g. the
+    /// learner has zeroed all estimates), the table degenerates to the
+    /// uniform distribution — the same fallback Rosella's scheduler uses
+    /// before any estimate is learned.
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "alias table over empty support");
+        assert!(
+            weights.iter().all(|&w| w >= 0.0 && w.is_finite()),
+            "weights must be non-negative and finite: {weights:?}"
+        );
+        let total: f64 = weights.iter().sum();
+        let scaled: Vec<f64> = if total <= 0.0 {
+            vec![1.0; n]
+        } else {
+            weights.iter().map(|&w| w * n as f64 / total).collect()
+        };
+
+        let mut prob = vec![0.0f64; n];
+        let mut alias = vec![0u32; n];
+        // Partition columns into under-full and over-full work lists.
+        let mut small: Vec<u32> = Vec::with_capacity(n);
+        let mut large: Vec<u32> = Vec::with_capacity(n);
+        let mut p = scaled;
+        for (i, &v) in p.iter().enumerate() {
+            if v < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s as usize] = p[s as usize];
+            alias[s as usize] = l;
+            p[l as usize] = (p[l as usize] + p[s as usize]) - 1.0;
+            if p[l as usize] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // Leftovers are numerically == 1.
+        for &i in small.iter().chain(large.iter()) {
+            prob[i as usize] = 1.0;
+            alias[i as usize] = i;
+        }
+        Self { prob, alias }
+    }
+
+    /// Number of outcomes.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    /// True if the table has a single outcome.
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Draw one outcome index in O(1).
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.gen_index(self.prob.len());
+        if rng.next_f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+
+    /// Draw two outcomes (with replacement) — the power-of-two-choices probe.
+    #[inline]
+    pub fn sample_pair(&self, rng: &mut Rng) -> (usize, usize) {
+        (self.sample(rng), self.sample(rng))
+    }
+
+    /// Exact probability assigned to outcome `i` (for tests/diagnostics).
+    pub fn probability(&self, i: usize) -> f64 {
+        let n = self.prob.len() as f64;
+        let mut p = self.prob[i] / n;
+        for (j, &a) in self.alias.iter().enumerate() {
+            if a as usize == i && j != i {
+                p += (1.0 - self.prob[j]) / n;
+            }
+        }
+        // Self-alias leftover contributes its own (1 - prob) mass too.
+        if self.alias[i] as usize == i {
+            p += (1.0 - self.prob[i]) / n;
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Rng;
+
+    #[test]
+    fn uniform_weights_give_uniform_probs() {
+        let t = AliasTable::new(&[1.0, 1.0, 1.0, 1.0]);
+        for i in 0..4 {
+            assert!((t.probability(i) - 0.25).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn probabilities_match_weights() {
+        let w = [1.0, 2.0, 3.0, 4.0];
+        let t = AliasTable::new(&w);
+        let total: f64 = w.iter().sum();
+        for i in 0..4 {
+            assert!((t.probability(i) - w[i] / total).abs() < 1e-12, "i={i}");
+        }
+    }
+
+    #[test]
+    fn empirical_frequencies_match() {
+        // The paper's running example: 9 slow workers (μ=1), 1 fast (μ=6).
+        let mut w = vec![1.0; 9];
+        w.push(6.0);
+        let t = AliasTable::new(&w);
+        let mut r = Rng::new(99);
+        let n = 300_000;
+        let mut counts = vec![0usize; 10];
+        for _ in 0..n {
+            counts[t.sample(&mut r)] += 1;
+        }
+        // Fast worker should get 6/15 = 0.4 of probes.
+        let fast = counts[9] as f64 / n as f64;
+        assert!((fast - 0.4).abs() < 0.005, "fast frac {fast}");
+        for i in 0..9 {
+            let f = counts[i] as f64 / n as f64;
+            assert!((f - 1.0 / 15.0).abs() < 0.005, "slow {i} frac {f}");
+        }
+    }
+
+    #[test]
+    fn zero_weight_outcome_never_sampled() {
+        let t = AliasTable::new(&[0.0, 1.0, 0.0, 1.0]);
+        let mut r = Rng::new(3);
+        for _ in 0..50_000 {
+            let s = t.sample(&mut r);
+            assert!(s == 1 || s == 3, "sampled zero-weight outcome {s}");
+        }
+    }
+
+    #[test]
+    fn all_zero_weights_fall_back_to_uniform() {
+        let t = AliasTable::new(&[0.0, 0.0, 0.0]);
+        let mut r = Rng::new(4);
+        let mut counts = [0usize; 3];
+        for _ in 0..90_000 {
+            counts[t.sample(&mut r)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 / 90_000.0 - 1.0 / 3.0).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn single_outcome() {
+        let t = AliasTable::new(&[5.0]);
+        let mut r = Rng::new(5);
+        for _ in 0..100 {
+            assert_eq!(t.sample(&mut r), 0);
+        }
+    }
+
+    #[test]
+    fn highly_skewed_distribution() {
+        let t = AliasTable::new(&[1e-6, 1.0]);
+        let mut r = Rng::new(6);
+        let n = 200_000;
+        let rare = (0..n).filter(|_| t.sample(&mut r) == 0).count();
+        assert!(rare < 20, "rare outcome drawn {rare} times");
+    }
+
+    #[test]
+    fn sample_pair_draws_independent() {
+        let t = AliasTable::new(&[1.0, 1.0]);
+        let mut r = Rng::new(8);
+        let mut same = 0;
+        let n = 100_000;
+        for _ in 0..n {
+            let (a, b) = t.sample_pair(&mut r);
+            if a == b {
+                same += 1;
+            }
+        }
+        // P(same) = 0.5 for two fair outcomes with replacement.
+        assert!((same as f64 / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_negative_weights() {
+        AliasTable::new(&[1.0, -1.0]);
+    }
+}

@@ -1,0 +1,211 @@
+//! Descriptive statistics: percentiles, summaries, and the five-number
+//! report the paper uses in Figure 9 (5th/25th/50th/75th/95th percentiles).
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Unbiased sample variance (0.0 for fewer than two samples).
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+/// Standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Percentile `p ∈ [0, 100]` with linear interpolation between order
+/// statistics (the "linear" / type-7 method). Input need not be sorted.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p), "percentile {p} out of range");
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile over an already-sorted slice (no allocation).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// The five-number summary reported throughout the paper's Figure 9.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FiveNum {
+    pub p5: f64,
+    pub p25: f64,
+    pub p50: f64,
+    pub p75: f64,
+    pub p95: f64,
+}
+
+impl FiveNum {
+    /// Compute the summary; sorts a copy of the input once.
+    pub fn of(xs: &[f64]) -> Self {
+        let mut v: Vec<f64> = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self {
+            p5: percentile_sorted(&v, 5.0),
+            p25: percentile_sorted(&v, 25.0),
+            p50: percentile_sorted(&v, 50.0),
+            p75: percentile_sorted(&v, 75.0),
+            p95: percentile_sorted(&v, 95.0),
+        }
+    }
+}
+
+/// Full summary used in experiment reports.
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub five: FiveNum,
+}
+
+impl Summary {
+    /// Compute all summary statistics in one pass plus one sort.
+    pub fn of(xs: &[f64]) -> Self {
+        let five = FiveNum::of(xs);
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &x in xs {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        if xs.is_empty() {
+            lo = 0.0;
+            hi = 0.0;
+        }
+        Self {
+            count: xs.len(),
+            mean: mean(xs),
+            stddev: stddev(xs),
+            min: lo,
+            max: hi,
+            five,
+        }
+    }
+}
+
+/// Simple linear-regression slope for trend/stationarity probes
+/// (Fig 10a: PoT's response time *grows* with job index; PPoT's does not).
+pub fn linreg_slope(ys: &[f64]) -> f64 {
+    let n = ys.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let nx = n as f64;
+    let mean_x = (nx - 1.0) / 2.0;
+    let mean_y = mean(ys);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (i, &y) in ys.iter().enumerate() {
+        let dx = i as f64 - mean_x;
+        num += dx * (y - mean_y);
+        den += dx * dx;
+    }
+    num / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn variance_basic() {
+        let v = variance(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((v - 4.571428).abs() < 1e-4);
+        assert_eq!(variance(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn percentile_median_odd() {
+        assert_eq!(percentile(&[3.0, 1.0, 2.0], 50.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        // p50 of [1, 2, 3, 4] = 2.5 under type-7.
+        assert_eq!(percentile(&[4.0, 1.0, 3.0, 2.0], 50.0), 2.5);
+    }
+
+    #[test]
+    fn percentile_extremes() {
+        let xs = [5.0, 1.0, 9.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 9.0);
+    }
+
+    #[test]
+    fn percentile_empty_and_single() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.0], 95.0), 7.0);
+    }
+
+    #[test]
+    fn fivenum_is_monotone() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64 * 17.0) % 503.0).collect();
+        let f = FiveNum::of(&xs);
+        assert!(f.p5 <= f.p25 && f.p25 <= f.p50 && f.p50 <= f.p75 && f.p75 <= f.p95);
+    }
+
+    #[test]
+    fn summary_of_uniform_grid() {
+        let xs: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.count, 101);
+        assert_eq!(s.mean, 50.0);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 100.0);
+        assert_eq!(s.five.p50, 50.0);
+        assert_eq!(s.five.p25, 25.0);
+    }
+
+    #[test]
+    fn slope_detects_growth() {
+        let grow: Vec<f64> = (0..100).map(|i| 2.0 * i as f64 + 1.0).collect();
+        assert!((linreg_slope(&grow) - 2.0).abs() < 1e-9);
+        let flat = vec![5.0; 100];
+        assert!(linreg_slope(&flat).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slope_degenerate() {
+        assert_eq!(linreg_slope(&[]), 0.0);
+        assert_eq!(linreg_slope(&[1.0]), 0.0);
+    }
+}

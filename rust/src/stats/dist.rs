@@ -1,0 +1,266 @@
+//! Probability distributions used by the paper's model and experiments.
+//!
+//! The paper's analytical model (§4) is an M/M system: Poisson job arrivals
+//! with rate λ and exponential service demands. The synthetic evaluation
+//! (§6.2) samples per-task demands from an exponential with mean 100 ms and
+//! worker speeds from a Zipf law. All three are implemented here, plus a
+//! Poisson *counting* sampler used by the fake-job dispatcher
+//! (LEARNER-DISPATCHER draws `t ~ Poisson(c0 · (μ̄ − λ̂))` events per tick).
+
+use super::rng::Rng;
+
+/// Exponential distribution with rate `lambda` (mean `1/lambda`).
+#[derive(Debug, Clone, Copy)]
+pub struct Exponential {
+    rate: f64,
+}
+
+impl Exponential {
+    /// Create an exponential distribution with the given rate (events/sec).
+    ///
+    /// Panics if `rate` is not strictly positive and finite.
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0 && rate.is_finite(), "invalid exponential rate {rate}");
+        Self { rate }
+    }
+
+    /// Exponential with the given *mean* instead of rate.
+    pub fn with_mean(mean: f64) -> Self {
+        Self::new(1.0 / mean)
+    }
+
+    /// The rate parameter λ.
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Draw a sample by inversion: `-ln(U)/λ`.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        -rng.next_f64_open().ln() / self.rate
+    }
+}
+
+/// Poisson distribution with mean `lambda`.
+///
+/// Uses Knuth's multiplication method for small means and a
+/// normal approximation with continuity correction for large means
+/// (the dispatcher only needs counts, so the approximation for
+/// `lambda > 30` is more than adequate and keeps sampling O(1)).
+#[derive(Debug, Clone, Copy)]
+pub struct Poisson {
+    lambda: f64,
+}
+
+impl Poisson {
+    /// Create a Poisson distribution with the given mean. Zero is allowed
+    /// (the sampler then always returns 0), negative is not.
+    pub fn new(lambda: f64) -> Self {
+        assert!(lambda >= 0.0 && lambda.is_finite(), "invalid poisson mean {lambda}");
+        Self { lambda }
+    }
+
+    /// The mean λ.
+    pub fn mean(&self) -> f64 {
+        self.lambda
+    }
+
+    /// Draw a count.
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        if self.lambda == 0.0 {
+            return 0;
+        }
+        if self.lambda < 30.0 {
+            // Knuth: count uniforms until their product drops below e^-λ.
+            let l = (-self.lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= rng.next_f64_open();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            // Normal approximation N(λ, λ), clamped at zero.
+            let x = self.lambda + self.lambda.sqrt() * rng.next_gaussian() + 0.5;
+            if x < 0.0 {
+                0
+            } else {
+                x as u64
+            }
+        }
+    }
+}
+
+/// Zipf distribution over ranks `1..=n` with exponent `s`:
+/// `P(k) ∝ k^-s`. Used to sample heterogeneous worker speed *profiles*
+/// ("a small number of powerful servers", §6.2).
+///
+/// `n` is small in every experiment (tens of workers), so a precomputed
+/// cumulative table with binary search is both exact and fast.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Build the distribution for ranks `1..=n` and exponent `s > 0`.
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0, "zipf over empty support");
+        assert!(s > 0.0 && s.is_finite(), "invalid zipf exponent {s}");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += (k as f64).powf(-s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for v in cdf.iter_mut() {
+            *v /= total;
+        }
+        Self { cdf }
+    }
+
+    /// Number of ranks.
+    pub fn n(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Probability mass of rank `k` (1-based).
+    pub fn pmf(&self, k: usize) -> f64 {
+        assert!((1..=self.n()).contains(&k));
+        if k == 1 {
+            self.cdf[0]
+        } else {
+            self.cdf[k - 1] - self.cdf[k - 2]
+        }
+    }
+
+    /// Draw a rank in `1..=n`.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.next_f64();
+        // First index whose cdf exceeds u.
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i + 1,
+            Err(i) => (i + 1).min(self.cdf.len()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(0xC0FFEE)
+    }
+
+    #[test]
+    fn exponential_mean_and_var() {
+        let mut r = rng();
+        let d = Exponential::new(4.0);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| d.sample(&mut r)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - 0.25).abs() < 0.005, "mean={mean}");
+        assert!((var - 0.0625).abs() < 0.005, "var={var}");
+    }
+
+    #[test]
+    fn exponential_with_mean() {
+        let d = Exponential::with_mean(0.1);
+        assert!((d.rate() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exponential_nonnegative() {
+        let mut r = rng();
+        let d = Exponential::new(0.5);
+        for _ in 0..10_000 {
+            assert!(d.sample(&mut r) >= 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn exponential_rejects_zero_rate() {
+        Exponential::new(0.0);
+    }
+
+    #[test]
+    fn poisson_small_mean() {
+        let mut r = rng();
+        let d = Poisson::new(3.0);
+        let n = 100_000;
+        let xs: Vec<u64> = (0..n).map(|_| d.sample(&mut r)).collect();
+        let mean = xs.iter().sum::<u64>() as f64 / n as f64;
+        let var = xs
+            .iter()
+            .map(|&x| (x as f64 - mean) * (x as f64 - mean))
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 3.0).abs() < 0.05, "mean={mean}");
+        assert!((var - 3.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn poisson_zero_mean_is_always_zero() {
+        let mut r = rng();
+        let d = Poisson::new(0.0);
+        for _ in 0..100 {
+            assert_eq!(d.sample(&mut r), 0);
+        }
+    }
+
+    #[test]
+    fn poisson_large_mean_normal_branch() {
+        let mut r = rng();
+        let d = Poisson::new(200.0);
+        let n = 50_000;
+        let mean = (0..n).map(|_| d.sample(&mut r)).sum::<u64>() as f64 / n as f64;
+        assert!((mean - 200.0).abs() < 1.0, "mean={mean}");
+    }
+
+    #[test]
+    fn zipf_pmf_sums_to_one() {
+        let z = Zipf::new(15, 1.1);
+        let total: f64 = (1..=15).map(|k| z.pmf(k)).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zipf_rank_one_is_most_likely() {
+        let z = Zipf::new(10, 1.5);
+        for k in 2..=10 {
+            assert!(z.pmf(1) > z.pmf(k));
+        }
+    }
+
+    #[test]
+    fn zipf_empirical_matches_pmf() {
+        let mut r = rng();
+        let z = Zipf::new(5, 1.0);
+        let n = 200_000;
+        let mut counts = [0usize; 5];
+        for _ in 0..n {
+            counts[z.sample(&mut r) - 1] += 1;
+        }
+        for k in 1..=5 {
+            let emp = counts[k - 1] as f64 / n as f64;
+            assert!((emp - z.pmf(k)).abs() < 0.005, "k={k} emp={emp} pmf={}", z.pmf(k));
+        }
+    }
+
+    #[test]
+    fn zipf_samples_in_range() {
+        let mut r = rng();
+        let z = Zipf::new(7, 2.0);
+        for _ in 0..10_000 {
+            let k = z.sample(&mut r);
+            assert!((1..=7).contains(&k));
+        }
+    }
+}

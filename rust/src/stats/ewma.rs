@@ -1,0 +1,239 @@
+//! Exponentially weighted moving average + a fixed-size sliding-window mean.
+//!
+//! The paper's arrival estimator (§3.3) is a sliding-window mean over the
+//! inter-arrival times of the last `S` jobs; the EWMA is provided as the
+//! classical alternative (§7 cites stochastic approximation / EMA [42]) and
+//! is used by the live coordinator's metrics.
+
+/// Exponentially weighted moving average with smoothing factor `alpha`.
+#[derive(Debug, Clone, Copy)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    /// `alpha ∈ (0, 1]`: weight of each new observation.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "bad ewma alpha {alpha}");
+        Self { alpha, value: None }
+    }
+
+    /// Feed one observation and return the updated average.
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => prev + self.alpha * (x - prev),
+        };
+        self.value = Some(v);
+        v
+    }
+
+    /// Current average (`None` before the first observation).
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+
+    /// Current average or the provided default.
+    pub fn value_or(&self, default: f64) -> f64 {
+        self.value.unwrap_or(default)
+    }
+
+    /// Forget all history.
+    pub fn reset(&mut self) {
+        self.value = None;
+    }
+}
+
+/// Fixed-capacity sliding-window mean over the most recent `cap` samples,
+/// with O(1) update. This is the estimator primitive behind both the
+/// arrival estimator (window `S`) and the performance learner (window `L`).
+#[derive(Debug, Clone)]
+pub struct SlidingMean {
+    buf: Vec<f64>,
+    cap: usize,
+    head: usize,
+    len: usize,
+    sum: f64,
+}
+
+impl SlidingMean {
+    /// Window of the most recent `cap >= 1` samples.
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1);
+        Self { buf: vec![0.0; cap], cap, head: 0, len: 0, sum: 0.0 }
+    }
+
+    /// Push a sample, evicting the oldest when full.
+    pub fn push(&mut self, x: f64) {
+        if self.len == self.cap {
+            self.sum -= self.buf[self.head];
+        } else {
+            self.len += 1;
+        }
+        self.buf[self.head] = x;
+        self.sum += x;
+        self.head = (self.head + 1) % self.cap;
+    }
+
+    /// Number of samples currently in the window.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no samples have been pushed.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// True when the window holds `cap` samples.
+    pub fn is_full(&self) -> bool {
+        self.len == self.cap
+    }
+
+    /// Mean of the current window (`None` when empty).
+    pub fn mean(&self) -> Option<f64> {
+        if self.len == 0 {
+            None
+        } else {
+            Some(self.sum / self.len as f64)
+        }
+    }
+
+    /// Change the window capacity, keeping the most recent samples.
+    /// Used when the learner's dynamic window `L = c/(1−α̂)` changes.
+    pub fn resize(&mut self, new_cap: usize) {
+        assert!(new_cap >= 1);
+        if new_cap == self.cap {
+            return;
+        }
+        let keep = self.len.min(new_cap);
+        let mut recent = Vec::with_capacity(keep);
+        // Oldest-to-newest order of the kept suffix.
+        for k in (0..keep).rev() {
+            let idx = (self.head + self.cap - 1 - k) % self.cap;
+            recent.push(self.buf[idx]);
+        }
+        self.buf = vec![0.0; new_cap];
+        self.cap = new_cap;
+        self.head = 0;
+        self.len = 0;
+        self.sum = 0.0;
+        for x in recent {
+            self.push(x);
+        }
+    }
+
+    /// Drop all samples.
+    pub fn clear(&mut self) {
+        self.head = 0;
+        self.len = 0;
+        self.sum = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_first_sample_is_exact() {
+        let mut e = Ewma::new(0.3);
+        assert_eq!(e.update(10.0), 10.0);
+    }
+
+    #[test]
+    fn ewma_converges_to_constant() {
+        let mut e = Ewma::new(0.2);
+        for _ in 0..200 {
+            e.update(5.0);
+        }
+        assert!((e.value().unwrap() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ewma_tracks_step_change() {
+        let mut e = Ewma::new(0.5);
+        for _ in 0..50 {
+            e.update(1.0);
+        }
+        for _ in 0..20 {
+            e.update(3.0);
+        }
+        assert!((e.value().unwrap() - 3.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn ewma_reset() {
+        let mut e = Ewma::new(0.5);
+        e.update(1.0);
+        e.reset();
+        assert!(e.value().is_none());
+        assert_eq!(e.value_or(7.0), 7.0);
+    }
+
+    #[test]
+    fn sliding_mean_partial_window() {
+        let mut w = SlidingMean::new(4);
+        assert!(w.mean().is_none());
+        w.push(2.0);
+        w.push(4.0);
+        assert_eq!(w.mean(), Some(3.0));
+        assert_eq!(w.len(), 2);
+        assert!(!w.is_full());
+    }
+
+    #[test]
+    fn sliding_mean_evicts_oldest() {
+        let mut w = SlidingMean::new(3);
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            w.push(x);
+        }
+        // Window now holds [2, 3, 4].
+        assert_eq!(w.mean(), Some(3.0));
+        assert!(w.is_full());
+    }
+
+    #[test]
+    fn sliding_mean_long_stream_no_drift() {
+        let mut w = SlidingMean::new(10);
+        for i in 0..100_000 {
+            w.push((i % 7) as f64);
+        }
+        let expect: f64 = (99_990..100_000).map(|i| (i % 7) as f64).sum::<f64>() / 10.0;
+        assert!((w.mean().unwrap() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resize_grow_keeps_samples() {
+        let mut w = SlidingMean::new(2);
+        w.push(1.0);
+        w.push(2.0);
+        w.resize(4);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.mean(), Some(1.5));
+        w.push(3.0);
+        w.push(4.0);
+        assert_eq!(w.mean(), Some(2.5));
+    }
+
+    #[test]
+    fn resize_shrink_keeps_most_recent() {
+        let mut w = SlidingMean::new(4);
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            w.push(x);
+        }
+        w.resize(2);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.mean(), Some(3.5)); // keeps [3, 4]
+    }
+
+    #[test]
+    fn clear_empties_window() {
+        let mut w = SlidingMean::new(3);
+        w.push(9.0);
+        w.clear();
+        assert!(w.mean().is_none());
+        assert_eq!(w.len(), 0);
+    }
+}

@@ -1,0 +1,359 @@
+//! Log-bucketed latency histogram (an HDR-histogram-lite).
+//!
+//! Response-time distributions in the paper span three orders of magnitude
+//! (tens of ms to multiple seconds, Figure 8). Storing every sample is fine
+//! for offline experiments, but the live coordinator needs bounded-memory
+//! recording on the hot path; this histogram gives ~2.5% relative error with
+//! a few KB of state and O(1) inserts.
+
+/// Histogram with logarithmically spaced buckets over `(0, +inf)`.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    /// Left edge of the first bucket (values below land in bucket 0).
+    min_value: f64,
+    /// Multiplicative bucket width, e.g. 1.05 for ~2.5% median error.
+    growth: f64,
+    /// ln(growth), cached.
+    inv_ln_growth: f64,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    max_seen: f64,
+}
+
+impl LogHistogram {
+    /// Create a histogram covering `[min_value, max_value]` with the given
+    /// per-bucket growth factor.
+    pub fn new(min_value: f64, max_value: f64, growth: f64) -> Self {
+        assert!(min_value > 0.0 && max_value > min_value && growth > 1.0);
+        let nbuckets = ((max_value / min_value).ln() / growth.ln()).ceil() as usize + 2;
+        Self {
+            min_value,
+            growth,
+            inv_ln_growth: 1.0 / growth.ln(),
+            counts: vec![0; nbuckets],
+            total: 0,
+            sum: 0.0,
+            max_seen: 0.0,
+        }
+    }
+
+    /// Default latency histogram: 0.1 ms .. 1000 s, 5% buckets.
+    pub fn latency() -> Self {
+        Self::new(1e-4, 1e3, 1.05)
+    }
+
+    #[inline]
+    fn bucket_of(&self, v: f64) -> usize {
+        if v <= self.min_value {
+            return 0;
+        }
+        let b = ((v / self.min_value).ln() * self.inv_ln_growth) as usize + 1;
+        b.min(self.counts.len() - 1)
+    }
+
+    /// Representative (geometric-mean) value of a bucket.
+    fn bucket_value(&self, b: usize) -> f64 {
+        if b == 0 {
+            return self.min_value;
+        }
+        self.min_value * self.growth.powf(b as f64 - 0.5)
+    }
+
+    /// Record one sample. O(1).
+    #[inline]
+    pub fn record(&mut self, v: f64) {
+        debug_assert!(v.is_finite() && v >= 0.0, "bad sample {v}");
+        let b = self.bucket_of(v);
+        self.counts[b] += 1;
+        self.total += 1;
+        self.sum += v;
+        if v > self.max_seen {
+            self.max_seen = v;
+        }
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Exact running mean.
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Largest recorded sample (exact).
+    pub fn max(&self) -> f64 {
+        self.max_seen
+    }
+
+    /// Approximate quantile `q ∈ [0, 1]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.bucket_value(b);
+            }
+        }
+        self.max_seen
+    }
+
+    /// Merge another histogram with identical geometry.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        assert_eq!(self.counts.len(), other.counts.len(), "geometry mismatch");
+        assert!((self.growth - other.growth).abs() < 1e-12);
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max_seen = self.max_seen.max(other.max_seen);
+    }
+
+    /// CCDF series `(value, P[X > value])` — the curve in Figure 8.
+    pub fn ccdf(&self) -> Vec<(f64, f64)> {
+        let mut out = Vec::new();
+        if self.total == 0 {
+            return out;
+        }
+        let mut above = self.total;
+        for (b, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            above -= c;
+            out.push((self.bucket_value(b), above as f64 / self.total as f64));
+        }
+        out
+    }
+
+    /// PDF series `(value, fraction)` over non-empty buckets.
+    pub fn pdf(&self) -> Vec<(f64, f64)> {
+        let mut out = Vec::new();
+        if self.total == 0 {
+            return out;
+        }
+        for (b, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                out.push((self.bucket_value(b), c as f64 / self.total as f64));
+            }
+        }
+        out
+    }
+
+    /// Reset all counters, keeping geometry.
+    pub fn clear(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.total = 0;
+        self.sum = 0.0;
+        self.max_seen = 0.0;
+    }
+}
+
+/// Dense histogram over small non-negative integers — queue lengths
+/// (Figure 13 plots queue-length distributions per worker).
+#[derive(Debug, Clone, Default)]
+pub struct IntHistogram {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl IntHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one observation of value `v`.
+    pub fn record(&mut self, v: usize) {
+        if v >= self.counts.len() {
+            self.counts.resize(v + 1, 0);
+        }
+        self.counts[v] += 1;
+        self.total += 1;
+    }
+
+    /// Record `v` with multiplicity `w` (used for time-weighted sampling).
+    pub fn record_weighted(&mut self, v: usize, w: u64) {
+        if v >= self.counts.len() {
+            self.counts.resize(v + 1, 0);
+        }
+        self.counts[v] += w;
+        self.total += w;
+    }
+
+    /// Total weight recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Normalized distribution `P[X = k]` for `k = 0..`.
+    pub fn pmf(&self) -> Vec<f64> {
+        if self.total == 0 {
+            return Vec::new();
+        }
+        self.counts.iter().map(|&c| c as f64 / self.total as f64).collect()
+    }
+
+    /// Mean value.
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(v, &c)| v as f64 * c as f64)
+            .sum::<f64>()
+            / self.total as f64
+    }
+
+    /// Largest value with non-zero count.
+    pub fn max(&self) -> usize {
+        self.counts.iter().rposition(|&c| c > 0).unwrap_or(0)
+    }
+
+    /// Fraction of mass at or above `k` (tail weight).
+    pub fn tail(&self, k: usize) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let above: u64 = self.counts.iter().skip(k).sum();
+        above as f64 / self.total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_of_known_distribution() {
+        let mut h = LogHistogram::latency();
+        for i in 1..=1000 {
+            h.record(i as f64 / 1000.0); // 1ms .. 1s uniform
+        }
+        let q50 = h.quantile(0.5);
+        assert!((q50 - 0.5).abs() / 0.5 < 0.06, "q50={q50}");
+        let q95 = h.quantile(0.95);
+        assert!((q95 - 0.95).abs() / 0.95 < 0.06, "q95={q95}");
+    }
+
+    #[test]
+    fn mean_is_exact() {
+        let mut h = LogHistogram::latency();
+        h.record(0.1);
+        h.record(0.3);
+        assert!((h.mean() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_is_exact() {
+        let mut h = LogHistogram::latency();
+        h.record(0.42);
+        h.record(7.5);
+        assert_eq!(h.max(), 7.5);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = LogHistogram::latency();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert!(h.ccdf().is_empty());
+    }
+
+    #[test]
+    fn out_of_range_values_clamped() {
+        let mut h = LogHistogram::new(1.0, 10.0, 1.5);
+        h.record(0.001); // below range -> bucket 0
+        h.record(1e9); // above range -> last bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(1.0) >= 10.0 || h.max() == 1e9);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = LogHistogram::latency();
+        let mut b = LogHistogram::latency();
+        for i in 1..=100 {
+            a.record(i as f64 * 1e-3);
+            b.record(i as f64 * 2e-3);
+        }
+        let mean_before = (a.mean() * 100.0 + b.mean() * 100.0) / 200.0;
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert!((a.mean() - mean_before).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ccdf_is_monotone_decreasing() {
+        let mut h = LogHistogram::latency();
+        let mut x = 0.001;
+        for _ in 0..500 {
+            h.record(x);
+            x *= 1.01;
+        }
+        let c = h.ccdf();
+        for w in c.windows(2) {
+            assert!(w[1].1 <= w[0].1);
+            assert!(w[1].0 >= w[0].0);
+        }
+        assert!((c[0].1 - 1.0).abs() < 0.05);
+        assert!(c.last().unwrap().1 < 0.01);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut h = LogHistogram::latency();
+        h.record(1.0);
+        h.clear();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn int_histogram_pmf() {
+        let mut h = IntHistogram::new();
+        for v in [0, 0, 1, 2, 2, 2] {
+            h.record(v);
+        }
+        let p = h.pmf();
+        assert!((p[0] - 2.0 / 6.0).abs() < 1e-12);
+        assert!((p[1] - 1.0 / 6.0).abs() < 1e-12);
+        assert!((p[2] - 3.0 / 6.0).abs() < 1e-12);
+        assert_eq!(h.max(), 2);
+        assert!((h.mean() - 7.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn int_histogram_tail() {
+        let mut h = IntHistogram::new();
+        for v in 0..10 {
+            h.record(v);
+        }
+        assert!((h.tail(5) - 0.5).abs() < 1e-12);
+        assert_eq!(h.tail(0), 1.0);
+        assert_eq!(h.tail(100), 0.0);
+    }
+
+    #[test]
+    fn int_histogram_weighted() {
+        let mut h = IntHistogram::new();
+        h.record_weighted(3, 10);
+        h.record_weighted(1, 30);
+        assert_eq!(h.count(), 40);
+        assert!((h.mean() - (30.0 + 30.0) / 40.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,20 @@
+//! Statistical substrate: PRNG, distributions, O(1) multinomial sampling,
+//! descriptive statistics, histograms, and moving averages.
+//!
+//! None of the usual crates (`rand`, `rand_distr`, `hdrhistogram`) are
+//! available in this offline build, so everything the paper's model needs is
+//! implemented and tested here from first principles.
+
+pub mod alias;
+pub mod descriptive;
+pub mod dist;
+pub mod ewma;
+pub mod histogram;
+pub mod rng;
+
+pub use alias::AliasTable;
+pub use descriptive::{linreg_slope, mean, percentile, stddev, variance, FiveNum, Summary};
+pub use dist::{Exponential, Poisson, Zipf};
+pub use ewma::{Ewma, SlidingMean};
+pub use histogram::{IntHistogram, LogHistogram};
+pub use rng::{Rng, SplitMix64};

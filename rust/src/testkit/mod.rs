@@ -1,0 +1,159 @@
+//! Minimal property-based testing harness (proptest is unavailable
+//! offline).
+//!
+//! A property is a predicate over randomly generated inputs; `prop_check`
+//! runs it many times and, on failure, retries with "smaller" inputs from
+//! the same generator seed family to report a near-minimal counterexample
+//! (shrink-lite: generators take a `size` hint that failure reporting
+//! walks downward).
+
+use crate::stats::Rng;
+
+/// Generation context handed to generators/properties.
+pub struct Gen<'a> {
+    /// RNG for this case.
+    pub rng: &'a mut Rng,
+    /// Size hint in [1, 100]; generators should scale their output with it.
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    /// Integer in `[lo, hi]` scaled-ish by size.
+    pub fn int_in(&mut self, lo: usize, hi: usize) -> usize {
+        let span = hi - lo + 1;
+        lo + self.rng.gen_index(span)
+    }
+
+    /// A float in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.gen_range_f64(lo, hi)
+    }
+
+    /// A vector with size-scaled length in `[1, max_len]` of generated
+    /// elements.
+    pub fn vec_of<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let cap = ((max_len * self.size) / 100).max(1);
+        let len = 1 + self.rng.gen_index(cap);
+        (0..len)
+            .map(|_| {
+                let mut g = Gen { rng: self.rng, size: self.size };
+                f(&mut g)
+            })
+            .collect()
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum PropResult {
+    /// All cases passed.
+    Ok { cases: usize },
+    /// A counterexample was found.
+    Failed { seed: u64, size: usize, message: String },
+}
+
+/// Run `prop` over `cases` random cases. The property returns
+/// `Err(description)` to signal failure. On failure, smaller sizes with
+/// the same case seed are tried first and the smallest failing size is
+/// reported.
+pub fn prop_check(
+    seed: u64,
+    cases: usize,
+    prop: impl Fn(&mut Gen) -> Result<(), String>,
+) -> PropResult {
+    let mut seeder = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = seeder.next_u64();
+        let size = 1 + (case * 100) / cases.max(1); // ramp sizes 1..=100
+        let run = |size: usize| -> Result<(), String> {
+            let mut rng = Rng::new(case_seed);
+            let mut g = Gen { rng: &mut rng, size };
+            prop(&mut g)
+        };
+        if let Err(first_msg) = run(size) {
+            // Shrink-lite: find the smallest failing size for this seed.
+            let mut best = (size, first_msg);
+            let mut s = size / 2;
+            while s >= 1 {
+                match run(s) {
+                    Err(m) => {
+                        best = (s, m);
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            return PropResult::Failed { seed: case_seed, size: best.0, message: best.1 };
+        }
+    }
+    PropResult::Ok { cases }
+}
+
+/// Assert a property holds (for use inside `#[test]`).
+pub fn assert_prop(name: &str, seed: u64, cases: usize, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    match prop_check(seed, cases, prop) {
+        PropResult::Ok { .. } => {}
+        PropResult::Failed { seed, size, message } => {
+            panic!("property '{name}' failed (case_seed={seed}, size={size}): {message}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let r = prop_check(1, 50, |g| {
+            let v = g.vec_of(64, |g| g.f64_in(0.0, 1.0));
+            if v.iter().all(|x| (0.0..1.0).contains(x)) {
+                Ok(())
+            } else {
+                Err("range".into())
+            }
+        });
+        assert!(matches!(r, PropResult::Ok { cases: 50 }));
+    }
+
+    #[test]
+    fn failing_property_reports_small_size() {
+        // Fails whenever the vector is non-empty — size 1 must be found.
+        let r = prop_check(2, 50, |g| {
+            let v = g.vec_of(64, |g| g.int_in(0, 9));
+            if v.is_empty() {
+                Ok(())
+            } else {
+                Err(format!("len={}", v.len()))
+            }
+        });
+        match r {
+            PropResult::Failed { size, .. } => assert_eq!(size, 1),
+            other => panic!("expected failure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn failures_are_reproducible() {
+        let fails_over_half = |g: &mut Gen| -> Result<(), String> {
+            let x = g.f64_in(0.0, 1.0);
+            if x < 0.5 {
+                Ok(())
+            } else {
+                Err(format!("x={x}"))
+            }
+        };
+        let a = prop_check(3, 100, fails_over_half);
+        let b = prop_check(3, 100, fails_over_half);
+        match (a, b) {
+            (
+                PropResult::Failed { seed: s1, .. },
+                PropResult::Failed { seed: s2, .. },
+            ) => assert_eq!(s1, s2),
+            other => panic!("expected two identical failures, got {other:?}"),
+        }
+    }
+}

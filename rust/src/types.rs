@@ -1,0 +1,199 @@
+//! Core domain types shared by the simulator, the schedulers, the learner,
+//! and the live coordinator.
+//!
+//! Terminology follows the paper (§2, footnote 2, after Sparrow's
+//! convention): a **task** is the minimum compute unit; a **job** contains
+//! one or more tasks; the **response time** of a job is the interval between
+//! its arrival at the scheduler and the completion of its *last* task.
+
+/// Dense worker identifier, `0..n`.
+pub type WorkerId = usize;
+
+/// Monotonic job identifier.
+pub type JobId = u64;
+
+/// Monotonic task identifier (unique across jobs).
+pub type TaskId = u64;
+
+/// Whether a task is real workload or a learner-injected benchmark
+/// ("fake") job. Benchmark tasks are strictly lower priority at the worker
+/// (paper §5: node monitors keep two queues).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// A task of a user-submitted job; counts toward response-time metrics.
+    Real,
+    /// A learner benchmark job; excluded from response-time metrics, used
+    /// only to produce service-time samples for the performance learner.
+    Benchmark,
+}
+
+/// Static description of one task before placement.
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    /// Service *demand* in seconds of unit-speed work. A worker with speed
+    /// `s` serves this task in `demand / s` seconds. (§6.2: demands are
+    /// exponential with mean 100 ms; worker `j` sleeps `τ_i / μ_j`.)
+    pub demand: f64,
+    /// A constrained task must run on this specific backend; the scheduler
+    /// has no placement freedom for it (§6.1: TPC-H has ~2k constrained
+    /// tasks out of >30k).
+    pub constrained_to: Option<WorkerId>,
+}
+
+impl TaskSpec {
+    /// Unconstrained task with the given demand.
+    pub fn new(demand: f64) -> Self {
+        Self { demand, constrained_to: None }
+    }
+
+    /// Constrained task pinned to `worker`.
+    pub fn pinned(demand: f64, worker: WorkerId) -> Self {
+        Self { demand, constrained_to: Some(worker) }
+    }
+}
+
+/// Static description of one job (a set of tasks arriving together).
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Tasks in this job.
+    pub tasks: Vec<TaskSpec>,
+}
+
+impl JobSpec {
+    /// Build a job from task specs. Panics on empty jobs.
+    pub fn new(tasks: Vec<TaskSpec>) -> Self {
+        assert!(!tasks.is_empty(), "job must contain at least one task");
+        Self { tasks }
+    }
+
+    /// Single-task job with the given demand (the theoretical model of §4).
+    pub fn single(demand: f64) -> Self {
+        Self::new(vec![TaskSpec::new(demand)])
+    }
+
+    /// Number of tasks.
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Always false (jobs are non-empty by construction).
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Number of unconstrained tasks (the ones the policy may place).
+    pub fn unconstrained(&self) -> usize {
+        self.tasks.iter().filter(|t| t.constrained_to.is_none()).count()
+    }
+
+    /// Total service demand of the job.
+    pub fn total_demand(&self) -> f64 {
+        self.tasks.iter().map(|t| t.demand).sum()
+    }
+}
+
+/// A concrete task instance in flight.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub id: TaskId,
+    pub job: JobId,
+    pub kind: TaskKind,
+    pub demand: f64,
+    /// Simulation/wall time at which the owning job arrived.
+    pub arrival: f64,
+}
+
+/// How a policy wants a job's unconstrained tasks placed.
+#[derive(Debug, Clone)]
+pub enum JobPlacement {
+    /// Fast path for single-task jobs (the dominant case in serving
+    /// workloads): no allocation per decision.
+    Single(WorkerId),
+    /// Direct placement: `workers[k]` receives the k-th unconstrained task.
+    PerTask(Vec<WorkerId>),
+    /// Late binding (Sparrow §5 / [7]): enqueue lightweight reservations at
+    /// `workers`; each worker, upon reaching a reservation, pulls the next
+    /// unlaunched task of the job from the scheduler. Extra reservations are
+    /// cancelled implicitly when the job runs dry.
+    Reservations(Vec<WorkerId>),
+}
+
+/// Read-only view of cluster state offered to scheduling policies.
+///
+/// Policies may inspect queue lengths (a probe in the real system) and the
+/// current speed estimates. They must not see true speeds unless the
+/// experiment grants an oracle (Halo, the "speeds known" settings of §6.2).
+pub struct ClusterView<'a> {
+    /// Queue length (queued entries + in-service task) per worker.
+    pub queue_len: &'a [usize],
+    /// Current speed estimates μ̂ published by the learner (or true speeds
+    /// in oracle mode).
+    pub mu_hat: &'a [f64],
+    /// O(1) proportional sampler over `mu_hat` (rebuilt on publish).
+    pub sampler: &'a crate::stats::AliasTable,
+    /// Current arrival-rate estimate λ̂ in tasks/second (the arrival
+    /// estimator of §3.3); oracle policies such as Halo use it to compute
+    /// routing probabilities.
+    pub lambda_hat: f64,
+}
+
+impl<'a> ClusterView<'a> {
+    /// Number of workers.
+    pub fn n(&self) -> usize {
+        self.queue_len.len()
+    }
+
+    /// Expected waiting time proxy for LL(2): (queue length + 1) / μ̂.
+    /// Workers with a zero estimate are treated as infinitely slow.
+    pub fn expected_wait(&self, w: WorkerId) -> f64 {
+        let mu = self.mu_hat[w];
+        if mu <= 0.0 {
+            f64::INFINITY
+        } else {
+            (self.queue_len[w] + 1) as f64 / mu
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::AliasTable;
+
+    #[test]
+    fn job_spec_accessors() {
+        let j = JobSpec::new(vec![
+            TaskSpec::new(0.1),
+            TaskSpec::pinned(0.2, 3),
+            TaskSpec::new(0.3),
+        ]);
+        assert_eq!(j.len(), 3);
+        assert_eq!(j.unconstrained(), 2);
+        assert!((j.total_demand() - 0.6).abs() < 1e-12);
+        assert!(!j.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_job_rejected() {
+        JobSpec::new(vec![]);
+    }
+
+    #[test]
+    fn single_task_job() {
+        let j = JobSpec::single(0.5);
+        assert_eq!(j.len(), 1);
+        assert_eq!(j.tasks[0].constrained_to, None);
+    }
+
+    #[test]
+    fn expected_wait_uses_estimates() {
+        let q = [2usize, 2];
+        let mu = [2.0, 0.0];
+        let t = AliasTable::new(&mu);
+        let view = ClusterView { queue_len: &q, mu_hat: &mu, sampler: &t, lambda_hat: 1.0 };
+        assert!((view.expected_wait(0) - 1.5).abs() < 1e-12);
+        assert!(view.expected_wait(1).is_infinite());
+        assert_eq!(view.n(), 2);
+    }
+}

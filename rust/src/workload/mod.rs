@@ -1,0 +1,93 @@
+//! Workload generation: the paper's synthetic sleep-task workload (§6.2)
+//! and a TPC-H-shaped multi-task trace (§6.1).
+//!
+//! A workload supplies (a) exponential job inter-arrival gaps calibrated to
+//! a target load ratio α and (b) job specs (task counts, per-task demands,
+//! placement constraints). The target arrival rate is
+//! `λ_tasks = α · Σ s_i / τ̄` where `Σ s_i` is the cluster's total speed and
+//! τ̄ the mean task demand; a job of `m̄` tasks on average then arrives at
+//! rate `λ_tasks / m̄`.
+
+pub mod synthetic;
+pub mod tpch;
+
+pub use synthetic::SyntheticWorkload;
+pub use tpch::TpchWorkload;
+
+use crate::stats::Rng;
+use crate::types::JobSpec;
+
+/// A stream of jobs with Poisson arrivals.
+pub trait Workload: Send {
+    /// Human-readable name.
+    fn name(&self) -> String;
+    /// Sample the gap until the next job arrival (seconds).
+    fn next_gap(&mut self, rng: &mut Rng) -> f64;
+    /// Sample the next job.
+    fn next_job(&mut self, rng: &mut Rng) -> JobSpec;
+    /// Mean task demand τ̄ (unit-speed seconds) — used by the learner and
+    /// the benchmark-job generator ("benchmark jobs shall resemble recent
+    /// workloads", §3.2).
+    fn mean_demand(&self) -> f64;
+    /// Sample a benchmark-task demand resembling the workload.
+    fn benchmark_demand(&mut self, rng: &mut Rng) -> f64;
+    /// Target task arrival rate λ (tasks/sec) the stream was calibrated to.
+    fn lambda_tasks(&self) -> f64;
+}
+
+/// Workload selector for configs/CLI.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadKind {
+    /// §6.2: single-task sleep jobs, demand ~ Exp(mean 100 ms).
+    Synthetic,
+    /// §6.1: TPC-H-shaped stages with constrained and unconstrained tasks.
+    /// `query` selects the stage-shape mix ("q3" or "q6").
+    Tpch { query: tpch::Query },
+}
+
+impl WorkloadKind {
+    /// Build the workload for a cluster of `n_workers` with total speed
+    /// `total_speed` at target load `load`.
+    pub fn build(&self, load: f64, total_speed: f64, n_workers: usize) -> Box<dyn Workload> {
+        match self {
+            WorkloadKind::Synthetic => {
+                Box::new(SyntheticWorkload::new(load, total_speed, 0.1))
+            }
+            WorkloadKind::Tpch { query } => {
+                Box::new(TpchWorkload::with_workers(*query, load, total_speed, n_workers))
+            }
+        }
+    }
+
+    /// Parse `synthetic`, `tpch:q3`, `tpch:q6`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "synthetic" | "sleep" => Ok(WorkloadKind::Synthetic),
+            "tpch:q3" => Ok(WorkloadKind::Tpch { query: tpch::Query::Q3 }),
+            "tpch:q6" => Ok(WorkloadKind::Tpch { query: tpch::Query::Q6 }),
+            other => Err(format!("unknown workload '{other}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(WorkloadKind::parse("synthetic").unwrap(), WorkloadKind::Synthetic);
+        assert_eq!(
+            WorkloadKind::parse("tpch:q3").unwrap(),
+            WorkloadKind::Tpch { query: tpch::Query::Q3 }
+        );
+        assert!(WorkloadKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn build_calibrates_lambda() {
+        let w = WorkloadKind::Synthetic.build(0.8, 13.5, 15);
+        // λ_tasks = 0.8 · 13.5 / 0.1 = 108 tasks/s.
+        assert!((w.lambda_tasks() - 108.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,137 @@
+//! Synthetic sleep-task workload (§6.2).
+//!
+//! Jobs arrive as a Poisson process; each job contains a configurable
+//! number of tasks (one in the paper's theoretical model, §4). The
+//! processing demand of the i-th task is `τ_i ~ Exp(mean 100 ms)`; worker
+//! `j` serves it in `τ_i / μ_j` seconds — exactly the paper's sleep-task
+//! setup.
+
+use super::Workload;
+use crate::stats::{Exponential, Rng};
+use crate::types::{JobSpec, TaskSpec};
+
+/// Exponential-demand, Poisson-arrival workload.
+#[derive(Debug, Clone)]
+pub struct SyntheticWorkload {
+    gap: Exponential,
+    demand: Exponential,
+    mean_demand: f64,
+    lambda_tasks: f64,
+    tasks_per_job: usize,
+}
+
+impl SyntheticWorkload {
+    /// Calibrate to load ratio `load` on a cluster with total speed
+    /// `total_speed`; task demands are exponential with mean `mean_demand`
+    /// seconds (0.1 in the paper). Single-task jobs.
+    pub fn new(load: f64, total_speed: f64, mean_demand: f64) -> Self {
+        Self::with_tasks_per_job(load, total_speed, mean_demand, 1)
+    }
+
+    /// Multi-task variant: each job has exactly `tasks_per_job` tasks.
+    pub fn with_tasks_per_job(
+        load: f64,
+        total_speed: f64,
+        mean_demand: f64,
+        tasks_per_job: usize,
+    ) -> Self {
+        assert!(load > 0.0 && total_speed > 0.0 && mean_demand > 0.0 && tasks_per_job >= 1);
+        let lambda_tasks = load * total_speed / mean_demand;
+        let lambda_jobs = lambda_tasks / tasks_per_job as f64;
+        Self {
+            gap: Exponential::new(lambda_jobs),
+            demand: Exponential::with_mean(mean_demand),
+            mean_demand,
+            lambda_tasks,
+            tasks_per_job,
+        }
+    }
+}
+
+impl Workload for SyntheticWorkload {
+    fn name(&self) -> String {
+        if self.tasks_per_job == 1 {
+            "synthetic".into()
+        } else {
+            format!("synthetic-m{}", self.tasks_per_job)
+        }
+    }
+
+    fn next_gap(&mut self, rng: &mut Rng) -> f64 {
+        self.gap.sample(rng)
+    }
+
+    fn next_job(&mut self, rng: &mut Rng) -> JobSpec {
+        JobSpec::new(
+            (0..self.tasks_per_job).map(|_| TaskSpec::new(self.demand.sample(rng))).collect(),
+        )
+    }
+
+    fn mean_demand(&self) -> f64 {
+        self.mean_demand
+    }
+
+    fn benchmark_demand(&mut self, rng: &mut Rng) -> f64 {
+        self.demand.sample(rng)
+    }
+
+    fn lambda_tasks(&self) -> f64 {
+        self.lambda_tasks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_matches_load() {
+        // 15 workers of mean speed 0.9 -> total 13.5; α = 0.9.
+        let w = SyntheticWorkload::new(0.9, 13.5, 0.1);
+        assert!((w.lambda_tasks() - 121.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empirical_arrival_rate() {
+        let mut w = SyntheticWorkload::new(0.5, 10.0, 0.1);
+        let mut rng = Rng::new(1);
+        let n = 100_000;
+        let total: f64 = (0..n).map(|_| w.next_gap(&mut rng)).sum();
+        let rate = n as f64 / total;
+        assert!((rate - 50.0).abs() < 1.0, "rate={rate}");
+    }
+
+    #[test]
+    fn demands_have_configured_mean() {
+        let mut w = SyntheticWorkload::new(0.5, 10.0, 0.1);
+        let mut rng = Rng::new(2);
+        let n = 100_000;
+        let mean: f64 =
+            (0..n).map(|_| w.next_job(&mut rng).tasks[0].demand).sum::<f64>() / n as f64;
+        assert!((mean - 0.1).abs() < 0.002, "mean={mean}");
+        assert!((w.mean_demand() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn benchmark_demand_resembles_workload() {
+        let mut w = SyntheticWorkload::new(0.5, 10.0, 0.1);
+        let mut rng = Rng::new(3);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| w.benchmark_demand(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 0.1).abs() < 0.003, "mean={mean}");
+    }
+
+    #[test]
+    fn multi_task_jobs() {
+        let mut w = SyntheticWorkload::with_tasks_per_job(0.5, 10.0, 0.1, 4);
+        let mut rng = Rng::new(4);
+        let j = w.next_job(&mut rng);
+        assert_eq!(j.len(), 4);
+        assert_eq!(j.unconstrained(), 4);
+        // Job rate is a quarter of the task rate.
+        let n = 50_000;
+        let total: f64 = (0..n).map(|_| w.next_gap(&mut rng)).sum();
+        let job_rate = n as f64 / total;
+        assert!((job_rate - 12.5).abs() < 0.5, "job_rate={job_rate}");
+    }
+}

@@ -1,0 +1,276 @@
+//! TPC-H-shaped workload (§6.1).
+//!
+//! The paper runs TPC-H queries q3 and q6 through Shark, which compiles each
+//! query into Spark *stages*; each stage is one job of many tasks. We do not
+//! need the SQL engine — the scheduler only observes the stage/task
+//! structure — so this module generates a trace with the same shape:
+//!
+//! * q6 is a single-scan query: stages are wide (many short map tasks);
+//! * q3 is a 3-way join: a mix of wide scan stages and narrower
+//!   join/aggregate stages with more skewed task durations;
+//! * a small fraction of tasks are *constrained* to a specific backend
+//!   (§6.1: ~2k constrained of >30k total, i.e. ≈6%) — for these, "the
+//!   PPoT scheduling policy is disabled";
+//! * task demands are exponential around a per-stage mean, giving the
+//!   intra-stage variability that makes late binding matter.
+//!
+//! The substitution is documented in DESIGN.md §2.
+
+use super::Workload;
+use crate::stats::{Exponential, Rng};
+use crate::types::{JobSpec, TaskSpec};
+
+/// Which TPC-H query shape to emit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Query {
+    /// Join-heavy: mixed wide/narrow stages, skewed demands.
+    Q3,
+    /// Scan-heavy: wide uniform stages.
+    Q6,
+}
+
+/// One stage archetype: (weight, min_tasks, max_tasks, mean_demand_secs).
+#[derive(Debug, Clone, Copy)]
+struct StageShape {
+    weight: f64,
+    min_tasks: usize,
+    max_tasks: usize,
+    mean_demand: f64,
+}
+
+/// TPC-H-shaped stage trace generator.
+#[derive(Debug, Clone)]
+pub struct TpchWorkload {
+    query: Query,
+    shapes: Vec<StageShape>,
+    cum_weights: Vec<f64>,
+    gap: Exponential,
+    mean_demand: f64,
+    mean_tasks: f64,
+    lambda_tasks: f64,
+    /// Fraction of tasks pinned to a fixed backend.
+    constrained_frac: f64,
+    /// Number of backends (for constrained placement).
+    n_workers: usize,
+}
+
+impl TpchWorkload {
+    /// Build a trace calibrated to `load` on total cluster speed
+    /// `total_speed`. Worker count defaults to 30 (the paper's cluster);
+    /// use [`with_workers`](Self::with_workers) to override.
+    pub fn new(query: Query, load: f64, total_speed: f64) -> Self {
+        Self::with_workers(query, load, total_speed, 30)
+    }
+
+    /// Build with an explicit backend count for constrained placement.
+    pub fn with_workers(query: Query, load: f64, total_speed: f64, n_workers: usize) -> Self {
+        assert!(load > 0.0 && total_speed > 0.0 && n_workers > 0);
+        let shapes: Vec<StageShape> = match query {
+            // q3: scan lineitem + scan orders/customer + join/agg stages.
+            Query::Q3 => vec![
+                StageShape { weight: 0.35, min_tasks: 8, max_tasks: 24, mean_demand: 0.12 },
+                StageShape { weight: 0.35, min_tasks: 4, max_tasks: 12, mean_demand: 0.08 },
+                StageShape { weight: 0.20, min_tasks: 2, max_tasks: 8, mean_demand: 0.20 },
+                StageShape { weight: 0.10, min_tasks: 1, max_tasks: 4, mean_demand: 0.05 },
+            ],
+            // q6: one wide scan stage shape + a tiny aggregate stage.
+            Query::Q6 => vec![
+                StageShape { weight: 0.80, min_tasks: 8, max_tasks: 32, mean_demand: 0.10 },
+                StageShape { weight: 0.20, min_tasks: 1, max_tasks: 4, mean_demand: 0.04 },
+            ],
+        };
+        let total_w: f64 = shapes.iter().map(|s| s.weight).sum();
+        let mut cum = 0.0;
+        let cum_weights: Vec<f64> = shapes
+            .iter()
+            .map(|s| {
+                cum += s.weight / total_w;
+                cum
+            })
+            .collect();
+        // Expected tasks/stage and demand/task for calibration.
+        let mean_tasks: f64 = shapes
+            .iter()
+            .map(|s| s.weight / total_w * (s.min_tasks + s.max_tasks) as f64 / 2.0)
+            .sum();
+        let mean_demand: f64 = shapes
+            .iter()
+            .map(|s| {
+                s.weight / total_w * (s.min_tasks + s.max_tasks) as f64 / 2.0 * s.mean_demand
+            })
+            .sum::<f64>()
+            / mean_tasks;
+        let lambda_tasks = load * total_speed / mean_demand;
+        let lambda_jobs = lambda_tasks / mean_tasks;
+        Self {
+            query,
+            shapes,
+            cum_weights,
+            gap: Exponential::new(lambda_jobs),
+            mean_demand,
+            mean_tasks,
+            lambda_tasks,
+            constrained_frac: 2_000.0 / 32_000.0, // §6.1: 2k of >30k tasks
+            n_workers,
+        }
+    }
+
+    /// Mean number of tasks per stage.
+    pub fn mean_tasks(&self) -> f64 {
+        self.mean_tasks
+    }
+
+    fn pick_shape(&self, rng: &mut Rng) -> StageShape {
+        let u = rng.next_f64();
+        for (i, &c) in self.cum_weights.iter().enumerate() {
+            if u <= c {
+                return self.shapes[i];
+            }
+        }
+        *self.shapes.last().unwrap()
+    }
+}
+
+impl Workload for TpchWorkload {
+    fn name(&self) -> String {
+        match self.query {
+            Query::Q3 => "tpch-q3".into(),
+            Query::Q6 => "tpch-q6".into(),
+        }
+    }
+
+    fn next_gap(&mut self, rng: &mut Rng) -> f64 {
+        self.gap.sample(rng)
+    }
+
+    fn next_job(&mut self, rng: &mut Rng) -> JobSpec {
+        let shape = self.pick_shape(rng);
+        let span = shape.max_tasks - shape.min_tasks;
+        let m = shape.min_tasks + if span > 0 { rng.gen_index(span + 1) } else { 0 };
+        let demand = Exponential::with_mean(shape.mean_demand);
+        JobSpec::new(
+            (0..m)
+                .map(|_| {
+                    let d = demand.sample(rng).max(1e-6);
+                    if rng.gen_bool(self.constrained_frac) {
+                        TaskSpec::pinned(d, rng.gen_index(self.n_workers))
+                    } else {
+                        TaskSpec::new(d)
+                    }
+                })
+                .collect(),
+        )
+    }
+
+    fn mean_demand(&self) -> f64 {
+        self.mean_demand
+    }
+
+    fn benchmark_demand(&mut self, rng: &mut Rng) -> f64 {
+        Exponential::with_mean(self.mean_demand).sample(rng).max(1e-6)
+    }
+
+    fn lambda_tasks(&self) -> f64 {
+        self.lambda_tasks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_sizes_within_shapes() {
+        let mut w = TpchWorkload::new(Query::Q3, 0.8, 10.0);
+        let mut rng = Rng::new(1);
+        for _ in 0..2000 {
+            let j = w.next_job(&mut rng);
+            assert!((1..=24).contains(&j.len()), "q3 stage size {}", j.len());
+        }
+        let mut w6 = TpchWorkload::new(Query::Q6, 0.8, 10.0);
+        for _ in 0..2000 {
+            let j = w6.next_job(&mut rng);
+            assert!((1..=32).contains(&j.len()), "q6 stage size {}", j.len());
+        }
+    }
+
+    #[test]
+    fn constrained_fraction_close_to_paper() {
+        let mut w = TpchWorkload::new(Query::Q3, 0.8, 10.0);
+        let mut rng = Rng::new(2);
+        let mut total = 0usize;
+        let mut constrained = 0usize;
+        for _ in 0..5000 {
+            let j = w.next_job(&mut rng);
+            total += j.len();
+            constrained += j.len() - j.unconstrained();
+        }
+        let frac = constrained as f64 / total as f64;
+        assert!((frac - 2_000.0 / 32_000.0).abs() < 0.01, "frac={frac}");
+    }
+
+    #[test]
+    fn constrained_targets_valid_workers() {
+        let mut w = TpchWorkload::with_workers(Query::Q3, 0.8, 10.0, 7);
+        let mut rng = Rng::new(3);
+        for _ in 0..3000 {
+            for t in &w.next_job(&mut rng).tasks {
+                if let Some(b) = t.constrained_to {
+                    assert!(b < 7);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn calibration_achieves_target_task_rate() {
+        let mut w = TpchWorkload::new(Query::Q6, 0.8, 13.5);
+        let mut rng = Rng::new(4);
+        let jobs = 20_000;
+        let mut time = 0.0;
+        let mut tasks = 0usize;
+        for _ in 0..jobs {
+            time += w.next_gap(&mut rng);
+            tasks += w.next_job(&mut rng).len();
+        }
+        let rate = tasks as f64 / time;
+        let target = w.lambda_tasks();
+        assert!((rate - target).abs() / target < 0.05, "rate={rate} target={target}");
+    }
+
+    #[test]
+    fn mean_demand_is_consistent() {
+        let mut w = TpchWorkload::new(Query::Q3, 0.8, 10.0);
+        let mut rng = Rng::new(5);
+        let mut sum = 0.0;
+        let mut count = 0usize;
+        for _ in 0..20_000 {
+            for t in &w.next_job(&mut rng).tasks {
+                sum += t.demand;
+                count += 1;
+            }
+        }
+        let emp = sum / count as f64;
+        assert!((emp - w.mean_demand()).abs() / w.mean_demand() < 0.05, "emp={emp}");
+    }
+
+    #[test]
+    fn q3_has_more_demand_skew_than_q6() {
+        let mut rng = Rng::new(6);
+        let collect = |w: &mut TpchWorkload, rng: &mut Rng| -> Vec<f64> {
+            let mut v = Vec::new();
+            for _ in 0..5000 {
+                for t in &w.next_job(rng).tasks {
+                    v.push(t.demand);
+                }
+            }
+            v
+        };
+        let mut q3 = TpchWorkload::new(Query::Q3, 0.8, 10.0);
+        let mut q6 = TpchWorkload::new(Query::Q6, 0.8, 10.0);
+        let d3 = collect(&mut q3, &mut rng);
+        let d6 = collect(&mut q6, &mut rng);
+        let cv = |v: &[f64]| crate::stats::stddev(v) / crate::stats::mean(v);
+        assert!(cv(&d3) > cv(&d6), "cv3={} cv6={}", cv(&d3), cv(&d6));
+    }
+}

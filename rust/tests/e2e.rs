@@ -1,0 +1,112 @@
+//! End-to-end integration: config file → simulation → report, the live
+//! coordinator, and (when artifacts are built) the full PJRT path.
+
+use rosella::config;
+use rosella::coordinator::{serve, LiveConfig, PayloadMode};
+use rosella::scheduler::PolicyKind;
+use rosella::simulator::run;
+
+#[test]
+fn config_file_to_simulation() {
+    let dir = std::env::temp_dir().join("rosella-e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.json");
+    std::fs::write(
+        &path,
+        r#"{
+            "seed": 99, "duration": 40.0, "warmup": 8.0,
+            "speeds": "s1", "workload": "synthetic",
+            "load": 0.6, "policy": "rosella"
+        }"#,
+    )
+    .unwrap();
+    let cfg = config::sim_config_from_file(path.to_str().unwrap()).unwrap();
+    let result = run(cfg);
+    assert!(result.responses.count() > 500, "completed {}", result.responses.count());
+    assert!(result.responses.mean() > 0.0);
+}
+
+#[test]
+fn live_coordinator_end_to_end_sleep() {
+    let cfg = LiveConfig {
+        speeds: vec![1.5, 0.75, 0.75],
+        policy: PolicyKind::parse("ppot").unwrap(),
+        rate: 120.0,
+        duration: 2.0,
+        mean_demand: 0.004,
+        payload: PayloadMode::Sleep,
+        pjrt_learner: false,
+        seed: 7,
+        publish_interval: 0.2,
+    };
+    let r = serve(cfg).unwrap();
+    assert!(r.completed > 100, "completed {}", r.completed);
+    assert!(r.throughput > 50.0, "throughput {}", r.throughput);
+    assert!(r.five.p95 < 1.0, "p95 {}", r.five.p95);
+}
+
+#[test]
+fn live_coordinator_with_pjrt_payload() {
+    let dir = std::env::var("ROSELLA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !rosella::runtime::artifacts_present(&dir) {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let cfg = LiveConfig {
+        speeds: vec![1.0, 0.5],
+        policy: PolicyKind::parse("ppot").unwrap(),
+        rate: 60.0,
+        duration: 2.0,
+        mean_demand: 0.01,
+        payload: PayloadMode::Pjrt { artifacts_dir: dir },
+        pjrt_learner: true,
+        seed: 8,
+        publish_interval: 0.25,
+    };
+    let r = serve(cfg).unwrap();
+    assert!(r.completed > 40, "completed {}", r.completed);
+    assert_eq!(r.learner_backend, "pjrt");
+    // Learned ordering must match configured speeds.
+    assert!(
+        r.estimates[0].1 > r.estimates[1].1,
+        "estimates out of order: {:?}",
+        r.estimates
+    );
+}
+
+#[test]
+fn experiment_driver_smoke() {
+    use rosella::experiments::{run_by_name, Scale};
+    // fig13 is the cheapest full experiment; it exercises queue sampling,
+    // the SQ2/LL2 tie rules, and the report formatter.
+    let report = run_by_name("fig13", Scale::Quick).unwrap();
+    assert!(report.contains("Fig 13a"));
+    assert!(report.contains("Fig 13b"));
+    assert!(report.contains("speed 1.6"));
+}
+
+#[test]
+fn cli_binary_smoke() {
+    let bin = env!("CARGO_BIN_EXE_rosella");
+    let out = std::process::Command::new(bin).arg("list").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("fig13") && text.contains("rosella"));
+
+    let out = std::process::Command::new(bin)
+        .args(["simulate", "--duration", "20", "--warmup", "4", "--load", "0.5", "--policy", "ppot"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("mean response"), "{text}");
+
+    // Unknown options/subcommands fail loudly.
+    let out = std::process::Command::new(bin).arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    let out = std::process::Command::new(bin)
+        .args(["simulate", "--policy", "nonsense"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}

@@ -1,0 +1,177 @@
+//! Property-based tests over the library's core invariants, driven by the
+//! in-repo `testkit` harness (proptest is unavailable offline).
+
+use rosella::stats::{AliasTable, SlidingMean};
+use rosella::testkit::{assert_prop, Gen};
+
+/// Alias tables preserve the exact normalized weights for arbitrary
+/// non-negative weight vectors.
+#[test]
+fn prop_alias_table_matches_weights() {
+    assert_prop("alias-exact-probabilities", 0xA11A5, 60, |g: &mut Gen| {
+        let weights = g.vec_of(32, |g| if g.int_in(0, 4) == 0 { 0.0 } else { g.f64_in(0.01, 10.0) });
+        let total: f64 = weights.iter().sum();
+        let t = AliasTable::new(&weights);
+        for (i, &w) in weights.iter().enumerate() {
+            let expect = if total > 0.0 { w / total } else { 1.0 / weights.len() as f64 };
+            let got = t.probability(i);
+            if (got - expect).abs() > 1e-9 {
+                return Err(format!("i={i} expect {expect} got {got} (weights {weights:?})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Sliding-window mean equals the naive mean of the last `cap` samples for
+/// arbitrary streams and window sizes.
+#[test]
+fn prop_sliding_mean_matches_naive() {
+    assert_prop("sliding-mean-naive", 0x51D, 60, |g: &mut Gen| {
+        let cap = g.int_in(1, 32);
+        let stream = g.vec_of(256, |g| g.f64_in(-100.0, 100.0));
+        let mut w = SlidingMean::new(cap);
+        for &x in &stream {
+            w.push(x);
+        }
+        let tail: Vec<f64> = stream.iter().rev().take(cap).copied().collect();
+        let naive = tail.iter().sum::<f64>() / tail.len() as f64;
+        let got = w.mean().unwrap();
+        if (got - naive).abs() > 1e-6 {
+            return Err(format!("cap={cap} got {got} naive {naive}"));
+        }
+        Ok(())
+    });
+}
+
+/// Percentiles are monotone in p and bracketed by min/max, for arbitrary
+/// samples.
+#[test]
+fn prop_percentiles_monotone_and_bounded() {
+    assert_prop("percentile-monotone", 0xC7, 60, |g: &mut Gen| {
+        let xs = g.vec_of(128, |g| g.f64_in(-1e4, 1e4));
+        let ps = [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 100.0];
+        let vals: Vec<f64> = ps.iter().map(|&p| rosella::stats::percentile(&xs, p)).collect();
+        for w in vals.windows(2) {
+            if w[0] > w[1] + 1e-9 {
+                return Err(format!("non-monotone percentiles {vals:?}"));
+            }
+        }
+        let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        if vals[0] < lo - 1e-9 || *vals.last().unwrap() > hi + 1e-9 {
+            return Err("percentiles escape [min, max]".into());
+        }
+        Ok(())
+    });
+}
+
+/// Conservation: in any finished simulation, every arrived job is either
+/// completed or still tracked as incomplete — none vanish. And the engine
+/// is deterministic for a fixed seed.
+#[test]
+fn prop_simulation_conserves_jobs_and_is_deterministic() {
+    use rosella::cluster::{SpeedProfile, Volatility};
+    use rosella::learner::LearnerConfig;
+    use rosella::scheduler::{PolicyKind, TieRule};
+    use rosella::simulator::{run, SimConfig};
+    use rosella::workload::WorkloadKind;
+
+    assert_prop("sim-conservation", 0x51A1, 8, |g: &mut Gen| {
+        let n = g.int_in(2, 12);
+        let speeds: Vec<f64> = (0..n).map(|_| g.f64_in(0.2, 2.0)).collect();
+        let policy = match g.int_in(0, 3) {
+            0 => PolicyKind::Uniform,
+            1 => PolicyKind::PoT { d: 2 },
+            2 => PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
+            _ => PolicyKind::Sparrow { probes_per_task: 2 },
+        };
+        let cfg = SimConfig {
+            seed: g.rng.next_u64(),
+            duration: 30.0,
+            warmup: 5.0,
+            speeds: SpeedProfile::Explicit(speeds),
+            volatility: Volatility::Static,
+            workload: WorkloadKind::Synthetic,
+            load: g.f64_in(0.2, 0.8),
+            policy,
+            learner: LearnerConfig::oracle(),
+            queue_sample: None,
+        };
+        let a = run(cfg.clone());
+        let b = run(cfg);
+        if a.completed_real != b.completed_real || a.responses.count() != b.responses.count() {
+            return Err("nondeterministic run".into());
+        }
+        if a.responses.count() == 0 {
+            return Err("no jobs completed at moderate load".into());
+        }
+        // Response times are non-negative and below the horizon.
+        if a.responses.samples().iter().any(|&r| r < 0.0 || r > 30.0) {
+            return Err("response time out of range".into());
+        }
+        Ok(())
+    });
+}
+
+/// The learner's estimates never exceed the true speed by more than noise
+/// (they are deliberate underestimates) for random stable clusters.
+#[test]
+fn prop_learner_underestimates() {
+    use rosella::learner::PerfLearner;
+
+    assert_prop("learner-underestimate", 0x1EA2, 40, |g: &mut Gen| {
+        let speed = g.f64_in(0.1, 5.0);
+        let demand = g.f64_in(0.01, 0.5);
+        let mut l = PerfLearner::new(2, 10.0, demand, 20.0 / demand, 1.0, 0.0);
+        let mut t = 0.0;
+        let samples = g.int_in(30, 200);
+        for _ in 0..samples {
+            t += demand / speed;
+            l.on_completion(0, t, demand / speed, demand);
+        }
+        l.publish(t, g.f64_in(0.0, 15.0) / demand);
+        let est = l.mu_hat()[0];
+        if est > speed * (1.0 + 1e-9) {
+            return Err(format!("overestimate: est {est} > speed {speed}"));
+        }
+        if est > 0.0 && est < speed * 0.5 {
+            return Err(format!("grossly low estimate {est} for speed {speed}"));
+        }
+        Ok(())
+    });
+}
+
+/// JSON round-trip: parse(to_string(v)) == v for arbitrary generated
+/// documents.
+#[test]
+fn prop_json_round_trip() {
+    use rosella::config::{parse, to_string, Json};
+
+    fn gen_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth == 0 { g.int_in(0, 3) } else { g.int_in(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.int_in(0, 1) == 1),
+            2 => Json::Num((g.f64_in(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => Json::Str(format!("s{}-\"q\"\n", g.int_in(0, 999))),
+            4 => Json::Arr((0..g.int_in(0, 4)).map(|_| gen_json(g, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for k in 0..g.int_in(0, 4) {
+                    m.insert(format!("k{k}"), gen_json(g, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+
+    assert_prop("json-round-trip", 0x150, 80, |g: &mut Gen| {
+        let v = gen_json(g, 3);
+        let s = to_string(&v);
+        match parse(&s) {
+            Ok(back) if back == v => Ok(()),
+            Ok(back) => Err(format!("round trip changed {s} -> {back:?}")),
+            Err(e) => Err(format!("unparseable output {s}: {e}")),
+        }
+    });
+}
