@@ -12,7 +12,7 @@ use rosella::learner::LearnerConfig;
 use rosella::scheduler::{PolicyKind, TieRule};
 use rosella::simulator::{run, SimConfig};
 use rosella::stats::{AliasTable, Rng};
-use rosella::types::{ClusterView, JobPlacement, JobSpec};
+use rosella::types::{JobPlacement, JobSpec, LocalView};
 use rosella::workload::WorkloadKind;
 use std::time::Instant;
 
@@ -44,7 +44,7 @@ fn scheduling_decision_benches() {
     let mut run_policy = |name: &str, kind: PolicyKind| {
         let mut policy = kind.build(n);
         policy.on_estimates(&speeds, 100.0);
-        let view = ClusterView {
+        let view = LocalView {
             queue_len: &qlen,
             mu_hat: &speeds,
             sampler: &table,

@@ -1,0 +1,86 @@
+//! Sharded-plane throughput benchmark: aggregate scheduling decisions/sec
+//! as the frontend count grows over a fixed shared worker pool.
+//!
+//! The paper's contrast with centralized learned schedulers (Decima et al.)
+//! is exactly this regime: Rosella frontends coordinate only through atomic
+//! queue probes and a seqlock-published estimate table, so decision
+//! throughput should scale near-linearly with the frontend count until the
+//! machine runs out of cores.
+//!
+//! `cargo bench --bench bench_plane` — decide-only sweep (raw scheduling
+//! throughput) followed by an execute-mode latency snapshot.
+
+use rosella::plane::{run_plane, DispatchMode, PlaneConfig};
+use rosella::scheduler::{PolicyKind, TieRule};
+
+fn decide_only_sweep() {
+    println!("-- decide-only: aggregate scheduling throughput (16 workers) --");
+    let base = PlaneConfig {
+        speeds: (0..16).map(|i| 0.25 + (i % 8) as f64 * 0.25).collect(),
+        policy: PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
+        rate: 10_000.0,
+        duration: 1.5,
+        mean_demand: 0.01,
+        batch: 256,
+        mode: DispatchMode::DecideOnly,
+        fake_jobs: false,
+        ..PlaneConfig::default()
+    };
+    let mut base_rate = 0.0;
+    for frontends in [1usize, 2, 4, 8] {
+        let cfg = PlaneConfig { frontends, ..base.clone() };
+        match run_plane(cfg) {
+            Ok(r) => {
+                if frontends == 1 {
+                    base_rate = r.decisions_per_sec.max(1.0);
+                }
+                println!(
+                    "frontends {frontends:>2}: {:>12.0} decisions/s  (speedup {:>5.2}x)",
+                    r.decisions_per_sec,
+                    r.decisions_per_sec / base_rate
+                );
+                println!("              per shard: {:?}", r.per_shard_decisions);
+            }
+            Err(e) => {
+                eprintln!("plane run failed: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+fn execute_latency() {
+    println!("-- execute: paced dispatch latency over the shared pool --");
+    for frontends in [1usize, 4] {
+        let cfg = PlaneConfig {
+            frontends,
+            rate: 800.0,
+            duration: 2.0,
+            mean_demand: 0.004,
+            ..PlaneConfig::default()
+        };
+        match run_plane(cfg) {
+            Ok(r) => {
+                let five = r.responses.five_num();
+                println!(
+                    "frontends {frontends}: dispatched {:>5}, completed {:>5}, \
+                     p50 {:>6.2} ms, p95 {:>6.2} ms",
+                    r.dispatched,
+                    r.completed,
+                    five.p50 * 1e3,
+                    five.p95 * 1e3
+                );
+            }
+            Err(e) => {
+                eprintln!("plane run failed: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+fn main() {
+    println!("== bench_plane ==");
+    decide_only_sweep();
+    execute_latency();
+}

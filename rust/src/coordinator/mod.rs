@@ -5,7 +5,9 @@
 //!
 //! * the **frontend/scheduler** (this module, main thread) owns the arrival
 //!   loop, the arrival estimator, the scheduling policy, and publishes
-//!   estimates;
+//!   estimates — all bundled in the [`crate::plane::FrontendCore`] shared
+//!   with the sharded scheduling plane, so a plane shard and this
+//!   coordinator make identical decisions for identical inputs;
 //! * **node monitors + executors** are worker threads
 //!   ([`worker`]) with dual priority queues and atomic queue-length probes;
 //! * the **performance learner** aggregates completion reports; estimate
@@ -16,14 +18,14 @@
 
 pub mod worker;
 
-pub use worker::{Completion, LiveTask, PayloadMode, WorkerHandle};
+pub use worker::{Completion, LiveTask, PayloadMode, WorkerClient, WorkerHandle};
 
-use crate::learner::{ArrivalEstimator, FakeJobDispatcher, PerfLearner};
+use crate::learner::{FakeJobDispatcher, PerfLearner};
 use crate::metrics::ResponseRecorder;
+use crate::plane::FrontendCore;
 use crate::scheduler::PolicyKind;
-use crate::stats::{AliasTable, Exponential, FiveNum, Rng};
-use crate::types::{ClusterView, JobPlacement, JobSpec, TaskKind};
-use anyhow::Result;
+use crate::stats::{Exponential, FiveNum, Rng};
+use crate::types::{JobSpec, TaskKind};
 use std::sync::atomic::Ordering;
 use std::time::{Duration, Instant};
 
@@ -119,11 +121,16 @@ impl LiveReport {
 }
 
 /// Run the live coordinator to completion.
-pub fn serve(cfg: LiveConfig) -> Result<LiveReport> {
-    anyhow::ensure!(!cfg.speeds.is_empty(), "need at least one worker");
-    anyhow::ensure!(cfg.rate > 0.0 && cfg.duration > 0.0);
+pub fn serve(cfg: LiveConfig) -> Result<LiveReport, String> {
+    if cfg.speeds.is_empty() {
+        return Err("need at least one worker".into());
+    }
+    if !(cfg.rate > 0.0 && cfg.duration > 0.0 && cfg.mean_demand > 0.0) {
+        return Err("rate, duration, and mean demand must be positive".into());
+    }
     let n = cfg.speeds.len();
     let mut rng = Rng::new(cfg.seed);
+    let core_seed = rng.next_u64();
 
     // Spawn the node monitors / executors.
     let (comp_tx, comp_rx) = std::sync::mpsc::channel::<Completion>();
@@ -135,16 +142,14 @@ pub fn serve(cfg: LiveConfig) -> Result<LiveReport> {
         .collect();
     drop(comp_tx);
 
-    // Learner stack.
+    // Learner stack + the frontend decision core (shared with the plane).
     let total_speed: f64 = cfg.speeds.iter().sum();
     let mu_bar = total_speed / cfg.mean_demand; // tasks/sec
     let prior = total_speed / n as f64;
     let mut perf = PerfLearner::new(n, 10.0, cfg.mean_demand, mu_bar, prior, 0.0);
-    let mut arrivals = ArrivalEstimator::new(128);
     let dispatcher = FakeJobDispatcher::new(0.1, mu_bar, true);
+    let mut core = FrontendCore::new(&cfg.policy, n, prior, cfg.mean_demand, 128, core_seed);
     let mut mu_hat = vec![prior; n];
-    let mut sampler = AliasTable::new(&mu_hat);
-    let mut policy = cfg.policy.build(n);
     let learner_kernel = if cfg.pjrt_learner && n <= crate::runtime::learner_exec::N_WORKERS {
         match crate::runtime::LearnerKernel::load(match &cfg.payload {
             PayloadMode::Pjrt { artifacts_dir } => artifacts_dir,
@@ -182,25 +187,13 @@ pub fn serve(cfg: LiveConfig) -> Result<LiveReport> {
         // 1. Admit arrivals that are due.
         while Instant::now() >= next_arrival {
             let t_sched = (next_arrival - start).as_secs_f64();
-            arrivals.on_arrival(t_sched, 1);
+            core.on_arrival(t_sched, 1);
             let demand = demand_dist.sample(&mut rng).max(1e-4);
             let job = JobSpec::single(demand);
-            for (i, w) in workers.iter().enumerate() {
-                qlen_buf[i] = w.qlen.load(Ordering::Relaxed);
+            for (q, w) in qlen_buf.iter_mut().zip(workers.iter()) {
+                *q = w.client.qlen.load(Ordering::Relaxed);
             }
-            let view = ClusterView {
-                queue_len: &qlen_buf,
-                mu_hat: &mu_hat,
-                sampler: &sampler,
-                lambda_hat: arrivals.lambda_or(0.0),
-            };
-            let target = match policy.schedule_job(&job, &view, &mut rng) {
-                JobPlacement::Single(w) => w,
-                JobPlacement::PerTask(ws) => ws[0],
-                // Live mode places directly; reservations degrade to the
-                // first probe (single-task requests).
-                JobPlacement::Reservations(ws) => ws[0],
-            };
+            let target = core.decide_local(&job, &qlen_buf);
             workers[target].enqueue(LiveTask {
                 job: next_job,
                 kind: TaskKind::Real,
@@ -212,7 +205,7 @@ pub fn serve(cfg: LiveConfig) -> Result<LiveReport> {
         }
         // 2. Benchmark dispatch (LEARNER-DISPATCHER).
         while Instant::now() >= next_bench {
-            let lam = arrivals.lambda_or(0.0);
+            let lam = core.lambda_or(0.0);
             let gap = dispatcher
                 .next_gap(lam, &mut rng)
                 .unwrap_or(cfg.duration)
@@ -230,7 +223,8 @@ pub fn serve(cfg: LiveConfig) -> Result<LiveReport> {
         // 3. Publish estimates.
         if Instant::now() >= next_publish {
             let now_s = start.elapsed().as_secs_f64();
-            let params = perf.publish(now_s, arrivals.lambda_or(0.0));
+            let lambda = core.lambda_or(0.0);
+            let params = perf.publish(now_s, lambda);
             if let Some(kernel) = learner_kernel.as_ref() {
                 let cold = now_s < params.horizon;
                 match kernel.publish(&perf, now_s, &params, cold) {
@@ -243,42 +237,39 @@ pub fn serve(cfg: LiveConfig) -> Result<LiveReport> {
                                 if *src > 0.0 { *src as f64 } else { perf.mu_hat()[i] };
                         }
                     }
-                    Err(e) => eprintln!("pjrt learner failed ({e}); using native"),
+                    Err(e) => {
+                        eprintln!("pjrt learner failed ({e}); using native");
+                        mu_hat.copy_from_slice(perf.mu_hat());
+                    }
                 }
             } else {
                 mu_hat.copy_from_slice(perf.mu_hat());
             }
-            sampler = AliasTable::new(&mu_hat);
-            policy.on_estimates(&mu_hat, arrivals.lambda_or(0.0) * cfg.mean_demand);
+            core.set_estimates(&mu_hat, lambda);
             next_publish += Duration::from_secs_f64(cfg.publish_interval);
         }
         // 4. Drain completions until the next timer.
         let next_due = next_arrival.min(next_bench).min(next_publish).min(end);
         let timeout = next_due.saturating_duration_since(Instant::now());
-        match comp_rx.recv_timeout(timeout.min(Duration::from_millis(5))) {
-            Ok(c) => {
+        if let Ok(c) = comp_rx.recv_timeout(timeout.min(Duration::from_millis(5))) {
+            handle_completion(&mut perf, &mut responses, start, &c);
+            while let Ok(c) = comp_rx.try_recv() {
                 handle_completion(&mut perf, &mut responses, start, &c);
-                while let Ok(c) = comp_rx.try_recv() {
-                    handle_completion(&mut perf, &mut responses, start, &c);
-                }
             }
-            Err(_) => {}
         }
     }
 
     // Shutdown: drop senders, join workers, drain stragglers briefly.
     let elapsed = start.elapsed().as_secs_f64();
     for w in workers {
-        drop(w.real_tx);
-        drop(w.bench_tx);
-        let _ = w.join.join();
+        w.shutdown();
     }
     while let Ok(c) = comp_rx.try_recv() {
         handle_completion(&mut perf, &mut responses, start, &c);
     }
 
     let estimates: Vec<(f64, f64)> =
-        cfg.speeds.iter().zip(mu_hat.iter()).map(|(&t, &e)| (t, e)).collect();
+        cfg.speeds.iter().zip(core.mu_hat().iter()).map(|(&t, &e)| (t, e)).collect();
     Ok(LiveReport {
         completed: responses.count(),
         elapsed,
@@ -336,7 +327,7 @@ pub fn serve_cli(p: &crate::cli::Parsed) -> Result<String, String> {
         pjrt_learner,
         ..LiveConfig::default()
     };
-    serve(cfg).map(|r| r.render()).map_err(|e| e.to_string())
+    serve(cfg).map(|r| r.render())
 }
 
 #[cfg(test)]
@@ -389,5 +380,14 @@ mod tests {
         };
         let r = serve(cfg).unwrap();
         assert!(r.completed > 20);
+    }
+
+    #[test]
+    fn serve_rejects_bad_configs() {
+        let mut cfg = LiveConfig { speeds: vec![], ..LiveConfig::default() };
+        assert!(serve(cfg.clone()).is_err());
+        cfg.speeds = vec![1.0];
+        cfg.rate = 0.0;
+        assert!(serve(cfg).is_err());
     }
 }

@@ -7,10 +7,16 @@
 //! `demand / speed` (the paper's §6.1 slow-down trick: execute, then hold
 //! `(k−1)·T`) or additionally runs the AOT-compiled MLP payload through
 //! PJRT, making the serve path a real compute system.
+//!
+//! A worker's ingress side is split out as [`WorkerClient`] so *multiple*
+//! frontends can feed the same worker: the sharded scheduling plane clones
+//! one client per shard, and every clone shares the worker's atomic
+//! queue-length probe. Enqueue is an mpsc send plus one relaxed
+//! `fetch_add` — no locks on the dispatch path.
 
 use crate::runtime::PayloadRunner;
 use crate::types::TaskKind;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -51,16 +57,20 @@ pub enum PayloadMode {
     Pjrt { artifacts_dir: String },
 }
 
-/// Handle to one spawned worker.
-pub struct WorkerHandle {
+/// Cloneable ingress handle to one worker: the task senders plus the
+/// shared atomic probes. Each frontend of the plane owns its own clone;
+/// the worker exits once every clone is dropped and its queues drain.
+#[derive(Clone)]
+pub struct WorkerClient {
     pub real_tx: Sender<LiveTask>,
     pub bench_tx: Sender<LiveTask>,
     /// Real entries queued or in service (the probe the policy sees).
     pub qlen: Arc<AtomicUsize>,
-    pub join: std::thread::JoinHandle<()>,
+    /// Total real tasks this worker has completed (conservation checks).
+    pub completed_real: Arc<AtomicU64>,
 }
 
-impl WorkerHandle {
+impl WorkerClient {
     /// Enqueue a task, bumping the probe counter for real tasks.
     pub fn enqueue(&self, task: LiveTask) {
         let tx = match task.kind {
@@ -75,6 +85,28 @@ impl WorkerHandle {
     }
 }
 
+/// Handle to one spawned worker: its ingress client plus the join handle.
+pub struct WorkerHandle {
+    pub client: WorkerClient,
+    pub join: std::thread::JoinHandle<()>,
+}
+
+impl WorkerHandle {
+    /// Enqueue through the embedded client.
+    pub fn enqueue(&self, task: LiveTask) {
+        self.client.enqueue(task)
+    }
+
+    /// Drop this handle's senders and join the worker thread (it drains
+    /// its queues first). Other outstanding [`WorkerClient`] clones keep
+    /// the worker alive until they are dropped too.
+    pub fn shutdown(self) {
+        let WorkerHandle { client, join } = self;
+        drop(client);
+        let _ = join.join();
+    }
+}
+
 /// Spawn a worker thread with the given relative speed.
 pub fn spawn(
     id: usize,
@@ -85,14 +117,17 @@ pub fn spawn(
     let (real_tx, real_rx) = std::sync::mpsc::channel::<LiveTask>();
     let (bench_tx, bench_rx) = std::sync::mpsc::channel::<LiveTask>();
     let qlen = Arc::new(AtomicUsize::new(0));
+    let completed_real = Arc::new(AtomicU64::new(0));
     let q = qlen.clone();
+    let done = completed_real.clone();
     let join = std::thread::Builder::new()
         .name(format!("rosella-worker-{id}"))
-        .spawn(move || worker_loop(id, speed, mode, real_rx, bench_rx, q, completions))
+        .spawn(move || worker_loop(id, speed, mode, real_rx, bench_rx, q, done, completions))
         .expect("spawn worker thread");
-    WorkerHandle { real_tx, bench_tx, qlen, join }
+    WorkerHandle { client: WorkerClient { real_tx, bench_tx, qlen, completed_real }, join }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     id: usize,
     speed: f64,
@@ -100,6 +135,7 @@ fn worker_loop(
     real_rx: Receiver<LiveTask>,
     bench_rx: Receiver<LiveTask>,
     qlen: Arc<AtomicUsize>,
+    completed_real: Arc<AtomicU64>,
     completions: Sender<Completion>,
 ) {
     // The PJRT client/executable are created inside the worker thread: one
@@ -162,6 +198,7 @@ fn worker_loop(
         let end = Instant::now();
         if task.kind == TaskKind::Real {
             qlen.fetch_sub(1, Ordering::Relaxed);
+            completed_real.fetch_add(1, Ordering::Relaxed);
         }
         let _ = completions.send(Completion {
             worker: id,
@@ -196,10 +233,9 @@ mod tests {
         // some slack).
         assert!(c.duration >= 0.009, "duration {}", c.duration);
         assert!(c.duration < 0.05, "duration {}", c.duration);
-        assert_eq!(w.qlen.load(Ordering::Relaxed), 0);
-        drop(w.real_tx);
-        drop(w.bench_tx);
-        let _ = w.join.join();
+        assert_eq!(w.client.qlen.load(Ordering::Relaxed), 0);
+        assert_eq!(w.client.completed_real.load(Ordering::Relaxed), 1);
+        w.shutdown();
     }
 
     #[test]
@@ -230,9 +266,7 @@ mod tests {
         }
         let real_pos = order.iter().position(|(k, _)| *k == TaskKind::Real).unwrap();
         assert!(real_pos <= 2, "real task served too late: {order:?}");
-        drop(w.real_tx);
-        drop(w.bench_tx);
-        let _ = w.join.join();
+        w.shutdown();
     }
 
     #[test]
@@ -247,14 +281,55 @@ mod tests {
                 enqueued: Instant::now(),
             });
         }
-        assert!(w.qlen.load(Ordering::Relaxed) >= 3);
+        assert!(w.client.qlen.load(Ordering::Relaxed) >= 3);
         for _ in 0..4 {
             rx.recv_timeout(Duration::from_secs(2)).unwrap();
         }
         std::thread::sleep(Duration::from_millis(5));
-        assert_eq!(w.qlen.load(Ordering::Relaxed), 0);
-        drop(w.real_tx);
-        drop(w.bench_tx);
-        let _ = w.join.join();
+        assert_eq!(w.client.qlen.load(Ordering::Relaxed), 0);
+        assert_eq!(w.client.completed_real.load(Ordering::Relaxed), 4);
+        w.shutdown();
+    }
+
+    #[test]
+    fn cloned_clients_feed_one_worker() {
+        // Two "frontends" dispatching through clones of the same client:
+        // both see the shared probe and the worker serves everything.
+        let (tx, rx) = std::sync::mpsc::channel();
+        let w = spawn(3, 4.0, PayloadMode::Sleep, tx);
+        let a = w.client.clone();
+        let b = w.client.clone();
+        let t1 = std::thread::spawn(move || {
+            for j in 0..10 {
+                a.enqueue(LiveTask {
+                    job: j,
+                    kind: TaskKind::Real,
+                    demand: 0.002,
+                    enqueued: Instant::now(),
+                });
+            }
+            drop(a);
+        });
+        let t2 = std::thread::spawn(move || {
+            for j in 10..20 {
+                b.enqueue(LiveTask {
+                    job: j,
+                    kind: TaskKind::Real,
+                    demand: 0.002,
+                    enqueued: Instant::now(),
+                });
+            }
+            drop(b);
+        });
+        t1.join().unwrap();
+        t2.join().unwrap();
+        let mut jobs = Vec::new();
+        for _ in 0..20 {
+            jobs.push(rx.recv_timeout(Duration::from_secs(2)).unwrap().job);
+        }
+        jobs.sort_unstable();
+        assert_eq!(jobs, (0..20).collect::<Vec<u64>>());
+        assert_eq!(w.client.completed_real.load(Ordering::Relaxed), 20);
+        w.shutdown();
     }
 }

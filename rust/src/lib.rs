@@ -8,7 +8,9 @@
 //! * the paper's **scheduling policy** (proportional sampling +
 //!   power-of-two-choices with SQ(2), [`scheduler::PPoT`]) and every
 //!   baseline evaluated in §6 (uniform, PoT, Sparrow, PSS, ε-greedy bandit,
-//!   Halo, LL(2));
+//!   Halo, LL(2)) — all written against the [`types::ClusterView`] trait,
+//!   so the same policy code runs single-threaded or over lock-free
+//!   shared state;
 //! * the **self-driving learning stack** (§3): arrival estimator,
 //!   performance learner with the dynamic window `L = c/(1−α̂)` and the
 //!   timeout/discard rule, and the benchmark-job dispatcher with rate
@@ -18,7 +20,13 @@
 //!   dual-priority worker queues, late binding);
 //! * a **live threaded coordinator** ([`coordinator`]) with real worker
 //!   threads that execute AOT-compiled JAX/Pallas payloads through PJRT
-//!   ([`runtime`]);
+//!   ([`runtime`], behind the `pjrt` feature);
+//! * the **sharded scheduling plane** ([`plane`]): N frontend threads each
+//!   running the full Rosella loop over a shared worker pool, coordinating
+//!   only through per-worker atomic queue probes and a seqlock-published
+//!   estimate table (§2's "minimum coordination" / §5's distributed
+//!   scheduler) — the multi-frontend regime centralized schedulers cannot
+//!   reach;
 //! * **experiment drivers** ([`experiments`]) regenerating every figure of
 //!   the paper's evaluation section.
 //!
@@ -32,6 +40,21 @@
 //! let result = run(cfg);
 //! assert!(result.responses.count() > 0);
 //! ```
+//!
+//! ## Parallel serving
+//!
+//! ```
+//! use rosella::plane::{run_plane, DispatchMode, PlaneConfig};
+//! let cfg = PlaneConfig {
+//!     frontends: 2,
+//!     duration: 0.5,
+//!     mode: DispatchMode::DecideOnly,
+//!     max_decisions: Some(1_000),
+//!     ..PlaneConfig::default()
+//! };
+//! let report = run_plane(cfg).unwrap();
+//! assert_eq!(report.decisions, 2_000);
+//! ```
 
 pub mod cli;
 pub mod cluster;
@@ -40,6 +63,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod learner;
 pub mod metrics;
+pub mod plane;
 pub mod runtime;
 pub mod scheduler;
 pub mod simulator;

@@ -6,6 +6,8 @@
 //!   all);
 //! * `simulate` — run one simulation from flags or a JSON config;
 //! * `serve` — run the live threaded coordinator with the PJRT payload;
+//! * `plane` — run the sharded scheduling plane stress harness (sweeps the
+//!   frontend count, reports decisions/sec and latency percentiles);
 //! * `list` — show available experiments, policies, speed profiles.
 
 use rosella::cli::CmdSpec;
@@ -19,6 +21,7 @@ fn main() {
         Some("experiment") => cmd_experiment(&args[1..]),
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("plane") => cmd_plane(&args[1..]),
         Some("list") => cmd_list(),
         Some("--help") | Some("-h") | None => {
             print_usage();
@@ -41,6 +44,7 @@ fn print_usage() {
          \x20 experiment <name>   regenerate a paper figure (fig8..fig13, theory, all)\n\
          \x20 simulate            run one simulation (flags or --config file.json)\n\
          \x20 serve               run the live coordinator (PJRT payload workers)\n\
+         \x20 plane               sharded-plane stress harness (multi-frontend dispatch)\n\
          \x20 list                list experiments, policies, profiles\n"
     );
 }
@@ -190,6 +194,39 @@ fn cmd_serve(rest: &[String]) -> i32 {
         }
         Err(e) => {
             eprintln!("serve failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_plane(rest: &[String]) -> i32 {
+    let spec = CmdSpec::new("plane", "run the sharded scheduling plane stress harness")
+        .opt("frontends", Some("1,2,4"), "comma-separated frontend counts to sweep")
+        .opt("workers", Some("8"), "number of worker threads")
+        .opt("speeds", None, "speed profile (defaults to a 2.0..0.25 mix)")
+        .opt("policy", Some("ppot"), "scheduling policy")
+        .opt("rate", Some("400"), "aggregate arrival rate (jobs/sec)")
+        .opt("duration", Some("3"), "wall-clock seconds per frontend count")
+        .opt("demand", Some("0.01"), "mean task demand (unit-speed seconds)")
+        .opt("batch", Some("64"), "arrival ingestion batch size per shard")
+        .opt("seed", Some("42"), "rng seed")
+        .opt("json", None, "write machine-readable results (e.g. BENCH_plane.json)")
+        .flag("decide-only", "measure raw decision throughput without dispatching")
+        .flag("no-fake-jobs", "disable the benchmark-job dispatcher");
+    let p = match spec.parse(rest) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    match rosella::plane::plane_cli(&p) {
+        Ok(report) => {
+            println!("{report}");
+            0
+        }
+        Err(e) => {
+            eprintln!("plane failed: {e}");
             1
         }
     }

@@ -75,6 +75,25 @@ impl QueueStats {
     pub fn tail(&self, w: usize, k: usize) -> f64 {
         self.per_worker[w].tail(k)
     }
+
+    /// Absorb another collector's snapshots over the *same* worker set
+    /// (shards sampling the shared pool at different instants). Snapshot
+    /// populations concatenate: per-worker histograms and the per-snapshot
+    /// maximum distribution add count-for-count, so no snapshot is ever
+    /// double counted.
+    pub fn merge(&mut self, other: &QueueStats) {
+        assert_eq!(
+            self.per_worker.len(),
+            other.per_worker.len(),
+            "cannot merge queue stats over different worker counts"
+        );
+        for (a, b) in self.per_worker.iter_mut().zip(other.per_worker.iter()) {
+            a.merge(b);
+        }
+        self.max_hist.merge(&other.max_hist);
+        self.snapshots += other.snapshots;
+        self.max_ever = self.max_ever.max(other.max_ever);
+    }
 }
 
 #[cfg(test)]
@@ -114,5 +133,32 @@ mod tests {
         assert!((s.tail(0, 5) - 0.5).abs() < 1e-12);
         assert_eq!(s.max_len(0), 9);
         assert_eq!(s.max_len(1), 0);
+    }
+
+    #[test]
+    fn merge_concatenates_snapshot_populations() {
+        let mut a = QueueStats::new(2);
+        let mut b = QueueStats::new(2);
+        a.record(&[1, 4]);
+        a.record(&[2, 0]);
+        b.record(&[7, 1]);
+        a.merge(&b);
+        assert_eq!(a.snapshots(), 3);
+        assert_eq!(a.max_ever(), 7);
+        assert!((a.mean_len(0) - 10.0 / 3.0).abs() < 1e-12);
+        assert!((a.mean_max() - (4.0 + 2.0 + 7.0) / 3.0).abs() < 1e-12);
+        // Per-worker PMFs renormalize over the combined population.
+        let p = a.pmf(1);
+        assert!((p[0] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((p[1] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((p[4] - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn merge_rejects_mismatched_worker_counts() {
+        let mut a = QueueStats::new(2);
+        let b = QueueStats::new(3);
+        a.merge(&b);
     }
 }

@@ -93,6 +93,30 @@ impl ResponseRecorder {
         self.samples.iter().filter(|&&r| r > threshold).count() as f64 / self.samples.len() as f64
     }
 
+    /// Absorb another recorder's jobs (the sharded plane records responses
+    /// per frontend shard and merges at drain).
+    ///
+    /// Both recorders must share the same warmup so the exclusion rule was
+    /// applied identically; each shard records a disjoint set of jobs and
+    /// already dropped its own warmup arrivals, so counts — including
+    /// `dropped_warmup` — add without double counting. The merged series
+    /// is re-sorted by arrival time (completion order is meaningless
+    /// across shards), which `samples()` mirrors.
+    pub fn merge(&mut self, other: &ResponseRecorder) {
+        assert!(
+            (self.warmup - other.warmup).abs() < 1e-12,
+            "cannot merge recorders with different warmups ({} vs {})",
+            self.warmup,
+            other.warmup
+        );
+        self.dropped_warmup += other.dropped_warmup;
+        self.hist.merge(&other.hist);
+        self.series.extend_from_slice(&other.series);
+        self.series.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite arrival times"));
+        self.samples.clear();
+        self.samples.extend(self.series.iter().map(|&(_, resp)| resp));
+    }
+
     /// Mean response over a window of job indices (for Figure 10a's
     /// per-index growth curve): chunk the completion-ordered series into
     /// `bins` equal groups and return each group's mean.
@@ -167,5 +191,44 @@ mod tests {
         assert_eq!(r.mean(), 0.0);
         assert!(r.binned_means(5).is_empty());
         assert_eq!(r.tail_fraction(1.0), 0.0);
+    }
+
+    #[test]
+    fn merge_combines_shards_without_double_counting() {
+        let mut a = ResponseRecorder::new(10.0);
+        let mut b = ResponseRecorder::new(10.0);
+        a.record(5.0, 6.0); // warmup-dropped by shard a
+        a.record(12.0, 13.0);
+        a.record(20.0, 22.0);
+        b.record(9.0, 9.5); // warmup-dropped by shard b
+        b.record(11.0, 14.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.dropped_warmup(), 2);
+        assert!((a.mean() - (1.0 + 2.0 + 3.0) / 3.0).abs() < 1e-12);
+        assert_eq!(a.histogram().count(), 3);
+        // Series re-sorted by arrival, samples kept aligned.
+        let arrivals: Vec<f64> = a.series().iter().map(|&(t, _)| t).collect();
+        assert_eq!(arrivals, vec![11.0, 12.0, 20.0]);
+        assert_eq!(a.samples(), &[3.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn merge_into_empty_recorder() {
+        let mut total = ResponseRecorder::new(0.0);
+        let mut shard = ResponseRecorder::new(0.0);
+        shard.record(1.0, 2.5);
+        total.merge(&shard);
+        total.merge(&ResponseRecorder::new(0.0));
+        assert_eq!(total.count(), 1);
+        assert!((total.mean() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn merge_rejects_mismatched_warmup() {
+        let mut a = ResponseRecorder::new(1.0);
+        let b = ResponseRecorder::new(2.0);
+        a.merge(&b);
     }
 }

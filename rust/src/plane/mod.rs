@@ -1,0 +1,730 @@
+//! The sharded scheduling plane: parallel multi-frontend dispatch over a
+//! shared worker pool with lock-free shared state.
+//!
+//! The paper's headline claim is that Rosella "runs in parallel on multiple
+//! machines with minimum coordination" (§2): frontends only ever exchange
+//! queue-length probes and periodically synchronized speed estimates. This
+//! module realizes that design inside one process:
+//!
+//! * **N frontend shards** ([`shard`]) each run the complete Rosella loop —
+//!   their own Poisson arrival stream (batched, [`ingest`]), their own
+//!   policy instance and RNG, and their own arrival estimator — against the
+//!   shared pool of live workers ([`crate::coordinator::worker`]);
+//! * **shared state** ([`state`]) is lock-free on the decision hot path:
+//!   per-worker atomic queue-length probes and a seqlock-published estimate
+//!   table that shards re-read only when its epoch moves;
+//! * **one aggregator thread** owns the performance learner: it consumes
+//!   completion reports from a single MPSC channel, dispatches the
+//!   benchmark jobs at the aggregate rate `c0(μ̄ − λ̂)` (§5's throttling:
+//!   one dispatcher serves the whole plane, so the probing budget never
+//!   multiplies with the frontend count), and publishes μ̂ through the
+//!   seqlock table;
+//! * per-shard [`ResponseRecorder`]s are merged at drain, so latency
+//!   percentiles cover the whole plane without double counting.
+//!
+//! `rosella plane` (the CLI stress harness) sweeps the frontend count and
+//! reports scheduling decisions/sec and response-time percentiles;
+//! `benches/bench_plane.rs` uses the same entry points.
+
+pub mod ingest;
+pub mod shard;
+pub mod state;
+
+pub use ingest::{Arrival, ArrivalBatcher};
+pub use shard::{encode_job, job_shard, shard_seeds, FrontendCore};
+pub use state::{EstimateCache, EstimateTable, SharedView};
+
+use crate::coordinator::worker::{
+    self, Completion, LiveTask, PayloadMode, WorkerClient, WorkerHandle,
+};
+use crate::learner::{FakeJobDispatcher, PerfLearner};
+use crate::metrics::ResponseRecorder;
+use crate::scheduler::PolicyKind;
+use crate::stats::{Exponential, Rng};
+use crate::types::{TaskKind, WorkerId};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// What a frontend does with each scheduling decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// Dispatch every task to its worker (paced arrivals, full system).
+    Execute,
+    /// Make decisions at full speed without dispatching — isolates raw
+    /// scheduling throughput (probes + sampling + policy) from worker
+    /// capacity. Queue probes still read the live worker counters.
+    DecideOnly,
+}
+
+impl DispatchMode {
+    /// CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchMode::Execute => "execute",
+            DispatchMode::DecideOnly => "decide-only",
+        }
+    }
+}
+
+/// Configuration of one plane run.
+#[derive(Debug, Clone)]
+pub struct PlaneConfig {
+    /// Worker speed multipliers (one live worker thread per entry).
+    pub speeds: Vec<f64>,
+    /// Number of frontend shards.
+    pub frontends: usize,
+    /// Scheduling policy (instantiated once per shard).
+    pub policy: PolicyKind,
+    /// Aggregate arrival rate in jobs/sec, split evenly across shards
+    /// (Poisson superposition keeps the merged stream Poisson).
+    pub rate: f64,
+    /// Wall-clock run duration (seconds).
+    pub duration: f64,
+    /// Mean task demand (unit-speed seconds).
+    pub mean_demand: f64,
+    /// Ingestion batch size per shard.
+    pub batch: usize,
+    /// RNG seed (per-shard streams derived via [`shard_seeds`]).
+    pub seed: u64,
+    /// Estimate publish interval of the aggregator (seconds).
+    pub publish_interval: f64,
+    /// Jobs arriving before this time are excluded from latency metrics.
+    pub warmup: f64,
+    /// Dispatch mode.
+    pub mode: DispatchMode,
+    /// Enable the benchmark-job dispatcher (Execute mode only).
+    pub fake_jobs: bool,
+    /// Stop each shard after this many decisions (None = run to duration).
+    pub max_decisions: Option<u64>,
+    /// Record per-shard placement sequences (test instrumentation).
+    pub record_placements: bool,
+}
+
+impl Default for PlaneConfig {
+    fn default() -> Self {
+        Self {
+            speeds: vec![2.0, 1.0, 1.0, 1.0, 0.5, 0.5, 0.25, 0.25],
+            frontends: 4,
+            policy: PolicyKind::PPoT {
+                tie: crate::scheduler::TieRule::Sq2,
+                late_binding: false,
+            },
+            rate: 400.0,
+            duration: 5.0,
+            mean_demand: 0.01,
+            batch: 64,
+            seed: 42,
+            publish_interval: 0.2,
+            warmup: 0.0,
+            mode: DispatchMode::Execute,
+            fake_jobs: true,
+            max_decisions: None,
+            record_placements: false,
+        }
+    }
+}
+
+/// Everything measured during a plane run.
+#[derive(Debug)]
+pub struct PlaneReport {
+    /// Frontend count.
+    pub frontends: usize,
+    /// Worker count.
+    pub workers: usize,
+    /// Dispatch mode the run used.
+    pub mode: DispatchMode,
+    /// Policy name.
+    pub policy: String,
+    /// Wall-clock seconds until the stop signal.
+    pub elapsed: f64,
+    /// Total scheduling decisions across shards.
+    pub decisions: u64,
+    /// Aggregate decisions per second.
+    pub decisions_per_sec: f64,
+    /// Decisions per shard (scaling diagnostics).
+    pub per_shard_decisions: Vec<u64>,
+    /// Real tasks dispatched to workers.
+    pub dispatched: u64,
+    /// Real tasks completed after the full drain.
+    pub completed: u64,
+    /// Real tasks the aggregator had seen at the stop instant.
+    pub completed_at_stop: u64,
+    /// Sum of queue-length probes at the stop instant.
+    pub queued_at_stop: usize,
+    /// Benchmark tasks injected.
+    pub benchmarks: u64,
+    /// Merged cross-shard response recorder.
+    pub responses: ResponseRecorder,
+    /// Final speed estimates vs configured speeds.
+    pub estimates: Vec<(f64, f64)>,
+    /// Per-shard placement sequences (only when recording was enabled).
+    pub placements: Vec<Vec<WorkerId>>,
+}
+
+impl PlaneReport {
+    /// Render a human-readable report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "plane: {} frontends × {} workers, policy {}, mode {}\n",
+            self.frontends,
+            self.workers,
+            self.policy,
+            self.mode.name()
+        ));
+        out.push_str(&format!(
+            "decisions  : {} in {:.2}s — {:.0} decisions/s\n",
+            self.decisions, self.elapsed, self.decisions_per_sec
+        ));
+        out.push_str(&format!(
+            "dispatched : {} | completed {} | benchmarks {}\n",
+            self.dispatched, self.completed, self.benchmarks
+        ));
+        out.push_str(&format!(
+            "at stop    : completed {} + queued {} ≤ dispatched {}\n",
+            self.completed_at_stop, self.queued_at_stop, self.dispatched
+        ));
+        if self.responses.count() > 0 {
+            let five = self.responses.five_num();
+            out.push_str(&format!(
+                "latency ms : mean {:.1} | p50 {:.1} | p95 {:.1} ({} jobs)\n",
+                self.responses.mean() * 1e3,
+                five.p50 * 1e3,
+                five.p95 * 1e3,
+                self.responses.count()
+            ));
+        }
+        out.push_str("worker speed estimates (true → learned):\n");
+        for (i, (truth, est)) in self.estimates.iter().enumerate() {
+            out.push_str(&format!("  worker {i}: {truth:.2} → {est:.2}\n"));
+        }
+        out
+    }
+}
+
+/// State moved into the aggregator thread.
+struct AggCtx {
+    comp_rx: Receiver<Completion>,
+    table: Arc<EstimateTable>,
+    stop: Arc<AtomicBool>,
+    completed_real: Arc<AtomicU64>,
+    lambda_slots: Vec<Arc<AtomicU64>>,
+    bench_pool: Option<Vec<WorkerClient>>,
+    shards: usize,
+    n: usize,
+    prior: f64,
+    mu_bar: f64,
+    mean_demand: f64,
+    warmup: f64,
+    publish_interval: f64,
+    seed: u64,
+    start: Instant,
+}
+
+/// What the aggregator hands back at drain.
+struct AggOut {
+    responses: Vec<ResponseRecorder>,
+    mu_hat: Vec<f64>,
+    benchmarks: u64,
+}
+
+fn lambda_total(slots: &[Arc<AtomicU64>]) -> f64 {
+    slots.iter().map(|s| f64::from_bits(s.load(Ordering::Relaxed))).sum()
+}
+
+fn record_completion(
+    perf: &mut PerfLearner,
+    responses: &mut [ResponseRecorder],
+    ctx: &AggCtx,
+    c: &Completion,
+) {
+    let now_s = (c.at - ctx.start).as_secs_f64();
+    perf.on_completion(c.worker, now_s, c.duration.max(1e-6), c.demand);
+    if c.kind == TaskKind::Real {
+        let s = job_shard(c.job);
+        if s < responses.len() {
+            responses[s].record((now_s - c.sojourn).max(0.0), now_s);
+        }
+        // Release pairs with the Acquire load in `run_plane`'s stop
+        // snapshot: a task counted here already left its queue probe.
+        ctx.completed_real.fetch_add(1, Ordering::Release);
+    }
+}
+
+/// The aggregator thread body: the plane's single learner writer.
+fn aggregate(mut ctx: AggCtx) -> AggOut {
+    let mut responses: Vec<ResponseRecorder> =
+        (0..ctx.shards).map(|_| ResponseRecorder::new(ctx.warmup)).collect();
+    let mut perf = PerfLearner::new(ctx.n, 10.0, ctx.mean_demand, ctx.mu_bar, ctx.prior, 0.0);
+    let dispatcher = FakeJobDispatcher::new(0.1, ctx.mu_bar, ctx.bench_pool.is_some());
+    let demand_dist = Exponential::with_mean(ctx.mean_demand);
+    let mut rng = Rng::new(ctx.seed ^ 0xA66_A66);
+    let mut benchmarks = 0u64;
+    let mut next_publish = ctx.start + Duration::from_secs_f64(ctx.publish_interval);
+    let mut next_bench = ctx.start + Duration::from_secs_f64(0.05);
+
+    loop {
+        match ctx.comp_rx.recv_timeout(Duration::from_millis(2)) {
+            Ok(c) => {
+                record_completion(&mut perf, &mut responses, &ctx, &c);
+                while let Ok(c) = ctx.comp_rx.try_recv() {
+                    record_completion(&mut perf, &mut responses, &ctx, &c);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            // All workers exited and their queues drained: we are done.
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        if ctx.stop.load(Ordering::Relaxed) {
+            // Release our senders so the workers can finish draining.
+            ctx.bench_pool = None;
+        }
+        // Mirrors the live coordinator's LEARNER-DISPATCHER loop
+        // (coordinator::serve step 2) — kept in sync by hand until a
+        // shared helper is worth the coupling.
+        if let Some(pool) = ctx.bench_pool.as_ref() {
+            while Instant::now() >= next_bench {
+                let lam = lambda_total(&ctx.lambda_slots);
+                let gap = dispatcher.next_gap(lam, &mut rng).unwrap_or(1.0).clamp(1e-3, 1.0);
+                let w = dispatcher.pick_worker(pool.len(), &mut rng);
+                pool[w].enqueue(LiveTask {
+                    job: u64::MAX,
+                    kind: TaskKind::Benchmark,
+                    demand: demand_dist.sample(&mut rng).max(1e-4),
+                    enqueued: Instant::now(),
+                });
+                benchmarks += 1;
+                next_bench += Duration::from_secs_f64(gap);
+            }
+        }
+        if Instant::now() >= next_publish {
+            let now_s = ctx.start.elapsed().as_secs_f64();
+            let lam = lambda_total(&ctx.lambda_slots);
+            perf.publish(now_s, lam);
+            ctx.table.publish(perf.mu_hat(), lam);
+            next_publish += Duration::from_secs_f64(ctx.publish_interval);
+        }
+    }
+    // Final publish so reports reflect the learner's last word.
+    let lam = lambda_total(&ctx.lambda_slots);
+    perf.publish(ctx.start.elapsed().as_secs_f64(), lam);
+    ctx.table.publish(perf.mu_hat(), lam);
+    AggOut { responses, mu_hat: perf.mu_hat().to_vec(), benchmarks }
+}
+
+/// Run the sharded scheduling plane to completion.
+pub fn run_plane(cfg: PlaneConfig) -> Result<PlaneReport, String> {
+    let n = cfg.speeds.len();
+    if n == 0 {
+        return Err("need at least one worker".into());
+    }
+    if cfg.frontends == 0 {
+        return Err("need at least one frontend".into());
+    }
+    if !(cfg.rate > 0.0 && cfg.duration > 0.0 && cfg.mean_demand > 0.0 && cfg.batch >= 1) {
+        return Err("rate, duration, mean demand, and batch must be positive".into());
+    }
+    let k = cfg.frontends;
+    let total_speed: f64 = cfg.speeds.iter().sum();
+    let prior = total_speed / n as f64;
+    let mu_bar = total_speed / cfg.mean_demand;
+    let policy_name = cfg.policy.build(n).name();
+
+    // The shared worker pool.
+    let (comp_tx, comp_rx) = std::sync::mpsc::channel::<Completion>();
+    let workers: Vec<WorkerHandle> = cfg
+        .speeds
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| worker::spawn(i, s, PayloadMode::Sleep, comp_tx.clone()))
+        .collect();
+    drop(comp_tx);
+    let qlen: Vec<Arc<AtomicUsize>> = workers.iter().map(|w| w.client.qlen.clone()).collect();
+
+    // Lock-free shared state.
+    let table = Arc::new(EstimateTable::new(n, prior));
+    let stop = Arc::new(AtomicBool::new(false));
+    let completed_real = Arc::new(AtomicU64::new(0));
+    let lambda_slots: Vec<Arc<AtomicU64>> =
+        (0..k).map(|_| Arc::new(AtomicU64::new(0f64.to_bits()))).collect();
+    let start = Instant::now();
+
+    // The aggregator (single learner writer).
+    let agg = {
+        let ctx = AggCtx {
+            comp_rx,
+            table: table.clone(),
+            stop: stop.clone(),
+            completed_real: completed_real.clone(),
+            lambda_slots: lambda_slots.clone(),
+            bench_pool: (cfg.mode == DispatchMode::Execute && cfg.fake_jobs)
+                .then(|| workers.iter().map(|w| w.client.clone()).collect()),
+            shards: k,
+            n,
+            prior,
+            mu_bar,
+            mean_demand: cfg.mean_demand,
+            warmup: cfg.warmup,
+            publish_interval: cfg.publish_interval,
+            seed: cfg.seed,
+            start,
+        };
+        std::thread::Builder::new()
+            .name("rosella-plane-agg".into())
+            .spawn(move || aggregate(ctx))
+            .map_err(|e| format!("spawn aggregator: {e}"))?
+    };
+
+    // The frontend shards.
+    let mut shard_handles = Vec::with_capacity(k);
+    for i in 0..k {
+        let ctx = shard::ShardRun {
+            id: i,
+            policy: cfg.policy.clone(),
+            n,
+            prior,
+            mean_demand: cfg.mean_demand,
+            rate: cfg.rate / k as f64,
+            batch: cfg.batch,
+            seed: cfg.seed,
+            mode: cfg.mode,
+            max_decisions: cfg.max_decisions,
+            record_placements: cfg.record_placements,
+            workers: workers.iter().map(|w| w.client.clone()).collect(),
+            qlen: qlen.clone(),
+            table: table.clone(),
+            lambda_slot: lambda_slots[i].clone(),
+            stop: stop.clone(),
+            start,
+        };
+        shard_handles.push(
+            std::thread::Builder::new()
+                .name(format!("rosella-shard-{i}"))
+                .spawn(move || shard::run_shard(ctx))
+                .map_err(|e| format!("spawn shard {i}: {e}"))?,
+        );
+    }
+
+    // Serve until the deadline (or until budgeted shards finish early).
+    let deadline = start + Duration::from_secs_f64(cfg.duration);
+    while Instant::now() < deadline && !shard_handles.iter().all(|h| h.is_finished()) {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    stop.store(true, Ordering::Relaxed);
+
+    let mut decisions = 0u64;
+    let mut dispatched = 0u64;
+    let mut per_shard_decisions = Vec::with_capacity(k);
+    let mut placements = Vec::with_capacity(k);
+    for h in shard_handles {
+        let s = h.join().map_err(|_| "shard thread panicked".to_string())?;
+        decisions += s.decisions;
+        dispatched += s.dispatched;
+        per_shard_decisions.push(s.decisions);
+        placements.push(s.placements);
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+
+    // Drain-time conservation snapshot. Completions are read *before* the
+    // queue probes: a completion increment happens after its queue-length
+    // decrement, so completed_at_stop + queued_at_stop never exceeds
+    // dispatched (the remainder is tasks mid-handoff).
+    let completed_at_stop = completed_real.load(Ordering::Acquire);
+    let queued_at_stop: usize = qlen.iter().map(|q| q.load(Ordering::Relaxed)).sum();
+
+    // Shut the pool down: every sender drops, workers drain their queues
+    // and exit, the aggregator sees the channel disconnect and returns.
+    for w in workers {
+        w.shutdown();
+    }
+    let out = agg.join().map_err(|_| "aggregator thread panicked".to_string())?;
+    let completed = completed_real.load(Ordering::Acquire);
+
+    let mut responses = ResponseRecorder::new(cfg.warmup);
+    for r in &out.responses {
+        responses.merge(r);
+    }
+    let estimates: Vec<(f64, f64)> =
+        cfg.speeds.iter().zip(out.mu_hat.iter()).map(|(&t, &e)| (t, e)).collect();
+    Ok(PlaneReport {
+        frontends: k,
+        workers: n,
+        mode: cfg.mode,
+        policy: policy_name,
+        elapsed,
+        decisions,
+        decisions_per_sec: decisions as f64 / elapsed,
+        per_shard_decisions,
+        dispatched,
+        completed,
+        completed_at_stop,
+        queued_at_stop,
+        benchmarks: out.benchmarks,
+        responses,
+        estimates,
+        placements,
+    })
+}
+
+/// Run the plane once per frontend count in `sweep` with otherwise
+/// identical configuration — the throughput-scaling harness.
+pub fn sweep(base: &PlaneConfig, frontend_counts: &[usize]) -> Result<Vec<PlaneReport>, String> {
+    let mut reports = Vec::with_capacity(frontend_counts.len());
+    for &k in frontend_counts {
+        let cfg = PlaneConfig { frontends: k, ..base.clone() };
+        reports.push(run_plane(cfg)?);
+    }
+    Ok(reports)
+}
+
+/// Machine-readable sweep results (`BENCH_plane.json`) so future changes
+/// can track the throughput trajectory.
+pub fn bench_json(base: &PlaneConfig, reports: &[PlaneReport]) -> crate::config::Json {
+    use crate::config::Json;
+    use std::collections::BTreeMap;
+    let results: Vec<Json> = reports
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("frontends".into(), Json::Num(r.frontends as f64));
+            m.insert("decisions".into(), Json::Num(r.decisions as f64));
+            m.insert("decisions_per_sec".into(), Json::Num(r.decisions_per_sec.round()));
+            m.insert("dispatched".into(), Json::Num(r.dispatched as f64));
+            m.insert("completed".into(), Json::Num(r.completed as f64));
+            let five = r.responses.five_num();
+            m.insert("mean_ms".into(), Json::Num(r.responses.mean() * 1e3));
+            m.insert("p50_ms".into(), Json::Num(five.p50 * 1e3));
+            m.insert("p95_ms".into(), Json::Num(five.p95 * 1e3));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Json::Str("plane".into()));
+    top.insert("mode".into(), Json::Str(base.mode.name().into()));
+    top.insert("policy".into(), Json::Str(base.policy.build(base.speeds.len()).name()));
+    top.insert("workers".into(), Json::Num(base.speeds.len() as f64));
+    top.insert("rate".into(), Json::Num(base.rate));
+    top.insert("duration".into(), Json::Num(base.duration));
+    top.insert("seed".into(), Json::Num(base.seed as f64));
+    top.insert("results".into(), Json::Arr(results));
+    Json::Obj(top)
+}
+
+/// CLI adapter for `rosella plane`.
+pub fn plane_cli(p: &crate::cli::Parsed) -> Result<String, String> {
+    let workers: usize = p.parse_as("workers")?.unwrap_or(8);
+    let speeds = match p.get("speeds") {
+        Some(s) => crate::cluster::SpeedProfile::parse(s)?.speeds(&mut Rng::new(1)),
+        None => {
+            let base = [2.0, 1.0, 1.0, 1.0, 0.5, 0.5, 0.25, 0.25];
+            (0..workers).map(|i| base[i % base.len()]).collect()
+        }
+    };
+    let frontend_counts: Vec<usize> = p
+        .get("frontends")
+        .unwrap_or("1,2,4")
+        .split(',')
+        .map(|t| t.trim().parse::<usize>().map_err(|e| format!("bad frontend count: {e}")))
+        .collect::<Result<_, _>>()?;
+    if frontend_counts.is_empty() {
+        return Err("need at least one frontend count".into());
+    }
+    let base = PlaneConfig {
+        speeds,
+        policy: PolicyKind::parse(p.get("policy").unwrap_or("ppot"))?,
+        rate: p.parse_as("rate")?.unwrap_or(400.0),
+        duration: p.parse_as("duration")?.unwrap_or(3.0),
+        mean_demand: p.parse_as("demand")?.unwrap_or(0.01),
+        batch: p.parse_as("batch")?.unwrap_or(64),
+        seed: p.parse_as("seed")?.unwrap_or(42),
+        mode: if p.flag("decide-only") { DispatchMode::DecideOnly } else { DispatchMode::Execute },
+        fake_jobs: !p.flag("no-fake-jobs"),
+        ..PlaneConfig::default()
+    };
+    let reports = sweep(&base, &frontend_counts)?;
+
+    let mut out = String::new();
+    for r in &reports {
+        out.push_str(&r.render());
+        out.push('\n');
+    }
+    out.push_str("frontends   decisions/s   speedup   p50 ms   p95 ms\n");
+    let base_rate = reports[0].decisions_per_sec.max(1.0);
+    for r in &reports {
+        let five = r.responses.five_num();
+        out.push_str(&format!(
+            "{:>9}   {:>11.0}   {:>7.2}   {:>6.1}   {:>6.1}\n",
+            r.frontends,
+            r.decisions_per_sec,
+            r.decisions_per_sec / base_rate,
+            five.p50 * 1e3,
+            five.p95 * 1e3
+        ));
+    }
+    if let Some(path) = p.get("json") {
+        let doc = crate::config::to_string(&bench_json(&base, &reports));
+        std::fs::write(path, doc).map_err(|e| format!("write {path}: {e}"))?;
+        out.push_str(&format!("wrote {path}\n"));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::JobSpec;
+
+    fn quick(frontends: usize, mode: DispatchMode) -> PlaneConfig {
+        PlaneConfig {
+            speeds: vec![1.0, 0.5, 0.25, 2.0],
+            frontends,
+            rate: 400.0,
+            duration: 1.2,
+            mean_demand: 0.003,
+            publish_interval: 0.1,
+            mode,
+            ..PlaneConfig::default()
+        }
+    }
+
+    #[test]
+    fn single_shard_plane_matches_live_coordinator_decision_sequence() {
+        // A one-shard plane with idle workers must reproduce, decision for
+        // decision, what the live coordinator's FrontendCore produces for
+        // the same seed — the placement stream is a pure function of the
+        // seed schedule shared by both paths.
+        let cfg = PlaneConfig {
+            frontends: 1,
+            mode: DispatchMode::DecideOnly,
+            max_decisions: Some(400),
+            record_placements: true,
+            fake_jobs: false,
+            duration: 30.0,
+            ..quick(1, DispatchMode::DecideOnly)
+        };
+        let report = run_plane(cfg.clone()).unwrap();
+        assert_eq!(report.decisions, 400);
+        assert_eq!(report.placements[0].len(), 400);
+        assert_eq!(report.dispatched, 0, "decide-only must not dispatch");
+
+        // Replay the live coordinator's decision path: same seed schedule,
+        // same arrival stream, zero queue probes.
+        let n = cfg.speeds.len();
+        let prior = cfg.speeds.iter().sum::<f64>() / n as f64;
+        let (core_seed, stream_seed) = shard_seeds(cfg.seed, 0);
+        let mut core =
+            FrontendCore::new(&cfg.policy, n, prior, cfg.mean_demand, 128, core_seed);
+        let mut rng = Rng::new(stream_seed);
+        let mut batcher = ArrivalBatcher::new(cfg.rate, cfg.mean_demand, cfg.batch);
+        let mut batch = Vec::new();
+        let zeros = vec![0usize; n];
+        let mut job = JobSpec::single(cfg.mean_demand);
+        let mut expected = Vec::with_capacity(400);
+        'outer: loop {
+            batcher.fill(&mut rng, &mut batch);
+            for a in &batch {
+                if expected.len() == 400 {
+                    break 'outer;
+                }
+                core.on_arrival(a.at, 1);
+                job.tasks[0].demand = a.demand;
+                expected.push(core.decide_local(&job, &zeros));
+            }
+        }
+        assert_eq!(report.placements[0], expected, "plane diverged from coordinator core");
+    }
+
+    #[test]
+    fn four_shard_run_conserves_tasks() {
+        let report = run_plane(quick(4, DispatchMode::Execute)).unwrap();
+        assert!(report.dispatched > 100, "dispatched {}", report.dispatched);
+        // After the full drain every dispatched task completed exactly once.
+        assert_eq!(
+            report.completed, report.dispatched,
+            "tasks lost or duplicated across the drain"
+        );
+        // The stop-instant snapshot can only under-count mid-handoff tasks.
+        assert!(
+            report.completed_at_stop + report.queued_at_stop as u64 <= report.dispatched,
+            "at-stop accounting over-counts: {} + {} > {}",
+            report.completed_at_stop,
+            report.queued_at_stop,
+            report.dispatched
+        );
+        // All four shards actually scheduled work.
+        assert_eq!(report.per_shard_decisions.len(), 4);
+        assert!(report.per_shard_decisions.iter().all(|&d| d > 0), "idle shard");
+        // Cross-shard latency merge saw every completed job.
+        assert_eq!(report.responses.count() as u64, report.completed);
+    }
+
+    #[test]
+    fn plane_learns_speed_ordering_across_shards() {
+        let cfg = PlaneConfig {
+            speeds: vec![2.0, 0.4],
+            frontends: 2,
+            rate: 300.0,
+            duration: 2.0,
+            mean_demand: 0.004,
+            publish_interval: 0.1,
+            ..PlaneConfig::default()
+        };
+        let report = run_plane(cfg).unwrap();
+        assert!(report.completed > 100, "completed {}", report.completed);
+        let (t0, e0) = report.estimates[0];
+        let (t1, e1) = report.estimates[1];
+        assert!(
+            e0 > e1,
+            "shared learner failed to order speeds: {e0} vs {e1} (true {t0} vs {t1})"
+        );
+        assert!(report.benchmarks > 0, "benchmark dispatcher idle");
+    }
+
+    #[test]
+    fn decision_budget_stops_every_shard() {
+        let cfg = PlaneConfig {
+            frontends: 2,
+            mode: DispatchMode::DecideOnly,
+            max_decisions: Some(1_000),
+            fake_jobs: false,
+            duration: 30.0,
+            ..quick(2, DispatchMode::DecideOnly)
+        };
+        let report = run_plane(cfg).unwrap();
+        assert_eq!(report.decisions, 2_000);
+        assert_eq!(report.per_shard_decisions, vec![1_000, 1_000]);
+        assert_eq!(report.dispatched, 0);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(run_plane(PlaneConfig { speeds: vec![], ..quick(1, DispatchMode::Execute) })
+            .is_err());
+        assert!(run_plane(PlaneConfig { frontends: 0, ..quick(1, DispatchMode::Execute) })
+            .is_err());
+        assert!(run_plane(PlaneConfig { rate: 0.0, ..quick(1, DispatchMode::Execute) }).is_err());
+    }
+
+    #[test]
+    fn bench_json_is_parseable_and_complete() {
+        let base = quick(1, DispatchMode::DecideOnly);
+        let cfg = PlaneConfig {
+            max_decisions: Some(200),
+            fake_jobs: false,
+            duration: 30.0,
+            ..base.clone()
+        };
+        let reports = vec![run_plane(cfg).unwrap()];
+        let doc = crate::config::to_string(&bench_json(&base, &reports));
+        let back = crate::config::parse(&doc).expect("bench json must round-trip");
+        match back {
+            crate::config::Json::Obj(m) => {
+                assert!(m.contains_key("results"));
+                assert!(m.contains_key("bench"));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,342 @@
+//! Frontend shards: the per-thread Rosella loop of the sharded plane.
+//!
+//! [`FrontendCore`] bundles exactly the state one scheduler frontend owns —
+//! a policy instance, an RNG, an arrival estimator, and a cache of the last
+//! published estimates — and exposes the scheduling decision two ways:
+//!
+//! * [`FrontendCore::decide_local`] over borrowed slices (the live
+//!   coordinator's single-frontend path);
+//! * [`FrontendCore::decide_shared`] over the plane's lock-free shared
+//!   state (atomic queue probes + seqlock estimate cache).
+//!
+//! Both paths run the *same* policy code against the same RNG stream, which
+//! is what makes a single-shard plane run reproduce the live coordinator's
+//! placement sequence decision-for-decision for a fixed seed.
+
+use super::ingest::ArrivalBatcher;
+use super::state::{EstimateCache, EstimateTable, SharedView};
+use super::DispatchMode;
+use crate::coordinator::worker::{LiveTask, WorkerClient};
+use crate::learner::ArrivalEstimator;
+use crate::scheduler::{Policy, PolicyKind};
+use crate::stats::{AliasTable, Rng, SplitMix64};
+use crate::types::{JobPlacement, JobSpec, LocalView, TaskKind, WorkerId};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Bits reserved for the within-shard job counter; the shard id lives in
+/// the bits above. 2^48 jobs per shard is unreachable in practice.
+pub const SHARD_SHIFT: u32 = 48;
+
+/// Encode a (shard, local job counter) pair into a task's job id.
+#[inline]
+pub fn encode_job(shard: usize, local: u64) -> u64 {
+    debug_assert!(local < (1u64 << SHARD_SHIFT));
+    ((shard as u64) << SHARD_SHIFT) | local
+}
+
+/// Shard that dispatched the job with this id.
+#[inline]
+pub fn job_shard(job: u64) -> usize {
+    (job >> SHARD_SHIFT) as usize
+}
+
+/// Deterministic per-shard seed schedule: `(core_seed, stream_seed)` for
+/// shard `i` of a plane seeded with `seed`. The core seed drives the policy
+/// RNG; the stream seed drives the arrival/demand stream.
+pub fn shard_seeds(seed: u64, shard: usize) -> (u64, u64) {
+    let mut sm = SplitMix64::new(seed);
+    let mut pair = (sm.next_u64(), sm.next_u64());
+    for _ in 0..shard {
+        pair = (sm.next_u64(), sm.next_u64());
+    }
+    pair
+}
+
+/// One scheduler frontend's complete decision state.
+pub struct FrontendCore {
+    policy: Box<dyn Policy>,
+    rng: Rng,
+    arrivals: ArrivalEstimator,
+    cache: EstimateCache,
+    /// Mean task demand τ̄ — converts λ̂ (tasks/s) into the service-rate
+    /// units `Policy::on_estimates` expects.
+    mean_demand: f64,
+}
+
+impl FrontendCore {
+    /// New frontend for `n` workers with the given prior estimate.
+    pub fn new(
+        kind: &PolicyKind,
+        n: usize,
+        prior: f64,
+        mean_demand: f64,
+        arrival_window: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(n > 0 && prior >= 0.0 && mean_demand > 0.0);
+        let mut policy = kind.build(n);
+        let cache = EstimateCache::new(n, prior);
+        policy.on_estimates(&cache.mu_hat, 0.0);
+        Self {
+            policy,
+            rng: Rng::new(seed),
+            arrivals: ArrivalEstimator::new(arrival_window),
+            cache,
+            mean_demand,
+        }
+    }
+
+    /// Feed the frontend's own arrival stream (estimator input).
+    pub fn on_arrival(&mut self, now: f64, tasks: usize) {
+        self.arrivals.on_arrival(now, tasks);
+    }
+
+    /// This frontend's arrival-rate estimate λ̂ (tasks/second).
+    pub fn lambda_or(&self, default: f64) -> f64 {
+        self.arrivals.lambda_or(default)
+    }
+
+    /// Current cached speed estimates.
+    pub fn mu_hat(&self) -> &[f64] {
+        &self.cache.mu_hat
+    }
+
+    /// Policy name (reports).
+    pub fn policy_name(&self) -> String {
+        self.policy.name()
+    }
+
+    /// Install fresh estimates directly (single-frontend drivers own the
+    /// learner and push to their core; plane frontends pull via
+    /// [`Self::maybe_refresh`] instead).
+    pub fn set_estimates(&mut self, mu_hat: &[f64], lambda_tasks: f64) {
+        self.cache.mu_hat.clear();
+        self.cache.mu_hat.extend_from_slice(mu_hat);
+        self.cache.sampler = AliasTable::new(&self.cache.mu_hat);
+        self.cache.lambda_tasks = lambda_tasks;
+        self.policy.on_estimates(&self.cache.mu_hat, lambda_tasks * self.mean_demand);
+    }
+
+    /// Re-read the shared estimate table iff its epoch moved since the last
+    /// refresh. The no-change case — the per-decision hot path — is a
+    /// single atomic load. Returns whether a refresh happened.
+    pub fn maybe_refresh(&mut self, table: &EstimateTable) -> bool {
+        if table.epoch() == self.cache.epoch {
+            return false;
+        }
+        let (lambda, epoch) = table.read(&mut self.cache.mu_hat);
+        self.cache.epoch = epoch;
+        self.cache.lambda_tasks = lambda;
+        self.cache.sampler = AliasTable::new(&self.cache.mu_hat);
+        self.policy.on_estimates(&self.cache.mu_hat, lambda * self.mean_demand);
+        true
+    }
+
+    /// Schedule one job against borrowed queue lengths (the live
+    /// coordinator's path). Single-task jobs are the serving case;
+    /// reservation placements degrade to the first probe.
+    pub fn decide_local(&mut self, job: &JobSpec, qlen: &[usize]) -> WorkerId {
+        let view = LocalView {
+            queue_len: qlen,
+            mu_hat: &self.cache.mu_hat,
+            sampler: &self.cache.sampler,
+            lambda_hat: self.arrivals.lambda_or(0.0),
+        };
+        flatten(self.policy.schedule_job(job, &view, &mut self.rng))
+    }
+
+    /// Schedule one job against the plane's shared state: atomic probes,
+    /// cached estimates, no locks, no copies.
+    pub fn decide_shared(&mut self, job: &JobSpec, qlen: &[Arc<AtomicUsize>]) -> WorkerId {
+        let view = SharedView { qlen, est: &self.cache };
+        flatten(self.policy.schedule_job(job, &view, &mut self.rng))
+    }
+}
+
+/// Collapse a placement to one worker (plane/coordinator serve single-task
+/// jobs; reservation policies degrade to their first probe).
+#[inline]
+fn flatten(placement: JobPlacement) -> WorkerId {
+    match placement {
+        JobPlacement::Single(w) => w,
+        JobPlacement::PerTask(ws) => ws[0],
+        JobPlacement::Reservations(ws) => ws[0],
+    }
+}
+
+/// Everything one shard thread needs, owned.
+pub(crate) struct ShardRun {
+    pub id: usize,
+    pub policy: PolicyKind,
+    pub n: usize,
+    pub prior: f64,
+    pub mean_demand: f64,
+    /// This shard's arrival rate (the aggregate rate split across shards).
+    pub rate: f64,
+    pub batch: usize,
+    pub seed: u64,
+    pub mode: DispatchMode,
+    pub max_decisions: Option<u64>,
+    pub record_placements: bool,
+    pub workers: Vec<WorkerClient>,
+    pub qlen: Vec<Arc<AtomicUsize>>,
+    pub table: Arc<EstimateTable>,
+    /// f64-bit slot where this shard publishes its λ̂ for the aggregator.
+    pub lambda_slot: Arc<AtomicU64>,
+    pub stop: Arc<AtomicBool>,
+    pub start: Instant,
+}
+
+/// What a shard reports back when it stops.
+#[derive(Debug)]
+pub(crate) struct ShardStats {
+    pub decisions: u64,
+    pub dispatched: u64,
+    pub placements: Vec<WorkerId>,
+}
+
+/// Cap on recorded placements (test instrumentation, not a metric).
+const MAX_RECORDED: usize = 100_000;
+
+/// The shard thread body: the full Rosella frontend loop.
+pub(crate) fn run_shard(ctx: ShardRun) -> ShardStats {
+    let (core_seed, stream_seed) = shard_seeds(ctx.seed, ctx.id);
+    let mut core =
+        FrontendCore::new(&ctx.policy, ctx.n, ctx.prior, ctx.mean_demand, 128, core_seed);
+    let mut stream_rng = Rng::new(stream_seed);
+    let mut batcher = ArrivalBatcher::new(ctx.rate, ctx.mean_demand, ctx.batch);
+    let mut batch = Vec::with_capacity(ctx.batch);
+    // Reused single-task job spec: no allocation per decision.
+    let mut job = JobSpec::single(ctx.mean_demand);
+    let mut stats = ShardStats { decisions: 0, dispatched: 0, placements: Vec::new() };
+    let mut local_jobs: u64 = 0;
+
+    'outer: while !ctx.stop.load(Ordering::Relaxed) {
+        batcher.fill(&mut stream_rng, &mut batch);
+        for a in &batch {
+            if let Some(maxd) = ctx.max_decisions {
+                if stats.decisions >= maxd {
+                    break 'outer;
+                }
+            }
+            if ctx.mode == DispatchMode::Execute {
+                // Pace the batch: dispatch each arrival when it is due.
+                loop {
+                    let elapsed = ctx.start.elapsed().as_secs_f64();
+                    if elapsed >= a.at {
+                        break;
+                    }
+                    if ctx.stop.load(Ordering::Relaxed) {
+                        break 'outer;
+                    }
+                    std::thread::sleep(Duration::from_secs_f64((a.at - elapsed).min(1e-3)));
+                }
+            }
+            core.on_arrival(a.at, 1);
+            core.maybe_refresh(&ctx.table);
+            job.tasks[0].demand = a.demand;
+            let w = core.decide_shared(&job, &ctx.qlen);
+            stats.decisions += 1;
+            if ctx.record_placements && stats.placements.len() < MAX_RECORDED {
+                stats.placements.push(w);
+            }
+            if ctx.mode == DispatchMode::Execute {
+                ctx.workers[w].enqueue(LiveTask {
+                    job: encode_job(ctx.id, local_jobs),
+                    kind: TaskKind::Real,
+                    demand: a.demand,
+                    enqueued: ctx.start + Duration::from_secs_f64(a.at),
+                });
+                local_jobs += 1;
+                stats.dispatched += 1;
+            }
+            ctx.lambda_slot.store(core.lambda_or(0.0).to_bits(), Ordering::Relaxed);
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_id_encoding_round_trips() {
+        for shard in [0usize, 1, 7, 255] {
+            for local in [0u64, 1, 999_999] {
+                let id = encode_job(shard, local);
+                assert_eq!(job_shard(id), shard);
+                assert_eq!(id & ((1 << SHARD_SHIFT) - 1), local);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_seed_schedule_is_deterministic_and_distinct() {
+        let a = shard_seeds(42, 0);
+        let b = shard_seeds(42, 0);
+        assert_eq!(a, b);
+        let c = shard_seeds(42, 1);
+        assert_ne!(a, c);
+        assert_ne!(shard_seeds(43, 0), a);
+    }
+
+    #[test]
+    fn local_and_shared_views_yield_identical_decision_streams() {
+        // The plane's lock-free view must be decision-equivalent to the
+        // coordinator's borrowed-slice view when probes and estimates agree.
+        let kind = PolicyKind::PPoT { tie: crate::scheduler::TieRule::Sq2, late_binding: false };
+        let n = 6;
+        let mut a = FrontendCore::new(&kind, n, 1.0, 0.01, 128, 99);
+        let mut b = FrontendCore::new(&kind, n, 1.0, 0.01, 128, 99);
+        let zeros = vec![0usize; n];
+        let shared: Vec<Arc<AtomicUsize>> =
+            (0..n).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+        let job = JobSpec::single(0.02);
+        for k in 0..2_000 {
+            let t = k as f64 * 0.001;
+            a.on_arrival(t, 1);
+            b.on_arrival(t, 1);
+            assert_eq!(a.decide_local(&job, &zeros), b.decide_shared(&job, &shared));
+        }
+    }
+
+    #[test]
+    fn refresh_is_noop_until_publish_then_applies() {
+        let kind = PolicyKind::Pss;
+        let n = 3;
+        let table = EstimateTable::new(n, 1.0);
+        let mut core = FrontendCore::new(&kind, n, 1.0, 0.1, 64, 5);
+        assert!(!core.maybe_refresh(&table), "fresh table must be a no-op");
+        table.publish(&[0.0, 0.0, 9.0], 12.0);
+        assert!(core.maybe_refresh(&table));
+        assert_eq!(core.mu_hat(), &[0.0, 0.0, 9.0]);
+        assert!(!core.maybe_refresh(&table), "second refresh must be a no-op");
+        // The rebuilt sampler must reflect the new weights.
+        let shared: Vec<Arc<AtomicUsize>> =
+            (0..n).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+        let job = JobSpec::single(0.1);
+        for _ in 0..200 {
+            assert_eq!(core.decide_shared(&job, &shared), 2, "all estimate mass on worker 2");
+        }
+    }
+
+    #[test]
+    fn shared_probes_steer_sq2_to_short_queues() {
+        let kind = PolicyKind::PPoT { tie: crate::scheduler::TieRule::Sq2, late_binding: false };
+        let mut core = FrontendCore::new(&kind, 2, 1.0, 0.1, 64, 11);
+        let shared: Vec<Arc<AtomicUsize>> = vec![
+            Arc::new(AtomicUsize::new(50)),
+            Arc::new(AtomicUsize::new(0)),
+        ];
+        let job = JobSpec::single(0.1);
+        let n = 20_000;
+        let ones = (0..n)
+            .filter(|_| core.decide_shared(&job, &shared) == 1)
+            .count();
+        // P(choose worker 1) = 1 − P(both probes hit 0) = 3/4.
+        assert!((ones as f64 / n as f64 - 0.75).abs() < 0.01, "frac {}", ones as f64 / n as f64);
+    }
+}

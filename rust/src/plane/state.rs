@@ -1,0 +1,267 @@
+//! Lock-free shared state of the sharded scheduling plane.
+//!
+//! The plane's frontends coordinate through exactly two mechanisms, both
+//! lock-free on the per-decision hot path (§2's "minimum coordination"):
+//!
+//! * **queue-length probes** — each worker owns an `Arc<AtomicUsize>`
+//!   counter (the same probe the live coordinator uses); frontends read it
+//!   with a relaxed atomic load per probe, never copying the whole vector;
+//! * **the estimate table** — a seqlock-published table of speed estimates
+//!   μ̂ and the aggregate arrival estimate λ̂, written by the single
+//!   aggregator thread and read by every frontend. Frontends poll the
+//!   table's epoch (one atomic load per decision) and re-read the table —
+//!   rebuilding their local alias sampler — only when it changed, which
+//!   happens at the publish interval, not per task.
+//!
+//! The seqlock follows the standard atomic-data pattern (writer: odd
+//! sequence → release fence → data stores → even sequence with release;
+//! reader: acquire load → data loads → acquire fence → sequence re-check),
+//! with every slot an `AtomicU64` holding f64 bits so there is no unsafe
+//! code and no possibility of a data race — the sequence check only guards
+//! against mixing elements from two publishes.
+
+use crate::stats::AliasTable;
+use crate::types::{ClusterView, WorkerId};
+use std::sync::atomic::{fence, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Seqlock-published estimate table: μ̂ per worker plus the aggregate λ̂.
+///
+/// Single writer (the plane's aggregator), any number of readers.
+#[derive(Debug)]
+pub struct EstimateTable {
+    /// Sequence counter: even = stable, odd = publish in progress.
+    seq: AtomicU64,
+    /// f64 bit patterns of μ̂ per worker.
+    mu_bits: Box<[AtomicU64]>,
+    /// f64 bit pattern of the aggregate λ̂ (tasks/second).
+    lambda_bits: AtomicU64,
+}
+
+impl EstimateTable {
+    /// Table for `n` workers, initialized to the prior estimate and λ̂ = 0.
+    pub fn new(n: usize, prior: f64) -> Self {
+        assert!(n > 0, "estimate table over empty cluster");
+        Self {
+            seq: AtomicU64::new(0),
+            mu_bits: (0..n).map(|_| AtomicU64::new(prior.to_bits())).collect(),
+            lambda_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    /// Number of workers.
+    pub fn n(&self) -> usize {
+        self.mu_bits.len()
+    }
+
+    /// Publish a new estimate vector. Must only be called from one thread
+    /// at a time (the aggregator); readers never block.
+    pub fn publish(&self, mu_hat: &[f64], lambda_tasks: f64) {
+        assert_eq!(mu_hat.len(), self.mu_bits.len(), "estimate vector length mismatch");
+        let s = self.seq.fetch_add(1, Ordering::Relaxed); // now odd
+        debug_assert!(s % 2 == 0, "concurrent EstimateTable publisher");
+        fence(Ordering::Release);
+        for (slot, &v) in self.mu_bits.iter().zip(mu_hat) {
+            slot.store(v.to_bits(), Ordering::Relaxed);
+        }
+        self.lambda_bits.store(lambda_tasks.to_bits(), Ordering::Relaxed);
+        self.seq.store(s.wrapping_add(2), Ordering::Release);
+    }
+
+    /// Current publication epoch (even when stable). One atomic load — the
+    /// per-decision staleness probe.
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.seq.load(Ordering::Acquire)
+    }
+
+    /// Read a consistent snapshot into `mu_out`; returns `(λ̂, epoch)`.
+    /// Spins only while a publish is in flight (microseconds).
+    pub fn read(&self, mu_out: &mut [f64]) -> (f64, u64) {
+        assert_eq!(mu_out.len(), self.mu_bits.len(), "estimate buffer length mismatch");
+        loop {
+            let s1 = self.seq.load(Ordering::Acquire);
+            if s1 % 2 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            for (out, slot) in mu_out.iter_mut().zip(self.mu_bits.iter()) {
+                *out = f64::from_bits(slot.load(Ordering::Relaxed));
+            }
+            let lambda = f64::from_bits(self.lambda_bits.load(Ordering::Relaxed));
+            fence(Ordering::Acquire);
+            let s2 = self.seq.load(Ordering::Relaxed);
+            if s1 == s2 {
+                return (lambda, s1);
+            }
+            std::hint::spin_loop();
+        }
+    }
+
+    /// Convenience snapshot for reports and tests.
+    pub fn snapshot(&self) -> (Vec<f64>, f64) {
+        let mut mu = vec![0.0; self.n()];
+        let (lambda, _) = self.read(&mut mu);
+        (mu, lambda)
+    }
+}
+
+/// A frontend's private cache of the last estimate-table read: the μ̂
+/// vector, the O(1) proportional sampler rebuilt from it, the aggregate λ̂,
+/// and the epoch the cache corresponds to.
+#[derive(Debug, Clone)]
+pub struct EstimateCache {
+    /// Cached speed estimates.
+    pub mu_hat: Vec<f64>,
+    /// Alias sampler over `mu_hat` (rebuilt on refresh, never per task).
+    pub sampler: AliasTable,
+    /// Cached aggregate arrival-rate estimate (tasks/second).
+    pub lambda_tasks: f64,
+    /// Epoch of the table publication this cache reflects.
+    pub epoch: u64,
+}
+
+impl EstimateCache {
+    /// Cache initialized to the prior (matches a fresh [`EstimateTable`]).
+    pub fn new(n: usize, prior: f64) -> Self {
+        let mu_hat = vec![prior; n];
+        Self { sampler: AliasTable::new(&mu_hat), mu_hat, lambda_tasks: 0.0, epoch: 0 }
+    }
+}
+
+/// [`ClusterView`] over the plane's shared state: atomic queue-length
+/// probes plus a frontend's estimate cache. No locks, no copies — a
+/// scheduling decision touches exactly the probed workers.
+pub struct SharedView<'a> {
+    /// Per-worker queue-length probes (shared with the worker threads).
+    pub qlen: &'a [Arc<AtomicUsize>],
+    /// The deciding frontend's estimate cache.
+    pub est: &'a EstimateCache,
+}
+
+impl ClusterView for SharedView<'_> {
+    fn n(&self) -> usize {
+        self.qlen.len()
+    }
+
+    #[inline]
+    fn queue_len(&self, w: WorkerId) -> usize {
+        self.qlen[w].load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    fn mu_hat(&self, w: WorkerId) -> f64 {
+        self.est.mu_hat[w]
+    }
+
+    fn lambda_hat(&self) -> f64 {
+        self.est.lambda_tasks
+    }
+
+    #[inline]
+    fn sample(&self, rng: &mut crate::stats::Rng) -> WorkerId {
+        self.est.sampler.sample(rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    #[test]
+    fn table_roundtrip() {
+        let t = EstimateTable::new(3, 1.0);
+        assert_eq!(t.n(), 3);
+        let (mu, lambda) = t.snapshot();
+        assert_eq!(mu, vec![1.0; 3]);
+        assert_eq!(lambda, 0.0);
+        let e0 = t.epoch();
+        t.publish(&[2.0, 0.5, 1.5], 42.0);
+        assert_eq!(t.epoch(), e0 + 2);
+        let (mu, lambda) = t.snapshot();
+        assert_eq!(mu, vec![2.0, 0.5, 1.5]);
+        assert_eq!(lambda, 42.0);
+    }
+
+    #[test]
+    fn concurrent_readers_never_observe_torn_vectors() {
+        // The writer always publishes [k; n] with λ = k; any mix of two
+        // publishes would make the elements disagree.
+        let n = 16;
+        let table = Arc::new(EstimateTable::new(n, 0.0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let total_reads = Arc::new(AtomicU64::new(0));
+        let mut readers = Vec::new();
+        for _ in 0..3 {
+            let table = table.clone();
+            let stop = stop.clone();
+            let total_reads = total_reads.clone();
+            readers.push(std::thread::spawn(move || {
+                let mut buf = vec![0.0; n];
+                while !stop.load(Ordering::Relaxed) {
+                    let (lambda, epoch) = table.read(&mut buf);
+                    assert_eq!(epoch % 2, 0);
+                    let first = buf[0];
+                    assert!(
+                        buf.iter().all(|&v| v == first),
+                        "torn read at epoch {epoch}: {buf:?}"
+                    );
+                    assert_eq!(lambda, first, "λ̂ torn from μ̂ at epoch {epoch}");
+                    total_reads.fetch_add(1, Ordering::Relaxed);
+                }
+            }));
+        }
+        // Keep publishing until the readers have demonstrably overlapped
+        // with plenty of publishes.
+        let mut k = 0u64;
+        while k < 20_000 || total_reads.load(Ordering::Relaxed) < 100 {
+            table.publish(&vec![k as f64; n], k as f64);
+            k += 1;
+        }
+        stop.store(true, Ordering::Relaxed);
+        for r in readers {
+            r.join().unwrap();
+        }
+        assert!(total_reads.load(Ordering::Relaxed) >= 100);
+    }
+
+    #[test]
+    fn epoch_advances_only_on_publish() {
+        let t = EstimateTable::new(2, 1.0);
+        let e = t.epoch();
+        let _ = t.snapshot();
+        assert_eq!(t.epoch(), e, "reads must not perturb the epoch");
+        t.publish(&[1.0, 1.0], 0.0);
+        assert_eq!(t.epoch(), e + 2);
+    }
+
+    #[test]
+    fn shared_view_reads_probes_and_cache() {
+        use crate::stats::Rng;
+        let qlen: Vec<Arc<AtomicUsize>> =
+            (0..3).map(|i| Arc::new(AtomicUsize::new(i))).collect();
+        let mut est = EstimateCache::new(3, 1.0);
+        est.mu_hat = vec![0.0, 0.0, 5.0];
+        est.sampler = AliasTable::new(&est.mu_hat);
+        est.lambda_tasks = 7.0;
+        let view = SharedView { qlen: &qlen, est: &est };
+        assert_eq!(view.n(), 3);
+        assert_eq!(view.queue_len(2), 2);
+        assert_eq!(ClusterView::mu_hat(&view, 2), 5.0);
+        assert_eq!(view.lambda_hat(), 7.0);
+        let mut rng = Rng::new(9);
+        for _ in 0..100 {
+            assert_eq!(view.sample(&mut rng), 2, "all weight on worker 2");
+        }
+        qlen[0].store(9, Ordering::Relaxed);
+        assert_eq!(view.queue_len(0), 9, "probe sees live counter updates");
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_publish_rejected() {
+        let t = EstimateTable::new(3, 1.0);
+        t.publish(&[1.0, 2.0], 0.0);
+    }
+}

@@ -4,7 +4,9 @@
 //! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md and aot.py).
 
-use anyhow::{Context, Result};
+/// String-error result: keeps the `pjrt` feature free of the
+/// `anyhow` dependency (unavailable offline).
+pub type Result<T> = std::result::Result<T, String>;
 
 /// A PJRT client (CPU).
 pub struct Runtime {
@@ -14,7 +16,8 @@ pub struct Runtime {
 impl Runtime {
     /// Create the CPU client.
     pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| format!("create PJRT CPU client: {e}"))?;
         Ok(Self { client })
     }
 
@@ -26,9 +29,10 @@ impl Runtime {
     /// Load an HLO-text artifact and compile it.
     pub fn load(&self, path: &str) -> Result<Executable> {
         let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parse HLO text {path}"))?;
+            .map_err(|e| format!("parse HLO text {path}: {e}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).with_context(|| format!("compile {path}"))?;
+        let exe =
+            self.client.compile(&comp).map_err(|e| format!("compile {path}: {e}"))?;
         Ok(Executable { exe })
     }
 }
@@ -43,35 +47,42 @@ impl Executable {
     /// `return_tuple=True`, so the single output is a 1-tuple whose element
     /// is returned.
     pub fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
-        let result = self.exe.execute::<xla::Literal>(inputs).context("execute artifact")?;
-        let out = result[0][0].to_literal_sync().context("fetch result")?;
-        out.to_tuple1().context("unwrap 1-tuple output")
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| format!("execute artifact: {e}"))?;
+        let out = result[0][0].to_literal_sync().map_err(|e| format!("fetch result: {e}"))?;
+        out.to_tuple1().map_err(|e| format!("unwrap 1-tuple output: {e}"))
     }
 
     /// Execute and decode the output as a flat f32 vector.
     pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
-        self.run(inputs)?.to_vec::<f32>().context("decode f32 output")
+        self.run(inputs)?.to_vec::<f32>().map_err(|e| format!("decode f32 output: {e}"))
     }
 }
 
 /// Build an f32 literal of the given shape from row-major data.
 pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
     let numel: i64 = dims.iter().product();
-    anyhow::ensure!(numel as usize == data.len(), "shape {dims:?} vs {} elems", data.len());
+    if numel as usize != data.len() {
+        return Err(format!("shape {dims:?} vs {} elems", data.len()));
+    }
     if dims.len() == 1 {
         return Ok(xla::Literal::vec1(data));
     }
-    xla::Literal::vec1(data).reshape(dims).context("reshape literal")
+    xla::Literal::vec1(data).reshape(dims).map_err(|e| format!("reshape literal: {e}"))
 }
 
 /// Build an i32 literal of the given shape.
 pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
     let numel: i64 = dims.iter().product();
-    anyhow::ensure!(numel as usize == data.len(), "shape {dims:?} vs {} elems", data.len());
+    if numel as usize != data.len() {
+        return Err(format!("shape {dims:?} vs {} elems", data.len()));
+    }
     if dims.len() == 1 {
         return Ok(xla::Literal::vec1(data));
     }
-    xla::Literal::vec1(data).reshape(dims).context("reshape literal")
+    xla::Literal::vec1(data).reshape(dims).map_err(|e| format!("reshape literal: {e}"))
 }
 
 #[cfg(test)]

@@ -6,9 +6,8 @@
 //! artifact; both implement the identical Fig. 6 rule and a test checks
 //! they agree numerically.
 
-use super::client::{literal_f32, literal_i32, Executable, Runtime};
+use super::client::{literal_f32, literal_i32, Executable, Result, Runtime};
 use crate::learner::{LearnerParams, PerfLearner};
-use anyhow::Result;
 
 /// Worker count baked into the artifact (pad smaller clusters).
 pub const N_WORKERS: usize = 16;
@@ -62,7 +61,9 @@ impl LearnerKernel {
         cold_start: bool,
     ) -> Result<Vec<f32>> {
         let n = learner.n();
-        anyhow::ensure!(n <= N_WORKERS, "cluster of {n} exceeds artifact capacity {N_WORKERS}");
+        if n > N_WORKERS {
+            return Err(format!("cluster of {n} exceeds artifact capacity {N_WORKERS}"));
+        }
         let (dur, dem, age, cnt) = learner.export_dense(now, K_SAMPLES);
         // Pad to the artifact's worker count.
         let mut pdur = vec![0.0f32; N_WORKERS * K_SAMPLES];

@@ -3,8 +3,7 @@
 //! Shapes are fixed at AOT time (python/compile/kernels/payload.py):
 //! x f32[8,128] → f32[8,128] through a 128→256→128 MLP.
 
-use super::client::{literal_f32, Executable, Runtime};
-use anyhow::Result;
+use super::client::{literal_f32, Executable, Result, Runtime};
 
 /// Batch size baked into the artifact.
 pub const BATCH: usize = 8;
@@ -44,7 +43,9 @@ impl PayloadRunner {
 
     /// Run one inference batch; returns the flat f32[BATCH, D_OUT] output.
     pub fn infer(&self, x: &[f32]) -> Result<Vec<f32>> {
-        anyhow::ensure!(x.len() == BATCH * D_IN, "bad input length {}", x.len());
+        if x.len() != BATCH * D_IN {
+            return Err(format!("bad input length {}", x.len()));
+        }
         let inputs = [
             literal_f32(x, &[BATCH as i64, D_IN as i64])?,
             literal_f32(&self.w1, &[D_IN as i64, D_H as i64])?,

@@ -1,0 +1,91 @@
+//! Offline stand-ins for the PJRT runtime (built when the `pjrt` feature
+//! is off, which is the default in environments without the `xla` crate).
+//!
+//! Every type mirrors the real module's API; the loaders return an error,
+//! so call sites that probe for artifacts — the live coordinator's payload
+//! and learner paths, `bench_runtime` — fall back to their native
+//! implementations exactly as they do when `make artifacts` has not run.
+
+use crate::learner::{LearnerParams, PerfLearner};
+
+/// Batch size baked into the (absent) payload artifact.
+pub const BATCH: usize = 8;
+/// Input feature width.
+pub const D_IN: usize = 128;
+/// Output width.
+pub const D_OUT: usize = 128;
+
+const UNAVAILABLE: &str = "built without the `pjrt` feature (xla crate not vendored)";
+
+/// Constants of the learner artifact, mirrored from `learner_exec`.
+pub mod learner_exec {
+    /// Worker count baked into the artifact (pad smaller clusters).
+    pub const N_WORKERS: usize = 16;
+    /// Ring-buffer depth baked into the artifact.
+    pub const K_SAMPLES: usize = 64;
+}
+
+/// Stub payload runner; loading always fails.
+pub struct PayloadRunner {
+    _private: (),
+}
+
+impl PayloadRunner {
+    /// Always fails: the PJRT backend is not compiled in.
+    pub fn load(_dir: &str, _seed: u64) -> Result<Self, String> {
+        Err(UNAVAILABLE.into())
+    }
+
+    /// Unreachable (no instance can exist), kept for API parity.
+    pub fn infer(&self, _x: &[f32]) -> Result<Vec<f32>, String> {
+        Err(UNAVAILABLE.into())
+    }
+
+    /// Native reference of the MLP; the stub has no weights, so this
+    /// returns zeros (unreachable in practice — `load` never succeeds).
+    pub fn infer_native(&self, _x: &[f32]) -> Vec<f32> {
+        vec![0.0; BATCH * D_OUT]
+    }
+}
+
+/// Stub learner kernel; loading always fails.
+pub struct LearnerKernel {
+    _private: (),
+}
+
+impl LearnerKernel {
+    /// Always fails: the PJRT backend is not compiled in.
+    pub fn load(_dir: &str) -> Result<Self, String> {
+        Err(UNAVAILABLE.into())
+    }
+
+    /// Unreachable (no instance can exist), kept for API parity.
+    pub fn publish(
+        &self,
+        _learner: &PerfLearner,
+        _now: f64,
+        _params: &LearnerParams,
+        _cold_start: bool,
+    ) -> Result<Vec<f32>, String> {
+        Err(UNAVAILABLE.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loaders_report_unavailable() {
+        assert!(PayloadRunner::load("artifacts", 1).is_err());
+        assert!(LearnerKernel::load("artifacts").is_err());
+    }
+
+    #[test]
+    fn constants_match_artifact_shapes() {
+        assert_eq!(BATCH, 8);
+        assert_eq!(D_IN, 128);
+        assert_eq!(learner_exec::N_WORKERS, 16);
+        assert_eq!(learner_exec::K_SAMPLES, 64);
+    }
+}

@@ -34,7 +34,7 @@ impl Policy for Bandit {
     fn schedule_job(
         &mut self,
         job: &JobSpec,
-        view: &ClusterView<'_>,
+        view: &dyn ClusterView,
         rng: &mut Rng,
     ) -> JobPlacement {
         let n = view.n();
@@ -42,10 +42,10 @@ impl Policy for Bandit {
             if rng.gen_bool(self.eta) {
                 rng.gen_index(n)
             } else {
-                let (a, b) = view.sampler.sample_pair(rng);
+                let (a, b) = view.sample_pair(rng);
                 match self.tie {
                     TieRule::Sq2 => {
-                        if view.queue_len[b] < view.queue_len[a] {
+                        if view.queue_len(b) < view.queue_len(a) {
                             b
                         } else {
                             a
@@ -68,6 +68,7 @@ impl Policy for Bandit {
 mod tests {
     use super::*;
     use crate::stats::AliasTable;
+    use crate::types::LocalView;
 
     #[test]
     fn explores_at_rate_eta() {
@@ -82,7 +83,7 @@ mod tests {
             v
         };
         let t = AliasTable::new(&mu);
-        let view = ClusterView { queue_len: &q, mu_hat: &mu, sampler: &t, lambda_hat: 1.0 };
+        let view = LocalView { queue_len: &q, mu_hat: &mu, sampler: &t, lambda_hat: 1.0 };
         let job = JobSpec::single(0.1);
         let mut zero = 0;
         let n = 60_000;
@@ -103,7 +104,7 @@ mod tests {
         let q = vec![5usize, 5];
         let mu = vec![0.0, 1.0];
         let t = AliasTable::new(&mu);
-        let view = ClusterView { queue_len: &q, mu_hat: &mu, sampler: &t, lambda_hat: 1.0 };
+        let view = LocalView { queue_len: &q, mu_hat: &mu, sampler: &t, lambda_hat: 1.0 };
         let job = JobSpec::single(0.1);
         for _ in 0..5_000 {
             if let JobPlacement::Single(w0) = p.schedule_job(&job, &view, &mut rng) {

@@ -89,13 +89,14 @@ impl Policy for Halo {
     fn schedule_job(
         &mut self,
         job: &JobSpec,
-        view: &ClusterView<'_>,
+        view: &dyn ClusterView,
         rng: &mut Rng,
     ) -> JobPlacement {
         // Halo probes a single machine: one sample from the optimized
         // routing distribution, no queue information.
         if self.table.is_none() {
-            self.rebuild(view.mu_hat, view.lambda_hat);
+            let mu: Vec<f64> = (0..view.n()).map(|w| view.mu_hat(w)).collect();
+            self.rebuild(&mu, view.lambda_hat());
         }
         let table = self.table.as_ref().unwrap();
         per_task(job, |_| table.sample(rng))
@@ -105,6 +106,7 @@ impl Policy for Halo {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::types::LocalView;
 
     #[test]
     fn water_fill_conserves_total_rate() {
@@ -170,7 +172,7 @@ mod tests {
         let q = vec![0, 0];
         let mu = vec![1.0, 9.0];
         let t = AliasTable::new(&mu);
-        let view = ClusterView { queue_len: &q, mu_hat: &mu, sampler: &t, lambda_hat: 5.0 };
+        let view = LocalView { queue_len: &q, mu_hat: &mu, sampler: &t, lambda_hat: 5.0 };
         let job = JobSpec::single(0.1);
         let mut fast = 0;
         let n = 60_000;

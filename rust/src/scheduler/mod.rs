@@ -33,17 +33,21 @@ pub use uniform::Uniform;
 use crate::stats::Rng;
 use crate::types::{ClusterView, JobPlacement, JobSpec};
 
-/// A task-scheduling policy. One instance serves one scheduler (frontend).
+/// A task-scheduling policy. One instance serves one scheduler (frontend);
+/// the sharded plane builds one instance per frontend thread.
 pub trait Policy: Send {
     /// Human-readable name used in reports.
     fn name(&self) -> String;
 
     /// Place the *unconstrained* tasks of `job`. Constrained tasks are
     /// routed by the engine directly and never reach the policy.
+    ///
+    /// `view` is any [`ClusterView`] backing: borrowed slices in the
+    /// single-frontend drivers, or the lock-free shared view of the plane.
     fn schedule_job(
         &mut self,
         job: &JobSpec,
-        view: &ClusterView<'_>,
+        view: &dyn ClusterView,
         rng: &mut Rng,
     ) -> JobPlacement;
 

@@ -36,7 +36,7 @@ impl Policy for PoT {
     fn schedule_job(
         &mut self,
         job: &JobSpec,
-        view: &ClusterView<'_>,
+        view: &dyn ClusterView,
         rng: &mut Rng,
     ) -> JobPlacement {
         let n = view.n();
@@ -45,7 +45,7 @@ impl Policy for PoT {
             let mut best = rng.gen_index(n);
             for _ in 1..d {
                 let cand = rng.gen_index(n);
-                if view.queue_len[cand] < view.queue_len[best] {
+                if view.queue_len(cand) < view.queue_len(best) {
                     best = cand;
                 }
             }
@@ -62,10 +62,11 @@ impl Policy for PoT {
 mod tests {
     use super::*;
     use crate::stats::AliasTable;
+    use crate::types::LocalView;
     use crate::types::TaskSpec;
 
-    fn view<'a>(q: &'a [usize], mu: &'a [f64], t: &'a AliasTable) -> ClusterView<'a> {
-        ClusterView { queue_len: q, mu_hat: mu, sampler: t, lambda_hat: 1.0 }
+    fn view<'a>(q: &'a [usize], mu: &'a [f64], t: &'a AliasTable) -> LocalView<'a> {
+        LocalView { queue_len: q, mu_hat: mu, sampler: t, lambda_hat: 1.0 }
     }
 
     #[test]

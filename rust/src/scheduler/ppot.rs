@@ -44,10 +44,10 @@ impl PPoT {
 
     /// Pick between two candidates using the configured rule.
     #[inline]
-    fn choose(&self, a: WorkerId, b: WorkerId, view: &ClusterView<'_>) -> WorkerId {
+    fn choose(&self, a: WorkerId, b: WorkerId, view: &dyn ClusterView) -> WorkerId {
         match self.tie {
             TieRule::Sq2 => {
-                if view.queue_len[b] < view.queue_len[a] {
+                if view.queue_len(b) < view.queue_len(a) {
                     b
                 } else {
                     a
@@ -80,7 +80,7 @@ impl Policy for PPoT {
     fn schedule_job(
         &mut self,
         job: &JobSpec,
-        view: &ClusterView<'_>,
+        view: &dyn ClusterView,
         rng: &mut Rng,
     ) -> JobPlacement {
         if self.late_binding {
@@ -89,14 +89,14 @@ impl Policy for PPoT {
             let m = job.unconstrained();
             let mut ws = Vec::with_capacity(2 * m);
             for _ in 0..m {
-                let (a, b) = view.sampler.sample_pair(rng);
+                let (a, b) = view.sample_pair(rng);
                 ws.push(a);
                 ws.push(b);
             }
             JobPlacement::Reservations(ws)
         } else {
             per_task(job, |_| {
-                let (a, b) = view.sampler.sample_pair(rng);
+                let (a, b) = view.sample_pair(rng);
                 self.choose(a, b, view)
             })
         }
@@ -107,9 +107,10 @@ impl Policy for PPoT {
 mod tests {
     use super::*;
     use crate::stats::AliasTable;
+    use crate::types::LocalView;
 
-    fn view<'a>(q: &'a [usize], mu: &'a [f64], t: &'a AliasTable) -> ClusterView<'a> {
-        ClusterView { queue_len: q, mu_hat: mu, sampler: t, lambda_hat: 1.0 }
+    fn view<'a>(q: &'a [usize], mu: &'a [f64], t: &'a AliasTable) -> LocalView<'a> {
+        LocalView { queue_len: q, mu_hat: mu, sampler: t, lambda_hat: 1.0 }
     }
 
     #[test]

@@ -28,10 +28,10 @@ impl Policy for Pss {
     fn schedule_job(
         &mut self,
         job: &JobSpec,
-        view: &ClusterView<'_>,
+        view: &dyn ClusterView,
         rng: &mut Rng,
     ) -> JobPlacement {
-        per_task(job, |_| view.sampler.sample(rng))
+        per_task(job, |_| view.sample(rng))
     }
 }
 
@@ -39,6 +39,7 @@ impl Policy for Pss {
 mod tests {
     use super::*;
     use crate::stats::AliasTable;
+    use crate::types::LocalView;
 
     #[test]
     fn proportional_to_estimates() {
@@ -47,7 +48,7 @@ mod tests {
         let q = vec![0; 3];
         let mu = vec![1.0, 2.0, 5.0];
         let t = AliasTable::new(&mu);
-        let view = ClusterView { queue_len: &q, mu_hat: &mu, sampler: &t, lambda_hat: 1.0 };
+        let view = LocalView { queue_len: &q, mu_hat: &mu, sampler: &t, lambda_hat: 1.0 };
         let job = JobSpec::single(0.1);
         let mut counts = [0usize; 3];
         let n = 80_000;
@@ -72,7 +73,7 @@ mod tests {
         let q = vec![1000, 0];
         let mu = vec![9.0, 1.0];
         let t = AliasTable::new(&mu);
-        let view = ClusterView { queue_len: &q, mu_hat: &mu, sampler: &t, lambda_hat: 1.0 };
+        let view = LocalView { queue_len: &q, mu_hat: &mu, sampler: &t, lambda_hat: 1.0 };
         let job = JobSpec::single(0.1);
         let mut fast = 0;
         let n = 40_000;

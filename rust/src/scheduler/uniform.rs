@@ -29,7 +29,7 @@ impl Policy for Uniform {
     fn schedule_job(
         &mut self,
         job: &JobSpec,
-        view: &ClusterView<'_>,
+        view: &dyn ClusterView,
         rng: &mut Rng,
     ) -> JobPlacement {
         let n = view.n();
@@ -45,9 +45,10 @@ impl Policy for Uniform {
 mod tests {
     use super::*;
     use crate::stats::AliasTable;
+    use crate::types::LocalView;
 
-    fn view<'a>(q: &'a [usize], mu: &'a [f64], t: &'a AliasTable) -> ClusterView<'a> {
-        ClusterView { queue_len: q, mu_hat: mu, sampler: t, lambda_hat: 1.0 }
+    fn view<'a>(q: &'a [usize], mu: &'a [f64], t: &'a AliasTable) -> LocalView<'a> {
+        LocalView { queue_len: q, mu_hat: mu, sampler: t, lambda_hat: 1.0 }
     }
 
     #[test]

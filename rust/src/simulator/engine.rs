@@ -18,7 +18,7 @@ use crate::metrics::{QueueStats, ResponseRecorder};
 use crate::scheduler::{Policy, PolicyKind};
 use crate::simulator::event::{Event, EventQueue};
 use crate::stats::{AliasTable, Rng};
-use crate::types::{ClusterView, JobPlacement, JobSpec, Task, TaskKind};
+use crate::types::{JobPlacement, JobSpec, LocalView, Task, TaskKind};
 use crate::workload::WorkloadKind;
 use std::collections::HashMap;
 use std::collections::VecDeque;
@@ -301,7 +301,7 @@ impl Simulation {
         if spec.len() == 1 && spec.tasks[0].constrained_to.is_none() {
             self.refresh_qlen();
             let placement = {
-                let view = ClusterView {
+                let view = LocalView {
                     queue_len: &self.qlen,
                     mu_hat: &self.mu_hat,
                     sampler: &self.sampler,
@@ -354,7 +354,7 @@ impl Simulation {
         }
         self.refresh_qlen();
         let placement = {
-            let view = ClusterView {
+            let view = LocalView {
                 queue_len: &self.qlen,
                 mu_hat: &self.mu_hat,
                 sampler: &self.sampler,

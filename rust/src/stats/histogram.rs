@@ -232,6 +232,17 @@ impl IntHistogram {
         let above: u64 = self.counts.iter().skip(k).sum();
         above as f64 / self.total as f64
     }
+
+    /// Absorb another histogram's counts (cross-shard metric merges).
+    pub fn merge(&mut self, other: &IntHistogram) {
+        if other.counts.len() > self.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (a, &b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
 }
 
 #[cfg(test)]
@@ -355,5 +366,21 @@ mod tests {
         h.record_weighted(1, 30);
         assert_eq!(h.count(), 40);
         assert!((h.mean() - (30.0 + 30.0) / 40.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn int_histogram_merge_handles_different_supports() {
+        let mut a = IntHistogram::new();
+        let mut b = IntHistogram::new();
+        a.record(1);
+        a.record(1);
+        b.record(5);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.max(), 5);
+        assert!((a.mean() - 7.0 / 3.0).abs() < 1e-12);
+        // Merging an empty histogram is a no-op.
+        a.merge(&IntHistogram::new());
+        assert_eq!(a.count(), 3);
     }
 }

@@ -123,7 +123,56 @@ pub enum JobPlacement {
 /// Policies may inspect queue lengths (a probe in the real system) and the
 /// current speed estimates. They must not see true speeds unless the
 /// experiment grants an oracle (Halo, the "speeds known" settings of §6.2).
-pub struct ClusterView<'a> {
+///
+/// This is a trait so the same policy code runs against two backings:
+///
+/// * [`LocalView`] — borrowed slices owned by a single-threaded driver (the
+///   DES engine, the live coordinator, unit tests);
+/// * `plane::SharedView` — lock-free shared state of the sharded scheduling
+///   plane: per-worker atomic queue-length probes plus a seqlock-published
+///   estimate table, so many frontends schedule concurrently with no lock
+///   on the per-decision hot path.
+pub trait ClusterView {
+    /// Number of workers.
+    fn n(&self) -> usize;
+
+    /// Queue length (queued entries + in-service task) of worker `w` —
+    /// a probe in the real system.
+    fn queue_len(&self, w: WorkerId) -> usize;
+
+    /// Current speed estimate μ̂ of worker `w` published by the learner
+    /// (or the true speed in oracle mode).
+    fn mu_hat(&self, w: WorkerId) -> f64;
+
+    /// Current arrival-rate estimate λ̂ in tasks/second (the arrival
+    /// estimator of §3.3); oracle policies such as Halo use it to compute
+    /// routing probabilities.
+    fn lambda_hat(&self) -> f64;
+
+    /// Draw one worker from the proportional-sampling multinomial
+    /// `p_i = μ̂_i / Σ μ̂` in O(1) (alias table rebuilt on publish).
+    fn sample(&self, rng: &mut crate::stats::Rng) -> WorkerId;
+
+    /// Draw two workers (with replacement) — the power-of-two-choices probe.
+    fn sample_pair(&self, rng: &mut crate::stats::Rng) -> (WorkerId, WorkerId) {
+        (self.sample(rng), self.sample(rng))
+    }
+
+    /// Expected waiting time proxy for LL(2): (queue length + 1) / μ̂.
+    /// Workers with a zero estimate are treated as infinitely slow.
+    fn expected_wait(&self, w: WorkerId) -> f64 {
+        let mu = self.mu_hat(w);
+        if mu <= 0.0 {
+            f64::INFINITY
+        } else {
+            (self.queue_len(w) + 1) as f64 / mu
+        }
+    }
+}
+
+/// [`ClusterView`] backed by borrowed slices: the single-frontend view used
+/// by the DES engine, the live coordinator, and tests.
+pub struct LocalView<'a> {
     /// Queue length (queued entries + in-service task) per worker.
     pub queue_len: &'a [usize],
     /// Current speed estimates μ̂ published by the learner (or true speeds
@@ -131,27 +180,32 @@ pub struct ClusterView<'a> {
     pub mu_hat: &'a [f64],
     /// O(1) proportional sampler over `mu_hat` (rebuilt on publish).
     pub sampler: &'a crate::stats::AliasTable,
-    /// Current arrival-rate estimate λ̂ in tasks/second (the arrival
-    /// estimator of §3.3); oracle policies such as Halo use it to compute
-    /// routing probabilities.
+    /// Current arrival-rate estimate λ̂ in tasks/second.
     pub lambda_hat: f64,
 }
 
-impl<'a> ClusterView<'a> {
-    /// Number of workers.
-    pub fn n(&self) -> usize {
+impl ClusterView for LocalView<'_> {
+    fn n(&self) -> usize {
         self.queue_len.len()
     }
 
-    /// Expected waiting time proxy for LL(2): (queue length + 1) / μ̂.
-    /// Workers with a zero estimate are treated as infinitely slow.
-    pub fn expected_wait(&self, w: WorkerId) -> f64 {
-        let mu = self.mu_hat[w];
-        if mu <= 0.0 {
-            f64::INFINITY
-        } else {
-            (self.queue_len[w] + 1) as f64 / mu
-        }
+    #[inline]
+    fn queue_len(&self, w: WorkerId) -> usize {
+        self.queue_len[w]
+    }
+
+    #[inline]
+    fn mu_hat(&self, w: WorkerId) -> f64 {
+        self.mu_hat[w]
+    }
+
+    fn lambda_hat(&self) -> f64 {
+        self.lambda_hat
+    }
+
+    #[inline]
+    fn sample(&self, rng: &mut crate::stats::Rng) -> WorkerId {
+        self.sampler.sample(rng)
     }
 }
 
@@ -191,9 +245,12 @@ mod tests {
         let q = [2usize, 2];
         let mu = [2.0, 0.0];
         let t = AliasTable::new(&mu);
-        let view = ClusterView { queue_len: &q, mu_hat: &mu, sampler: &t, lambda_hat: 1.0 };
+        let view = LocalView { queue_len: &q, mu_hat: &mu, sampler: &t, lambda_hat: 1.0 };
         assert!((view.expected_wait(0) - 1.5).abs() < 1e-12);
         assert!(view.expected_wait(1).is_infinite());
         assert_eq!(view.n(), 2);
+        assert_eq!(ClusterView::queue_len(&view, 1), 2);
+        assert_eq!(ClusterView::mu_hat(&view, 0), 2.0);
+        assert_eq!(ClusterView::lambda_hat(&view), 1.0);
     }
 }
