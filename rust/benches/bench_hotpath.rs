@@ -3,104 +3,22 @@
 //! reporting).
 //!
 //! Targets the paper's throughput claim: schedulers must sustain
-//! "millions of tasks per second". The scheduling decision — two alias
-//! draws + a queue-length comparison — is the per-task cost; the simulator
-//! event loop bounds experiment turnaround.
+//! "millions of tasks per second" with a *constant-work* decision loop.
+//! All measurement code lives in `rosella::hotpath` (shared with the
+//! `rosella hotpath` subcommand that emits `BENCH_hotpath.json`); this
+//! binary runs it at n = 30 (the paper's testbed scale) and n = 256 so an
+//! O(n) term in the decision path is visible as a slope, then adds the
+//! full-learning-stack simulator run.
 
 use rosella::cluster::{SpeedProfile, Volatility};
+use rosella::hotpath::{alias_rebuild_bench, decision_bench, sim_bench, HotpathReport};
 use rosella::learner::LearnerConfig;
 use rosella::scheduler::{PolicyKind, TieRule};
 use rosella::simulator::{run, SimConfig};
-use rosella::stats::{AliasTable, Rng};
-use rosella::types::{JobPlacement, JobSpec, LocalView};
 use rosella::workload::WorkloadKind;
 use std::time::Instant;
 
-/// Run `f` for `reps` repetitions, `runs` times; print & return the best
-/// run's nanoseconds per repetition.
-fn bench(name: &str, reps: u64, runs: usize, mut f: impl FnMut(u64)) -> f64 {
-    f(reps / 10 + 1); // warmup
-    let mut best = f64::INFINITY;
-    for _ in 0..runs {
-        let start = Instant::now();
-        f(reps);
-        let elapsed = start.elapsed().as_nanos() as f64;
-        best = best.min(elapsed / reps as f64);
-    }
-    let per_sec = 1e9 / best;
-    println!("{name:<44} {best:>10.1} ns/op  {per_sec:>14.0} ops/s");
-    best
-}
-
-fn scheduling_decision_benches() {
-    println!("-- scheduling decision latency (n = 30 workers) --");
-    let n = 30;
-    let mut rng = Rng::new(1);
-    let speeds: Vec<f64> = (0..n).map(|i| 0.1 + (i % 9) as f64 * 0.1).collect();
-    let qlen: Vec<usize> = (0..n).map(|i| i % 7).collect();
-    let table = AliasTable::new(&speeds);
-    let job = JobSpec::single(0.1);
-
-    let mut run_policy = |name: &str, kind: PolicyKind| {
-        let mut policy = kind.build(n);
-        policy.on_estimates(&speeds, 100.0);
-        let view = LocalView {
-            queue_len: &qlen,
-            mu_hat: &speeds,
-            sampler: &table,
-            lambda_hat: 100.0,
-        };
-        let mut sink = 0usize;
-        bench(name, 2_000_000, 3, |reps| {
-            for _ in 0..reps {
-                if let JobPlacement::Single(w0) = policy.schedule_job(&job, &view, &mut rng) {
-                    sink ^= w0;
-                }
-            }
-        });
-        std::hint::black_box(sink);
-    };
-    run_policy("uniform", PolicyKind::Uniform);
-    run_policy("pot(2)", PolicyKind::PoT { d: 2 });
-    run_policy("pss (alias sample)", PolicyKind::Pss);
-    run_policy("ppot-sq2 (rosella)", PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false });
-    run_policy("ppot-ll2", PolicyKind::PPoT { tie: TieRule::Ll2, late_binding: false });
-    run_policy("halo", PolicyKind::Halo);
-
-    println!("-- estimate publish (alias rebuild, n = 30) --");
-    bench("alias table rebuild", 200_000, 3, |reps| {
-        for _ in 0..reps {
-            std::hint::black_box(AliasTable::new(&speeds));
-        }
-    });
-}
-
-fn simulator_throughput_bench() {
-    println!("-- simulator event throughput --");
-    for &n in &[15usize, 120] {
-        let cfg = SimConfig {
-            seed: 3,
-            duration: 60.0,
-            warmup: 0.0,
-            speeds: SpeedProfile::Homogeneous { n, speed: 1.0 },
-            volatility: Volatility::Static,
-            workload: WorkloadKind::Synthetic,
-            load: 0.8,
-            policy: PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
-            learner: LearnerConfig::oracle(),
-            queue_sample: None,
-        };
-        let start = Instant::now();
-        let r = run(cfg);
-        let elapsed = start.elapsed().as_secs_f64();
-        // Each completed task ≈ 2 events (arrival + completion).
-        let events = (r.completed_real * 2) as f64;
-        println!(
-            "sim n={n:<4} {:>10.0} tasks, {:>12.0} events/s wall",
-            r.completed_real as f64,
-            events / elapsed
-        );
-    }
+fn full_learning_stack_bench() {
     // With the learning stack enabled (publishes + benchmark jobs).
     let cfg = SimConfig {
         seed: 3,
@@ -126,6 +44,14 @@ fn simulator_throughput_bench() {
 
 fn main() {
     println!("== bench_hotpath ==");
-    scheduling_decision_benches();
-    simulator_throughput_bench();
+    let sizes = vec![30usize, 256];
+    let report = HotpathReport {
+        decisions: decision_bench(&sizes, 2_000_000, 3),
+        rebuilds: alias_rebuild_bench(&sizes, 200_000, 3),
+        sims: sim_bench(&sizes, 60.0),
+        planes: Vec::new(), // bench_plane owns the plane sweep
+        sizes,
+    };
+    print!("{}", report.render());
+    full_learning_stack_bench();
 }

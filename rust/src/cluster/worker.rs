@@ -48,8 +48,11 @@ pub struct Worker {
     bench: VecDeque<(Task, f64)>,
     /// Task in service, if any.
     in_service: Option<InService>,
-    /// Guards completion events across speed shocks: completions carry the
-    /// generation they were scheduled under; stale ones are ignored.
+    /// Monotonic count of in-service reschedules (speed shocks that re-based
+    /// the running task). The DES event queue cancels a superseded
+    /// completion at the source when the replacement is pushed; this counter
+    /// remains as the worker-local record of reschedules (tests,
+    /// diagnostics).
     generation: u64,
     /// Cached count of *real* entries (queued + in service if real) so the
     /// scheduler's probe is O(1).
@@ -201,8 +204,9 @@ impl Worker {
 
     /// Change the worker's speed at time `now` (a shock). If a task is in
     /// service, its remaining demand is re-based and the new completion time
-    /// is returned; the generation counter is bumped so the previously
-    /// scheduled completion event becomes stale.
+    /// is returned; the caller reschedules the completion event (the event
+    /// queue cancels the superseded one) and the generation counter records
+    /// the reschedule.
     pub fn set_speed(&mut self, new_speed: f64, now: f64) -> Option<f64> {
         assert!(new_speed > 0.0 && new_speed.is_finite());
         let old_speed = self.speed;

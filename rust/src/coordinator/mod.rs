@@ -26,7 +26,8 @@ use crate::plane::FrontendCore;
 use crate::scheduler::PolicyKind;
 use crate::stats::{Exponential, FiveNum, Rng};
 use crate::types::{JobSpec, TaskKind};
-use std::sync::atomic::Ordering;
+use std::sync::atomic::AtomicUsize;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Live-serving configuration.
@@ -177,7 +178,12 @@ pub fn serve(cfg: LiveConfig) -> Result<LiveReport, String> {
     let mut responses = ResponseRecorder::new(0.0);
     let mut next_job: u64 = 0;
     let mut benchmarks: u64 = 0;
-    let mut qlen_buf = vec![0usize; n];
+    // Per-worker atomic probes, shared with the worker threads: a decision
+    // reads only the workers it probes — no O(n) snapshot per arrival.
+    let qlen: Vec<Arc<AtomicUsize>> =
+        workers.iter().map(|w| w.client.qlen.clone()).collect();
+    // Reused single-task request spec: no allocation per arrival.
+    let mut job = JobSpec::single(cfg.mean_demand);
 
     loop {
         let now = Instant::now();
@@ -189,11 +195,8 @@ pub fn serve(cfg: LiveConfig) -> Result<LiveReport, String> {
             let t_sched = (next_arrival - start).as_secs_f64();
             core.on_arrival(t_sched, 1);
             let demand = demand_dist.sample(&mut rng).max(1e-4);
-            let job = JobSpec::single(demand);
-            for (q, w) in qlen_buf.iter_mut().zip(workers.iter()) {
-                *q = w.client.qlen.load(Ordering::Relaxed);
-            }
-            let target = core.decide_local(&job, &qlen_buf);
+            job.tasks[0].demand = demand;
+            let target = core.decide_shared(&job, &qlen);
             workers[target].enqueue(LiveTask {
                 job: next_job,
                 kind: TaskKind::Real,

@@ -1,0 +1,492 @@
+//! Hot-path measurement harness: the per-decision and per-event costs that
+//! the paper's "millions of tasks per second" claim rests on (§3).
+//!
+//! Rosella's design argument is that every scheduling decision "only
+//! performs simple operations" — constant work, independent of cluster
+//! size. This module measures exactly that, at several cluster sizes, so a
+//! hidden O(n) term shows up as a slope instead of hiding inside a single
+//! data point:
+//!
+//! * **decision latency** — ns per `Policy::schedule_job` against a
+//!   [`LocalView`], per policy and per cluster size (flat ⇒ O(1));
+//! * **alias rebuild** — the estimate-publish cost, comparing the in-place
+//!   [`AliasTable::rebuild`] against a fresh allocation (publish is O(n) by
+//!   design; the rebuild removes the allocator from it);
+//! * **simulator throughput** — events/sec of the full discrete-event loop
+//!   (arrival → decision → completion), the experiment-turnaround bound;
+//! * **plane throughput** — decisions/sec of the sharded plane in
+//!   decide-only mode (tasks/sec of the scheduling layer proper).
+//!
+//! Shared by the `rosella hotpath` subcommand (which emits
+//! `BENCH_hotpath.json`, tracked across PRs alongside `BENCH_plane.json`)
+//! and `benches/bench_hotpath.rs`, so the tracked trajectory and the
+//! interactive bench measure the same code.
+
+use crate::cluster::{SpeedProfile, Volatility};
+use crate::config::Json;
+use crate::learner::LearnerConfig;
+use crate::plane::{run_plane, DispatchMode, PlaneConfig};
+use crate::scheduler::{PolicyKind, TieRule};
+use crate::simulator::{run as sim_run, SimConfig};
+use crate::stats::{AliasTable, Rng};
+use crate::types::{JobPlacement, JobSpec, LocalView};
+use crate::workload::WorkloadKind;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Run `f(reps)` once for warmup and `runs` measured times; return the best
+/// run's nanoseconds per repetition (best-of filters scheduler noise).
+pub fn best_ns_per_op(reps: u64, runs: usize, mut f: impl FnMut(u64)) -> f64 {
+    f(reps / 10 + 1); // warmup
+    let mut best = f64::INFINITY;
+    for _ in 0..runs.max(1) {
+        let start = Instant::now();
+        f(reps);
+        let elapsed = start.elapsed().as_nanos() as f64;
+        best = best.min(elapsed / reps as f64);
+    }
+    best
+}
+
+/// The policies whose decision latency is tracked.
+pub fn tracked_policies() -> Vec<(&'static str, PolicyKind)> {
+    vec![
+        ("uniform", PolicyKind::Uniform),
+        ("pot2", PolicyKind::PoT { d: 2 }),
+        ("pss", PolicyKind::Pss),
+        ("ppot-sq2", PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false }),
+        ("ppot-ll2", PolicyKind::PPoT { tie: TieRule::Ll2, late_binding: false }),
+        ("halo", PolicyKind::Halo),
+    ]
+}
+
+/// One decision-latency sample.
+#[derive(Debug, Clone)]
+pub struct DecisionPoint {
+    /// Policy label.
+    pub policy: String,
+    /// Cluster size the view exposed.
+    pub n: usize,
+    /// Best-run nanoseconds per scheduling decision.
+    pub ns_per_op: f64,
+}
+
+/// Synthetic fixture for a decision bench at cluster size `n`.
+fn fixture(n: usize) -> (Vec<f64>, Vec<usize>) {
+    let speeds: Vec<f64> = (0..n).map(|i| 0.1 + (i % 9) as f64 * 0.1).collect();
+    let qlen: Vec<usize> = (0..n).map(|i| i % 7).collect();
+    (speeds, qlen)
+}
+
+/// Measure per-decision latency for every tracked policy at every cluster
+/// size in `sizes`. O(1) decisions show up as a flat row across sizes.
+pub fn decision_bench(sizes: &[usize], reps: u64, runs: usize) -> Vec<DecisionPoint> {
+    let mut out = Vec::new();
+    let mut rng = Rng::new(1);
+    let job = JobSpec::single(0.1);
+    for &n in sizes {
+        let (speeds, qlen) = fixture(n);
+        let table = AliasTable::new(&speeds);
+        for (label, kind) in tracked_policies() {
+            let mut policy = kind.build(n);
+            policy.on_estimates(&speeds, 100.0);
+            let view = LocalView {
+                queue_len: &qlen,
+                mu_hat: &speeds,
+                sampler: &table,
+                lambda_hat: 100.0,
+            };
+            let mut sink = 0usize;
+            let ns = best_ns_per_op(reps, runs, |reps| {
+                for _ in 0..reps {
+                    if let JobPlacement::Single(w) = policy.schedule_job(&job, &view, &mut rng)
+                    {
+                        sink ^= w;
+                    }
+                }
+            });
+            std::hint::black_box(sink);
+            out.push(DecisionPoint { policy: label.to_string(), n, ns_per_op: ns });
+        }
+    }
+    out
+}
+
+/// One estimate-publish (alias rebuild) sample.
+#[derive(Debug, Clone)]
+pub struct RebuildPoint {
+    /// Cluster size.
+    pub n: usize,
+    /// ns per in-place [`AliasTable::rebuild`] (the publish path).
+    pub rebuild_ns: f64,
+    /// ns per fresh [`AliasTable::new`] (the pre-refactor publish path).
+    pub fresh_ns: f64,
+}
+
+/// Measure the estimate-publish cost: in-place rebuild vs fresh build.
+pub fn alias_rebuild_bench(sizes: &[usize], reps: u64, runs: usize) -> Vec<RebuildPoint> {
+    sizes
+        .iter()
+        .map(|&n| {
+            let (speeds, _) = fixture(n);
+            let mut table = AliasTable::new(&speeds);
+            let rebuild_ns = best_ns_per_op(reps, runs, |reps| {
+                for _ in 0..reps {
+                    table.rebuild(&speeds);
+                }
+            });
+            std::hint::black_box(&table);
+            let fresh_ns = best_ns_per_op(reps, runs, |reps| {
+                for _ in 0..reps {
+                    std::hint::black_box(AliasTable::new(&speeds));
+                }
+            });
+            RebuildPoint { n, rebuild_ns, fresh_ns }
+        })
+        .collect()
+}
+
+/// One simulator-throughput sample.
+#[derive(Debug, Clone)]
+pub struct SimPoint {
+    /// Cluster size.
+    pub n: usize,
+    /// Real tasks completed in the run.
+    pub tasks: u64,
+    /// Processed events per wall-clock second (arrival + completion per
+    /// task).
+    pub events_per_sec: f64,
+    /// Wall-clock seconds the run took.
+    pub wall_secs: f64,
+}
+
+/// Measure full DES-loop throughput at each cluster size: homogeneous
+/// speeds, oracle learner (isolates the event loop from learning noise),
+/// load 0.8 synthetic single-task jobs.
+pub fn sim_bench(sizes: &[usize], duration: f64) -> Vec<SimPoint> {
+    sizes
+        .iter()
+        .map(|&n| {
+            let cfg = SimConfig {
+                seed: 3,
+                duration,
+                warmup: 0.0,
+                speeds: SpeedProfile::Homogeneous { n, speed: 1.0 },
+                volatility: Volatility::Static,
+                workload: WorkloadKind::Synthetic,
+                load: 0.8,
+                policy: PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
+                learner: LearnerConfig::oracle(),
+                queue_sample: None,
+            };
+            let start = Instant::now();
+            let r = sim_run(cfg);
+            let wall = start.elapsed().as_secs_f64();
+            let events = (r.completed_real * 2) as f64;
+            SimPoint {
+                n,
+                tasks: r.completed_real,
+                events_per_sec: events / wall,
+                wall_secs: wall,
+            }
+        })
+        .collect()
+}
+
+/// One plane-throughput sample.
+#[derive(Debug, Clone)]
+pub struct PlanePoint {
+    /// Frontend shard count.
+    pub frontends: usize,
+    /// Scheduling decisions made (each places one task).
+    pub decisions: u64,
+    /// Aggregate tasks scheduled per second.
+    pub tasks_per_sec: f64,
+}
+
+/// Measure raw plane scheduling throughput (decide-only, budgeted).
+pub fn plane_bench(
+    frontend_counts: &[usize],
+    workers: usize,
+    decisions_per_shard: u64,
+) -> Result<Vec<PlanePoint>, String> {
+    let base_speeds = [2.0, 1.0, 1.0, 1.0, 0.5, 0.5, 0.25, 0.25];
+    let speeds: Vec<f64> =
+        (0..workers.max(1)).map(|i| base_speeds[i % base_speeds.len()]).collect();
+    let mut out = Vec::new();
+    for &k in frontend_counts {
+        let cfg = PlaneConfig {
+            speeds: speeds.clone(),
+            frontends: k,
+            mode: DispatchMode::DecideOnly,
+            max_decisions: Some(decisions_per_shard),
+            fake_jobs: false,
+            duration: 60.0, // budget, not deadline: shards stop at max_decisions
+            ..PlaneConfig::default()
+        };
+        let r = run_plane(cfg)?;
+        out.push(PlanePoint {
+            frontends: k,
+            decisions: r.decisions,
+            tasks_per_sec: r.decisions_per_sec,
+        });
+    }
+    Ok(out)
+}
+
+/// Everything one `rosella hotpath` invocation measured.
+#[derive(Debug, Clone)]
+pub struct HotpathReport {
+    pub sizes: Vec<usize>,
+    pub decisions: Vec<DecisionPoint>,
+    pub rebuilds: Vec<RebuildPoint>,
+    pub sims: Vec<SimPoint>,
+    pub planes: Vec<PlanePoint>,
+}
+
+impl HotpathReport {
+    /// Worst max/min decision-latency ratio across sizes, per policy —
+    /// ~1.0 means the decision cost is flat in cluster size (no O(n)
+    /// term). Returns `(policy, ratio)` of the worst offender.
+    pub fn worst_flatness(&self) -> Option<(String, f64)> {
+        let mut worst: Option<(String, f64)> = None;
+        for (label, _) in tracked_policies() {
+            let ns: Vec<f64> = self
+                .decisions
+                .iter()
+                .filter(|d| d.policy == label)
+                .map(|d| d.ns_per_op)
+                .collect();
+            if ns.len() < 2 {
+                continue;
+            }
+            let lo = ns.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = ns.iter().cloned().fold(0.0f64, f64::max);
+            if lo > 0.0 {
+                let ratio = hi / lo;
+                match &worst {
+                    Some((_, w)) if ratio <= *w => {}
+                    _ => worst = Some((label.to_string(), ratio)),
+                }
+            }
+        }
+        worst
+    }
+
+    /// Render a human-readable report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("-- scheduling decision latency (ns/op) --\n");
+        out.push_str(&format!("{:<12}", "policy"));
+        for &n in &self.sizes {
+            out.push_str(&format!(" {:>10}", format!("n={n}")));
+        }
+        out.push('\n');
+        for (label, _) in tracked_policies() {
+            out.push_str(&format!("{label:<12}"));
+            for &n in &self.sizes {
+                match self.decisions.iter().find(|d| d.policy == label && d.n == n) {
+                    Some(d) => out.push_str(&format!(" {:>10.1}", d.ns_per_op)),
+                    None => out.push_str(&format!(" {:>10}", "-")),
+                }
+            }
+            out.push('\n');
+        }
+        if let Some((policy, ratio)) = self.worst_flatness() {
+            out.push_str(&format!(
+                "worst decision flatness (max/min across sizes): {ratio:.2}x ({policy})\n"
+            ));
+        }
+        out.push_str("-- estimate publish: alias table (ns/op) --\n");
+        for r in &self.rebuilds {
+            out.push_str(&format!(
+                "n={:<5} rebuild {:>9.1}  fresh-alloc {:>9.1}\n",
+                r.n, r.rebuild_ns, r.fresh_ns
+            ));
+        }
+        out.push_str("-- simulator event throughput --\n");
+        for s in &self.sims {
+            out.push_str(&format!(
+                "n={:<5} {:>9} tasks  {:>13.0} events/s  ({:.2}s wall)\n",
+                s.n, s.tasks, s.events_per_sec, s.wall_secs
+            ));
+        }
+        if !self.planes.is_empty() {
+            out.push_str("-- plane scheduling throughput (decide-only) --\n");
+            for p in &self.planes {
+                out.push_str(&format!(
+                    "frontends={:<3} {:>9} decisions  {:>13.0} tasks/s\n",
+                    p.frontends, p.decisions, p.tasks_per_sec
+                ));
+            }
+        }
+        out
+    }
+
+    /// Machine-readable results (`BENCH_hotpath.json`) so the perf
+    /// trajectory is tracked across PRs.
+    pub fn to_json(&self, seed_note: &str) -> Json {
+        let decisions: Vec<Json> = self
+            .decisions
+            .iter()
+            .map(|d| {
+                let mut m = BTreeMap::new();
+                m.insert("policy".into(), Json::Str(d.policy.clone()));
+                m.insert("n".into(), Json::Num(d.n as f64));
+                m.insert("ns_per_op".into(), Json::Num(d.ns_per_op));
+                Json::Obj(m)
+            })
+            .collect();
+        let rebuilds: Vec<Json> = self
+            .rebuilds
+            .iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("n".into(), Json::Num(r.n as f64));
+                m.insert("rebuild_ns".into(), Json::Num(r.rebuild_ns));
+                m.insert("fresh_ns".into(), Json::Num(r.fresh_ns));
+                Json::Obj(m)
+            })
+            .collect();
+        let sims: Vec<Json> = self
+            .sims
+            .iter()
+            .map(|s| {
+                let mut m = BTreeMap::new();
+                m.insert("n".into(), Json::Num(s.n as f64));
+                m.insert("tasks".into(), Json::Num(s.tasks as f64));
+                m.insert("events_per_sec".into(), Json::Num(s.events_per_sec.round()));
+                Json::Obj(m)
+            })
+            .collect();
+        let planes: Vec<Json> = self
+            .planes
+            .iter()
+            .map(|p| {
+                let mut m = BTreeMap::new();
+                m.insert("frontends".into(), Json::Num(p.frontends as f64));
+                m.insert("decisions".into(), Json::Num(p.decisions as f64));
+                m.insert("tasks_per_sec".into(), Json::Num(p.tasks_per_sec.round()));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("bench".into(), Json::Str("hotpath".into()));
+        top.insert("note".into(), Json::Str(seed_note.into()));
+        top.insert(
+            "sizes".into(),
+            Json::Arr(self.sizes.iter().map(|&n| Json::Num(n as f64)).collect()),
+        );
+        if let Some((policy, ratio)) = self.worst_flatness() {
+            let mut m = BTreeMap::new();
+            m.insert("policy".into(), Json::Str(policy));
+            m.insert("max_over_min".into(), Json::Num((ratio * 1000.0).round() / 1000.0));
+            top.insert("worst_decision_flatness".into(), Json::Obj(m));
+        }
+        top.insert("decision".into(), Json::Arr(decisions));
+        top.insert("alias_rebuild".into(), Json::Arr(rebuilds));
+        top.insert("sim".into(), Json::Arr(sims));
+        top.insert("plane".into(), Json::Arr(planes));
+        Json::Obj(top)
+    }
+}
+
+/// Parse a comma-separated list of positive integers.
+fn parse_csv_usize(s: &str, what: &str) -> Result<Vec<usize>, String> {
+    let v: Vec<usize> = s
+        .split(',')
+        .map(|t| t.trim().parse::<usize>().map_err(|e| format!("bad {what} '{t}': {e}")))
+        .collect::<Result<_, _>>()?;
+    if v.is_empty() || v.contains(&0) {
+        return Err(format!("{what} must be a non-empty list of positive integers"));
+    }
+    Ok(v)
+}
+
+/// CLI adapter for `rosella hotpath`.
+pub fn hotpath_cli(p: &crate::cli::Parsed) -> Result<String, String> {
+    let quick = p.flag("quick");
+    let sizes = parse_csv_usize(p.get("sizes").unwrap_or("30,256"), "cluster size")?;
+    let frontend_counts = parse_csv_usize(p.get("frontends").unwrap_or("1,2,4"), "frontend count")?;
+    let reps: u64 = p.parse_as("reps")?.unwrap_or(if quick { 50_000 } else { 1_000_000 });
+    let runs: usize = p.parse_as("runs")?.unwrap_or(3);
+    let sim_duration: f64 = p.parse_as("sim-duration")?.unwrap_or(if quick { 5.0 } else { 60.0 });
+    let plane_decisions: u64 =
+        p.parse_as("plane-decisions")?.unwrap_or(if quick { 20_000 } else { 500_000 });
+    let workers: usize = p.parse_as("workers")?.unwrap_or(8);
+
+    let report = HotpathReport {
+        decisions: decision_bench(&sizes, reps, runs),
+        rebuilds: alias_rebuild_bench(&sizes, (reps / 10).max(1), runs),
+        sims: sim_bench(&sizes, sim_duration),
+        planes: if p.flag("no-plane") {
+            Vec::new()
+        } else {
+            plane_bench(&frontend_counts, workers, plane_decisions)?
+        },
+        sizes,
+    };
+
+    let mut out = report.render();
+    if let Some(path) = p.get("json") {
+        let doc = crate::config::to_string(&report.to_json(if quick { "quick" } else { "full" }));
+        std::fs::write(path, doc).map_err(|e| format!("write {path}: {e}"))?;
+        out.push_str(&format!("wrote {path}\n"));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_report() -> HotpathReport {
+        let sizes = vec![4, 8];
+        HotpathReport {
+            decisions: decision_bench(&sizes, 2_000, 1),
+            rebuilds: alias_rebuild_bench(&sizes, 500, 1),
+            sims: sim_bench(&[4], 2.0),
+            planes: Vec::new(),
+            sizes,
+        }
+    }
+
+    #[test]
+    fn report_covers_every_policy_and_size() {
+        let r = tiny_report();
+        assert_eq!(r.decisions.len(), tracked_policies().len() * 2);
+        assert!(r.decisions.iter().all(|d| d.ns_per_op > 0.0 && d.ns_per_op.is_finite()));
+        assert!(r.sims[0].tasks > 0);
+        assert!(r.sims[0].events_per_sec > 0.0);
+        let (_, ratio) = r.worst_flatness().expect("two sizes -> flatness defined");
+        assert!(ratio >= 1.0);
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let r = tiny_report();
+        let doc = crate::config::to_string(&r.to_json("test"));
+        let back = crate::config::parse(&doc).expect("hotpath json must parse");
+        for key in ["bench", "decision", "alias_rebuild", "sim", "plane", "sizes"] {
+            assert!(back.get(key).is_some(), "missing key {key}");
+        }
+        assert_eq!(back.get("bench").and_then(|j| j.as_str()), Some("hotpath"));
+    }
+
+    #[test]
+    fn render_mentions_all_sections() {
+        let r = tiny_report();
+        let s = r.render();
+        assert!(s.contains("decision latency"));
+        assert!(s.contains("alias table"));
+        assert!(s.contains("event throughput"));
+    }
+
+    #[test]
+    fn csv_parser_rejects_garbage() {
+        assert!(parse_csv_usize("30,256", "x").is_ok());
+        assert!(parse_csv_usize("30,abc", "x").is_err());
+        assert!(parse_csv_usize("0", "x").is_err());
+        assert!(parse_csv_usize("", "x").is_err());
+    }
+}

@@ -30,6 +30,26 @@
 //! * **experiment drivers** ([`experiments`]) regenerating every figure of
 //!   the paper's evaluation section.
 //!
+//! ## Per-decision complexity
+//!
+//! Rosella's headline property is that each scheduling decision "only
+//! performs simple operations" (§3) — constant work regardless of cluster
+//! size `n`. The engines preserve that profile end to end; `d` is the probe
+//! count (2 for power-of-two-choices):
+//!
+//! | operation | cost | where |
+//! |---|---|---|
+//! | queue probe | O(d) | [`types::ClusterView::queue_len`] — incremental mirror in the DES engine, atomic counters in the plane/coordinator |
+//! | proportional sample | O(1) | [`stats::AliasTable::sample`] (Vose alias draw) |
+//! | scheduling decision | O(d) | probes + samples + a comparison; no allocation |
+//! | job arrival | O(1) + O(tasks) | reusable job buffer ([`workload::Workload::next_job_into`]), incremental queue lengths — no O(n) sweep |
+//! | event push/pop | O(log m) | compact `Copy` heap entries; stale completions cancelled at source ([`simulator::EventQueue`]) |
+//! | estimate publish | O(n) | rate-limited background event; in-place [`stats::AliasTable::rebuild`], allocation-free |
+//!
+//! `rosella hotpath --json BENCH_hotpath.json` ([`hotpath`]) measures all
+//! of this per cluster size, so an accidental O(n) term in the decision
+//! path shows up as a slope in the tracked numbers.
+//!
 //! ## Quick start
 //!
 //! ```
@@ -61,6 +81,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+pub mod hotpath;
 pub mod learner;
 pub mod metrics;
 pub mod plane;

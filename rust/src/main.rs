@@ -8,6 +8,8 @@
 //! * `serve` — run the live threaded coordinator with the PJRT payload;
 //! * `plane` — run the sharded scheduling plane stress harness (sweeps the
 //!   frontend count, reports decisions/sec and latency percentiles);
+//! * `hotpath` — measure per-decision latency, alias-rebuild cost, and
+//!   simulator/plane throughput per cluster size (`BENCH_hotpath.json`);
 //! * `list` — show available experiments, policies, speed profiles.
 
 use rosella::cli::CmdSpec;
@@ -22,6 +24,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("plane") => cmd_plane(&args[1..]),
+        Some("hotpath") => cmd_hotpath(&args[1..]),
         Some("list") => cmd_list(),
         Some("--help") | Some("-h") | None => {
             print_usage();
@@ -45,6 +48,7 @@ fn print_usage() {
          \x20 simulate            run one simulation (flags or --config file.json)\n\
          \x20 serve               run the live coordinator (PJRT payload workers)\n\
          \x20 plane               sharded-plane stress harness (multi-frontend dispatch)\n\
+         \x20 hotpath             hot-path benchmarks per cluster size (BENCH_hotpath.json)\n\
          \x20 list                list experiments, policies, profiles\n"
     );
 }
@@ -227,6 +231,37 @@ fn cmd_plane(rest: &[String]) -> i32 {
         }
         Err(e) => {
             eprintln!("plane failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_hotpath(rest: &[String]) -> i32 {
+    let spec = CmdSpec::new("hotpath", "measure the scheduling hot path per cluster size")
+        .opt("sizes", Some("30,256"), "comma-separated cluster sizes")
+        .opt("frontends", Some("1,2,4"), "comma-separated plane frontend counts")
+        .opt("workers", Some("8"), "plane worker thread count")
+        .opt("reps", None, "decision-bench repetitions per run (1M; 50k with --quick)")
+        .opt("runs", Some("3"), "measured runs (best-of)")
+        .opt("sim-duration", None, "simulated seconds per sim point (60; 5 with --quick)")
+        .opt("plane-decisions", None, "decision budget per shard (500k; 20k with --quick)")
+        .opt("json", None, "write machine-readable results (e.g. BENCH_hotpath.json)")
+        .flag("quick", "scaled-down run for CI smoke")
+        .flag("no-plane", "skip the plane throughput sweep");
+    let p = match spec.parse(rest) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    match rosella::hotpath::hotpath_cli(&p) {
+        Ok(report) => {
+            println!("{report}");
+            0
+        }
+        Err(e) => {
+            eprintln!("hotpath failed: {e}");
             1
         }
     }

@@ -19,7 +19,7 @@ use super::DispatchMode;
 use crate::coordinator::worker::{LiveTask, WorkerClient};
 use crate::learner::ArrivalEstimator;
 use crate::scheduler::{Policy, PolicyKind};
-use crate::stats::{AliasTable, Rng, SplitMix64};
+use crate::stats::{Rng, SplitMix64};
 use crate::types::{JobPlacement, JobSpec, LocalView, TaskKind, WorkerId};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -114,7 +114,7 @@ impl FrontendCore {
     pub fn set_estimates(&mut self, mu_hat: &[f64], lambda_tasks: f64) {
         self.cache.mu_hat.clear();
         self.cache.mu_hat.extend_from_slice(mu_hat);
-        self.cache.sampler = AliasTable::new(&self.cache.mu_hat);
+        self.cache.sampler.rebuild(&self.cache.mu_hat);
         self.cache.lambda_tasks = lambda_tasks;
         self.policy.on_estimates(&self.cache.mu_hat, lambda_tasks * self.mean_demand);
     }
@@ -129,7 +129,8 @@ impl FrontendCore {
         let (lambda, epoch) = table.read(&mut self.cache.mu_hat);
         self.cache.epoch = epoch;
         self.cache.lambda_tasks = lambda;
-        self.cache.sampler = AliasTable::new(&self.cache.mu_hat);
+        // In-place sampler rebuild: a publish refresh allocates nothing.
+        self.cache.sampler.rebuild(&self.cache.mu_hat);
         self.policy.on_estimates(&self.cache.mu_hat, lambda * self.mean_demand);
         true
     }

@@ -36,11 +36,22 @@ impl Halo {
     /// Water-filling solution: per-worker arrival rates `λ_i` for total
     /// arrival `lambda` and service rates `mu`. Exposed for tests.
     pub fn water_fill(mu: &[f64], lambda: f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        Self::water_fill_into(mu, lambda, &mut out);
+        out
+    }
+
+    /// In-place [`Self::water_fill`]: writes the rates into `out`, reusing
+    /// its capacity — the estimate-publish path allocates nothing after the
+    /// first build.
+    pub fn water_fill_into(mu: &[f64], lambda: f64, out: &mut Vec<f64>) {
         let total: f64 = mu.iter().sum();
         assert!(lambda >= 0.0);
+        out.clear();
         if lambda >= total || total <= 0.0 {
             // Overloaded or degenerate: fall back to proportional split.
-            return mu.iter().map(|&m| if total > 0.0 { lambda * m / total } else { 0.0 }).collect();
+            out.extend(mu.iter().map(|&m| if total > 0.0 { lambda * m / total } else { 0.0 }));
+            return;
         }
         // Find ν by bisection on the monotone residual
         // f(ν) = Σ max(0, μ_i − √(μ_i/ν)) − λ  (increasing in ν).
@@ -57,18 +68,25 @@ impl Halo {
             }
         }
         let nu = (lo * hi).sqrt();
-        mu.iter().map(|&m| (m - (m / nu).sqrt()).max(0.0)).collect()
+        out.extend(mu.iter().map(|&m| (m - (m / nu).sqrt()).max(0.0)));
     }
 
     fn rebuild(&mut self, mu_hat: &[f64], lambda_hat: f64) {
-        let rates = Self::water_fill(mu_hat, lambda_hat.max(0.0));
-        let total: f64 = rates.iter().sum();
-        self.routing = if total > 0.0 {
-            rates.iter().map(|r| r / total).collect()
+        Self::water_fill_into(mu_hat, lambda_hat.max(0.0), &mut self.routing);
+        let total: f64 = self.routing.iter().sum();
+        if total > 0.0 {
+            for r in &mut self.routing {
+                *r /= total;
+            }
         } else {
-            vec![1.0 / mu_hat.len() as f64; mu_hat.len()]
-        };
-        self.table = Some(AliasTable::new(&self.routing));
+            self.routing.clear();
+            self.routing.resize(mu_hat.len(), 1.0 / mu_hat.len() as f64);
+        }
+        // Recycle the sampler's buffers across publishes.
+        match self.table.as_mut() {
+            Some(t) => t.rebuild(&self.routing),
+            None => self.table = Some(AliasTable::new(&self.routing)),
+        }
     }
 
     /// Current routing probabilities (diagnostics/tests).

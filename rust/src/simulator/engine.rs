@@ -11,6 +11,14 @@
 //! speeds act exactly like the paper's slowed-down Spark executors (a task
 //! with demand τ takes τ/s seconds on a speed-s worker), and the node
 //! monitor's two-queue priority discipline is implemented verbatim.
+//!
+//! The steady-state path mirrors the constant-work profile of the paper's
+//! scheduler (§3: each decision "only performs simple operations"): queue
+//! lengths are maintained incrementally (O(1) per enqueue/start/complete,
+//! no per-arrival sweep), the arrival path reuses one job buffer and the
+//! proportional sampler rebuilds in place, and completion events are keyed
+//! per worker so speed shocks cancel stale events inside the queue instead
+//! of leaking them to the handler.
 
 use crate::cluster::{SpeedProfile, Volatility, Worker};
 use crate::learner::{ArrivalEstimator, FakeJobDispatcher, LearnerConfig, PerfLearner};
@@ -140,6 +148,8 @@ pub struct Simulation {
     rng_shock: Rng,
     rng_dispatch: Rng,
     // Job bookkeeping.
+    /// Reusable arrival buffer (filled by `Workload::next_job_into`).
+    job_buf: JobSpec,
     jobs: HashMap<u64, JobState>,
     /// Single-task jobs in flight (tracked by a counter instead of a map
     /// entry — the dominant case in the §4 model and serving workloads).
@@ -185,7 +195,7 @@ impl Simulation {
         policy.on_estimates(&mu_hat, workload.lambda_tasks() * mean_demand);
         Self {
             now: 0.0,
-            events: EventQueue::new(),
+            events: EventQueue::with_workers(n),
             qlen: vec![0; n],
             workers,
             speeds,
@@ -199,6 +209,7 @@ impl Simulation {
             rng_policy: seed_rng.fork(),
             rng_shock: seed_rng.fork(),
             rng_dispatch: seed_rng.fork(),
+            job_buf: JobSpec::default(),
             jobs: HashMap::new(),
             singles_in_flight: 0,
             unlaunched: HashMap::new(),
@@ -255,9 +266,7 @@ impl Simulation {
             match ev {
                 Event::EndOfSimulation => break,
                 Event::JobArrival => self.on_job_arrival(),
-                Event::TaskCompletion { worker, generation } => {
-                    self.on_completion(worker, generation)
-                }
+                Event::TaskCompletion { worker } => self.on_completion(worker),
                 Event::BenchmarkDispatch => self.on_benchmark_dispatch(),
                 Event::EstimatePublish => self.on_publish(),
                 Event::SpeedShock => self.on_shock(),
@@ -282,9 +291,15 @@ impl Simulation {
         }
     }
 
-    fn refresh_qlen(&mut self) {
-        for (q, w) in self.qlen.iter_mut().zip(self.workers.iter()) {
-            *q = w.probe_len();
+    /// Test-mode guard for the incremental queue mirror: `qlen[w]` must
+    /// equal the full O(n) recompute the seed engine performed before every
+    /// decision — equality here is what makes the incremental engine's
+    /// decision stream bit-identical to the seed engine's. Compiled out in
+    /// release builds.
+    #[cfg(debug_assertions)]
+    fn assert_qlen_mirror(&self) {
+        for (w, (q, worker)) in self.qlen.iter().zip(self.workers.iter()).enumerate() {
+            debug_assert_eq!(*q, worker.probe_len(), "qlen mirror diverged at worker {w}");
         }
     }
 
@@ -294,12 +309,25 @@ impl Simulation {
         let gap = self.workload.next_gap(&mut self.rng_arrival);
         self.events.push(self.now + gap, Event::JobArrival);
 
-        let spec: JobSpec = self.workload.next_job(&mut self.rng_arrival);
+        // Refill the reusable job buffer: the steady-state arrival path
+        // allocates nothing.
+        let mut spec = std::mem::take(&mut self.job_buf);
+        self.workload.next_job_into(&mut self.rng_arrival, &mut spec);
         self.arrival_est.on_arrival(self.now, spec.len());
+        self.place_job(&spec);
+        self.job_buf = spec;
+    }
+
+    fn place_job(&mut self, spec: &JobSpec) {
+        // The seed engine rejected empty jobs at the source (JobSpec::new);
+        // the buffered path must uphold the same invariant or a
+        // `remaining: 0` job entry would leak forever.
+        assert!(!spec.is_empty(), "workload produced an empty job");
         // Hot path: a fully unconstrained single-task job needs no map
         // entry — its response time is (completion − task.arrival).
         if spec.len() == 1 && spec.tasks[0].constrained_to.is_none() {
-            self.refresh_qlen();
+            #[cfg(debug_assertions)]
+            self.assert_qlen_mirror();
             let placement = {
                 let view = LocalView {
                     queue_len: &self.qlen,
@@ -307,7 +335,7 @@ impl Simulation {
                     sampler: &self.sampler,
                     lambda_hat: self.arrival_est.lambda_or(0.0),
                 };
-                self.policy.schedule_job(&spec, &view, &mut self.rng_policy)
+                self.policy.schedule_job(spec, &view, &mut self.rng_policy)
             };
             let w = match placement {
                 JobPlacement::Single(w) => w,
@@ -352,7 +380,8 @@ impl Simulation {
         if m == 0 {
             return;
         }
-        self.refresh_qlen();
+        #[cfg(debug_assertions)]
+        self.assert_qlen_mirror();
         let placement = {
             let view = LocalView {
                 queue_len: &self.qlen,
@@ -360,7 +389,7 @@ impl Simulation {
                 sampler: &self.sampler,
                 lambda_hat: self.arrival_est.lambda_or(0.0),
             };
-            self.policy.schedule_job(&spec, &view, &mut self.rng_policy)
+            self.policy.schedule_job(spec, &view, &mut self.rng_policy)
         };
         match placement {
             JobPlacement::Single(w) => {
@@ -379,14 +408,12 @@ impl Simulation {
             }
             JobPlacement::PerTask(ws) => {
                 assert_eq!(ws.len(), m, "policy must place every unconstrained task");
-                let unconstrained: Vec<f64> = spec
-                    .tasks
-                    .iter()
-                    .filter(|t| t.constrained_to.is_none())
-                    .map(|t| t.demand)
-                    .collect();
-                for (k, &w) in ws.iter().enumerate() {
-                    let task = self.make_task(job_id, TaskKind::Real, unconstrained[k]);
+                // Pair the k-th placement with the k-th unconstrained task
+                // directly — no intermediate demand vector.
+                let unconstrained =
+                    spec.tasks.iter().filter(|t| t.constrained_to.is_none());
+                for (&w, ts) in ws.iter().zip(unconstrained) {
+                    let task = self.make_task(job_id, TaskKind::Real, ts.demand);
                     self.workers[w].enqueue(task, self.now);
                     self.kick(w);
                 }
@@ -414,11 +441,19 @@ impl Simulation {
         Task { id, job, kind, demand, arrival: self.now }
     }
 
-    /// Let `worker` pick up work if idle, resolving reservations.
+    /// Let `worker` pick up work if idle, resolving reservations, then
+    /// re-sync the worker's O(1) queue-length mirror. Every mutation of a
+    /// worker's queue state (enqueue, reservation, start, complete) is
+    /// followed by a `kick`, so this is the single place the mirror is
+    /// maintained — the seed engine's O(n) pre-decision sweep is gone.
     fn kick(&mut self, w: usize) {
-        if !self.workers[w].is_idle() {
-            return;
+        if self.workers[w].is_idle() {
+            self.kick_idle(w);
         }
+        self.qlen[w] = self.workers[w].probe_len();
+    }
+
+    fn kick_idle(&mut self, w: usize) {
         loop {
             let entry = match self.workers[w].next_entry() {
                 None => return,
@@ -427,8 +462,7 @@ impl Simulation {
             match entry {
                 (crate::cluster::QueueEntry::Task(t), at) => {
                     let completion = self.workers[w].start(t, at, self.now);
-                    let generation = self.workers[w].generation();
-                    self.events.push(completion, Event::TaskCompletion { worker: w, generation });
+                    self.events.push_completion(completion, w);
                     return;
                 }
                 (crate::cluster::QueueEntry::Reservation { job }, at) => {
@@ -437,9 +471,7 @@ impl Simulation {
                     let task = self.unlaunched.get_mut(&job).and_then(|q| q.pop_front());
                     if let Some(t) = task {
                         let completion = self.workers[w].start(t, at, self.now);
-                        let generation = self.workers[w].generation();
-                        self.events
-                            .push(completion, Event::TaskCompletion { worker: w, generation });
+                        self.events.push_completion(completion, w);
                         return;
                     }
                     // else: reservation void; keep draining the queue.
@@ -448,10 +480,9 @@ impl Simulation {
         }
     }
 
-    fn on_completion(&mut self, w: usize, generation: u64) {
-        if generation != self.workers[w].generation() {
-            return; // stale event from before a speed shock
-        }
+    fn on_completion(&mut self, w: usize) {
+        // Stale completions (from before a speed shock) are cancelled at
+        // the source inside `EventQueue`; whatever arrives here is live.
         let (task, duration, _wait) = self.workers[w].complete(self.now);
         // Every completion (real or benchmark) is a service sample (§5:
         // "when a benchmark or real task completes, the node monitor
@@ -501,7 +532,7 @@ impl Simulation {
         let lam = self.arrival_est.lambda_or(0.0);
         let params = self.perf.publish(self.now, lam);
         self.mu_hat.copy_from_slice(self.perf.mu_hat());
-        self.sampler = AliasTable::new(&self.mu_hat);
+        self.sampler.rebuild(&self.mu_hat);
         self.policy.on_estimates(&self.mu_hat, lam * self.workload.mean_demand());
         // Ground-truth error trace for learning-time analyses.
         let mu_star_abs = params.mu_star;
@@ -516,17 +547,20 @@ impl Simulation {
         if !self.cfg.volatility.shock(&mut self.speeds, &mut self.rng_shock) {
             return;
         }
-        for (w, &s) in self.speeds.clone().iter().enumerate() {
+        // Re-base in-flight tasks under the new speeds. Iterate by index —
+        // the seed engine cloned the whole speed vector per shock — and let
+        // the event queue cancel each worker's superseded completion at
+        // the source.
+        for w in 0..self.workers.len() {
+            let s = self.speeds[w];
             if let Some(new_completion) = self.workers[w].set_speed(s, self.now) {
-                let generation = self.workers[w].generation();
-                self.events
-                    .push(new_completion, Event::TaskCompletion { worker: w, generation });
+                self.events.push_completion(new_completion, w);
             }
         }
         if self.cfg.learner.oracle {
             // Oracle scheduler instantly knows the new speeds.
             self.mu_hat.copy_from_slice(&self.speeds);
-            self.sampler = AliasTable::new(&self.mu_hat);
+            self.sampler.rebuild(&self.mu_hat);
             self.policy
                 .on_estimates(&self.mu_hat, self.workload.lambda_tasks() * self.workload.mean_demand());
         }
@@ -536,7 +570,9 @@ impl Simulation {
         if let Some(interval) = self.cfg.queue_sample {
             self.events.push(self.now + interval, Event::QueueSample);
         }
-        self.refresh_qlen();
+        // The mirror is maintained incrementally; nothing to recompute.
+        #[cfg(debug_assertions)]
+        self.assert_qlen_mirror();
         if let Some(q) = self.queues.as_mut() {
             q.record(&self.qlen);
         }
@@ -649,6 +685,37 @@ mod tests {
         cfg.workload = WorkloadKind::Tpch { query: crate::workload::tpch::Query::Q3 };
         let r = run(cfg);
         assert!(r.responses.count() > 200);
+        assert!(r.incomplete_jobs < 100, "backlog {}", r.incomplete_jobs);
+    }
+
+    #[test]
+    fn rapid_shocks_neither_double_complete_nor_diverge() {
+        // A shock mid-service reschedules the in-flight completion; the
+        // stale event must be cancelled inside the queue. A double
+        // completion would panic in `Worker::complete` (nothing in
+        // service), so a clean run is itself the assertion; determinism
+        // across two runs guards the cancellation order.
+        let mut cfg = base();
+        cfg.volatility = Volatility::Permute { period: 0.25 };
+        cfg.learner = LearnerConfig::default();
+        let a = run(cfg.clone());
+        let b = run(cfg);
+        assert!(a.responses.count() > 500, "completed {}", a.responses.count());
+        assert_eq!(a.completed_real, b.completed_real);
+        assert_eq!(a.completed_bench, b.completed_bench);
+        assert!((a.responses.mean() - b.responses.mean()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multi_task_per_task_placement_completes_jobs() {
+        // Exercises the PerTask dispatch path (multi-task jobs, direct
+        // placement — no late binding) end to end.
+        let mut cfg = base();
+        cfg.policy = PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false };
+        cfg.workload = WorkloadKind::Tpch { query: crate::workload::tpch::Query::Q6 };
+        cfg.load = 0.5;
+        let r = run(cfg);
+        assert!(r.responses.count() > 200, "completed {}", r.responses.count());
         assert!(r.incomplete_jobs < 100, "backlog {}", r.incomplete_jobs);
     }
 

@@ -4,20 +4,36 @@
 //! The queue is a binary heap keyed by `(time, seq)`; the sequence number
 //! breaks ties deterministically (FIFO among simultaneous events), which
 //! keeps every experiment bit-reproducible for a fixed seed.
+//!
+//! Two properties keep the event loop allocation-free and O(log m) per
+//! event regardless of cluster size:
+//!
+//! * heap entries are a compact `Copy` triple `(time, seq, packed event)` —
+//!   a packed event is one `u64` (tag + worker id), so pushing or popping
+//!   never clones an [`Event`] or touches the heap's buffer beyond the
+//!   amortized in-place sift;
+//! * completion events are **keyed per worker**: each worker serves at most
+//!   one task at a time, so the queue tracks the sequence number of the one
+//!   live completion per worker. Rescheduling a completion (a speed shock
+//!   re-basing an in-flight task) cancels the previous event *at the
+//!   source*; cancelled entries are skimmed off inside [`EventQueue::pop`]
+//!   and never reach the engine, and [`EventQueue::len`] counts live events
+//!   only. This replaces the old lazily-filtered generation counters and
+//!   bounds the queue at (live events + not-yet-skimmed cancellations).
 
 use crate::types::WorkerId;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 /// Simulation events.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Event {
     /// A new job arrives at the scheduler.
     JobArrival,
-    /// Worker `worker` finishes its in-service task. `generation` guards
-    /// against stale completions after a speed shock rescheduled the
-    /// in-flight task (see `engine.rs`).
-    TaskCompletion { worker: WorkerId, generation: u64 },
+    /// Worker `worker` finishes its in-service task. At most one completion
+    /// per worker is live at any time; rescheduling (a speed shock) cancels
+    /// the stale event inside the queue.
+    TaskCompletion { worker: WorkerId },
     /// The learner's dispatcher wakes up to inject benchmark jobs
     /// (LEARNER-DISPATCHER, paper Fig. 6).
     BenchmarkDispatch,
@@ -33,12 +49,55 @@ pub enum Event {
     EndOfSimulation,
 }
 
-/// A scheduled event.
-#[derive(Debug, Clone)]
+// Packed-event tags (high 32 bits); the low 32 bits carry the worker id
+// for completions and are zero otherwise.
+const T_JOB_ARRIVAL: u64 = 0;
+const T_COMPLETION: u64 = 1;
+const T_BENCH_DISPATCH: u64 = 2;
+const T_ESTIMATE_PUBLISH: u64 = 3;
+const T_SPEED_SHOCK: u64 = 4;
+const T_QUEUE_SAMPLE: u64 = 5;
+const T_END: u64 = 6;
+
+#[inline]
+fn pack_tag(ev: &Event) -> u64 {
+    match ev {
+        Event::JobArrival => T_JOB_ARRIVAL << 32,
+        Event::TaskCompletion { worker } => (T_COMPLETION << 32) | *worker as u64,
+        Event::BenchmarkDispatch => T_BENCH_DISPATCH << 32,
+        Event::EstimatePublish => T_ESTIMATE_PUBLISH << 32,
+        Event::SpeedShock => T_SPEED_SHOCK << 32,
+        Event::QueueSample => T_QUEUE_SAMPLE << 32,
+        Event::EndOfSimulation => T_END << 32,
+    }
+}
+
+#[inline]
+fn unpack(bits: u64) -> Event {
+    let worker = (bits & 0xFFFF_FFFF) as usize;
+    match bits >> 32 {
+        T_JOB_ARRIVAL => Event::JobArrival,
+        T_COMPLETION => Event::TaskCompletion { worker },
+        T_BENCH_DISPATCH => Event::BenchmarkDispatch,
+        T_ESTIMATE_PUBLISH => Event::EstimatePublish,
+        T_SPEED_SHOCK => Event::SpeedShock,
+        T_QUEUE_SAMPLE => Event::QueueSample,
+        T_END => Event::EndOfSimulation,
+        other => unreachable!("corrupt packed event tag {other}"),
+    }
+}
+
+#[inline]
+fn is_completion(bits: u64) -> bool {
+    bits >> 32 == T_COMPLETION
+}
+
+/// A scheduled event: 24 bytes, `Copy`, no indirection.
+#[derive(Debug, Clone, Copy)]
 struct Scheduled {
     time: f64,
     seq: u64,
-    event: Event,
+    ev: u64,
 }
 
 impl PartialEq for Scheduled {
@@ -65,11 +124,20 @@ impl Ord for Scheduled {
     }
 }
 
+/// Sentinel: no live completion scheduled for this worker.
+const NO_COMPLETION: u64 = u64::MAX;
+
 /// Min-heap event queue ordered by time, FIFO among equal times.
 #[derive(Debug, Default)]
 pub struct EventQueue {
     heap: BinaryHeap<Scheduled>,
     seq: u64,
+    /// Per-worker sequence number of the one live completion event
+    /// ([`NO_COMPLETION`] when none). Grown on demand.
+    completion_seq: Vec<u64>,
+    /// Cancelled completion events still physically in the heap; they are
+    /// skimmed off during `pop`/`peek_time` and never surface.
+    stale: usize,
 }
 
 impl EventQueue {
@@ -78,36 +146,118 @@ impl EventQueue {
         Self::default()
     }
 
-    /// Schedule `event` at absolute time `time`.
-    pub fn push(&mut self, time: f64, event: Event) {
+    /// Empty queue with the per-worker completion slots preallocated.
+    pub fn with_workers(n: usize) -> Self {
+        Self { completion_seq: vec![NO_COMPLETION; n], ..Self::default() }
+    }
+
+    #[inline]
+    fn ensure_worker(&mut self, worker: WorkerId) {
+        debug_assert!((worker as u64) < (1u64 << 32), "worker id overflows packed event");
+        if worker >= self.completion_seq.len() {
+            self.completion_seq.resize(worker + 1, NO_COMPLETION);
+        }
+    }
+
+    #[inline]
+    fn push_raw(&mut self, time: f64, ev: u64) {
         debug_assert!(time.is_finite() && time >= 0.0, "bad event time {time}");
-        self.heap.push(Scheduled { time, seq: self.seq, event });
+        self.heap.push(Scheduled { time, seq: self.seq, ev });
         self.seq += 1;
     }
 
-    /// Pop the earliest event, if any.
-    pub fn pop(&mut self) -> Option<(f64, Event)> {
-        self.heap.pop().map(|s| (s.time, s.event))
+    /// Schedule `event` at absolute time `time`. Completions are routed
+    /// through [`Self::push_completion`] so the per-worker keying invariant
+    /// holds no matter which entry point the caller uses.
+    pub fn push(&mut self, time: f64, event: Event) {
+        match event {
+            Event::TaskCompletion { worker } => self.push_completion(time, worker),
+            other => self.push_raw(time, pack_tag(&other)),
+        }
     }
 
-    /// Time of the next event without removing it.
-    pub fn peek_time(&self) -> Option<f64> {
+    /// Schedule (or reschedule) `worker`'s completion at `time`. Any
+    /// previously scheduled completion for the same worker is cancelled at
+    /// the source: it will be dropped inside the queue, never returned.
+    pub fn push_completion(&mut self, time: f64, worker: WorkerId) {
+        self.ensure_worker(worker);
+        if self.completion_seq[worker] != NO_COMPLETION {
+            self.stale += 1;
+        }
+        self.completion_seq[worker] = self.seq;
+        self.push_raw(time, (T_COMPLETION << 32) | worker as u64);
+    }
+
+    /// Cancel `worker`'s pending completion, if any. Returns whether one
+    /// was live.
+    pub fn cancel_completion(&mut self, worker: WorkerId) -> bool {
+        match self.completion_seq.get_mut(worker) {
+            Some(slot) if *slot != NO_COMPLETION => {
+                *slot = NO_COMPLETION;
+                self.stale += 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Drop cancelled completions sitting at the top of the heap.
+    fn skim_stale(&mut self) {
+        while let Some(&s) = self.heap.peek() {
+            if is_completion(s.ev) {
+                let w = (s.ev & 0xFFFF_FFFF) as usize;
+                if self.completion_seq[w] != s.seq {
+                    self.heap.pop();
+                    self.stale -= 1;
+                    continue;
+                }
+            }
+            break;
+        }
+    }
+
+    /// Pop the earliest live event, if any. Cancelled completions are
+    /// consumed silently.
+    pub fn pop(&mut self) -> Option<(f64, Event)> {
+        while let Some(s) = self.heap.pop() {
+            if is_completion(s.ev) {
+                let w = (s.ev & 0xFFFF_FFFF) as usize;
+                if self.completion_seq[w] != s.seq {
+                    self.stale -= 1;
+                    continue; // cancelled at source
+                }
+                self.completion_seq[w] = NO_COMPLETION;
+            }
+            return Some((s.time, unpack(s.ev)));
+        }
+        None
+    }
+
+    /// Time of the next live event without removing it.
+    pub fn peek_time(&mut self) -> Option<f64> {
+        self.skim_stale();
         self.heap.peek().map(|s| s.time)
     }
 
-    /// Number of pending events.
+    /// Number of pending *live* events (cancelled completions excluded).
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.heap.len() - self.stale
     }
 
-    /// True if no events are pending.
+    /// True if no live events are pending.
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 
-    /// Drop everything (used between experiment repetitions).
+    /// Drop everything (used between experiment repetitions). Keeps the
+    /// heap's and the completion table's capacity — the recycled-queue
+    /// path for repeated runs.
     pub fn clear(&mut self) {
         self.heap.clear();
+        self.stale = 0;
+        for slot in &mut self.completion_seq {
+            *slot = NO_COMPLETION;
+        }
     }
 }
 
@@ -129,13 +279,13 @@ mod tests {
 
     #[test]
     fn fifo_among_equal_times() {
-        let mut q = EventQueue::new();
-        q.push(1.0, Event::TaskCompletion { worker: 0, generation: 0 });
-        q.push(1.0, Event::TaskCompletion { worker: 1, generation: 0 });
-        q.push(1.0, Event::TaskCompletion { worker: 2, generation: 0 });
+        let mut q = EventQueue::with_workers(3);
+        q.push(1.0, Event::TaskCompletion { worker: 0 });
+        q.push(1.0, Event::TaskCompletion { worker: 1 });
+        q.push(1.0, Event::TaskCompletion { worker: 2 });
         for expect in 0..3 {
             match q.pop().unwrap().1 {
-                Event::TaskCompletion { worker, .. } => assert_eq!(worker, expect),
+                Event::TaskCompletion { worker } => assert_eq!(worker, expect),
                 e => panic!("unexpected {e:?}"),
             }
         }
@@ -167,7 +317,95 @@ mod tests {
     fn clear_empties() {
         let mut q = EventQueue::new();
         q.push(1.0, Event::JobArrival);
+        q.push_completion(2.0, 0);
         q.clear();
         assert!(q.is_empty());
+        // A post-clear completion must not be confused with the dropped one.
+        q.push_completion(3.0, 0);
+        assert_eq!(q.pop(), Some((3.0, Event::TaskCompletion { worker: 0 })));
+    }
+
+    #[test]
+    fn reschedule_cancels_previous_completion_at_source() {
+        let mut q = EventQueue::with_workers(2);
+        q.push_completion(1.0, 0);
+        // Speed shock: the in-flight task now finishes earlier.
+        q.push_completion(0.5, 0);
+        assert_eq!(q.len(), 1, "cancelled event must not count as live");
+        assert_eq!(q.pop(), Some((0.5, Event::TaskCompletion { worker: 0 })));
+        assert!(q.pop().is_none(), "stale completion must never surface");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn reschedule_later_also_cancels_the_earlier_event() {
+        let mut q = EventQueue::with_workers(1);
+        q.push_completion(0.5, 0);
+        // Slow-down shock: completion moves later; the earlier event is
+        // now stale and must be skimmed, not surfaced at t=0.5.
+        q.push_completion(2.0, 0);
+        assert_eq!(q.peek_time(), Some(2.0));
+        assert_eq!(q.pop(), Some((2.0, Event::TaskCompletion { worker: 0 })));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn completions_keyed_per_worker_do_not_interfere() {
+        let mut q = EventQueue::with_workers(2);
+        q.push_completion(1.0, 0);
+        q.push_completion(2.0, 1);
+        q.push_completion(1.5, 0); // reschedule worker 0 only
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some((1.5, Event::TaskCompletion { worker: 0 })));
+        assert_eq!(q.pop(), Some((2.0, Event::TaskCompletion { worker: 1 })));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn explicit_cancellation() {
+        let mut q = EventQueue::with_workers(1);
+        q.push_completion(1.0, 0);
+        assert!(q.cancel_completion(0));
+        assert!(!q.cancel_completion(0), "double cancel must be a no-op");
+        assert!(q.is_empty());
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn live_count_stays_bounded_across_many_reschedules() {
+        // A volatile cluster reschedules the same worker's completion over
+        // and over; the queue must neither grow its live count nor leak
+        // the cancelled events past their pop.
+        let mut q = EventQueue::with_workers(1);
+        for k in 0..1_000 {
+            q.push_completion(1.0 + k as f64 * 1e-3, 0);
+            assert_eq!(q.len(), 1, "live count grew at reschedule {k}");
+        }
+        let (t, ev) = q.pop().expect("one live completion");
+        assert_eq!(ev, Event::TaskCompletion { worker: 0 });
+        assert!((t - 1.999).abs() < 1e-9, "surviving event must be the last reschedule");
+        assert!(q.pop().is_none(), "every stale event must be consumed internally");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn natural_completion_then_new_task_reuses_the_slot() {
+        let mut q = EventQueue::with_workers(1);
+        q.push_completion(1.0, 0);
+        assert_eq!(q.pop(), Some((1.0, Event::TaskCompletion { worker: 0 })));
+        // Worker starts its next task: a fresh completion, not a stale one.
+        q.push_completion(2.0, 0);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop(), Some((2.0, Event::TaskCompletion { worker: 0 })));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn worker_slots_grow_on_demand() {
+        let mut q = EventQueue::new(); // no preallocated slots
+        q.push_completion(1.0, 7);
+        q.push_completion(0.5, 7);
+        assert_eq!(q.pop(), Some((0.5, Event::TaskCompletion { worker: 7 })));
+        assert!(q.pop().is_none());
     }
 }

@@ -7,7 +7,10 @@
 //! scheduler. The alias table gives exact O(1) draws after an O(n) build.
 //!
 //! The table is rebuilt only when the learner publishes new estimates (a
-//! rate-limited background event), never per task.
+//! rate-limited background event), never per task. To keep that publish
+//! path allocation-free as well, [`AliasTable::rebuild`] reconstructs the
+//! table *in place*, recycling the column arrays and the two work lists —
+//! after the first build, a publish performs zero heap allocations.
 
 use super::rng::Rng;
 
@@ -18,6 +21,12 @@ pub struct AliasTable {
     prob: Vec<f64>,
     /// `alias[i]` is the alternative outcome for column `i`.
     alias: Vec<u32>,
+    /// Scratch: weights scaled to mean 1 (recycled across rebuilds).
+    scaled: Vec<f64>,
+    /// Scratch: under-full work list (recycled across rebuilds).
+    small: Vec<u32>,
+    /// Scratch: over-full work list (recycled across rebuilds).
+    large: Vec<u32>,
 }
 
 impl AliasTable {
@@ -28,6 +37,22 @@ impl AliasTable {
     /// uniform distribution — the same fallback Rosella's scheduler uses
     /// before any estimate is learned.
     pub fn new(weights: &[f64]) -> Self {
+        let mut t = Self {
+            prob: Vec::new(),
+            alias: Vec::new(),
+            scaled: Vec::new(),
+            small: Vec::new(),
+            large: Vec::new(),
+        };
+        t.rebuild(weights);
+        t
+    }
+
+    /// Rebuild the table in place from fresh weights, reusing every
+    /// internal buffer. This is the estimate-publish hot path: after the
+    /// first build (or whenever `weights.len()` grows) it allocates
+    /// nothing.
+    pub fn rebuild(&mut self, weights: &[f64]) {
         let n = weights.len();
         assert!(n > 0, "alias table over empty support");
         assert!(
@@ -35,41 +60,42 @@ impl AliasTable {
             "weights must be non-negative and finite: {weights:?}"
         );
         let total: f64 = weights.iter().sum();
-        let scaled: Vec<f64> = if total <= 0.0 {
-            vec![1.0; n]
+        self.scaled.clear();
+        if total <= 0.0 {
+            self.scaled.resize(n, 1.0);
         } else {
-            weights.iter().map(|&w| w * n as f64 / total).collect()
-        };
+            self.scaled.extend(weights.iter().map(|&w| w * n as f64 / total));
+        }
 
-        let mut prob = vec![0.0f64; n];
-        let mut alias = vec![0u32; n];
+        self.prob.clear();
+        self.prob.resize(n, 0.0);
+        self.alias.clear();
+        self.alias.resize(n, 0);
         // Partition columns into under-full and over-full work lists.
-        let mut small: Vec<u32> = Vec::with_capacity(n);
-        let mut large: Vec<u32> = Vec::with_capacity(n);
-        let mut p = scaled;
-        for (i, &v) in p.iter().enumerate() {
+        self.small.clear();
+        self.large.clear();
+        for (i, &v) in self.scaled.iter().enumerate() {
             if v < 1.0 {
-                small.push(i as u32);
+                self.small.push(i as u32);
             } else {
-                large.push(i as u32);
+                self.large.push(i as u32);
             }
         }
-        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
-            small.pop();
-            prob[s as usize] = p[s as usize];
-            alias[s as usize] = l;
-            p[l as usize] = (p[l as usize] + p[s as usize]) - 1.0;
-            if p[l as usize] < 1.0 {
-                large.pop();
-                small.push(l);
+        while let (Some(&s), Some(&l)) = (self.small.last(), self.large.last()) {
+            self.small.pop();
+            self.prob[s as usize] = self.scaled[s as usize];
+            self.alias[s as usize] = l;
+            self.scaled[l as usize] = (self.scaled[l as usize] + self.scaled[s as usize]) - 1.0;
+            if self.scaled[l as usize] < 1.0 {
+                self.large.pop();
+                self.small.push(l);
             }
         }
         // Leftovers are numerically == 1.
-        for &i in small.iter().chain(large.iter()) {
-            prob[i as usize] = 1.0;
-            alias[i as usize] = i;
+        for &i in self.small.iter().chain(self.large.iter()) {
+            self.prob[i as usize] = 1.0;
+            self.alias[i as usize] = i;
         }
-        Self { prob, alias }
     }
 
     /// Number of outcomes.
@@ -222,5 +248,59 @@ mod tests {
     #[should_panic]
     fn rejects_negative_weights() {
         AliasTable::new(&[1.0, -1.0]);
+    }
+
+    #[test]
+    fn rebuild_matches_fresh_build() {
+        let mut t = AliasTable::new(&[1.0; 4]);
+        for weights in [
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![0.0, 1.0, 0.0, 1.0],
+            vec![0.0, 0.0, 0.0, 0.0],
+            vec![5.0],
+            vec![1e-6, 1.0, 1e6],
+        ] {
+            t.rebuild(&weights);
+            let fresh = AliasTable::new(&weights);
+            assert_eq!(t.len(), fresh.len());
+            for i in 0..weights.len() {
+                assert!(
+                    (t.probability(i) - fresh.probability(i)).abs() < 1e-12,
+                    "rebuild diverged from fresh build at {i} for {weights:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rebuild_is_deterministic_and_reusable() {
+        // Same weights → the same draws, no matter how many rebuilds the
+        // table has been through (the publish path reuses one table).
+        let w = [1.0, 2.0, 3.0, 4.0, 0.5];
+        let mut recycled = AliasTable::new(&[9.0; 5]);
+        for _ in 0..100 {
+            recycled.rebuild(&[2.0, 2.0, 2.0, 2.0, 2.0]);
+            recycled.rebuild(&w);
+        }
+        let fresh = AliasTable::new(&w);
+        let mut r1 = Rng::new(77);
+        let mut r2 = Rng::new(77);
+        for _ in 0..10_000 {
+            assert_eq!(recycled.sample(&mut r1), fresh.sample(&mut r2));
+        }
+    }
+
+    #[test]
+    fn rebuild_handles_size_changes() {
+        let mut t = AliasTable::new(&[1.0, 1.0]);
+        t.rebuild(&[1.0; 8]);
+        assert_eq!(t.len(), 8);
+        for i in 0..8 {
+            assert!((t.probability(i) - 0.125).abs() < 1e-12);
+        }
+        t.rebuild(&[3.0]);
+        assert_eq!(t.len(), 1);
+        let mut r = Rng::new(1);
+        assert_eq!(t.sample(&mut r), 0);
     }
 }

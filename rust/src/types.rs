@@ -59,6 +59,15 @@ pub struct JobSpec {
     pub tasks: Vec<TaskSpec>,
 }
 
+/// An empty spec, only valid as a reusable buffer for
+/// [`crate::workload::Workload::next_job_into`] — every constructor keeps
+/// jobs non-empty, and a buffer is refilled before any consumer sees it.
+impl Default for JobSpec {
+    fn default() -> Self {
+        Self { tasks: Vec::new() }
+    }
+}
+
 impl JobSpec {
     /// Build a job from task specs. Panics on empty jobs.
     pub fn new(tasks: Vec<TaskSpec>) -> Self {
@@ -76,7 +85,8 @@ impl JobSpec {
         self.tasks.len()
     }
 
-    /// Always false (jobs are non-empty by construction).
+    /// False for every constructed job; true only for a [`Default`] buffer
+    /// that has not been refilled yet.
     pub fn is_empty(&self) -> bool {
         self.tasks.is_empty()
     }

@@ -25,6 +25,15 @@ pub trait Workload: Send {
     fn next_gap(&mut self, rng: &mut Rng) -> f64;
     /// Sample the next job.
     fn next_job(&mut self, rng: &mut Rng) -> JobSpec;
+    /// Sample the next job into a reusable buffer — the allocation-free
+    /// arrival path. Implementations must draw from `rng` in exactly the
+    /// same order as [`Self::next_job`] so the two paths generate identical
+    /// streams from identical seeds; the default delegates (and therefore
+    /// still allocates). `out.tasks` keeps its capacity across arrivals, so
+    /// steady-state multi-task jobs stop allocating a fresh `Vec` each.
+    fn next_job_into(&mut self, rng: &mut Rng, out: &mut JobSpec) {
+        *out = self.next_job(rng);
+    }
     /// Mean task demand τ̄ (unit-speed seconds) — used by the learner and
     /// the benchmark-job generator ("benchmark jobs shall resemble recent
     /// workloads", §3.2).
@@ -89,5 +98,55 @@ mod tests {
         let w = WorkloadKind::Synthetic.build(0.8, 13.5, 15);
         // λ_tasks = 0.8 · 13.5 / 0.1 = 108 tasks/s.
         assert!((w.lambda_tasks() - 108.0).abs() < 1e-9);
+    }
+
+    /// The allocation-free `next_job_into` path must draw from the RNG in
+    /// exactly the same order as `next_job`: the engines switched to the
+    /// buffered path and a fixed seed must keep reproducing the seed
+    /// engine's stream bit for bit.
+    #[test]
+    fn next_job_into_matches_next_job_stream() {
+        for kind in [
+            WorkloadKind::Synthetic,
+            WorkloadKind::Tpch { query: tpch::Query::Q3 },
+            WorkloadKind::Tpch { query: tpch::Query::Q6 },
+        ] {
+            let mut a = kind.build(0.8, 10.0, 9);
+            let mut b = kind.build(0.8, 10.0, 9);
+            let mut rng_a = Rng::new(1234);
+            let mut rng_b = Rng::new(1234);
+            let mut buf = JobSpec::default();
+            for k in 0..2_000 {
+                let fresh = a.next_job(&mut rng_a);
+                b.next_job_into(&mut rng_b, &mut buf);
+                assert_eq!(fresh.len(), buf.len(), "{kind:?} job {k} length diverged");
+                for (x, y) in fresh.tasks.iter().zip(buf.tasks.iter()) {
+                    assert!(
+                        x.demand.to_bits() == y.demand.to_bits()
+                            && x.constrained_to == y.constrained_to,
+                        "{kind:?} job {k} task diverged: {x:?} vs {y:?}"
+                    );
+                }
+            }
+            // The two RNG streams must stay in lockstep afterwards too.
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "{kind:?} drained the RNG unevenly");
+        }
+    }
+
+    /// The buffer's task capacity is recycled: multi-task arrivals stop
+    /// allocating once the buffer has grown to the largest stage seen.
+    #[test]
+    fn next_job_into_reuses_buffer_capacity() {
+        let mut w = WorkloadKind::Tpch { query: tpch::Query::Q6 }.build(0.8, 10.0, 9);
+        let mut rng = Rng::new(7);
+        let mut buf = JobSpec::default();
+        let mut max_cap = 0;
+        for _ in 0..200 {
+            w.next_job_into(&mut rng, &mut buf);
+            assert!(!buf.is_empty());
+            let cap = buf.tasks.capacity();
+            assert!(cap >= max_cap, "capacity shrank: {cap} < {max_cap}");
+            max_cap = max_cap.max(cap);
+        }
     }
 }

@@ -62,9 +62,16 @@ impl Workload for SyntheticWorkload {
     }
 
     fn next_job(&mut self, rng: &mut Rng) -> JobSpec {
-        JobSpec::new(
-            (0..self.tasks_per_job).map(|_| TaskSpec::new(self.demand.sample(rng))).collect(),
-        )
+        let mut spec = JobSpec::default();
+        self.next_job_into(rng, &mut spec);
+        spec
+    }
+
+    fn next_job_into(&mut self, rng: &mut Rng, out: &mut JobSpec) {
+        out.tasks.clear();
+        for _ in 0..self.tasks_per_job {
+            out.tasks.push(TaskSpec::new(self.demand.sample(rng)));
+        }
     }
 
     fn mean_demand(&self) -> f64 {

@@ -144,22 +144,25 @@ impl Workload for TpchWorkload {
     }
 
     fn next_job(&mut self, rng: &mut Rng) -> JobSpec {
+        let mut spec = JobSpec::default();
+        self.next_job_into(rng, &mut spec);
+        spec
+    }
+
+    fn next_job_into(&mut self, rng: &mut Rng, out: &mut JobSpec) {
         let shape = self.pick_shape(rng);
         let span = shape.max_tasks - shape.min_tasks;
         let m = shape.min_tasks + if span > 0 { rng.gen_index(span + 1) } else { 0 };
         let demand = Exponential::with_mean(shape.mean_demand);
-        JobSpec::new(
-            (0..m)
-                .map(|_| {
-                    let d = demand.sample(rng).max(1e-6);
-                    if rng.gen_bool(self.constrained_frac) {
-                        TaskSpec::pinned(d, rng.gen_index(self.n_workers))
-                    } else {
-                        TaskSpec::new(d)
-                    }
-                })
-                .collect(),
-        )
+        out.tasks.clear();
+        for _ in 0..m {
+            let d = demand.sample(rng).max(1e-6);
+            out.tasks.push(if rng.gen_bool(self.constrained_frac) {
+                TaskSpec::pinned(d, rng.gen_index(self.n_workers))
+            } else {
+                TaskSpec::new(d)
+            });
+        }
     }
 
     fn mean_demand(&self) -> f64 {

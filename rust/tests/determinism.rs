@@ -1,0 +1,144 @@
+//! Golden determinism suite for the O(1) scheduling hot path.
+//!
+//! The seed engine recomputed every worker's queue length with an O(n)
+//! sweep before each decision; the incremental engine maintains the same
+//! vector with O(1) updates. Their equivalence is enforced *inside* the
+//! engine by a debug-mode mirror assertion (`assert_qlen_mirror`, active in
+//! every `cargo test` run): at each decision instant the incremental
+//! `qlen` must equal the full recompute the seed engine performed. Given
+//! that invariant, every decision sees bit-identical inputs, so the runs
+//! below pin the refactored engine to the seed engine's exact
+//! `(completed_real, responses.mean())` — and the run-twice checks pin the
+//! whole system (workload buffer reuse, recycled event queue, in-place
+//! alias rebuilds) to bit-identical reproducibility per policy.
+
+use rosella::cluster::{SpeedProfile, Volatility};
+use rosella::learner::LearnerConfig;
+use rosella::plane::FrontendCore;
+use rosella::scheduler::{PolicyKind, TieRule};
+use rosella::simulator::{run, SimConfig};
+use rosella::types::JobSpec;
+use rosella::workload::WorkloadKind;
+use std::sync::atomic::AtomicUsize;
+use std::sync::Arc;
+
+/// Every policy the engine can run.
+fn all_policies() -> Vec<PolicyKind> {
+    vec![
+        PolicyKind::Uniform,
+        PolicyKind::PoT { d: 2 },
+        PolicyKind::Pss,
+        PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
+        PolicyKind::PPoT { tie: TieRule::Ll2, late_binding: false },
+        PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: true },
+        PolicyKind::Sparrow { probes_per_task: 2 },
+        PolicyKind::Bandit { eta: 0.2 },
+        PolicyKind::Halo,
+    ]
+}
+
+fn golden_cfg(policy: PolicyKind, workload: WorkloadKind) -> SimConfig {
+    SimConfig {
+        seed: 2024,
+        duration: 90.0,
+        warmup: 10.0,
+        speeds: SpeedProfile::S1,
+        // Shocks exercise the per-worker completion cancellation; the
+        // learning stack exercises in-place alias rebuilds.
+        volatility: Volatility::Permute { period: 20.0 },
+        workload,
+        load: 0.6,
+        policy,
+        learner: LearnerConfig::default(),
+        queue_sample: Some(1.0),
+    }
+}
+
+#[test]
+fn every_policy_reproduces_bit_identical_results_synthetic() {
+    for policy in all_policies() {
+        let cfg = golden_cfg(policy.clone(), WorkloadKind::Synthetic);
+        let a = run(cfg.clone());
+        let b = run(cfg);
+        assert!(a.responses.count() > 200, "{policy:?}: only {} jobs", a.responses.count());
+        assert_eq!(a.completed_real, b.completed_real, "{policy:?}: completed_real diverged");
+        assert_eq!(a.completed_bench, b.completed_bench, "{policy:?}: completed_bench diverged");
+        assert_eq!(a.responses.count(), b.responses.count(), "{policy:?}: count diverged");
+        assert_eq!(
+            a.responses.mean().to_bits(),
+            b.responses.mean().to_bits(),
+            "{policy:?}: mean response diverged bit-wise"
+        );
+        assert_eq!(a.incomplete_jobs, b.incomplete_jobs, "{policy:?}: backlog diverged");
+    }
+}
+
+#[test]
+fn multi_task_policies_reproduce_bit_identical_results_tpch() {
+    // TPC-H stages exercise the multi-task paths: constrained tasks,
+    // PerTask placement, and late-binding reservations.
+    for policy in [
+        PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
+        PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: true },
+        PolicyKind::Sparrow { probes_per_task: 2 },
+    ] {
+        let mut cfg = golden_cfg(
+            policy.clone(),
+            WorkloadKind::Tpch { query: rosella::workload::tpch::Query::Q3 },
+        );
+        cfg.load = 0.5;
+        let a = run(cfg.clone());
+        let b = run(cfg);
+        assert!(a.responses.count() > 100, "{policy:?}: only {} jobs", a.responses.count());
+        assert_eq!(a.completed_real, b.completed_real, "{policy:?}: completed_real diverged");
+        assert_eq!(
+            a.responses.mean().to_bits(),
+            b.responses.mean().to_bits(),
+            "{policy:?}: mean response diverged bit-wise"
+        );
+    }
+}
+
+#[test]
+fn oracle_mode_reproduces_bit_identical_results() {
+    // Oracle shocks rebuild the sampler in place on the shock path.
+    let mut cfg = golden_cfg(
+        PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
+        WorkloadKind::Synthetic,
+    );
+    cfg.learner = LearnerConfig::oracle();
+    cfg.volatility = Volatility::Permute { period: 5.0 };
+    let a = run(cfg.clone());
+    let b = run(cfg);
+    assert!(a.responses.count() > 200);
+    assert_eq!(a.completed_real, b.completed_real);
+    assert_eq!(a.responses.mean().to_bits(), b.responses.mean().to_bits());
+}
+
+#[test]
+fn local_and_shared_views_yield_identical_decisions_for_every_policy() {
+    // The same policy over the borrowed-slice view (DES engine, live
+    // coordinator) and over the plane's atomic-probe view must produce the
+    // same placement stream — this is what lets the coordinator switch its
+    // arrival path from an O(n) queue snapshot to O(1) shared probes
+    // without changing a single decision.
+    for kind in all_policies() {
+        let n = 8;
+        let mut local = FrontendCore::new(&kind, n, 1.0, 0.01, 128, 2024);
+        let mut shared = FrontendCore::new(&kind, n, 1.0, 0.01, 128, 2024);
+        let qlocal: Vec<usize> = (0..n).map(|i| (i * 3) % 5).collect();
+        let qshared: Vec<Arc<AtomicUsize>> =
+            qlocal.iter().map(|&q| Arc::new(AtomicUsize::new(q))).collect();
+        let job = JobSpec::single(0.02);
+        for k in 0..3_000 {
+            let t = k as f64 * 1e-3;
+            local.on_arrival(t, 1);
+            shared.on_arrival(t, 1);
+            assert_eq!(
+                local.decide_local(&job, &qlocal),
+                shared.decide_shared(&job, &qshared),
+                "{kind:?}: decision {k} diverged between views"
+            );
+        }
+    }
+}
