@@ -10,7 +10,7 @@
 //! `cargo bench --bench bench_plane` — decide-only sweep (raw scheduling
 //! throughput) followed by an execute-mode latency snapshot.
 
-use rosella::plane::{run_plane, DispatchMode, PlaneConfig};
+use rosella::plane::{run_plane, DispatchMode, LearnerMode, PlaneConfig};
 use rosella::scheduler::{PolicyKind, TieRule};
 
 fn decide_only_sweep() {
@@ -79,8 +79,45 @@ fn execute_latency() {
     }
 }
 
+fn learner_ownership_comparison() {
+    println!("-- learner ownership: shared aggregator vs per-shard + estimate sync --");
+    for learners in [LearnerMode::Shared, LearnerMode::PerShard] {
+        let cfg = PlaneConfig {
+            frontends: 4,
+            rate: 800.0,
+            duration: 2.0,
+            mean_demand: 0.004,
+            publish_interval: 0.1,
+            learners,
+            sync_interval: 0.2,
+            ..PlaneConfig::default()
+        };
+        match run_plane(cfg) {
+            Ok(r) => {
+                let five = r.responses.five_num();
+                println!(
+                    "{:<9}: {:>8.0} decisions/s, completed {:>5}, benchmarks {:>4}, \
+                     p50 {:>6.2} ms, p95 {:>6.2} ms, sync epochs {}",
+                    learners.name(),
+                    r.decisions_per_sec,
+                    r.completed,
+                    r.benchmarks,
+                    five.p50 * 1e3,
+                    five.p95 * 1e3,
+                    r.sync_epochs
+                );
+            }
+            Err(e) => {
+                eprintln!("plane run failed: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
 fn main() {
     println!("== bench_plane ==");
     decide_only_sweep();
     execute_latency();
+    learner_ownership_comparison();
 }

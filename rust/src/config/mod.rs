@@ -16,7 +16,8 @@
 //!   "learner": {
 //!     "enabled": true, "oracle": false, "fake_jobs": true,
 //!     "c0": 0.1, "window_c": 10.0,
-//!     "arrival_window": 200, "publish_interval": 0.1
+//!     "arrival_window": 200, "publish_interval": 0.1,
+//!     "schedulers": 1, "sync_interval": 0.0
 //!   },
 //!   "queue_sample": 0.1
 //! }
@@ -83,6 +84,13 @@ pub fn learner_from_json(v: &Json) -> Result<LearnerConfig, ConfigError> {
             .map(|x| x as usize)
             .unwrap_or(d.arrival_window),
         publish_interval: f64_field(v, "publish_interval", d.publish_interval)?,
+        schedulers: v
+            .get("schedulers")
+            .map(|x| x.as_u64().ok_or_else(|| bad("'schedulers' must be an integer")))
+            .transpose()?
+            .map(|x| x as usize)
+            .unwrap_or(d.schedulers),
+        sync_interval: f64_field(v, "sync_interval", d.sync_interval)?,
     })
 }
 
@@ -180,6 +188,12 @@ pub fn validate(cfg: &SimConfig) -> Result<(), ConfigError> {
     if cfg.learner.enabled && cfg.learner.oracle {
         return Err(bad("learner.enabled and learner.oracle are mutually exclusive"));
     }
+    if cfg.learner.schedulers == 0 {
+        return Err(bad("learner.schedulers must be at least 1"));
+    }
+    if !(cfg.learner.sync_interval >= 0.0 && cfg.learner.sync_interval.is_finite()) {
+        return Err(bad("learner.sync_interval must be a finite non-negative number"));
+    }
     Ok(())
 }
 
@@ -230,5 +244,21 @@ mod tests {
         assert!(
             sim_config_from_str(r#"{"learner": {"enabled": true, "oracle": true}}"#).is_err()
         );
+        assert!(sim_config_from_str(r#"{"learner": {"schedulers": 0}}"#).is_err());
+        assert!(sim_config_from_str(r#"{"learner": {"sync_interval": -1.0}}"#).is_err());
+    }
+
+    #[test]
+    fn scheduler_topology_fields_parse() {
+        let cfg = sim_config_from_str(
+            r#"{"learner": {"schedulers": 4, "sync_interval": 2.5}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.learner.schedulers, 4);
+        assert_eq!(cfg.learner.sync_interval, 2.5);
+        // Defaults: centralized, consensus at every publish.
+        let d = sim_config_from_str("{}").unwrap();
+        assert_eq!(d.learner.schedulers, 1);
+        assert_eq!(d.learner.sync_interval, 0.0);
     }
 }

@@ -18,7 +18,7 @@
 
 pub mod worker;
 
-pub use worker::{Completion, LiveTask, PayloadMode, WorkerClient, WorkerHandle};
+pub use worker::{Completion, CompletionSink, LiveTask, PayloadMode, WorkerClient, WorkerHandle};
 
 use crate::learner::{FakeJobDispatcher, PerfLearner};
 use crate::metrics::ResponseRecorder;

@@ -57,6 +57,51 @@ pub enum PayloadMode {
     Pjrt { artifacts_dir: String },
 }
 
+/// Where a worker reports completions.
+///
+/// The single-frontend coordinator and the shared-learner plane funnel
+/// everything into one channel; a plane with per-shard learners gives every
+/// scheduler its own channel, and the node monitor routes each report to
+/// the scheduler that dispatched the task — the shard encoded in the job id
+/// (§5: each scheduler learns from only the completions it routed).
+#[derive(Clone)]
+pub enum CompletionSink {
+    /// One central consumer.
+    Single(Sender<Completion>),
+    /// Per-scheduler channels indexed by [`crate::plane::job_shard`].
+    Sharded(Vec<Sender<Completion>>),
+}
+
+impl CompletionSink {
+    /// Per-scheduler sink routed by the shard encoded in the job id.
+    pub fn sharded(senders: Vec<Sender<Completion>>) -> Self {
+        assert!(!senders.is_empty(), "sharded sink needs at least one channel");
+        CompletionSink::Sharded(senders)
+    }
+
+    /// Deliver one completion report. A send error just means the consumer
+    /// already stopped at shutdown.
+    pub fn send(&self, c: Completion) {
+        match self {
+            CompletionSink::Single(tx) => {
+                let _ = tx.send(c);
+            }
+            CompletionSink::Sharded(txs) => {
+                // Out-of-range shards (e.g. the shared-mode benchmark
+                // sentinel id) fall back to the last channel.
+                let s = crate::plane::job_shard(c.job).min(txs.len() - 1);
+                let _ = txs[s].send(c);
+            }
+        }
+    }
+}
+
+impl From<Sender<Completion>> for CompletionSink {
+    fn from(tx: Sender<Completion>) -> Self {
+        CompletionSink::Single(tx)
+    }
+}
+
 /// Cloneable ingress handle to one worker: the task senders plus the
 /// shared atomic probes. Each frontend of the plane owns its own clone;
 /// the worker exits once every clone is dropped and its queues drain.
@@ -112,8 +157,9 @@ pub fn spawn(
     id: usize,
     speed: f64,
     mode: PayloadMode,
-    completions: Sender<Completion>,
+    completions: impl Into<CompletionSink>,
 ) -> WorkerHandle {
+    let completions = completions.into();
     let (real_tx, real_rx) = std::sync::mpsc::channel::<LiveTask>();
     let (bench_tx, bench_rx) = std::sync::mpsc::channel::<LiveTask>();
     let qlen = Arc::new(AtomicUsize::new(0));
@@ -136,7 +182,7 @@ fn worker_loop(
     bench_rx: Receiver<LiveTask>,
     qlen: Arc<AtomicUsize>,
     completed_real: Arc<AtomicU64>,
-    completions: Sender<Completion>,
+    completions: CompletionSink,
 ) {
     // The PJRT client/executable are created inside the worker thread: one
     // compiled payload per executor, mirroring one Spark executor per
@@ -200,7 +246,7 @@ fn worker_loop(
             qlen.fetch_sub(1, Ordering::Relaxed);
             completed_real.fetch_add(1, Ordering::Relaxed);
         }
-        let _ = completions.send(Completion {
+        completions.send(Completion {
             worker: id,
             job: task.job,
             kind: task.kind,
@@ -235,6 +281,33 @@ mod tests {
         assert!(c.duration < 0.05, "duration {}", c.duration);
         assert_eq!(w.client.qlen.load(Ordering::Relaxed), 0);
         assert_eq!(w.client.completed_real.load(Ordering::Relaxed), 1);
+        w.shutdown();
+    }
+
+    #[test]
+    fn sharded_sink_routes_completions_to_the_dispatching_shard() {
+        let (tx0, rx0) = std::sync::mpsc::channel();
+        let (tx1, rx1) = std::sync::mpsc::channel();
+        let w = spawn(7, 4.0, PayloadMode::Sleep, CompletionSink::sharded(vec![tx0, tx1]));
+        w.enqueue(LiveTask {
+            job: crate::plane::encode_job(1, 5),
+            kind: TaskKind::Real,
+            demand: 0.002,
+            enqueued: Instant::now(),
+        });
+        w.enqueue(LiveTask {
+            job: crate::plane::encode_job(0, 9),
+            kind: TaskKind::Real,
+            demand: 0.002,
+            enqueued: Instant::now(),
+        });
+        let c1 = rx1.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(crate::plane::job_shard(c1.job), 1);
+        let c0 = rx0.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(crate::plane::job_shard(c0.job), 0);
+        // Nothing crossed channels.
+        assert!(rx0.try_recv().is_err());
+        assert!(rx1.try_recv().is_err());
         w.shutdown();
     }
 

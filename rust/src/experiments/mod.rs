@@ -10,13 +10,24 @@ pub mod fig13;
 pub mod fig8;
 pub mod fig9;
 pub mod harness;
+pub mod multi_sched;
 pub mod theory;
 
 pub use harness::{Baseline, Bench, Scale};
 
 /// All experiment names accepted by `rosella experiment <name>`.
-pub const ALL: &[&str] =
-    &["fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "theory", "ablation", "all"];
+pub const ALL: &[&str] = &[
+    "fig8",
+    "fig9",
+    "fig10",
+    "fig11",
+    "fig12",
+    "fig13",
+    "theory",
+    "ablation",
+    "multisched",
+    "all",
+];
 
 /// Run one experiment by name and return its rendered report.
 pub fn run_by_name(name: &str, scale: Scale) -> Result<String, String> {
@@ -29,6 +40,7 @@ pub fn run_by_name(name: &str, scale: Scale) -> Result<String, String> {
         "fig13" => Ok(fig13::run(scale)),
         "theory" => Ok(theory::run(scale)),
         "ablation" => Ok(ablation::run(scale)),
+        "multisched" => Ok(multi_sched::run(scale)),
         "all" => {
             let mut out = String::new();
             for n in ALL.iter().filter(|&&n| n != "all") {

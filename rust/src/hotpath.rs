@@ -25,7 +25,7 @@
 use crate::cluster::{SpeedProfile, Volatility};
 use crate::config::Json;
 use crate::learner::LearnerConfig;
-use crate::plane::{run_plane, DispatchMode, PlaneConfig};
+use crate::plane::{run_plane, DispatchMode, LearnerMode, PlaneConfig};
 use crate::scheduler::{PolicyKind, TieRule};
 use crate::simulator::{run as sim_run, SimConfig};
 use crate::stats::{AliasTable, Rng};
@@ -205,10 +205,14 @@ pub struct PlanePoint {
 }
 
 /// Measure raw plane scheduling throughput (decide-only, budgeted).
+/// `learners` selects the ownership mode so the per-shard consensus
+/// plumbing's (intended: zero) impact on raw decision throughput is
+/// measurable.
 pub fn plane_bench(
     frontend_counts: &[usize],
     workers: usize,
     decisions_per_shard: u64,
+    learners: LearnerMode,
 ) -> Result<Vec<PlanePoint>, String> {
     let base_speeds = [2.0, 1.0, 1.0, 1.0, 0.5, 0.5, 0.25, 0.25];
     let speeds: Vec<f64> =
@@ -222,6 +226,7 @@ pub fn plane_bench(
             max_decisions: Some(decisions_per_shard),
             fake_jobs: false,
             duration: 60.0, // budget, not deadline: shards stop at max_decisions
+            learners,
             ..PlaneConfig::default()
         };
         let r = run_plane(cfg)?;
@@ -414,6 +419,7 @@ pub fn hotpath_cli(p: &crate::cli::Parsed) -> Result<String, String> {
     let plane_decisions: u64 =
         p.parse_as("plane-decisions")?.unwrap_or(if quick { 20_000 } else { 500_000 });
     let workers: usize = p.parse_as("workers")?.unwrap_or(8);
+    let learners = LearnerMode::parse(p.get("learners").unwrap_or("shared"))?;
 
     let report = HotpathReport {
         decisions: decision_bench(&sizes, reps, runs),
@@ -422,7 +428,7 @@ pub fn hotpath_cli(p: &crate::cli::Parsed) -> Result<String, String> {
         planes: if p.flag("no-plane") {
             Vec::new()
         } else {
-            plane_bench(&frontend_counts, workers, plane_decisions)?
+            plane_bench(&frontend_counts, workers, plane_decisions, learners)?
         },
         sizes,
     };

@@ -9,6 +9,7 @@
 //! horizon — exactly the rate at which workers faster than μ* can keep up,
 //! so slower-than-μ* workers fall behind and get discarded (§4.3).
 
+use crate::learner::sync::throttled_rate;
 use crate::stats::{Exponential, Rng};
 
 /// Poisson dispatcher of benchmark jobs.
@@ -19,17 +20,30 @@ pub struct FakeJobDispatcher {
     /// Minimum guaranteed total service throughput μ̄ (tasks/sec).
     mu_bar: f64,
     /// Floor on the dispatch rate so learning never fully stalls even when
-    /// λ̂ ≈ μ̄ (residual throughput ≈ 0).
+    /// λ̂ ≈ μ̄ (residual throughput ≈ 0). Split across schedulers like the
+    /// main budget.
     min_rate: f64,
     /// Whether dispatch is enabled at all (Fig. 12 ablates this).
     enabled: bool,
+    /// Scheduler count `k`: with multiple distributed schedulers each
+    /// running its own dispatcher, every one runs at the §5 throttled
+    /// per-scheduler rate `c0(μ̄ − λ̂)/k` so the aggregate probing budget
+    /// never multiplies with the scheduler count.
+    schedulers: usize,
 }
 
 impl FakeJobDispatcher {
-    /// New dispatcher. `mu_bar` is the guaranteed aggregate throughput.
+    /// Single-scheduler dispatcher. `mu_bar` is the guaranteed aggregate
+    /// throughput.
     pub fn new(c0: f64, mu_bar: f64, enabled: bool) -> Self {
-        assert!(c0 > 0.0 && mu_bar > 0.0);
-        Self { c0, mu_bar, min_rate: 1e-3 * mu_bar, enabled }
+        Self::new_sharded(c0, mu_bar, enabled, 1)
+    }
+
+    /// One of `schedulers` distributed dispatchers sharing the probing
+    /// budget (§5 throttling).
+    pub fn new_sharded(c0: f64, mu_bar: f64, enabled: bool, schedulers: usize) -> Self {
+        assert!(c0 > 0.0 && mu_bar > 0.0 && schedulers >= 1);
+        Self { c0, mu_bar, min_rate: 1e-3 * mu_bar / schedulers as f64, enabled, schedulers }
     }
 
     /// Whether benchmark jobs are being produced.
@@ -37,12 +51,17 @@ impl FakeJobDispatcher {
         self.enabled
     }
 
-    /// Current dispatch rate `c0 · (μ̄ − λ̂)` in benchmark tasks/sec.
+    /// How many schedulers share the probing budget.
+    pub fn schedulers(&self) -> usize {
+        self.schedulers
+    }
+
+    /// Current dispatch rate `c0 · (μ̄ − λ̂) / k` in benchmark tasks/sec.
     pub fn rate(&self, lambda_hat: f64) -> f64 {
         if !self.enabled {
             return 0.0;
         }
-        (self.c0 * (self.mu_bar - lambda_hat)).max(self.min_rate)
+        throttled_rate(self.c0, self.mu_bar, lambda_hat, self.schedulers).max(self.min_rate)
     }
 
     /// Sample the gap until the next benchmark dispatch, given the current
@@ -78,6 +97,27 @@ mod tests {
         let d = FakeJobDispatcher::new(0.1, 100.0, true);
         assert!(d.rate(99.9) > 0.0);
         assert!(d.rate(200.0) > 0.0); // λ̂ > μ̄: estimate noise must not kill learning
+    }
+
+    #[test]
+    fn sharded_dispatchers_split_the_probing_budget() {
+        // Regression for multi-frontend planes: k per-shard dispatchers must
+        // aggregate to the single-scheduler budget, not k times it.
+        let single = FakeJobDispatcher::new(0.1, 150.0, true);
+        for k in [1usize, 2, 4, 8] {
+            let per = FakeJobDispatcher::new_sharded(0.1, 150.0, true, k);
+            assert_eq!(per.schedulers(), k);
+            let aggregate = per.rate(120.0) * k as f64;
+            assert!(
+                (aggregate - single.rate(120.0)).abs() < 1e-9,
+                "k={k}: aggregate {aggregate} vs budget {}",
+                single.rate(120.0)
+            );
+        }
+        // The overload floor splits the same way: aggregate floor is fixed.
+        let per4 = FakeJobDispatcher::new_sharded(0.1, 100.0, true, 4);
+        let floor = FakeJobDispatcher::new(0.1, 100.0, true).rate(200.0);
+        assert!((per4.rate(200.0) * 4.0 - floor).abs() < 1e-12);
     }
 
     #[test]

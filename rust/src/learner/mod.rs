@@ -14,8 +14,8 @@ pub mod sync;
 
 pub use arrival::ArrivalEstimator;
 pub use dispatcher::FakeJobDispatcher;
-pub use perf::{LearnerParams, PerfLearner};
-pub use sync::{merge_estimates, throttled_rate, EstimateView};
+pub use perf::{relative_error_of, LearnerParams, PerfLearner};
+pub use sync::{merge_estimates, merge_estimates_into, throttled_rate, EstimateView};
 
 /// Bundled learner configuration used by the engine and the live
 /// coordinator.
@@ -38,6 +38,16 @@ pub struct LearnerConfig {
     pub arrival_window: usize,
     /// How often estimates are published / the alias table rebuilt (s).
     pub publish_interval: f64,
+    /// Number of logical schedulers (§5 distributed learning): the
+    /// completion stream is split across `k` private [`PerfLearner`]s and
+    /// the policy only ever sees their [`merge_estimates`] consensus.
+    /// 1 = the centralized shared-learner baseline.
+    pub schedulers: usize,
+    /// Estimate-sync interval in seconds. 0 = consensus at every publish
+    /// (the tightest coupling); > 0 = consensus on its own cadence, so the
+    /// policy sees estimates up to `sync_interval` stale — the knob the
+    /// `multisched` experiment sweeps.
+    pub sync_interval: f64,
 }
 
 impl Default for LearnerConfig {
@@ -50,6 +60,8 @@ impl Default for LearnerConfig {
             window_c: 10.0,
             arrival_window: 200,
             publish_interval: 0.1,
+            schedulers: 1,
+            sync_interval: 0.0,
         }
     }
 }
@@ -77,6 +89,9 @@ mod tests {
         assert!(c.enabled && c.fake_jobs && !c.oracle);
         assert_eq!(c.c0, 0.1);
         assert_eq!(c.window_c, 10.0);
+        // Centralized single-learner topology by default.
+        assert_eq!(c.schedulers, 1);
+        assert_eq!(c.sync_interval, 0.0);
     }
 
     #[test]

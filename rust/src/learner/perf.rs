@@ -60,6 +60,12 @@ impl History {
 }
 
 /// Per-cluster performance learner.
+///
+/// In a distributed plane (§5) every scheduler owns one of these: it learns
+/// from only the completions *it* routed, exports a cheap
+/// [`EstimateView`](crate::learner::EstimateView) snapshot at sync epochs
+/// ([`Self::export_views_into`]), and adopts the merged consensus back
+/// ([`Self::adopt`]).
 #[derive(Debug)]
 pub struct PerfLearner {
     hist: Vec<History>,
@@ -71,10 +77,24 @@ pub struct PerfLearner {
     mu_bar: f64,
     /// Time the learner started (for the cold-start exception).
     start: f64,
-    /// Prior estimate used before any samples exist (mean relative speed).
-    prior: f64,
+    /// Per-worker estimate used while a worker has no usable samples during
+    /// cold start: the scalar prior at birth, overwritten by the adopted
+    /// consensus in distributed mode (§5) so an unsampled worker inherits
+    /// what the *other* schedulers learned about it.
+    fallback: Vec<f64>,
     /// Published estimates.
     mu_hat: Vec<f64>,
+    /// In-window sample count behind each published estimate (the merge
+    /// weight exported to estimate-sync consensus).
+    samples: Vec<u64>,
+    /// How many distributed schedulers split the completion stream (k).
+    /// This learner sees only ~1/k of each worker's completions, so its
+    /// full-window requirement drops to ⌈L/k⌉ while the timeout horizon
+    /// keeps the full-L value: the aggregate evidence behind a consensus —
+    /// k schedulers × L/k samples in the same horizon — matches the
+    /// centralized learner's L, and the discard floor stays ≈ μ* instead
+    /// of multiplying by k.
+    schedulers: usize,
 }
 
 /// Parameters derived from the current load estimate; shared with the
@@ -135,9 +155,21 @@ impl PerfLearner {
             mean_demand,
             mu_bar,
             start,
-            prior,
+            fallback: vec![prior; n],
             mu_hat: vec![prior; n],
+            samples: vec![0; n],
+            schedulers: 1,
         }
+    }
+
+    /// Mark this learner as one of `schedulers` distributed learners
+    /// splitting the completion stream (§5): scales the per-scheduler
+    /// window requirement to ⌈L/k⌉ (see the `schedulers` field docs).
+    /// `shared_among(1)` is the identity.
+    pub fn shared_among(mut self, schedulers: usize) -> Self {
+        assert!(schedulers >= 1);
+        self.schedulers = schedulers;
+        self
     }
 
     /// Number of workers tracked.
@@ -154,22 +186,32 @@ impl PerfLearner {
     /// Recompute and publish estimates for all workers given the current
     /// arrival estimate. Returns the derived parameters (for logging).
     pub fn publish(&mut self, now: f64, lambda_hat: f64) -> LearnerParams {
-        let p = LearnerParams::derive(lambda_hat, self.mu_bar, self.window_c, self.mean_demand);
+        let mut p = LearnerParams::derive(lambda_hat, self.mu_bar, self.window_c, self.mean_demand);
+        // k-aware window: this learner samples ~1/k of the completion
+        // stream, so it needs only its share of L — within the *full-L*
+        // horizon, which `derive` already set and we keep.
+        p.window = p.window.div_ceil(self.schedulers).max(1);
         let cold_start = now - self.start < p.horizon;
         for (w, h) in self.hist.iter().enumerate() {
-            self.mu_hat[w] = Self::estimate_one(h, now, &p, cold_start, self.prior);
+            let (est, weight) = Self::estimate_one(h, now, &p, cold_start, self.fallback[w]);
+            self.mu_hat[w] = est;
+            self.samples[w] = weight;
         }
         p
     }
 
-    /// LEARNER-AGGREGATE for a single worker.
+    /// LEARNER-AGGREGATE for a single worker. Returns the estimate plus its
+    /// merge weight: the in-window sample count, except that a timeout
+    /// discard with no in-window samples still weighs 1 — a full silent
+    /// horizon *is* an observation, so a unanimous discard survives
+    /// consensus instead of degrading to "nobody knows" (prior).
     fn estimate_one(
         h: &History,
         now: f64,
         p: &LearnerParams,
         cold_start: bool,
-        prior: f64,
-    ) -> f64 {
+        fallback: f64,
+    ) -> (f64, u64) {
         // Walk the most recent samples (newest first), keeping those within
         // the timeout horizon, up to L of them.
         let cutoff = now - p.horizon;
@@ -192,18 +234,18 @@ impl PerfLearner {
         if used >= p.window {
             // Full window observed in time: the paper's estimate
             // μ̂ = (1 − ε) / q̂ generalized to heterogeneous demands.
-            (1.0 - p.epsilon) * sum_dem / sum_dur
+            ((1.0 - p.epsilon) * sum_dem / sum_dur, used as u64)
         } else if cold_start {
             // Haven't had a full horizon to fail yet: use what we have.
             if used > 0 {
-                (1.0 - p.epsilon) * sum_dem / sum_dur
+                ((1.0 - p.epsilon) * sum_dem / sum_dur, used as u64)
             } else {
-                prior
+                (fallback, 0)
             }
         } else {
             // "Cannot measure q̂ in (1+ε)L/μ* time" → worker is slower than
             // the floor; discard it (Fig. 6, line 11).
-            0.0
+            (0.0, (used as u64).max(1))
         }
     }
 
@@ -213,24 +255,51 @@ impl PerfLearner {
         &self.mu_hat
     }
 
+    /// In-window sample count behind each published estimate (the weight
+    /// each worker carries into estimate-sync consensus).
+    pub fn samples_in_window(&self) -> &[u64] {
+        &self.samples
+    }
+
+    /// Snapshot this scheduler's view for estimate-sync consensus (§5):
+    /// per worker, the published μ̂ and the in-window sample count behind
+    /// it. O(n) copies into the reused buffer — cheap enough to run at
+    /// every local publish.
+    pub fn export_views_into(&self, out: &mut Vec<crate::learner::EstimateView>) {
+        out.clear();
+        out.extend(
+            self.mu_hat
+                .iter()
+                .zip(self.samples.iter())
+                .map(|(&mu_hat, &samples)| crate::learner::EstimateView { mu_hat, samples }),
+        );
+    }
+
+    /// Allocating convenience form of [`Self::export_views_into`].
+    pub fn export_views(&self) -> Vec<crate::learner::EstimateView> {
+        let mut out = Vec::with_capacity(self.mu_hat.len());
+        self.export_views_into(&mut out);
+        out
+    }
+
+    /// Adopt a synchronized consensus vector (§5: schedulers "need only
+    /// synchronize the estimates of worker speeds regularly"). The
+    /// consensus becomes both the published estimate and the cold-start
+    /// fallback, so a worker this scheduler never sampled is scheduled with
+    /// what the other schedulers learned about it. Local sample histories
+    /// are untouched: the next [`Self::publish`] re-derives local estimates
+    /// from local observations.
+    pub fn adopt(&mut self, consensus: &[f64]) {
+        assert_eq!(consensus.len(), self.mu_hat.len(), "consensus length mismatch");
+        self.mu_hat.copy_from_slice(consensus);
+        self.fallback.copy_from_slice(consensus);
+    }
+
     /// Mean relative estimation error vs true speeds (diagnostics; only the
     /// engine knows the ground truth). Workers estimated 0 count as full
     /// error unless they are truly below the floor.
     pub fn relative_error(&self, true_speeds: &[f64], mu_star_abs: f64) -> f64 {
-        let mut total = 0.0;
-        let mut count = 0usize;
-        for (est, &truth) in self.mu_hat.iter().zip(true_speeds) {
-            if truth <= mu_star_abs {
-                continue; // legitimately discardable
-            }
-            total += (est - truth).abs() / truth;
-            count += 1;
-        }
-        if count == 0 {
-            0.0
-        } else {
-            total / count as f64
-        }
+        relative_error_of(&self.mu_hat, true_speeds, mu_star_abs)
     }
 
     /// Export the raw ring buffers as dense matrices for the PJRT learner
@@ -258,6 +327,26 @@ impl PerfLearner {
             cnt[w] = take as i32;
         }
         (dur, dem, age, cnt)
+    }
+}
+
+/// Mean relative error of an estimate vector vs true speeds — the same
+/// metric as [`PerfLearner::relative_error`], usable on a merged consensus
+/// vector that no single learner owns.
+pub fn relative_error_of(mu_hat: &[f64], true_speeds: &[f64], mu_star_abs: f64) -> f64 {
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for (est, &truth) in mu_hat.iter().zip(true_speeds) {
+        if truth <= mu_star_abs {
+            continue; // legitimately discardable
+        }
+        total += (est - truth).abs() / truth;
+        count += 1;
+    }
+    if count == 0 {
+        0.0
+    } else {
+        total / count as f64
     }
 }
 
@@ -375,6 +464,116 @@ mod tests {
         // Worker 0 carries the deliberate (1-eps) underestimate bias.
         let err = l.relative_error(&[1.0, 0.001], 0.01);
         assert!(err < 0.2, "err={err}");
+    }
+
+    #[test]
+    fn exported_views_carry_estimates_and_window_weights() {
+        let mut l = learner(2);
+        let mut t = 0.0;
+        for _ in 0..200 {
+            t += 0.05;
+            l.on_completion(0, t, 0.05, 0.1);
+        }
+        let p = l.publish(t, 10.0);
+        let views = l.export_views();
+        assert_eq!(views.len(), 2);
+        assert_eq!(views[0].mu_hat, l.mu_hat()[0]);
+        // Worker 0's weight is exactly the in-window sample count L.
+        assert_eq!(views[0].samples as usize, p.window);
+        // Worker 1 has no samples during cold start: prior, weight 0.
+        assert_eq!(views[1].mu_hat, 1.0);
+        assert_eq!(views[1].samples, 0);
+        assert_eq!(l.samples_in_window(), &[p.window as u64, 0]);
+    }
+
+    #[test]
+    fn discarded_worker_exports_nonzero_weight() {
+        // A silent worker past the horizon is discarded — and that discard
+        // must carry weight into consensus, not read as "no knowledge".
+        let mut l = learner(2);
+        let p0 = LearnerParams::derive(10.0, 20.0, 10.0, 0.1);
+        let end = p0.horizon * 2.0;
+        let mut t = 0.0;
+        while t < end {
+            t += 0.1;
+            l.on_completion(0, t, 0.1, 0.1);
+        }
+        l.publish(end, 10.0);
+        let views = l.export_views();
+        assert_eq!(views[1].mu_hat, 0.0);
+        assert!(views[1].samples >= 1, "discard must weigh at least one observation");
+    }
+
+    #[test]
+    fn adopt_installs_consensus_and_cold_start_fallback() {
+        let mut l = learner(2);
+        l.adopt(&[2.5, 0.125]);
+        assert_eq!(l.mu_hat(), &[2.5, 0.125]);
+        // A publish with no samples (cold start) falls back to the adopted
+        // consensus, not the birth prior.
+        l.publish(0.01, 10.0);
+        assert_eq!(l.mu_hat(), &[2.5, 0.125]);
+        // But local samples always win over the adopted value.
+        let mut t = 0.01;
+        for _ in 0..200 {
+            t += 0.1;
+            l.on_completion(0, t, 0.1, 0.1);
+        }
+        let p = l.publish(t, 10.0);
+        assert!((l.mu_hat()[0] - (1.0 - p.epsilon)).abs() < 1e-9, "{}", l.mu_hat()[0]);
+        assert_eq!(l.mu_hat()[1], 0.125);
+    }
+
+    #[test]
+    fn sharded_learner_needs_only_its_share_of_the_window() {
+        // k = 4 schedulers: each sees ~1/4 of a worker's completions, so
+        // the per-scheduler full-window requirement drops to ⌈L/4⌉ while
+        // the timeout horizon keeps the full-L value — the discard floor
+        // does not multiply with k.
+        let p = LearnerParams::derive(5.0, 10.0, 10.0, 0.1);
+        assert_eq!(p.window, 20);
+        let mk = |k: usize| PerfLearner::new(1, 10.0, 0.1, 10.0, 1.0, 0.0).shared_among(k);
+        let mut solo = mk(1);
+        let mut quarter = mk(4);
+        // Both see the same 5 fresh samples, well past the cold start.
+        let t_end = p.horizon * 3.0;
+        for i in 0..5 {
+            let t = t_end - (4 - i) as f64 * 0.1;
+            solo.on_completion(0, t, 0.1, 0.1);
+            quarter.on_completion(0, t, 0.1, 0.1);
+        }
+        solo.publish(t_end, 5.0);
+        let pq = quarter.publish(t_end, 5.0);
+        assert_eq!(pq.window, 5, "per-scheduler window is L/k");
+        assert_eq!(solo.mu_hat()[0], 0.0, "5 of 20 samples: centralized learner discards");
+        let eps = 0.3 * 0.5;
+        assert!(
+            (quarter.mu_hat()[0] - (1.0 - eps)).abs() < 1e-9,
+            "5 >= 20/4: the sharded learner keeps the estimate ({})",
+            quarter.mu_hat()[0]
+        );
+        assert_eq!(quarter.samples_in_window(), &[5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn adopt_rejects_wrong_length() {
+        let mut l = learner(2);
+        l.adopt(&[1.0]);
+    }
+
+    #[test]
+    fn relative_error_of_matches_method() {
+        let mut l = learner(2);
+        let mut t = 0.0;
+        for _ in 0..100 {
+            t += 0.1;
+            l.on_completion(0, t, 0.1, 0.1);
+        }
+        l.publish(t, 10.0);
+        let a = l.relative_error(&[1.0, 0.5], 0.01);
+        let b = relative_error_of(l.mu_hat(), &[1.0, 0.5], 0.01);
+        assert_eq!(a.to_bits(), b.to_bits());
     }
 
     #[test]

@@ -35,27 +35,31 @@ pub struct EstimateView {
 /// workers nobody has sampled. Panics if the views disagree on the worker
 /// count or are empty.
 pub fn merge_estimates(views: &[Vec<EstimateView>], prior: f64) -> Vec<f64> {
+    let mut out = vec![0.0; views.first().map_or(0, |v| v.len())];
+    merge_estimates_into(views, prior, &mut out);
+    out
+}
+
+/// [`merge_estimates`] into a caller-owned buffer — the allocation-free
+/// form used on the recurring sync paths (the plane's sync thread and the
+/// DES engine's sync event), where consensus runs at every epoch.
+pub fn merge_estimates_into(views: &[Vec<EstimateView>], prior: f64, out: &mut [f64]) {
     assert!(!views.is_empty(), "no schedulers to merge");
     let n = views[0].len();
     assert!(views.iter().all(|v| v.len() == n), "worker-count mismatch across schedulers");
-    (0..n)
-        .map(|w| {
-            let mut weighted = 0.0;
-            let mut weight = 0u64;
-            for view in views {
-                let v = view[w];
-                if v.samples > 0 {
-                    weighted += v.mu_hat * v.samples as f64;
-                    weight += v.samples;
-                }
+    assert_eq!(out.len(), n, "consensus buffer length mismatch");
+    for (w, slot) in out.iter_mut().enumerate() {
+        let mut weighted = 0.0;
+        let mut weight = 0u64;
+        for view in views {
+            let v = view[w];
+            if v.samples > 0 {
+                weighted += v.mu_hat * v.samples as f64;
+                weight += v.samples;
             }
-            if weight == 0 {
-                prior
-            } else {
-                weighted / weight as f64
-            }
-        })
-        .collect()
+        }
+        *slot = if weight == 0 { prior } else { weighted / weight as f64 };
+    }
 }
 
 /// Per-scheduler benchmark dispatch rate under `k` schedulers: the
@@ -113,6 +117,45 @@ mod tests {
     #[should_panic]
     fn mismatched_worker_counts_rejected() {
         merge_estimates(&[vec![v(1.0, 1)], vec![v(1.0, 1), v(1.0, 1)]], 1.0);
+    }
+
+    #[test]
+    fn heavy_sampler_dominates_merge() {
+        // 40 in-window samples must dominate 2: the consensus lands next to
+        // the well-informed scheduler's estimate.
+        let merged = merge_estimates(&[vec![v(3.0, 40)], vec![v(1.0, 2)]], 1.0);
+        assert!((merged[0] - 122.0 / 42.0).abs() < 1e-12, "{merged:?}");
+        assert!(merged[0] > 2.8, "2 samples dragged the consensus: {merged:?}");
+    }
+
+    #[test]
+    fn merge_into_matches_allocating_form() {
+        let views = vec![vec![v(2.0, 7), v(0.0, 3)], vec![v(1.0, 1), v(0.0, 0)]];
+        let alloc = merge_estimates(&views, 0.9);
+        let mut buf = vec![f64::NAN; 2];
+        merge_estimates_into(&views, 0.9, &mut buf);
+        assert_eq!(alloc, buf);
+    }
+
+    #[test]
+    #[should_panic]
+    fn merge_into_rejects_wrong_buffer_length() {
+        let mut buf = vec![0.0; 3];
+        merge_estimates_into(&[vec![v(1.0, 1)]], 1.0, &mut buf);
+    }
+
+    #[test]
+    fn throttled_rate_monotone_in_scheduler_count() {
+        // Per-scheduler rate shrinks as k grows while the aggregate budget
+        // k · c0(μ̄ − λ̂)/k stays pinned to the single-scheduler budget.
+        let single = throttled_rate(0.1, 150.0, 100.0, 1);
+        let mut prev = f64::INFINITY;
+        for k in 1..=16 {
+            let r = throttled_rate(0.1, 150.0, 100.0, k);
+            assert!(r <= prev, "rate must not grow with k: {r} at k={k}");
+            assert!((r * k as f64 - single).abs() < 1e-9, "aggregate budget drifted at k={k}");
+            prev = r;
+        }
     }
 
     #[test]

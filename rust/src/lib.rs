@@ -24,9 +24,16 @@
 //! * the **sharded scheduling plane** ([`plane`]): N frontend threads each
 //!   running the full Rosella loop over a shared worker pool, coordinating
 //!   only through per-worker atomic queue probes and a seqlock-published
-//!   estimate table (§2's "minimum coordination" / §5's distributed
-//!   scheduler) — the multi-frontend regime centralized schedulers cannot
-//!   reach;
+//!   estimate table (§2's "minimum coordination") — the multi-frontend
+//!   regime centralized schedulers cannot reach. Learning itself
+//!   decentralizes (§5, `--learners per-shard`): one [`learner::PerfLearner`]
+//!   per scheduler, fed by only the completions that scheduler routed, its
+//!   benchmark dispatcher throttled to `c0(μ̄ − λ̂)/k`, with cross-scheduler
+//!   agreement reduced to periodic [`learner::merge_estimates`] consensus —
+//!   "schedulers need only synchronize the estimates of worker speeds
+//!   regularly". The same topology runs deterministically in the DES engine
+//!   (`LearnerConfig::schedulers` / `sync_interval`; `multisched` sweeps
+//!   the staleness cost);
 //! * **experiment drivers** ([`experiments`]) regenerating every figure of
 //!   the paper's evaluation section.
 //!
@@ -45,6 +52,7 @@
 //! | job arrival | O(1) + O(tasks) | reusable job buffer ([`workload::Workload::next_job_into`]), incremental queue lengths — no O(n) sweep |
 //! | event push/pop | O(log m) | compact `Copy` heap entries; stale completions cancelled at source ([`simulator::EventQueue`]) |
 //! | estimate publish | O(n) | rate-limited background event; in-place [`stats::AliasTable::rebuild`], allocation-free |
+//! | estimate sync | O(k·n) | rate-limited consensus of k per-scheduler views ([`learner::merge_estimates_into`], reused buffers); never on the decision path |
 //!
 //! `rosella hotpath --json BENCH_hotpath.json` ([`hotpath`]) measures all
 //! of this per cluster size, so an accidental O(n) term in the decision

@@ -55,7 +55,7 @@ fn print_usage() {
 
 fn cmd_experiment(rest: &[String]) -> i32 {
     let spec = CmdSpec::new("experiment", "regenerate a paper figure")
-        .pos("name", "fig8 | fig9 | fig10 | fig11 | fig12 | fig13 | theory | all")
+        .pos("name", "fig8..fig13 | theory | ablation | multisched | all")
         .flag("quick", "scaled-down run (~10x shorter horizons)");
     let p = match spec.parse(rest) {
         Ok(p) => p,
@@ -95,6 +95,8 @@ fn cmd_simulate(rest: &[String]) -> i32 {
         .opt("workload", None, "synthetic | tpch:q3 | tpch:q6")
         .opt("load", None, "target load ratio")
         .opt("policy", None, "uniform|pot|pss|ppot|ppot-ll2|rosella|sparrow|bandit:<eta>|halo")
+        .opt("schedulers", None, "logical scheduler count k (§5 per-scheduler learners)")
+        .opt("sync-interval", None, "estimate-sync interval in sim-secs (0 = every publish)")
         .flag("oracle", "give the policy true speeds (disables learning)")
         .flag("no-fake-jobs", "disable the benchmark-job dispatcher");
     let p = match spec.parse(rest) {
@@ -172,6 +174,12 @@ fn apply_overrides(cfg: &mut SimConfig, p: &rosella::cli::Parsed) -> Result<(), 
     if p.flag("no-fake-jobs") {
         cfg.learner.fake_jobs = false;
     }
+    if let Some(v) = p.parse_as::<usize>("schedulers")? {
+        cfg.learner.schedulers = v;
+    }
+    if let Some(v) = p.parse_as::<f64>("sync-interval")? {
+        cfg.learner.sync_interval = v;
+    }
     Ok(())
 }
 
@@ -214,6 +222,8 @@ fn cmd_plane(rest: &[String]) -> i32 {
         .opt("demand", Some("0.01"), "mean task demand (unit-speed seconds)")
         .opt("batch", Some("64"), "arrival ingestion batch size per shard")
         .opt("seed", Some("42"), "rng seed")
+        .opt("learners", Some("shared"), "learner ownership: shared | per-shard (§5)")
+        .opt("sync-interval", Some("0.2"), "per-shard estimate-sync consensus interval (s)")
         .opt("json", None, "write machine-readable results (e.g. BENCH_plane.json)")
         .flag("decide-only", "measure raw decision throughput without dispatching")
         .flag("no-fake-jobs", "disable the benchmark-job dispatcher");
@@ -241,6 +251,7 @@ fn cmd_hotpath(rest: &[String]) -> i32 {
         .opt("sizes", Some("30,256"), "comma-separated cluster sizes")
         .opt("frontends", Some("1,2,4"), "comma-separated plane frontend counts")
         .opt("workers", Some("8"), "plane worker thread count")
+        .opt("learners", Some("shared"), "plane learner ownership: shared | per-shard")
         .opt("reps", None, "decision-bench repetitions per run (1M; 50k with --quick)")
         .opt("runs", Some("3"), "measured runs (best-of)")
         .opt("sim-duration", None, "simulated seconds per sim point (60; 5 with --quick)")

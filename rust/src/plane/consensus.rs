@@ -1,0 +1,184 @@
+//! Estimate-sync consensus for per-shard learners (§5, "Distributed
+//! scheduler").
+//!
+//! With `--learners per-shard` every frontend owns a private
+//! [`PerfLearner`](crate::learner::PerfLearner) fed by its own completion
+//! channel. Cross-scheduler coordination is exactly what the paper
+//! prescribes: "schedulers need only synchronize the estimates of worker
+//! speeds regularly". Each shard exports an [`EstimateView`] snapshot of
+//! its learner at its local publish cadence (into [`SharedViews`], a
+//! per-shard mutex slot — never touched on the decision hot path); the sync
+//! thread wakes every `sync_interval`, merges the views with
+//! [`merge_estimates_into`], and publishes the consensus through the
+//! seqlock [`EstimateTable`] all frontends read. The decision path stays
+//! lock-free: frontends see new consensus exactly the way they always saw
+//! aggregator publishes — one epoch probe per decision.
+
+use super::state::EstimateTable;
+use crate::learner::{merge_estimates_into, EstimateView};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Per-shard learner-view slots: shard `s` overwrites slot `s` at its local
+/// publish cadence; the sync thread reads every slot at consensus epochs.
+/// A mutex per slot is fine here — both sides touch it a few times per
+/// second, never per decision.
+#[derive(Debug)]
+pub struct SharedViews {
+    slots: Vec<Mutex<Vec<EstimateView>>>,
+}
+
+impl SharedViews {
+    /// Slots for `shards` schedulers over `n` workers, initialized to the
+    /// prior with zero weight (= "no knowledge yet", merges to the prior).
+    pub fn new(shards: usize, n: usize, prior: f64) -> Self {
+        assert!(shards > 0 && n > 0, "views need at least one shard and one worker");
+        let init = vec![EstimateView { mu_hat: prior, samples: 0 }; n];
+        Self { slots: (0..shards).map(|_| Mutex::new(init.clone())).collect() }
+    }
+
+    /// Number of shard slots.
+    pub fn shards(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Replace shard `s`'s exported view.
+    pub fn store(&self, s: usize, views: &[EstimateView]) {
+        let mut slot = self.slots[s].lock().expect("view slot poisoned");
+        slot.clear();
+        slot.extend_from_slice(views);
+    }
+
+    /// Copy every shard's current view into `out` (buffers reused).
+    pub fn collect_into(&self, out: &mut Vec<Vec<EstimateView>>) {
+        out.resize_with(self.slots.len(), Vec::new);
+        for (slot, buf) in self.slots.iter().zip(out.iter_mut()) {
+            let v = slot.lock().expect("view slot poisoned");
+            buf.clear();
+            buf.extend_from_slice(&v);
+        }
+    }
+}
+
+/// Sum of the shards' f64-bit λ̂ slots (the plane's aggregate arrival
+/// estimate).
+pub(crate) fn lambda_total(slots: &[Arc<AtomicU64>]) -> f64 {
+    slots.iter().map(|s| f64::from_bits(s.load(Ordering::Relaxed))).sum()
+}
+
+/// One consensus epoch: collect every shard's exported view, merge, publish
+/// through the seqlock table. Factored out of the thread loop so tests can
+/// drive epochs deterministically.
+pub(crate) fn consensus_step(
+    views: &SharedViews,
+    table: &EstimateTable,
+    lambda_slots: &[Arc<AtomicU64>],
+    prior: f64,
+    view_buf: &mut Vec<Vec<EstimateView>>,
+    consensus: &mut [f64],
+) {
+    views.collect_into(view_buf);
+    merge_estimates_into(view_buf, prior, consensus);
+    table.publish(consensus, lambda_total(lambda_slots));
+}
+
+/// State moved into the sync thread.
+pub(crate) struct SyncRun {
+    pub views: Arc<SharedViews>,
+    pub table: Arc<EstimateTable>,
+    pub lambda_slots: Vec<Arc<AtomicU64>>,
+    pub stop: Arc<AtomicBool>,
+    pub sync_interval: f64,
+    pub prior: f64,
+    pub start: Instant,
+}
+
+/// The sync thread body: the plane's only estimate-table writer in
+/// per-shard mode. Returns the number of consensus epochs published,
+/// including the final drain-time epoch (which runs after every shard has
+/// exported its final view, so the table ends as the consensus of the
+/// drain-time views).
+pub(crate) fn run_sync(ctx: SyncRun) -> u64 {
+    let mut view_buf: Vec<Vec<EstimateView>> = Vec::new();
+    let mut consensus = vec![0.0; ctx.table.n()];
+    let mut epochs = 0u64;
+    let mut next_sync = ctx.start + Duration::from_secs_f64(ctx.sync_interval);
+    while !ctx.stop.load(Ordering::Acquire) {
+        if Instant::now() >= next_sync {
+            consensus_step(
+                &ctx.views,
+                &ctx.table,
+                &ctx.lambda_slots,
+                ctx.prior,
+                &mut view_buf,
+                &mut consensus,
+            );
+            epochs += 1;
+            next_sync += Duration::from_secs_f64(ctx.sync_interval);
+        } else {
+            let wait = next_sync.saturating_duration_since(Instant::now());
+            std::thread::sleep(wait.min(Duration::from_millis(5)));
+        }
+    }
+    consensus_step(
+        &ctx.views,
+        &ctx.table,
+        &ctx.lambda_slots,
+        ctx.prior,
+        &mut view_buf,
+        &mut consensus,
+    );
+    epochs + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learner::merge_estimates;
+
+    fn v(mu: f64, s: u64) -> EstimateView {
+        EstimateView { mu_hat: mu, samples: s }
+    }
+
+    #[test]
+    fn fresh_slots_merge_to_the_prior() {
+        let views = SharedViews::new(3, 2, 0.75);
+        assert_eq!(views.shards(), 3);
+        let mut buf = Vec::new();
+        views.collect_into(&mut buf);
+        assert_eq!(merge_estimates(&buf, 0.75), vec![0.75, 0.75]);
+    }
+
+    #[test]
+    fn store_overwrites_one_slot_only() {
+        let views = SharedViews::new(2, 2, 1.0);
+        views.store(1, &[v(2.0, 10), v(0.5, 4)]);
+        let mut buf = Vec::new();
+        views.collect_into(&mut buf);
+        assert_eq!(buf[0], vec![v(1.0, 0), v(1.0, 0)]);
+        assert_eq!(buf[1], vec![v(2.0, 10), v(0.5, 4)]);
+    }
+
+    #[test]
+    fn consensus_step_publishes_the_merge_of_exported_views() {
+        let views = SharedViews::new(2, 2, 1.0);
+        views.store(0, &[v(2.0, 40), v(0.0, 0)]);
+        views.store(1, &[v(1.0, 10), v(0.5, 5)]);
+        let table = EstimateTable::new(2, 1.0);
+        let lambda_slots: Vec<Arc<AtomicU64>> =
+            (0..2).map(|i| Arc::new(AtomicU64::new((i as f64 * 3.0).to_bits()))).collect();
+        let e0 = table.epoch();
+        let mut buf = Vec::new();
+        let mut consensus = vec![0.0; 2];
+        consensus_step(&views, &table, &lambda_slots, 1.0, &mut buf, &mut consensus);
+        assert_eq!(table.epoch(), e0 + 2, "each consensus step is one seqlock publish");
+        let (mu, lambda) = table.snapshot();
+        // Bit-exact agreement with the library merge rule at every epoch.
+        let expect = merge_estimates(&buf, 1.0);
+        assert_eq!(mu, expect);
+        assert!((mu[0] - 1.8).abs() < 1e-12);
+        assert_eq!(mu[1], 0.5);
+        assert_eq!(lambda, 3.0);
+    }
+}

@@ -2,7 +2,7 @@
 //! shared worker pool with lock-free shared state.
 //!
 //! The paper's headline claim is that Rosella "runs in parallel on multiple
-//! machines with minimum coordination" (§2): frontends only ever exchange
+//! machines with minimum coordination" (§2): schedulers only ever exchange
 //! queue-length probes and periodically synchronized speed estimates. This
 //! module realizes that design inside one process:
 //!
@@ -13,35 +13,52 @@
 //! * **shared state** ([`state`]) is lock-free on the decision hot path:
 //!   per-worker atomic queue-length probes and a seqlock-published estimate
 //!   table that shards re-read only when its epoch moves;
-//! * **one aggregator thread** owns the performance learner: it consumes
-//!   completion reports from a single MPSC channel, dispatches the
-//!   benchmark jobs at the aggregate rate `c0(μ̄ − λ̂)` (§5's throttling:
-//!   one dispatcher serves the whole plane, so the probing budget never
-//!   multiplies with the frontend count), and publishes μ̂ through the
-//!   seqlock table;
-//! * per-shard [`ResponseRecorder`]s are merged at drain, so latency
-//!   percentiles cover the whole plane without double counting.
+//! * **learning state is owned per scheduler** ([`LearnerMode`]). The §5
+//!   design (`LearnerMode::PerShard`) gives every frontend a private
+//!   [`PerfLearner`] fed by its *own* completion channel — node monitors
+//!   route each report to the scheduler that dispatched the task
+//!   ([`crate::coordinator::worker::CompletionSink`]) — plus its own
+//!   benchmark dispatcher at the throttled per-scheduler rate
+//!   `c0(μ̄ − λ̂)/k`, so the aggregate probing budget matches the
+//!   single-scheduler design. Schedulers coordinate *only* through
+//!   estimate sync: a lightweight thread ([`consensus`]) merges the
+//!   exported per-shard views with
+//!   [`merge_estimates`](crate::learner::merge_estimates) every
+//!   `sync_interval` and publishes the consensus through the seqlock
+//!   table. `LearnerMode::Shared` keeps the pre-§5 baseline for
+//!   comparison: one aggregator thread owns a single learner fed by a
+//!   single funnel channel;
+//! * **latency metrics merge at drain**: per-shard [`ResponseRecorder`]s
+//!   cover the whole plane without double counting in either mode.
+//!
+//! Ownership of learning state is the only difference between the modes —
+//! the decision hot path (atomic probes + epoch-gated estimate cache) is
+//! byte-for-byte the same, so `rosella plane --learners shared` vs
+//! `--learners per-shard` compares learning topology, nothing else.
 //!
 //! `rosella plane` (the CLI stress harness) sweeps the frontend count and
 //! reports scheduling decisions/sec and response-time percentiles;
 //! `benches/bench_plane.rs` uses the same entry points.
 
+pub mod consensus;
 pub mod ingest;
 pub mod shard;
 pub mod state;
 
+pub use consensus::SharedViews;
 pub use ingest::{Arrival, ArrivalBatcher};
-pub use shard::{encode_job, job_shard, shard_seeds, FrontendCore};
+pub use shard::{encode_job, job_shard, shard_seeds, FrontendCore, BENCH_LOCAL_JOB};
 pub use state::{EstimateCache, EstimateTable, SharedView};
 
 use crate::coordinator::worker::{
-    self, Completion, LiveTask, PayloadMode, WorkerClient, WorkerHandle,
+    self, Completion, CompletionSink, LiveTask, PayloadMode, WorkerClient, WorkerHandle,
 };
-use crate::learner::{FakeJobDispatcher, PerfLearner};
+use crate::learner::{EstimateView, FakeJobDispatcher, PerfLearner};
 use crate::metrics::ResponseRecorder;
 use crate::scheduler::PolicyKind;
 use crate::stats::{Exponential, Rng};
 use crate::types::{TaskKind, WorkerId};
+use consensus::lambda_total;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
@@ -64,6 +81,36 @@ impl DispatchMode {
         match self {
             DispatchMode::Execute => "execute",
             DispatchMode::DecideOnly => "decide-only",
+        }
+    }
+}
+
+/// Who owns the plane's learning state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LearnerMode {
+    /// One aggregator thread owns a single [`PerfLearner`] fed by a single
+    /// completion funnel (the pre-§5 baseline).
+    Shared,
+    /// Every frontend owns a private [`PerfLearner`] fed by its own
+    /// completion channel; consensus via periodic estimate sync (§5).
+    PerShard,
+}
+
+impl LearnerMode {
+    /// CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            LearnerMode::Shared => "shared",
+            LearnerMode::PerShard => "per-shard",
+        }
+    }
+
+    /// Parse the CLI spelling.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "shared" => Ok(LearnerMode::Shared),
+            "per-shard" | "pershard" | "per_shard" => Ok(LearnerMode::PerShard),
+            other => Err(format!("unknown learner mode '{other}' (shared | per-shard)")),
         }
     }
 }
@@ -100,6 +147,11 @@ pub struct PlaneConfig {
     pub max_decisions: Option<u64>,
     /// Record per-shard placement sequences (test instrumentation).
     pub record_placements: bool,
+    /// Who owns the learning state (§5: per-shard learners + estimate
+    /// sync, or the shared-aggregator baseline).
+    pub learners: LearnerMode,
+    /// Estimate-sync consensus interval in seconds (per-shard mode only).
+    pub sync_interval: f64,
 }
 
 impl Default for PlaneConfig {
@@ -122,6 +174,8 @@ impl Default for PlaneConfig {
             fake_jobs: true,
             max_decisions: None,
             record_placements: false,
+            learners: LearnerMode::Shared,
+            sync_interval: 0.2,
         }
     }
 }
@@ -161,6 +215,15 @@ pub struct PlaneReport {
     pub estimates: Vec<(f64, f64)>,
     /// Per-shard placement sequences (only when recording was enabled).
     pub placements: Vec<Vec<WorkerId>>,
+    /// Learner-ownership mode the run used.
+    pub learners: LearnerMode,
+    /// Estimate-sync consensus epochs published (per-shard mode; 0 under
+    /// the shared aggregator, whose publishes are not consensus).
+    pub sync_epochs: u64,
+    /// Each shard's final exported learner view (per-shard mode; empty
+    /// otherwise). `estimates` is exactly their
+    /// [`merge_estimates`](crate::learner::merge_estimates) consensus.
+    pub shard_views: Vec<Vec<EstimateView>>,
 }
 
 impl PlaneReport {
@@ -196,6 +259,21 @@ impl PlaneReport {
                 self.responses.count()
             ));
         }
+        match self.learners {
+            LearnerMode::Shared => {
+                out.push_str("learning   : one shared learner (aggregator thread)\n");
+            }
+            LearnerMode::PerShard => {
+                out.push_str(&format!(
+                    "learning   : per-shard learners, {} estimate-sync epochs\n",
+                    self.sync_epochs
+                ));
+                for (s, views) in self.shard_views.iter().enumerate() {
+                    let samples: Vec<u64> = views.iter().map(|v| v.samples).collect();
+                    out.push_str(&format!("  shard {s} in-window samples: {samples:?}\n"));
+                }
+            }
+        }
         out.push_str("worker speed estimates (true → learned):\n");
         for (i, (truth, est)) in self.estimates.iter().enumerate() {
             out.push_str(&format!("  worker {i}: {truth:.2} → {est:.2}\n"));
@@ -230,8 +308,37 @@ struct AggOut {
     benchmarks: u64,
 }
 
-fn lambda_total(slots: &[Arc<AtomicU64>]) -> f64 {
-    slots.iter().map(|s| f64::from_bits(s.load(Ordering::Relaxed))).sum()
+/// One catch-up pass of the LEARNER-DISPATCHER loop (Fig. 6), shared by
+/// the shared-mode aggregator and every per-shard learner: inject benchmark
+/// jobs for each elapsed dispatch instant at the dispatcher's current rate.
+/// Returns how many were sent. `lambda` is sampled once per pass — within
+/// one catch-up burst the estimate cannot meaningfully move.
+pub(crate) fn dispatch_benchmarks(
+    dispatcher: &FakeJobDispatcher,
+    pool: &[WorkerClient],
+    lambda: f64,
+    job: u64,
+    demand_dist: &Exponential,
+    rng: &mut Rng,
+    next_bench: &mut Instant,
+) -> u64 {
+    if !dispatcher.enabled() {
+        return 0;
+    }
+    let mut sent = 0;
+    while Instant::now() >= *next_bench {
+        let gap = dispatcher.next_gap(lambda, rng).unwrap_or(1.0).clamp(1e-3, 1.0);
+        let w = dispatcher.pick_worker(pool.len(), rng);
+        pool[w].enqueue(LiveTask {
+            job,
+            kind: TaskKind::Benchmark,
+            demand: demand_dist.sample(rng).max(1e-4),
+            enqueued: Instant::now(),
+        });
+        sent += 1;
+        *next_bench += Duration::from_secs_f64(gap);
+    }
+    sent
 }
 
 fn record_completion(
@@ -281,23 +388,19 @@ fn aggregate(mut ctx: AggCtx) -> AggOut {
             // Release our senders so the workers can finish draining.
             ctx.bench_pool = None;
         }
-        // Mirrors the live coordinator's LEARNER-DISPATCHER loop
-        // (coordinator::serve step 2) — kept in sync by hand until a
-        // shared helper is worth the coupling.
+        // The same LEARNER-DISPATCHER pass the per-shard learners run —
+        // here at the aggregate rate with the plane-wide λ̂ (the live
+        // coordinator's serve loop remains its own copy).
         if let Some(pool) = ctx.bench_pool.as_ref() {
-            while Instant::now() >= next_bench {
-                let lam = lambda_total(&ctx.lambda_slots);
-                let gap = dispatcher.next_gap(lam, &mut rng).unwrap_or(1.0).clamp(1e-3, 1.0);
-                let w = dispatcher.pick_worker(pool.len(), &mut rng);
-                pool[w].enqueue(LiveTask {
-                    job: u64::MAX,
-                    kind: TaskKind::Benchmark,
-                    demand: demand_dist.sample(&mut rng).max(1e-4),
-                    enqueued: Instant::now(),
-                });
-                benchmarks += 1;
-                next_bench += Duration::from_secs_f64(gap);
-            }
+            benchmarks += dispatch_benchmarks(
+                &dispatcher,
+                pool,
+                lambda_total(&ctx.lambda_slots),
+                u64::MAX,
+                &demand_dist,
+                &mut rng,
+                &mut next_bench,
+            );
         }
         if Instant::now() >= next_publish {
             let now_s = ctx.start.elapsed().as_secs_f64();
@@ -326,59 +429,117 @@ pub fn run_plane(cfg: PlaneConfig) -> Result<PlaneReport, String> {
     if !(cfg.rate > 0.0 && cfg.duration > 0.0 && cfg.mean_demand > 0.0 && cfg.batch >= 1) {
         return Err("rate, duration, mean demand, and batch must be positive".into());
     }
+    let per_shard = cfg.learners == LearnerMode::PerShard;
+    if per_shard && !(cfg.sync_interval > 0.0 && cfg.sync_interval.is_finite()) {
+        return Err("per-shard learners need a positive finite sync interval".into());
+    }
     let k = cfg.frontends;
     let total_speed: f64 = cfg.speeds.iter().sum();
     let prior = total_speed / n as f64;
     let mu_bar = total_speed / cfg.mean_demand;
     let policy_name = cfg.policy.build(n).name();
 
+    // Completion plumbing: the shared aggregator owns one funnel channel;
+    // per-shard learners get one channel each, and every node monitor
+    // routes each report to the scheduler that dispatched the task.
+    let mut agg_rx: Option<Receiver<Completion>> = None;
+    let mut shard_rxs: Vec<Receiver<Completion>> = Vec::new();
+    let sink = if per_shard {
+        let mut txs = Vec::with_capacity(k);
+        for _ in 0..k {
+            let (tx, rx) = std::sync::mpsc::channel::<Completion>();
+            txs.push(tx);
+            shard_rxs.push(rx);
+        }
+        CompletionSink::sharded(txs)
+    } else {
+        let (tx, rx) = std::sync::mpsc::channel::<Completion>();
+        agg_rx = Some(rx);
+        CompletionSink::from(tx)
+    };
+
     // The shared worker pool.
-    let (comp_tx, comp_rx) = std::sync::mpsc::channel::<Completion>();
     let workers: Vec<WorkerHandle> = cfg
         .speeds
         .iter()
         .enumerate()
-        .map(|(i, &s)| worker::spawn(i, s, PayloadMode::Sleep, comp_tx.clone()))
+        .map(|(i, &s)| worker::spawn(i, s, PayloadMode::Sleep, sink.clone()))
         .collect();
-    drop(comp_tx);
+    drop(sink);
     let qlen: Vec<Arc<AtomicUsize>> = workers.iter().map(|w| w.client.qlen.clone()).collect();
 
     // Lock-free shared state.
     let table = Arc::new(EstimateTable::new(n, prior));
     let stop = Arc::new(AtomicBool::new(false));
+    // Shards bump this when they leave the decision loop; per-shard drains
+    // block on worker exit, so thread-finished is not "done deciding".
+    let done_deciding = Arc::new(AtomicUsize::new(0));
     let completed_real = Arc::new(AtomicU64::new(0));
     let lambda_slots: Vec<Arc<AtomicU64>> =
         (0..k).map(|_| Arc::new(AtomicU64::new(0f64.to_bits()))).collect();
     let start = Instant::now();
 
-    // The aggregator (single learner writer).
-    let agg = {
-        let ctx = AggCtx {
-            comp_rx,
-            table: table.clone(),
-            stop: stop.clone(),
-            completed_real: completed_real.clone(),
-            lambda_slots: lambda_slots.clone(),
-            bench_pool: (cfg.mode == DispatchMode::Execute && cfg.fake_jobs)
-                .then(|| workers.iter().map(|w| w.client.clone()).collect()),
-            shards: k,
-            n,
-            prior,
-            mu_bar,
-            mean_demand: cfg.mean_demand,
-            warmup: cfg.warmup,
-            publish_interval: cfg.publish_interval,
-            seed: cfg.seed,
-            start,
-        };
-        std::thread::Builder::new()
-            .name("rosella-plane-agg".into())
-            .spawn(move || aggregate(ctx))
-            .map_err(|e| format!("spawn aggregator: {e}"))?
+    // Estimate-sync consensus (per-shard mode): view slots + the sync
+    // thread, the table's only writer in this mode. It gets its own stop
+    // flag so the final consensus epoch runs after every shard has
+    // exported its drain-time view.
+    let views = per_shard.then(|| Arc::new(SharedViews::new(k, n, prior)));
+    let sync_stop = Arc::new(AtomicBool::new(false));
+    let sync_handle = match views.as_ref() {
+        Some(v) => {
+            let ctx = consensus::SyncRun {
+                views: v.clone(),
+                table: table.clone(),
+                lambda_slots: lambda_slots.clone(),
+                stop: sync_stop.clone(),
+                sync_interval: cfg.sync_interval,
+                prior,
+                start,
+            };
+            Some(
+                std::thread::Builder::new()
+                    .name("rosella-plane-sync".into())
+                    .spawn(move || consensus::run_sync(ctx))
+                    .map_err(|e| format!("spawn sync thread: {e}"))?,
+            )
+        }
+        None => None,
+    };
+
+    // The aggregator (shared mode only: the single learner writer).
+    let agg = match agg_rx {
+        Some(comp_rx) => {
+            let ctx = AggCtx {
+                comp_rx,
+                table: table.clone(),
+                stop: stop.clone(),
+                completed_real: completed_real.clone(),
+                lambda_slots: lambda_slots.clone(),
+                bench_pool: (cfg.mode == DispatchMode::Execute && cfg.fake_jobs)
+                    .then(|| workers.iter().map(|w| w.client.clone()).collect()),
+                shards: k,
+                n,
+                prior,
+                mu_bar,
+                mean_demand: cfg.mean_demand,
+                warmup: cfg.warmup,
+                publish_interval: cfg.publish_interval,
+                seed: cfg.seed,
+                start,
+            };
+            Some(
+                std::thread::Builder::new()
+                    .name("rosella-plane-agg".into())
+                    .spawn(move || aggregate(ctx))
+                    .map_err(|e| format!("spawn aggregator: {e}"))?,
+            )
+        }
+        None => None,
     };
 
     // The frontend shards.
     let mut shard_handles = Vec::with_capacity(k);
+    let mut shard_rx_iter = shard_rxs.into_iter();
     for i in 0..k {
         let ctx = shard::ShardRun {
             id: i,
@@ -397,7 +558,18 @@ pub fn run_plane(cfg: PlaneConfig) -> Result<PlaneReport, String> {
             table: table.clone(),
             lambda_slot: lambda_slots[i].clone(),
             stop: stop.clone(),
+            done_deciding: done_deciding.clone(),
             start,
+            mu_bar,
+            publish_interval: cfg.publish_interval,
+            warmup: cfg.warmup,
+            fake_jobs: cfg.fake_jobs,
+            shards: k,
+            learner: shard_rx_iter.next().map(|comp_rx| shard::ShardLearner {
+                comp_rx,
+                views: views.as_ref().expect("per-shard views exist").clone(),
+                completed_real: completed_real.clone(),
+            }),
         };
         shard_handles.push(
             std::thread::Builder::new()
@@ -407,47 +579,89 @@ pub fn run_plane(cfg: PlaneConfig) -> Result<PlaneReport, String> {
         );
     }
 
-    // Serve until the deadline (or until budgeted shards finish early).
+    // Serve until the deadline (or until budgeted shards finish early —
+    // "finished" meaning done deciding: a per-shard drain keeps the thread
+    // alive until the pool shuts down below).
     let deadline = start + Duration::from_secs_f64(cfg.duration);
-    while Instant::now() < deadline && !shard_handles.iter().all(|h| h.is_finished()) {
+    while Instant::now() < deadline && done_deciding.load(Ordering::Relaxed) < k {
         std::thread::sleep(Duration::from_millis(2));
     }
     stop.store(true, Ordering::Relaxed);
 
+    // Stop-instant conservation snapshot. Completions are read *before*
+    // the queue probes: a completion increment happens after its
+    // queue-length decrement, so completed_at_stop + queued_at_stop never
+    // exceeds dispatched (the remainder is tasks mid-handoff). In
+    // per-shard mode the snapshot must precede the pool shutdown below;
+    // late dispatches between the stop flag and a shard noticing it only
+    // grow the final `dispatched`, preserving the inequality.
+    let completed_at_stop = completed_real.load(Ordering::Acquire);
+    let queued_at_stop: usize = qlen.iter().map(|q| q.load(Ordering::Relaxed)).sum();
+    let elapsed = start.elapsed().as_secs_f64();
+
+    let mut workers = Some(workers);
+    if per_shard {
+        // The shards finish by draining their own completion channels,
+        // which disconnect only once the workers exit — so the pool must
+        // shut down before the shards are joined (each shard dropped its
+        // ingress clients when it saw the stop flag).
+        for w in workers.take().expect("pool not yet shut down") {
+            w.shutdown();
+        }
+    }
+
     let mut decisions = 0u64;
     let mut dispatched = 0u64;
+    let mut benchmarks = 0u64;
     let mut per_shard_decisions = Vec::with_capacity(k);
     let mut placements = Vec::with_capacity(k);
+    let mut shard_views = Vec::with_capacity(if per_shard { k } else { 0 });
+    let mut responses = ResponseRecorder::new(cfg.warmup);
     for h in shard_handles {
         let s = h.join().map_err(|_| "shard thread panicked".to_string())?;
         decisions += s.decisions;
         dispatched += s.dispatched;
+        benchmarks += s.benchmarks;
         per_shard_decisions.push(s.decisions);
         placements.push(s.placements);
+        if per_shard {
+            responses.merge(&s.responses);
+            shard_views.push(s.views);
+        }
     }
-    let elapsed = start.elapsed().as_secs_f64();
 
-    // Drain-time conservation snapshot. Completions are read *before* the
-    // queue probes: a completion increment happens after its queue-length
-    // decrement, so completed_at_stop + queued_at_stop never exceeds
-    // dispatched (the remainder is tasks mid-handoff).
-    let completed_at_stop = completed_real.load(Ordering::Acquire);
-    let queued_at_stop: usize = qlen.iter().map(|q| q.load(Ordering::Relaxed)).sum();
-
-    // Shut the pool down: every sender drops, workers drain their queues
-    // and exit, the aggregator sees the channel disconnect and returns.
-    for w in workers {
-        w.shutdown();
-    }
-    let out = agg.join().map_err(|_| "aggregator thread panicked".to_string())?;
+    let (estimates, sync_epochs) = if per_shard {
+        // Final consensus epoch over the drain-time views, then read the
+        // table: the reported estimates *are* the published consensus.
+        sync_stop.store(true, Ordering::Release);
+        let epochs = sync_handle
+            .expect("per-shard sync thread exists")
+            .join()
+            .map_err(|_| "sync thread panicked".to_string())?;
+        let (mu, _lambda) = table.snapshot();
+        let estimates: Vec<(f64, f64)> =
+            cfg.speeds.iter().zip(mu.iter()).map(|(&t, &e)| (t, e)).collect();
+        (estimates, epochs)
+    } else {
+        // Shut the pool down: every sender drops, workers drain their
+        // queues and exit, the aggregator sees the disconnect and returns.
+        for w in workers.take().expect("pool not yet shut down") {
+            w.shutdown();
+        }
+        let out = agg
+            .expect("shared-mode aggregator exists")
+            .join()
+            .map_err(|_| "aggregator thread panicked".to_string())?;
+        for r in &out.responses {
+            responses.merge(r);
+        }
+        benchmarks = out.benchmarks;
+        let estimates: Vec<(f64, f64)> =
+            cfg.speeds.iter().zip(out.mu_hat.iter()).map(|(&t, &e)| (t, e)).collect();
+        (estimates, 0)
+    };
     let completed = completed_real.load(Ordering::Acquire);
 
-    let mut responses = ResponseRecorder::new(cfg.warmup);
-    for r in &out.responses {
-        responses.merge(r);
-    }
-    let estimates: Vec<(f64, f64)> =
-        cfg.speeds.iter().zip(out.mu_hat.iter()).map(|(&t, &e)| (t, e)).collect();
     Ok(PlaneReport {
         frontends: k,
         workers: n,
@@ -461,10 +675,13 @@ pub fn run_plane(cfg: PlaneConfig) -> Result<PlaneReport, String> {
         completed,
         completed_at_stop,
         queued_at_stop,
-        benchmarks: out.benchmarks,
+        benchmarks,
         responses,
         estimates,
         placements,
+        learners: cfg.learners,
+        sync_epochs,
+        shard_views,
     })
 }
 
@@ -497,12 +714,15 @@ pub fn bench_json(base: &PlaneConfig, reports: &[PlaneReport]) -> crate::config:
             m.insert("mean_ms".into(), Json::Num(r.responses.mean() * 1e3));
             m.insert("p50_ms".into(), Json::Num(five.p50 * 1e3));
             m.insert("p95_ms".into(), Json::Num(five.p95 * 1e3));
+            m.insert("sync_epochs".into(), Json::Num(r.sync_epochs as f64));
             Json::Obj(m)
         })
         .collect();
     let mut top = BTreeMap::new();
     top.insert("bench".into(), Json::Str("plane".into()));
     top.insert("mode".into(), Json::Str(base.mode.name().into()));
+    top.insert("learners".into(), Json::Str(base.learners.name().into()));
+    top.insert("sync_interval".into(), Json::Num(base.sync_interval));
     top.insert("policy".into(), Json::Str(base.policy.build(base.speeds.len()).name()));
     top.insert("workers".into(), Json::Num(base.speeds.len() as f64));
     top.insert("rate".into(), Json::Num(base.rate));
@@ -541,6 +761,8 @@ pub fn plane_cli(p: &crate::cli::Parsed) -> Result<String, String> {
         seed: p.parse_as("seed")?.unwrap_or(42),
         mode: if p.flag("decide-only") { DispatchMode::DecideOnly } else { DispatchMode::Execute },
         fake_jobs: !p.flag("no-fake-jobs"),
+        learners: LearnerMode::parse(p.get("learners").unwrap_or("shared"))?,
+        sync_interval: p.parse_as("sync-interval")?.unwrap_or(0.2),
         ..PlaneConfig::default()
     };
     let reports = sweep(&base, &frontend_counts)?;
@@ -705,6 +927,133 @@ mod tests {
         assert!(run_plane(PlaneConfig { frontends: 0, ..quick(1, DispatchMode::Execute) })
             .is_err());
         assert!(run_plane(PlaneConfig { rate: 0.0, ..quick(1, DispatchMode::Execute) }).is_err());
+        assert!(run_plane(PlaneConfig {
+            learners: LearnerMode::PerShard,
+            sync_interval: 0.0,
+            ..quick(1, DispatchMode::Execute)
+        })
+        .is_err());
+        // "--sync-interval inf" parses as a float; reject it before the
+        // sync thread would panic converting it to a Duration.
+        assert!(run_plane(PlaneConfig {
+            learners: LearnerMode::PerShard,
+            sync_interval: f64::INFINITY,
+            ..quick(1, DispatchMode::Execute)
+        })
+        .is_err());
+    }
+
+    fn quick_per_shard(frontends: usize, mode: DispatchMode) -> PlaneConfig {
+        PlaneConfig {
+            learners: LearnerMode::PerShard,
+            sync_interval: 0.1,
+            ..quick(frontends, mode)
+        }
+    }
+
+    #[test]
+    fn per_shard_two_shard_run_conserves_and_merges() {
+        let report = run_plane(quick_per_shard(2, DispatchMode::Execute)).unwrap();
+        assert_eq!(report.learners, LearnerMode::PerShard);
+        assert!(report.dispatched > 100, "dispatched {}", report.dispatched);
+        // Per-shard completion routing must neither lose nor duplicate:
+        // every dispatched task completes exactly once, at exactly one
+        // shard's recorder.
+        assert_eq!(report.completed, report.dispatched, "tasks lost or duplicated");
+        assert_eq!(report.responses.count() as u64, report.completed);
+        assert!(
+            report.completed_at_stop + report.queued_at_stop as u64 <= report.dispatched,
+            "at-stop accounting over-counts"
+        );
+        assert!(report.benchmarks > 0, "per-shard dispatchers idle");
+        assert!(report.sync_epochs >= 2, "sync epochs {}", report.sync_epochs);
+        assert_eq!(report.shard_views.len(), 2);
+        // Each shard learned from its own slice of the completion stream.
+        for (s, views) in report.shard_views.iter().enumerate() {
+            assert!(views.iter().any(|v| v.samples > 0), "shard {s} never sampled");
+        }
+    }
+
+    #[test]
+    fn per_shard_published_estimates_are_the_consensus_of_exported_views() {
+        let cfg = quick_per_shard(2, DispatchMode::Execute);
+        let prior = cfg.speeds.iter().sum::<f64>() / cfg.speeds.len() as f64;
+        let report = run_plane(cfg).unwrap();
+        let expect = crate::learner::merge_estimates(&report.shard_views, prior);
+        for (w, ((_, est), want)) in report.estimates.iter().zip(expect.iter()).enumerate() {
+            assert_eq!(
+                est.to_bits(),
+                want.to_bits(),
+                "worker {w}: table {est} != merged views {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn per_shard_learns_speed_ordering_without_a_shared_learner() {
+        let cfg = PlaneConfig {
+            speeds: vec![2.0, 0.4],
+            frontends: 2,
+            rate: 300.0,
+            duration: 2.0,
+            mean_demand: 0.004,
+            publish_interval: 0.1,
+            learners: LearnerMode::PerShard,
+            sync_interval: 0.1,
+            ..PlaneConfig::default()
+        };
+        let report = run_plane(cfg).unwrap();
+        assert!(report.completed > 100, "completed {}", report.completed);
+        let (t0, e0) = report.estimates[0];
+        let (t1, e1) = report.estimates[1];
+        assert!(
+            e0 > e1,
+            "consensus failed to order speeds: {e0} vs {e1} (true {t0} vs {t1})"
+        );
+    }
+
+    #[test]
+    fn decide_only_per_shard_consensus_stays_at_prior() {
+        // The deterministic 2-shard harness: decide-only produces no
+        // completions, so every shard's exported view is (prior, weight 0)
+        // at every local publish and every sync epoch must publish exactly
+        // the prior consensus — bit-for-bit.
+        let cfg = PlaneConfig {
+            max_decisions: Some(2_000),
+            fake_jobs: false,
+            duration: 30.0,
+            ..quick_per_shard(2, DispatchMode::DecideOnly)
+        };
+        let prior = cfg.speeds.iter().sum::<f64>() / cfg.speeds.len() as f64;
+        let report = run_plane(cfg).unwrap();
+        assert_eq!(report.decisions, 4_000);
+        assert_eq!(report.dispatched, 0);
+        assert!(report.sync_epochs >= 1);
+        for (w, (_, est)) in report.estimates.iter().enumerate() {
+            assert_eq!(est.to_bits(), prior.to_bits(), "worker {w} drifted off the prior");
+        }
+        for views in &report.shard_views {
+            for v in views {
+                assert_eq!(v.samples, 0);
+                assert_eq!(v.mu_hat.to_bits(), prior.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn per_shard_benchmark_budget_not_multiplied_by_frontends() {
+        // §5 throttling regression: four per-shard dispatchers must share
+        // the aggregate budget c0·(μ̄ − λ̂) ≤ c0·μ̄, not run at 4× it.
+        let cfg = quick_per_shard(4, DispatchMode::Execute);
+        let mu_bar = cfg.speeds.iter().sum::<f64>() / cfg.mean_demand;
+        let report = run_plane(cfg).unwrap();
+        assert!(report.benchmarks > 0, "dispatchers idle");
+        let cap = 0.1 * mu_bar * report.elapsed * 1.5 + 20.0;
+        assert!(
+            (report.benchmarks as f64) < cap,
+            "aggregate benchmark rate blew the single-scheduler budget: {} > {cap}",
+            report.benchmarks
+        );
     }
 
     #[test]

@@ -12,16 +12,26 @@
 //! Both paths run the *same* policy code against the same RNG stream, which
 //! is what makes a single-shard plane run reproduce the live coordinator's
 //! placement sequence decision-for-decision for a fixed seed.
+//!
+//! With per-shard learners ([`super::LearnerMode::PerShard`]) the shard
+//! thread additionally owns the full §5 scheduler learning stack
+//! (`ShardLearnState`): a private [`PerfLearner`] fed by this shard's own
+//! completion channel, a benchmark dispatcher running at the throttled
+//! per-scheduler rate `c0(μ̄ − λ̂)/k`, and the periodic view export that
+//! feeds estimate-sync consensus.
 
+use super::consensus::SharedViews;
 use super::ingest::ArrivalBatcher;
 use super::state::{EstimateCache, EstimateTable, SharedView};
 use super::DispatchMode;
-use crate::coordinator::worker::{LiveTask, WorkerClient};
-use crate::learner::ArrivalEstimator;
+use crate::coordinator::worker::{Completion, LiveTask, WorkerClient};
+use crate::learner::{ArrivalEstimator, EstimateView, FakeJobDispatcher, PerfLearner};
+use crate::metrics::ResponseRecorder;
 use crate::scheduler::{Policy, PolicyKind};
-use crate::stats::{Rng, SplitMix64};
+use crate::stats::{Exponential, Rng, SplitMix64};
 use crate::types::{JobPlacement, JobSpec, LocalView, TaskKind, WorkerId};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -41,6 +51,11 @@ pub fn encode_job(shard: usize, local: u64) -> u64 {
 pub fn job_shard(job: u64) -> usize {
     (job >> SHARD_SHIFT) as usize
 }
+
+/// Local job id reserved for a shard's own benchmark tasks: completion
+/// routing only needs the shard bits, and the sentinel keeps benchmark ids
+/// disjoint from real job counters.
+pub const BENCH_LOCAL_JOB: u64 = (1u64 << SHARD_SHIFT) - 1;
 
 /// Deterministic per-shard seed schedule: `(core_seed, stream_seed)` for
 /// shard `i` of a plane seeded with `seed`. The core seed drives the policy
@@ -96,6 +111,15 @@ impl FrontendCore {
     /// This frontend's arrival-rate estimate λ̂ (tasks/second).
     pub fn lambda_or(&self, default: f64) -> f64 {
         self.arrivals.lambda_or(default)
+    }
+
+    /// The plane-aggregate λ̂ cached from the last estimate-table refresh
+    /// (tasks/second; 0 before the first publish). Per-shard learners use
+    /// it for the §5 throttled probing rate and the learner window, so all
+    /// schedulers derive their parameters from the synchronized load
+    /// estimate rather than their 1/k-th slice of it.
+    pub fn cached_lambda(&self) -> f64 {
+        self.cache.lambda_tasks
     }
 
     /// Current cached speed estimates.
@@ -184,10 +208,39 @@ pub(crate) struct ShardRun {
     pub workers: Vec<WorkerClient>,
     pub qlen: Vec<Arc<AtomicUsize>>,
     pub table: Arc<EstimateTable>,
-    /// f64-bit slot where this shard publishes its λ̂ for the aggregator.
+    /// f64-bit slot where this shard publishes its λ̂ for the sync side.
     pub lambda_slot: Arc<AtomicU64>,
     pub stop: Arc<AtomicBool>,
+    /// Bumped once when this shard leaves its decision loop, so the plane
+    /// driver can distinguish "done deciding" from "thread finished" (a
+    /// per-shard drain keeps the thread alive until the pool exits).
+    pub done_deciding: Arc<AtomicUsize>,
     pub start: Instant,
+    /// Minimum guaranteed total throughput μ̄ (tasks/s) — per-shard learner
+    /// and dispatcher parameter.
+    pub mu_bar: f64,
+    /// Local learner publish/view-export cadence (seconds).
+    pub publish_interval: f64,
+    /// Warmup cutoff for this shard's response recorder.
+    pub warmup: f64,
+    /// Whether this shard runs its own benchmark dispatcher (per-shard
+    /// learners, Execute mode only).
+    pub fake_jobs: bool,
+    /// Total scheduler count k (the §5 probing-budget divisor).
+    pub shards: usize,
+    /// Per-shard learning plumbing; `None` runs the legacy shared-learner
+    /// shard loop (the aggregator owns all learning state).
+    pub learner: Option<ShardLearner>,
+}
+
+/// The channels a per-shard learner consumes and feeds.
+pub(crate) struct ShardLearner {
+    /// This shard's own completion channel (node monitors route by job id).
+    pub comp_rx: Receiver<Completion>,
+    /// Where the shard exports learner views for estimate-sync consensus.
+    pub views: Arc<SharedViews>,
+    /// Plane-wide completed-real counter (conservation accounting).
+    pub completed_real: Arc<AtomicU64>,
 }
 
 /// What a shard reports back when it stops.
@@ -196,13 +249,141 @@ pub(crate) struct ShardStats {
     pub decisions: u64,
     pub dispatched: u64,
     pub placements: Vec<WorkerId>,
+    /// This shard's own latency recorder (per-shard learners; empty under a
+    /// shared aggregator, which records responses centrally).
+    pub responses: ResponseRecorder,
+    /// Benchmark tasks this shard's dispatcher injected.
+    pub benchmarks: u64,
+    /// Final exported learner view (per-shard learners; empty otherwise).
+    pub views: Vec<EstimateView>,
 }
 
 /// Cap on recorded placements (test instrumentation, not a metric).
 const MAX_RECORDED: usize = 100_000;
 
+/// The full §5 scheduler learning stack owned by one shard thread: private
+/// learner, throttled benchmark dispatcher, latency recorder, and the
+/// periodic view export feeding estimate-sync consensus.
+struct ShardLearnState {
+    comp_rx: Receiver<Completion>,
+    views: Arc<SharedViews>,
+    completed_real: Arc<AtomicU64>,
+    perf: PerfLearner,
+    dispatcher: FakeJobDispatcher,
+    demand_dist: Exponential,
+    rng: Rng,
+    responses: ResponseRecorder,
+    benchmarks: u64,
+    next_publish: Instant,
+    next_bench: Instant,
+    view_buf: Vec<EstimateView>,
+    shard: usize,
+    publish_interval: f64,
+}
+
+impl ShardLearnState {
+    fn new(l: ShardLearner, ctx: &ShardRun, learn_seed: u64) -> Self {
+        // Same constants the shared aggregator uses (c = 10, c0 = 0.1), so
+        // shared vs per-shard compares learning topology, nothing else.
+        // `shared_among(k)` scales the window requirement to this shard's
+        // 1/k share of the completion stream.
+        let perf = PerfLearner::new(ctx.n, 10.0, ctx.mean_demand, ctx.mu_bar, ctx.prior, 0.0)
+            .shared_among(ctx.shards);
+        let dispatcher = FakeJobDispatcher::new_sharded(
+            0.1,
+            ctx.mu_bar,
+            ctx.fake_jobs && ctx.mode == DispatchMode::Execute,
+            ctx.shards,
+        );
+        Self {
+            comp_rx: l.comp_rx,
+            views: l.views,
+            completed_real: l.completed_real,
+            perf,
+            dispatcher,
+            demand_dist: Exponential::with_mean(ctx.mean_demand),
+            rng: Rng::new(learn_seed),
+            responses: ResponseRecorder::new(ctx.warmup),
+            benchmarks: 0,
+            next_publish: ctx.start + Duration::from_secs_f64(ctx.publish_interval),
+            next_bench: ctx.start + Duration::from_secs_f64(0.05),
+            view_buf: Vec::with_capacity(ctx.n),
+            shard: ctx.id,
+            publish_interval: ctx.publish_interval,
+        }
+    }
+
+    /// Absorb one completion report of a task this shard routed.
+    fn record(&mut self, ctx: &ShardRun, c: &Completion) {
+        let now_s = (c.at - ctx.start).as_secs_f64();
+        self.perf.on_completion(c.worker, now_s, c.duration.max(1e-6), c.demand);
+        if c.kind == TaskKind::Real {
+            self.responses.record((now_s - c.sojourn).max(0.0), now_s);
+            // Release pairs with the Acquire load in `run_plane`'s stop
+            // snapshot: a task counted here already left its queue probe.
+            self.completed_real.fetch_add(1, Ordering::Release);
+        }
+    }
+
+    /// Publish the local learner and export its view for consensus.
+    fn publish_and_export(&mut self, ctx: &ShardRun, core: &FrontendCore) {
+        let now_s = ctx.start.elapsed().as_secs_f64();
+        self.perf.publish(now_s, core.cached_lambda());
+        self.perf.export_views_into(&mut self.view_buf);
+        self.views.store(self.shard, &self.view_buf);
+    }
+
+    /// The off-hot-path learner duties, run between decisions: drain this
+    /// shard's completion channel, dispatch benchmark jobs at the throttled
+    /// per-scheduler rate, and publish/export on the local cadence.
+    fn tick(&mut self, ctx: &ShardRun, core: &FrontendCore) {
+        while let Ok(c) = self.comp_rx.try_recv() {
+            self.record(ctx, &c);
+        }
+        self.benchmarks += super::dispatch_benchmarks(
+            &self.dispatcher,
+            &ctx.workers,
+            core.cached_lambda(),
+            encode_job(self.shard, BENCH_LOCAL_JOB),
+            &self.demand_dist,
+            &mut self.rng,
+            &mut self.next_bench,
+        );
+        if Instant::now() >= self.next_publish {
+            self.publish_and_export(ctx, core);
+            self.next_publish += Duration::from_secs_f64(self.publish_interval);
+        }
+    }
+
+    /// Adopt the freshly refreshed consensus into the private learner
+    /// (called only when the table epoch moved — sync epochs, not per
+    /// decision).
+    fn adopt_consensus(&mut self, core: &FrontendCore) {
+        self.perf.adopt(core.mu_hat());
+    }
+
+    /// Post-stop drain: keep absorbing completions until every node
+    /// monitor has exited and the channel disconnects, then publish the
+    /// final view so the closing consensus epoch sees every sample.
+    fn drain(&mut self, ctx: &ShardRun, core: &FrontendCore) {
+        loop {
+            match self.comp_rx.recv_timeout(Duration::from_millis(5)) {
+                Ok(c) => {
+                    self.record(ctx, &c);
+                    while let Ok(c) = self.comp_rx.try_recv() {
+                        self.record(ctx, &c);
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        self.publish_and_export(ctx, core);
+    }
+}
+
 /// The shard thread body: the full Rosella frontend loop.
-pub(crate) fn run_shard(ctx: ShardRun) -> ShardStats {
+pub(crate) fn run_shard(mut ctx: ShardRun) -> ShardStats {
     let (core_seed, stream_seed) = shard_seeds(ctx.seed, ctx.id);
     let mut core =
         FrontendCore::new(&ctx.policy, ctx.n, ctx.prior, ctx.mean_demand, 128, core_seed);
@@ -211,8 +392,22 @@ pub(crate) fn run_shard(ctx: ShardRun) -> ShardStats {
     let mut batch = Vec::with_capacity(ctx.batch);
     // Reused single-task job spec: no allocation per decision.
     let mut job = JobSpec::single(ctx.mean_demand);
-    let mut stats = ShardStats { decisions: 0, dispatched: 0, placements: Vec::new() };
+    let mut stats = ShardStats {
+        decisions: 0,
+        dispatched: 0,
+        placements: Vec::new(),
+        responses: ResponseRecorder::new(ctx.warmup),
+        benchmarks: 0,
+        views: Vec::new(),
+    };
     let mut local_jobs: u64 = 0;
+    // Per-shard learning stack (None = the shared aggregator owns it). Its
+    // RNG stream is independent of the decision/arrival streams, so the
+    // decision sequence stays a pure function of the seed schedule.
+    let mut learn = ctx
+        .learner
+        .take()
+        .map(|l| ShardLearnState::new(l, &ctx, core_seed ^ stream_seed ^ 0xFA_CE));
 
     'outer: while !ctx.stop.load(Ordering::Relaxed) {
         batcher.fill(&mut stream_rng, &mut batch);
@@ -223,8 +418,12 @@ pub(crate) fn run_shard(ctx: ShardRun) -> ShardStats {
                 }
             }
             if ctx.mode == DispatchMode::Execute {
-                // Pace the batch: dispatch each arrival when it is due.
+                // Pace the batch: dispatch each arrival when it is due,
+                // servicing the learner duties while waiting.
                 loop {
+                    if let Some(ls) = learn.as_mut() {
+                        ls.tick(&ctx, &core);
+                    }
                     let elapsed = ctx.start.elapsed().as_secs_f64();
                     if elapsed >= a.at {
                         break;
@@ -236,7 +435,13 @@ pub(crate) fn run_shard(ctx: ShardRun) -> ShardStats {
                 }
             }
             core.on_arrival(a.at, 1);
-            core.maybe_refresh(&ctx.table);
+            if core.maybe_refresh(&ctx.table) {
+                // A fresh consensus arrived (sync epoch): adopt it into the
+                // private learner. Never taken on the no-change hot path.
+                if let Some(ls) = learn.as_mut() {
+                    ls.adopt_consensus(&core);
+                }
+            }
             job.tasks[0].demand = a.demand;
             let w = core.decide_shared(&job, &ctx.qlen);
             stats.decisions += 1;
@@ -255,6 +460,24 @@ pub(crate) fn run_shard(ctx: ShardRun) -> ShardStats {
             }
             ctx.lambda_slot.store(core.lambda_or(0.0).to_bits(), Ordering::Relaxed);
         }
+        // Decide-only runs service the learner once per batch — off the
+        // per-decision path, so raw decision throughput stays unperturbed.
+        if ctx.mode != DispatchMode::Execute {
+            if let Some(ls) = learn.as_mut() {
+                ls.tick(&ctx, &core);
+            }
+        }
+    }
+    ctx.done_deciding.fetch_add(1, Ordering::Relaxed);
+    if let Some(mut ls) = learn {
+        // Release our ingress handles so the worker pool can drain and
+        // exit; its exit disconnects our completion channel and ends the
+        // drain below.
+        ctx.workers.clear();
+        ls.drain(&ctx, &core);
+        stats.responses = ls.responses;
+        stats.benchmarks = ls.benchmarks;
+        stats.views = ls.view_buf;
     }
     stats
 }

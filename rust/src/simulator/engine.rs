@@ -19,9 +19,27 @@
 //! proportional sampler rebuilds in place, and completion events are keyed
 //! per worker so speed shocks cancel stale events inside the queue instead
 //! of leaking them to the handler.
+//!
+//! **Multi-scheduler learning** (§5, `LearnerConfig::schedulers = k`): the
+//! engine models `k` distributed schedulers by hash-splitting the
+//! completion stream — task `t` belongs to scheduler `t.id mod k`, whose
+//! private [`PerfLearner`] alone sees the sample. The policy never reads a
+//! private learner: it sees only the
+//! [`merge_estimates`](crate::learner::merge_estimates) consensus,
+//! installed either at every publish (`sync_interval = 0`) or on its own
+//! [`Event::EstimateSync`] cadence — which is exactly the staleness knob
+//! the paper's "synchronize the estimates ... regularly" leaves open, and
+//! what the `multisched` experiment sweeps. The arrival stream, the
+//! benchmark dispatch stream (a superposition of `k` throttled
+//! `c0(μ̄ − λ̂)/k` processes is one Poisson process at the aggregate rate),
+//! and every RNG draw are identical for all `k`, so runs differ only
+//! through what the learners saw.
 
 use crate::cluster::{SpeedProfile, Volatility, Worker};
-use crate::learner::{ArrivalEstimator, FakeJobDispatcher, LearnerConfig, PerfLearner};
+use crate::learner::{
+    merge_estimates_into, relative_error_of, ArrivalEstimator, EstimateView, FakeJobDispatcher,
+    LearnerConfig, PerfLearner,
+};
 use crate::metrics::{QueueStats, ResponseRecorder};
 use crate::scheduler::{Policy, PolicyKind};
 use crate::simulator::event::{Event, EventQueue};
@@ -138,8 +156,15 @@ pub struct Simulation {
     policy: Box<dyn Policy>,
     workload: Box<dyn crate::workload::Workload>,
     arrival_est: ArrivalEstimator,
-    perf: PerfLearner,
+    /// One per logical scheduler (§5); `learners.len() == 1` is the
+    /// centralized shared-learner baseline.
+    learners: Vec<PerfLearner>,
+    /// Reused per-scheduler view buffers for estimate-sync consensus.
+    views_buf: Vec<Vec<EstimateView>>,
+    /// Mean relative speed: the consensus fallback for unsampled workers.
+    prior: f64,
     dispatcher: FakeJobDispatcher,
+    /// The installed consensus the policy decides with.
     mu_hat: Vec<f64>,
     sampler: AliasTable,
     // RNG streams.
@@ -179,7 +204,18 @@ impl Simulation {
         let mean_demand = workload.mean_demand();
         let mu_bar_tasks = total_speed / mean_demand;
         let prior = total_speed / n as f64;
-        let perf = PerfLearner::new(n, cfg.learner.window_c, mean_demand, mu_bar_tasks, prior, 0.0);
+        let k = cfg.learner.schedulers.max(1);
+        // Each learner samples ~1/k of the completion stream, so it runs
+        // with the k-aware window (⌈L/k⌉ within the full-L horizon).
+        let learners: Vec<PerfLearner> = (0..k)
+            .map(|_| {
+                PerfLearner::new(n, cfg.learner.window_c, mean_demand, mu_bar_tasks, prior, 0.0)
+                    .shared_among(k)
+            })
+            .collect();
+        // One aggregate dispatch stream: k distributed dispatchers at the
+        // throttled rate c0(μ̄ − λ̂)/k superpose to exactly this process, so
+        // the event stream is bit-identical for every k.
         let dispatcher = FakeJobDispatcher::new(
             cfg.learner.c0,
             mu_bar_tasks,
@@ -201,7 +237,9 @@ impl Simulation {
             speeds,
             policy,
             arrival_est: ArrivalEstimator::new(cfg.learner.arrival_window),
-            perf,
+            learners,
+            views_buf: (0..k).map(|_| Vec::with_capacity(n)).collect(),
+            prior,
             dispatcher,
             mu_hat,
             sampler,
@@ -255,6 +293,9 @@ impl Simulation {
         }
         if self.cfg.learner.enabled && !self.cfg.learner.oracle {
             self.events.push(self.cfg.learner.publish_interval, Event::EstimatePublish);
+            if self.cfg.learner.sync_interval > 0.0 {
+                self.events.push(self.cfg.learner.sync_interval, Event::EstimateSync);
+            }
         }
         if let Some(interval) = self.cfg.queue_sample {
             self.events.push(self.cfg.warmup.max(interval), Event::QueueSample);
@@ -269,6 +310,7 @@ impl Simulation {
                 Event::TaskCompletion { worker } => self.on_completion(worker),
                 Event::BenchmarkDispatch => self.on_benchmark_dispatch(),
                 Event::EstimatePublish => self.on_publish(),
+                Event::EstimateSync => self.on_sync(),
                 Event::SpeedShock => self.on_shock(),
                 Event::QueueSample => self.on_queue_sample(),
             }
@@ -486,9 +528,12 @@ impl Simulation {
         let (task, duration, _wait) = self.workers[w].complete(self.now);
         // Every completion (real or benchmark) is a service sample (§5:
         // "when a benchmark or real task completes, the node monitor
-        // reports an updated estimation of worker speed").
+        // reports an updated estimation of worker speed"), reported to the
+        // scheduler that routed the task — task id hash-splits the stream
+        // across the k logical schedulers.
         if self.cfg.learner.enabled && !self.cfg.learner.oracle {
-            self.perf.on_completion(w, self.now, duration.max(1e-9), task.demand);
+            let owner = (task.id % self.learners.len() as u64) as usize;
+            self.learners[owner].on_completion(w, self.now, duration.max(1e-9), task.demand);
         }
         if task.kind == TaskKind::Real {
             if task.job == SINGLE_JOB {
@@ -530,14 +575,54 @@ impl Simulation {
     fn on_publish(&mut self) {
         self.events.push(self.now + self.cfg.learner.publish_interval, Event::EstimatePublish);
         let lam = self.arrival_est.lambda_or(0.0);
-        let params = self.perf.publish(self.now, lam);
-        self.mu_hat.copy_from_slice(self.perf.mu_hat());
+        // Every scheduler re-derives its local estimates from its own
+        // samples (all share the synchronized aggregate λ̂).
+        let mut params = None;
+        for l in &mut self.learners {
+            params = Some(l.publish(self.now, lam));
+        }
+        let params = params.expect("at least one scheduler");
+        if self.cfg.learner.sync_interval <= 0.0 {
+            // Tight coupling: consensus at every publish.
+            self.install_consensus(lam);
+        }
+        // Ground-truth error trace of what the policy actually decides
+        // with — the installed consensus, which under a decoupled sync
+        // cadence is stale by up to `sync_interval` (the effect the
+        // multisched experiment measures).
+        let err = relative_error_of(&self.mu_hat, &self.speeds, params.mu_star);
+        self.estimate_error.push((self.now, err));
+    }
+
+    /// Decoupled estimate-sync epoch (`sync_interval > 0`).
+    fn on_sync(&mut self) {
+        self.events.push(self.now + self.cfg.learner.sync_interval, Event::EstimateSync);
+        let lam = self.arrival_est.lambda_or(0.0);
+        self.install_consensus(lam);
+    }
+
+    /// §5 consensus: merge the per-scheduler views, adopt the result into
+    /// every learner, and install it as what the policy sees.
+    fn install_consensus(&mut self, lam: f64) {
+        if self.learners.len() == 1 {
+            // Trivial partition: the lone view *is* the consensus. Copy it
+            // directly — the weighted merge computes (μ·s)/s, which can
+            // differ from μ by one ulp, and the default engine must stay
+            // bit-identical to the pre-distributed shared-learner path.
+            // No adopt either: there is nothing foreign to inherit, and the
+            // centralized learner's cold-start fallback stays the prior.
+            self.mu_hat.copy_from_slice(self.learners[0].mu_hat());
+        } else {
+            for (l, buf) in self.learners.iter().zip(self.views_buf.iter_mut()) {
+                l.export_views_into(buf);
+            }
+            merge_estimates_into(&self.views_buf, self.prior, &mut self.mu_hat);
+            for l in &mut self.learners {
+                l.adopt(&self.mu_hat);
+            }
+        }
         self.sampler.rebuild(&self.mu_hat);
         self.policy.on_estimates(&self.mu_hat, lam * self.workload.mean_demand());
-        // Ground-truth error trace for learning-time analyses.
-        let mu_star_abs = params.mu_star;
-        let err = self.perf.relative_error(&self.speeds, mu_star_abs);
-        self.estimate_error.push((self.now, err));
     }
 
     fn on_shock(&mut self) {
@@ -648,6 +733,60 @@ mod tests {
         // After warm-up the estimates should be decent.
         let final_err = r.estimate_error.last().unwrap().1;
         assert!(final_err < 0.25, "final estimate error {final_err}");
+    }
+
+    #[test]
+    fn multi_scheduler_learning_completes_and_converges() {
+        // Four logical schedulers, consensus at every publish: the split
+        // completion stream still has to order the cluster correctly.
+        let mut cfg = base();
+        cfg.learner = LearnerConfig { schedulers: 4, ..LearnerConfig::default() };
+        let r = run(cfg);
+        assert!(r.responses.count() > 1000, "completed {}", r.responses.count());
+        assert!(r.completed_bench > 0, "no benchmark jobs ran");
+        let final_err = r.estimate_error.last().unwrap().1;
+        assert!(final_err < 0.3, "consensus estimate error {final_err}");
+    }
+
+    #[test]
+    fn multi_scheduler_runs_are_bit_reproducible() {
+        let mut cfg = base();
+        cfg.learner =
+            LearnerConfig { schedulers: 3, sync_interval: 0.7, ..LearnerConfig::default() };
+        let a = run(cfg.clone());
+        let b = run(cfg);
+        assert_eq!(a.completed_real, b.completed_real);
+        assert_eq!(a.completed_bench, b.completed_bench);
+        assert_eq!(a.responses.mean().to_bits(), b.responses.mean().to_bits());
+    }
+
+    #[test]
+    fn stale_sync_interval_still_keeps_the_system_stable() {
+        // Consensus only every 2 s of sim time: the policy runs on stale
+        // estimates between epochs but the system must not degenerate.
+        let mut cfg = base();
+        cfg.learner =
+            LearnerConfig { schedulers: 4, sync_interval: 2.0, ..LearnerConfig::default() };
+        let r = run(cfg);
+        assert!(r.responses.count() > 1000, "completed {}", r.responses.count());
+        assert!(r.incomplete_jobs < 100, "backlog {}", r.incomplete_jobs);
+    }
+
+    #[test]
+    fn split_learning_stays_close_to_the_shared_learner() {
+        // §5 convergence claim: with consensus at every publish, k
+        // schedulers' merged view steers response times close to the
+        // centralized single-learner baseline.
+        let shared = run(SimConfig { learner: LearnerConfig::default(), ..base() });
+        let mut cfg = base();
+        cfg.learner = LearnerConfig { schedulers: 4, ..LearnerConfig::default() };
+        let split = run(cfg);
+        assert!(split.responses.count() > 1000);
+        let ratio = split.responses.mean() / shared.responses.mean();
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "split-learner mean drifted {ratio}x off the shared baseline"
+        );
     }
 
     #[test]

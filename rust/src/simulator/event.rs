@@ -40,6 +40,10 @@ pub enum Event {
     /// The learner publishes fresh estimates and the proportional sampler
     /// is rebuilt.
     EstimatePublish,
+    /// Multi-scheduler estimate-sync epoch (§5): the per-scheduler learner
+    /// views are merged and the consensus installed. Only scheduled when
+    /// `sync_interval > 0` decouples consensus from the publish cadence.
+    EstimateSync,
     /// The environment shocks: worker speeds are randomly permuted
     /// (§6.1/§6.2: "randomly permute the worker speeds every X minutes").
     SpeedShock,
@@ -58,6 +62,7 @@ const T_ESTIMATE_PUBLISH: u64 = 3;
 const T_SPEED_SHOCK: u64 = 4;
 const T_QUEUE_SAMPLE: u64 = 5;
 const T_END: u64 = 6;
+const T_ESTIMATE_SYNC: u64 = 7;
 
 #[inline]
 fn pack_tag(ev: &Event) -> u64 {
@@ -66,6 +71,7 @@ fn pack_tag(ev: &Event) -> u64 {
         Event::TaskCompletion { worker } => (T_COMPLETION << 32) | *worker as u64,
         Event::BenchmarkDispatch => T_BENCH_DISPATCH << 32,
         Event::EstimatePublish => T_ESTIMATE_PUBLISH << 32,
+        Event::EstimateSync => T_ESTIMATE_SYNC << 32,
         Event::SpeedShock => T_SPEED_SHOCK << 32,
         Event::QueueSample => T_QUEUE_SAMPLE << 32,
         Event::EndOfSimulation => T_END << 32,
@@ -80,6 +86,7 @@ fn unpack(bits: u64) -> Event {
         T_COMPLETION => Event::TaskCompletion { worker },
         T_BENCH_DISPATCH => Event::BenchmarkDispatch,
         T_ESTIMATE_PUBLISH => Event::EstimatePublish,
+        T_ESTIMATE_SYNC => Event::EstimateSync,
         T_SPEED_SHOCK => Event::SpeedShock,
         T_QUEUE_SAMPLE => Event::QueueSample,
         T_END => Event::EndOfSimulation,
@@ -274,6 +281,16 @@ mod tests {
         assert_eq!(q.pop().unwrap().0, 1.0);
         assert_eq!(q.pop().unwrap().0, 2.0);
         assert_eq!(q.pop().unwrap().0, 3.0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn estimate_sync_round_trips_through_packing() {
+        let mut q = EventQueue::new();
+        q.push(1.5, Event::EstimateSync);
+        q.push(1.0, Event::EstimatePublish);
+        assert_eq!(q.pop(), Some((1.0, Event::EstimatePublish)));
+        assert_eq!(q.pop(), Some((1.5, Event::EstimateSync)));
         assert!(q.pop().is_none());
     }
 

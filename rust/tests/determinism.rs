@@ -116,6 +116,53 @@ fn oracle_mode_reproduces_bit_identical_results() {
 }
 
 #[test]
+fn aligned_sync_cadence_is_decision_equivalent_to_the_shared_learner_engine() {
+    // §5 pin: the multi-scheduler machinery with the trivial partition
+    // (one scheduler) and its sync epoch aligned to the publish cadence
+    // must reproduce the shared-learner engine's decision stream
+    // bit-for-bit. Publish fires before the same-timestamp sync epoch
+    // (FIFO among equal times), so consensus installs identical values at
+    // identical instants whether it runs fused into the publish
+    // (sync_interval = 0) or as its own event.
+    let shared = golden_cfg(
+        PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
+        WorkloadKind::Synthetic,
+    );
+    let mut aligned = shared.clone();
+    aligned.learner.sync_interval = aligned.learner.publish_interval;
+    let a = run(shared);
+    let b = run(aligned);
+    assert!(a.responses.count() > 200, "only {} jobs", a.responses.count());
+    assert_eq!(a.completed_real, b.completed_real, "completed_real diverged");
+    assert_eq!(a.completed_bench, b.completed_bench, "completed_bench diverged");
+    assert_eq!(a.responses.count(), b.responses.count(), "count diverged");
+    assert_eq!(
+        a.responses.mean().to_bits(),
+        b.responses.mean().to_bits(),
+        "mean response diverged bit-wise"
+    );
+    assert_eq!(a.incomplete_jobs, b.incomplete_jobs, "backlog diverged");
+}
+
+#[test]
+fn multi_scheduler_split_reproduces_bit_identically() {
+    // The k-way learner partition is deterministic: same seed, same split,
+    // same consensus stream.
+    let mut cfg = golden_cfg(
+        PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
+        WorkloadKind::Synthetic,
+    );
+    cfg.learner.schedulers = 4;
+    cfg.learner.sync_interval = 0.5;
+    let a = run(cfg.clone());
+    let b = run(cfg);
+    assert!(a.responses.count() > 200);
+    assert_eq!(a.completed_real, b.completed_real);
+    assert_eq!(a.completed_bench, b.completed_bench);
+    assert_eq!(a.responses.mean().to_bits(), b.responses.mean().to_bits());
+}
+
+#[test]
 fn local_and_shared_views_yield_identical_decisions_for_every_policy() {
     // The same policy over the borrowed-slice view (DES engine, live
     // coordinator) and over the plane's atomic-probe view must produce the

@@ -101,11 +101,38 @@ fn cli_binary_smoke() {
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("mean response"), "{text}");
 
+    // The §5 distributed-learning surface: per-shard learners end to end.
+    let out = std::process::Command::new(bin)
+        .args([
+            "plane",
+            "--frontends",
+            "2",
+            "--duration",
+            "1",
+            "--rate",
+            "150",
+            "--learners",
+            "per-shard",
+            "--sync-interval",
+            "0.2",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("per-shard learners"), "{text}");
+    assert!(text.contains("in-window samples"), "{text}");
+
     // Unknown options/subcommands fail loudly.
     let out = std::process::Command::new(bin).arg("frobnicate").output().unwrap();
     assert!(!out.status.success());
     let out = std::process::Command::new(bin)
         .args(["simulate", "--policy", "nonsense"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let out = std::process::Command::new(bin)
+        .args(["plane", "--learners", "nonsense"])
         .output()
         .unwrap();
     assert!(!out.status.success());
