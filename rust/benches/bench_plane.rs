@@ -10,6 +10,7 @@
 //! `cargo bench --bench bench_plane` — decide-only sweep (raw scheduling
 //! throughput) followed by an execute-mode latency snapshot.
 
+use rosella::learner::SyncPolicyConfig;
 use rosella::plane::{run_plane, DispatchMode, LearnerMode, PlaneConfig};
 use rosella::scheduler::{PolicyKind, TieRule};
 
@@ -115,9 +116,53 @@ fn learner_ownership_comparison() {
     }
 }
 
+fn sync_policy_comparison() {
+    println!("-- sync policies: consensus strategy under per-shard learners --");
+    let cells: [(&str, SyncPolicyConfig); 3] = [
+        ("periodic", SyncPolicyConfig::periodic()),
+        ("adaptive", SyncPolicyConfig::adaptive(0.1)),
+        ("gossip", SyncPolicyConfig::gossip()),
+    ];
+    for (name, sync_policy) in cells {
+        let cfg = PlaneConfig {
+            frontends: 4,
+            rate: 800.0,
+            duration: 2.0,
+            mean_demand: 0.004,
+            publish_interval: 0.1,
+            learners: LearnerMode::PerShard,
+            sync_interval: 0.2,
+            sync_policy,
+            ..PlaneConfig::default()
+        };
+        match run_plane(cfg) {
+            Ok(r) => {
+                let five = r.responses.five_num();
+                println!(
+                    "{:<9}: completed {:>5}, p50 {:>6.2} ms, p95 {:>6.2} ms, \
+                     sync epochs {:>3}, merges {:>3}",
+                    name,
+                    r.completed,
+                    five.p50 * 1e3,
+                    five.p95 * 1e3,
+                    r.sync_epochs,
+                    r.sync_merges
+                );
+            }
+            Err(e) => {
+                eprintln!("plane run failed: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    println!("(merges < epochs under adaptive = coordination saved; gossip pays");
+    println!(" ⌊k/2⌋ pair merges per round instead of one all-to-all epoch)");
+}
+
 fn main() {
     println!("== bench_plane ==");
     decide_only_sweep();
     execute_latency();
     learner_ownership_comparison();
+    sync_policy_comparison();
 }

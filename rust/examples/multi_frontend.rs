@@ -14,7 +14,7 @@
 //!
 //! Run: `cargo run --release --example multi_frontend`
 
-use rosella::learner::merge_estimates;
+use rosella::learner::{merge_estimates, SyncPolicyConfig};
 use rosella::plane::{run_plane, sweep, DispatchMode, LearnerMode, PlaneConfig};
 
 fn main() {
@@ -73,7 +73,48 @@ fn main() {
         }
     }
 
-    // 3. Scaling sweep: raw scheduling throughput as frontends are added
+    // 3. The pluggable consensus layer: same per-shard topology, three
+    //    answers to "how regularly" schedulers synchronize. Merge counts
+    //    are the coordination spent; adaptive should spend far fewer than
+    //    the fixed timer on this stable cluster.
+    println!("sync-policy comparison (per-shard learners, same traffic):");
+    let policies: [(&str, SyncPolicyConfig); 3] = [
+        ("periodic", SyncPolicyConfig::periodic()),
+        ("adaptive", SyncPolicyConfig::adaptive(0.1)),
+        ("gossip", SyncPolicyConfig::gossip()),
+    ];
+    for (name, sync_policy) in policies {
+        let cfg = PlaneConfig {
+            speeds: speeds.clone(),
+            frontends: 4,
+            rate: 800.0,
+            duration: 2.0,
+            mean_demand: 0.005,
+            publish_interval: 0.1,
+            learners: LearnerMode::PerShard,
+            sync_interval: 0.2,
+            sync_policy,
+            ..PlaneConfig::default()
+        };
+        match run_plane(cfg) {
+            Ok(r) => {
+                let five = r.responses.five_num();
+                println!(
+                    "  {name:<8}: {:>3} check epochs → {:>3} merges, p95 {:>6.2} ms",
+                    r.sync_epochs,
+                    r.sync_merges,
+                    five.p95 * 1e3
+                );
+            }
+            Err(e) => {
+                eprintln!("{name} plane failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    println!();
+
+    // 4. Scaling sweep: raw scheduling throughput as frontends are added
     //    over the same worker pool (decide-only isolates the decision path).
     let base = PlaneConfig {
         speeds,

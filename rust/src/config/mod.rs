@@ -17,7 +17,11 @@
 //!     "enabled": true, "oracle": false, "fake_jobs": true,
 //!     "c0": 0.1, "window_c": 10.0,
 //!     "arrival_window": 200, "publish_interval": 0.1,
-//!     "schedulers": 1, "sync_interval": 0.0
+//!     "schedulers": 1, "sync_interval": 0.0,
+//!     "sync": {
+//!       "policy": "periodic", "threshold": 0.1,
+//!       "min_interval": 0.0, "max_interval": 0.0
+//!     }
 //!   },
 //!   "queue_sample": 0.1
 //! }
@@ -32,7 +36,7 @@ pub mod json;
 pub use json::{parse, to_string, Json, JsonError};
 
 use crate::cluster::{SpeedProfile, Volatility};
-use crate::learner::LearnerConfig;
+use crate::learner::{LearnerConfig, SyncKind, SyncPolicyConfig};
 use crate::scheduler::PolicyKind;
 use crate::simulator::SimConfig;
 use crate::workload::WorkloadKind;
@@ -67,6 +71,24 @@ fn bool_field(v: &Json, key: &str, default: bool) -> Result<bool, ConfigError> {
     }
 }
 
+/// Parse the `learner.sync` sub-object (all fields optional, defaults =
+/// the bit-compatible periodic policy).
+pub fn sync_policy_from_json(v: &Json) -> Result<SyncPolicyConfig, ConfigError> {
+    let d = SyncPolicyConfig::default();
+    Ok(SyncPolicyConfig {
+        kind: match v.get("policy") {
+            None => d.kind,
+            Some(x) => SyncKind::parse(
+                x.as_str().ok_or_else(|| bad("'sync.policy' must be a string"))?,
+            )
+            .map_err(bad)?,
+        },
+        threshold: f64_field(v, "threshold", d.threshold)?,
+        min_interval: f64_field(v, "min_interval", d.min_interval)?,
+        max_interval: f64_field(v, "max_interval", d.max_interval)?,
+    })
+}
+
 /// Parse the learner sub-object (all fields optional, defaults from
 /// [`LearnerConfig::default`]).
 pub fn learner_from_json(v: &Json) -> Result<LearnerConfig, ConfigError> {
@@ -91,6 +113,10 @@ pub fn learner_from_json(v: &Json) -> Result<LearnerConfig, ConfigError> {
             .map(|x| x as usize)
             .unwrap_or(d.schedulers),
         sync_interval: f64_field(v, "sync_interval", d.sync_interval)?,
+        sync: match v.get("sync") {
+            None => d.sync,
+            Some(sub) => sync_policy_from_json(sub)?,
+        },
     })
 }
 
@@ -189,11 +215,20 @@ pub fn validate(cfg: &SimConfig) -> Result<(), ConfigError> {
         return Err(bad("learner.enabled and learner.oracle are mutually exclusive"));
     }
     if cfg.learner.schedulers == 0 {
+        // Caught here rather than downstream, where a zero scheduler count
+        // would mean an empty learner set (consensus panics) or a modulo
+        // by zero on the completion split.
         return Err(bad("learner.schedulers must be at least 1"));
     }
     if !(cfg.learner.sync_interval >= 0.0 && cfg.learner.sync_interval.is_finite()) {
         return Err(bad("learner.sync_interval must be a finite non-negative number"));
     }
+    // Sync-policy cross-field constraints: adaptive/gossip need a real
+    // epoch cadence (sync_interval > 0), thresholds/bounds must be sane.
+    cfg.learner
+        .sync
+        .validate(cfg.learner.sync_interval)
+        .map_err(|e| bad(format!("learner.sync: {e}")))?;
     Ok(())
 }
 
@@ -246,6 +281,60 @@ mod tests {
         );
         assert!(sim_config_from_str(r#"{"learner": {"schedulers": 0}}"#).is_err());
         assert!(sim_config_from_str(r#"{"learner": {"sync_interval": -1.0}}"#).is_err());
+    }
+
+    #[test]
+    fn zero_schedulers_rejected_at_validation_time() {
+        // Downstream this would be an empty learner set / modulo-by-zero
+        // completion split; the config layer must refuse it up front.
+        let err = sim_config_from_str(r#"{"learner": {"schedulers": 0}}"#).unwrap_err();
+        assert!(err.0.contains("schedulers"), "{err}");
+    }
+
+    #[test]
+    fn non_periodic_sync_with_zero_interval_rejected_at_validation_time() {
+        // A per-shard topology syncing adaptively (or via gossip) with
+        // sync_interval <= 0 has no check cadence to ride — previously the
+        // engine would have had nothing to schedule; now it is a config
+        // error with both rejects covered.
+        for policy in ["adaptive", "gossip"] {
+            let doc = format!(
+                r#"{{"learner": {{"schedulers": 4, "sync_interval": 0.0,
+                     "sync": {{"policy": "{policy}"}}}}}}"#
+            );
+            let err = sim_config_from_str(&doc).unwrap_err();
+            assert!(err.0.contains("sync"), "{policy}: {err}");
+        }
+        // Negative intervals stay rejected independent of the policy.
+        assert!(sim_config_from_str(r#"{"learner": {"sync_interval": -1.0}}"#).is_err());
+    }
+
+    #[test]
+    fn sync_policy_block_parses_and_validates() {
+        let cfg = sim_config_from_str(
+            r#"{"learner": {"schedulers": 4, "sync_interval": 1.5,
+                 "sync": {"policy": "adaptive", "threshold": 0.2,
+                          "min_interval": 0.5, "max_interval": 6.0}}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.learner.sync.kind, SyncKind::Adaptive);
+        assert_eq!(cfg.learner.sync.threshold, 0.2);
+        assert_eq!(cfg.learner.sync.min_interval, 0.5);
+        assert_eq!(cfg.learner.sync.max_interval, 6.0);
+        // Defaults: periodic, bit-compatible with the pre-policy engine.
+        let d = sim_config_from_str("{}").unwrap();
+        assert_eq!(d.learner.sync, SyncPolicyConfig::periodic());
+        // Bad blocks are rejected with a config error, not a panic.
+        assert!(sim_config_from_str(r#"{"learner": {"sync": {"policy": "nope"}}}"#).is_err());
+        assert!(sim_config_from_str(
+            r#"{"learner": {"sync_interval": 1.0, "sync": {"policy": "adaptive", "threshold": 0}}}"#
+        )
+        .is_err());
+        assert!(sim_config_from_str(
+            r#"{"learner": {"sync_interval": 1.0,
+                 "sync": {"policy": "adaptive", "min_interval": 9.0, "max_interval": 2.0}}}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -31,6 +31,16 @@ pub const ALL: &[&str] = &[
 
 /// Run one experiment by name and return its rendered report.
 pub fn run_by_name(name: &str, scale: Scale) -> Result<String, String> {
+    run_by_name_with(name, scale, None)
+}
+
+/// [`run_by_name`] with an optional machine-readable JSON output path
+/// (currently supported by `multisched`, which emits its sweep grid in the
+/// `BENCH_plane.json` shape conventions).
+pub fn run_by_name_with(name: &str, scale: Scale, json: Option<&str>) -> Result<String, String> {
+    if json.is_some() && name != "multisched" {
+        return Err(format!("--json is only supported by 'multisched' (got '{name}')"));
+    }
     match name {
         "fig8" => Ok(fig8::run(scale)),
         "fig9" => Ok(fig9::run(scale)),
@@ -40,7 +50,7 @@ pub fn run_by_name(name: &str, scale: Scale) -> Result<String, String> {
         "fig13" => Ok(fig13::run(scale)),
         "theory" => Ok(theory::run(scale)),
         "ablation" => Ok(ablation::run(scale)),
-        "multisched" => Ok(multi_sched::run(scale)),
+        "multisched" => multi_sched::run_with_json(scale, json),
         "all" => {
             let mut out = String::new();
             for n in ALL.iter().filter(|&&n| n != "all") {
@@ -60,5 +70,11 @@ mod tests {
     #[test]
     fn unknown_experiment_is_rejected() {
         assert!(run_by_name("fig99", Scale::Quick).is_err());
+    }
+
+    #[test]
+    fn json_flag_only_applies_to_multisched() {
+        let err = run_by_name_with("fig8", Scale::Quick, Some("out.json")).unwrap_err();
+        assert!(err.contains("multisched"), "{err}");
     }
 }

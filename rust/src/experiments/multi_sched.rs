@@ -2,31 +2,61 @@
 //! consensus.
 //!
 //! The paper leaves one knob open in its "schedulers need only synchronize
-//! the estimates of worker speeds regularly" claim: how *regularly*? This
-//! experiment sweeps the scheduler count `k` against the sync interval on a
-//! volatile cluster (periodic speed permutations — the regime where stale
-//! estimates actually cost latency) and reports mean response time per
-//! cell, plus the degradation relative to the centralized shared-learner
-//! baseline (`k = 1`, consensus at every publish). The expected shape:
-//! near-flat across `k` when sync is tight (distributing the learner is
-//! ~free, the paper's claim), growing with the sync interval as every
-//! scheduler schedules against increasingly stale speed estimates.
+//! the estimates of worker speeds regularly" claim: how *regularly* — and,
+//! with the pluggable sync layer, *with whom*? This experiment maps the
+//! coordination/quality frontier on a volatile cluster (periodic speed
+//! permutations — the regime where stale estimates actually cost latency):
+//!
+//! * the **staleness sweep** — scheduler count `k` × periodic sync interval,
+//!   mean/p95 response time and degradation vs the centralized baseline
+//!   (`k = 1`, consensus at every publish);
+//! * the **policy frontier** — periodic vs adaptive (divergence threshold
+//!   sweep) vs gossip at a fixed interval, reporting *merges performed*
+//!   against degradation: how much consensus traffic each policy spends for
+//!   the response time it gets. The expected shape: adaptive buys most of
+//!   periodic's quality for a fraction of the merges (it syncs when shocks
+//!   make estimates diverge, idles otherwise); gossip pays O(k/2) pairwise
+//!   merges per round but never runs an all-to-all epoch.
+//!
+//! `rosella experiment multisched --json <path>` additionally emits the
+//! whole grid as machine-readable JSON (same shape conventions as
+//! `BENCH_plane.json`: a top-level object with the run parameters and one
+//! flat `results` array) so CI can track the frontier across PRs.
 
 use super::harness::{ms, Scale};
 use crate::cluster::{SpeedProfile, Volatility};
-use crate::learner::LearnerConfig;
+use crate::config::Json;
+use crate::learner::{LearnerConfig, SyncPolicyConfig};
 use crate::metrics::{format_table, Row};
 use crate::scheduler::{PolicyKind, TieRule};
 use crate::simulator::{run as sim_run, SimConfig, SimResult};
 use crate::workload::WorkloadKind;
+use std::collections::BTreeMap;
 
 /// Scheduler counts swept.
 pub const KS: &[usize] = &[1, 2, 4, 8];
 /// Sync intervals swept (seconds; 0 = consensus at every publish).
 pub const SYNCS: &[f64] = &[0.0, 1.0, 5.0, 20.0];
+/// Scheduler counts of the sync-policy frontier.
+pub const FRONTIER_KS: &[usize] = &[2, 4, 8];
+/// Adaptive divergence thresholds swept on the frontier.
+pub const THRESHOLDS: &[f64] = &[0.05, 0.1, 0.2];
+/// Sync interval every frontier cell shares (seconds).
+pub const FRONTIER_SYNC: f64 = 1.0;
 
-/// One cell of the sweep.
+/// One cell of the sweep: `k` schedulers syncing periodically every
+/// `sync_interval` seconds.
 pub fn run_one(scale: Scale, schedulers: usize, sync_interval: f64) -> SimResult {
+    run_policy(scale, schedulers, sync_interval, SyncPolicyConfig::periodic())
+}
+
+/// One cell with an explicit sync policy (the frontier axis).
+pub fn run_policy(
+    scale: Scale,
+    schedulers: usize,
+    sync_interval: f64,
+    sync: SyncPolicyConfig,
+) -> SimResult {
     sim_run(SimConfig {
         seed: 20200417,
         duration: scale.t(300.0),
@@ -36,31 +66,124 @@ pub fn run_one(scale: Scale, schedulers: usize, sync_interval: f64) -> SimResult
         workload: WorkloadKind::Synthetic,
         load: 0.8,
         policy: PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
-        learner: LearnerConfig { schedulers, sync_interval, ..LearnerConfig::default() },
+        learner: LearnerConfig { schedulers, sync_interval, sync, ..LearnerConfig::default() },
         queue_sample: None,
     })
 }
 
-/// Render the sweep report.
-pub fn run(scale: Scale) -> String {
-    let mut means = vec![vec![0.0f64; KS.len()]; SYNCS.len()];
-    let mut p95s = vec![vec![0.0f64; KS.len()]; SYNCS.len()];
-    for (si, &sync) in SYNCS.iter().enumerate() {
-        for (ki, &k) in KS.iter().enumerate() {
-            let r = run_one(scale, k, sync);
-            means[si][ki] = ms(r.responses.mean());
-            p95s[si][ki] = ms(r.responses.five_num().p95);
+/// One measured cell of the grid (both sweeps share this shape).
+#[derive(Clone)]
+struct Cell {
+    policy: &'static str,
+    threshold: Option<f64>,
+    k: usize,
+    sync_interval: f64,
+    mean_ms: f64,
+    p95_ms: f64,
+    merges: u64,
+    epochs: u64,
+    completed: u64,
+}
+
+impl Cell {
+    fn from_result(
+        r: &SimResult,
+        policy: &'static str,
+        threshold: Option<f64>,
+        k: usize,
+        sync: f64,
+    ) -> Self {
+        Self {
+            policy,
+            threshold,
+            k,
+            sync_interval: sync,
+            mean_ms: ms(r.responses.mean()),
+            p95_ms: ms(r.responses.five_num().p95),
+            merges: r.sync_merges,
+            epochs: r.sync_epochs,
+            completed: r.completed_real,
         }
     }
-    let baseline = means[0][0];
+
+    fn label(&self) -> String {
+        match self.threshold {
+            Some(t) => format!("{}:{t}", self.policy),
+            None => self.policy.to_string(),
+        }
+    }
+}
+
+/// The frontier's non-periodic policy rows (the periodic row is reused
+/// from the staleness grid, which already ran those exact cells).
+fn frontier_policies() -> Vec<(&'static str, Option<f64>, SyncPolicyConfig)> {
+    let mut rows: Vec<(&'static str, Option<f64>, SyncPolicyConfig)> = Vec::new();
+    for &t in THRESHOLDS {
+        rows.push(("adaptive", Some(t), SyncPolicyConfig::adaptive(t)));
+    }
+    rows.push(("gossip", None, SyncPolicyConfig::gossip()));
+    rows
+}
+
+struct Sweep {
+    /// Periodic staleness grid, indexed `[sync][k]`.
+    grid: Vec<Vec<Cell>>,
+    /// Policy frontier cells, row-major: the grid's periodic row first
+    /// (shared cells, not re-run), then `frontier_policies() × FRONTIER_KS`.
+    frontier: Vec<Vec<Cell>>,
+    /// Centralized baseline mean (k = 1, consensus at every publish).
+    baseline_ms: f64,
+}
+
+fn sweep(scale: Scale) -> Sweep {
+    let grid: Vec<Vec<Cell>> = SYNCS
+        .iter()
+        .map(|&sync| {
+            KS.iter()
+                .map(|&k| Cell::from_result(&run_one(scale, k, sync), "periodic", None, k, sync))
+                .collect()
+        })
+        .collect();
+    let baseline_ms = grid[0][0].mean_ms;
+    // The frontier's periodic row is the grid's FRONTIER_SYNC row at the
+    // frontier's k values — identical configurations, so the cells are
+    // shared rather than simulated twice (and emitted once in the JSON).
+    let si = SYNCS
+        .iter()
+        .position(|&s| s == FRONTIER_SYNC)
+        .expect("FRONTIER_SYNC must be one of the swept intervals");
+    let periodic_row: Vec<Cell> = FRONTIER_KS
+        .iter()
+        .map(|&k| {
+            let ki = KS.iter().position(|&g| g == k).expect("frontier k must be a swept k");
+            grid[si][ki].clone()
+        })
+        .collect();
+    let mut frontier = vec![periodic_row];
+    frontier.extend(frontier_policies().into_iter().map(|(name, threshold, sp)| {
+        FRONTIER_KS
+            .iter()
+            .map(|&k| {
+                let r = run_policy(scale, k, FRONTIER_SYNC, sp);
+                Cell::from_result(&r, name, threshold, k, FRONTIER_SYNC)
+            })
+            .collect()
+    }));
+    Sweep { grid, frontier, baseline_ms }
+}
+
+fn render(s: &Sweep) -> String {
     let header: Vec<String> = KS.iter().map(|k| format!("k={k}")).collect();
     let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
 
     let mut out = String::new();
-    let rows: Vec<Row> = SYNCS
+    let rows: Vec<Row> = s
+        .grid
         .iter()
-        .zip(means.iter())
-        .map(|(sync, cells)| Row::new(format!("sync={sync}s"), cells.clone()))
+        .zip(SYNCS)
+        .map(|(cells, sync)| {
+            Row::new(format!("sync={sync}s"), cells.iter().map(|c| c.mean_ms).collect())
+        })
         .collect();
     out.push_str(&format_table(
         "MultiSched — mean response (ms), k schedulers × sync interval (volatile S2)",
@@ -68,24 +191,23 @@ pub fn run(scale: Scale) -> String {
         &rows,
         1,
     ));
-    let rows: Vec<Row> = SYNCS
+    let rows: Vec<Row> = s
+        .grid
         .iter()
-        .zip(p95s.iter())
-        .map(|(sync, cells)| Row::new(format!("sync={sync}s"), cells.clone()))
+        .zip(SYNCS)
+        .map(|(cells, sync)| {
+            Row::new(format!("sync={sync}s"), cells.iter().map(|c| c.p95_ms).collect())
+        })
         .collect();
-    out.push_str(&format_table(
-        "MultiSched — p95 response (ms)",
-        &header_refs,
-        &rows,
-        1,
-    ));
-    let rows: Vec<Row> = SYNCS
+    out.push_str(&format_table("MultiSched — p95 response (ms)", &header_refs, &rows, 1));
+    let rows: Vec<Row> = s
+        .grid
         .iter()
-        .zip(means.iter())
-        .map(|(sync, cells)| {
+        .zip(SYNCS)
+        .map(|(cells, sync)| {
             Row::new(
                 format!("sync={sync}s"),
-                cells.iter().map(|m| 100.0 * (m / baseline - 1.0)).collect(),
+                cells.iter().map(|c| 100.0 * (c.mean_ms / s.baseline_ms - 1.0)).collect(),
             )
         })
         .collect();
@@ -95,12 +217,100 @@ pub fn run(scale: Scale) -> String {
         &rows,
         1,
     ));
+
+    // The coordination/quality frontier: merges spent vs quality lost.
+    let fheader: Vec<String> = FRONTIER_KS.iter().map(|k| format!("k={k}")).collect();
+    let fheader_refs: Vec<&str> = fheader.iter().map(|s| s.as_str()).collect();
+    let rows: Vec<Row> = s
+        .frontier
+        .iter()
+        .map(|cells| {
+            Row::new(cells[0].label(), cells.iter().map(|c| c.merges as f64).collect())
+        })
+        .collect();
+    out.push_str(&format_table(
+        &format!("MultiSched — consensus merges performed (policy × k, sync={FRONTIER_SYNC}s)"),
+        &fheader_refs,
+        &rows,
+        0,
+    ));
+    let rows: Vec<Row> = s
+        .frontier
+        .iter()
+        .map(|cells| {
+            Row::new(
+                cells[0].label(),
+                cells.iter().map(|c| 100.0 * (c.mean_ms / s.baseline_ms - 1.0)).collect(),
+            )
+        })
+        .collect();
+    out.push_str(&format_table(
+        "MultiSched — frontier mean degradation vs baseline (%)",
+        &fheader_refs,
+        &rows,
+        1,
+    ));
     out.push_str(
         "Reading: k=1/sync=0 is the centralized baseline; cost of distributing the\n\
          learner shows in the k direction, cost of lazier consensus in the sync\n\
-         direction (stale estimates on a volatile cluster).\n",
+         direction (stale estimates on a volatile cluster). The frontier tables\n\
+         weigh the same quality axis against merges performed: adaptive should\n\
+         match periodic's response times with far fewer merges (it syncs on shock-\n\
+         induced divergence, idles on quiet stretches); gossip trades all-to-all\n\
+         epochs for O(k/2) pairwise merges per round.\n",
     );
     out
+}
+
+fn json_doc(s: &Sweep, scale: Scale) -> Json {
+    let cell_json = |c: &Cell| {
+        let mut m = BTreeMap::new();
+        m.insert("policy".into(), Json::Str(c.policy.into()));
+        m.insert("threshold".into(), c.threshold.map_or(Json::Null, Json::Num));
+        m.insert("k".into(), Json::Num(c.k as f64));
+        m.insert("sync_interval".into(), Json::Num(c.sync_interval));
+        m.insert("mean_ms".into(), Json::Num(c.mean_ms));
+        m.insert("p95_ms".into(), Json::Num(c.p95_ms));
+        m.insert("degradation_pct".into(), Json::Num(100.0 * (c.mean_ms / s.baseline_ms - 1.0)));
+        m.insert("merges".into(), Json::Num(c.merges as f64));
+        m.insert("sync_epochs".into(), Json::Num(c.epochs as f64));
+        m.insert("completed".into(), Json::Num(c.completed as f64));
+        Json::Obj(m)
+    };
+    // The frontier's periodic row is shared with the grid — skip it here
+    // so no (policy, k, sync_interval) key appears twice in the results.
+    let results: Vec<Json> =
+        s.grid.iter().chain(s.frontier.iter().skip(1)).flatten().map(cell_json).collect();
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Json::Str("multisched".into()));
+    top.insert(
+        "scale".into(),
+        Json::Str(if scale == Scale::Quick { "quick" } else { "full" }.into()),
+    );
+    top.insert("seed".into(), Json::Num(20200417.0));
+    top.insert("speeds".into(), Json::Str("s2".into()));
+    top.insert("load".into(), Json::Num(0.8));
+    top.insert("frontier_sync_interval".into(), Json::Num(FRONTIER_SYNC));
+    top.insert("baseline_mean_ms".into(), Json::Num(s.baseline_ms));
+    top.insert("results".into(), Json::Arr(results));
+    Json::Obj(top)
+}
+
+/// Render the sweep report, optionally writing the grid as JSON.
+pub fn run_with_json(scale: Scale, json_path: Option<&str>) -> Result<String, String> {
+    let s = sweep(scale);
+    let mut out = render(&s);
+    if let Some(path) = json_path {
+        let doc = crate::config::to_string(&json_doc(&s, scale));
+        std::fs::write(path, doc).map_err(|e| format!("write {path}: {e}"))?;
+        out.push_str(&format!("wrote {path}\n"));
+    }
+    Ok(out)
+}
+
+/// Render the sweep report.
+pub fn run(scale: Scale) -> String {
+    run_with_json(scale, None).expect("no json path, nothing can fail")
 }
 
 #[cfg(test)]
@@ -121,15 +331,78 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_cell_spends_fewer_merges_than_periodic() {
+        let periodic = run_one(Scale::Quick, 4, FRONTIER_SYNC);
+        let adaptive =
+            run_policy(Scale::Quick, 4, FRONTIER_SYNC, SyncPolicyConfig::adaptive(0.1));
+        assert!(adaptive.responses.count() > 500);
+        assert!(
+            adaptive.sync_merges < periodic.sync_merges,
+            "adaptive {} vs periodic {} merges",
+            adaptive.sync_merges,
+            periodic.sync_merges
+        );
+    }
+
+    #[test]
     fn sweep_report_renders_every_cell() {
         let report = run(Scale::Quick);
         assert!(report.contains("mean response"));
         assert!(report.contains("degradation"));
+        assert!(report.contains("merges performed"));
         for k in KS {
             assert!(report.contains(&format!("k={k}")));
         }
         for s in SYNCS {
             assert!(report.contains(&format!("sync={s}s")));
         }
+        for t in THRESHOLDS {
+            assert!(report.contains(&format!("adaptive:{t}")));
+        }
+        assert!(report.contains("gossip"));
+    }
+
+    #[test]
+    fn json_emission_is_parseable_and_complete() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("rosella_multisched_test.json");
+        let path = path.to_str().unwrap();
+        let report = run_with_json(Scale::Quick, Some(path)).unwrap();
+        assert!(report.contains("wrote "), "{report}");
+        let doc = std::fs::read_to_string(path).unwrap();
+        let back = crate::config::parse(&doc).expect("multisched json must round-trip");
+        let results = back.get("results").and_then(|r| r.as_arr()).expect("results array");
+        // Grid cells plus the non-periodic frontier rows (the frontier's
+        // periodic row is shared with the grid, emitted once).
+        let expect = KS.len() * SYNCS.len() + (THRESHOLDS.len() + 1) * FRONTIER_KS.len();
+        assert_eq!(results.len(), expect, "every swept cell must be emitted exactly once");
+        // No duplicate (policy, k, sync_interval) keys survive.
+        let keys: std::collections::BTreeSet<String> = results
+            .iter()
+            .map(|r| {
+                format!(
+                    "{}|{}|{}|{}",
+                    r.get("policy").and_then(Json::as_str).unwrap(),
+                    r.get("k").and_then(Json::as_f64).unwrap(),
+                    r.get("sync_interval").and_then(Json::as_f64).unwrap(),
+                    r.get("threshold").and_then(Json::as_f64).unwrap_or(-1.0),
+                )
+            })
+            .collect();
+        assert_eq!(keys.len(), results.len(), "duplicate sweep cells in the JSON");
+        assert!(back.get("baseline_mean_ms").and_then(Json::as_f64).unwrap() > 0.0);
+        // Every adaptive cell carries its threshold; CI's jq filter keys
+        // off these fields.
+        let adaptive: Vec<&Json> = results
+            .iter()
+            .filter(|r| r.get("policy").and_then(Json::as_str) == Some("adaptive"))
+            .collect();
+        assert_eq!(adaptive.len(), THRESHOLDS.len() * FRONTIER_KS.len());
+        for cell in adaptive {
+            assert!(cell.get("threshold").and_then(Json::as_f64).is_some());
+            assert!(cell.get("merges").and_then(Json::as_f64).is_some());
+            assert!(cell.get("degradation_pct").and_then(Json::as_f64).is_some());
+        }
+        let _ = std::fs::remove_file(path);
     }
 }

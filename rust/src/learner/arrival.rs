@@ -4,6 +4,14 @@
 //! inter-arrival time over the last `S` task arrivals. `S` is the
 //! responsiveness/accuracy knob: large `S` → accurate but slow to react,
 //! small `S` → noisy but fast (the paper discusses exactly this tradeoff).
+//!
+//! In a distributed plane (§5) each scheduler runs its own estimator over
+//! only the arrivals *it* routed, so its λ̂ is a per-scheduler *share* of
+//! the load. Shares are exchanged through estimate-sync consensus
+//! ([`crate::learner::SyncPayload`] carries one per scheduler;
+//! [`crate::learner::LambdaShares`] tracks them under gossip) and summed to
+//! the λ̂_global that drives the learner window and the §5 benchmark
+//! throttle — correct even when arrival routing is skewed.
 
 use crate::stats::SlidingMean;
 

@@ -57,6 +57,13 @@ impl FakeJobDispatcher {
     }
 
     /// Current dispatch rate `c0 · (μ̄ − λ̂) / k` in benchmark tasks/sec.
+    ///
+    /// `lambda_hat` must be the *global* arrival estimate. In a distributed
+    /// plane (§5) that is the sum of the per-scheduler λ̂ shares exchanged
+    /// through estimate-sync consensus
+    /// ([`crate::learner::SyncPayload::lambda_hat`] /
+    /// [`crate::learner::LambdaShares`]) — not `k` times the caller's local
+    /// estimate, which is only correct when arrivals split evenly.
     pub fn rate(&self, lambda_hat: f64) -> f64 {
         if !self.enabled {
             return 0.0;
@@ -118,6 +125,24 @@ mod tests {
         let per4 = FakeJobDispatcher::new_sharded(0.1, 100.0, true, 4);
         let floor = FakeJobDispatcher::new(0.1, 100.0, true).rate(200.0);
         assert!((per4.rate(200.0) * 4.0 - floor).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exchanged_lambda_shares_fix_the_probing_budget_under_skew() {
+        use crate::learner::LambdaShares;
+        // Skewed arrival routing: scheduler 0 receives 9 of the 12 tasks/s.
+        // Every dispatcher must throttle against the exchanged λ̂_global,
+        // not extrapolate its own share to an assumed even split.
+        let mut shares = LambdaShares::new(4);
+        for (i, l) in [9.0, 1.0, 1.0, 1.0].into_iter().enumerate() {
+            shares.learn(i, l, 0.0);
+        }
+        let d = FakeJobDispatcher::new_sharded(0.1, 150.0, true, 4);
+        let correct = d.rate(shares.total());
+        assert!((correct - 0.1 * (150.0 - 12.0) / 4.0).abs() < 1e-12);
+        // The even-split extrapolations bracket (and miss) the budget.
+        assert!(d.rate(4.0 * 9.0) < correct, "hot scheduler would under-probe");
+        assert!(d.rate(4.0 * 1.0) > correct, "cold schedulers would over-probe");
     }
 
     #[test]

@@ -15,7 +15,11 @@ pub mod sync;
 pub use arrival::ArrivalEstimator;
 pub use dispatcher::FakeJobDispatcher;
 pub use perf::{relative_error_of, LearnerParams, PerfLearner};
-pub use sync::{merge_estimates, merge_estimates_into, throttled_rate, EstimateView};
+pub use sync::{
+    divergence_of, merge_estimates, merge_estimates_into, merge_payloads_into, throttled_rate,
+    EstimateView, LambdaShares, SyncDecision, SyncKind, SyncPayload, SyncPolicy,
+    SyncPolicyConfig,
+};
 
 /// Bundled learner configuration used by the engine and the live
 /// coordinator.
@@ -48,6 +52,11 @@ pub struct LearnerConfig {
     /// policy sees estimates up to `sync_interval` stale — the knob the
     /// `multisched` experiment sweeps.
     pub sync_interval: f64,
+    /// *How* consensus epochs are scheduled and shaped on that interval:
+    /// fixed-timer all-to-all ([`SyncKind::Periodic`], the default),
+    /// divergence-triggered ([`SyncKind::Adaptive`]), or pairwise gossip
+    /// ([`SyncKind::Gossip`]).
+    pub sync: SyncPolicyConfig,
 }
 
 impl Default for LearnerConfig {
@@ -62,6 +71,7 @@ impl Default for LearnerConfig {
             publish_interval: 0.1,
             schedulers: 1,
             sync_interval: 0.0,
+            sync: SyncPolicyConfig::periodic(),
         }
     }
 }
@@ -89,9 +99,11 @@ mod tests {
         assert!(c.enabled && c.fake_jobs && !c.oracle);
         assert_eq!(c.c0, 0.1);
         assert_eq!(c.window_c, 10.0);
-        // Centralized single-learner topology by default.
+        // Centralized single-learner topology by default, periodic sync —
+        // the bit-compatible pre-policy behavior.
         assert_eq!(c.schedulers, 1);
         assert_eq!(c.sync_interval, 0.0);
+        assert_eq!(c.sync.kind, SyncKind::Periodic);
     }
 
     #[test]

@@ -302,6 +302,14 @@ impl PerfLearner {
         relative_error_of(&self.mu_hat, true_speeds, mu_star_abs)
     }
 
+    /// Relative divergence of this learner's current local estimates from
+    /// the last adopted consensus — the adaptive sync policy's merge
+    /// trigger ([`crate::learner::SyncKind::Adaptive`]): a scheduler
+    /// requests a merge only when this crosses the configured threshold.
+    pub fn divergence_from(&self, consensus: &[f64]) -> f64 {
+        crate::learner::sync::divergence_of(&self.mu_hat, consensus)
+    }
+
     /// Export the raw ring buffers as dense matrices for the PJRT learner
     /// kernel: `(durations, demands, ages, valid_counts)`, each row one
     /// worker, columns newest-first, padded with zeros. `k` columns.
@@ -560,6 +568,24 @@ mod tests {
     fn adopt_rejects_wrong_length() {
         let mut l = learner(2);
         l.adopt(&[1.0]);
+    }
+
+    #[test]
+    fn divergence_from_tracks_drift_off_the_adopted_consensus() {
+        let mut l = learner(2);
+        l.adopt(&[2.0, 1.0]);
+        // Freshly adopted: zero divergence by construction.
+        assert_eq!(l.divergence_from(&[2.0, 1.0]), 0.0);
+        // Local samples re-derive worker 0 at ≈ (1−ε)·1.0 ≈ 0.94, a ~53%
+        // relative drift off the adopted 2.0; worker 1 stays put.
+        let mut t = 0.0;
+        for _ in 0..200 {
+            t += 0.1;
+            l.on_completion(0, t, 0.1, 0.1);
+        }
+        l.publish(t, 10.0);
+        let d = l.divergence_from(&[2.0, 1.0]);
+        assert!(d > 0.2, "drifted estimate must register divergence: {d}");
     }
 
     #[test]

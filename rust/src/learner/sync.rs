@@ -19,6 +19,37 @@
 //! the single-scheduler design (§5: "excessive amount of benchmark jobs
 //! ... could be sent"; "implementing throttling ensures the benchmark jobs
 //! will not adversarially affect the system").
+//!
+//! ## Sync policies
+//!
+//! The paper fixes *what* is exchanged but leaves *when* and *with whom*
+//! open ("regularly"). [`SyncPolicy`] makes that axis pluggable; the same
+//! policy object drives both the threaded plane's sync thread and the
+//! deterministic DES engine:
+//!
+//! * [`SyncKind::Periodic`] — a fixed-timer all-to-all epoch (the original
+//!   behavior, bit-compatible);
+//! * [`SyncKind::Adaptive`] — state is exchanged only when it buys
+//!   scheduling quality: a scheduler requests a merge when its local
+//!   estimates diverge from the last adopted consensus beyond a
+//!   relative-error threshold ([`divergence_of`]), bounded below by a
+//!   minimum merge spacing and above by a staleness deadline that forces a
+//!   merge;
+//! * [`SyncKind::Gossip`] — each round a deterministic-RNG pairing merges
+//!   view *pairs* instead of running an all-to-all epoch; information
+//!   spreads epidemically, reaching every scheduler in O(log k) rounds
+//!   (the round counter [`SyncPolicy::round`] is the proof handle the
+//!   convergence test below pins).
+//!
+//! The exchanged payload is a [`SyncPayload`]: the per-worker μ̂ views plus
+//! the scheduler's *local* arrival-rate estimate λ̂ₛ. Summing the exchanged
+//! shares gives λ̂_global, so each dispatcher throttles to
+//! `c0(μ̄ − λ̂_global)/k` even when arrival routing is skewed — a scheduler
+//! receiving 3× its fair share no longer assumes everyone else sees the
+//! same load ([`LambdaShares`] carries the shares under gossip, where no
+//! single epoch sees all of them).
+
+use crate::stats::Rng;
 
 /// One scheduler's view of one worker at sync time.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -29,13 +60,31 @@ pub struct EstimateView {
     pub samples: u64,
 }
 
+/// One scheduler's full sync payload: its per-worker μ̂ views plus its
+/// local arrival-rate estimate λ̂ₛ (tasks/second). Summing the exchanged
+/// `lambda_hat` shares over schedulers yields λ̂_global, the §5 throttle's
+/// input — computed from *exchanged* estimates, not an assumed even split.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SyncPayload {
+    /// Per-worker estimate views.
+    pub views: Vec<EstimateView>,
+    /// This scheduler's local arrival-rate estimate λ̂ₛ (tasks/second).
+    pub lambda_hat: f64,
+}
+
+impl AsRef<[EstimateView]> for SyncPayload {
+    fn as_ref(&self) -> &[EstimateView] {
+        &self.views
+    }
+}
+
 /// Merge `k` schedulers' estimate vectors into the consensus vector.
 ///
 /// `views[s][w]` is scheduler `s`'s view of worker `w`; `prior` fills
 /// workers nobody has sampled. Panics if the views disagree on the worker
 /// count or are empty.
-pub fn merge_estimates(views: &[Vec<EstimateView>], prior: f64) -> Vec<f64> {
-    let mut out = vec![0.0; views.first().map_or(0, |v| v.len())];
+pub fn merge_estimates<V: AsRef<[EstimateView]>>(views: &[V], prior: f64) -> Vec<f64> {
+    let mut out = vec![0.0; views.first().map_or(0, |v| v.as_ref().len())];
     merge_estimates_into(views, prior, &mut out);
     out
 }
@@ -43,16 +92,29 @@ pub fn merge_estimates(views: &[Vec<EstimateView>], prior: f64) -> Vec<f64> {
 /// [`merge_estimates`] into a caller-owned buffer — the allocation-free
 /// form used on the recurring sync paths (the plane's sync thread and the
 /// DES engine's sync event), where consensus runs at every epoch.
-pub fn merge_estimates_into(views: &[Vec<EstimateView>], prior: f64, out: &mut [f64]) {
+///
+/// A single view is its own consensus and is copied bit-exactly: the
+/// weighted form would compute `(μ·s)/s`, which can drift one ulp off `μ`.
+pub fn merge_estimates_into<V: AsRef<[EstimateView]>>(views: &[V], prior: f64, out: &mut [f64]) {
     assert!(!views.is_empty(), "no schedulers to merge");
-    let n = views[0].len();
-    assert!(views.iter().all(|v| v.len() == n), "worker-count mismatch across schedulers");
+    let n = views[0].as_ref().len();
+    assert!(
+        views.iter().all(|v| v.as_ref().len() == n),
+        "worker-count mismatch across schedulers"
+    );
     assert_eq!(out.len(), n, "consensus buffer length mismatch");
+    if views.len() == 1 {
+        // Trivial partition fast path: ulp-identity with the lone view.
+        for (slot, v) in out.iter_mut().zip(views[0].as_ref()) {
+            *slot = if v.samples == 0 { prior } else { v.mu_hat };
+        }
+        return;
+    }
     for (w, slot) in out.iter_mut().enumerate() {
         let mut weighted = 0.0;
         let mut weight = 0u64;
         for view in views {
-            let v = view[w];
+            let v = view.as_ref()[w];
             if v.samples > 0 {
                 weighted += v.mu_hat * v.samples as f64;
                 weight += v.samples;
@@ -62,11 +124,363 @@ pub fn merge_estimates_into(views: &[Vec<EstimateView>], prior: f64, out: &mut [
     }
 }
 
+/// Merge full [`SyncPayload`]s: the μ̂ views go through
+/// [`merge_estimates_into`]; the returned value is λ̂_global — the sum of
+/// the exchanged per-scheduler arrival shares.
+pub fn merge_payloads_into(payloads: &[SyncPayload], prior: f64, out: &mut [f64]) -> f64 {
+    merge_estimates_into(payloads, prior, out);
+    payloads.iter().map(|p| p.lambda_hat).sum()
+}
+
 /// Per-scheduler benchmark dispatch rate under `k` schedulers: the
 /// aggregate probing budget `c0(μ̄ − λ̂)` is split evenly (throttling).
+/// `lambda_hat` must be the *global* arrival estimate — under skewed
+/// arrival routing that is the sum of exchanged shares, not `k` times any
+/// one scheduler's local estimate.
 pub fn throttled_rate(c0: f64, mu_bar: f64, lambda_hat: f64, schedulers: usize) -> f64 {
     assert!(schedulers >= 1);
     (c0 * (mu_bar - lambda_hat)).max(0.0) / schedulers as f64
+}
+
+/// Relative divergence of a scheduler's local estimates from the last
+/// adopted consensus — the adaptive policy's merge trigger. Treats the
+/// consensus as truth ([`crate::learner::relative_error_of`]); workers the
+/// consensus discarded (μ̂ = 0) are excluded.
+pub fn divergence_of(local_mu: &[f64], consensus: &[f64]) -> f64 {
+    crate::learner::perf::relative_error_of(local_mu, consensus, 0.0)
+}
+
+/// Which strategy schedules and shapes estimate-sync consensus.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncKind {
+    /// Fixed-timer all-to-all epochs (the original behavior).
+    Periodic,
+    /// Divergence-triggered all-to-all merges, bounded by min/max spacing.
+    Adaptive,
+    /// Deterministic-RNG pairwise merges, one pairing per round.
+    Gossip,
+}
+
+impl SyncKind {
+    /// CLI / JSON name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SyncKind::Periodic => "periodic",
+            SyncKind::Adaptive => "adaptive",
+            SyncKind::Gossip => "gossip",
+        }
+    }
+
+    /// Parse the CLI / JSON spelling.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "periodic" => Ok(SyncKind::Periodic),
+            "adaptive" => Ok(SyncKind::Adaptive),
+            "gossip" => Ok(SyncKind::Gossip),
+            other => Err(format!("unknown sync policy '{other}' (periodic | adaptive | gossip)")),
+        }
+    }
+}
+
+/// Configuration of a [`SyncPolicy`]. The epoch interval itself stays where
+/// the host keeps it (`LearnerConfig::sync_interval` /
+/// `PlaneConfig::sync_interval`); this struct carries the strategy and its
+/// knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SyncPolicyConfig {
+    /// Strategy.
+    pub kind: SyncKind,
+    /// Adaptive: relative-error divergence beyond which a scheduler
+    /// requests a merge.
+    pub threshold: f64,
+    /// Adaptive: merges never happen closer together than this; it is also
+    /// the divergence-check cadence (0 = use the sync interval).
+    pub min_interval: f64,
+    /// Adaptive: a merge is forced once this much time passed since the
+    /// last one, diverged or not (0 = 10 × the sync interval).
+    pub max_interval: f64,
+}
+
+impl Default for SyncPolicyConfig {
+    fn default() -> Self {
+        Self::periodic()
+    }
+}
+
+impl SyncPolicyConfig {
+    /// The original fixed-timer all-to-all behavior.
+    pub fn periodic() -> Self {
+        Self { kind: SyncKind::Periodic, threshold: 0.1, min_interval: 0.0, max_interval: 0.0 }
+    }
+
+    /// Divergence-triggered sync with the given relative-error threshold.
+    pub fn adaptive(threshold: f64) -> Self {
+        Self { kind: SyncKind::Adaptive, threshold, ..Self::periodic() }
+    }
+
+    /// Deterministic pairwise gossip rounds.
+    pub fn gossip() -> Self {
+        Self { kind: SyncKind::Gossip, ..Self::periodic() }
+    }
+
+    /// Resolved minimum merge spacing / adaptive check cadence.
+    pub fn resolved_min(&self, sync_interval: f64) -> f64 {
+        if self.min_interval > 0.0 {
+            self.min_interval
+        } else {
+            sync_interval
+        }
+    }
+
+    /// Resolved staleness deadline forcing an adaptive merge.
+    pub fn resolved_max(&self, sync_interval: f64) -> f64 {
+        if self.max_interval > 0.0 {
+            self.max_interval
+        } else {
+            sync_interval * 10.0
+        }
+    }
+
+    /// Validate against the host's sync interval (cross-field constraints).
+    pub fn validate(&self, sync_interval: f64) -> Result<(), String> {
+        if !(self.threshold > 0.0 && self.threshold.is_finite()) {
+            return Err("sync threshold must be positive and finite".into());
+        }
+        if !(self.min_interval >= 0.0 && self.min_interval.is_finite()) {
+            return Err("sync min_interval must be finite and non-negative".into());
+        }
+        if !(self.max_interval >= 0.0 && self.max_interval.is_finite()) {
+            return Err("sync max_interval must be finite and non-negative".into());
+        }
+        if self.kind != SyncKind::Periodic && !(sync_interval > 0.0 && sync_interval.is_finite())
+        {
+            return Err(format!(
+                "{} sync needs a positive finite sync interval (periodic alone may fuse \
+                 consensus into every publish with interval 0)",
+                self.kind.name()
+            ));
+        }
+        if self.kind == SyncKind::Adaptive
+            && self.resolved_min(sync_interval) > self.resolved_max(sync_interval)
+        {
+            return Err("adaptive sync min_interval exceeds max_interval".into());
+        }
+        Ok(())
+    }
+}
+
+/// What a sync epoch should do, as decided by a [`SyncPolicy`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SyncDecision {
+    /// Exchange nothing this epoch.
+    Skip,
+    /// All-to-all: merge every scheduler's view into one consensus.
+    MergeAll,
+    /// Gossip: merge exactly these disjoint scheduler pairs.
+    MergePairs(Vec<(usize, usize)>),
+}
+
+/// The pluggable sync strategy: one state machine shared by the threaded
+/// plane's sync thread and the deterministic DES engine. The host fires a
+/// *check epoch* every [`SyncPolicy::check_interval`] seconds and asks
+/// [`SyncPolicy::on_epoch`] what (if anything) to exchange.
+#[derive(Debug)]
+pub struct SyncPolicy {
+    kind: SyncKind,
+    threshold: f64,
+    min_interval: f64,
+    max_interval: f64,
+    check_interval: f64,
+    /// Deterministic pairing stream (gossip only; seeded by the host so
+    /// simulator runs stay bit-reproducible).
+    rng: Rng,
+    perm: Vec<usize>,
+    last_merge: f64,
+    round: u64,
+    epochs: u64,
+    merges: u64,
+}
+
+impl SyncPolicy {
+    /// Build a policy for `schedulers` schedulers syncing on
+    /// `sync_interval`. Panics on an invalid configuration (hosts with a
+    /// fallible surface run [`SyncPolicyConfig::validate`] first).
+    pub fn new(cfg: &SyncPolicyConfig, sync_interval: f64, schedulers: usize, seed: u64) -> Self {
+        if let Err(e) = cfg.validate(sync_interval) {
+            panic!("invalid sync policy: {e}");
+        }
+        assert!(schedulers >= 1);
+        let min_interval = cfg.resolved_min(sync_interval);
+        let max_interval = cfg.resolved_max(sync_interval);
+        Self {
+            kind: cfg.kind,
+            threshold: cfg.threshold,
+            min_interval,
+            max_interval,
+            check_interval: match cfg.kind {
+                SyncKind::Adaptive => min_interval,
+                _ => sync_interval,
+            },
+            rng: Rng::new(seed),
+            perm: (0..schedulers).collect(),
+            last_merge: 0.0,
+            round: 0,
+            epochs: 0,
+            merges: 0,
+        }
+    }
+
+    /// Strategy.
+    pub fn kind(&self) -> SyncKind {
+        self.kind
+    }
+
+    /// Adaptive divergence threshold.
+    pub fn threshold(&self) -> f64 {
+        self.threshold
+    }
+
+    /// Cadence at which the host should fire check epochs (seconds). The
+    /// sync interval for periodic/gossip, the resolved minimum spacing for
+    /// adaptive.
+    pub fn check_interval(&self) -> f64 {
+        self.check_interval
+    }
+
+    /// Gossip rounds completed so far.
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    /// Check epochs evaluated so far.
+    pub fn epochs(&self) -> u64 {
+        self.epochs
+    }
+
+    /// Merge operations performed so far (an all-to-all epoch counts one,
+    /// every gossip pair counts one) — the coordination-cost counter the
+    /// multisched frontier reports.
+    pub fn merges(&self) -> u64 {
+        self.merges
+    }
+
+    /// One check epoch at time `now`. `diverged` reports whether any
+    /// scheduler's local view drifted beyond [`Self::threshold`] from the
+    /// last adopted consensus (only consulted by the adaptive strategy;
+    /// hosts compute it with [`divergence_of`] or collect shard-side merge
+    /// requests).
+    pub fn on_epoch(&mut self, now: f64, diverged: bool) -> SyncDecision {
+        self.epochs += 1;
+        match self.kind {
+            SyncKind::Periodic => {
+                self.last_merge = now;
+                self.merges += 1;
+                SyncDecision::MergeAll
+            }
+            SyncKind::Adaptive => {
+                let since = now - self.last_merge;
+                if (diverged && since >= self.min_interval - 1e-12) || since >= self.max_interval {
+                    self.last_merge = now;
+                    self.merges += 1;
+                    SyncDecision::MergeAll
+                } else {
+                    SyncDecision::Skip
+                }
+            }
+            SyncKind::Gossip => {
+                let pairs = self.draw_pairing();
+                self.last_merge = now;
+                self.round += 1;
+                if pairs.is_empty() {
+                    // A lone scheduler has nobody to pair with: its own
+                    // view *is* the consensus. Degrade to an all-to-all
+                    // epoch so a k=1 run still publishes instead of
+                    // silently exchanging nothing.
+                    self.merges += 1;
+                    return SyncDecision::MergeAll;
+                }
+                self.merges += pairs.len() as u64;
+                SyncDecision::MergePairs(pairs)
+            }
+        }
+    }
+
+    /// One synchronous gossip pairing: a uniform random perfect matching of
+    /// the schedulers (⌊k/2⌋ disjoint pairs; with odd `k` one scheduler
+    /// sits the round out).
+    fn draw_pairing(&mut self) -> Vec<(usize, usize)> {
+        self.rng.shuffle(&mut self.perm);
+        self.perm.chunks_exact(2).map(|c| (c[0], c[1])).collect()
+    }
+}
+
+/// One scheduler's knowledge of every scheduler's λ̂ share, aged by when
+/// each entry was last heard — the arrival half of the gossip payload.
+/// All-to-all merges refresh every entry at once; a pairwise merge
+/// exchanges the fresher entry per scheduler, so λ̂_global estimates
+/// converge epidemically alongside the μ̂ views.
+#[derive(Debug, Clone)]
+pub struct LambdaShares {
+    vals: Vec<f64>,
+    heard: Vec<f64>,
+}
+
+impl LambdaShares {
+    /// No knowledge yet: every share 0 (λ̂_global starts at the cold-start
+    /// value the dispatcher already tolerates).
+    pub fn new(schedulers: usize) -> Self {
+        assert!(schedulers >= 1);
+        Self { vals: vec![0.0; schedulers], heard: vec![f64::NEG_INFINITY; schedulers] }
+    }
+
+    /// Number of schedulers tracked.
+    pub fn k(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Record scheduler `who`'s share as observed at time `now`.
+    pub fn learn(&mut self, who: usize, lambda_hat: f64, now: f64) {
+        self.vals[who] = lambda_hat;
+        self.heard[who] = now;
+    }
+
+    /// When scheduler `who`'s share was last heard (−∞ = never).
+    pub fn heard_at(&self, who: usize) -> f64 {
+        self.heard[who]
+    }
+
+    /// Pairwise exchange: each side keeps the fresher entry per scheduler.
+    pub fn exchange(a: &mut LambdaShares, b: &mut LambdaShares) {
+        assert_eq!(a.vals.len(), b.vals.len(), "scheduler-count mismatch");
+        for i in 0..a.vals.len() {
+            if a.heard[i] < b.heard[i] {
+                a.vals[i] = b.vals[i];
+                a.heard[i] = b.heard[i];
+            } else if b.heard[i] < a.heard[i] {
+                b.vals[i] = a.vals[i];
+                b.heard[i] = a.heard[i];
+            }
+        }
+    }
+
+    /// This scheduler's current estimate of λ̂_global: the sum of the
+    /// freshest shares it knows.
+    pub fn total(&self) -> f64 {
+        self.vals.iter().sum()
+    }
+
+    /// λ̂_global extrapolated over coverage: the known-share sum scaled by
+    /// `k / heard`, so early gossip rounds (2 of k shares heard) estimate
+    /// the full load instead of a badly incomplete partial sum. `None`
+    /// when no share has been heard yet (callers fall back to their
+    /// bootstrap). Converges to [`Self::total`] as coverage completes.
+    pub fn extrapolated_total(&self) -> Option<f64> {
+        let heard = self.heard.iter().filter(|&&h| h > f64::NEG_INFINITY).count();
+        if heard == 0 {
+            return None;
+        }
+        Some(self.total() * self.vals.len() as f64 / heard as f64)
+    }
 }
 
 #[cfg(test)]
@@ -120,6 +534,33 @@ mod tests {
     }
 
     #[test]
+    #[should_panic]
+    fn empty_view_set_rejected() {
+        // Zero schedulers is a wiring bug, not a degenerate consensus.
+        let views: Vec<Vec<EstimateView>> = Vec::new();
+        merge_estimates(&views, 1.0);
+    }
+
+    #[test]
+    fn all_zero_sample_weights_merge_to_the_prior_everywhere() {
+        // Every scheduler knows nothing about any worker: the consensus is
+        // the prior for the whole cluster, not NaN from a 0/0 division.
+        let views = vec![vec![v(3.0, 0), v(0.2, 0), v(9.9, 0)]; 4];
+        let merged = merge_estimates(&views, 0.55);
+        assert_eq!(merged, vec![0.55; 3]);
+    }
+
+    #[test]
+    fn single_view_fast_path_is_ulp_identical() {
+        // A lone scheduler's consensus is its own view, bit-for-bit: the
+        // weighted form would compute (μ·s)/s, which can drift one ulp.
+        let mu = 0.1 + 0.2; // 0.30000000000000004 — a classic ulp trap
+        let merged = merge_estimates(&[vec![v(mu, 7), v(0.0, 0)]], 1.25);
+        assert_eq!(merged[0].to_bits(), mu.to_bits(), "single view must copy exactly");
+        assert_eq!(merged[1], 1.25, "unsampled worker still takes the prior");
+    }
+
+    #[test]
     fn heavy_sampler_dominates_merge() {
         // 40 in-window samples must dominate 2: the consensus lands next to
         // the well-informed scheduler's estimate.
@@ -145,6 +586,21 @@ mod tests {
     }
 
     #[test]
+    fn payload_merge_sums_exchanged_lambda_shares() {
+        let payloads = vec![
+            SyncPayload { views: vec![v(2.0, 40)], lambda_hat: 9.0 },
+            SyncPayload { views: vec![v(1.0, 10)], lambda_hat: 1.0 },
+            SyncPayload { views: vec![v(0.0, 0)], lambda_hat: 2.0 },
+        ];
+        let mut out = vec![0.0; 1];
+        let lambda = merge_payloads_into(&payloads, 1.0, &mut out);
+        assert!((out[0] - 1.8).abs() < 1e-12, "{out:?}");
+        // λ̂_global is the *sum of shares*: under the 9/1/2 skew the even-
+        // split assumption (k × any local share) would be wildly wrong.
+        assert_eq!(lambda, 12.0);
+    }
+
+    #[test]
     fn throttled_rate_monotone_in_scheduler_count() {
         // Per-scheduler rate shrinks as k grows while the aggregate budget
         // k · c0(μ̄ − λ̂)/k stays pinned to the single-scheduler budget.
@@ -166,5 +622,260 @@ mod tests {
         assert!((per_of_three - 1.0).abs() < 1e-12);
         // Overload clamps to zero rather than going negative.
         assert_eq!(throttled_rate(0.1, 100.0, 200.0, 2), 0.0);
+    }
+
+    #[test]
+    fn sync_kind_parse_round_trips() {
+        for kind in [SyncKind::Periodic, SyncKind::Adaptive, SyncKind::Gossip] {
+            assert_eq!(SyncKind::parse(kind.name()), Ok(kind));
+        }
+        assert!(SyncKind::parse("nonsense").is_err());
+    }
+
+    #[test]
+    fn policy_config_validation() {
+        // Periodic tolerates interval 0 (consensus fused into publish).
+        assert!(SyncPolicyConfig::periodic().validate(0.0).is_ok());
+        assert!(SyncPolicyConfig::periodic().validate(0.5).is_ok());
+        // Adaptive/gossip need a real epoch cadence.
+        assert!(SyncPolicyConfig::adaptive(0.1).validate(0.0).is_err());
+        assert!(SyncPolicyConfig::gossip().validate(0.0).is_err());
+        assert!(SyncPolicyConfig::adaptive(0.1).validate(f64::INFINITY).is_err());
+        assert!(SyncPolicyConfig::adaptive(0.1).validate(1.0).is_ok());
+        assert!(SyncPolicyConfig::gossip().validate(1.0).is_ok());
+        // Bad thresholds and inverted bounds are rejected.
+        assert!(SyncPolicyConfig::adaptive(0.0).validate(1.0).is_err());
+        assert!(SyncPolicyConfig::adaptive(f64::NAN).validate(1.0).is_err());
+        let inverted = SyncPolicyConfig {
+            min_interval: 5.0,
+            max_interval: 1.0,
+            ..SyncPolicyConfig::adaptive(0.1)
+        };
+        assert!(inverted.validate(1.0).is_err());
+    }
+
+    #[test]
+    fn periodic_policy_merges_every_epoch() {
+        let mut p = SyncPolicy::new(&SyncPolicyConfig::periodic(), 0.5, 4, 1);
+        assert_eq!(p.check_interval(), 0.5);
+        for i in 1..=10 {
+            assert_eq!(p.on_epoch(i as f64 * 0.5, false), SyncDecision::MergeAll);
+        }
+        assert_eq!(p.epochs(), 10);
+        assert_eq!(p.merges(), 10);
+    }
+
+    #[test]
+    fn adaptive_skips_until_diverged_then_merges() {
+        let cfg = SyncPolicyConfig { max_interval: 100.0, ..SyncPolicyConfig::adaptive(0.1) };
+        let mut p = SyncPolicy::new(&cfg, 1.0, 4, 1);
+        for i in 1..=5 {
+            assert_eq!(p.on_epoch(i as f64, false), SyncDecision::Skip);
+        }
+        assert_eq!(p.on_epoch(6.0, true), SyncDecision::MergeAll);
+        assert_eq!(p.merges(), 1);
+        // Freshly merged: even a diverged report within min_interval skips.
+        assert_eq!(p.on_epoch(6.5, true), SyncDecision::Skip);
+        assert_eq!(p.on_epoch(7.5, true), SyncDecision::MergeAll);
+        assert_eq!(p.merges(), 2);
+    }
+
+    #[test]
+    fn adaptive_staleness_deadline_forces_a_merge() {
+        let cfg = SyncPolicyConfig { max_interval: 3.0, ..SyncPolicyConfig::adaptive(0.1) };
+        let mut p = SyncPolicy::new(&cfg, 1.0, 4, 1);
+        assert_eq!(p.on_epoch(1.0, false), SyncDecision::Skip);
+        assert_eq!(p.on_epoch(2.0, false), SyncDecision::Skip);
+        // 3 s since the last merge: forced, divergence or not.
+        assert_eq!(p.on_epoch(3.0, false), SyncDecision::MergeAll);
+        assert_eq!(p.merges(), 1);
+    }
+
+    #[test]
+    fn adaptive_property_no_merge_below_threshold() {
+        // Property: as long as every scheduler's view stays within the
+        // relative-error threshold of the consensus, divergence_of stays
+        // below the threshold and the policy never merges before the
+        // staleness deadline — across many perturbation patterns.
+        let threshold = 0.1;
+        let consensus = vec![2.0, 0.5, 1.0, 0.0, 3.5]; // one discarded worker
+        let mut rng = Rng::new(20200417);
+        for trial in 0..200 {
+            let local: Vec<f64> = consensus
+                .iter()
+                .map(|&c| {
+                    // Relative perturbation strictly inside ±threshold;
+                    // discarded workers may report anything (excluded).
+                    let r = (rng.next_f64() * 2.0 - 1.0) * (threshold * 0.99);
+                    if c == 0.0 {
+                        rng.next_f64() * 5.0
+                    } else {
+                        c * (1.0 + r)
+                    }
+                })
+                .collect();
+            let d = divergence_of(&local, &consensus);
+            assert!(d < threshold, "trial {trial}: divergence {d} crossed the threshold");
+            let cfg =
+                SyncPolicyConfig { max_interval: 1e9, ..SyncPolicyConfig::adaptive(threshold) };
+            let mut p = SyncPolicy::new(&cfg, 1.0, 4, trial);
+            for i in 1..=20 {
+                assert_eq!(
+                    p.on_epoch(i as f64, d > p.threshold()),
+                    SyncDecision::Skip,
+                    "trial {trial}: merged below threshold"
+                );
+            }
+            assert_eq!(p.merges(), 0);
+        }
+    }
+
+    #[test]
+    fn divergence_crossing_threshold_triggers() {
+        let consensus = vec![2.0, 1.0];
+        let local = vec![2.0 * 1.4, 1.0]; // worker 0 drifted 40%
+        let d = divergence_of(&local, &consensus);
+        assert!((d - 0.2).abs() < 1e-12, "mean relative drift: {d}");
+        let mut p = SyncPolicy::new(&SyncPolicyConfig::adaptive(0.1), 1.0, 2, 7);
+        assert_eq!(p.on_epoch(1.0, d > p.threshold()), SyncDecision::MergeAll);
+    }
+
+    #[test]
+    fn gossip_pairings_are_disjoint_and_deterministic() {
+        let draw = |seed: u64, rounds: usize| -> Vec<Vec<(usize, usize)>> {
+            let mut p = SyncPolicy::new(&SyncPolicyConfig::gossip(), 1.0, 8, seed);
+            (0..rounds)
+                .map(|i| match p.on_epoch(i as f64 + 1.0, false) {
+                    SyncDecision::MergePairs(pairs) => pairs,
+                    other => panic!("gossip produced {other:?}"),
+                })
+                .collect()
+        };
+        let a = draw(42, 10);
+        let b = draw(42, 10);
+        assert_eq!(a, b, "same seed must draw the same pairing schedule");
+        assert_ne!(a, draw(43, 10), "different seeds must differ");
+        for pairs in &a {
+            assert_eq!(pairs.len(), 4, "8 schedulers form 4 disjoint pairs");
+            let mut seen = std::collections::BTreeSet::new();
+            for &(x, y) in pairs {
+                assert!(x != y && x < 8 && y < 8);
+                assert!(seen.insert(x) && seen.insert(y), "pairing reused a scheduler");
+            }
+        }
+    }
+
+    #[test]
+    fn gossip_with_one_scheduler_degrades_to_merge_all() {
+        // Nobody to pair with must not mean "never publish": a lone
+        // scheduler's round is an all-to-all epoch over its own view.
+        let mut p = SyncPolicy::new(&SyncPolicyConfig::gossip(), 1.0, 1, 9);
+        for i in 1..=3 {
+            assert_eq!(p.on_epoch(i as f64, false), SyncDecision::MergeAll);
+        }
+        assert_eq!(p.merges(), 3);
+    }
+
+    #[test]
+    fn gossip_odd_scheduler_sits_out() {
+        let mut p = SyncPolicy::new(&SyncPolicyConfig::gossip(), 1.0, 5, 3);
+        match p.on_epoch(1.0, false) {
+            SyncDecision::MergePairs(pairs) => assert_eq!(pairs.len(), 2),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(p.round(), 1);
+        assert_eq!(p.merges(), 2);
+    }
+
+    #[test]
+    fn gossip_spreads_knowledge_in_logarithmic_rounds() {
+        // Epidemic-convergence pin: model each scheduler's knowledge as a
+        // bitmask; a pair merge unions the two masks. Starting from "every
+        // scheduler knows only itself", full convergence needs at least
+        // ⌈log2(k)⌉ rounds (one merge at most doubles a mask's population)
+        // and randomized pairings reach it in O(log k) — the round counter
+        // is the proof handle.
+        let k = 16usize;
+        let full = (1u32 << k) - 1;
+        let mut know: Vec<u32> = (0..k).map(|s| 1 << s).collect();
+        let mut p = SyncPolicy::new(&SyncPolicyConfig::gossip(), 1.0, k, 20200417);
+        let mut rounds = 0u64;
+        while know.iter().any(|&m| m != full) {
+            match p.on_epoch(rounds as f64 + 1.0, false) {
+                SyncDecision::MergePairs(pairs) => {
+                    for (a, b) in pairs {
+                        let u = know[a] | know[b];
+                        know[a] = u;
+                        know[b] = u;
+                    }
+                }
+                other => panic!("{other:?}"),
+            }
+            rounds = p.round();
+            assert!(rounds < 64, "gossip failed to converge");
+        }
+        let log2k = (k as f64).log2().ceil() as u64;
+        // A pair merge at most doubles a mask's population, so ⌈log2 k⌉ is
+        // an information-theoretic floor; randomized matchings land within
+        // a small constant factor of it.
+        assert!(rounds >= log2k, "converged faster than information can spread: {rounds}");
+        assert!(
+            rounds <= 4 * log2k + 4,
+            "took {rounds} rounds for k={k}; epidemic spread should be O(log k)"
+        );
+    }
+
+    #[test]
+    fn lambda_shares_exchange_keeps_the_fresher_entry() {
+        let mut a = LambdaShares::new(3);
+        let mut b = LambdaShares::new(3);
+        a.learn(0, 9.0, 1.0);
+        b.learn(1, 2.0, 2.0);
+        a.learn(1, 1.0, 0.5); // stale knowledge of scheduler 1
+        LambdaShares::exchange(&mut a, &mut b);
+        // a learned b's fresher view of scheduler 1; b learned a's share.
+        assert_eq!(a.total(), 11.0);
+        assert_eq!(b.total(), 11.0);
+        assert_eq!(a.heard_at(1), 2.0);
+        assert_eq!(b.heard_at(0), 1.0);
+        // Scheduler 2 is still unheard everywhere.
+        assert_eq!(a.heard_at(2), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn extrapolated_total_scales_partial_coverage() {
+        let mut s = LambdaShares::new(8);
+        assert_eq!(s.extrapolated_total(), None, "no shares heard yet");
+        // Two of eight shares heard (one gossip pair), 1.5 each: the
+        // extrapolation estimates the full load, not the partial sum.
+        s.learn(0, 1.5, 1.0);
+        s.learn(3, 1.5, 1.0);
+        assert_eq!(s.total(), 3.0);
+        assert_eq!(s.extrapolated_total(), Some(12.0));
+        // Full coverage: extrapolation degrades to the exact sum.
+        for i in 0..8 {
+            s.learn(i, 1.0, 2.0);
+        }
+        assert_eq!(s.extrapolated_total(), Some(8.0));
+        assert_eq!(s.extrapolated_total(), Some(s.total()));
+    }
+
+    #[test]
+    fn exchanged_shares_correct_the_even_split_under_skew() {
+        // Skewed routing: scheduler 0 sees 9 tasks/s, the other three 1.
+        // λ̂_global from exchanged shares is 12; the even-split assumption
+        // from scheduler 0's local estimate (k·λ̂₀ = 36) would over-throttle
+        // probing by 3×, and from scheduler 3's (k·λ̂₃ = 4) under-throttle.
+        let shares = [9.0, 1.0, 1.0, 1.0];
+        let mut s = LambdaShares::new(4);
+        for (i, &l) in shares.iter().enumerate() {
+            s.learn(i, l, 1.0);
+        }
+        assert_eq!(s.total(), 12.0);
+        let correct = throttled_rate(0.1, 150.0, s.total(), 4);
+        let naive0 = throttled_rate(0.1, 150.0, 4.0 * shares[0], 4);
+        let naive3 = throttled_rate(0.1, 150.0, 4.0 * shares[3], 4);
+        assert!((correct - 0.1 * 138.0 / 4.0).abs() < 1e-12);
+        assert!(naive0 < correct && correct < naive3);
     }
 }

@@ -28,12 +28,15 @@
 //!   regime centralized schedulers cannot reach. Learning itself
 //!   decentralizes (§5, `--learners per-shard`): one [`learner::PerfLearner`]
 //!   per scheduler, fed by only the completions that scheduler routed, its
-//!   benchmark dispatcher throttled to `c0(μ̄ − λ̂)/k`, with cross-scheduler
-//!   agreement reduced to periodic [`learner::merge_estimates`] consensus —
-//!   "schedulers need only synchronize the estimates of worker speeds
-//!   regularly". The same topology runs deterministically in the DES engine
-//!   (`LearnerConfig::schedulers` / `sync_interval`; `multisched` sweeps
-//!   the staleness cost);
+//!   benchmark dispatcher throttled to `c0(μ̄ − λ̂_global)/k`, with
+//!   cross-scheduler agreement reduced to [`learner::merge_estimates`]
+//!   consensus over exchanged [`learner::SyncPayload`]s — "schedulers need
+//!   only synchronize the estimates of worker speeds regularly". *When* and
+//!   *with whom* they synchronize is a pluggable [`learner::SyncPolicy`]
+//!   (see **Sync policies** below). The same topology runs
+//!   deterministically in the DES engine (`LearnerConfig::schedulers` /
+//!   `sync_interval` / `sync`; `multisched` maps the coordination/quality
+//!   frontier);
 //! * **experiment drivers** ([`experiments`]) regenerating every figure of
 //!   the paper's evaluation section.
 //!
@@ -52,11 +55,35 @@
 //! | job arrival | O(1) + O(tasks) | reusable job buffer ([`workload::Workload::next_job_into`]), incremental queue lengths — no O(n) sweep |
 //! | event push/pop | O(log m) | compact `Copy` heap entries; stale completions cancelled at source ([`simulator::EventQueue`]) |
 //! | estimate publish | O(n) | rate-limited background event; in-place [`stats::AliasTable::rebuild`], allocation-free |
-//! | estimate sync | O(k·n) | rate-limited consensus of k per-scheduler views ([`learner::merge_estimates_into`], reused buffers); never on the decision path |
+//! | estimate sync | O(k·n) periodic/adaptive, O(n) per gossip pair | rate-limited consensus over exchanged payloads ([`learner::merge_estimates_into`], reused buffers); never on the decision path |
 //!
 //! `rosella hotpath --json BENCH_hotpath.json` ([`hotpath`]) measures all
 //! of this per cluster size, so an accidental O(n) term in the decision
 //! path shows up as a slope in the tracked numbers.
+//!
+//! ## Sync policies
+//!
+//! §5's "synchronize ... regularly" is a whole design axis, and the
+//! paper's own §2 argument — minimum coordination — cuts against the one
+//! pattern that is easiest to build (a fixed-timer all-to-all epoch). The
+//! consensus layer is therefore pluggable ([`learner::SyncPolicyConfig`],
+//! `--sync-policy` on `plane` and `simulate`, `learner.sync` in JSON
+//! configs), with one [`learner::SyncPolicy`] state machine driving both
+//! the threaded plane and the deterministic simulator:
+//!
+//! | policy | when it merges | coordination cost |
+//! |---|---|---|
+//! | `periodic` | every `sync_interval` (the original behavior, bit-compatible) | k views per epoch |
+//! | `adaptive` | when a scheduler's local estimates diverge > `--sync-threshold` relative error from its last adopted consensus ([`learner::divergence_of`]); a staleness deadline forces a merge | zero on quiet epochs |
+//! | `gossip` | every round, a deterministic-RNG pairing merges view *pairs*; information spreads epidemically in O(log k) rounds | 2 views per pair |
+//!
+//! The exchanged payload carries each scheduler's λ̂ share alongside its μ̂
+//! views, so the benchmark throttle `c0(μ̄ − λ̂_global)/k` runs on the *sum
+//! of exchanged shares* — correct under skewed arrival routing, where
+//! extrapolating any single scheduler's estimate to an assumed even split
+//! misses the budget. `rosella experiment multisched --json` sweeps
+//! policy × threshold × k and reports merges-performed against response
+//! degradation — the coordination/quality frontier.
 //!
 //! ## Quick start
 //!

@@ -56,6 +56,7 @@ fn print_usage() {
 fn cmd_experiment(rest: &[String]) -> i32 {
     let spec = CmdSpec::new("experiment", "regenerate a paper figure")
         .pos("name", "fig8..fig13 | theory | ablation | multisched | all")
+        .opt("json", None, "write machine-readable results (multisched only)")
         .flag("quick", "scaled-down run (~10x shorter horizons)");
     let p = match spec.parse(rest) {
         Ok(p) => p,
@@ -72,7 +73,7 @@ fn cmd_experiment(rest: &[String]) -> i32 {
         }
     };
     let scale = if p.flag("quick") { Scale::Quick } else { Scale::Full };
-    match experiments::run_by_name(&name, scale) {
+    match experiments::run_by_name_with(&name, scale, p.get("json")) {
         Ok(report) => {
             println!("{report}");
             0
@@ -97,6 +98,8 @@ fn cmd_simulate(rest: &[String]) -> i32 {
         .opt("policy", None, "uniform|pot|pss|ppot|ppot-ll2|rosella|sparrow|bandit:<eta>|halo")
         .opt("schedulers", None, "logical scheduler count k (§5 per-scheduler learners)")
         .opt("sync-interval", None, "estimate-sync interval in sim-secs (0 = every publish)")
+        .opt("sync-policy", None, "estimate-sync strategy: periodic | adaptive | gossip")
+        .opt("sync-threshold", None, "adaptive sync: relative-error divergence trigger")
         .flag("oracle", "give the policy true speeds (disables learning)")
         .flag("no-fake-jobs", "disable the benchmark-job dispatcher");
     let p = match spec.parse(rest) {
@@ -180,6 +183,12 @@ fn apply_overrides(cfg: &mut SimConfig, p: &rosella::cli::Parsed) -> Result<(), 
     if let Some(v) = p.parse_as::<f64>("sync-interval")? {
         cfg.learner.sync_interval = v;
     }
+    if let Some(v) = p.get("sync-policy") {
+        cfg.learner.sync.kind = rosella::learner::SyncKind::parse(v)?;
+    }
+    if let Some(v) = p.parse_as::<f64>("sync-threshold")? {
+        cfg.learner.sync.threshold = v;
+    }
     Ok(())
 }
 
@@ -224,6 +233,8 @@ fn cmd_plane(rest: &[String]) -> i32 {
         .opt("seed", Some("42"), "rng seed")
         .opt("learners", Some("shared"), "learner ownership: shared | per-shard (§5)")
         .opt("sync-interval", Some("0.2"), "per-shard estimate-sync consensus interval (s)")
+        .opt("sync-policy", Some("periodic"), "consensus strategy: periodic | adaptive | gossip")
+        .opt("sync-threshold", None, "adaptive sync: relative-error divergence trigger")
         .opt("json", None, "write machine-readable results (e.g. BENCH_plane.json)")
         .flag("decide-only", "measure raw decision throughput without dispatching")
         .flag("no-fake-jobs", "disable the benchmark-job dispatcher");

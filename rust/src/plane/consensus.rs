@@ -5,37 +5,75 @@
 //! [`PerfLearner`](crate::learner::PerfLearner) fed by its own completion
 //! channel. Cross-scheduler coordination is exactly what the paper
 //! prescribes: "schedulers need only synchronize the estimates of worker
-//! speeds regularly". Each shard exports an [`EstimateView`] snapshot of
-//! its learner at its local publish cadence (into [`SharedViews`], a
-//! per-shard mutex slot — never touched on the decision hot path); the sync
-//! thread wakes every `sync_interval`, merges the views with
-//! [`merge_estimates_into`], and publishes the consensus through the
-//! seqlock [`EstimateTable`] all frontends read. The decision path stays
-//! lock-free: frontends see new consensus exactly the way they always saw
-//! aggregator publishes — one epoch probe per decision.
+//! speeds regularly". Each shard exports a [`SyncPayload`] snapshot of its
+//! learner — per-worker [`EstimateView`]s plus its local arrival share λ̂ₛ —
+//! at its local publish cadence (into [`SharedViews`], a per-shard mutex
+//! slot — never touched on the decision hot path). The sync thread runs a
+//! [`SyncPolicy`]:
+//!
+//! * **periodic** — every check epoch collects all slots, merges with
+//!   [`merge_payloads_into`] (λ̂_global = Σ exchanged shares), and publishes
+//!   through the seqlock [`EstimateTable`] — the original behavior;
+//! * **adaptive** — shards flag divergence at export time
+//!   ([`SharedViews::request_merge`], set when a shard's local estimates
+//!   drift beyond the relative-error threshold from its last adopted
+//!   consensus); the sync thread merges only on a flagged request past the
+//!   minimum spacing, or when the staleness deadline forces it. Skipped
+//!   epochs cost zero slot locks and zero publishes;
+//! * **gossip** — each round merges one deterministic-RNG *pairing* of
+//!   shard slots (two view collections per publish instead of k). The
+//!   plane has a single estimate table, so unlike the DES engine's true
+//!   pairwise adoption, every frontend adopts each published pair merge —
+//!   in-process gossip reduces per-epoch collection cost, not adoption
+//!   fan-out.
+//!
+//! The drain-time epoch is always a full merge, so the reported estimates
+//! are the consensus of every shard's final view regardless of policy. The
+//! decision path stays lock-free: frontends see new consensus exactly the
+//! way they always saw aggregator publishes — one epoch probe per decision.
 
 use super::state::EstimateTable;
-use crate::learner::{merge_estimates_into, EstimateView};
+use crate::learner::{
+    merge_estimates_into, merge_payloads_into, EstimateView, SyncDecision, SyncPayload,
+    SyncPolicy,
+};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// Per-shard learner-view slots: shard `s` overwrites slot `s` at its local
-/// publish cadence; the sync thread reads every slot at consensus epochs.
-/// A mutex per slot is fine here — both sides touch it a few times per
-/// second, never per decision.
+/// Per-shard sync-payload slots: shard `s` overwrites slot `s` at its local
+/// publish cadence; the sync thread reads slots at consensus epochs. A
+/// mutex per slot is fine here — both sides touch it a few times per
+/// second, never per decision. Dirty flags record which slots changed since
+/// the last collection, and a shared merge-request flag carries shard-side
+/// divergence triggers to the adaptive policy.
 #[derive(Debug)]
 pub struct SharedViews {
-    slots: Vec<Mutex<Vec<EstimateView>>>,
+    slots: Vec<Mutex<SyncPayload>>,
+    /// Slot re-exported since the last collection — the sync thread skips
+    /// a check epoch outright when nothing is dirty (merging unchanged
+    /// views would only republish identical state).
+    dirty: Vec<AtomicBool>,
+    /// Some shard's export diverged beyond the adaptive threshold: it
+    /// requests a merge at the next policy check.
+    merge_requested: AtomicBool,
 }
 
 impl SharedViews {
     /// Slots for `shards` schedulers over `n` workers, initialized to the
-    /// prior with zero weight (= "no knowledge yet", merges to the prior).
+    /// prior with zero weight (= "no knowledge yet", merges to the prior)
+    /// and a zero arrival share.
     pub fn new(shards: usize, n: usize, prior: f64) -> Self {
         assert!(shards > 0 && n > 0, "views need at least one shard and one worker");
-        let init = vec![EstimateView { mu_hat: prior, samples: 0 }; n];
-        Self { slots: (0..shards).map(|_| Mutex::new(init.clone())).collect() }
+        let init = SyncPayload {
+            views: vec![EstimateView { mu_hat: prior, samples: 0 }; n],
+            lambda_hat: 0.0,
+        };
+        Self {
+            slots: (0..shards).map(|_| Mutex::new(init.clone())).collect(),
+            dirty: (0..shards).map(|_| AtomicBool::new(false)).collect(),
+            merge_requested: AtomicBool::new(false),
+        }
     }
 
     /// Number of shard slots.
@@ -43,93 +81,191 @@ impl SharedViews {
         self.slots.len()
     }
 
-    /// Replace shard `s`'s exported view.
-    pub fn store(&self, s: usize, views: &[EstimateView]) {
+    /// Replace shard `s`'s exported payload: its estimate views plus its
+    /// local arrival share λ̂ₛ.
+    pub fn store(&self, s: usize, views: &[EstimateView], lambda_hat: f64) {
         let mut slot = self.slots[s].lock().expect("view slot poisoned");
-        slot.clear();
-        slot.extend_from_slice(views);
+        slot.views.clear();
+        slot.views.extend_from_slice(views);
+        slot.lambda_hat = lambda_hat;
+        self.dirty[s].store(true, Ordering::Release);
     }
 
-    /// Copy every shard's current view into `out` (buffers reused).
-    pub fn collect_into(&self, out: &mut Vec<Vec<EstimateView>>) {
-        out.resize_with(self.slots.len(), Vec::new);
-        for (slot, buf) in self.slots.iter().zip(out.iter_mut()) {
-            let v = slot.lock().expect("view slot poisoned");
-            buf.clear();
-            buf.extend_from_slice(&v);
+    /// A shard's local estimates diverged beyond the adaptive threshold:
+    /// ask the sync thread to merge at its next check epoch.
+    pub fn request_merge(&self) {
+        self.merge_requested.store(true, Ordering::Release);
+    }
+
+    /// Consume the pending merge request, if any.
+    pub fn take_merge_request(&self) -> bool {
+        self.merge_requested.swap(false, Ordering::AcqRel)
+    }
+
+    /// Whether any slot was re-exported since the last collection.
+    pub fn any_dirty(&self) -> bool {
+        self.dirty.iter().any(|d| d.load(Ordering::Acquire))
+    }
+
+    /// Copy every shard's current payload into `out` (buffers reused) and
+    /// clear the dirty flags.
+    pub fn collect_into(&self, out: &mut Vec<SyncPayload>) {
+        out.resize_with(self.slots.len(), SyncPayload::default);
+        for ((slot, dirty), buf) in self.slots.iter().zip(self.dirty.iter()).zip(out.iter_mut()) {
+            let p = slot.lock().expect("view slot poisoned");
+            buf.views.clear();
+            buf.views.extend_from_slice(&p.views);
+            buf.lambda_hat = p.lambda_hat;
+            dirty.store(false, Ordering::Release);
         }
+    }
+
+    /// Copy just shards `a` and `b` into `out` (a gossip pair), clearing
+    /// their dirty flags.
+    pub fn collect_pair_into(&self, a: usize, b: usize, out: &mut Vec<SyncPayload>) {
+        out.resize_with(2, SyncPayload::default);
+        for (s, buf) in [a, b].into_iter().zip(out.iter_mut()) {
+            let p = self.slots[s].lock().expect("view slot poisoned");
+            buf.views.clear();
+            buf.views.extend_from_slice(&p.views);
+            buf.lambda_hat = p.lambda_hat;
+            self.dirty[s].store(false, Ordering::Release);
+        }
+    }
+
+    /// λ̂_global: the sum of every shard's exported arrival share (scalar
+    /// reads only — cheap enough for every gossip publish).
+    pub fn lambda_total(&self) -> f64 {
+        self.slots.iter().map(|s| s.lock().expect("view slot poisoned").lambda_hat).sum()
     }
 }
 
-/// Sum of the shards' f64-bit λ̂ slots (the plane's aggregate arrival
-/// estimate).
+/// Sum of the shards' f64-bit λ̂ slots. Used by the *shared-learner*
+/// aggregator, which has no payload exchange (shards publish their live λ̂
+/// into atomic slots per decision); per-shard consensus reads λ̂ from the
+/// exchanged [`SyncPayload`]s instead.
 pub(crate) fn lambda_total(slots: &[Arc<AtomicU64>]) -> f64 {
     slots.iter().map(|s| f64::from_bits(s.load(Ordering::Relaxed))).sum()
 }
 
-/// One consensus epoch: collect every shard's exported view, merge, publish
-/// through the seqlock table. Factored out of the thread loop so tests can
-/// drive epochs deterministically.
+/// One all-to-all consensus epoch: collect every shard's exported payload,
+/// merge views, sum λ̂ shares, publish through the seqlock table. Factored
+/// out of the thread loop so tests can drive epochs deterministically.
 pub(crate) fn consensus_step(
     views: &SharedViews,
     table: &EstimateTable,
-    lambda_slots: &[Arc<AtomicU64>],
     prior: f64,
-    view_buf: &mut Vec<Vec<EstimateView>>,
+    payload_buf: &mut Vec<SyncPayload>,
     consensus: &mut [f64],
 ) {
-    views.collect_into(view_buf);
-    merge_estimates_into(view_buf, prior, consensus);
-    table.publish(consensus, lambda_total(lambda_slots));
+    views.collect_into(payload_buf);
+    let lambda = merge_payloads_into(payload_buf, prior, consensus);
+    table.publish(consensus, lambda);
+}
+
+/// One gossip pair merge: merge shards `a` and `b`'s views, publish the
+/// pair consensus with `lambda` — the plane-wide λ̂, computed once per
+/// round by the caller rather than re-locking every slot per pair.
+pub(crate) fn pair_step(
+    views: &SharedViews,
+    table: &EstimateTable,
+    prior: f64,
+    pair: (usize, usize),
+    lambda: f64,
+    pair_buf: &mut Vec<SyncPayload>,
+    consensus: &mut [f64],
+) {
+    views.collect_pair_into(pair.0, pair.1, pair_buf);
+    merge_estimates_into(pair_buf, prior, consensus);
+    table.publish(consensus, lambda);
 }
 
 /// State moved into the sync thread.
 pub(crate) struct SyncRun {
     pub views: Arc<SharedViews>,
     pub table: Arc<EstimateTable>,
-    pub lambda_slots: Vec<Arc<AtomicU64>>,
     pub stop: Arc<AtomicBool>,
-    pub sync_interval: f64,
+    pub policy: SyncPolicy,
     pub prior: f64,
     pub start: Instant,
 }
 
+/// What the sync thread hands back at drain.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct SyncOutcome {
+    /// Consensus publishes + skipped checks, including the final
+    /// drain-time epoch.
+    pub epochs: u64,
+    /// Merge operations performed (all-to-all = 1, each gossip pair = 1),
+    /// including the final drain-time merge.
+    pub merges: u64,
+}
+
 /// The sync thread body: the plane's only estimate-table writer in
-/// per-shard mode. Returns the number of consensus epochs published,
-/// including the final drain-time epoch (which runs after every shard has
-/// exported its final view, so the table ends as the consensus of the
-/// drain-time views).
-pub(crate) fn run_sync(ctx: SyncRun) -> u64 {
-    let mut view_buf: Vec<Vec<EstimateView>> = Vec::new();
+/// per-shard mode. The final drain-time epoch runs after every shard has
+/// exported its final view, and is always a full merge, so the table ends
+/// as the consensus of the drain-time views under every policy.
+pub(crate) fn run_sync(mut ctx: SyncRun) -> SyncOutcome {
+    let mut payload_buf: Vec<SyncPayload> = Vec::new();
+    let mut pair_buf: Vec<SyncPayload> = Vec::new();
     let mut consensus = vec![0.0; ctx.table.n()];
-    let mut epochs = 0u64;
-    let mut next_sync = ctx.start + Duration::from_secs_f64(ctx.sync_interval);
+    let check = Duration::from_secs_f64(ctx.policy.check_interval());
+    let mut next_check = ctx.start + check;
     while !ctx.stop.load(Ordering::Acquire) {
-        if Instant::now() >= next_sync {
-            consensus_step(
-                &ctx.views,
-                &ctx.table,
-                &ctx.lambda_slots,
-                ctx.prior,
-                &mut view_buf,
-                &mut consensus,
-            );
-            epochs += 1;
-            next_sync += Duration::from_secs_f64(ctx.sync_interval);
+        if Instant::now() >= next_check {
+            // Nothing re-exported since the last collection: re-merging
+            // would republish identical state and force every frontend
+            // through a pointless table re-read + sampler rebuild. Skip
+            // the epoch entirely (export always precedes a merge request,
+            // so no pending request can be lost here).
+            if !ctx.views.any_dirty() {
+                next_check += check;
+                continue;
+            }
+            let now_s = ctx.start.elapsed().as_secs_f64();
+            let diverged = ctx.views.take_merge_request();
+            match ctx.policy.on_epoch(now_s, diverged) {
+                SyncDecision::Skip => {
+                    if diverged {
+                        // The policy deferred a shard's divergence trigger
+                        // (min-interval suppression): re-raise it so the
+                        // request survives to the next check epoch instead
+                        // of being silently dropped.
+                        ctx.views.request_merge();
+                    }
+                }
+                SyncDecision::MergeAll => consensus_step(
+                    &ctx.views,
+                    &ctx.table,
+                    ctx.prior,
+                    &mut payload_buf,
+                    &mut consensus,
+                ),
+                SyncDecision::MergePairs(pairs) => {
+                    // One plane-wide λ̂ per round, shared by every pair
+                    // publish.
+                    let lambda = ctx.views.lambda_total();
+                    for pair in pairs {
+                        pair_step(
+                            &ctx.views,
+                            &ctx.table,
+                            ctx.prior,
+                            pair,
+                            lambda,
+                            &mut pair_buf,
+                            &mut consensus,
+                        );
+                    }
+                }
+            }
+            next_check += check;
         } else {
-            let wait = next_sync.saturating_duration_since(Instant::now());
+            let wait = next_check.saturating_duration_since(Instant::now());
             std::thread::sleep(wait.min(Duration::from_millis(5)));
         }
     }
-    consensus_step(
-        &ctx.views,
-        &ctx.table,
-        &ctx.lambda_slots,
-        ctx.prior,
-        &mut view_buf,
-        &mut consensus,
-    );
-    epochs + 1
+    consensus_step(&ctx.views, &ctx.table, ctx.prior, &mut payload_buf, &mut consensus);
+    SyncOutcome { epochs: ctx.policy.epochs() + 1, merges: ctx.policy.merges() + 1 }
 }
 
 #[cfg(test)]
@@ -147,31 +283,55 @@ mod tests {
         assert_eq!(views.shards(), 3);
         let mut buf = Vec::new();
         views.collect_into(&mut buf);
-        assert_eq!(merge_estimates(&buf, 0.75), vec![0.75, 0.75]);
+        let mut out = vec![0.0; 2];
+        let lambda = merge_payloads_into(&buf, 0.75, &mut out);
+        assert_eq!(out, vec![0.75, 0.75]);
+        assert_eq!(lambda, 0.0, "no shard has exported an arrival share yet");
     }
 
     #[test]
     fn store_overwrites_one_slot_only() {
         let views = SharedViews::new(2, 2, 1.0);
-        views.store(1, &[v(2.0, 10), v(0.5, 4)]);
+        views.store(1, &[v(2.0, 10), v(0.5, 4)], 7.5);
         let mut buf = Vec::new();
         views.collect_into(&mut buf);
-        assert_eq!(buf[0], vec![v(1.0, 0), v(1.0, 0)]);
-        assert_eq!(buf[1], vec![v(2.0, 10), v(0.5, 4)]);
+        assert_eq!(buf[0].views, vec![v(1.0, 0), v(1.0, 0)]);
+        assert_eq!(buf[0].lambda_hat, 0.0);
+        assert_eq!(buf[1].views, vec![v(2.0, 10), v(0.5, 4)]);
+        assert_eq!(buf[1].lambda_hat, 7.5);
+    }
+
+    #[test]
+    fn dirty_flags_track_exports_and_collections() {
+        let views = SharedViews::new(2, 1, 1.0);
+        assert!(!views.any_dirty());
+        views.store(0, &[v(2.0, 3)], 1.0);
+        assert!(views.any_dirty());
+        let mut buf = Vec::new();
+        views.collect_into(&mut buf);
+        assert!(!views.any_dirty(), "collection must clear the dirty flags");
+    }
+
+    #[test]
+    fn merge_requests_are_consumed_once() {
+        let views = SharedViews::new(2, 1, 1.0);
+        assert!(!views.take_merge_request());
+        views.request_merge();
+        views.request_merge(); // idempotent
+        assert!(views.take_merge_request());
+        assert!(!views.take_merge_request(), "request must not replay");
     }
 
     #[test]
     fn consensus_step_publishes_the_merge_of_exported_views() {
         let views = SharedViews::new(2, 2, 1.0);
-        views.store(0, &[v(2.0, 40), v(0.0, 0)]);
-        views.store(1, &[v(1.0, 10), v(0.5, 5)]);
+        views.store(0, &[v(2.0, 40), v(0.0, 0)], 0.0);
+        views.store(1, &[v(1.0, 10), v(0.5, 5)], 3.0);
         let table = EstimateTable::new(2, 1.0);
-        let lambda_slots: Vec<Arc<AtomicU64>> =
-            (0..2).map(|i| Arc::new(AtomicU64::new((i as f64 * 3.0).to_bits()))).collect();
         let e0 = table.epoch();
         let mut buf = Vec::new();
         let mut consensus = vec![0.0; 2];
-        consensus_step(&views, &table, &lambda_slots, 1.0, &mut buf, &mut consensus);
+        consensus_step(&views, &table, 1.0, &mut buf, &mut consensus);
         assert_eq!(table.epoch(), e0 + 2, "each consensus step is one seqlock publish");
         let (mu, lambda) = table.snapshot();
         // Bit-exact agreement with the library merge rule at every epoch.
@@ -179,6 +339,25 @@ mod tests {
         assert_eq!(mu, expect);
         assert!((mu[0] - 1.8).abs() < 1e-12);
         assert_eq!(mu[1], 0.5);
+        // λ̂_global is the sum of the *exchanged* shares.
         assert_eq!(lambda, 3.0);
+    }
+
+    #[test]
+    fn pair_step_merges_two_slots_with_the_plane_wide_lambda() {
+        let views = SharedViews::new(3, 1, 1.0);
+        views.store(0, &[v(3.0, 30)], 4.0);
+        views.store(1, &[v(1.0, 10)], 1.0);
+        views.store(2, &[v(9.0, 99)], 2.0);
+        let table = EstimateTable::new(1, 1.0);
+        let mut pair_buf = Vec::new();
+        let mut consensus = vec![0.0; 1];
+        let lambda = views.lambda_total();
+        pair_step(&views, &table, 1.0, (0, 1), lambda, &mut pair_buf, &mut consensus);
+        let (mu, lambda) = table.snapshot();
+        // Shard 2's view is not in the pair merge...
+        assert!((mu[0] - (3.0 * 30.0 + 10.0) / 40.0).abs() < 1e-12, "{mu:?}");
+        // ...but its λ̂ share still counts toward the plane-wide estimate.
+        assert_eq!(lambda, 7.0);
     }
 }

@@ -19,15 +19,22 @@
 //!   route each report to the scheduler that dispatched the task
 //!   ([`crate::coordinator::worker::CompletionSink`]) — plus its own
 //!   benchmark dispatcher at the throttled per-scheduler rate
-//!   `c0(μ̄ − λ̂)/k`, so the aggregate probing budget matches the
+//!   `c0(μ̄ − λ̂_global)/k`, so the aggregate probing budget matches the
 //!   single-scheduler design. Schedulers coordinate *only* through
-//!   estimate sync: a lightweight thread ([`consensus`]) merges the
-//!   exported per-shard views with
-//!   [`merge_estimates`](crate::learner::merge_estimates) every
-//!   `sync_interval` and publishes the consensus through the seqlock
-//!   table. `LearnerMode::Shared` keeps the pre-§5 baseline for
-//!   comparison: one aggregator thread owns a single learner fed by a
-//!   single funnel channel;
+//!   estimate sync, and *when* and *with whom* they sync is pluggable
+//!   ([`PlaneConfig::sync_policy`] → [`crate::learner::SyncPolicy`]): a
+//!   lightweight thread ([`consensus`]) collects the exported per-shard
+//!   [`crate::learner::SyncPayload`]s — per-worker μ̂ views *plus* each
+//!   scheduler's local arrival share λ̂ₛ — and publishes consensus through
+//!   the seqlock table on a fixed timer (`periodic`, all-to-all), only
+//!   when a shard's local estimates diverged beyond a relative-error
+//!   threshold from its last adopted consensus (`adaptive`, with a
+//!   staleness deadline forcing a merge), or as deterministic pairwise
+//!   merges (`gossip`). λ̂_global is the *sum of exchanged shares*, so the
+//!   throttle stays correct under skewed arrival routing.
+//!   `LearnerMode::Shared` keeps the pre-§5 baseline for comparison: one
+//!   aggregator thread owns a single learner fed by a single funnel
+//!   channel;
 //! * **latency metrics merge at drain**: per-shard [`ResponseRecorder`]s
 //!   cover the whole plane without double counting in either mode.
 //!
@@ -53,7 +60,9 @@ pub use state::{EstimateCache, EstimateTable, SharedView};
 use crate::coordinator::worker::{
     self, Completion, CompletionSink, LiveTask, PayloadMode, WorkerClient, WorkerHandle,
 };
-use crate::learner::{EstimateView, FakeJobDispatcher, PerfLearner};
+use crate::learner::{
+    EstimateView, FakeJobDispatcher, PerfLearner, SyncKind, SyncPolicy, SyncPolicyConfig,
+};
 use crate::metrics::ResponseRecorder;
 use crate::scheduler::PolicyKind;
 use crate::stats::{Exponential, Rng};
@@ -152,6 +161,10 @@ pub struct PlaneConfig {
     pub learners: LearnerMode,
     /// Estimate-sync consensus interval in seconds (per-shard mode only).
     pub sync_interval: f64,
+    /// How consensus epochs are scheduled on that interval (per-shard mode
+    /// only): periodic all-to-all, divergence-triggered adaptive, or
+    /// pairwise gossip.
+    pub sync_policy: SyncPolicyConfig,
 }
 
 impl Default for PlaneConfig {
@@ -176,6 +189,7 @@ impl Default for PlaneConfig {
             record_placements: false,
             learners: LearnerMode::Shared,
             sync_interval: 0.2,
+            sync_policy: SyncPolicyConfig::periodic(),
         }
     }
 }
@@ -217,9 +231,13 @@ pub struct PlaneReport {
     pub placements: Vec<Vec<WorkerId>>,
     /// Learner-ownership mode the run used.
     pub learners: LearnerMode,
-    /// Estimate-sync consensus epochs published (per-shard mode; 0 under
-    /// the shared aggregator, whose publishes are not consensus).
+    /// Estimate-sync check epochs evaluated (per-shard mode; 0 under the
+    /// shared aggregator, whose publishes are not consensus).
     pub sync_epochs: u64,
+    /// Consensus merge operations performed (all-to-all = 1 each, every
+    /// gossip pair = 1; adaptive skips make this smaller than
+    /// `sync_epochs`). 0 under the shared aggregator.
+    pub sync_merges: u64,
     /// Each shard's final exported learner view (per-shard mode; empty
     /// otherwise). `estimates` is exactly their
     /// [`merge_estimates`](crate::learner::merge_estimates) consensus.
@@ -265,8 +283,8 @@ impl PlaneReport {
             }
             LearnerMode::PerShard => {
                 out.push_str(&format!(
-                    "learning   : per-shard learners, {} estimate-sync epochs\n",
-                    self.sync_epochs
+                    "learning   : per-shard learners, {} estimate-sync epochs, {} merges\n",
+                    self.sync_epochs, self.sync_merges
                 ));
                 for (s, views) in self.shard_views.iter().enumerate() {
                     let samples: Vec<u64> = views.iter().map(|v| v.samples).collect();
@@ -430,8 +448,19 @@ pub fn run_plane(cfg: PlaneConfig) -> Result<PlaneReport, String> {
         return Err("rate, duration, mean demand, and batch must be positive".into());
     }
     let per_shard = cfg.learners == LearnerMode::PerShard;
-    if per_shard && !(cfg.sync_interval > 0.0 && cfg.sync_interval.is_finite()) {
-        return Err("per-shard learners need a positive finite sync interval".into());
+    if per_shard {
+        if !(cfg.sync_interval > 0.0 && cfg.sync_interval.is_finite()) {
+            return Err("per-shard learners need a positive finite sync interval".into());
+        }
+        cfg.sync_policy
+            .validate(cfg.sync_interval)
+            .map_err(|e| format!("sync policy: {e}"))?;
+    } else if cfg.sync_policy.kind != SyncKind::Periodic {
+        return Err(format!(
+            "--sync-policy {} needs --learners per-shard (the shared aggregator has no \
+             consensus to schedule)",
+            cfg.sync_policy.kind.name()
+        ));
     }
     let k = cfg.frontends;
     let total_speed: f64 = cfg.speeds.iter().sum();
@@ -490,9 +519,13 @@ pub fn run_plane(cfg: PlaneConfig) -> Result<PlaneReport, String> {
             let ctx = consensus::SyncRun {
                 views: v.clone(),
                 table: table.clone(),
-                lambda_slots: lambda_slots.clone(),
                 stop: sync_stop.clone(),
-                sync_interval: cfg.sync_interval,
+                policy: SyncPolicy::new(
+                    &cfg.sync_policy,
+                    cfg.sync_interval,
+                    k,
+                    cfg.seed ^ 0x57AC_6E55,
+                ),
                 prior,
                 start,
             };
@@ -565,9 +598,12 @@ pub fn run_plane(cfg: PlaneConfig) -> Result<PlaneReport, String> {
             warmup: cfg.warmup,
             fake_jobs: cfg.fake_jobs,
             shards: k,
+            divergence_threshold: (per_shard && cfg.sync_policy.kind == SyncKind::Adaptive)
+                .then_some(cfg.sync_policy.threshold),
             learner: shard_rx_iter.next().map(|comp_rx| shard::ShardLearner {
                 comp_rx,
                 views: views.as_ref().expect("per-shard views exist").clone(),
+                lambda_slots: lambda_slots.clone(),
                 completed_real: completed_real.clone(),
             }),
         };
@@ -630,18 +666,19 @@ pub fn run_plane(cfg: PlaneConfig) -> Result<PlaneReport, String> {
         }
     }
 
-    let (estimates, sync_epochs) = if per_shard {
-        // Final consensus epoch over the drain-time views, then read the
-        // table: the reported estimates *are* the published consensus.
+    let (estimates, sync_epochs, sync_merges) = if per_shard {
+        // Final consensus epoch over the drain-time views (always a full
+        // merge, whatever the policy), then read the table: the reported
+        // estimates *are* the published consensus.
         sync_stop.store(true, Ordering::Release);
-        let epochs = sync_handle
+        let outcome = sync_handle
             .expect("per-shard sync thread exists")
             .join()
             .map_err(|_| "sync thread panicked".to_string())?;
         let (mu, _lambda) = table.snapshot();
         let estimates: Vec<(f64, f64)> =
             cfg.speeds.iter().zip(mu.iter()).map(|(&t, &e)| (t, e)).collect();
-        (estimates, epochs)
+        (estimates, outcome.epochs, outcome.merges)
     } else {
         // Shut the pool down: every sender drops, workers drain their
         // queues and exit, the aggregator sees the disconnect and returns.
@@ -658,7 +695,7 @@ pub fn run_plane(cfg: PlaneConfig) -> Result<PlaneReport, String> {
         benchmarks = out.benchmarks;
         let estimates: Vec<(f64, f64)> =
             cfg.speeds.iter().zip(out.mu_hat.iter()).map(|(&t, &e)| (t, e)).collect();
-        (estimates, 0)
+        (estimates, 0, 0)
     };
     let completed = completed_real.load(Ordering::Acquire);
 
@@ -681,6 +718,7 @@ pub fn run_plane(cfg: PlaneConfig) -> Result<PlaneReport, String> {
         placements,
         learners: cfg.learners,
         sync_epochs,
+        sync_merges,
         shard_views,
     })
 }
@@ -715,6 +753,7 @@ pub fn bench_json(base: &PlaneConfig, reports: &[PlaneReport]) -> crate::config:
             m.insert("p50_ms".into(), Json::Num(five.p50 * 1e3));
             m.insert("p95_ms".into(), Json::Num(five.p95 * 1e3));
             m.insert("sync_epochs".into(), Json::Num(r.sync_epochs as f64));
+            m.insert("sync_merges".into(), Json::Num(r.sync_merges as f64));
             Json::Obj(m)
         })
         .collect();
@@ -723,6 +762,8 @@ pub fn bench_json(base: &PlaneConfig, reports: &[PlaneReport]) -> crate::config:
     top.insert("mode".into(), Json::Str(base.mode.name().into()));
     top.insert("learners".into(), Json::Str(base.learners.name().into()));
     top.insert("sync_interval".into(), Json::Num(base.sync_interval));
+    top.insert("sync_policy".into(), Json::Str(base.sync_policy.kind.name().into()));
+    top.insert("sync_threshold".into(), Json::Num(base.sync_policy.threshold));
     top.insert("policy".into(), Json::Str(base.policy.build(base.speeds.len()).name()));
     top.insert("workers".into(), Json::Num(base.speeds.len() as f64));
     top.insert("rate".into(), Json::Num(base.rate));
@@ -763,6 +804,16 @@ pub fn plane_cli(p: &crate::cli::Parsed) -> Result<String, String> {
         fake_jobs: !p.flag("no-fake-jobs"),
         learners: LearnerMode::parse(p.get("learners").unwrap_or("shared"))?,
         sync_interval: p.parse_as("sync-interval")?.unwrap_or(0.2),
+        sync_policy: {
+            let mut sp = SyncPolicyConfig {
+                kind: SyncKind::parse(p.get("sync-policy").unwrap_or("periodic"))?,
+                ..SyncPolicyConfig::default()
+            };
+            if let Some(t) = p.parse_as("sync-threshold")? {
+                sp.threshold = t;
+            }
+            sp
+        },
         ..PlaneConfig::default()
     };
     let reports = sweep(&base, &frontend_counts)?;
@@ -941,6 +992,21 @@ mod tests {
             ..quick(1, DispatchMode::Execute)
         })
         .is_err());
+        // Non-periodic sync policies need a consensus thread to schedule.
+        assert!(run_plane(PlaneConfig {
+            learners: LearnerMode::Shared,
+            sync_policy: SyncPolicyConfig::gossip(),
+            ..quick(1, DispatchMode::Execute)
+        })
+        .is_err());
+        // Adaptive knobs are validated before any thread spawns.
+        assert!(run_plane(PlaneConfig {
+            learners: LearnerMode::PerShard,
+            sync_interval: 0.1,
+            sync_policy: SyncPolicyConfig::adaptive(0.0),
+            ..quick(1, DispatchMode::Execute)
+        })
+        .is_err());
     }
 
     fn quick_per_shard(frontends: usize, mode: DispatchMode) -> PlaneConfig {
@@ -1038,6 +1104,46 @@ mod tests {
                 assert_eq!(v.mu_hat.to_bits(), prior.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn adaptive_plane_merges_at_most_once_per_check_epoch() {
+        let cfg = PlaneConfig {
+            sync_policy: SyncPolicyConfig::adaptive(0.15),
+            ..quick_per_shard(2, DispatchMode::Execute)
+        };
+        let report = run_plane(cfg).unwrap();
+        assert_eq!(report.completed, report.dispatched, "tasks lost or duplicated");
+        assert!(report.sync_epochs >= 2, "epochs {}", report.sync_epochs);
+        assert!(
+            report.sync_merges <= report.sync_epochs,
+            "merges {} > epochs {}",
+            report.sync_merges,
+            report.sync_epochs
+        );
+        assert!(report.sync_merges >= 1, "the drain epoch alone guarantees one merge");
+        // The drain epoch is a full merge under every policy: reported
+        // estimates are still the consensus of the final shard views.
+        let prior = [1.0f64, 0.5, 0.25, 2.0].iter().sum::<f64>() / 4.0;
+        let expect = crate::learner::merge_estimates(&report.shard_views, prior);
+        for ((_, est), want) in report.estimates.iter().zip(expect.iter()) {
+            assert_eq!(est.to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn gossip_plane_conserves_tasks_and_counts_pair_merges() {
+        let cfg = PlaneConfig {
+            sync_policy: SyncPolicyConfig::gossip(),
+            ..quick_per_shard(4, DispatchMode::Execute)
+        };
+        let report = run_plane(cfg).unwrap();
+        assert_eq!(report.completed, report.dispatched, "tasks lost or duplicated");
+        assert_eq!(report.responses.count() as u64, report.completed);
+        assert!(report.sync_epochs >= 2);
+        // 4 shards: every gossip round performs 2 pair merges, plus the
+        // single full drain merge.
+        assert_eq!(report.sync_merges, 2 * (report.sync_epochs - 1) + 1);
     }
 
     #[test]

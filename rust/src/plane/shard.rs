@@ -228,6 +228,10 @@ pub(crate) struct ShardRun {
     pub fake_jobs: bool,
     /// Total scheduler count k (the §5 probing-budget divisor).
     pub shards: usize,
+    /// Adaptive sync: request a merge when this shard's local estimates
+    /// diverge from the last adopted consensus beyond this relative-error
+    /// threshold (`None` = non-adaptive policy, never computed).
+    pub divergence_threshold: Option<f64>,
     /// Per-shard learning plumbing; `None` runs the legacy shared-learner
     /// shard loop (the aggregator owns all learning state).
     pub learner: Option<ShardLearner>,
@@ -239,6 +243,11 @@ pub(crate) struct ShardLearner {
     pub comp_rx: Receiver<Completion>,
     /// Where the shard exports learner views for estimate-sync consensus.
     pub views: Arc<SharedViews>,
+    /// Every shard's live λ̂ slot — the bootstrap for the benchmark
+    /// throttle and learner window until the first consensus publish puts
+    /// an exchanged λ̂_global in the table (before that,
+    /// `cached_lambda()` is 0 and the dispatcher would run unthrottled).
+    pub lambda_slots: Vec<Arc<AtomicU64>>,
     /// Plane-wide completed-real counter (conservation accounting).
     pub completed_real: Arc<AtomicU64>,
 }
@@ -267,6 +276,7 @@ const MAX_RECORDED: usize = 100_000;
 struct ShardLearnState {
     comp_rx: Receiver<Completion>,
     views: Arc<SharedViews>,
+    lambda_slots: Vec<Arc<AtomicU64>>,
     completed_real: Arc<AtomicU64>,
     perf: PerfLearner,
     dispatcher: FakeJobDispatcher,
@@ -298,6 +308,7 @@ impl ShardLearnState {
         Self {
             comp_rx: l.comp_rx,
             views: l.views,
+            lambda_slots: l.lambda_slots,
             completed_real: l.completed_real,
             perf,
             dispatcher,
@@ -313,6 +324,20 @@ impl ShardLearnState {
         }
     }
 
+    /// λ̂_global this shard's learning stack runs on: the exchanged value
+    /// from the last consensus publish, or — before the first publish puts
+    /// one in the table — the live sum of every shard's λ̂ slot (the same
+    /// bootstrap the DES engine uses, so the §5 throttle never runs
+    /// against an assumed zero load).
+    fn lambda_global(&self, core: &FrontendCore) -> f64 {
+        let cached = core.cached_lambda();
+        if cached > 0.0 {
+            cached
+        } else {
+            super::consensus::lambda_total(&self.lambda_slots)
+        }
+    }
+
     /// Absorb one completion report of a task this shard routed.
     fn record(&mut self, ctx: &ShardRun, c: &Completion) {
         let now_s = (c.at - ctx.start).as_secs_f64();
@@ -325,12 +350,23 @@ impl ShardLearnState {
         }
     }
 
-    /// Publish the local learner and export its view for consensus.
+    /// Publish the local learner and export its sync payload — estimate
+    /// views plus this scheduler's local arrival share λ̂ₛ (the consensus
+    /// sums the exchanged shares into λ̂_global). Under an adaptive sync
+    /// policy, also run the §5 divergence test: if the local estimates
+    /// drifted beyond the threshold from the last adopted consensus
+    /// (`core.mu_hat()`, the cached table read), request a merge.
     fn publish_and_export(&mut self, ctx: &ShardRun, core: &FrontendCore) {
         let now_s = ctx.start.elapsed().as_secs_f64();
-        self.perf.publish(now_s, core.cached_lambda());
+        let lambda = self.lambda_global(core);
+        self.perf.publish(now_s, lambda);
         self.perf.export_views_into(&mut self.view_buf);
-        self.views.store(self.shard, &self.view_buf);
+        self.views.store(self.shard, &self.view_buf, core.lambda_or(0.0));
+        if let Some(threshold) = ctx.divergence_threshold {
+            if self.perf.divergence_from(core.mu_hat()) > threshold {
+                self.views.request_merge();
+            }
+        }
     }
 
     /// The off-hot-path learner duties, run between decisions: drain this
@@ -340,10 +376,11 @@ impl ShardLearnState {
         while let Ok(c) = self.comp_rx.try_recv() {
             self.record(ctx, &c);
         }
+        let lambda = self.lambda_global(core);
         self.benchmarks += super::dispatch_benchmarks(
             &self.dispatcher,
             &ctx.workers,
-            core.cached_lambda(),
+            lambda,
             encode_job(self.shard, BENCH_LOCAL_JOB),
             &self.demand_dist,
             &mut self.rng,

@@ -34,11 +34,26 @@
 //! `c0(μ̄ − λ̂)/k` processes is one Poisson process at the aggregate rate),
 //! and every RNG draw are identical for all `k`, so runs differ only
 //! through what the learners saw.
+//!
+//! *When* and *with whom* state is exchanged is pluggable
+//! ([`LearnerConfig::sync`] → [`crate::learner::SyncPolicy`]):
+//! `Event::EstimateSync` is a policy *check epoch* that may run an
+//! all-to-all merge (periodic — bit-compatible with the original fixed
+//! timer), skip entirely (adaptive — merges fire only when some learner's
+//! local estimates diverge from the last adopted consensus beyond a
+//! relative-error threshold, with a staleness deadline forcing one), or
+//! merge deterministic-RNG scheduler *pairs* (gossip — pairings drawn from
+//! a dedicated stream forked off the sim seed, so runs stay
+//! bit-reproducible). Arrivals round-robin across `k` per-scheduler
+//! [`ArrivalEstimator`]s and the λ̂ shares travel with the consensus
+//! payload ([`crate::learner::LambdaShares`] under gossip), so the learner
+//! window, the benchmark throttle, and the policy's λ̂ all run on
+//! *exchanged* arrival estimates once `k > 1`.
 
 use crate::cluster::{SpeedProfile, Volatility, Worker};
 use crate::learner::{
     merge_estimates_into, relative_error_of, ArrivalEstimator, EstimateView, FakeJobDispatcher,
-    LearnerConfig, PerfLearner,
+    LambdaShares, LearnerConfig, PerfLearner, SyncDecision, SyncKind, SyncPolicy,
 };
 use crate::metrics::{QueueStats, ResponseRecorder};
 use crate::scheduler::{Policy, PolicyKind};
@@ -129,6 +144,14 @@ pub struct SimResult {
     pub incomplete_jobs: usize,
     /// Total simulated time.
     pub duration: f64,
+    /// Estimate-sync check epochs evaluated (periodic: every one merges;
+    /// adaptive: most may skip; gossip: one pairing round each).
+    pub sync_epochs: u64,
+    /// Consensus merge operations performed: all-to-all installs (including
+    /// publish-fused ones at `sync_interval = 0`) count one each, every
+    /// gossip pair counts one — the coordination-cost axis of the
+    /// `multisched` frontier.
+    pub sync_merges: u64,
 }
 
 impl SimResult {
@@ -155,12 +178,31 @@ pub struct Simulation {
     qlen: Vec<usize>,
     policy: Box<dyn Policy>,
     workload: Box<dyn crate::workload::Workload>,
-    arrival_est: ArrivalEstimator,
+    /// One per logical scheduler (§5): arrivals round-robin across them, so
+    /// each estimator sees only the share its scheduler routed. Length 1 is
+    /// the centralized baseline, read live.
+    arrival_ests: Vec<ArrivalEstimator>,
+    /// Round-robin cursor splitting job arrivals across the estimators.
+    arrival_rr: u64,
+    /// λ̂_global installed at the last consensus: the sum of *exchanged*
+    /// per-scheduler shares (`k > 1` only; the centralized engine reads its
+    /// lone estimator live, bit-compatible with the pre-policy engine).
+    lambda_global: f64,
+    /// Whether any λ̂ exchange has happened yet (`k > 1`): before the first
+    /// one the stack bootstraps from the live share sum — the pre-refactor
+    /// engine's behavior — instead of assuming zero load, which would run
+    /// the benchmark dispatcher unthrottled until the first sync epoch.
+    lambda_exchanged: bool,
+    /// Per-scheduler knowledge of everyone's λ̂ share (gossip exchanges
+    /// these pairwise; all-to-all merges refresh every entry).
+    lambda_shares: Vec<LambdaShares>,
     /// One per logical scheduler (§5); `learners.len() == 1` is the
     /// centralized shared-learner baseline.
     learners: Vec<PerfLearner>,
     /// Reused per-scheduler view buffers for estimate-sync consensus.
     views_buf: Vec<Vec<EstimateView>>,
+    /// Reused pair-consensus buffer for gossip merges.
+    pair_consensus: Vec<f64>,
     /// Mean relative speed: the consensus fallback for unsampled workers.
     prior: f64,
     dispatcher: FakeJobDispatcher,
@@ -172,6 +214,14 @@ pub struct Simulation {
     rng_policy: Rng,
     rng_shock: Rng,
     rng_dispatch: Rng,
+    /// When/with whom estimate-sync consensus runs (`Event::EstimateSync`
+    /// is this policy's check epoch). Owns the merge counters for every
+    /// policy-driven merge.
+    sync: SyncPolicy,
+    /// Consensus installs fused into the publish event (`sync_interval <=
+    /// 0`) — the one merge path the policy cannot see; added to
+    /// [`SyncPolicy::merges`] for [`SimResult::sync_merges`].
+    fused_merges: u64,
     // Job bookkeeping.
     /// Reusable arrival buffer (filled by `Workload::next_job_into`).
     job_buf: JobSpec,
@@ -236,9 +286,16 @@ impl Simulation {
             workers,
             speeds,
             policy,
-            arrival_est: ArrivalEstimator::new(cfg.learner.arrival_window),
+            arrival_ests: (0..k)
+                .map(|_| ArrivalEstimator::new(cfg.learner.arrival_window))
+                .collect(),
+            arrival_rr: 0,
+            lambda_global: 0.0,
+            lambda_exchanged: false,
+            lambda_shares: (0..k).map(|_| LambdaShares::new(k)).collect(),
             learners,
             views_buf: (0..k).map(|_| Vec::with_capacity(n)).collect(),
+            pair_consensus: vec![0.0; n],
             prior,
             dispatcher,
             mu_hat,
@@ -247,6 +304,15 @@ impl Simulation {
             rng_policy: seed_rng.fork(),
             rng_shock: seed_rng.fork(),
             rng_dispatch: seed_rng.fork(),
+            // Drawn *after* the four original forks, so adding the sync
+            // stream perturbs none of the pre-policy RNG schedules.
+            sync: SyncPolicy::new(
+                &cfg.learner.sync,
+                cfg.learner.sync_interval,
+                k,
+                seed_rng.next_u64(),
+            ),
+            fused_merges: 0,
             job_buf: JobSpec::default(),
             jobs: HashMap::new(),
             singles_in_flight: 0,
@@ -286,7 +352,7 @@ impl Simulation {
             self.events.push(period, Event::SpeedShock);
         }
         if self.dispatcher.enabled() {
-            let lam = self.arrival_est.lambda_or(0.0);
+            let lam = self.lambda_learn();
             if let Some(gap) = self.dispatcher.next_gap(lam, &mut self.rng_dispatch) {
                 self.events.push(gap, Event::BenchmarkDispatch);
             }
@@ -294,7 +360,9 @@ impl Simulation {
         if self.cfg.learner.enabled && !self.cfg.learner.oracle {
             self.events.push(self.cfg.learner.publish_interval, Event::EstimatePublish);
             if self.cfg.learner.sync_interval > 0.0 {
-                self.events.push(self.cfg.learner.sync_interval, Event::EstimateSync);
+                // Policy check epochs: the sync interval for periodic and
+                // gossip, the resolved minimum merge spacing for adaptive.
+                self.events.push(self.sync.check_interval(), Event::EstimateSync);
             }
         }
         if let Some(interval) = self.cfg.queue_sample {
@@ -330,7 +398,31 @@ impl Simulation {
             utilization,
             incomplete_jobs: self.jobs.len() + self.singles_in_flight,
             duration: self.cfg.duration,
+            sync_epochs: self.sync.epochs(),
+            sync_merges: self.sync.merges() + self.fused_merges,
         }
+    }
+
+    /// λ̂ the learning stack and the policy run on: the lone estimator's
+    /// live estimate in the centralized case, the exchanged global estimate
+    /// (sum of synced shares, stale up to one consensus epoch) when the
+    /// arrival stream is split across `k` schedulers. Until the first
+    /// exchange the live sum bootstraps it, matching the pre-refactor
+    /// engine's live-aggregate λ̂.
+    fn lambda_learn(&self) -> f64 {
+        if self.arrival_ests.len() == 1 {
+            self.arrival_ests[0].lambda_or(0.0)
+        } else if self.lambda_exchanged {
+            self.lambda_global
+        } else {
+            self.lambda_live_sum()
+        }
+    }
+
+    /// Sum of every scheduler's live arrival share — what an all-to-all
+    /// λ̂ exchange yields at this instant.
+    fn lambda_live_sum(&self) -> f64 {
+        self.arrival_ests.iter().map(|e| e.lambda_or(0.0)).sum()
     }
 
     /// Test-mode guard for the incremental queue mirror: `qlen[w]` must
@@ -355,7 +447,12 @@ impl Simulation {
         // allocates nothing.
         let mut spec = std::mem::take(&mut self.job_buf);
         self.workload.next_job_into(&mut self.rng_arrival, &mut spec);
-        self.arrival_est.on_arrival(self.now, spec.len());
+        // §5: each arrival is routed by exactly one scheduler, which alone
+        // feeds its arrival estimator — round-robin models an even split
+        // (k = 1 degenerates to the single centralized estimator).
+        let owner = (self.arrival_rr % self.arrival_ests.len() as u64) as usize;
+        self.arrival_rr += 1;
+        self.arrival_ests[owner].on_arrival(self.now, spec.len());
         self.place_job(&spec);
         self.job_buf = spec;
     }
@@ -375,7 +472,7 @@ impl Simulation {
                     queue_len: &self.qlen,
                     mu_hat: &self.mu_hat,
                     sampler: &self.sampler,
-                    lambda_hat: self.arrival_est.lambda_or(0.0),
+                    lambda_hat: self.lambda_learn(),
                 };
                 self.policy.schedule_job(spec, &view, &mut self.rng_policy)
             };
@@ -429,7 +526,7 @@ impl Simulation {
                 queue_len: &self.qlen,
                 mu_hat: &self.mu_hat,
                 sampler: &self.sampler,
-                lambda_hat: self.arrival_est.lambda_or(0.0),
+                lambda_hat: self.lambda_learn(),
             };
             self.policy.schedule_job(spec, &view, &mut self.rng_policy)
         };
@@ -556,7 +653,7 @@ impl Simulation {
     }
 
     fn on_benchmark_dispatch(&mut self) {
-        let lam = self.arrival_est.lambda_or(0.0);
+        let lam = self.lambda_learn();
         if let Some(gap) = self.dispatcher.next_gap(lam, &mut self.rng_dispatch) {
             self.events.push(self.now + gap, Event::BenchmarkDispatch);
         }
@@ -574,37 +671,54 @@ impl Simulation {
 
     fn on_publish(&mut self) {
         self.events.push(self.now + self.cfg.learner.publish_interval, Event::EstimatePublish);
-        let lam = self.arrival_est.lambda_or(0.0);
+        let lam = self.lambda_learn();
         // Every scheduler re-derives its local estimates from its own
-        // samples (all share the synchronized aggregate λ̂).
+        // samples (all share the synchronized global λ̂).
         let mut params = None;
         for l in &mut self.learners {
             params = Some(l.publish(self.now, lam));
         }
         let params = params.expect("at least one scheduler");
         if self.cfg.learner.sync_interval <= 0.0 {
-            // Tight coupling: consensus at every publish.
-            self.install_consensus(lam);
+            // Tight coupling: consensus at every publish (a merge the sync
+            // policy never sees — counted here).
+            self.install_consensus();
+            self.fused_merges += 1;
         }
         // Ground-truth error trace of what the policy actually decides
         // with — the installed consensus, which under a decoupled sync
-        // cadence is stale by up to `sync_interval` (the effect the
-        // multisched experiment measures).
+        // cadence is stale by up to the policy's merge spacing (the effect
+        // the multisched experiment measures).
         let err = relative_error_of(&self.mu_hat, &self.speeds, params.mu_star);
         self.estimate_error.push((self.now, err));
     }
 
-    /// Decoupled estimate-sync epoch (`sync_interval > 0`).
+    /// Decoupled sync-policy check epoch (`sync_interval > 0`): ask the
+    /// policy what to exchange — everything (periodic, or adaptive past its
+    /// trigger/deadline), nothing, or deterministic scheduler pairs.
     fn on_sync(&mut self) {
-        self.events.push(self.now + self.cfg.learner.sync_interval, Event::EstimateSync);
-        let lam = self.arrival_est.lambda_or(0.0);
-        self.install_consensus(lam);
+        self.events.push(self.now + self.sync.check_interval(), Event::EstimateSync);
+        let diverged = self.sync.kind() == SyncKind::Adaptive
+            && self.max_divergence() > self.sync.threshold();
+        match self.sync.on_epoch(self.now, diverged) {
+            SyncDecision::Skip => {}
+            SyncDecision::MergeAll => self.install_consensus(),
+            SyncDecision::MergePairs(pairs) => self.gossip_step(&pairs),
+        }
     }
 
-    /// §5 consensus: merge the per-scheduler views, adopt the result into
-    /// every learner, and install it as what the policy sees.
-    fn install_consensus(&mut self, lam: f64) {
-        if self.learners.len() == 1 {
+    /// Worst drift of any scheduler's local estimates off the last adopted
+    /// consensus — the adaptive policy's merge trigger.
+    fn max_divergence(&self) -> f64 {
+        self.learners.iter().map(|l| l.divergence_from(&self.mu_hat)).fold(0.0, f64::max)
+    }
+
+    /// §5 all-to-all consensus: merge the per-scheduler views, adopt the
+    /// result into every learner, refresh λ̂_global from everyone's
+    /// exchanged share, and install it all as what the policy sees.
+    fn install_consensus(&mut self) {
+        let k = self.learners.len();
+        if k == 1 {
             // Trivial partition: the lone view *is* the consensus. Copy it
             // directly — the weighted merge computes (μ·s)/s, which can
             // differ from μ by one ulp, and the default engine must stay
@@ -620,9 +734,53 @@ impl Simulation {
             for l in &mut self.learners {
                 l.adopt(&self.mu_hat);
             }
+            // All-to-all λ̂ exchange: every scheduler now knows every live
+            // share, so λ̂_global is simply their sum. (The per-scheduler
+            // `lambda_shares` tables are gossip state — a gossip policy
+            // never takes this MergeAll path with k > 1, so they need no
+            // refresh here.)
+            self.lambda_global = self.lambda_live_sum();
+            self.lambda_exchanged = true;
         }
+        let lam = self.lambda_learn();
         self.sampler.rebuild(&self.mu_hat);
         self.policy.on_estimates(&self.mu_hat, lam * self.workload.mean_demand());
+    }
+
+    /// One gossip round: each pair merges its two views (both adopt the
+    /// pair consensus) and exchanges λ̂ shares (fresher entry wins). The
+    /// decision stream then runs on one scheduler's view, rotating with the
+    /// round counter, so every scheduler's staleness is sampled equally.
+    fn gossip_step(&mut self, pairs: &[(usize, usize)]) {
+        for &(a, b) in pairs {
+            self.learners[a].export_views_into(&mut self.views_buf[0]);
+            self.learners[b].export_views_into(&mut self.views_buf[1]);
+            merge_estimates_into(&self.views_buf[..2], self.prior, &mut self.pair_consensus);
+            self.learners[a].adopt(&self.pair_consensus);
+            self.learners[b].adopt(&self.pair_consensus);
+            let la = self.arrival_ests[a].lambda_or(0.0);
+            let lb = self.arrival_ests[b].lambda_or(0.0);
+            self.lambda_shares[a].learn(a, la, self.now);
+            self.lambda_shares[b].learn(b, lb, self.now);
+            let (sa, sb) = pair_mut(&mut self.lambda_shares, a, b);
+            LambdaShares::exchange(sa, sb);
+        }
+        let k = self.learners.len() as u64;
+        let s = (self.sync.round() % k) as usize;
+        self.mu_hat.copy_from_slice(self.learners[s].mu_hat());
+        // Early rounds know only a few shares: extrapolate over coverage
+        // rather than installing a badly incomplete partial sum, and keep
+        // the live bootstrap for a scheduler that has heard nothing (it
+        // sat out every round so far).
+        match self.lambda_shares[s].extrapolated_total() {
+            Some(lambda) => {
+                self.lambda_global = lambda;
+                self.lambda_exchanged = true;
+            }
+            None => self.lambda_global = self.lambda_live_sum(),
+        }
+        self.sampler.rebuild(&self.mu_hat);
+        self.policy.on_estimates(&self.mu_hat, self.lambda_global * self.workload.mean_demand());
     }
 
     fn on_shock(&mut self) {
@@ -661,6 +819,18 @@ impl Simulation {
         if let Some(q) = self.queues.as_mut() {
             q.record(&self.qlen);
         }
+    }
+}
+
+/// Disjoint mutable references to two distinct slice elements.
+fn pair_mut<T>(xs: &mut [T], a: usize, b: usize) -> (&mut T, &mut T) {
+    assert!(a != b, "gossip pair must be two distinct schedulers");
+    if a < b {
+        let (lo, hi) = xs.split_at_mut(b);
+        (&mut lo[a], &mut hi[0])
+    } else {
+        let (lo, hi) = xs.split_at_mut(a);
+        (&mut hi[0], &mut lo[b])
     }
 }
 
@@ -770,6 +940,61 @@ mod tests {
         let r = run(cfg);
         assert!(r.responses.count() > 1000, "completed {}", r.responses.count());
         assert!(r.incomplete_jobs < 100, "backlog {}", r.incomplete_jobs);
+    }
+
+    #[test]
+    fn periodic_policy_merges_at_every_check_epoch() {
+        let mut cfg = base();
+        cfg.learner =
+            LearnerConfig { schedulers: 4, sync_interval: 1.0, ..LearnerConfig::default() };
+        let r = run(cfg);
+        assert!(r.sync_epochs > 50, "epochs {}", r.sync_epochs);
+        // Fixed-timer all-to-all: every check epoch is a merge.
+        assert_eq!(r.sync_merges, r.sync_epochs);
+    }
+
+    #[test]
+    fn adaptive_policy_completes_with_fewer_merges() {
+        use crate::learner::SyncPolicyConfig;
+        let mut cfg = base();
+        cfg.learner = LearnerConfig {
+            schedulers: 4,
+            sync_interval: 1.0,
+            sync: SyncPolicyConfig::adaptive(0.1),
+            ..LearnerConfig::default()
+        };
+        let r = run(cfg.clone());
+        assert!(r.responses.count() > 1000, "completed {}", r.responses.count());
+        assert!(r.sync_merges < r.sync_epochs, "adaptive never skipped a merge");
+        // The staleness deadline (10 × interval by default) still forces
+        // periodic consolidation on a static cluster.
+        assert!(r.sync_merges >= 1, "deadline never forced a merge");
+        // Deterministic like every other mode.
+        let b = run(cfg);
+        assert_eq!(r.completed_real, b.completed_real);
+        assert_eq!(r.sync_merges, b.sync_merges);
+    }
+
+    #[test]
+    fn gossip_policy_runs_pairwise_and_reproduces_bitwise() {
+        use crate::learner::SyncPolicyConfig;
+        let mut cfg = base();
+        cfg.learner = LearnerConfig {
+            schedulers: 4,
+            sync_interval: 0.5,
+            sync: SyncPolicyConfig::gossip(),
+            ..LearnerConfig::default()
+        };
+        let a = run(cfg.clone());
+        assert!(a.responses.count() > 1000, "completed {}", a.responses.count());
+        // 4 schedulers: every round merges exactly 2 disjoint pairs.
+        assert_eq!(a.sync_merges, 2 * a.sync_epochs, "pairing shape broke");
+        assert!(a.estimate_error.last().unwrap().1 < 0.5, "gossip consensus diverged");
+        // Pairings come from a dedicated seed-forked stream: bit-stable.
+        let b = run(cfg);
+        assert_eq!(a.completed_real, b.completed_real);
+        assert_eq!(a.completed_bench, b.completed_bench);
+        assert_eq!(a.responses.mean().to_bits(), b.responses.mean().to_bits());
     }
 
     #[test]

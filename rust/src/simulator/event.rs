@@ -40,9 +40,12 @@ pub enum Event {
     /// The learner publishes fresh estimates and the proportional sampler
     /// is rebuilt.
     EstimatePublish,
-    /// Multi-scheduler estimate-sync epoch (§5): the per-scheduler learner
-    /// views are merged and the consensus installed. Only scheduled when
-    /// `sync_interval > 0` decouples consensus from the publish cadence.
+    /// Multi-scheduler estimate-sync *check epoch* (§5): the sync policy
+    /// decides what to exchange — an all-to-all merge (periodic, or
+    /// adaptive past its divergence trigger / staleness deadline), nothing
+    /// (adaptive below threshold), or deterministic scheduler pairs
+    /// (gossip). Only scheduled when `sync_interval > 0` decouples
+    /// consensus from the publish cadence.
     EstimateSync,
     /// The environment shocks: worker speeds are randomly permuted
     /// (§6.1/§6.2: "randomly permute the worker speeds every X minutes").

@@ -1,0 +1,162 @@
+//! Acceptance suite for the pluggable consensus layer.
+//!
+//! Pins the three contract points of the sync-policy refactor:
+//!
+//! 1. `periodic` is the original engine — `tests/determinism.rs` already
+//!    pins its bit-identity against the fused-consensus path; here the
+//!    default-constructed config is pinned to the periodic policy so no
+//!    caller silently changes strategy.
+//! 2. On a **stable** cluster, `adaptive` performs strictly fewer merges
+//!    than `periodic` at the same interval (coordination saved when
+//!    estimates are not moving).
+//! 3. On the **volatile S2 sweep** (the multisched cell), `adaptive` stays
+//!    within 5% of periodic's mean response time — the saved merges do not
+//!    cost scheduling quality, because divergence-triggered merges fire
+//!    exactly when shocks invalidate the estimates.
+
+use rosella::cluster::{SpeedProfile, Volatility};
+use rosella::learner::{LearnerConfig, SyncKind, SyncPolicyConfig};
+use rosella::scheduler::{PolicyKind, TieRule};
+use rosella::simulator::{run, SimConfig};
+use rosella::workload::WorkloadKind;
+
+fn stable_cfg(sync: SyncPolicyConfig) -> SimConfig {
+    SimConfig {
+        seed: 20200417,
+        duration: 180.0,
+        warmup: 30.0,
+        speeds: SpeedProfile::S1,
+        volatility: Volatility::Static,
+        workload: WorkloadKind::Synthetic,
+        load: 0.7,
+        policy: PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
+        learner: LearnerConfig {
+            schedulers: 4,
+            sync_interval: 0.5,
+            sync,
+            ..LearnerConfig::default()
+        },
+        queue_sample: None,
+    }
+}
+
+fn volatile_cfg(sync: SyncPolicyConfig) -> SimConfig {
+    SimConfig {
+        seed: 20200417,
+        duration: 240.0,
+        warmup: 40.0,
+        speeds: SpeedProfile::S2,
+        volatility: Volatility::Permute { period: 50.0 },
+        workload: WorkloadKind::Synthetic,
+        load: 0.8,
+        policy: PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
+        learner: LearnerConfig {
+            schedulers: 4,
+            sync_interval: 1.0,
+            sync,
+            ..LearnerConfig::default()
+        },
+        queue_sample: None,
+    }
+}
+
+#[test]
+fn default_config_is_the_periodic_policy() {
+    // The bit-compatibility pins in tests/determinism.rs run against
+    // LearnerConfig::default(); this keeps them meaning "periodic".
+    let d = LearnerConfig::default();
+    assert_eq!(d.sync.kind, SyncKind::Periodic);
+    assert_eq!(d.sync, SyncPolicyConfig::periodic());
+}
+
+#[test]
+fn adaptive_performs_strictly_fewer_merges_on_a_stable_cluster() {
+    let periodic = run(stable_cfg(SyncPolicyConfig::periodic()));
+    let adaptive = run(stable_cfg(SyncPolicyConfig::adaptive(0.1)));
+    assert!(periodic.responses.count() > 1000, "periodic {}", periodic.responses.count());
+    assert!(adaptive.responses.count() > 1000, "adaptive {}", adaptive.responses.count());
+    // Periodic merges at every check epoch by construction.
+    assert_eq!(periodic.sync_merges, periodic.sync_epochs);
+    assert!(
+        adaptive.sync_merges < periodic.sync_merges,
+        "adaptive must save coordination on a stable cluster: {} vs {}",
+        adaptive.sync_merges,
+        periodic.sync_merges
+    );
+    // And not marginally: with static speeds, post-warmup divergence stays
+    // under the threshold, so merges collapse toward the forced staleness
+    // deadline (10 × interval ⇒ ≤ ~1/10th of periodic's, plus the initial
+    // learning transient where divergence genuinely triggers).
+    assert!(
+        adaptive.sync_merges * 2 < periodic.sync_merges,
+        "adaptive saved less than half the merges: {} vs {}",
+        adaptive.sync_merges,
+        periodic.sync_merges
+    );
+}
+
+#[test]
+fn adaptive_stays_within_5_percent_on_the_volatile_s2_sweep() {
+    // Tight threshold + explicit bounds: merges fire promptly when a speed
+    // permutation makes the estimates diverge, idle in between.
+    let sync = SyncPolicyConfig { max_interval: 2.0, ..SyncPolicyConfig::adaptive(0.05) };
+    let periodic = run(volatile_cfg(SyncPolicyConfig::periodic()));
+    let adaptive = run(volatile_cfg(sync));
+    assert!(periodic.responses.count() > 1000);
+    assert!(adaptive.responses.count() > 1000);
+    let ratio = adaptive.responses.mean() / periodic.responses.mean();
+    assert!(
+        (ratio - 1.0).abs() <= 0.05,
+        "adaptive drifted {:.2}% off periodic's mean response on volatile S2",
+        100.0 * (ratio - 1.0)
+    );
+    assert!(
+        adaptive.sync_merges <= periodic.sync_merges,
+        "adaptive spent more merges than the fixed timer: {} vs {}",
+        adaptive.sync_merges,
+        periodic.sync_merges
+    );
+}
+
+#[test]
+fn gossip_converges_on_the_volatile_sweep_and_reproduces_bitwise() {
+    let cfg = volatile_cfg(SyncPolicyConfig::gossip());
+    let a = run(cfg.clone());
+    let b = run(cfg);
+    assert!(a.responses.count() > 1000, "completed {}", a.responses.count());
+    // k = 4: two disjoint pair merges per round, every round.
+    assert_eq!(a.sync_merges, 2 * a.sync_epochs);
+    // Pairwise-only exchange still keeps the installed consensus usable.
+    let final_err = a.estimate_error.last().unwrap().1;
+    assert!(final_err < 0.6, "gossip consensus error {final_err}");
+    // Pairings come from a seed-forked stream: bit-reproducible.
+    assert_eq!(a.completed_real, b.completed_real);
+    assert_eq!(a.completed_bench, b.completed_bench);
+    assert_eq!(a.responses.mean().to_bits(), b.responses.mean().to_bits());
+}
+
+#[test]
+fn sync_policies_exchange_lambda_shares_not_even_splits() {
+    // All policies must install a λ̂_global assembled from exchanged
+    // shares: with k = 4 round-robin arrival routing, every estimator sees
+    // ~1/4 of the stream, and the benchmark dispatcher still runs at the
+    // aggregate-budget rate — completed benchmark counts should be in the
+    // same ballpark as the centralized engine's, not 4× off.
+    let mut one = stable_cfg(SyncPolicyConfig::periodic());
+    one.learner.schedulers = 1;
+    one.learner.sync_interval = 0.0;
+    let central = run(one);
+    for sync in [
+        SyncPolicyConfig::periodic(),
+        SyncPolicyConfig::adaptive(0.1),
+        SyncPolicyConfig::gossip(),
+    ] {
+        let split = run(stable_cfg(sync));
+        let ratio = split.completed_bench as f64 / central.completed_bench.max(1) as f64;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "{:?}: benchmark budget drifted {ratio}x off the centralized engine",
+            sync.kind
+        );
+    }
+}
