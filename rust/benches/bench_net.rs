@@ -1,0 +1,109 @@
+//! Cross-process vs in-process plane: what does the wire cost?
+//!
+//! Runs the same workload twice — the in-process sharded plane
+//! (`plane::run_plane`, per-shard learners) and the loopback cross-process
+//! plane (pool server + k TCP frontends) — and reports aggregate task
+//! throughput and merge counts side by side. The acceptance bar from the
+//! roadmap is comparability, not parity: the net plane pays one RTT of
+//! probe staleness per beat, which this harness makes visible.
+//!
+//! `cargo bench --bench bench_net`
+
+use rosella::learner::SyncPolicyConfig;
+use rosella::net::{run_remote_frontend, ConnectConfig, NetServer, NetServerConfig};
+use rosella::plane::{run_plane, LearnerMode, PlaneConfig};
+use std::thread;
+
+fn in_process(k: usize, cfg: &NetServerConfig) -> (f64, u64, u64) {
+    // Every knob the net side runs with is forwarded, so the two planes
+    // execute the same workload under the same policy — the ratio below
+    // isolates the wire cost, nothing else.
+    let policy = match rosella::scheduler::PolicyKind::parse(&cfg.policy) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("bad policy '{}': {e}", cfg.policy);
+            std::process::exit(2);
+        }
+    };
+    let plane = PlaneConfig {
+        speeds: cfg.speeds.clone(),
+        frontends: k,
+        policy,
+        rate: cfg.rate,
+        duration: cfg.duration,
+        mean_demand: cfg.mean_demand,
+        batch: cfg.batch,
+        seed: cfg.seed,
+        publish_interval: cfg.publish_interval,
+        warmup: cfg.warmup,
+        fake_jobs: cfg.fake_jobs,
+        learners: LearnerMode::PerShard,
+        sync_interval: cfg.sync_interval,
+        sync_policy: cfg.sync_policy,
+        ..PlaneConfig::default()
+    };
+    match run_plane(plane) {
+        Ok(r) => (r.completed as f64 / r.elapsed, r.completed, r.sync_merges),
+        Err(e) => {
+            eprintln!("in-process plane failed: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cross_process(k: usize, cfg: &NetServerConfig) -> (f64, u64, u64) {
+    let mut cfg = cfg.clone();
+    cfg.frontends = k;
+    let server = match NetServer::bind(cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bind failed: {e}");
+            std::process::exit(2);
+        }
+    };
+    let addr = server.local_addr().expect("local addr").to_string();
+    let server_handle = thread::spawn(move || server.serve());
+    let frontends: Vec<_> = (0..k)
+        .map(|shard| {
+            let addr = addr.clone();
+            thread::spawn(move || run_remote_frontend(&ConnectConfig::new(addr, shard, k)))
+        })
+        .collect();
+    for h in frontends {
+        if let Err(e) = h.join().expect("frontend thread") {
+            eprintln!("frontend failed: {e}");
+            std::process::exit(2);
+        }
+    }
+    match server_handle.join().expect("server thread") {
+        Ok(r) => (r.tasks_per_sec, r.completed, r.sync_merges),
+        Err(e) => {
+            eprintln!("server failed: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn main() {
+    let base = NetServerConfig {
+        listen: "127.0.0.1:0".into(),
+        speeds: vec![2.0, 1.0, 1.0, 1.0, 0.5, 0.5, 0.25, 0.25],
+        rate: 400.0,
+        duration: 2.0,
+        mean_demand: 0.005,
+        sync_interval: 0.2,
+        sync_policy: SyncPolicyConfig::periodic(),
+        ..NetServerConfig::default()
+    };
+    println!("-- in-process vs cross-process plane ({} workers) --", base.speeds.len());
+    println!("k   in-proc tasks/s   net tasks/s   ratio   in-proc merges   net merges");
+    for k in [1usize, 2, 4] {
+        let (ip_rate, _, ip_merges) = in_process(k, &base);
+        let (net_rate, net_done, net_merges) = cross_process(k, &base);
+        println!(
+            "{k}   {ip_rate:>15.0}   {net_rate:>11.0}   {:>5.2}   {ip_merges:>14}   {net_merges:>10}",
+            net_rate / ip_rate.max(1.0)
+        );
+        assert!(net_done > 0, "cross-process run completed nothing at k={k}");
+    }
+}

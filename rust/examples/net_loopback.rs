@@ -1,0 +1,67 @@
+//! Loopback demonstration of the cross-process scheduling plane: one pool
+//! server plus two remote scheduler frontends over real TCP on 127.0.0.1.
+//!
+//! The same run as two OS processes:
+//!
+//! ```text
+//! rosella plane --listen 127.0.0.1:7411 --frontends 2 --duration 2 \
+//!     --sync-interval 0.2 --json BENCH_net.json &
+//! rosella frontend --connect 127.0.0.1:7411 --shard 0/2 &
+//! rosella frontend --connect 127.0.0.1:7411 --shard 1/2
+//! ```
+//!
+//! (learner ownership is inherently per-frontend on the net plane, so
+//! there is no `--learners` flag on the `--listen` surface)
+//!
+//! ```bash
+//! cargo run --example net_loopback
+//! ```
+
+use rosella::learner::SyncPolicyConfig;
+use rosella::net::{run_remote_frontend, ConnectConfig, NetServer, NetServerConfig};
+use std::thread;
+
+fn main() {
+    let cfg = NetServerConfig {
+        listen: "127.0.0.1:0".into(),
+        frontends: 2,
+        speeds: vec![2.0, 1.0, 1.0, 0.5, 0.25],
+        rate: 300.0,
+        duration: 2.0,
+        mean_demand: 0.004,
+        sync_interval: 0.2,
+        sync_policy: SyncPolicyConfig::adaptive(0.1),
+        ..NetServerConfig::default()
+    };
+    let server = NetServer::bind(cfg).expect("bind loopback");
+    let addr = server.local_addr().expect("local addr").to_string();
+    println!("pool server listening on {addr}\n");
+    let server_handle = thread::spawn(move || server.serve());
+
+    let frontends: Vec<_> = (0..2)
+        .map(|shard| {
+            let addr = addr.clone();
+            thread::spawn(move || run_remote_frontend(&ConnectConfig::new(addr, shard, 2)))
+        })
+        .collect();
+    for h in frontends {
+        match h.join().expect("frontend thread") {
+            Ok(report) => println!("{}", report.render()),
+            Err(e) => {
+                eprintln!("frontend failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    match server_handle.join().expect("server thread") {
+        Ok(report) => {
+            println!("{}", report.render());
+            assert_eq!(report.completed, report.dispatched, "tasks lost across the wire");
+            assert!(report.sync_merges >= 1, "no consensus merge crossed the wire");
+        }
+        Err(e) => {
+            eprintln!("server failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -192,6 +192,138 @@ pub fn sim_config_from_file(path: &str) -> Result<SimConfig, ConfigError> {
     sim_config_from_str(&s)
 }
 
+/// Options of the `net` JSON block configuring the cross-process plane
+/// (`rosella plane --listen` / `rosella frontend --config`). All fields
+/// are optional so one file can configure either side:
+///
+/// ```json
+/// { "net": { "listen": "127.0.0.1:7411", "frontends": 2,
+///            "connect": "127.0.0.1:7411", "shard": "0/2",
+///            "read_timeout": 30.0 } }
+/// ```
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NetOptions {
+    /// Pool-server listen address (`host:port`).
+    pub listen: Option<String>,
+    /// Remote scheduler count the pool server waits for.
+    pub frontends: Option<usize>,
+    /// Frontend connect address (`host:port`).
+    pub connect: Option<String>,
+    /// Frontend shard identity `(i, k)`.
+    pub shard: Option<(usize, usize)>,
+    /// Per-read socket timeout in seconds.
+    pub read_timeout: Option<f64>,
+}
+
+impl NetOptions {
+    /// Overlay these options onto a pool-server configuration.
+    pub fn apply_server(&self, cfg: &mut crate::net::NetServerConfig) {
+        if let Some(l) = &self.listen {
+            cfg.listen = l.clone();
+        }
+        if let Some(f) = self.frontends {
+            cfg.frontends = f;
+        }
+        if let Some(t) = self.read_timeout {
+            cfg.read_timeout = std::time::Duration::from_secs_f64(t);
+        }
+    }
+
+    /// Overlay these options onto a frontend connection configuration.
+    pub fn apply_frontend(&self, cfg: &mut crate::net::ConnectConfig) {
+        if let Some(c) = &self.connect {
+            cfg.addr = c.clone();
+        }
+        if let Some((shard, shards)) = self.shard {
+            cfg.shard = shard;
+            cfg.shards = shards;
+        }
+        if let Some(t) = self.read_timeout {
+            cfg.read_timeout = std::time::Duration::from_secs_f64(t);
+        }
+    }
+}
+
+fn net_addr(v: &Json, key: &str) -> Result<Option<String>, ConfigError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(x) => {
+            let s = x
+                .as_str()
+                .ok_or_else(|| bad(format!("'net.{key}' must be a string")))?;
+            if s.is_empty() || !s.contains(':') {
+                return Err(bad(format!(
+                    "'net.{key}' must be a host:port address (got '{s}')"
+                )));
+            }
+            Ok(Some(s.to_string()))
+        }
+    }
+}
+
+/// Parse and validate a `net` block. Accepts either the block itself or a
+/// document containing it under the `"net"` key.
+pub fn net_from_json(v: &Json) -> Result<NetOptions, ConfigError> {
+    let v = v.get("net").unwrap_or(v);
+    let frontends = match v.get("frontends") {
+        None => None,
+        Some(x) => {
+            let f = x
+                .as_u64()
+                .ok_or_else(|| bad("'net.frontends' must be an integer"))?
+                as usize;
+            if f == 0 {
+                return Err(bad("'net.frontends' must be at least 1"));
+            }
+            Some(f)
+        }
+    };
+    let shard = match v.get("shard") {
+        None => None,
+        Some(x) => {
+            let s = x.as_str().ok_or_else(|| bad("'net.shard' must be a string like \"0/2\""))?;
+            Some(crate::net::parse_shard_spec(s).map_err(bad)?)
+        }
+    };
+    let read_timeout = match v.get("read_timeout") {
+        None => None,
+        Some(x) => {
+            let t = x.as_f64().ok_or_else(|| bad("'net.read_timeout' must be a number"))?;
+            if !(t > 0.0 && t.is_finite()) {
+                return Err(bad("'net.read_timeout' must be positive and finite"));
+            }
+            Some(t)
+        }
+    };
+    let opts = NetOptions {
+        listen: net_addr(v, "listen")?,
+        frontends,
+        connect: net_addr(v, "connect")?,
+        shard,
+        read_timeout,
+    };
+    if let (Some((_, k)), Some(f)) = (opts.shard, opts.frontends) {
+        if k != f {
+            return Err(bad(format!(
+                "'net.shard' names {k} schedulers but 'net.frontends' is {f}"
+            )));
+        }
+    }
+    Ok(opts)
+}
+
+/// Load a [`NetOptions`] from a JSON string.
+pub fn net_options_from_str(s: &str) -> Result<NetOptions, ConfigError> {
+    let v = parse(s).map_err(|e| bad(e.to_string()))?;
+    net_from_json(&v)
+}
+
+/// Load a [`NetOptions`] from a file path.
+pub fn net_options_from_file(path: &str) -> Result<NetOptions, ConfigError> {
+    let s = std::fs::read_to_string(path).map_err(|e| bad(format!("read {path}: {e}")))?;
+    net_options_from_str(&s)
+}
+
 /// Validate cross-field constraints.
 pub fn validate(cfg: &SimConfig) -> Result<(), ConfigError> {
     if !(cfg.duration > 0.0) {
@@ -335,6 +467,85 @@ mod tests {
                  "sync": {"policy": "adaptive", "min_interval": 9.0, "max_interval": 2.0}}}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn negative_and_zero_sync_thresholds_rejected_at_config_time() {
+        // Satellite pin: a NaN cannot be written in JSON, but negative and
+        // zero thresholds can — and must fail validation with a message
+        // naming the constraint, instead of yielding a policy that always
+        // (negative) or never merges.
+        for bad in ["-0.1", "0", "-1e9"] {
+            let doc = format!(
+                r#"{{"learner": {{"schedulers": 4, "sync_interval": 1.0,
+                     "sync": {{"policy": "adaptive", "threshold": {bad}}}}}}}"#
+            );
+            let err = sim_config_from_str(&doc).unwrap_err();
+            assert!(err.0.contains("positive and finite"), "{bad}: {err}");
+        }
+        // The threshold field is checked under every policy, not just
+        // adaptive: a poisoned field must not ride along silently.
+        let err = sim_config_from_str(
+            r#"{"learner": {"sync": {"policy": "periodic", "threshold": -0.5}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.0.contains("positive and finite"), "{err}");
+    }
+
+    #[test]
+    fn net_block_parses_and_validates() {
+        let opts = net_options_from_str(
+            r#"{"net": {"listen": "127.0.0.1:7411", "frontends": 2,
+                        "connect": "127.0.0.1:7411", "shard": "1/2",
+                        "read_timeout": 10.0}}"#,
+        )
+        .unwrap();
+        assert_eq!(opts.listen.as_deref(), Some("127.0.0.1:7411"));
+        assert_eq!(opts.frontends, Some(2));
+        assert_eq!(opts.shard, Some((1, 2)));
+        assert_eq!(opts.read_timeout, Some(10.0));
+        // The bare block (no "net" wrapper) parses identically.
+        let bare = net_options_from_str(r#"{"listen": "0.0.0.0:9000"}"#).unwrap();
+        assert_eq!(bare.listen.as_deref(), Some("0.0.0.0:9000"));
+        assert_eq!(bare.frontends, None);
+        // An empty document is a valid, all-default block.
+        assert_eq!(net_options_from_str("{}").unwrap(), NetOptions::default());
+    }
+
+    #[test]
+    fn net_block_rejects_bad_fields() {
+        assert!(net_options_from_str(r#"{"net": {"listen": "no-port"}}"#).is_err());
+        assert!(net_options_from_str(r#"{"net": {"listen": ""}}"#).is_err());
+        assert!(net_options_from_str(r#"{"net": {"listen": 7}}"#).is_err());
+        assert!(net_options_from_str(r#"{"net": {"frontends": 0}}"#).is_err());
+        assert!(net_options_from_str(r#"{"net": {"shard": "2/2"}}"#).is_err());
+        assert!(net_options_from_str(r#"{"net": {"shard": "0-2"}}"#).is_err());
+        assert!(net_options_from_str(r#"{"net": {"read_timeout": 0}}"#).is_err());
+        assert!(net_options_from_str(r#"{"net": {"read_timeout": -5}}"#).is_err());
+        // Cross-field: the shard's k must agree with the frontend count.
+        assert!(
+            net_options_from_str(r#"{"net": {"frontends": 4, "shard": "0/2"}}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn net_options_overlay_both_sides() {
+        let opts = net_options_from_str(
+            r#"{"net": {"listen": "127.0.0.1:7500", "frontends": 3,
+                        "connect": "127.0.0.1:7500", "shard": "2/3",
+                        "read_timeout": 5.0}}"#,
+        )
+        .unwrap();
+        let mut server = crate::net::NetServerConfig::default();
+        opts.apply_server(&mut server);
+        assert_eq!(server.listen, "127.0.0.1:7500");
+        assert_eq!(server.frontends, 3);
+        assert_eq!(server.read_timeout, std::time::Duration::from_secs_f64(5.0));
+        let mut fe = crate::net::ConnectConfig::new("x:1", 0, 1);
+        opts.apply_frontend(&mut fe);
+        assert_eq!(fe.addr, "127.0.0.1:7500");
+        assert_eq!((fe.shard, fe.shards), (2, 3));
+        assert_eq!(fe.read_timeout, std::time::Duration::from_secs_f64(5.0));
     }
 
     #[test]

@@ -223,6 +223,30 @@ impl SyncPolicyConfig {
         Self { kind: SyncKind::Gossip, ..Self::periodic() }
     }
 
+    /// Shard-count-aware adaptive threshold: the divergence trigger
+    /// resolved for a `schedulers`-scheduler topology.
+    ///
+    /// With `k` schedulers each learner sees only ~1/k of the completion
+    /// stream (its window is ⌈L/k⌉), so its local estimates carry ≈√k
+    /// times the sampling noise of the centralized learner — and so does
+    /// the divergence statistic measured against the adopted consensus.
+    /// Comparing that noisier statistic to a *fixed* threshold makes
+    /// noise-triggered merges increasingly likely as k grows: exactly the
+    /// over-merging §2's minimum-coordination goal forbids. Normalizing
+    /// the statistic by 1/√k — applied here as the equivalent √k scale-up
+    /// of the configured threshold — keeps the noise-trigger probability
+    /// roughly k-independent, so adding schedulers does not silently buy
+    /// more coordination. `scaled_threshold(1)` is the identity.
+    pub fn scaled_threshold(&self, schedulers: usize) -> f64 {
+        assert!(schedulers >= 1);
+        if schedulers == 1 {
+            // Bit-exact identity for the centralized topology.
+            self.threshold
+        } else {
+            self.threshold * (schedulers as f64).sqrt()
+        }
+    }
+
     /// Resolved minimum merge spacing / adaptive check cadence.
     pub fn resolved_min(&self, sync_interval: f64) -> f64 {
         if self.min_interval > 0.0 {
@@ -244,7 +268,11 @@ impl SyncPolicyConfig {
     /// Validate against the host's sync interval (cross-field constraints).
     pub fn validate(&self, sync_interval: f64) -> Result<(), String> {
         if !(self.threshold > 0.0 && self.threshold.is_finite()) {
-            return Err("sync threshold must be positive and finite".into());
+            return Err(format!(
+                "sync threshold must be positive and finite (got {}): a NaN or negative \
+                 threshold silently yields a policy that never or always merges",
+                self.threshold
+            ));
         }
         if !(self.min_interval >= 0.0 && self.min_interval.is_finite()) {
             return Err("sync min_interval must be finite and non-negative".into());
@@ -314,7 +342,8 @@ impl SyncPolicy {
         let max_interval = cfg.resolved_max(sync_interval);
         Self {
             kind: cfg.kind,
-            threshold: cfg.threshold,
+            // Shard-count-aware trigger: see `scaled_threshold`'s rationale.
+            threshold: cfg.scaled_threshold(schedulers),
             min_interval,
             max_interval,
             check_interval: match cfg.kind {
@@ -335,7 +364,9 @@ impl SyncPolicy {
         self.kind
     }
 
-    /// Adaptive divergence threshold.
+    /// Adaptive divergence threshold, already √k-scaled for the scheduler
+    /// count this policy was built for
+    /// ([`SyncPolicyConfig::scaled_threshold`]).
     pub fn threshold(&self) -> f64 {
         self.threshold
     }
@@ -652,6 +683,49 @@ mod tests {
             ..SyncPolicyConfig::adaptive(0.1)
         };
         assert!(inverted.validate(1.0).is_err());
+    }
+
+    #[test]
+    fn threshold_validation_names_the_rejected_value() {
+        // The satellite contract: NaN and negative thresholds are config
+        // errors with a clear message, not policies that never (NaN
+        // comparisons are all false) or always (negative) merge.
+        for bad in [f64::NAN, -0.1, 0.0, f64::INFINITY] {
+            let err = SyncPolicyConfig::adaptive(bad).validate(1.0).unwrap_err();
+            assert!(err.contains("positive and finite"), "{bad}: {err}");
+        }
+        // The threshold is validated whatever the strategy: a periodic or
+        // gossip config with a poisoned threshold field is still rejected
+        // (the field would silently activate on a later policy switch).
+        let mks: [fn() -> SyncPolicyConfig; 2] =
+            [SyncPolicyConfig::periodic, SyncPolicyConfig::gossip];
+        for mk in mks {
+            let cfg = SyncPolicyConfig { threshold: f64::NAN, ..mk() };
+            assert!(cfg.validate(1.0).is_err(), "{:?} accepted NaN", cfg.kind);
+        }
+    }
+
+    #[test]
+    fn adaptive_threshold_scales_with_the_scheduler_count() {
+        let cfg = SyncPolicyConfig::adaptive(0.1);
+        // k = 1 is the bit-exact identity; k = 4 doubles the bar (√4).
+        assert_eq!(cfg.scaled_threshold(1).to_bits(), 0.1f64.to_bits());
+        assert!((cfg.scaled_threshold(4) - 0.2).abs() < 1e-12);
+        assert!((cfg.scaled_threshold(16) - 0.4).abs() < 1e-12);
+        // The built policy carries the scaled trigger.
+        assert_eq!(SyncPolicy::new(&cfg, 1.0, 1, 7).threshold().to_bits(), 0.1f64.to_bits());
+        let p4 = SyncPolicy::new(&cfg, 1.0, 4, 7);
+        assert!((p4.threshold() - 0.2).abs() < 1e-12);
+        // Behavior pin: a 0.15 relative drift is over the k=1 bar but
+        // under the k=4 bar — the same noise level that would trigger a
+        // lone scheduler must not over-merge a 4-scheduler topology.
+        let quiet = SyncPolicyConfig { max_interval: 1e9, ..cfg };
+        let mut p1 = SyncPolicy::new(&quiet, 1.0, 1, 7);
+        let d = 0.15;
+        assert_eq!(p1.on_epoch(1.0, d > p1.threshold()), SyncDecision::MergeAll);
+        let mut p4 = SyncPolicy::new(&quiet, 1.0, 4, 7);
+        assert_eq!(p4.on_epoch(1.0, d > p4.threshold()), SyncDecision::Skip);
+        assert_eq!(p4.merges(), 0);
     }
 
     #[test]

@@ -37,6 +37,9 @@
 //!   deterministically in the DES engine (`LearnerConfig::schedulers` /
 //!   `sync_interval` / `sync`; `multisched` maps the coordination/quality
 //!   frontier);
+//! * the **cross-process scheduling plane** ([`net`]): a dependency-free
+//!   RPC/wire layer (`std::net::TcpStream` only) that runs the same
+//!   topology across OS processes — see **Cross-process plane** below;
 //! * **experiment drivers** ([`experiments`]) regenerating every figure of
 //!   the paper's evaluation section.
 //!
@@ -85,6 +88,35 @@
 //! policy × threshold × k and reports merges-performed against response
 //! degradation — the coordination/quality frontier.
 //!
+//! ## Cross-process plane
+//!
+//! The paper's §2 claim is parallel scheduling "on multiple machines";
+//! [`net`] makes the landed in-process topology cross-process without a
+//! single new dependency. The pieces:
+//!
+//! * a **versioned, length-prefixed binary wire protocol**
+//!   ([`net::wire`]): explicit little-endian encoding, bit-exact float
+//!   round-trips, hard frame-size bounds, and a message set that is
+//!   exactly the §5 coordination surface — task submit/result, queue-probe
+//!   ticks, [`learner::SyncPayload`] exports, worker-pool handshake;
+//! * a **`Transport` seam** ([`net::Transport`]): the transport-generic §5
+//!   frontend loop ([`net::run_frontend_loop`], built on
+//!   [`plane::FrontendCore`]) runs over in-process channels
+//!   ([`net::LocalTransport`]) or TCP ([`net::TcpTransport`]) unchanged.
+//!   Consensus needs no seam: remote exports land in the same
+//!   [`plane::SharedViews`] slots, so the plane's sync thread (all three
+//!   [`learner::SyncPolicy`] strategies) serves both planes byte-for-byte;
+//! * **two processes**: `rosella plane --listen ADDR` hosts the shared
+//!   worker pool + seqlock estimate table and serves remote schedulers;
+//!   `rosella frontend --connect ADDR --shard i/k` runs a complete §5
+//!   scheduler — private learner, throttled benchmark dispatcher, local
+//!   decisions over served probes — shipping its sync payloads over the
+//!   wire instead of through shared memory.
+//!
+//! A loopback run (one pool + k frontend processes) emits `BENCH_net.json`
+//! with aggregate throughput and cross-process merge counts; CI smokes it
+//! and `benches/bench_net.rs` compares it against the in-process plane.
+//!
 //! ## Quick start
 //!
 //! ```
@@ -119,6 +151,7 @@ pub mod experiments;
 pub mod hotpath;
 pub mod learner;
 pub mod metrics;
+pub mod net;
 pub mod plane;
 pub mod runtime;
 pub mod scheduler;

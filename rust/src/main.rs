@@ -24,6 +24,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("plane") => cmd_plane(&args[1..]),
+        Some("frontend") => cmd_frontend(&args[1..]),
         Some("hotpath") => cmd_hotpath(&args[1..]),
         Some("list") => cmd_list(),
         Some("--help") | Some("-h") | None => {
@@ -47,7 +48,9 @@ fn print_usage() {
          \x20 experiment <name>   regenerate a paper figure (fig8..fig13, theory, all)\n\
          \x20 simulate            run one simulation (flags or --config file.json)\n\
          \x20 serve               run the live coordinator (PJRT payload workers)\n\
-         \x20 plane               sharded-plane stress harness (multi-frontend dispatch)\n\
+         \x20 plane               sharded-plane stress harness (multi-frontend dispatch);\n\
+         \x20                     with --listen ADDR: host the cross-process worker pool\n\
+         \x20 frontend            remote scheduler process (--connect ADDR --shard i/k)\n\
          \x20 hotpath             hot-path benchmarks per cluster size (BENCH_hotpath.json)\n\
          \x20 list                list experiments, policies, profiles\n"
     );
@@ -222,7 +225,14 @@ fn cmd_serve(rest: &[String]) -> i32 {
 
 fn cmd_plane(rest: &[String]) -> i32 {
     let spec = CmdSpec::new("plane", "run the sharded scheduling plane stress harness")
-        .opt("frontends", Some("1,2,4"), "comma-separated frontend counts to sweep")
+        .opt(
+            "frontends",
+            // No CmdSpec default: the in-process sweep applies "1,2,4"
+            // itself, and the --listen server must see only an explicit
+            // single count (or its net-config / built-in default of 2).
+            None,
+            "frontend counts to sweep [default: 1,2,4]; with --listen: the remote scheduler count",
+        )
         .opt("workers", Some("8"), "number of worker threads")
         .opt("speeds", None, "speed profile (defaults to a 2.0..0.25 mix)")
         .opt("policy", Some("ppot"), "scheduling policy")
@@ -236,6 +246,8 @@ fn cmd_plane(rest: &[String]) -> i32 {
         .opt("sync-policy", Some("periodic"), "consensus strategy: periodic | adaptive | gossip")
         .opt("sync-threshold", None, "adaptive sync: relative-error divergence trigger")
         .opt("json", None, "write machine-readable results (e.g. BENCH_plane.json)")
+        .opt("listen", None, "host the cross-process pool server on this host:port")
+        .opt("net-config", None, "JSON file with a `net` block (overrides net flags)")
         .flag("decide-only", "measure raw decision throughput without dispatching")
         .flag("no-fake-jobs", "disable the benchmark-job dispatcher");
     let p = match spec.parse(rest) {
@@ -245,13 +257,45 @@ fn cmd_plane(rest: &[String]) -> i32 {
             return 2;
         }
     };
-    match rosella::plane::plane_cli(&p) {
+    // --listen (or a net-config file) selects the cross-process pool
+    // server; otherwise this is the in-process sweep harness.
+    let result = if p.get("listen").is_some() || p.get("net-config").is_some() {
+        rosella::net::server_cli(&p)
+    } else {
+        rosella::plane::plane_cli(&p)
+    };
+    match result {
         Ok(report) => {
             println!("{report}");
             0
         }
         Err(e) => {
             eprintln!("plane failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_frontend(rest: &[String]) -> i32 {
+    let spec = CmdSpec::new("frontend", "run one remote scheduler frontend")
+        .opt("connect", None, "pool server address (host:port)")
+        .opt("shard", None, "this scheduler's shard spec i/k (e.g. 0/2)")
+        .opt("connect-timeout", None, "seconds to keep retrying the connect [default: 15]")
+        .opt("config", None, "JSON file with a `net` block (overrides flags)");
+    let p = match spec.parse(rest) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    match rosella::net::frontend_cli(&p) {
+        Ok(report) => {
+            println!("{report}");
+            0
+        }
+        Err(e) => {
+            eprintln!("frontend failed: {e}");
             1
         }
     }

@@ -1,0 +1,702 @@
+//! The remote scheduler frontend: the full §5 Rosella stack over a
+//! [`Transport`].
+//!
+//! [`run_frontend_loop`] is the sharded plane's per-scheduler loop —
+//! private [`PerfLearner`] fed by only the completions this scheduler
+//! routed, benchmark dispatcher throttled to `c0(μ̄ − λ̂_global)/k`, local
+//! decision loop over served queue probes, and sync-payload export — with
+//! every interaction with the shared pool routed through the transport
+//! seam. Run it over a [`LocalTransport`](super::transport::LocalTransport)
+//! and it is an in-process shard; over a
+//! [`TcpTransport`](super::transport::TcpTransport)
+//! ([`run_remote_frontend`]) it is `rosella frontend --connect`, a separate
+//! OS process exchanging compact wire messages with the pool server — the
+//! paper's distributed topology made literal.
+//!
+//! Decisions run against the *cached* probe snapshot from the last
+//! coordination beat (refreshed every [`TICK_INTERVAL`]); each submit bumps
+//! its cached probe so back-to-back decisions between refreshes do not
+//! dogpile one worker. That staleness is exactly the coordination price §2
+//! argues is affordable — and the loopback benchmark measures it.
+
+use super::transport::{TcpTransport, Transport};
+use super::wire::{DoneStats, HelloAck, Msg, WireCompletion};
+use crate::learner::{
+    EstimateView, FakeJobDispatcher, PerfLearner, SyncKind, SyncPolicyConfig,
+};
+use crate::metrics::ResponseRecorder;
+use crate::plane::{encode_job, shard_seeds, ArrivalBatcher, FrontendCore, BENCH_LOCAL_JOB};
+use crate::scheduler::PolicyKind;
+use crate::stats::{Exponential, Rng};
+use crate::types::{JobSpec, TaskKind};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Cadence of the coordination beat: probe refresh, completion intake,
+/// consensus adoption, benchmark catch-up.
+pub const TICK_INTERVAL: Duration = Duration::from_millis(2);
+
+/// Run parameters a frontend derives from the server's [`HelloAck`], so
+/// `rosella frontend` needs nothing beyond `--connect` and `--shard`.
+#[derive(Debug, Clone)]
+pub struct RunParams {
+    /// Scheduling policy (parsed from the server's spelling).
+    pub policy: PolicyKind,
+    /// Worker count.
+    pub n: usize,
+    /// Prior speed estimate.
+    pub prior: f64,
+    /// Mean task demand τ̄ (unit-speed seconds).
+    pub mean_demand: f64,
+    /// Guaranteed total throughput μ̄ (tasks/second).
+    pub mu_bar: f64,
+    /// This shard's arrival rate (the aggregate split across shards).
+    pub rate_per_shard: f64,
+    /// Arrival ingestion batch size.
+    pub batch: usize,
+    /// Run seed (per-shard streams via [`shard_seeds`]).
+    pub seed: u64,
+    /// Warmup cutoff for response metrics (seconds).
+    pub warmup: f64,
+    /// Local learner publish/export cadence (seconds).
+    pub publish_interval: f64,
+    /// Whether this frontend runs its benchmark dispatcher.
+    pub fake_jobs: bool,
+    /// Adaptive sync: request a merge when local estimates diverge beyond
+    /// this √k-scaled threshold (`None` under periodic/gossip).
+    pub divergence_threshold: Option<f64>,
+}
+
+impl RunParams {
+    /// Derive the run parameters for one of `shards` schedulers from the
+    /// server's handshake reply.
+    pub fn from_hello_ack(ack: &HelloAck, shards: usize) -> Result<Self, String> {
+        if shards == 0 {
+            return Err("need at least one shard".into());
+        }
+        let n = ack.workers as usize;
+        if n == 0 {
+            return Err("server advertised zero workers".into());
+        }
+        if !(ack.rate > 0.0 && ack.mean_demand > 0.0 && ack.mu_bar > 0.0) {
+            return Err(format!(
+                "server advertised a degenerate run (rate {}, demand {}, mu_bar {})",
+                ack.rate, ack.mean_demand, ack.mu_bar
+            ));
+        }
+        if !(ack.publish_interval > 0.0 && ack.publish_interval.is_finite()) {
+            return Err("server advertised a non-positive publish interval".into());
+        }
+        let policy = PolicyKind::parse(&ack.policy)?;
+        let sync_kind = SyncKind::parse(&ack.sync_policy)?;
+        let divergence_threshold = (sync_kind == SyncKind::Adaptive).then(|| {
+            SyncPolicyConfig::adaptive(ack.sync_threshold).scaled_threshold(shards)
+        });
+        Ok(Self {
+            policy,
+            n,
+            prior: ack.prior,
+            mean_demand: ack.mean_demand,
+            mu_bar: ack.mu_bar,
+            rate_per_shard: ack.rate / shards as f64,
+            batch: (ack.batch as usize).max(1),
+            seed: ack.seed,
+            warmup: ack.warmup,
+            publish_interval: ack.publish_interval,
+            fake_jobs: ack.fake_jobs,
+            divergence_threshold,
+        })
+    }
+}
+
+/// What one frontend reports when its run completes.
+#[derive(Debug)]
+pub struct FrontendReport {
+    /// This frontend's shard index.
+    pub shard: usize,
+    /// Total scheduler count k.
+    pub shards: usize,
+    /// Scheduling decisions made.
+    pub decisions: u64,
+    /// Real tasks submitted.
+    pub dispatched: u64,
+    /// Benchmark tasks submitted.
+    pub benchmarks: u64,
+    /// Completion reports absorbed (real + benchmark).
+    pub completions_seen: u64,
+    /// This scheduler's latency record (only the jobs it routed).
+    pub responses: ResponseRecorder,
+    /// Final consensus estimates this frontend holds.
+    pub final_estimates: Vec<f64>,
+}
+
+impl FrontendReport {
+    /// Final per-frontend statistics for the server's merged report.
+    pub fn done_stats(&self) -> DoneStats {
+        let (mean, p50, p95) = if self.responses.count() > 0 {
+            let five = self.responses.five_num();
+            (self.responses.mean(), five.p50, five.p95)
+        } else {
+            (0.0, 0.0, 0.0)
+        };
+        DoneStats {
+            decisions: self.decisions,
+            dispatched: self.dispatched,
+            benchmarks: self.benchmarks,
+            resp_count: self.responses.count() as u64,
+            resp_mean: mean,
+            resp_p50: p50,
+            resp_p95: p95,
+        }
+    }
+
+    /// Human-readable report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "frontend {}/{}: {} decisions, {} dispatched, {} benchmarks\n",
+            self.shard, self.shards, self.decisions, self.dispatched, self.benchmarks
+        ));
+        out.push_str(&format!("completions absorbed: {}\n", self.completions_seen));
+        if self.responses.count() > 0 {
+            let five = self.responses.five_num();
+            out.push_str(&format!(
+                "latency ms : mean {:.1} | p50 {:.1} | p95 {:.1} ({} jobs)\n",
+                self.responses.mean() * 1e3,
+                five.p50 * 1e3,
+                five.p95 * 1e3,
+                self.responses.count()
+            ));
+        }
+        let est: Vec<String> =
+            self.final_estimates.iter().map(|e| format!("{e:.2}")).collect();
+        out.push_str(&format!("final consensus μ̂: [{}]\n", est.join(", ")));
+        out
+    }
+}
+
+/// The learner half of a frontend's state — everything the coordination
+/// beat touches, kept apart from the decision state so the beat can borrow
+/// it wholesale.
+struct BeatState {
+    perf: PerfLearner,
+    dispatcher: FakeJobDispatcher,
+    demand_dist: Exponential,
+    rng: Rng,
+    responses: ResponseRecorder,
+    view_buf: Vec<EstimateView>,
+    comp_buf: Vec<WireCompletion>,
+    qlen: Vec<usize>,
+    epoch: u64,
+    lambda_consensus: f64,
+    lambda_live: f64,
+    stop: bool,
+    drained: bool,
+    benchmarks: u64,
+    completions_seen: u64,
+    next_publish: Instant,
+    next_bench: Instant,
+    next_tick: Instant,
+    start: Instant,
+    publish_interval: f64,
+    divergence_threshold: Option<f64>,
+    shard: usize,
+}
+
+impl BeatState {
+    /// λ̂_global this scheduler's learning stack runs on: the exchanged
+    /// consensus value when one has been published, otherwise the live sum
+    /// of every scheduler's reported λ̂ₛ (the same bootstrap the in-process
+    /// plane uses, so the §5 throttle never assumes zero load).
+    fn lambda_global(&self) -> f64 {
+        if self.lambda_consensus > 0.0 {
+            self.lambda_consensus
+        } else {
+            self.lambda_live
+        }
+    }
+
+    /// One coordination beat: transport tick, completion intake, consensus
+    /// adoption, benchmark catch-up, and the local publish/export cadence.
+    fn beat<T: Transport>(
+        &mut self,
+        t: &mut T,
+        core: &mut FrontendCore,
+    ) -> Result<(), String> {
+        self.comp_buf.clear();
+        let out = t.tick(self.epoch, core.lambda_or(0.0), &mut self.qlen, &mut self.comp_buf)?;
+        self.lambda_live = out.lambda_live;
+        self.stop |= out.stop;
+        self.drained |= out.drained;
+        if let Some(est) = out.estimates {
+            // Wire-supplied consensus is validated before installation: a
+            // wrong-length vector would desync the policy and sampler.
+            if est.mu_hat.len() != self.qlen.len() {
+                return Err(format!(
+                    "consensus length {} does not match the {}-worker cluster",
+                    est.mu_hat.len(),
+                    self.qlen.len()
+                ));
+            }
+            // Fresh consensus: install it as the decision estimates and
+            // adopt it into the private learner (cold-start fallback).
+            core.set_estimates(&est.mu_hat, est.lambda);
+            self.epoch = est.epoch;
+            self.lambda_consensus = est.lambda;
+            self.perf.adopt(core.mu_hat());
+        }
+        for c in &self.comp_buf {
+            // Completion worker indices come off the wire: bound-check
+            // before indexing the learner's per-worker histories.
+            if c.worker as usize >= self.qlen.len() {
+                return Err(format!(
+                    "completion for unknown worker {} (cluster has {})",
+                    c.worker,
+                    self.qlen.len()
+                ));
+            }
+            self.perf.on_completion(
+                c.worker as usize,
+                c.at.max(0.0),
+                c.duration.max(1e-6),
+                c.demand.max(1e-6),
+            );
+            self.completions_seen += 1;
+            if c.kind == TaskKind::Real {
+                self.responses.record((c.at - c.sojourn).max(0.0), c.at);
+            }
+        }
+        if !self.stop {
+            // The same LEARNER-DISPATCHER catch-up pass the in-process
+            // plane runs, submitted through the transport instead of a
+            // pool enqueue — one throttle loop, two planes.
+            let lambda = self.lambda_global();
+            let workers = self.qlen.len();
+            let shard = self.shard;
+            self.benchmarks += crate::plane::dispatch_benchmarks_with(
+                &self.dispatcher,
+                workers,
+                lambda,
+                &self.demand_dist,
+                &mut self.rng,
+                &mut self.next_bench,
+                |w, demand| {
+                    t.submit(encode_job(shard, BENCH_LOCAL_JOB), w, TaskKind::Benchmark, demand)
+                },
+            )?;
+        }
+        if Instant::now() >= self.next_publish {
+            self.publish_and_export(t, core)?;
+            self.next_publish += Duration::from_secs_f64(self.publish_interval);
+        }
+        self.next_tick = Instant::now() + TICK_INTERVAL;
+        Ok(())
+    }
+
+    /// Publish the local learner and export its sync payload — estimate
+    /// views plus this scheduler's local arrival share λ̂ₛ. Under adaptive
+    /// sync, also run the divergence test against the last adopted
+    /// consensus and flag a merge request.
+    fn publish_and_export<T: Transport>(
+        &mut self,
+        t: &mut T,
+        core: &FrontendCore,
+    ) -> Result<(), String> {
+        let now_s = self.start.elapsed().as_secs_f64();
+        self.perf.publish(now_s, self.lambda_global());
+        self.perf.export_views_into(&mut self.view_buf);
+        let diverged = self
+            .divergence_threshold
+            .is_some_and(|th| self.perf.divergence_from(core.mu_hat()) > th);
+        t.export(&self.view_buf, core.lambda_or(0.0), diverged)
+    }
+}
+
+/// Run the full §5 frontend loop over `t` until the plane signals stop,
+/// then drain: absorb every completion this scheduler routed and export the
+/// final learner view for the drain-time consensus epoch.
+pub fn run_frontend_loop<T: Transport>(
+    t: &mut T,
+    p: &RunParams,
+    shard: usize,
+    shards: usize,
+) -> Result<FrontendReport, String> {
+    if shard >= shards {
+        return Err(format!("shard {shard} out of range for {shards} shards"));
+    }
+    let (core_seed, stream_seed) = shard_seeds(p.seed, shard);
+    let mut core =
+        FrontendCore::new(&p.policy, p.n, p.prior, p.mean_demand, 128, core_seed);
+    let mut stream_rng = Rng::new(stream_seed);
+    let mut batcher = ArrivalBatcher::new(p.rate_per_shard, p.mean_demand, p.batch);
+    let mut batch = Vec::with_capacity(p.batch);
+    let mut job = JobSpec::single(p.mean_demand);
+    let start = Instant::now();
+    let mut state = BeatState {
+        perf: PerfLearner::new(p.n, 10.0, p.mean_demand, p.mu_bar, p.prior, 0.0)
+            .shared_among(shards),
+        dispatcher: FakeJobDispatcher::new_sharded(0.1, p.mu_bar, p.fake_jobs, shards),
+        demand_dist: Exponential::with_mean(p.mean_demand),
+        rng: Rng::new(core_seed ^ stream_seed ^ 0xFA_CE),
+        responses: ResponseRecorder::new(p.warmup),
+        view_buf: Vec::with_capacity(p.n),
+        comp_buf: Vec::new(),
+        qlen: vec![0; p.n],
+        epoch: 0,
+        lambda_consensus: 0.0,
+        lambda_live: 0.0,
+        stop: false,
+        drained: false,
+        benchmarks: 0,
+        completions_seen: 0,
+        next_publish: start + Duration::from_secs_f64(p.publish_interval),
+        next_bench: start + Duration::from_secs_f64(0.05),
+        next_tick: start,
+        start,
+        publish_interval: p.publish_interval,
+        divergence_threshold: p.divergence_threshold,
+        shard,
+    };
+    let mut decisions = 0u64;
+    let mut dispatched = 0u64;
+    let mut local_jobs = 0u64;
+
+    'outer: while !state.stop {
+        batcher.fill(&mut stream_rng, &mut batch);
+        for a in &batch {
+            // Pace the batch: dispatch each arrival when it is due,
+            // servicing the coordination beat while waiting.
+            loop {
+                if Instant::now() >= state.next_tick {
+                    state.beat(t, &mut core)?;
+                }
+                if state.stop {
+                    break 'outer;
+                }
+                let elapsed = start.elapsed().as_secs_f64();
+                if elapsed >= a.at {
+                    break;
+                }
+                std::thread::sleep(Duration::from_secs_f64((a.at - elapsed).min(1e-3)));
+            }
+            core.on_arrival(a.at, 1);
+            job.tasks[0].demand = a.demand;
+            let w = core.decide_local(&job, &state.qlen);
+            decisions += 1;
+            t.submit(encode_job(shard, local_jobs), w, TaskKind::Real, a.demand)?;
+            // Optimistic probe bump until the next refresh, so decisions
+            // within one beat do not dogpile the same worker.
+            state.qlen[w] += 1;
+            local_jobs += 1;
+            dispatched += 1;
+        }
+    }
+
+    // Drain: keep beating until the pool has drained and every completion
+    // this scheduler routed has arrived, then export the final view for
+    // the drain-time consensus epoch.
+    let drain_deadline = Instant::now() + Duration::from_secs(60);
+    while !state.drained {
+        if Instant::now() >= drain_deadline {
+            return Err("drain timed out waiting for the pool".into());
+        }
+        state.beat(t, &mut core)?;
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    state.publish_and_export(t, &core)?;
+
+    Ok(FrontendReport {
+        shard,
+        shards,
+        decisions,
+        dispatched,
+        benchmarks: state.benchmarks,
+        completions_seen: state.completions_seen,
+        responses: state.responses,
+        final_estimates: core.mu_hat().to_vec(),
+    })
+}
+
+/// Connection settings for a remote frontend.
+#[derive(Debug, Clone)]
+pub struct ConnectConfig {
+    /// Pool server address (`host:port`).
+    pub addr: String,
+    /// This frontend's shard index.
+    pub shard: usize,
+    /// Total scheduler count k (must match every other frontend).
+    pub shards: usize,
+    /// How long to keep retrying the initial connect.
+    pub connect_timeout: Duration,
+    /// Per-read socket timeout during the run.
+    pub read_timeout: Duration,
+}
+
+impl ConnectConfig {
+    /// Defaults: 15 s connect retry window, 30 s read timeout.
+    pub fn new(addr: impl Into<String>, shard: usize, shards: usize) -> Self {
+        Self {
+            addr: addr.into(),
+            shard,
+            shards,
+            connect_timeout: Duration::from_secs(15),
+            read_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream, String> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(format!("connect {addr}: {e}"));
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+/// Run one remote frontend process end to end: connect, handshake, run the
+/// §5 loop over TCP, and ship the final statistics.
+pub fn run_remote_frontend(cfg: &ConnectConfig) -> Result<FrontendReport, String> {
+    if cfg.shards == 0 || cfg.shard >= cfg.shards {
+        return Err(format!(
+            "shard {}/{} is not a valid shard spec",
+            cfg.shard, cfg.shards
+        ));
+    }
+    let stream = connect_with_retry(&cfg.addr, cfg.connect_timeout)?;
+    stream.set_nodelay(true).map_err(|e| format!("set nodelay: {e}"))?;
+    stream
+        .set_read_timeout(Some(cfg.read_timeout))
+        .map_err(|e| format!("set read timeout: {e}"))?;
+    let mut t = TcpTransport::new(stream, cfg.shard);
+    t.send(&Msg::Hello { shard: cfg.shard as u32, shards: cfg.shards as u32 })?;
+    let ack = match t.recv()? {
+        Msg::HelloAck(a) => a,
+        other => return Err(format!("expected HelloAck, got tag {}", other.tag())),
+    };
+    let params = RunParams::from_hello_ack(&ack, cfg.shards)?;
+    match t.recv()? {
+        Msg::Start => {}
+        other => return Err(format!("expected Start, got tag {}", other.tag())),
+    }
+    let report = run_frontend_loop(&mut t, &params, cfg.shard, cfg.shards)?;
+    t.send(&Msg::Done(report.done_stats()))?;
+    match t.recv()? {
+        Msg::DoneAck => {}
+        other => return Err(format!("expected DoneAck, got tag {}", other.tag())),
+    }
+    Ok(report)
+}
+
+/// Parse an `i/k` shard spec.
+pub fn parse_shard_spec(s: &str) -> Result<(usize, usize), String> {
+    let (i, k) = s
+        .split_once('/')
+        .ok_or_else(|| format!("bad shard spec '{s}' (expected i/k, e.g. 0/2)"))?;
+    let shard: usize =
+        i.trim().parse().map_err(|e| format!("bad shard index in '{s}': {e}"))?;
+    let shards: usize =
+        k.trim().parse().map_err(|e| format!("bad shard count in '{s}': {e}"))?;
+    if shards == 0 || shard >= shards {
+        return Err(format!("shard {shard} out of range for {shards} shards"));
+    }
+    Ok((shard, shards))
+}
+
+/// CLI adapter for `rosella frontend`. Flags and the `net` JSON block
+/// (`--config file.json`) are merged; the file wins where both name a
+/// field.
+pub fn frontend_cli(p: &crate::cli::Parsed) -> Result<String, String> {
+    let mut cfg = ConnectConfig::new(p.get("connect").unwrap_or("").to_string(), 0, 1);
+    let mut have_shard = false;
+    if let Some(s) = p.get("shard") {
+        let (shard, shards) = parse_shard_spec(s)?;
+        cfg.shard = shard;
+        cfg.shards = shards;
+        have_shard = true;
+    }
+    if let Some(path) = p.get("config") {
+        let opts = crate::config::net_options_from_file(path).map_err(|e| e.to_string())?;
+        have_shard |= opts.shard.is_some();
+        opts.apply_frontend(&mut cfg);
+    }
+    if cfg.addr.is_empty() {
+        return Err("missing --connect ADDR (or a net.connect entry in --config)".into());
+    }
+    if !have_shard {
+        return Err("missing --shard i/k (or a net.shard entry in --config)".into());
+    }
+    if let Some(t) = p.parse_as::<f64>("connect-timeout")? {
+        if !(t > 0.0 && t.is_finite()) {
+            return Err("--connect-timeout must be positive and finite".into());
+        }
+        cfg.connect_timeout = Duration::from_secs_f64(t);
+    }
+    let report = run_remote_frontend(&cfg)?;
+    Ok(report.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ack() -> HelloAck {
+        HelloAck {
+            workers: 4,
+            batch: 32,
+            seed: 42,
+            prior: 0.9375,
+            mean_demand: 0.01,
+            mu_bar: 375.0,
+            rate: 400.0,
+            duration: 2.0,
+            warmup: 0.0,
+            publish_interval: 0.2,
+            sync_interval: 0.2,
+            sync_threshold: 0.1,
+            fake_jobs: true,
+            policy: "ppot".into(),
+            sync_policy: "periodic".into(),
+            speeds: vec![2.0, 1.0, 0.5, 0.25],
+        }
+    }
+
+    #[test]
+    fn run_params_derive_from_hello_ack() {
+        let p = RunParams::from_hello_ack(&ack(), 2).unwrap();
+        assert_eq!(p.n, 4);
+        assert_eq!(p.rate_per_shard, 200.0);
+        assert_eq!(p.divergence_threshold, None, "periodic sync has no trigger");
+        let mut a = ack();
+        a.sync_policy = "adaptive".into();
+        let p = RunParams::from_hello_ack(&a, 4).unwrap();
+        // The adaptive trigger arrives √k-scaled (k = 4 ⇒ 2×).
+        let th = p.divergence_threshold.expect("adaptive sync sets a trigger");
+        assert!((th - 0.2).abs() < 1e-12, "threshold {th}");
+    }
+
+    #[test]
+    fn degenerate_hello_acks_are_rejected() {
+        let mut a = ack();
+        a.workers = 0;
+        assert!(RunParams::from_hello_ack(&a, 2).is_err());
+        let mut a = ack();
+        a.rate = 0.0;
+        assert!(RunParams::from_hello_ack(&a, 2).is_err());
+        let mut a = ack();
+        a.policy = "nonsense".into();
+        assert!(RunParams::from_hello_ack(&a, 2).is_err());
+        let mut a = ack();
+        a.sync_policy = "nonsense".into();
+        assert!(RunParams::from_hello_ack(&a, 2).is_err());
+        assert!(RunParams::from_hello_ack(&ack(), 0).is_err());
+    }
+
+    #[test]
+    fn frontend_loop_runs_over_the_local_transport() {
+        // The Transport seam's contract: the same §5 loop that speaks TCP
+        // runs over in-process channels, against the plane's own shared
+        // state, with the same conservation guarantees.
+        use crate::coordinator::worker::{self, CompletionSink, PayloadMode};
+        use crate::learner::SyncPolicy;
+        use crate::net::transport::LocalTransport;
+        use crate::plane::consensus::{run_sync, SyncRun};
+        use crate::plane::{EstimateTable, SharedViews};
+        use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+        use std::sync::Arc;
+
+        let speeds = [2.0, 1.0, 0.5, 0.25];
+        let n = speeds.len();
+        let prior = speeds.iter().sum::<f64>() / n as f64;
+        let mean_demand = 0.003;
+        let (tx, rx) = std::sync::mpsc::channel();
+        let sink = CompletionSink::sharded(vec![tx]);
+        let pool: Vec<_> = speeds
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| worker::spawn(i, s, PayloadMode::Sleep, sink.clone()))
+            .collect();
+        drop(sink);
+        let completed: Vec<Arc<AtomicU64>> =
+            pool.iter().map(|w| w.client.completed_real.clone()).collect();
+        let table = Arc::new(EstimateTable::new(n, prior));
+        let views = Arc::new(SharedViews::new(1, n, prior));
+        let stop = Arc::new(AtomicBool::new(false));
+        let sync_stop = Arc::new(AtomicBool::new(false));
+        let slots = vec![Arc::new(AtomicU64::new(0f64.to_bits()))];
+        let start = Instant::now();
+        let sync_ctx = SyncRun {
+            views: views.clone(),
+            table: table.clone(),
+            stop: sync_stop.clone(),
+            policy: SyncPolicy::new(&SyncPolicyConfig::periodic(), 0.1, 1, 7),
+            prior,
+            start,
+        };
+        let sync = std::thread::spawn(move || run_sync(sync_ctx));
+        let params = RunParams {
+            policy: PolicyKind::parse("ppot").unwrap(),
+            n,
+            prior,
+            mean_demand,
+            mu_bar: speeds.iter().sum::<f64>() / mean_demand,
+            rate_per_shard: 200.0,
+            batch: 32,
+            seed: 42,
+            warmup: 0.0,
+            publish_interval: 0.1,
+            fake_jobs: true,
+            divergence_threshold: None,
+        };
+        let t = LocalTransport::new(
+            pool.iter().map(|w| w.client.clone()).collect(),
+            rx,
+            table.clone(),
+            views,
+            slots,
+            0,
+            stop.clone(),
+            start,
+        );
+        let loop_handle = std::thread::spawn(move || {
+            let mut t = t;
+            run_frontend_loop(&mut t, &params, 0, 1)
+        });
+        std::thread::sleep(Duration::from_millis(700));
+        stop.store(true, Ordering::Relaxed);
+        // The loop releases its ingress on its next beat; the pool then
+        // drains, disconnects the completion channel, and the loop's drain
+        // phase completes.
+        for w in pool {
+            w.shutdown();
+        }
+        let report = loop_handle.join().expect("loop thread").expect("loop run");
+        sync_stop.store(true, Ordering::Release);
+        let outcome = sync.join().expect("sync thread");
+
+        assert!(report.decisions > 0, "no decisions made");
+        assert!(report.dispatched > 0, "nothing dispatched");
+        assert!(report.benchmarks > 0, "benchmark dispatcher idle");
+        let done: u64 = completed.iter().map(|c| c.load(Ordering::Acquire)).sum();
+        assert_eq!(done, report.dispatched, "tasks lost or duplicated");
+        assert_eq!(report.responses.count() as u64, done, "latency records diverge");
+        assert!(outcome.merges >= 1, "no consensus merge ran");
+        assert_eq!(report.final_estimates.len(), n);
+    }
+
+    #[test]
+    fn shard_specs_parse_and_validate() {
+        assert_eq!(parse_shard_spec("0/2").unwrap(), (0, 2));
+        assert_eq!(parse_shard_spec("3/4").unwrap(), (3, 4));
+        assert!(parse_shard_spec("2/2").is_err());
+        assert!(parse_shard_spec("0/0").is_err());
+        assert!(parse_shard_spec("a/2").is_err());
+        assert!(parse_shard_spec("02").is_err());
+    }
+}

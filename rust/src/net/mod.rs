@@ -1,0 +1,50 @@
+//! The cross-process scheduling plane: a dependency-free RPC/wire layer
+//! for remote frontends and consensus transport.
+//!
+//! Everything landed so far — the sharded plane, per-scheduler learners,
+//! the pluggable consensus layer — runs inside one process. This module is
+//! the step the paper actually describes (§2: Rosella "runs in parallel on
+//! multiple machines with minimum coordination"): scheduler frontends as
+//! *separate OS processes*, coordinating with a shared worker pool over a
+//! compact binary protocol built on `std::net::TcpStream` alone.
+//!
+//! Three layers:
+//!
+//! * [`wire`] — the versioned, length-prefixed little-endian framing: task
+//!   submissions and completions, queue-probe/consensus tick exchanges,
+//!   [`SyncPayload`](crate::learner::SyncPayload) exports, and run
+//!   handshake/teardown, with hard frame-size bounds and bit-exact float
+//!   round-trips;
+//! * [`transport`] — the [`Transport`] seam the §5 frontend loop runs
+//!   over: [`LocalTransport`] (the plane's own in-process channels and
+//!   atomics) or [`TcpTransport`] (the wire protocol). The consensus side
+//!   needs no seam at all: remote `SyncExport`s land in the same
+//!   [`SharedViews`](crate::plane::SharedViews) slots the in-process
+//!   shards use, so the sync thread is byte-for-byte the plane's;
+//! * [`server`]/[`frontend`] — the two processes: `rosella plane --listen
+//!   ADDR` hosts the pool, seqlock state, and consensus thread;
+//!   `rosella frontend --connect ADDR --shard i/k` runs the complete §5
+//!   scheduler stack (private learner, throttled benchmark dispatcher,
+//!   local decisions over served probes) and participates in consensus by
+//!   shipping its payloads over the wire.
+//!
+//! A loopback run (`1` server + `k` frontends on one machine) is the
+//! first end-to-end demonstration of the paper's distributed topology;
+//! `benches/bench_net.rs` compares its throughput against the in-process
+//! plane, and CI smoke-tests it (`BENCH_net.json`).
+
+pub mod frontend;
+pub mod server;
+pub mod transport;
+pub mod wire;
+
+pub use frontend::{
+    frontend_cli, parse_shard_spec, run_frontend_loop, run_remote_frontend, ConnectConfig,
+    FrontendReport, RunParams,
+};
+pub use server::{bench_json, server_cli, NetReport, NetServer, NetServerConfig};
+pub use transport::{LocalTransport, TcpTransport, TickOutcome, Transport};
+pub use wire::{
+    DoneStats, Estimates, HelloAck, Msg, TickReply, WireCompletion, WireError, HEADER_LEN,
+    MAGIC, MAX_PAYLOAD, VERSION,
+};

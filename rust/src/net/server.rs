@@ -1,0 +1,886 @@
+//! The worker-pool server: `rosella plane --listen ADDR`.
+//!
+//! Hosts the shared side of the cross-process plane — the live worker pool,
+//! the seqlock [`EstimateTable`], the [`SharedViews`] sync-payload slots,
+//! and the [`SyncPolicy`] consensus thread (the *same*
+//! [`run_sync`](crate::plane::consensus) loop the in-process plane runs;
+//! consensus is transport-agnostic because exports land in the same slots
+//! whether they arrive from a shard thread or a socket) — and serves `k`
+//! remote scheduler frontends over the
+//! [`wire`](crate::net::wire) protocol.
+//!
+//! Per connection, one handler thread: it enqueues `Submit`s into the pool,
+//! answers `Tick`s with probe snapshots / routed completions / fresh
+//! consensus, lands `SyncExport`s in the shard's view slot, and records the
+//! frontend's `Done` statistics. The run lifecycle is server-driven: the
+//! server stops the run at its deadline, handlers release their pool
+//! ingress so the workers drain and exit, frontends observe
+//! `stop`/`drained` through their tick beats, export final views, and send
+//! `Done`; the drain-time consensus epoch then merges every shard's final
+//! view exactly as the in-process plane does, and the merged [`NetReport`]
+//! is the cross-process analogue of
+//! [`PlaneReport`](crate::plane::PlaneReport).
+
+use super::transport::{drain_completions, estimates_if_moved, lambda_total};
+use super::wire::{self, DoneStats, HelloAck, Msg, TickReply, WireCompletion};
+use crate::config::Json;
+use crate::coordinator::worker::{self, Completion, CompletionSink, LiveTask, PayloadMode};
+use crate::learner::{SyncPolicy, SyncPolicyConfig};
+use crate::plane::consensus::{run_sync, SyncRun};
+use crate::plane::{EstimateTable, SharedViews};
+use crate::scheduler::PolicyKind;
+use crate::types::TaskKind;
+use std::collections::{BTreeMap, VecDeque};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Completions shipped per `TickReply` at most (keeps frames far below the
+/// wire bound; the remainder rides the next beat).
+const MAX_COMPLETIONS_PER_REPLY: usize = 8192;
+
+/// Protocol bound on one task's demand in unit-speed seconds. A task
+/// longer than this would wedge its worker — and the drain-time pool join
+/// — for its whole service time, so it is rejected as a protocol
+/// violation rather than clamped.
+const MAX_TASK_DEMAND: f64 = 60.0;
+
+/// Configuration of one pool-server run.
+#[derive(Debug, Clone)]
+pub struct NetServerConfig {
+    /// Listen address (`host:port`; port 0 picks an ephemeral port).
+    pub listen: String,
+    /// Remote scheduler count k the run waits for.
+    pub frontends: usize,
+    /// Worker speed multipliers (one live worker thread per entry).
+    pub speeds: Vec<f64>,
+    /// Scheduling policy, forwarded verbatim to the frontends
+    /// (`PolicyKind::parse` spelling).
+    pub policy: String,
+    /// Aggregate arrival rate (jobs/second) split across frontends.
+    pub rate: f64,
+    /// Run duration in seconds (deadline measured from `Start`).
+    pub duration: f64,
+    /// Mean task demand (unit-speed seconds).
+    pub mean_demand: f64,
+    /// Arrival ingestion batch size per frontend.
+    pub batch: usize,
+    /// Run seed.
+    pub seed: u64,
+    /// Frontend learner publish/export cadence (seconds).
+    pub publish_interval: f64,
+    /// Warmup cutoff for response metrics (seconds).
+    pub warmup: f64,
+    /// Whether frontends run their benchmark dispatchers.
+    pub fake_jobs: bool,
+    /// Estimate-sync consensus interval (seconds).
+    pub sync_interval: f64,
+    /// Consensus strategy and knobs.
+    pub sync_policy: SyncPolicyConfig,
+    /// Per-read socket timeout (handshake and run).
+    pub read_timeout: Duration,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        Self {
+            listen: "127.0.0.1:0".into(),
+            frontends: 2,
+            speeds: vec![2.0, 1.0, 1.0, 1.0, 0.5, 0.5, 0.25, 0.25],
+            policy: "ppot".into(),
+            rate: 400.0,
+            duration: 3.0,
+            mean_demand: 0.01,
+            batch: 64,
+            seed: 42,
+            publish_interval: 0.2,
+            warmup: 0.0,
+            fake_jobs: true,
+            sync_interval: 0.2,
+            sync_policy: SyncPolicyConfig::periodic(),
+            read_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+impl NetServerConfig {
+    /// Validate every field before binding: the same class of config-time
+    /// rejection the in-process plane performs, including the sync
+    /// threshold/interval cross-checks.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.listen.is_empty() {
+            return Err("listen address must not be empty".into());
+        }
+        if self.frontends == 0 {
+            return Err("need at least one frontend".into());
+        }
+        if self.speeds.is_empty() {
+            return Err("need at least one worker".into());
+        }
+        if !(self.rate > 0.0 && self.rate.is_finite()) {
+            return Err("rate must be positive and finite".into());
+        }
+        if !(self.duration > 0.0 && self.duration.is_finite()) {
+            return Err("duration must be positive and finite".into());
+        }
+        if !(self.mean_demand > 0.0 && self.mean_demand.is_finite()) {
+            return Err("mean demand must be positive and finite".into());
+        }
+        if self.batch == 0 {
+            return Err("batch must be at least 1".into());
+        }
+        if !(self.publish_interval > 0.0 && self.publish_interval.is_finite()) {
+            return Err("publish interval must be positive and finite".into());
+        }
+        if !(self.warmup >= 0.0 && self.warmup.is_finite()) {
+            return Err("warmup must be finite and non-negative".into());
+        }
+        if !(self.sync_interval > 0.0 && self.sync_interval.is_finite()) {
+            return Err("the net plane needs a positive finite sync interval".into());
+        }
+        self.sync_policy
+            .validate(self.sync_interval)
+            .map_err(|e| format!("sync policy: {e}"))?;
+        PolicyKind::parse(&self.policy)?;
+        Ok(())
+    }
+}
+
+/// Everything the merged cross-process report carries.
+#[derive(Debug)]
+pub struct NetReport {
+    /// Remote frontend count.
+    pub frontends: usize,
+    /// Worker count.
+    pub workers: usize,
+    /// Policy name (as configured).
+    pub policy: String,
+    /// Seconds from `Start` to the stop instant.
+    pub elapsed: f64,
+    /// Total scheduling decisions across frontends.
+    pub decisions: u64,
+    /// Real tasks the server enqueued (its own count of `Submit`s).
+    pub dispatched: u64,
+    /// Real tasks completed after the full drain (worker counters).
+    pub completed: u64,
+    /// Benchmark tasks the frontends injected.
+    pub benchmarks: u64,
+    /// Post-stop submits dropped at the server (should stay 0).
+    pub submit_dropped: u64,
+    /// Completed real tasks per second of run time.
+    pub tasks_per_sec: f64,
+    /// Consensus check epochs, including the drain-time epoch.
+    pub sync_epochs: u64,
+    /// Consensus merge operations, including the one unconditional
+    /// drain-time merge (so this alone does not prove wire traffic).
+    pub sync_merges: u64,
+    /// SyncExport frames received across all frontends — the direct count
+    /// of consensus payloads that crossed the wire (every frontend sends
+    /// at least its final drain-time export).
+    pub sync_exports: u64,
+    /// Final consensus estimates vs configured speeds.
+    pub estimates: Vec<(f64, f64)>,
+    /// Per-frontend final statistics, indexed by shard.
+    pub per_frontend: Vec<DoneStats>,
+}
+
+impl NetReport {
+    /// Post-warmup latency record count across frontends.
+    pub fn resp_count(&self) -> u64 {
+        self.per_frontend.iter().map(|d| d.resp_count).sum()
+    }
+
+    /// Response-count-weighted mean response time (seconds).
+    pub fn mean_response(&self) -> f64 {
+        let count = self.resp_count();
+        if count == 0 {
+            return 0.0;
+        }
+        let sum: f64 =
+            self.per_frontend.iter().map(|d| d.resp_mean * d.resp_count as f64).sum();
+        sum / count as f64
+    }
+
+    /// Worst per-frontend p95 response time (seconds).
+    pub fn worst_p95(&self) -> f64 {
+        self.per_frontend.iter().map(|d| d.resp_p95).fold(0.0, f64::max)
+    }
+
+    /// Render a human-readable report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "net plane: {} remote frontends × {} workers, policy {}\n",
+            self.frontends, self.workers, self.policy
+        ));
+        out.push_str(&format!(
+            "tasks      : dispatched {} | completed {} | benchmarks {} — {:.0} tasks/s\n",
+            self.dispatched, self.completed, self.benchmarks, self.tasks_per_sec
+        ));
+        out.push_str(&format!(
+            "decisions  : {} in {:.2}s across {} schedulers\n",
+            self.decisions, self.elapsed, self.frontends
+        ));
+        out.push_str(&format!(
+            "consensus  : {} epochs, {} merges, {} payload exports over the wire\n",
+            self.sync_epochs, self.sync_merges, self.sync_exports
+        ));
+        if self.resp_count() > 0 {
+            out.push_str(&format!(
+                "latency ms : mean {:.1} | worst p95 {:.1} ({} jobs)\n",
+                self.mean_response() * 1e3,
+                self.worst_p95() * 1e3,
+                self.resp_count()
+            ));
+        }
+        for d in &self.per_frontend {
+            out.push_str(&format!(
+                "  frontend : {} decisions | {} dispatched | {} benchmarks\n",
+                d.decisions, d.dispatched, d.benchmarks
+            ));
+        }
+        out.push_str("worker speed estimates (true → learned):\n");
+        for (i, (truth, est)) in self.estimates.iter().enumerate() {
+            out.push_str(&format!("  worker {i}: {truth:.2} → {est:.2}\n"));
+        }
+        if self.submit_dropped > 0 {
+            out.push_str(&format!("late submits dropped at stop: {}\n", self.submit_dropped));
+        }
+        out
+    }
+}
+
+/// Machine-readable run results (`BENCH_net.json`), shaped like
+/// `BENCH_plane.json` so within-run ratio gates can read both.
+pub fn bench_json(cfg: &NetServerConfig, r: &NetReport) -> Json {
+    let per: Vec<Json> = r
+        .per_frontend
+        .iter()
+        .enumerate()
+        .map(|(shard, d)| {
+            let mut m = BTreeMap::new();
+            m.insert("shard".into(), Json::Num(shard as f64));
+            m.insert("decisions".into(), Json::Num(d.decisions as f64));
+            m.insert("dispatched".into(), Json::Num(d.dispatched as f64));
+            m.insert("benchmarks".into(), Json::Num(d.benchmarks as f64));
+            m.insert("resp_count".into(), Json::Num(d.resp_count as f64));
+            m.insert("mean_ms".into(), Json::Num(d.resp_mean * 1e3));
+            m.insert("p50_ms".into(), Json::Num(d.resp_p50 * 1e3));
+            m.insert("p95_ms".into(), Json::Num(d.resp_p95 * 1e3));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut results = BTreeMap::new();
+    results.insert("elapsed".into(), Json::Num(r.elapsed));
+    results.insert("tasks_per_sec".into(), Json::Num(r.tasks_per_sec.round()));
+    results.insert("decisions".into(), Json::Num(r.decisions as f64));
+    results.insert(
+        "decisions_per_sec".into(),
+        Json::Num((r.decisions as f64 / r.elapsed.max(1e-9)).round()),
+    );
+    results.insert("dispatched".into(), Json::Num(r.dispatched as f64));
+    results.insert("completed".into(), Json::Num(r.completed as f64));
+    results.insert("benchmarks".into(), Json::Num(r.benchmarks as f64));
+    results.insert("submit_dropped".into(), Json::Num(r.submit_dropped as f64));
+    results.insert("sync_epochs".into(), Json::Num(r.sync_epochs as f64));
+    results.insert("sync_merges".into(), Json::Num(r.sync_merges as f64));
+    results.insert("sync_exports".into(), Json::Num(r.sync_exports as f64));
+    results.insert("resp_count".into(), Json::Num(r.resp_count() as f64));
+    results.insert("mean_ms".into(), Json::Num(r.mean_response() * 1e3));
+    results.insert("worst_p95_ms".into(), Json::Num(r.worst_p95() * 1e3));
+    results.insert("per_frontend".into(), Json::Arr(per));
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Json::Str("net".into()));
+    top.insert("frontends".into(), Json::Num(cfg.frontends as f64));
+    top.insert("workers".into(), Json::Num(cfg.speeds.len() as f64));
+    top.insert("rate".into(), Json::Num(cfg.rate));
+    top.insert("duration".into(), Json::Num(cfg.duration));
+    top.insert("seed".into(), Json::Num(cfg.seed as f64));
+    top.insert("policy".into(), Json::Str(cfg.policy.clone()));
+    top.insert("sync_policy".into(), Json::Str(cfg.sync_policy.kind.name().into()));
+    top.insert("sync_interval".into(), Json::Num(cfg.sync_interval));
+    top.insert("sync_threshold".into(), Json::Num(cfg.sync_policy.threshold));
+    top.insert("results".into(), Json::Obj(results));
+    Json::Obj(top)
+}
+
+/// A bound pool server, not yet serving — split from [`NetServer::serve`]
+/// so callers (and tests binding port 0) can learn the address first.
+pub struct NetServer {
+    cfg: NetServerConfig,
+    listener: TcpListener,
+}
+
+/// State one connection handler owns.
+struct ConnCtx {
+    stream: TcpStream,
+    shard: usize,
+    n: usize,
+    comp_rx: Receiver<Completion>,
+    clients: Vec<worker::WorkerClient>,
+    probes: Vec<Arc<AtomicUsize>>,
+    table: Arc<EstimateTable>,
+    views: Arc<SharedViews>,
+    stop: Arc<AtomicBool>,
+    lambda_slots: Vec<Arc<AtomicU64>>,
+    start: Instant,
+}
+
+/// What a connection handler reports back at exit.
+struct ConnOut {
+    shard: usize,
+    stats: Option<DoneStats>,
+    dispatched: u64,
+    submit_dropped: u64,
+    /// SyncExport frames this connection landed in the view slots — the
+    /// direct proof that consensus payloads crossed the wire.
+    sync_exports: u64,
+}
+
+impl NetServer {
+    /// Validate the configuration and bind the listen socket.
+    pub fn bind(cfg: NetServerConfig) -> Result<Self, String> {
+        cfg.validate()?;
+        let listener = TcpListener::bind(&cfg.listen)
+            .map_err(|e| format!("bind {}: {e}", cfg.listen))?;
+        Ok(Self { cfg, listener })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> Result<SocketAddr, String> {
+        self.listener.local_addr().map_err(|e| format!("local addr: {e}"))
+    }
+
+    /// Serve one run to completion: handshake all `k` frontends, release
+    /// them with `Start`, host the pool until the deadline, drain, run the
+    /// final consensus epoch, and return the merged report.
+    pub fn serve(self) -> Result<NetReport, String> {
+        let NetServer { cfg, listener } = self;
+        let k = cfg.frontends;
+        let n = cfg.speeds.len();
+        let total: f64 = cfg.speeds.iter().sum();
+        let prior = total / n as f64;
+        let mu_bar = total / cfg.mean_demand;
+
+        // Handshake phase: accept until every shard is claimed exactly
+        // once. The accept loop is nonblocking with a progress-refreshed
+        // deadline, so a frontend that never connects fails the run with a
+        // clear error instead of wedging the server in accept() forever.
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("set nonblocking: {e}"))?;
+        let mut conns: Vec<Option<TcpStream>> = (0..k).map(|_| None).collect();
+        let mut scratch = Vec::with_capacity(4096);
+        let mut claimed = 0usize;
+        let mut accept_deadline = Instant::now() + cfg.read_timeout;
+        while claimed < k {
+            let (mut stream, peer) = match listener.accept() {
+                Ok(conn) => conn,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= accept_deadline {
+                        return Err(format!(
+                            "timed out waiting for frontends: {claimed} of {k} connected \
+                             within {:.0?}",
+                            cfg.read_timeout
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                    continue;
+                }
+                Err(e) => return Err(format!("accept: {e}")),
+            };
+            // Each claim refreshes the patience window; accepted sockets
+            // go back to blocking mode (inheritance is platform-specific).
+            accept_deadline = Instant::now() + cfg.read_timeout;
+            stream
+                .set_nonblocking(false)
+                .map_err(|e| format!("set blocking: {e}"))?;
+            stream.set_nodelay(true).map_err(|e| format!("set nodelay: {e}"))?;
+            stream
+                .set_read_timeout(Some(cfg.read_timeout))
+                .map_err(|e| format!("set read timeout: {e}"))?;
+            let (shard, shards) = match wire::read_msg(&mut stream, &mut scratch)
+                .map_err(|e| format!("handshake with {peer}: {e}"))?
+            {
+                Msg::Hello { shard, shards } => (shard as usize, shards as usize),
+                other => {
+                    return Err(format!(
+                        "handshake with {peer}: expected Hello, got tag {}",
+                        other.tag()
+                    ))
+                }
+            };
+            if shards != k {
+                return Err(format!(
+                    "frontend {peer} expects {shards} shards but this server runs {k}"
+                ));
+            }
+            if shard >= k {
+                return Err(format!("frontend {peer} claimed shard {shard} of {k}"));
+            }
+            if conns[shard].is_some() {
+                return Err(format!("shard {shard} claimed twice (second claim from {peer})"));
+            }
+            let ack = Msg::HelloAck(HelloAck {
+                workers: n as u32,
+                batch: cfg.batch as u32,
+                seed: cfg.seed,
+                prior,
+                mean_demand: cfg.mean_demand,
+                mu_bar,
+                rate: cfg.rate,
+                duration: cfg.duration,
+                warmup: cfg.warmup,
+                publish_interval: cfg.publish_interval,
+                sync_interval: cfg.sync_interval,
+                sync_threshold: cfg.sync_policy.threshold,
+                fake_jobs: cfg.fake_jobs,
+                policy: cfg.policy.clone(),
+                sync_policy: cfg.sync_policy.kind.name().into(),
+                speeds: cfg.speeds.clone(),
+            });
+            wire::write_msg(&mut stream, &ack, &mut scratch)
+                .map_err(|e| format!("handshake with {peer}: {e}"))?;
+            conns[shard] = Some(stream);
+            claimed += 1;
+        }
+
+        // The shared side: worker pool with per-shard completion routing,
+        // seqlock table, sync-payload slots, and the consensus thread.
+        let mut shard_rxs: Vec<Receiver<Completion>> = Vec::with_capacity(k);
+        let mut txs = Vec::with_capacity(k);
+        for _ in 0..k {
+            let (tx, rx) = std::sync::mpsc::channel::<Completion>();
+            txs.push(tx);
+            shard_rxs.push(rx);
+        }
+        let sink = CompletionSink::sharded(txs);
+        let workers: Vec<worker::WorkerHandle> = cfg
+            .speeds
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| worker::spawn(i, s, PayloadMode::Sleep, sink.clone()))
+            .collect();
+        drop(sink);
+        let probes: Vec<Arc<AtomicUsize>> =
+            workers.iter().map(|w| w.client.qlen.clone()).collect();
+        let completed_counters: Vec<Arc<AtomicU64>> =
+            workers.iter().map(|w| w.client.completed_real.clone()).collect();
+        let table = Arc::new(EstimateTable::new(n, prior));
+        let views = Arc::new(SharedViews::new(k, n, prior));
+        let stop = Arc::new(AtomicBool::new(false));
+        let sync_stop = Arc::new(AtomicBool::new(false));
+        let lambda_slots: Vec<Arc<AtomicU64>> =
+            (0..k).map(|_| Arc::new(AtomicU64::new(0f64.to_bits()))).collect();
+        let start = Instant::now();
+        let sync_ctx = SyncRun {
+            views: views.clone(),
+            table: table.clone(),
+            stop: sync_stop.clone(),
+            policy: SyncPolicy::new(&cfg.sync_policy, cfg.sync_interval, k, cfg.seed ^ 0x57AC_6E55),
+            prior,
+            start,
+        };
+        let sync_handle = std::thread::Builder::new()
+            .name("rosella-net-sync".into())
+            .spawn(move || run_sync(sync_ctx))
+            .map_err(|e| format!("spawn sync thread: {e}"))?;
+
+        // Release every frontend at once, then hand each connection to its
+        // handler thread.
+        for stream in conns.iter_mut().flatten() {
+            wire::write_msg(stream, &Msg::Start, &mut scratch)
+                .map_err(|e| format!("start broadcast: {e}"))?;
+        }
+        let mut handles = Vec::with_capacity(k);
+        let mut rx_iter = shard_rxs.into_iter();
+        for (shard, slot) in conns.into_iter().enumerate() {
+            let ctx = ConnCtx {
+                stream: slot.expect("every shard claimed"),
+                shard,
+                n,
+                comp_rx: rx_iter.next().expect("one channel per shard"),
+                clients: workers.iter().map(|w| w.client.clone()).collect(),
+                probes: probes.clone(),
+                table: table.clone(),
+                views: views.clone(),
+                stop: stop.clone(),
+                lambda_slots: lambda_slots.clone(),
+                start,
+            };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("rosella-net-conn-{shard}"))
+                    .spawn(move || handle_conn(ctx))
+                    .map_err(|e| format!("spawn handler {shard}: {e}"))?,
+            );
+        }
+
+        // Serve until the deadline, then stop the run.
+        let deadline = start + Duration::from_secs_f64(cfg.duration);
+        while Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        stop.store(true, Ordering::Relaxed);
+        let elapsed = start.elapsed().as_secs_f64();
+
+        // Drain: drop our ingress handles and join the workers. Each
+        // handler releases its own clones on its first post-stop tick, so
+        // the joins complete once every frontend has observed the stop.
+        for w in workers {
+            w.shutdown();
+        }
+
+        // Join every handler before propagating any failure: an early
+        // return here would detach the surviving handler threads and leave
+        // the sync thread spinning forever in a library embedder.
+        let mut joined: Vec<Result<ConnOut, String>> = Vec::with_capacity(k);
+        for h in handles {
+            joined.push(
+                h.join().unwrap_or_else(|_| Err("connection handler panicked".into())),
+            );
+        }
+
+        // Final consensus epoch over the drain-time views, then read the
+        // table: the reported estimates are the published consensus. The
+        // sync thread is stopped unconditionally — even when a handler
+        // failed — so no run leaks it.
+        sync_stop.store(true, Ordering::Release);
+        let outcome =
+            sync_handle.join().map_err(|_| "sync thread panicked".to_string())?;
+        let mut outs: Vec<ConnOut> = Vec::with_capacity(k);
+        for o in joined {
+            outs.push(o?);
+        }
+        let (mu, _lambda) = table.snapshot();
+        let estimates: Vec<(f64, f64)> =
+            cfg.speeds.iter().zip(mu.iter()).map(|(&t, &e)| (t, e)).collect();
+
+        let completed: u64 = completed_counters.iter().map(|c| c.load(Ordering::Acquire)).sum();
+        let mut per_frontend = vec![DoneStats::default(); k];
+        let mut dispatched = 0u64;
+        let mut submit_dropped = 0u64;
+        let mut sync_exports = 0u64;
+        for o in outs {
+            dispatched += o.dispatched;
+            submit_dropped += o.submit_dropped;
+            sync_exports += o.sync_exports;
+            per_frontend[o.shard] =
+                o.stats.ok_or_else(|| format!("shard {} closed before Done", o.shard))?;
+        }
+        let decisions: u64 = per_frontend.iter().map(|d| d.decisions).sum();
+        let benchmarks: u64 = per_frontend.iter().map(|d| d.benchmarks).sum();
+        Ok(NetReport {
+            frontends: k,
+            workers: n,
+            policy: cfg.policy.clone(),
+            elapsed,
+            decisions,
+            dispatched,
+            completed,
+            benchmarks,
+            submit_dropped,
+            tasks_per_sec: completed as f64 / elapsed.max(1e-9),
+            sync_epochs: outcome.epochs,
+            sync_merges: outcome.merges,
+            sync_exports,
+            estimates,
+            per_frontend,
+        })
+    }
+}
+
+/// One connection handler: the server side of a frontend's protocol loop.
+fn handle_conn(mut ctx: ConnCtx) -> Result<ConnOut, String> {
+    let mut scratch = Vec::with_capacity(4096);
+    let mut pending: VecDeque<WireCompletion> = VecDeque::new();
+    let mut clients = Some(std::mem::take(&mut ctx.clients));
+    let mut disconnected = false;
+    let mut mu_buf = vec![0.0; ctx.n];
+    let mut out = ConnOut {
+        shard: ctx.shard,
+        stats: None,
+        dispatched: 0,
+        submit_dropped: 0,
+        sync_exports: 0,
+    };
+    loop {
+        let msg = wire::read_msg(&mut ctx.stream, &mut scratch)
+            .map_err(|e| format!("shard {}: {e}", ctx.shard))?;
+        match msg {
+            Msg::Submit { job, worker, kind, demand } => {
+                let w = worker as usize;
+                if w >= ctx.n {
+                    return Err(format!(
+                        "shard {}: submit to unknown worker {w}",
+                        ctx.shard
+                    ));
+                }
+                // Wire floats are untrusted: an infinite demand would
+                // panic the worker thread in Duration::from_secs_f64, and
+                // even a finite huge one would wedge a worker (and the
+                // drain join) for the task's whole service time.
+                if !(demand.is_finite() && demand > 0.0 && demand <= MAX_TASK_DEMAND) {
+                    return Err(format!(
+                        "shard {}: demand {demand} outside (0, {MAX_TASK_DEMAND}]",
+                        ctx.shard
+                    ));
+                }
+                match clients.as_ref() {
+                    Some(cs) => {
+                        cs[w].enqueue(LiveTask {
+                            job,
+                            kind,
+                            demand: demand.max(1e-6),
+                            enqueued: Instant::now(),
+                        });
+                        if kind == TaskKind::Real {
+                            out.dispatched += 1;
+                        }
+                    }
+                    // Ingress already released at stop: drop stragglers.
+                    None => out.submit_dropped += 1,
+                }
+            }
+            Msg::Tick { epoch, lambda_local } => {
+                // A NaN λ̂ₛ stored here would poison the lambda_live sum
+                // served to every other frontend.
+                if !(lambda_local.is_finite() && lambda_local >= 0.0) {
+                    return Err(format!(
+                        "shard {}: non-finite arrival estimate {lambda_local}",
+                        ctx.shard
+                    ));
+                }
+                ctx.lambda_slots[ctx.shard].store(lambda_local.to_bits(), Ordering::Relaxed);
+                let stopping = ctx.stop.load(Ordering::Relaxed);
+                if stopping {
+                    // Release our pool ingress so the workers can drain;
+                    // every Submit this frontend sent before observing the
+                    // stop flag was already processed above (the socket is
+                    // ordered).
+                    clients = None;
+                }
+                drain_completions(&ctx.comp_rx, &mut disconnected, ctx.start, |c| {
+                    pending.push_back(c)
+                });
+                let take = pending.len().min(MAX_COMPLETIONS_PER_REPLY);
+                let completions: Vec<WireCompletion> = pending.drain(..take).collect();
+                let estimates = estimates_if_moved(&ctx.table, epoch, &mut mu_buf);
+                let reply = Msg::TickReply(TickReply {
+                    qlen: ctx
+                        .probes
+                        .iter()
+                        .map(|q| q.load(Ordering::Relaxed) as u32)
+                        .collect(),
+                    lambda_live: lambda_total(&ctx.lambda_slots),
+                    stop: stopping,
+                    drained: stopping
+                        && clients.is_none()
+                        && disconnected
+                        && pending.is_empty(),
+                    estimates,
+                    completions,
+                });
+                wire::write_msg(&mut ctx.stream, &reply, &mut scratch)
+                    .map_err(|e| format!("shard {}: {e}", ctx.shard))?;
+            }
+            Msg::SyncExport { shard, diverged, lambda_hat, views } => {
+                if shard as usize != ctx.shard {
+                    return Err(format!(
+                        "shard {} exported a payload claiming shard {shard}",
+                        ctx.shard
+                    ));
+                }
+                if views.len() != ctx.n {
+                    return Err(format!(
+                        "shard {}: exported {} views over a {}-worker pool",
+                        ctx.shard,
+                        views.len(),
+                        ctx.n
+                    ));
+                }
+                // Consensus inputs are untrusted wire floats: one NaN μ̂
+                // or λ̂ share would propagate through every future merge.
+                if !(lambda_hat.is_finite() && lambda_hat >= 0.0)
+                    || views.iter().any(|v| !(v.mu_hat.is_finite() && v.mu_hat >= 0.0))
+                {
+                    return Err(format!(
+                        "shard {}: non-finite sync payload (λ̂ₛ {lambda_hat})",
+                        ctx.shard
+                    ));
+                }
+                ctx.views.store(ctx.shard, &views, lambda_hat);
+                out.sync_exports += 1;
+                if diverged {
+                    ctx.views.request_merge();
+                }
+            }
+            Msg::Done(stats) => {
+                out.stats = Some(stats);
+                wire::write_msg(&mut ctx.stream, &Msg::DoneAck, &mut scratch)
+                    .map_err(|e| format!("shard {}: {e}", ctx.shard))?;
+                break;
+            }
+            other => {
+                return Err(format!(
+                    "shard {}: unexpected message tag {}",
+                    ctx.shard,
+                    other.tag()
+                ))
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// CLI adapter for `rosella plane --listen`: the pool-server side of the
+/// cross-process plane, sharing the `plane` subcommand's flag surface.
+pub fn server_cli(p: &crate::cli::Parsed) -> Result<String, String> {
+    let mut cfg = NetServerConfig::default();
+    if let Some(l) = p.get("listen") {
+        cfg.listen = l.to_string();
+    }
+    if let Some(f) = p.get("frontends") {
+        cfg.frontends = f.trim().parse().map_err(|_| {
+            format!(
+                "with --listen, --frontends must be a single remote scheduler count \
+                 (got '{f}')"
+            )
+        })?;
+    }
+    cfg.speeds = crate::plane::speeds_from_cli(p)?;
+    if let Some(pol) = p.get("policy") {
+        cfg.policy = pol.to_string();
+    }
+    if let Some(v) = p.parse_as("rate")? {
+        cfg.rate = v;
+    }
+    if let Some(v) = p.parse_as("duration")? {
+        cfg.duration = v;
+    }
+    if let Some(v) = p.parse_as("demand")? {
+        cfg.mean_demand = v;
+    }
+    if let Some(v) = p.parse_as("batch")? {
+        cfg.batch = v;
+    }
+    if let Some(v) = p.parse_as("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = p.parse_as("sync-interval")? {
+        cfg.sync_interval = v;
+    }
+    cfg.sync_policy = SyncPolicyConfig {
+        kind: crate::learner::SyncKind::parse(p.get("sync-policy").unwrap_or("periodic"))?,
+        ..SyncPolicyConfig::default()
+    };
+    if let Some(t) = p.parse_as("sync-threshold")? {
+        cfg.sync_policy.threshold = t;
+    }
+    cfg.fake_jobs = !p.flag("no-fake-jobs");
+    if let Some(path) = p.get("net-config") {
+        let opts = crate::config::net_options_from_file(path).map_err(|e| e.to_string())?;
+        opts.apply_server(&mut cfg);
+    }
+    let cfg_json = cfg.clone();
+    let server = NetServer::bind(cfg)?;
+    let addr = server.local_addr()?;
+    // Printed eagerly: operators (and the CI smoke) need the address while
+    // the server blocks in serve().
+    println!(
+        "rosella plane: listening on {addr}, waiting for {} frontends",
+        cfg_json.frontends
+    );
+    let report = server.serve()?;
+    let mut out = report.render();
+    if let Some(path) = p.get("json") {
+        let doc = crate::config::to_string(&bench_json(&cfg_json, &report));
+        std::fs::write(path, doc).map_err(|e| format!("write {path}: {e}"))?;
+        out.push_str(&format!("wrote {path}\n"));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation_rejects_degenerate_runs() {
+        assert!(NetServerConfig::default().validate().is_ok());
+        let bad = |f: fn(&mut NetServerConfig)| {
+            let mut c = NetServerConfig::default();
+            f(&mut c);
+            c.validate()
+        };
+        assert!(bad(|c| c.frontends = 0).is_err());
+        assert!(bad(|c| c.speeds.clear()).is_err());
+        assert!(bad(|c| c.rate = 0.0).is_err());
+        assert!(bad(|c| c.duration = f64::INFINITY).is_err());
+        assert!(bad(|c| c.batch = 0).is_err());
+        assert!(bad(|c| c.sync_interval = 0.0).is_err());
+        assert!(bad(|c| c.policy = "nonsense".into()).is_err());
+        assert!(bad(|c| c.listen.clear()).is_err());
+        // The satellite rejects: NaN / negative sync thresholds must fail
+        // at config time, not produce a policy that never or always merges.
+        assert!(bad(|c| c.sync_policy.threshold = f64::NAN).is_err());
+        assert!(bad(|c| c.sync_policy.threshold = -0.5).is_err());
+    }
+
+    #[test]
+    fn bench_json_round_trips() {
+        let cfg = NetServerConfig::default();
+        let report = NetReport {
+            frontends: 2,
+            workers: 4,
+            policy: "ppot".into(),
+            elapsed: 1.5,
+            decisions: 600,
+            dispatched: 590,
+            completed: 590,
+            benchmarks: 12,
+            submit_dropped: 0,
+            tasks_per_sec: 393.3,
+            sync_epochs: 7,
+            sync_merges: 7,
+            sync_exports: 14,
+            estimates: vec![(2.0, 1.8), (1.0, 0.9)],
+            per_frontend: vec![
+                DoneStats {
+                    decisions: 300,
+                    dispatched: 295,
+                    benchmarks: 6,
+                    resp_count: 295,
+                    resp_mean: 0.012,
+                    resp_p50: 0.01,
+                    resp_p95: 0.03,
+                },
+                DoneStats {
+                    decisions: 300,
+                    dispatched: 295,
+                    benchmarks: 6,
+                    resp_count: 295,
+                    resp_mean: 0.014,
+                    resp_p50: 0.011,
+                    resp_p95: 0.04,
+                },
+            ],
+        };
+        assert_eq!(report.resp_count(), 590);
+        assert!((report.mean_response() - 0.013).abs() < 1e-12);
+        assert_eq!(report.worst_p95(), 0.04);
+        let doc = crate::config::to_string(&bench_json(&cfg, &report));
+        let back = crate::config::parse(&doc).expect("bench json must round-trip");
+        let results = back.get("results").expect("results object");
+        assert!(results.get("tasks_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
+        assert_eq!(results.get("sync_merges").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(results.get("sync_exports").and_then(Json::as_f64), Some(14.0));
+        let per = results.get("per_frontend").and_then(Json::as_arr).unwrap();
+        assert_eq!(per.len(), 2);
+        let rendered = report.render();
+        assert!(rendered.contains("2 remote frontends"));
+        assert!(rendered.contains("merges over the wire"));
+    }
+}

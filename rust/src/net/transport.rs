@@ -1,0 +1,435 @@
+//! The transport seam between a Rosella frontend and the shared worker
+//! pool.
+//!
+//! The §5 frontend loop ([`crate::net::frontend::run_frontend_loop`])
+//! needs exactly four capabilities from the plane it schedules into:
+//! submit a task, refresh queue-length probes, receive the completions of
+//! tasks it routed, and exchange sync payloads. [`Transport`] names that
+//! surface, and two implementations provide it:
+//!
+//! * [`LocalTransport`] — in-process channels and atomics: the same
+//!   [`WorkerClient`] ingress handles, atomic queue probes, seqlock
+//!   [`EstimateTable`], and [`SharedViews`] slots the sharded plane's
+//!   native shard threads use;
+//! * [`TcpTransport`] — the [`wire`](crate::net::wire) protocol over one
+//!   `std::net::TcpStream` per frontend, speaking to a
+//!   `rosella plane --listen` pool server.
+//!
+//! The same loop over either transport is what makes the cross-process
+//! topology a *configuration* rather than a second scheduler
+//! implementation. The one semantic difference is probe freshness: the
+//! local transport reads live atomics at every beat, the TCP transport
+//! reads the probe snapshot served with the last `TickReply` (the frontend
+//! additionally bumps its cached probe for each task it submits between
+//! refreshes, so back-to-back decisions do not dogpile one worker).
+
+use super::wire::{self, Estimates, Msg, TickReply, WireCompletion};
+use crate::coordinator::worker::{Completion, LiveTask, WorkerClient};
+use crate::learner::EstimateView;
+use crate::plane::{EstimateTable, SharedViews};
+use crate::types::TaskKind;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// What one coordination beat reports back to the frontend loop.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TickOutcome {
+    /// Live sum of every scheduler's last reported λ̂ₛ (the throttle
+    /// bootstrap before the first consensus publish).
+    pub lambda_live: f64,
+    /// Fresh consensus, present iff the table epoch moved.
+    pub estimates: Option<Estimates>,
+    /// Stop deciding and start draining.
+    pub stop: bool,
+    /// Every completion for this shard has been delivered.
+    pub drained: bool,
+}
+
+/// The coordination surface a §5 frontend needs from its plane.
+pub trait Transport {
+    /// Dispatch one task to `worker` (fire-and-forget).
+    fn submit(
+        &mut self,
+        job: u64,
+        worker: usize,
+        kind: TaskKind,
+        demand: f64,
+    ) -> Result<(), String>;
+
+    /// One coordination beat: refresh `qlen` probes in place, append this
+    /// shard's pending completions to `completions`, and report run state.
+    /// `epoch` is the consensus epoch the frontend currently holds;
+    /// `lambda_local` its live local arrival estimate λ̂ₛ.
+    fn tick(
+        &mut self,
+        epoch: u64,
+        lambda_local: f64,
+        qlen: &mut [usize],
+        completions: &mut Vec<WireCompletion>,
+    ) -> Result<TickOutcome, String>;
+
+    /// Export this scheduler's sync payload (views + λ̂ₛ + the adaptive
+    /// policy's divergence flag).
+    fn export(
+        &mut self,
+        views: &[EstimateView],
+        lambda_hat: f64,
+        diverged: bool,
+    ) -> Result<(), String>;
+}
+
+/// In-process transport: the sharded plane's own shared state, behind the
+/// [`Transport`] seam.
+pub struct LocalTransport {
+    /// Ingress handles, one per worker; cleared once `stop` is observed so
+    /// the pool can drain and exit.
+    workers: Vec<WorkerClient>,
+    /// Per-worker atomic queue probes (outlive the ingress handles).
+    probes: Vec<Arc<AtomicUsize>>,
+    /// This shard's completion channel.
+    comp_rx: Receiver<Completion>,
+    /// Seqlock-published consensus estimates.
+    table: Arc<EstimateTable>,
+    /// Sync-payload slots (this shard exports into slot `shard`).
+    views: Arc<SharedViews>,
+    /// Every scheduler's live λ̂ₛ slot (f64 bits).
+    lambda_slots: Vec<Arc<AtomicU64>>,
+    /// This frontend's shard index.
+    shard: usize,
+    /// Plane stop flag.
+    stop: Arc<AtomicBool>,
+    /// Run start (completion timestamps are seconds since this instant).
+    start: Instant,
+    /// Completion channel disconnected: the pool fully drained.
+    disconnected: bool,
+    /// Reused estimate read buffer.
+    mu_buf: Vec<f64>,
+}
+
+impl LocalTransport {
+    /// Wire a local transport for shard `shard` over the plane's shared
+    /// state. `workers` and `probes` must be index-aligned.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        workers: Vec<WorkerClient>,
+        comp_rx: Receiver<Completion>,
+        table: Arc<EstimateTable>,
+        views: Arc<SharedViews>,
+        lambda_slots: Vec<Arc<AtomicU64>>,
+        shard: usize,
+        stop: Arc<AtomicBool>,
+        start: Instant,
+    ) -> Self {
+        assert!(shard < lambda_slots.len(), "shard index out of range");
+        let n = table.n();
+        assert_eq!(workers.len(), n, "worker/table size mismatch");
+        let probes = workers.iter().map(|w| w.qlen.clone()).collect();
+        Self {
+            workers,
+            probes,
+            comp_rx,
+            table,
+            views,
+            lambda_slots,
+            shard,
+            stop,
+            start,
+            disconnected: false,
+            mu_buf: vec![0.0; n],
+        }
+    }
+}
+
+impl Transport for LocalTransport {
+    fn submit(
+        &mut self,
+        job: u64,
+        worker: usize,
+        kind: TaskKind,
+        demand: f64,
+    ) -> Result<(), String> {
+        match self.workers.get(worker) {
+            Some(w) => {
+                w.enqueue(LiveTask {
+                    job,
+                    kind,
+                    demand: demand.max(1e-6),
+                    enqueued: Instant::now(),
+                });
+                Ok(())
+            }
+            // Ingress already released at stop: drop the straggler.
+            None if self.workers.is_empty() => Ok(()),
+            None => Err(format!("submit to unknown worker {worker}")),
+        }
+    }
+
+    fn tick(
+        &mut self,
+        epoch: u64,
+        lambda_local: f64,
+        qlen: &mut [usize],
+        completions: &mut Vec<WireCompletion>,
+    ) -> Result<TickOutcome, String> {
+        self.lambda_slots[self.shard].store(lambda_local.to_bits(), Ordering::Relaxed);
+        let stop = self.stop.load(Ordering::Relaxed);
+        if stop {
+            // Release our ingress handles so the pool can drain and exit.
+            self.workers.clear();
+        }
+        for (out, probe) in qlen.iter_mut().zip(self.probes.iter()) {
+            *out = probe.load(Ordering::Relaxed);
+        }
+        drain_completions(&self.comp_rx, &mut self.disconnected, self.start, |c| {
+            completions.push(c)
+        });
+        let estimates = estimates_if_moved(&self.table, epoch, &mut self.mu_buf);
+        Ok(TickOutcome {
+            lambda_live: lambda_total(&self.lambda_slots),
+            estimates,
+            stop,
+            drained: stop && self.disconnected,
+        })
+    }
+
+    fn export(
+        &mut self,
+        views: &[EstimateView],
+        lambda_hat: f64,
+        diverged: bool,
+    ) -> Result<(), String> {
+        self.views.store(self.shard, views, lambda_hat);
+        if diverged {
+            self.views.request_merge();
+        }
+        Ok(())
+    }
+}
+
+// The same live-λ̂ bootstrap the in-process plane computes.
+pub(crate) use crate::plane::consensus::lambda_total;
+
+/// Epoch-gated consensus read: a fresh [`Estimates`] iff the table moved
+/// past `epoch`. One half of the coordination beat, shared by the local
+/// transport and the pool server's `Tick` arm so the two planes cannot
+/// drift apart.
+pub(crate) fn estimates_if_moved(
+    table: &EstimateTable,
+    epoch: u64,
+    mu_buf: &mut Vec<f64>,
+) -> Option<Estimates> {
+    if table.epoch() == epoch {
+        return None;
+    }
+    let (lambda, e) = table.read(mu_buf);
+    Some(Estimates { mu_hat: mu_buf.clone(), lambda, epoch: e })
+}
+
+/// Drain a shard's completion channel into `sink` (converted to wire form
+/// on the run clock), latching `disconnected` once the pool has fully
+/// exited — the other half of the beat, shared the same way.
+pub(crate) fn drain_completions(
+    rx: &Receiver<Completion>,
+    disconnected: &mut bool,
+    start: Instant,
+    mut sink: impl FnMut(WireCompletion),
+) {
+    if *disconnected {
+        return;
+    }
+    loop {
+        match rx.try_recv() {
+            Ok(c) => sink(to_wire(&c, start)),
+            Err(TryRecvError::Empty) => break,
+            Err(TryRecvError::Disconnected) => {
+                *disconnected = true;
+                break;
+            }
+        }
+    }
+}
+
+/// Convert a pool completion into its wire form on the run clock.
+pub(crate) fn to_wire(c: &Completion, start: Instant) -> WireCompletion {
+    WireCompletion {
+        job: c.job,
+        worker: c.worker as u32,
+        kind: c.kind,
+        demand: c.demand,
+        duration: c.duration,
+        sojourn: c.sojourn,
+        at: c.at.saturating_duration_since(start).as_secs_f64(),
+    }
+}
+
+/// TCP transport: the wire protocol over one stream, speaking to a
+/// `rosella plane --listen` pool server.
+pub struct TcpTransport {
+    stream: TcpStream,
+    scratch: Vec<u8>,
+    /// This frontend's shard index (stamped into `SyncExport` frames; the
+    /// server cross-checks it against the connection's claimed identity).
+    shard: u32,
+}
+
+impl TcpTransport {
+    /// Wrap a connected stream for shard `shard` (the caller performs the
+    /// handshake via [`Self::send`]/[`Self::recv`]).
+    pub fn new(stream: TcpStream, shard: usize) -> Self {
+        Self { stream, scratch: Vec::with_capacity(4096), shard: shard as u32 }
+    }
+
+    /// Write one message.
+    pub fn send(&mut self, msg: &Msg) -> Result<(), String> {
+        wire::write_msg(&mut self.stream, msg, &mut self.scratch)
+    }
+
+    /// Read one message (blocking, subject to the stream's read timeout).
+    pub fn recv(&mut self) -> Result<Msg, String> {
+        wire::read_msg(&mut self.stream, &mut self.scratch)
+    }
+}
+
+impl Transport for TcpTransport {
+    fn submit(
+        &mut self,
+        job: u64,
+        worker: usize,
+        kind: TaskKind,
+        demand: f64,
+    ) -> Result<(), String> {
+        self.send(&Msg::Submit { job, worker: worker as u32, kind, demand })
+    }
+
+    fn tick(
+        &mut self,
+        epoch: u64,
+        lambda_local: f64,
+        qlen: &mut [usize],
+        completions: &mut Vec<WireCompletion>,
+    ) -> Result<TickOutcome, String> {
+        self.send(&Msg::Tick { epoch, lambda_local })?;
+        let reply = match self.recv()? {
+            Msg::TickReply(r) => r,
+            other => return Err(format!("expected TickReply, got {:?}", other.tag())),
+        };
+        let TickReply { qlen: probes, lambda_live, stop, drained, estimates, completions: cs } =
+            reply;
+        if probes.len() != qlen.len() {
+            return Err(format!(
+                "probe vector length {} does not match the {}-worker cluster",
+                probes.len(),
+                qlen.len()
+            ));
+        }
+        for (out, p) in qlen.iter_mut().zip(probes) {
+            *out = p as usize;
+        }
+        completions.extend_from_slice(&cs);
+        Ok(TickOutcome { lambda_live, estimates, stop, drained })
+    }
+
+    fn export(
+        &mut self,
+        views: &[EstimateView],
+        lambda_hat: f64,
+        diverged: bool,
+    ) -> Result<(), String> {
+        self.send(&Msg::SyncExport {
+            shard: self.shard,
+            diverged,
+            lambda_hat,
+            views: views.to_vec(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::worker::{self, CompletionSink, PayloadMode};
+    use std::time::Duration;
+
+    #[test]
+    fn local_transport_submits_probes_and_drains() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let pool: Vec<_> = (0..2)
+            .map(|i| {
+                let sink = CompletionSink::sharded(vec![tx.clone()]);
+                worker::spawn(i, 4.0, PayloadMode::Sleep, sink)
+            })
+            .collect();
+        drop(tx);
+        let table = Arc::new(EstimateTable::new(2, 1.0));
+        let views = Arc::new(SharedViews::new(1, 2, 1.0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let slots = vec![Arc::new(AtomicU64::new(0f64.to_bits()))];
+        let start = Instant::now();
+        let mut t = LocalTransport::new(
+            pool.iter().map(|w| w.client.clone()).collect(),
+            rx,
+            table.clone(),
+            views.clone(),
+            slots.clone(),
+            0,
+            stop.clone(),
+            start,
+        );
+
+        t.submit(5, 0, TaskKind::Real, 0.002).unwrap();
+        t.submit(6, 1, TaskKind::Benchmark, 0.002).unwrap();
+        assert!(t.submit(9, 7, TaskKind::Real, 0.002).is_err(), "unknown worker");
+
+        // First beat: no consensus published yet, epoch matches.
+        let mut qlen = vec![0usize; 2];
+        let mut comps = Vec::new();
+        let out = t.tick(table.epoch(), 42.0, &mut qlen, &mut comps).unwrap();
+        assert!(out.estimates.is_none());
+        assert!(!out.stop && !out.drained);
+        assert_eq!(out.lambda_live, 42.0, "live λ̂ is the sum of the slots");
+
+        // A publish moves the epoch: the next beat serves fresh estimates.
+        table.publish(&[2.0, 0.5], 10.0);
+        let out = t.tick(0, 42.0, &mut qlen, &mut comps).unwrap();
+        let est = out.estimates.expect("epoch moved");
+        assert_eq!(est.mu_hat, vec![2.0, 0.5]);
+        assert_eq!(est.lambda, 10.0);
+
+        // Exports land in the shard's slot; divergence raises the flag.
+        t.export(&[EstimateView { mu_hat: 2.0, samples: 3 }; 2], 7.0, true).unwrap();
+        assert!(views.take_merge_request());
+        let mut buf = Vec::new();
+        views.collect_into(&mut buf);
+        assert_eq!(buf[0].lambda_hat, 7.0);
+
+        // Stop: the transport releases its ingress handles; once the pool
+        // exits, the beat reports drained with both completions delivered.
+        stop.store(true, Ordering::Relaxed);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut drained = false;
+        let mut pool = Some(pool);
+        while !drained {
+            assert!(Instant::now() < deadline, "drain timed out");
+            let out = t.tick(table.epoch(), 0.0, &mut qlen, &mut comps).unwrap();
+            assert!(out.stop);
+            drained = out.drained;
+            if let Some(pool) = pool.take() {
+                // Shut the pool down after the transport dropped its
+                // handles (first post-stop tick above).
+                for w in pool {
+                    w.shutdown();
+                }
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(comps.len(), 2, "both completions delivered: {comps:?}");
+        assert!(comps.iter().any(|c| c.job == 5 && c.kind == TaskKind::Real));
+        assert!(comps.iter().any(|c| c.job == 6 && c.kind == TaskKind::Benchmark));
+        assert!(comps.iter().all(|c| c.at >= 0.0 && c.duration > 0.0));
+        // Post-stop submits are dropped silently, not errors.
+        t.submit(9, 0, TaskKind::Real, 0.001).unwrap();
+    }
+}

@@ -1,0 +1,884 @@
+//! The Rosella net-plane wire protocol: a versioned, length-prefixed binary
+//! framing with explicit little-endian encoding, built on `std` only.
+//!
+//! Every frame is `MAGIC (4) | version u16 | tag u16 | payload_len u32 |
+//! payload`, all integers little-endian. Floats travel as their IEEE-754
+//! bit patterns (`f64::to_bits`), so encode/decode round-trips are
+//! bit-exact — including infinities, subnormals, and negative zero — and a
+//! consensus vector read off the wire is the same vector that was
+//! published. Payloads are bounded by [`MAX_PAYLOAD`]; a frame claiming
+//! more is rejected from its header alone, before any allocation.
+//!
+//! The message set ([`Msg`]) is exactly the §5 coordination surface plus
+//! run management:
+//!
+//! * `Hello`/`HelloAck`/`Start` — handshake: a frontend claims shard
+//!   `i` of `k`, the pool server replies with the shared run
+//!   configuration (worker speeds, rates, seeds, sync policy), and
+//!   `Start` releases all frontends at once;
+//! * `Submit` — one task dispatch (real or benchmark), fire-and-forget;
+//! * `Tick`/`TickReply` — the coordination beat: queue-length probes,
+//!   routed completions, the live λ̂ bootstrap, fresh consensus estimates
+//!   when the seqlock epoch moved, and the stop/drained run-state flags;
+//! * `SyncExport` — the scheduler's [`SyncPayload`] half: per-worker
+//!   estimate views plus its local arrival share λ̂ₛ (and the adaptive
+//!   policy's divergence flag), fire-and-forget;
+//! * `Done`/`DoneAck` — final per-frontend statistics for the merged
+//!   cross-process report.
+//!
+//! [`SyncPayload`]: crate::learner::SyncPayload
+
+use crate::learner::EstimateView;
+use crate::types::TaskKind;
+use std::io::{Read, Write};
+
+/// Frame magic: the four bytes every Rosella net-plane frame starts with.
+pub const MAGIC: [u8; 4] = *b"RSNP";
+
+/// Protocol version. Bumped on any wire-incompatible change; both sides
+/// reject a mismatch at the first frame.
+pub const VERSION: u16 = 1;
+
+/// Frame header length: magic + version + tag + payload length.
+pub const HEADER_LEN: usize = 12;
+
+/// Upper bound on a frame payload in bytes. Large enough for thousands of
+/// workers or completions per frame; a header claiming more is rejected
+/// before any payload is read or allocated.
+pub const MAX_PAYLOAD: usize = 1 << 20;
+
+const TAG_HELLO: u16 = 1;
+const TAG_HELLO_ACK: u16 = 2;
+const TAG_START: u16 = 3;
+const TAG_SUBMIT: u16 = 4;
+const TAG_TICK: u16 = 5;
+const TAG_TICK_REPLY: u16 = 6;
+const TAG_SYNC_EXPORT: u16 = 7;
+const TAG_DONE: u16 = 8;
+const TAG_DONE_ACK: u16 = 9;
+
+/// Why a frame failed to decode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Fewer bytes than the header (or the header's payload length) needs.
+    Truncated,
+    /// The first four bytes are not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Version field differs from [`VERSION`].
+    BadVersion(u16),
+    /// Unknown message tag.
+    BadTag(u16),
+    /// Payload length exceeds [`MAX_PAYLOAD`].
+    TooLarge(usize),
+    /// Structurally invalid payload.
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "truncated frame"),
+            WireError::BadMagic(m) => write!(f, "bad magic {m:?} (not a rosella net frame)"),
+            WireError::BadVersion(v) => {
+                write!(f, "protocol version {v} (this build speaks {VERSION})")
+            }
+            WireError::BadTag(t) => write!(f, "unknown message tag {t}"),
+            WireError::TooLarge(n) => {
+                write!(f, "frame payload {n} bytes exceeds the {MAX_PAYLOAD}-byte bound")
+            }
+            WireError::Malformed(what) => write!(f, "malformed payload: {what}"),
+        }
+    }
+}
+
+/// A consensus snapshot served to a frontend when the estimate-table epoch
+/// moved: the merged μ̂ vector, λ̂_global, and the epoch it corresponds to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Estimates {
+    /// Merged per-worker speed estimates.
+    pub mu_hat: Vec<f64>,
+    /// Exchanged-share λ̂_global (tasks/second).
+    pub lambda: f64,
+    /// Seqlock epoch of this publication.
+    pub epoch: u64,
+}
+
+/// One completion report shipped back to the scheduler that routed the
+/// task. Times are seconds on the pool server's run clock (`at` since run
+/// start), so every frontend's learner sees one consistent timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WireCompletion {
+    /// Job id as submitted (shard bits + local counter).
+    pub job: u64,
+    /// Worker that served the task.
+    pub worker: u32,
+    /// Real workload or learner benchmark.
+    pub kind: TaskKind,
+    /// Task demand in unit-speed seconds.
+    pub demand: f64,
+    /// Measured service duration (seconds).
+    pub duration: f64,
+    /// Queueing + service time since the server-side enqueue (seconds).
+    pub sojourn: f64,
+    /// Completion instant, seconds since run start.
+    pub at: f64,
+}
+
+/// Encoded size of one [`WireCompletion`]: u64 + u32 + u8 + 4×f64.
+const COMPLETION_LEN: usize = 8 + 4 + 1 + 4 * 8;
+
+/// Encoded size of one [`EstimateView`]: f64 + u64.
+const VIEW_LEN: usize = 16;
+
+/// The shared run configuration the pool server hands each frontend at
+/// handshake, so `rosella frontend` needs nothing beyond `--connect` and
+/// `--shard`: both sides derive identical parameters from one source.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HelloAck {
+    /// Worker count n.
+    pub workers: u32,
+    /// Arrival ingestion batch size per frontend.
+    pub batch: u32,
+    /// Run seed (per-shard streams derived via `shard_seeds`).
+    pub seed: u64,
+    /// Prior speed estimate (mean configured speed).
+    pub prior: f64,
+    /// Mean task demand τ̄ (unit-speed seconds).
+    pub mean_demand: f64,
+    /// Guaranteed total throughput μ̄ (tasks/second).
+    pub mu_bar: f64,
+    /// Aggregate arrival rate (jobs/second) to split across shards.
+    pub rate: f64,
+    /// Run duration in seconds (informational; stop is server-driven).
+    pub duration: f64,
+    /// Warmup cutoff for response metrics (seconds).
+    pub warmup: f64,
+    /// Local learner publish/export cadence (seconds).
+    pub publish_interval: f64,
+    /// Estimate-sync consensus interval (seconds).
+    pub sync_interval: f64,
+    /// Adaptive sync divergence threshold (unscaled).
+    pub sync_threshold: f64,
+    /// Whether frontends run their benchmark dispatchers.
+    pub fake_jobs: bool,
+    /// Scheduling policy, in `PolicyKind::parse` spelling.
+    pub policy: String,
+    /// Sync strategy, in `SyncKind::parse` spelling.
+    pub sync_policy: String,
+    /// Configured worker speeds (diagnostics; decisions use estimates).
+    pub speeds: Vec<f64>,
+}
+
+/// The coordination beat's reply: everything a remote scheduler needs to
+/// keep deciding — fresh probes, its routed completions, consensus when the
+/// epoch moved, and the run-state flags.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TickReply {
+    /// Per-worker queue-length probes.
+    pub qlen: Vec<u32>,
+    /// Live sum of every shard's last reported λ̂ₛ — the throttle bootstrap
+    /// before the first consensus publish carries an exchanged λ̂_global.
+    pub lambda_live: f64,
+    /// The run passed its deadline: stop deciding, start draining.
+    pub stop: bool,
+    /// The pool fully drained and every completion for this shard has been
+    /// shipped: the frontend may send its final export and `Done`.
+    pub drained: bool,
+    /// Fresh consensus, present iff the table epoch moved past the epoch
+    /// the frontend reported in its `Tick`.
+    pub estimates: Option<Estimates>,
+    /// Completions of tasks this shard routed, oldest first.
+    pub completions: Vec<WireCompletion>,
+}
+
+/// Final per-frontend statistics for the merged cross-process report.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct DoneStats {
+    /// Scheduling decisions made.
+    pub decisions: u64,
+    /// Real tasks submitted.
+    pub dispatched: u64,
+    /// Benchmark tasks submitted.
+    pub benchmarks: u64,
+    /// Jobs in the latency record (post-warmup).
+    pub resp_count: u64,
+    /// Mean response time (seconds).
+    pub resp_mean: f64,
+    /// Median response time (seconds).
+    pub resp_p50: f64,
+    /// 95th-percentile response time (seconds).
+    pub resp_p95: f64,
+}
+
+/// One wire message. See the module docs for the protocol roles.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Frontend → server: claim shard `shard` of `shards`.
+    Hello {
+        /// Shard index in `0..shards`.
+        shard: u32,
+        /// Total scheduler count k.
+        shards: u32,
+    },
+    /// Server → frontend: the shared run configuration.
+    HelloAck(HelloAck),
+    /// Server → frontend: all shards connected; the run begins now.
+    Start,
+    /// Frontend → server: dispatch one task (fire-and-forget).
+    Submit {
+        /// Job id (shard bits + local counter; benchmark sentinel allowed).
+        job: u64,
+        /// Target worker.
+        worker: u32,
+        /// Real or benchmark.
+        kind: TaskKind,
+        /// Demand in unit-speed seconds.
+        demand: f64,
+    },
+    /// Frontend → server: one coordination beat.
+    Tick {
+        /// The consensus epoch the frontend currently holds.
+        epoch: u64,
+        /// The frontend's live local arrival estimate λ̂ₛ.
+        lambda_local: f64,
+    },
+    /// Server → frontend: reply to `Tick`.
+    TickReply(TickReply),
+    /// Frontend → server: sync-payload export (fire-and-forget).
+    SyncExport {
+        /// Exporting shard (must match the connection's claimed shard).
+        shard: u32,
+        /// Adaptive policy: local estimates diverged past the threshold.
+        diverged: bool,
+        /// Local arrival share λ̂ₛ (tasks/second).
+        lambda_hat: f64,
+        /// Per-worker estimate views with merge weights.
+        views: Vec<EstimateView>,
+    },
+    /// Frontend → server: final statistics; last message on the socket.
+    Done(DoneStats),
+    /// Server → frontend: statistics recorded, the socket may close.
+    DoneAck,
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+fn put_bool(out: &mut Vec<u8>, v: bool) {
+    out.push(u8::from(v));
+}
+
+fn put_kind(out: &mut Vec<u8>, k: TaskKind) {
+    out.push(match k {
+        TaskKind::Real => 0,
+        TaskKind::Benchmark => 1,
+    });
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_f64s(out: &mut Vec<u8>, xs: &[f64]) {
+    put_u32(out, xs.len() as u32);
+    for &x in xs {
+        put_f64(out, x);
+    }
+}
+
+fn put_u32s(out: &mut Vec<u8>, xs: &[u32]) {
+    put_u32(out, xs.len() as u32);
+    for &x in xs {
+        put_u32(out, x);
+    }
+}
+
+fn put_views(out: &mut Vec<u8>, views: &[EstimateView]) {
+    put_u32(out, views.len() as u32);
+    for v in views {
+        put_f64(out, v.mu_hat);
+        put_u64(out, v.samples);
+    }
+}
+
+fn put_completions(out: &mut Vec<u8>, cs: &[WireCompletion]) {
+    put_u32(out, cs.len() as u32);
+    for c in cs {
+        put_u64(out, c.job);
+        put_u32(out, c.worker);
+        put_kind(out, c.kind);
+        put_f64(out, c.demand);
+        put_f64(out, c.duration);
+        put_f64(out, c.sojourn);
+        put_f64(out, c.at);
+    }
+}
+
+/// Bounds-checked little-endian reader over a payload slice.
+struct Cur<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.buf.len() < n {
+            return Err(WireError::Truncated);
+        }
+        let (head, rest) = self.buf.split_at(n);
+        self.buf = rest;
+        Ok(head)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("sized take")))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("sized take")))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn boolean(&mut self) -> Result<bool, WireError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(WireError::Malformed("bool out of range")),
+        }
+    }
+
+    fn kind(&mut self) -> Result<TaskKind, WireError> {
+        match self.u8()? {
+            0 => Ok(TaskKind::Real),
+            1 => Ok(TaskKind::Benchmark),
+            _ => Err(WireError::Malformed("task kind out of range")),
+        }
+    }
+
+    /// Read a count and verify the remaining payload can actually hold
+    /// that many `elem`-byte elements, so a hostile count never drives an
+    /// allocation beyond the (already bounded) frame size. Division, not
+    /// `n * elem`: the multiply could wrap on 32-bit targets and defeat
+    /// the bound.
+    fn count(&mut self, elem: usize) -> Result<usize, WireError> {
+        debug_assert!(elem > 0, "zero-sized wire element");
+        let n = self.u32()? as usize;
+        if n > self.buf.len() / elem {
+            return Err(WireError::Truncated);
+        }
+        Ok(n)
+    }
+
+    fn string(&mut self) -> Result<String, WireError> {
+        let n = self.count(1)?;
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| WireError::Malformed("string is not utf-8"))
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>, WireError> {
+        let n = self.count(8)?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>, WireError> {
+        let n = self.count(4)?;
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    fn views(&mut self) -> Result<Vec<EstimateView>, WireError> {
+        let n = self.count(VIEW_LEN)?;
+        (0..n)
+            .map(|_| {
+                Ok(EstimateView { mu_hat: self.f64()?, samples: self.u64()? })
+            })
+            .collect()
+    }
+
+    fn completions(&mut self) -> Result<Vec<WireCompletion>, WireError> {
+        let n = self.count(COMPLETION_LEN)?;
+        (0..n)
+            .map(|_| {
+                Ok(WireCompletion {
+                    job: self.u64()?,
+                    worker: self.u32()?,
+                    kind: self.kind()?,
+                    demand: self.f64()?,
+                    duration: self.f64()?,
+                    sojourn: self.f64()?,
+                    at: self.f64()?,
+                })
+            })
+            .collect()
+    }
+
+    fn done(&self) -> Result<(), WireError> {
+        if self.buf.is_empty() {
+            Ok(())
+        } else {
+            Err(WireError::Malformed("trailing bytes"))
+        }
+    }
+}
+
+/// Validate a frame header and return its payload length.
+pub fn header_payload_len(header: &[u8; HEADER_LEN]) -> Result<usize, WireError> {
+    let magic: [u8; 4] = header[0..4].try_into().expect("sized slice");
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let len = u32::from_le_bytes(header[8..12].try_into().expect("sized slice")) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(WireError::TooLarge(len));
+    }
+    Ok(len)
+}
+
+impl Msg {
+    /// This message's wire tag.
+    pub fn tag(&self) -> u16 {
+        match self {
+            Msg::Hello { .. } => TAG_HELLO,
+            Msg::HelloAck(_) => TAG_HELLO_ACK,
+            Msg::Start => TAG_START,
+            Msg::Submit { .. } => TAG_SUBMIT,
+            Msg::Tick { .. } => TAG_TICK,
+            Msg::TickReply(_) => TAG_TICK_REPLY,
+            Msg::SyncExport { .. } => TAG_SYNC_EXPORT,
+            Msg::Done(_) => TAG_DONE,
+            Msg::DoneAck => TAG_DONE_ACK,
+        }
+    }
+
+    /// Append one complete frame (header + payload) to `out`.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&MAGIC);
+        put_u16(out, VERSION);
+        put_u16(out, self.tag());
+        let len_at = out.len();
+        put_u32(out, 0);
+        let body_start = out.len();
+        self.encode_body(out);
+        let len = out.len() - body_start;
+        debug_assert!(len <= MAX_PAYLOAD, "oversized frame encoded");
+        out[len_at..len_at + 4].copy_from_slice(&(len as u32).to_le_bytes());
+    }
+
+    fn encode_body(&self, out: &mut Vec<u8>) {
+        match self {
+            Msg::Hello { shard, shards } => {
+                put_u32(out, *shard);
+                put_u32(out, *shards);
+            }
+            Msg::HelloAck(a) => {
+                put_u32(out, a.workers);
+                put_u32(out, a.batch);
+                put_u64(out, a.seed);
+                put_f64(out, a.prior);
+                put_f64(out, a.mean_demand);
+                put_f64(out, a.mu_bar);
+                put_f64(out, a.rate);
+                put_f64(out, a.duration);
+                put_f64(out, a.warmup);
+                put_f64(out, a.publish_interval);
+                put_f64(out, a.sync_interval);
+                put_f64(out, a.sync_threshold);
+                put_bool(out, a.fake_jobs);
+                put_str(out, &a.policy);
+                put_str(out, &a.sync_policy);
+                put_f64s(out, &a.speeds);
+            }
+            Msg::Start | Msg::DoneAck => {}
+            Msg::Submit { job, worker, kind, demand } => {
+                put_u64(out, *job);
+                put_u32(out, *worker);
+                put_kind(out, *kind);
+                put_f64(out, *demand);
+            }
+            Msg::Tick { epoch, lambda_local } => {
+                put_u64(out, *epoch);
+                put_f64(out, *lambda_local);
+            }
+            Msg::TickReply(r) => {
+                put_u32s(out, &r.qlen);
+                put_f64(out, r.lambda_live);
+                put_bool(out, r.stop);
+                put_bool(out, r.drained);
+                match &r.estimates {
+                    None => out.push(0),
+                    Some(e) => {
+                        out.push(1);
+                        put_f64s(out, &e.mu_hat);
+                        put_f64(out, e.lambda);
+                        put_u64(out, e.epoch);
+                    }
+                }
+                put_completions(out, &r.completions);
+            }
+            Msg::SyncExport { shard, diverged, lambda_hat, views } => {
+                put_u32(out, *shard);
+                put_bool(out, *diverged);
+                put_f64(out, *lambda_hat);
+                put_views(out, views);
+            }
+            Msg::Done(d) => {
+                put_u64(out, d.decisions);
+                put_u64(out, d.dispatched);
+                put_u64(out, d.benchmarks);
+                put_u64(out, d.resp_count);
+                put_f64(out, d.resp_mean);
+                put_f64(out, d.resp_p50);
+                put_f64(out, d.resp_p95);
+            }
+        }
+    }
+
+    /// Decode exactly one complete frame from `frame`.
+    pub fn decode(frame: &[u8]) -> Result<Msg, WireError> {
+        if frame.len() < HEADER_LEN {
+            return Err(WireError::Truncated);
+        }
+        let header: &[u8; HEADER_LEN] =
+            frame[..HEADER_LEN].try_into().expect("sized slice");
+        let len = header_payload_len(header)?;
+        let tag = u16::from_le_bytes([frame[6], frame[7]]);
+        let body = &frame[HEADER_LEN..];
+        if body.len() < len {
+            return Err(WireError::Truncated);
+        }
+        if body.len() > len {
+            return Err(WireError::Malformed("trailing bytes"));
+        }
+        Self::decode_body(tag, body)
+    }
+
+    fn decode_body(tag: u16, body: &[u8]) -> Result<Msg, WireError> {
+        let mut c = Cur { buf: body };
+        let msg = match tag {
+            TAG_HELLO => Msg::Hello { shard: c.u32()?, shards: c.u32()? },
+            TAG_HELLO_ACK => Msg::HelloAck(HelloAck {
+                workers: c.u32()?,
+                batch: c.u32()?,
+                seed: c.u64()?,
+                prior: c.f64()?,
+                mean_demand: c.f64()?,
+                mu_bar: c.f64()?,
+                rate: c.f64()?,
+                duration: c.f64()?,
+                warmup: c.f64()?,
+                publish_interval: c.f64()?,
+                sync_interval: c.f64()?,
+                sync_threshold: c.f64()?,
+                fake_jobs: c.boolean()?,
+                policy: c.string()?,
+                sync_policy: c.string()?,
+                speeds: c.f64s()?,
+            }),
+            TAG_START => Msg::Start,
+            TAG_SUBMIT => Msg::Submit {
+                job: c.u64()?,
+                worker: c.u32()?,
+                kind: c.kind()?,
+                demand: c.f64()?,
+            },
+            TAG_TICK => Msg::Tick { epoch: c.u64()?, lambda_local: c.f64()? },
+            TAG_TICK_REPLY => {
+                let qlen = c.u32s()?;
+                let lambda_live = c.f64()?;
+                let stop = c.boolean()?;
+                let drained = c.boolean()?;
+                let estimates = match c.u8()? {
+                    0 => None,
+                    1 => Some(Estimates {
+                        mu_hat: c.f64s()?,
+                        lambda: c.f64()?,
+                        epoch: c.u64()?,
+                    }),
+                    _ => return Err(WireError::Malformed("estimates flag out of range")),
+                };
+                let completions = c.completions()?;
+                Msg::TickReply(TickReply {
+                    qlen,
+                    lambda_live,
+                    stop,
+                    drained,
+                    estimates,
+                    completions,
+                })
+            }
+            TAG_SYNC_EXPORT => Msg::SyncExport {
+                shard: c.u32()?,
+                diverged: c.boolean()?,
+                lambda_hat: c.f64()?,
+                views: c.views()?,
+            },
+            TAG_DONE => Msg::Done(DoneStats {
+                decisions: c.u64()?,
+                dispatched: c.u64()?,
+                benchmarks: c.u64()?,
+                resp_count: c.u64()?,
+                resp_mean: c.f64()?,
+                resp_p50: c.f64()?,
+                resp_p95: c.f64()?,
+            }),
+            TAG_DONE_ACK => Msg::DoneAck,
+            other => return Err(WireError::BadTag(other)),
+        };
+        c.done()?;
+        Ok(msg)
+    }
+}
+
+/// Encode `msg` into `scratch` and write the frame to `w`.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg, scratch: &mut Vec<u8>) -> Result<(), String> {
+    scratch.clear();
+    msg.encode_into(scratch);
+    w.write_all(scratch).map_err(|e| format!("net write: {e}"))
+}
+
+/// Read one frame from `r` (using `scratch` as the reassembly buffer) and
+/// decode it. Header validation happens before the payload is read, so an
+/// oversized or alien frame is rejected without buffering it.
+pub fn read_msg<R: Read>(r: &mut R, scratch: &mut Vec<u8>) -> Result<Msg, String> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header).map_err(|e| format!("net read header: {e}"))?;
+    let len = header_payload_len(&header).map_err(|e| format!("net frame: {e}"))?;
+    scratch.clear();
+    scratch.extend_from_slice(&header);
+    scratch.resize(HEADER_LEN + len, 0);
+    r.read_exact(&mut scratch[HEADER_LEN..])
+        .map_err(|e| format!("net read body: {e}"))?;
+    Msg::decode(scratch).map_err(|e| format!("net frame: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(mu: f64, s: u64) -> EstimateView {
+        EstimateView { mu_hat: mu, samples: s }
+    }
+
+    fn sample_completion() -> WireCompletion {
+        WireCompletion {
+            job: (3u64 << 48) | 41,
+            worker: 2,
+            kind: TaskKind::Real,
+            demand: 0.01,
+            duration: 0.02,
+            sojourn: 0.05,
+            at: 1.25,
+        }
+    }
+
+    /// One sample message per variant, covering empty and non-empty
+    /// collections and both `estimates` arms.
+    fn every_variant() -> Vec<Msg> {
+        vec![
+            Msg::Hello { shard: 1, shards: 4 },
+            Msg::HelloAck(HelloAck {
+                workers: 8,
+                batch: 64,
+                seed: 42,
+                prior: 0.8125,
+                mean_demand: 0.01,
+                mu_bar: 650.0,
+                rate: 400.0,
+                duration: 3.0,
+                warmup: 0.5,
+                publish_interval: 0.2,
+                sync_interval: 0.2,
+                sync_threshold: 0.1,
+                fake_jobs: true,
+                policy: "ppot".into(),
+                sync_policy: "adaptive".into(),
+                speeds: vec![2.0, 1.0, 0.5, 0.25],
+            }),
+            Msg::Start,
+            Msg::Submit {
+                job: 7,
+                worker: 3,
+                kind: TaskKind::Benchmark,
+                demand: 0.003,
+            },
+            Msg::Tick { epoch: 12, lambda_local: 99.5 },
+            Msg::TickReply(TickReply {
+                qlen: vec![0, 3, 1, 7],
+                lambda_live: 123.0,
+                stop: false,
+                drained: false,
+                estimates: Some(Estimates {
+                    mu_hat: vec![1.5, 0.75],
+                    lambda: 200.0,
+                    epoch: 14,
+                }),
+                completions: vec![sample_completion()],
+            }),
+            Msg::TickReply(TickReply::default()),
+            Msg::SyncExport {
+                shard: 2,
+                diverged: true,
+                lambda_hat: 51.25,
+                views: vec![v(1.5, 40), v(0.0, 1), v(0.25, 0)],
+            },
+            Msg::SyncExport { shard: 0, diverged: false, lambda_hat: 0.0, views: vec![] },
+            Msg::Done(DoneStats {
+                decisions: 1000,
+                dispatched: 990,
+                benchmarks: 25,
+                resp_count: 980,
+                resp_mean: 0.012,
+                resp_p50: 0.010,
+                resp_p95: 0.031,
+            }),
+            Msg::DoneAck,
+        ]
+    }
+
+    #[test]
+    fn every_variant_round_trips() {
+        for msg in every_variant() {
+            let mut buf = Vec::new();
+            msg.encode_into(&mut buf);
+            assert!(buf.len() >= HEADER_LEN);
+            let back = Msg::decode(&buf).unwrap_or_else(|e| panic!("{msg:?}: {e}"));
+            assert_eq!(back, msg);
+        }
+    }
+
+    #[test]
+    fn floats_round_trip_bit_exactly() {
+        // Bit patterns survive the wire even where PartialEq is useless:
+        // infinities, subnormals, negative zero, and NaN.
+        for x in [f64::INFINITY, f64::NEG_INFINITY, -0.0, 5e-324, f64::NAN, 0.1 + 0.2] {
+            let msg = Msg::Tick { epoch: 0, lambda_local: x };
+            let mut buf = Vec::new();
+            msg.encode_into(&mut buf);
+            match Msg::decode(&buf).unwrap() {
+                Msg::Tick { lambda_local, .. } => {
+                    assert_eq!(lambda_local.to_bits(), x.to_bits());
+                }
+                other => panic!("decoded {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_rejected() {
+        for msg in every_variant() {
+            let mut buf = Vec::new();
+            msg.encode_into(&mut buf);
+            for cut in 0..buf.len() {
+                assert!(
+                    Msg::decode(&buf[..cut]).is_err(),
+                    "{msg:?} decoded from a {cut}-byte prefix of {} bytes",
+                    buf.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut buf = Vec::new();
+        Msg::Start.encode_into(&mut buf);
+        buf.push(0xFF);
+        assert_eq!(Msg::decode(&buf), Err(WireError::Malformed("trailing bytes")));
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_rejected() {
+        let mut buf = Vec::new();
+        Msg::Start.encode_into(&mut buf);
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(matches!(Msg::decode(&bad), Err(WireError::BadMagic(_))));
+        let mut bad = buf.clone();
+        bad[4] = 9;
+        assert_eq!(Msg::decode(&bad), Err(WireError::BadVersion(9)));
+        let header: [u8; HEADER_LEN] = bad[..HEADER_LEN].try_into().unwrap();
+        assert_eq!(header_payload_len(&header), Err(WireError::BadVersion(9)));
+    }
+
+    #[test]
+    fn unknown_tag_is_rejected() {
+        let mut buf = Vec::new();
+        Msg::Start.encode_into(&mut buf);
+        buf[6..8].copy_from_slice(&999u16.to_le_bytes());
+        assert_eq!(Msg::decode(&buf), Err(WireError::BadTag(999)));
+    }
+
+    #[test]
+    fn oversized_payload_is_rejected_from_the_header_alone() {
+        let mut header = [0u8; HEADER_LEN];
+        header[0..4].copy_from_slice(&MAGIC);
+        header[4..6].copy_from_slice(&VERSION.to_le_bytes());
+        header[6..8].copy_from_slice(&TAG_START.to_le_bytes());
+        header[8..12].copy_from_slice(&((MAX_PAYLOAD as u32) + 1).to_le_bytes());
+        assert_eq!(header_payload_len(&header), Err(WireError::TooLarge(MAX_PAYLOAD + 1)));
+        // The full decode path rejects it too, before touching the body.
+        assert_eq!(Msg::decode(&header), Err(WireError::TooLarge(MAX_PAYLOAD + 1)));
+    }
+
+    #[test]
+    fn hostile_counts_cannot_drive_allocations() {
+        // A SyncExport claiming u32::MAX views must fail as Truncated
+        // (the payload cannot hold them), not attempt the allocation.
+        let mut buf = Vec::new();
+        Msg::SyncExport { shard: 0, diverged: false, lambda_hat: 0.0, views: vec![] }
+            .encode_into(&mut buf);
+        let n = buf.len();
+        buf[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(Msg::decode(&buf), Err(WireError::Truncated));
+    }
+
+    #[test]
+    fn out_of_range_enums_are_malformed() {
+        let mut buf = Vec::new();
+        Msg::Submit { job: 1, worker: 0, kind: TaskKind::Real, demand: 0.1 }
+            .encode_into(&mut buf);
+        // The kind byte sits after job (8) + worker (4).
+        buf[HEADER_LEN + 12] = 7;
+        assert!(matches!(Msg::decode(&buf), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn stream_io_round_trips_back_to_back_frames() {
+        let msgs = every_variant();
+        let mut wire = Vec::new();
+        let mut scratch = Vec::new();
+        for m in &msgs {
+            write_msg(&mut wire, m, &mut scratch).unwrap();
+        }
+        let mut cursor = std::io::Cursor::new(wire);
+        for m in &msgs {
+            let back = read_msg(&mut cursor, &mut scratch).unwrap();
+            assert_eq!(&back, m);
+        }
+        // The stream is exactly consumed: the next read hits EOF.
+        assert!(read_msg(&mut cursor, &mut scratch).is_err());
+    }
+}

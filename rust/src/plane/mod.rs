@@ -46,6 +46,30 @@
 //! `rosella plane` (the CLI stress harness) sweeps the frontend count and
 //! reports scheduling decisions/sec and response-time percentiles;
 //! `benches/bench_plane.rs` uses the same entry points.
+//!
+//! ## Cross-process plane
+//!
+//! The same topology runs across *processes* through the
+//! [`crate::net`] subsystem's `Transport` seam
+//! ([`crate::net::Transport`]). The seam names the four capabilities a §5
+//! frontend needs from its plane — submit a task, refresh queue probes,
+//! receive the completions it routed, exchange sync payloads — and the
+//! transport-generic frontend loop
+//! ([`crate::net::run_frontend_loop`], built on this module's
+//! [`FrontendCore`]) runs over either in-process channels
+//! ([`crate::net::LocalTransport`]: the same [`WorkerClient`] handles,
+//! atomic probes, and seqlock table the native shard threads use) or TCP
+//! ([`crate::net::TcpTransport`] speaking the length-prefixed wire
+//! protocol to a `rosella plane --listen` pool server). The consensus
+//! layer needs no seam at all: remote `SyncExport` frames land in the same
+//! [`SharedViews`] slots the in-process shards write, so [`consensus`]'s
+//! sync thread — policies, dirty-skip, drain-time full merge — is
+//! byte-for-byte shared between the two planes. The native shard loop in
+//! [`shard`] keeps its direct atomic path (its decision stream is pinned
+//! decision-for-decision against the live coordinator); what crosses the
+//! seam is the identical decision core over a probe snapshot instead of
+//! live atomics — the coordination price §2 argues is affordable, measured
+//! by `benches/bench_net.rs` against the in-process numbers.
 
 pub mod consensus;
 pub mod ingest;
@@ -326,11 +350,40 @@ struct AggOut {
     benchmarks: u64,
 }
 
-/// One catch-up pass of the LEARNER-DISPATCHER loop (Fig. 6), shared by
-/// the shared-mode aggregator and every per-shard learner: inject benchmark
-/// jobs for each elapsed dispatch instant at the dispatcher's current rate.
-/// Returns how many were sent. `lambda` is sampled once per pass — within
-/// one catch-up burst the estimate cannot meaningfully move.
+/// One catch-up pass of the LEARNER-DISPATCHER loop (Fig. 6), generic over
+/// how a benchmark task reaches its worker — in-process pool enqueue or the
+/// net plane's transport submit — so the throttle loop (gap clamp, uniform
+/// worker draw, demand floor) exists exactly once. `lambda` is sampled once
+/// per pass — within one catch-up burst the estimate cannot meaningfully
+/// move. Returns how many tasks were sent.
+pub(crate) fn dispatch_benchmarks_with<E>(
+    dispatcher: &FakeJobDispatcher,
+    workers: usize,
+    lambda: f64,
+    demand_dist: &Exponential,
+    rng: &mut Rng,
+    next_bench: &mut Instant,
+    mut submit: E,
+) -> Result<u64, String>
+where
+    E: FnMut(usize, f64) -> Result<(), String>,
+{
+    if !dispatcher.enabled() {
+        return Ok(0);
+    }
+    let mut sent = 0;
+    while Instant::now() >= *next_bench {
+        let gap = dispatcher.next_gap(lambda, rng).unwrap_or(1.0).clamp(1e-3, 1.0);
+        let w = dispatcher.pick_worker(workers, rng);
+        submit(w, demand_dist.sample(rng).max(1e-4))?;
+        sent += 1;
+        *next_bench += Duration::from_secs_f64(gap);
+    }
+    Ok(sent)
+}
+
+/// [`dispatch_benchmarks_with`] over the in-process worker pool — the pass
+/// shared by the shared-mode aggregator and every per-shard learner.
 pub(crate) fn dispatch_benchmarks(
     dispatcher: &FakeJobDispatcher,
     pool: &[WorkerClient],
@@ -340,23 +393,24 @@ pub(crate) fn dispatch_benchmarks(
     rng: &mut Rng,
     next_bench: &mut Instant,
 ) -> u64 {
-    if !dispatcher.enabled() {
-        return 0;
-    }
-    let mut sent = 0;
-    while Instant::now() >= *next_bench {
-        let gap = dispatcher.next_gap(lambda, rng).unwrap_or(1.0).clamp(1e-3, 1.0);
-        let w = dispatcher.pick_worker(pool.len(), rng);
-        pool[w].enqueue(LiveTask {
-            job,
-            kind: TaskKind::Benchmark,
-            demand: demand_dist.sample(rng).max(1e-4),
-            enqueued: Instant::now(),
-        });
-        sent += 1;
-        *next_bench += Duration::from_secs_f64(gap);
-    }
-    sent
+    dispatch_benchmarks_with(
+        dispatcher,
+        pool.len(),
+        lambda,
+        demand_dist,
+        rng,
+        next_bench,
+        |w, demand| {
+            pool[w].enqueue(LiveTask {
+                job,
+                kind: TaskKind::Benchmark,
+                demand,
+                enqueued: Instant::now(),
+            });
+            Ok(())
+        },
+    )
+    .expect("in-process enqueue is infallible")
 }
 
 fn record_completion(
@@ -455,12 +509,20 @@ pub fn run_plane(cfg: PlaneConfig) -> Result<PlaneReport, String> {
         cfg.sync_policy
             .validate(cfg.sync_interval)
             .map_err(|e| format!("sync policy: {e}"))?;
-    } else if cfg.sync_policy.kind != SyncKind::Periodic {
-        return Err(format!(
-            "--sync-policy {} needs --learners per-shard (the shared aggregator has no \
-             consensus to schedule)",
-            cfg.sync_policy.kind.name()
-        ));
+    } else {
+        if cfg.sync_policy.kind != SyncKind::Periodic {
+            return Err(format!(
+                "--sync-policy {} needs --learners per-shard (the shared aggregator has no \
+                 consensus to schedule)",
+                cfg.sync_policy.kind.name()
+            ));
+        }
+        // The threshold field is validated even where it is unused (shared
+        // mode): a NaN or negative --sync-threshold is a config mistake to
+        // reject loudly, not dead data to carry into reports.
+        cfg.sync_policy
+            .validate(cfg.sync_interval)
+            .map_err(|e| format!("sync policy: {e}"))?;
     }
     let k = cfg.frontends;
     let total_speed: f64 = cfg.speeds.iter().sum();
@@ -599,7 +661,7 @@ pub fn run_plane(cfg: PlaneConfig) -> Result<PlaneReport, String> {
             fake_jobs: cfg.fake_jobs,
             shards: k,
             divergence_threshold: (per_shard && cfg.sync_policy.kind == SyncKind::Adaptive)
-                .then_some(cfg.sync_policy.threshold),
+                .then(|| cfg.sync_policy.scaled_threshold(k)),
             learner: shard_rx_iter.next().map(|comp_rx| shard::ShardLearner {
                 comp_rx,
                 views: views.as_ref().expect("per-shard views exist").clone(),
@@ -773,16 +835,23 @@ pub fn bench_json(base: &PlaneConfig, reports: &[PlaneReport]) -> crate::config:
     Json::Obj(top)
 }
 
-/// CLI adapter for `rosella plane`.
-pub fn plane_cli(p: &crate::cli::Parsed) -> Result<String, String> {
+/// Resolve `--workers`/`--speeds` into a concrete speed vector — shared by
+/// the in-process sweep CLI and the net pool server (`plane --listen`), so
+/// the two `plane` modes cannot drift apart on the default mix.
+pub(crate) fn speeds_from_cli(p: &crate::cli::Parsed) -> Result<Vec<f64>, String> {
     let workers: usize = p.parse_as("workers")?.unwrap_or(8);
-    let speeds = match p.get("speeds") {
+    Ok(match p.get("speeds") {
         Some(s) => crate::cluster::SpeedProfile::parse(s)?.speeds(&mut Rng::new(1)),
         None => {
             let base = [2.0, 1.0, 1.0, 1.0, 0.5, 0.5, 0.25, 0.25];
             (0..workers).map(|i| base[i % base.len()]).collect()
         }
-    };
+    })
+}
+
+/// CLI adapter for `rosella plane`.
+pub fn plane_cli(p: &crate::cli::Parsed) -> Result<String, String> {
+    let speeds = speeds_from_cli(p)?;
     let frontend_counts: Vec<usize> = p
         .get("frontends")
         .unwrap_or("1,2,4")
@@ -1007,6 +1076,20 @@ mod tests {
             ..quick(1, DispatchMode::Execute)
         })
         .is_err());
+        // A NaN or negative --sync-threshold is rejected even in shared
+        // mode, where the adaptive trigger is unused: a poisoned config
+        // field must fail loudly, not ride along silently.
+        for bad in [f64::NAN, -0.5] {
+            assert!(run_plane(PlaneConfig {
+                learners: LearnerMode::Shared,
+                sync_policy: SyncPolicyConfig {
+                    threshold: bad,
+                    ..SyncPolicyConfig::periodic()
+                },
+                ..quick(1, DispatchMode::Execute)
+            })
+            .is_err());
+        }
     }
 
     fn quick_per_shard(frontends: usize, mode: DispatchMode) -> PlaneConfig {
