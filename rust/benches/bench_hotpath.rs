@@ -11,7 +11,9 @@
 //! full-learning-stack simulator run.
 
 use rosella::cluster::{SpeedProfile, Volatility};
-use rosella::hotpath::{alias_rebuild_bench, decision_bench, sim_bench, HotpathReport};
+use rosella::hotpath::{
+    alias_rebuild_bench, decision_bench, metrics_overhead_bench, sim_bench, HotpathReport,
+};
 use rosella::learner::LearnerConfig;
 use rosella::scheduler::{PolicyKind, TieRule};
 use rosella::simulator::{run, SimConfig};
@@ -31,6 +33,7 @@ fn full_learning_stack_bench() {
         policy: PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
         learner: LearnerConfig::default(),
         queue_sample: None,
+        timeline: None,
     };
     let start = Instant::now();
     let r = run(cfg);
@@ -50,6 +53,7 @@ fn main() {
         rebuilds: alias_rebuild_bench(&sizes, 200_000, 3),
         sims: sim_bench(&sizes, 60.0),
         planes: Vec::new(), // bench_plane owns the plane sweep
+        metrics_overhead: Some(metrics_overhead_bench(256, 2_000_000, 3)),
         sizes,
     };
     print!("{}", report.render());

@@ -42,6 +42,7 @@ fn main() {
                 policy: policy.clone(),
                 learner: LearnerConfig::oracle(),
                 queue_sample: None,
+                timeline: None,
             });
             cells.push(r.responses.mean() * 1e3);
         }

@@ -34,6 +34,7 @@ fn main() {
             policy,
             learner,
             queue_sample: None,
+            timeline: None,
         });
         let s = result.responses.summary();
         rows.push(Row::new(

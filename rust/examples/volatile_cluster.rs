@@ -24,6 +24,7 @@ fn simulate(learner: LearnerConfig, seed: u64) -> (f64, Vec<(f64, f64)>) {
         policy: PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
         learner,
         queue_sample: None,
+        timeline: None,
     });
     (r.responses.mean() * 1e3, r.estimate_error)
 }

@@ -175,6 +175,12 @@ pub fn sim_config_from_json(v: &Json) -> Result<SimConfig, ConfigError> {
                 Some(x.as_f64().ok_or_else(|| bad("'queue_sample' must be a number"))?)
             }
         },
+        timeline: match v.get("timeline") {
+            None | Some(Json::Null) => None,
+            Some(x) => {
+                Some(x.as_f64().ok_or_else(|| bad("'timeline' must be a number"))?)
+            }
+        },
     };
     validate(&cfg)?;
     Ok(cfg)
@@ -343,6 +349,11 @@ pub fn validate(cfg: &SimConfig) -> Result<(), ConfigError> {
             return Err(bad("queue_sample must be positive"));
         }
     }
+    if let Some(t) = cfg.timeline {
+        if !(t > 0.0) {
+            return Err(bad("timeline must be positive"));
+        }
+    }
     if cfg.learner.enabled && cfg.learner.oracle {
         return Err(bad("learner.enabled and learner.oracle are mutually exclusive"));
     }
@@ -383,7 +394,7 @@ mod tests {
                 "speeds": "s2", "volatility": "permute:60",
                 "workload": "tpch:q3", "load": 0.7, "policy": "rosella",
                 "learner": {"fake_jobs": false, "window_c": 30.0},
-                "queue_sample": 0.5
+                "queue_sample": 0.5, "timeline": 2.0
             }"#,
         )
         .unwrap();
@@ -393,6 +404,7 @@ mod tests {
         assert!(!cfg.learner.fake_jobs);
         assert_eq!(cfg.learner.window_c, 30.0);
         assert_eq!(cfg.queue_sample, Some(0.5));
+        assert_eq!(cfg.timeline, Some(2.0));
     }
 
     #[test]
@@ -413,6 +425,8 @@ mod tests {
         );
         assert!(sim_config_from_str(r#"{"learner": {"schedulers": 0}}"#).is_err());
         assert!(sim_config_from_str(r#"{"learner": {"sync_interval": -1.0}}"#).is_err());
+        assert!(sim_config_from_str(r#"{"timeline": 0.0}"#).is_err());
+        assert!(sim_config_from_str(r#"{"timeline": -1.0}"#).is_err());
     }
 
     #[test]

@@ -158,7 +158,7 @@ pub fn serve(cfg: LiveConfig) -> Result<LiveReport, String> {
         }) {
             Ok(k) => Some(k),
             Err(e) => {
-                eprintln!("learner artifact unavailable ({e}); using native learner");
+                crate::log_warn!("learner artifact unavailable ({e}); using native learner");
                 None
             }
         }
@@ -241,7 +241,7 @@ pub fn serve(cfg: LiveConfig) -> Result<LiveReport, String> {
                         }
                     }
                     Err(e) => {
-                        eprintln!("pjrt learner failed ({e}); using native");
+                        crate::log_warn!("pjrt learner failed ({e}); using native");
                         mu_hat.copy_from_slice(perf.mu_hat());
                     }
                 }

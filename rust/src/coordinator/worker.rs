@@ -193,7 +193,7 @@ fn worker_loop(
             match PayloadRunner::load(artifacts_dir, 1000 + id as u64) {
                 Ok(p) => Some(p),
                 Err(e) => {
-                    eprintln!("worker {id}: payload load failed ({e}); falling back to sleep");
+                    crate::log_warn!("worker {id}: payload load failed ({e}); falling back to sleep");
                     None
                 }
             }

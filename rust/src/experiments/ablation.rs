@@ -30,6 +30,7 @@ fn run_one(bench: &Bench, policy: PolicyKind, learner: LearnerConfig) -> f64 {
         policy,
         learner,
         queue_sample: None,
+        timeline: None,
     });
     ms(r.responses.mean())
 }

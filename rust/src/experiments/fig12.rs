@@ -37,6 +37,7 @@ fn run_no_fake(bench: &Bench, window_c: f64) -> f64 {
         policy: PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
         learner: LearnerConfig::no_fake_jobs(window_c),
         queue_sample: None,
+        timeline: None,
     });
     ms(r.responses.mean())
 }

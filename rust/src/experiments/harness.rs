@@ -176,6 +176,7 @@ impl Bench {
             policy,
             learner,
             queue_sample: self.queue_sample,
+            timeline: None,
         })
     }
 }

@@ -68,6 +68,7 @@ pub fn run_policy(
         policy: PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
         learner: LearnerConfig { schedulers, sync_interval, sync, ..LearnerConfig::default() },
         queue_sample: None,
+        timeline: None,
     })
 }
 

@@ -31,6 +31,7 @@ pub fn max_queue(n: usize, load: f64, policy: PolicyKind, duration: f64, seed: u
         policy,
         learner: LearnerConfig::oracle(),
         queue_sample: Some(0.1),
+        timeline: None,
     });
     r.queues.unwrap().mean_max()
 }
@@ -71,6 +72,7 @@ pub fn learning_time(n: usize, threshold: f64, scale: Scale, seed: u64) -> f64 {
         policy: PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
         learner: LearnerConfig::default(),
         queue_sample: None,
+        timeline: None,
     });
     r.estimate_error
         .iter()
@@ -101,6 +103,7 @@ pub fn shock_recovery_trace(scale: Scale, seed: u64) -> Vec<(f64, f64)> {
         policy: PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
         learner: LearnerConfig::default(),
         queue_sample: None,
+        timeline: None,
     });
     r.estimate_error
 }

@@ -178,6 +178,7 @@ pub fn sim_bench(sizes: &[usize], duration: f64) -> Vec<SimPoint> {
                 policy: PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
                 learner: LearnerConfig::oracle(),
                 queue_sample: None,
+                timeline: None,
             };
             let start = Instant::now();
             let r = sim_run(cfg);
@@ -191,6 +192,66 @@ pub fn sim_bench(sizes: &[usize], duration: f64) -> Vec<SimPoint> {
             }
         })
         .collect()
+}
+
+/// Decision cost with and without the live registry's per-decision writes
+/// — the observability overhead the `/metrics` endpoint costs the hot path.
+#[derive(Debug, Clone)]
+pub struct OverheadPoint {
+    /// Cluster size the view exposed.
+    pub n: usize,
+    /// ns per decision, bare loop (registry compiled in but untouched).
+    pub plain_ns: f64,
+    /// ns per decision plus the plane's per-decision registry writes
+    /// (decision counter + chosen-queue-length histogram sample).
+    pub instrumented_ns: f64,
+}
+
+impl OverheadPoint {
+    /// Within-run instrumented/plain ratio (the CI gate holds it ≤ 1.10).
+    pub fn ratio(&self) -> f64 {
+        if self.plain_ns > 0.0 {
+            self.instrumented_ns / self.plain_ns
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Measure the registry's hot-path overhead: the same ppot decision loop,
+/// bare vs with the two relaxed-atomic writes the plane performs per
+/// decision. Both loops run in one process back to back, so the ratio is
+/// machine-independent.
+pub fn metrics_overhead_bench(n: usize, reps: u64, runs: usize) -> OverheadPoint {
+    let (speeds, qlen) = fixture(n);
+    let table = AliasTable::new(&speeds);
+    let mut rng = Rng::new(1);
+    let job = JobSpec::single(0.1);
+    let mut policy = PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false }.build(n);
+    policy.on_estimates(&speeds, 100.0);
+    let view = LocalView { queue_len: &qlen, mu_hat: &speeds, sampler: &table, lambda_hat: 100.0 };
+    let obs = crate::obs::Registry::new(1, n);
+    let mut sink = 0usize;
+    let plain_ns = best_ns_per_op(reps, runs, |reps| {
+        for _ in 0..reps {
+            if let JobPlacement::Single(w) = policy.schedule_job(&job, &view, &mut rng) {
+                sink ^= w;
+            }
+        }
+    });
+    let slot = obs.shard(0);
+    let instrumented_ns = best_ns_per_op(reps, runs, |reps| {
+        for _ in 0..reps {
+            if let JobPlacement::Single(w) = policy.schedule_job(&job, &view, &mut rng) {
+                sink ^= w;
+                slot.decisions.inc();
+                slot.queue_len.record(qlen[w] as u64);
+            }
+        }
+    });
+    std::hint::black_box(sink);
+    std::hint::black_box(&obs);
+    OverheadPoint { n, plain_ns, instrumented_ns }
 }
 
 /// One plane-throughput sample.
@@ -247,6 +308,7 @@ pub struct HotpathReport {
     pub rebuilds: Vec<RebuildPoint>,
     pub sims: Vec<SimPoint>,
     pub planes: Vec<PlanePoint>,
+    pub metrics_overhead: Option<OverheadPoint>,
 }
 
 impl HotpathReport {
@@ -325,6 +387,16 @@ impl HotpathReport {
                 ));
             }
         }
+        if let Some(o) = &self.metrics_overhead {
+            out.push_str("-- metrics registry overhead (ppot decision) --\n");
+            out.push_str(&format!(
+                "n={:<5} plain {:>8.1} ns  instrumented {:>8.1} ns  ratio {:.3}x\n",
+                o.n,
+                o.plain_ns,
+                o.instrumented_ns,
+                o.ratio()
+            ));
+        }
         out
     }
 
@@ -392,6 +464,17 @@ impl HotpathReport {
         top.insert("alias_rebuild".into(), Json::Arr(rebuilds));
         top.insert("sim".into(), Json::Arr(sims));
         top.insert("plane".into(), Json::Arr(planes));
+        if let Some(o) = &self.metrics_overhead {
+            let mut m = BTreeMap::new();
+            m.insert("n".into(), Json::Num(o.n as f64));
+            m.insert("plain_ns".into(), Json::Num((o.plain_ns * 10.0).round() / 10.0));
+            m.insert(
+                "instrumented_ns".into(),
+                Json::Num((o.instrumented_ns * 10.0).round() / 10.0),
+            );
+            m.insert("ratio".into(), Json::Num((o.ratio() * 1000.0).round() / 1000.0));
+            top.insert("metrics_overhead".into(), Json::Obj(m));
+        }
         Json::Obj(top)
     }
 }
@@ -430,6 +513,11 @@ pub fn hotpath_cli(p: &crate::cli::Parsed) -> Result<String, String> {
         } else {
             plane_bench(&frontend_counts, workers, plane_decisions, learners)?
         },
+        metrics_overhead: Some(metrics_overhead_bench(
+            sizes.iter().copied().max().unwrap_or(256),
+            reps,
+            runs,
+        )),
         sizes,
     };
 
@@ -453,6 +541,7 @@ mod tests {
             rebuilds: alias_rebuild_bench(&sizes, 500, 1),
             sims: sim_bench(&[4], 2.0),
             planes: Vec::new(),
+            metrics_overhead: Some(metrics_overhead_bench(8, 2_000, 1)),
             sizes,
         }
     }
@@ -486,6 +575,28 @@ mod tests {
         assert!(s.contains("decision latency"));
         assert!(s.contains("alias table"));
         assert!(s.contains("event throughput"));
+    }
+
+    #[test]
+    fn metrics_overhead_measures_both_loops() {
+        let o = metrics_overhead_bench(16, 2_000, 1);
+        assert!(o.plain_ns > 0.0 && o.plain_ns.is_finite());
+        assert!(o.instrumented_ns > 0.0 && o.instrumented_ns.is_finite());
+        assert!(o.ratio() > 0.0 && o.ratio().is_finite());
+    }
+
+    #[test]
+    fn overhead_lands_in_the_tracked_json() {
+        let r = tiny_report();
+        let doc = crate::config::to_string(&r.to_json("test"));
+        let back = crate::config::parse(&doc).expect("hotpath json must parse");
+        let o = back.get("metrics_overhead").expect("metrics_overhead key");
+        for key in ["plain_ns", "instrumented_ns", "ratio"] {
+            assert!(
+                o.get(key).and_then(|j| j.as_f64()).is_some_and(|v| v > 0.0),
+                "missing/invalid {key}"
+            );
+        }
     }
 
     #[test]

@@ -117,6 +117,40 @@
 //! with aggregate throughput and cross-process merge counts; CI smokes it
 //! and `benches/bench_net.rs` compares it against the in-process plane.
 //!
+//! ## Observability
+//!
+//! A live plane is observable without being perturbed ([`obs`]):
+//!
+//! * **metrics registry** ([`obs::Registry`]) — atomic counters, f64-bits
+//!   gauges, and fixed-bucket log2 histograms ([`obs::Log2Histogram`]);
+//!   one [`obs::ShardSlot`] per scheduler thread, written only by its
+//!   owner and aggregated on read, so the decision hot path stays O(1),
+//!   allocation-free, and uncontended. Both planes keep it always on —
+//!   the `hotpath` metrics-overhead bench pins the cost at ≤ 1.10× the
+//!   uninstrumented decision ns/op (CI-gated, within-run ratio).
+//! * **decision flight recorder** ([`obs::FlightRecorder`]) — a bounded
+//!   per-scheduler ring of recent placements (task id, probed workers and
+//!   queue lengths seen, chosen worker, μ̂/λ̂, decision ns) and consensus
+//!   events (policy, divergence at trigger, views merged, epoch lag).
+//!   Opt-in (`--flight-record PATH`), dumped as JSONL on drain or live
+//!   from the scrape endpoint's `/flight` route.
+//! * **scrape endpoint** ([`obs::MetricsServer`]) — `--metrics-listen
+//!   ADDR` on `rosella plane` (in-process and `--listen` server modes)
+//!   serves Prometheus text exposition at `/metrics`: per-shard task
+//!   counters, queue-length / response-time histograms, per-worker μ̂ and
+//!   live queue gauges, λ̂, sync merge/export counters, and the wire-frame
+//!   counters from [`net::wire`].
+//! * **leveled logging** ([`obs::log`]) — `ROSELLA_LOG=error|warn|info|
+//!   debug` on stderr, off by default so benches are unaffected.
+//! * **DES time series** — `--timeline-interval` on `rosella simulate`
+//!   samples the same signal surface (λ̂, per-worker μ̂ vs true speed,
+//!   queue p99, backlog) per window into timeline JSON
+//!   ([`simulator::TimelinePoint`]) for the volatile scenarios.
+//!
+//! Instrumentation never draws from an RNG stream or reorders a decision,
+//! which is what keeps `tests/determinism.rs` bit-exact with all of it
+//! compiled in.
+//!
 //! ## Quick start
 //!
 //! ```
@@ -152,6 +186,7 @@ pub mod hotpath;
 pub mod learner;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod plane;
 pub mod runtime;
 pub mod scheduler;

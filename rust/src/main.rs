@@ -103,6 +103,8 @@ fn cmd_simulate(rest: &[String]) -> i32 {
         .opt("sync-interval", None, "estimate-sync interval in sim-secs (0 = every publish)")
         .opt("sync-policy", None, "estimate-sync strategy: periodic | adaptive | gossip")
         .opt("sync-threshold", None, "adaptive sync: relative-error divergence trigger")
+        .opt("timeline-interval", None, "sample a telemetry timeline every N sim-secs")
+        .opt("timeline-json", None, "write the sampled timeline as JSON to this path")
         .flag("oracle", "give the policy true speeds (disables learning)")
         .flag("no-fake-jobs", "disable the benchmark-job dispatcher");
     let p = match spec.parse(rest) {
@@ -146,6 +148,17 @@ fn cmd_simulate(rest: &[String]) -> i32 {
     println!("utilization    : {:.3}", result.utilization);
     println!("benchmark frac : {:.4}", result.benchmark_fraction());
     println!("backlog (jobs) : {}", result.incomplete_jobs);
+    if !result.timeline.is_empty() {
+        println!("timeline points: {}", result.timeline.len());
+    }
+    if let Some(path) = p.get("timeline-json") {
+        let json = rosella::simulator::timeline_json(&result.timeline);
+        if let Err(e) = std::fs::write(path, config::to_string(&json)) {
+            eprintln!("write {path}: {e}");
+            return 1;
+        }
+        println!("timeline json  : {path}");
+    }
     0
 }
 
@@ -191,6 +204,9 @@ fn apply_overrides(cfg: &mut SimConfig, p: &rosella::cli::Parsed) -> Result<(), 
     }
     if let Some(v) = p.parse_as::<f64>("sync-threshold")? {
         cfg.learner.sync.threshold = v;
+    }
+    if let Some(v) = p.parse_as::<f64>("timeline-interval")? {
+        cfg.timeline = Some(v);
     }
     Ok(())
 }
@@ -248,6 +264,8 @@ fn cmd_plane(rest: &[String]) -> i32 {
         .opt("json", None, "write machine-readable results (e.g. BENCH_plane.json)")
         .opt("listen", None, "host the cross-process pool server on this host:port")
         .opt("net-config", None, "JSON file with a `net` block (overrides net flags)")
+        .opt("metrics-listen", None, "serve Prometheus /metrics on this host:port for the run")
+        .opt("flight-record", None, "dump the decision flight recorder as JSONL to this path")
         .flag("decide-only", "measure raw decision throughput without dispatching")
         .flag("no-fake-jobs", "disable the benchmark-job dispatcher");
     let p = match spec.parse(rest) {
@@ -281,7 +299,8 @@ fn cmd_frontend(rest: &[String]) -> i32 {
         .opt("connect", None, "pool server address (host:port)")
         .opt("shard", None, "this scheduler's shard spec i/k (e.g. 0/2)")
         .opt("connect-timeout", None, "seconds to keep retrying the connect [default: 15]")
-        .opt("config", None, "JSON file with a `net` block (overrides flags)");
+        .opt("config", None, "JSON file with a `net` block (overrides flags)")
+        .opt("flight-record", None, "dump this frontend's placement flight record (JSONL)");
     let p = match spec.parse(rest) {
         Ok(p) => p,
         Err(e) => {

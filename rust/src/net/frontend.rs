@@ -315,11 +315,17 @@ impl BeatState {
 /// Run the full §5 frontend loop over `t` until the plane signals stop,
 /// then drain: absorb every completion this scheduler routed and export the
 /// final learner view for the drain-time consensus epoch.
+///
+/// With `flight` set, every placement is captured into lane 0 of the
+/// recorder (one remote frontend is one scheduler; the `shard` field of
+/// each event still carries the global shard index). Recording adds two
+/// clock reads per decision and nothing when `flight` is `None`.
 pub fn run_frontend_loop<T: Transport>(
     t: &mut T,
     p: &RunParams,
     shard: usize,
     shards: usize,
+    flight: Option<&crate::obs::FlightRecorder>,
 ) -> Result<FrontendReport, String> {
     if shard >= shards {
         return Err(format!("shard {shard} out of range for {shards} shards"));
@@ -360,6 +366,7 @@ pub fn run_frontend_loop<T: Transport>(
     let mut decisions = 0u64;
     let mut dispatched = 0u64;
     let mut local_jobs = 0u64;
+    let trace = crate::obs::ProbeTrace::new();
 
     'outer: while !state.stop {
         batcher.fill(&mut stream_rng, &mut batch);
@@ -381,7 +388,29 @@ pub fn run_frontend_loop<T: Transport>(
             }
             core.on_arrival(a.at, 1);
             job.tasks[0].demand = a.demand;
-            let w = core.decide_local(&job, &state.qlen);
+            let w = match flight {
+                Some(rec) => {
+                    trace.clear();
+                    let t0 = Instant::now();
+                    let w = core.decide_local_traced(&job, &state.qlen, Some(&trace));
+                    let decision_ns = t0.elapsed().as_nanos() as u64;
+                    rec.record(
+                        0,
+                        crate::obs::FlightEvent::Placement {
+                            t_ns: start.elapsed().as_nanos() as u64,
+                            shard: shard as u32,
+                            task: encode_job(shard, local_jobs),
+                            probed: trace.probes(),
+                            chosen: w as u32,
+                            mu_chosen: core.mu_hat().get(w).copied().unwrap_or(0.0),
+                            lambda_hat: core.lambda_or(0.0),
+                            decision_ns,
+                        },
+                    );
+                    w
+                }
+                None => core.decide_local(&job, &state.qlen),
+            };
             decisions += 1;
             t.submit(encode_job(shard, local_jobs), w, TaskKind::Real, a.demand)?;
             // Optimistic probe bump until the next refresh, so decisions
@@ -430,10 +459,14 @@ pub struct ConnectConfig {
     pub connect_timeout: Duration,
     /// Per-read socket timeout during the run.
     pub read_timeout: Duration,
+    /// Dump this frontend's placement flight record as JSONL to this path
+    /// at drain (`None` disables recording entirely).
+    pub flight_record: Option<String>,
 }
 
 impl ConnectConfig {
-    /// Defaults: 15 s connect retry window, 30 s read timeout.
+    /// Defaults: 15 s connect retry window, 30 s read timeout, no flight
+    /// recording.
     pub fn new(addr: impl Into<String>, shard: usize, shards: usize) -> Self {
         Self {
             addr: addr.into(),
@@ -441,6 +474,7 @@ impl ConnectConfig {
             shards,
             connect_timeout: Duration::from_secs(15),
             read_timeout: Duration::from_secs(30),
+            flight_record: None,
         }
     }
 }
@@ -485,7 +519,14 @@ pub fn run_remote_frontend(cfg: &ConnectConfig) -> Result<FrontendReport, String
         Msg::Start => {}
         other => return Err(format!("expected Start, got tag {}", other.tag())),
     }
-    let report = run_frontend_loop(&mut t, &params, cfg.shard, cfg.shards)?;
+    let flight = cfg.flight_record.as_deref().map(|_| {
+        crate::obs::FlightRecorder::new(1, crate::obs::flight::DEFAULT_CAPACITY)
+    });
+    let report = run_frontend_loop(&mut t, &params, cfg.shard, cfg.shards, flight.as_ref())?;
+    if let (Some(path), Some(rec)) = (cfg.flight_record.as_deref(), flight.as_ref()) {
+        std::fs::write(path, rec.dump_jsonl())
+            .map_err(|e| format!("write flight record {path}: {e}"))?;
+    }
     t.send(&Msg::Done(report.done_stats()))?;
     match t.recv()? {
         Msg::DoneAck => {}
@@ -538,6 +579,7 @@ pub fn frontend_cli(p: &crate::cli::Parsed) -> Result<String, String> {
         }
         cfg.connect_timeout = Duration::from_secs_f64(t);
     }
+    cfg.flight_record = p.get("flight-record").map(str::to_string);
     let report = run_remote_frontend(&cfg)?;
     Ok(report.render())
 }
@@ -638,6 +680,8 @@ mod tests {
             policy: SyncPolicy::new(&SyncPolicyConfig::periodic(), 0.1, 1, 7),
             prior,
             start,
+            obs: Arc::new(crate::obs::Registry::new(1, n)),
+            flight: None,
         };
         let sync = std::thread::spawn(move || run_sync(sync_ctx));
         let params = RunParams {
@@ -664,9 +708,13 @@ mod tests {
             stop.clone(),
             start,
         );
+        // Record the run's flight while we're here: the recorder must not
+        // change decisions, and its dump must hold our placements.
+        let rec = std::sync::Arc::new(crate::obs::FlightRecorder::new(1, 512));
+        let rec_loop = rec.clone();
         let loop_handle = std::thread::spawn(move || {
             let mut t = t;
-            run_frontend_loop(&mut t, &params, 0, 1)
+            run_frontend_loop(&mut t, &params, 0, 1, Some(&*rec_loop))
         });
         std::thread::sleep(Duration::from_millis(700));
         stop.store(true, Ordering::Relaxed);
@@ -688,6 +736,14 @@ mod tests {
         assert_eq!(report.responses.count() as u64, done, "latency records diverge");
         assert!(outcome.merges >= 1, "no consensus merge ran");
         assert_eq!(report.final_estimates.len(), n);
+        // Flight recording rode along without changing the run: every
+        // placement decision left one JSONL-parseable event behind.
+        assert!(rec.total() > 0, "flight recorder captured no placements");
+        let dump = rec.dump_jsonl();
+        assert!(dump.contains("\"chosen\""), "placement events missing fields");
+        for line in dump.lines() {
+            crate::config::parse(line).expect("flight line must parse as JSON");
+        }
     }
 
     #[test]

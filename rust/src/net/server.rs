@@ -81,6 +81,12 @@ pub struct NetServerConfig {
     pub sync_policy: SyncPolicyConfig,
     /// Per-read socket timeout (handshake and run).
     pub read_timeout: Duration,
+    /// Serve a Prometheus `/metrics` endpoint on this address for the
+    /// run's duration (`None` disables the scrape listener).
+    pub metrics_listen: Option<String>,
+    /// Dump the decision flight recorder as JSONL to this path at drain
+    /// (`None` disables recording entirely).
+    pub flight_record: Option<String>,
 }
 
 impl Default for NetServerConfig {
@@ -101,6 +107,8 @@ impl Default for NetServerConfig {
             sync_interval: 0.2,
             sync_policy: SyncPolicyConfig::periodic(),
             read_timeout: Duration::from_secs(30),
+            metrics_listen: None,
+            flight_record: None,
         }
     }
 }
@@ -326,6 +334,8 @@ struct ConnCtx {
     stop: Arc<AtomicBool>,
     lambda_slots: Vec<Arc<AtomicU64>>,
     start: Instant,
+    /// Shared run registry; this handler owns the slot for its shard.
+    obs: Arc<crate::obs::Registry>,
 }
 
 /// What a connection handler reports back at exit.
@@ -475,6 +485,26 @@ impl NetServer {
         let lambda_slots: Vec<Arc<AtomicU64>> =
             (0..k).map(|_| Arc::new(AtomicU64::new(0f64.to_bits()))).collect();
         let start = Instant::now();
+
+        // Telemetry: one registry for the whole run (handler threads own
+        // their shard slots), an optional flight recorder (the server only
+        // sees consensus events — placements happen at the frontends), and
+        // an optional scrape listener sharing the in-process plane's
+        // endpoint surface.
+        let obs = Arc::new(crate::obs::Registry::new(k, n));
+        let flight = cfg.flight_record.as_deref().map(|_| {
+            Arc::new(crate::obs::FlightRecorder::new(k, crate::obs::flight::DEFAULT_CAPACITY))
+        });
+        let metrics = match cfg.metrics_listen.as_deref() {
+            Some(addr) => Some(crate::plane::spawn_metrics_server(
+                addr,
+                obs.clone(),
+                flight.clone(),
+                probes.clone(),
+            )?),
+            None => None,
+        };
+
         let sync_ctx = SyncRun {
             views: views.clone(),
             table: table.clone(),
@@ -482,6 +512,8 @@ impl NetServer {
             policy: SyncPolicy::new(&cfg.sync_policy, cfg.sync_interval, k, cfg.seed ^ 0x57AC_6E55),
             prior,
             start,
+            obs: obs.clone(),
+            flight: flight.clone(),
         };
         let sync_handle = std::thread::Builder::new()
             .name("rosella-net-sync".into())
@@ -509,6 +541,7 @@ impl NetServer {
                 stop: stop.clone(),
                 lambda_slots: lambda_slots.clone(),
                 start,
+                obs: obs.clone(),
             };
             handles.push(
                 std::thread::Builder::new()
@@ -572,6 +605,13 @@ impl NetServer {
         }
         let decisions: u64 = per_frontend.iter().map(|d| d.decisions).sum();
         let benchmarks: u64 = per_frontend.iter().map(|d| d.benchmarks).sum();
+        if let Some(srv) = metrics {
+            srv.shutdown();
+        }
+        if let (Some(path), Some(rec)) = (cfg.flight_record.as_deref(), flight.as_deref()) {
+            std::fs::write(path, rec.dump_jsonl())
+                .map_err(|e| format!("write flight record {path}: {e}"))?;
+        }
         Ok(NetReport {
             frontends: k,
             workers: n,
@@ -636,8 +676,12 @@ fn handle_conn(mut ctx: ConnCtx) -> Result<ConnOut, String> {
                             demand: demand.max(1e-6),
                             enqueued: Instant::now(),
                         });
+                        let slot = ctx.obs.shard(ctx.shard);
                         if kind == TaskKind::Real {
                             out.dispatched += 1;
+                            slot.dispatched.inc();
+                        } else {
+                            slot.bench_dispatched.inc();
                         }
                     }
                     // Ingress already released at stop: drop stragglers.
@@ -663,6 +707,14 @@ fn handle_conn(mut ctx: ConnCtx) -> Result<ConnOut, String> {
                     clients = None;
                 }
                 drain_completions(&ctx.comp_rx, &mut disconnected, ctx.start, |c| {
+                    if c.kind == TaskKind::Real {
+                        let slot = ctx.obs.shard(ctx.shard);
+                        slot.completed.inc();
+                        // The server only knows server-side sojourn
+                        // (enqueue → completion); end-to-end response
+                        // lives at the frontends.
+                        slot.response_us.record((c.sojourn.max(0.0) * 1e6) as u64);
+                    }
                     pending.push_back(c)
                 });
                 let take = pending.len().min(MAX_COMPLETIONS_PER_REPLY);
@@ -713,11 +765,16 @@ fn handle_conn(mut ctx: ConnCtx) -> Result<ConnOut, String> {
                 }
                 ctx.views.store(ctx.shard, &views, lambda_hat);
                 out.sync_exports += 1;
+                ctx.obs.sync_exports.inc();
                 if diverged {
                     ctx.views.request_merge();
                 }
             }
             Msg::Done(stats) => {
+                // The frontends make the scheduling decisions; fold their
+                // final count into the registry so a post-run scrape shows
+                // the whole plane, not just the server's half.
+                ctx.obs.shard(ctx.shard).decisions.add(stats.decisions);
                 out.stats = Some(stats);
                 wire::write_msg(&mut ctx.stream, &Msg::DoneAck, &mut scratch)
                     .map_err(|e| format!("shard {}: {e}", ctx.shard))?;
@@ -780,6 +837,8 @@ pub fn server_cli(p: &crate::cli::Parsed) -> Result<String, String> {
         cfg.sync_policy.threshold = t;
     }
     cfg.fake_jobs = !p.flag("no-fake-jobs");
+    cfg.metrics_listen = p.get("metrics-listen").map(str::to_string);
+    cfg.flight_record = p.get("flight-record").map(str::to_string);
     if let Some(path) = p.get("net-config") {
         let opts = crate::config::net_options_from_file(path).map_err(|e| e.to_string())?;
         opts.apply_server(&mut cfg);
@@ -787,12 +846,9 @@ pub fn server_cli(p: &crate::cli::Parsed) -> Result<String, String> {
     let cfg_json = cfg.clone();
     let server = NetServer::bind(cfg)?;
     let addr = server.local_addr()?;
-    // Printed eagerly: operators (and the CI smoke) need the address while
-    // the server blocks in serve().
-    println!(
-        "rosella plane: listening on {addr}, waiting for {} frontends",
-        cfg_json.frontends
-    );
+    // Logged eagerly: an operator who needs the resolved address (port 0)
+    // while the server blocks in serve() runs with `ROSELLA_LOG=info`.
+    crate::log_info!("listening on {addr}, waiting for {} frontends", cfg_json.frontends);
     let report = server.serve()?;
     let mut out = report.render();
     if let Some(path) = p.get("json") {
@@ -881,6 +937,6 @@ mod tests {
         assert_eq!(per.len(), 2);
         let rendered = report.render();
         assert!(rendered.contains("2 remote frontends"));
-        assert!(rendered.contains("merges over the wire"));
+        assert!(rendered.contains("payload exports over the wire"));
     }
 }

@@ -31,6 +31,7 @@
 use crate::learner::EstimateView;
 use crate::types::TaskKind;
 use std::io::{Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Frame magic: the four bytes every Rosella net-plane frame starts with.
 pub const MAGIC: [u8; 4] = *b"RSNP";
@@ -652,11 +653,48 @@ impl Msg {
     }
 }
 
+// Process-global wire traffic counters, bumped on every framed write/read
+// regardless of which connection carried it. Globals rather than per-
+// transport state because the framing functions below are free functions
+// with no context — and "how much wire traffic did this process move" is
+// exactly the per-process question the `/metrics` endpoint answers.
+static FRAMES_SENT: AtomicU64 = AtomicU64::new(0);
+static FRAMES_RECEIVED: AtomicU64 = AtomicU64::new(0);
+static BYTES_SENT: AtomicU64 = AtomicU64::new(0);
+static BYTES_RECEIVED: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the process-wide wire traffic counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct WireTotals {
+    /// Frames written by [`write_msg`] since process start.
+    pub frames_sent: u64,
+    /// Frames fully read and decoded by [`read_msg`].
+    pub frames_received: u64,
+    /// Bytes written (headers + payloads).
+    pub bytes_sent: u64,
+    /// Bytes read (headers + payloads).
+    pub bytes_received: u64,
+}
+
+/// Read the process-wide wire traffic counters (relaxed loads; the four
+/// fields are independently monotone, not a consistent snapshot).
+pub fn frame_totals() -> WireTotals {
+    WireTotals {
+        frames_sent: FRAMES_SENT.load(Ordering::Relaxed),
+        frames_received: FRAMES_RECEIVED.load(Ordering::Relaxed),
+        bytes_sent: BYTES_SENT.load(Ordering::Relaxed),
+        bytes_received: BYTES_RECEIVED.load(Ordering::Relaxed),
+    }
+}
+
 /// Encode `msg` into `scratch` and write the frame to `w`.
 pub fn write_msg<W: Write>(w: &mut W, msg: &Msg, scratch: &mut Vec<u8>) -> Result<(), String> {
     scratch.clear();
     msg.encode_into(scratch);
-    w.write_all(scratch).map_err(|e| format!("net write: {e}"))
+    w.write_all(scratch).map_err(|e| format!("net write: {e}"))?;
+    FRAMES_SENT.fetch_add(1, Ordering::Relaxed);
+    BYTES_SENT.fetch_add(scratch.len() as u64, Ordering::Relaxed);
+    Ok(())
 }
 
 /// Read one frame from `r` (using `scratch` as the reassembly buffer) and
@@ -671,7 +709,10 @@ pub fn read_msg<R: Read>(r: &mut R, scratch: &mut Vec<u8>) -> Result<Msg, String
     scratch.resize(HEADER_LEN + len, 0);
     r.read_exact(&mut scratch[HEADER_LEN..])
         .map_err(|e| format!("net read body: {e}"))?;
-    Msg::decode(scratch).map_err(|e| format!("net frame: {e}"))
+    let msg = Msg::decode(scratch).map_err(|e| format!("net frame: {e}"))?;
+    FRAMES_RECEIVED.fetch_add(1, Ordering::Relaxed);
+    BYTES_RECEIVED.fetch_add(scratch.len() as u64, Ordering::Relaxed);
+    Ok(msg)
 }
 
 #[cfg(test)]
@@ -880,5 +921,23 @@ mod tests {
         }
         // The stream is exactly consumed: the next read hits EOF.
         assert!(read_msg(&mut cursor, &mut scratch).is_err());
+    }
+
+    #[test]
+    fn traffic_counters_track_framed_io() {
+        // The counters are process-global and other tests use the framing
+        // functions concurrently, so assert monotone deltas, not equality.
+        let before = frame_totals();
+        let mut wire = Vec::new();
+        let mut scratch = Vec::new();
+        write_msg(&mut wire, &Msg::Start, &mut scratch).unwrap();
+        let frame_len = wire.len() as u64;
+        let mut cursor = std::io::Cursor::new(wire);
+        read_msg(&mut cursor, &mut scratch).unwrap();
+        let after = frame_totals();
+        assert!(after.frames_sent >= before.frames_sent + 1);
+        assert!(after.frames_received >= before.frames_received + 1);
+        assert!(after.bytes_sent >= before.bytes_sent + frame_len);
+        assert!(after.bytes_received >= before.bytes_received + frame_len);
     }
 }

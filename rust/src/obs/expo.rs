@@ -1,0 +1,329 @@
+//! Prometheus text-exposition encoding (format version 0.0.4).
+//!
+//! Hand-rolled because the repo is dependency-free: `# TYPE` headers,
+//! `name{label="value"} 123` samples with proper label-value escaping
+//! (`\\`, `\"`, `\n`), and cumulative `le`-bucketed histograms derived
+//! from [`HistSnapshot`]s. The [`Expo`] builder is append-only; callers
+//! compose the standard registry rendering ([`render_into`]) with any
+//! extra live gauges (worker queue probes, wire counters) before
+//! finishing.
+
+use crate::obs::registry::{bucket_upper, HistSnapshot, Registry, LOG2_BUCKETS};
+
+/// Escape a label value per the exposition format: backslash, double
+/// quote, and line feed must be escaped; everything else passes through.
+pub fn escape_label_value(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Whether `s` is a valid metric/label name: `[a-zA-Z_:][a-zA-Z0-9_:]*`
+/// (label names additionally may not contain `:`, which none of ours do).
+pub fn valid_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Append-only exposition builder.
+#[derive(Debug, Default)]
+pub struct Expo {
+    buf: String,
+}
+
+impl Expo {
+    /// Empty document.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Emit a `# TYPE` header (`kind` is `counter`, `gauge`, or
+    /// `histogram`).
+    pub fn header(&mut self, name: &str, kind: &str) {
+        debug_assert!(valid_metric_name(name), "bad metric name {name}");
+        self.buf.push_str("# TYPE ");
+        self.buf.push_str(name);
+        self.buf.push(' ');
+        self.buf.push_str(kind);
+        self.buf.push('\n');
+    }
+
+    /// Emit one sample line with optional labels.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        debug_assert!(valid_metric_name(name), "bad metric name {name}");
+        self.buf.push_str(name);
+        if !labels.is_empty() {
+            self.buf.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                debug_assert!(valid_metric_name(k), "bad label name {k}");
+                if i > 0 {
+                    self.buf.push(',');
+                }
+                self.buf.push_str(k);
+                self.buf.push_str("=\"");
+                self.buf.push_str(&escape_label_value(v));
+                self.buf.push('"');
+            }
+            self.buf.push('}');
+        }
+        self.buf.push(' ');
+        if value == value.trunc() && value.abs() < 1e15 {
+            self.buf.push_str(&format!("{}", value as i64));
+        } else {
+            self.buf.push_str(&format!("{value}"));
+        }
+        self.buf.push('\n');
+    }
+
+    /// Emit a counter: header plus one sample per label set.
+    pub fn counter(&mut self, name: &str, series: &[(&[(&str, &str)], u64)]) {
+        self.header(name, "counter");
+        for (labels, v) in series {
+            self.sample(name, labels, *v as f64);
+        }
+    }
+
+    /// Emit a gauge: header plus one sample per label set.
+    pub fn gauge(&mut self, name: &str, series: &[(&[(&str, &str)], f64)]) {
+        self.header(name, "gauge");
+        for (labels, v) in series {
+            self.sample(name, labels, *v);
+        }
+    }
+
+    /// Emit a [`HistSnapshot`] as a Prometheus histogram. `scale` converts
+    /// the recorded integer unit to the exposed unit (e.g. `1e-9` for
+    /// ns → seconds); empty trailing buckets collapse into `+Inf`.
+    pub fn histogram(&mut self, name: &str, snap: &HistSnapshot, scale: f64) {
+        debug_assert!(valid_metric_name(name), "bad metric name {name}");
+        self.header(name, "histogram");
+        let total = snap.count();
+        // Highest non-empty bucket: everything above it is represented by
+        // the +Inf bucket alone, keeping scrapes compact.
+        let hi = snap.counts.iter().rposition(|&c| c > 0).unwrap_or(0);
+        let bucket = format!("{name}_bucket");
+        let mut acc = 0u64;
+        for (b, &c) in snap.counts.iter().enumerate().take((hi + 1).min(LOG2_BUCKETS - 1)) {
+            acc += c;
+            let le = format!("{}", bucket_upper(b) as f64 * scale);
+            self.sample(&bucket, &[("le", &le)], acc as f64);
+        }
+        self.sample(&bucket, &[("le", "+Inf")], total as f64);
+        self.sample(&format!("{name}_sum"), &[], snap.sum as f64 * scale);
+        self.sample(&format!("{name}_count"), &[], total as f64);
+    }
+
+    /// Finished document.
+    pub fn finish(self) -> String {
+        self.buf
+    }
+}
+
+/// Render the standard registry surface into `out`: per-shard task
+/// counters, aggregated queue-length / decision-latency / response-time
+/// histograms, per-worker μ̂ gauges, λ̂, and the consensus counters.
+/// Callers append anything live (worker queue probes, wire counters)
+/// before finishing.
+pub fn render_into(reg: &Registry, out: &mut Expo) {
+    let shard_labels: Vec<String> = (0..reg.n_shards()).map(|i| i.to_string()).collect();
+
+    out.header("rosella_decisions_total", "counter");
+    for (i, s) in reg.shards().iter().enumerate() {
+        out.sample(
+            "rosella_decisions_total",
+            &[("shard", &shard_labels[i])],
+            s.decisions.get() as f64,
+        );
+    }
+    out.header("rosella_tasks_dispatched_total", "counter");
+    for (i, s) in reg.shards().iter().enumerate() {
+        out.sample(
+            "rosella_tasks_dispatched_total",
+            &[("shard", &shard_labels[i])],
+            s.dispatched.get() as f64,
+        );
+    }
+    out.header("rosella_tasks_completed_total", "counter");
+    for (i, s) in reg.shards().iter().enumerate() {
+        out.sample(
+            "rosella_tasks_completed_total",
+            &[("shard", &shard_labels[i])],
+            s.completed.get() as f64,
+        );
+    }
+    out.header("rosella_bench_tasks_total", "counter");
+    for (i, s) in reg.shards().iter().enumerate() {
+        out.sample(
+            "rosella_bench_tasks_total",
+            &[("shard", &shard_labels[i])],
+            s.bench_dispatched.get() as f64,
+        );
+    }
+
+    out.histogram("rosella_queue_len", &reg.aggregate(|s| &s.queue_len), 1.0);
+    out.histogram("rosella_decision_seconds", &reg.aggregate(|s| &s.decision_ns), 1e-9);
+    out.histogram("rosella_response_seconds", &reg.aggregate(|s| &s.response_us), 1e-6);
+
+    out.header("rosella_mu_hat", "gauge");
+    for w in 0..reg.n_workers() {
+        let label = w.to_string();
+        out.sample("rosella_mu_hat", &[("worker", &label)], reg.mu_hat(w));
+    }
+    out.gauge("rosella_lambda_hat", &[(&[], reg.lambda_hat.get())]);
+
+    out.counter("rosella_sync_epochs_total", &[(&[], reg.sync_epochs.get())]);
+    out.counter("rosella_sync_merges_total", &[(&[], reg.sync_merges.get())]);
+    out.counter("rosella_sync_exports_total", &[(&[], reg.sync_exports.get())]);
+    out.counter("rosella_estimate_publishes_total", &[(&[], reg.publishes.get())]);
+    out.counter("rosella_arrivals_total", &[(&[], reg.arrivals.get())]);
+}
+
+/// One-call rendering of the standard surface (tests, simple callers).
+pub fn render(reg: &Registry) -> String {
+    let mut e = Expo::new();
+    render_into(reg, &mut e);
+    e.finish()
+}
+
+/// Structural well-formedness check used by tests and the CI gate logic:
+/// every non-comment, non-blank line must be
+/// `name{labels} value` or `name value` with a valid metric name and a
+/// parseable float value.
+pub fn is_well_formed(doc: &str) -> bool {
+    for line in doc.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (head, value) = match line.rsplit_once(' ') {
+            Some(p) => p,
+            None => return false,
+        };
+        if value.parse::<f64>().is_err() && value != "+Inf" && value != "-Inf" && value != "NaN" {
+            return false;
+        }
+        let name = match head.find('{') {
+            Some(i) => {
+                if !head.ends_with('}') {
+                    return false;
+                }
+                &head[..i]
+            }
+            None => head,
+        };
+        if !valid_metric_name(name) {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::Registry;
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(escape_label_value("plain"), "plain");
+        assert_eq!(escape_label_value("a\\b"), "a\\\\b");
+        assert_eq!(escape_label_value("say \"hi\""), "say \\\"hi\\\"");
+        assert_eq!(escape_label_value("two\nlines"), "two\\nlines");
+        // Composed: every special char at once, round-trip stable length.
+        assert_eq!(escape_label_value("\\\"\n"), "\\\\\\\"\\n");
+    }
+
+    #[test]
+    fn metric_name_validity() {
+        assert!(valid_metric_name("rosella_tasks_completed_total"));
+        assert!(valid_metric_name("_x"));
+        assert!(valid_metric_name("a:b"));
+        assert!(!valid_metric_name(""));
+        assert!(!valid_metric_name("9lives"));
+        assert!(!valid_metric_name("has space"));
+        assert!(!valid_metric_name("hyphen-ated"));
+    }
+
+    #[test]
+    fn sample_lines_render_labels() {
+        let mut e = Expo::new();
+        e.header("m_total", "counter");
+        e.sample("m_total", &[("shard", "0"), ("kind", "a\"b")], 3.0);
+        let doc = e.finish();
+        assert_eq!(doc, "# TYPE m_total counter\nm_total{shard=\"0\",kind=\"a\\\"b\"} 3\n");
+        assert!(is_well_formed(&doc));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_end_at_inf() {
+        let mut snap = crate::obs::registry::HistSnapshot::empty();
+        snap.counts[1] = 2; // two samples of value 1
+        snap.counts[3] = 1; // one sample in [4, 8)
+        snap.sum = 7;
+        let mut e = Expo::new();
+        e.histogram("lat", &snap, 1.0);
+        let doc = e.finish();
+        assert!(doc.contains("# TYPE lat histogram"));
+        assert!(doc.contains("lat_bucket{le=\"1\"} 2"));
+        assert!(doc.contains("lat_bucket{le=\"7\"} 3"));
+        assert!(doc.contains("lat_bucket{le=\"+Inf\"} 3"));
+        assert!(doc.contains("lat_sum 7"));
+        assert!(doc.contains("lat_count 3"));
+        assert!(is_well_formed(&doc));
+        // Cumulative counts never decrease.
+        let mut last = 0.0;
+        for line in doc.lines().filter(|l| l.starts_with("lat_bucket")) {
+            let v: f64 = line.rsplit_once(' ').unwrap().1.parse().unwrap();
+            assert!(v >= last, "bucket counts must be cumulative: {doc}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn registry_rendering_is_well_formed_and_covers_surface() {
+        let reg = Registry::new(2, 3);
+        reg.shard(0).dispatched.add(10);
+        reg.shard(1).dispatched.add(5);
+        reg.shard(0).completed.add(9);
+        reg.shard(0).queue_len.record(2);
+        reg.shard(0).response_us.record(1500);
+        reg.set_mu_hat(&[1.0, 2.0, 0.5]);
+        reg.lambda_hat.set(123.0);
+        reg.sync_merges.add(4);
+        let doc = render(&reg);
+        assert!(is_well_formed(&doc), "malformed exposition:\n{doc}");
+        for name in [
+            "rosella_tasks_dispatched_total",
+            "rosella_tasks_completed_total",
+            "rosella_decisions_total",
+            "rosella_queue_len_bucket",
+            "rosella_response_seconds_sum",
+            "rosella_mu_hat",
+            "rosella_lambda_hat",
+            "rosella_sync_merges_total",
+        ] {
+            assert!(doc.contains(name), "missing {name} in:\n{doc}");
+        }
+        assert!(doc.contains("rosella_tasks_dispatched_total{shard=\"1\"} 5"));
+        assert!(doc.contains("rosella_mu_hat{worker=\"2\"} 0.5"));
+    }
+
+    #[test]
+    fn well_formedness_rejects_garbage() {
+        assert!(is_well_formed("# just a comment\n"));
+        assert!(!is_well_formed("no_value_here\n"));
+        assert!(!is_well_formed("bad-name 1\n"));
+        assert!(!is_well_formed("name{unclosed 1\n"));
+        assert!(!is_well_formed("name not_a_number\n"));
+    }
+}

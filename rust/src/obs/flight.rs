@@ -1,0 +1,346 @@
+//! Decision flight recorder: a bounded per-scheduler ring buffer of the
+//! plane's most recent placements and consensus events.
+//!
+//! A post-mortem `PlaneReport` says *how fast* the plane ran; the flight
+//! recorder says *what it was thinking*: for each placement, the task id,
+//! the workers actually probed and the queue lengths seen at those probes,
+//! the chosen worker with its μ̂, the λ̂ in force, and the decision latency
+//! in nanoseconds; for each consensus event, the sync policy, the
+//! divergence at trigger, how many views merged, and the epoch lag since
+//! the previous merge. Rings are fixed-capacity and overwrite the oldest
+//! entry, so a recorder is O(capacity) memory regardless of run length.
+//!
+//! Each scheduler thread writes its own lane (one `Mutex` per lane,
+//! uncontended except against a dump), and the whole recorder dumps as
+//! JSONL — one event per line — on drain or on demand from the scrape
+//! endpoint's `/flight` route.
+//!
+//! [`ProbeTrace`] is the capture half: a `Cell`-based scratchpad handed to
+//! the decision view, recording which workers the policy probed without
+//! changing the policy trait or any RNG stream.
+
+use crate::config::Json;
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Maximum probes captured per decision (power-of-d-choices uses 2; late
+/// binding can touch a few more).
+pub const MAX_PROBES: usize = 4;
+
+/// Per-decision probe scratchpad. Lives on one scheduler thread; cleared
+/// before each decision, filled by the view's `queue_len` reads.
+#[derive(Debug, Default)]
+pub struct ProbeTrace {
+    len: Cell<usize>,
+    workers: [Cell<u32>; MAX_PROBES],
+    qlens: [Cell<u32>; MAX_PROBES],
+}
+
+impl ProbeTrace {
+    /// Fresh, empty trace.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Forget the previous decision's probes.
+    #[inline]
+    pub fn clear(&self) {
+        self.len.set(0);
+    }
+
+    /// Record one probe (worker, observed queue length). Extra probes
+    /// beyond [`MAX_PROBES`] are dropped — the first probes are the ones
+    /// the decision logic weighs.
+    #[inline]
+    pub fn push(&self, worker: usize, qlen: usize) {
+        let n = self.len.get();
+        if n < MAX_PROBES {
+            self.workers[n].set(worker as u32);
+            self.qlens[n].set(qlen.min(u32::MAX as usize) as u32);
+            self.len.set(n + 1);
+        }
+    }
+
+    /// Captured probes as `(worker, qlen)` pairs.
+    pub fn probes(&self) -> Vec<(u32, u32)> {
+        (0..self.len.get()).map(|i| (self.workers[i].get(), self.qlens[i].get())).collect()
+    }
+}
+
+/// One recorded event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FlightEvent {
+    /// A placement decision.
+    Placement {
+        /// Nanoseconds since the run started.
+        t_ns: u64,
+        /// Deciding scheduler (shard) index.
+        shard: u32,
+        /// Task id (encoded job id in the plane).
+        task: u64,
+        /// Workers probed and the queue lengths seen there.
+        probed: Vec<(u32, u32)>,
+        /// Chosen worker.
+        chosen: u32,
+        /// μ̂ of the chosen worker at decision time.
+        mu_chosen: f64,
+        /// λ̂ in force at decision time (tasks/second).
+        lambda_hat: f64,
+        /// Wall-clock decision latency in nanoseconds.
+        decision_ns: u64,
+    },
+    /// A consensus (estimate-sync) event.
+    Consensus {
+        /// Nanoseconds since the run started.
+        t_ns: u64,
+        /// Sync policy name (`periodic`, `adaptive`, `gossip`).
+        policy: &'static str,
+        /// Check epoch counter at this event.
+        epoch: u64,
+        /// Divergence measured at the trigger (0 when not applicable).
+        divergence: f64,
+        /// Number of scheduler views merged (0 for a skipped epoch).
+        views: u32,
+        /// Check epochs since the last merge (staleness at trigger).
+        epoch_lag: u64,
+    },
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+impl FlightEvent {
+    /// One JSONL line (no trailing newline).
+    pub fn to_json_line(&self) -> String {
+        let mut m = BTreeMap::new();
+        match self {
+            FlightEvent::Placement {
+                t_ns,
+                shard,
+                task,
+                probed,
+                chosen,
+                mu_chosen,
+                lambda_hat,
+                decision_ns,
+            } => {
+                m.insert("type".into(), Json::Str("placement".into()));
+                m.insert("t_ns".into(), num(*t_ns as f64));
+                m.insert("shard".into(), num(*shard as f64));
+                m.insert("task".into(), num(*task as f64));
+                m.insert(
+                    "probed".into(),
+                    Json::Arr(
+                        probed
+                            .iter()
+                            .map(|&(w, q)| {
+                                Json::Arr(vec![num(w as f64), num(q as f64)])
+                            })
+                            .collect(),
+                    ),
+                );
+                m.insert("chosen".into(), num(*chosen as f64));
+                m.insert("mu_chosen".into(), num(*mu_chosen));
+                m.insert("lambda_hat".into(), num(*lambda_hat));
+                m.insert("decision_ns".into(), num(*decision_ns as f64));
+            }
+            FlightEvent::Consensus { t_ns, policy, epoch, divergence, views, epoch_lag } => {
+                m.insert("type".into(), Json::Str("consensus".into()));
+                m.insert("t_ns".into(), num(*t_ns as f64));
+                m.insert("policy".into(), Json::Str((*policy).into()));
+                m.insert("epoch".into(), num(*epoch as f64));
+                m.insert("divergence".into(), num(*divergence));
+                m.insert("views".into(), num(*views as f64));
+                m.insert("epoch_lag".into(), num(*epoch_lag as f64));
+            }
+        }
+        crate::config::to_string(&Json::Obj(m))
+    }
+}
+
+/// Fixed-capacity overwrite-oldest ring.
+#[derive(Debug)]
+struct Ring {
+    cap: usize,
+    buf: Vec<FlightEvent>,
+    /// Next write position once the ring is full.
+    next: usize,
+    /// Total events ever recorded into this ring.
+    total: u64,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Self {
+        Self { cap, buf: Vec::with_capacity(cap.min(1024)), next: 0, total: 0 }
+    }
+
+    fn push(&mut self, ev: FlightEvent) {
+        self.total += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.next] = ev;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    /// Events oldest-first.
+    fn ordered(&self) -> impl Iterator<Item = &FlightEvent> {
+        self.buf[self.next..].iter().chain(self.buf[..self.next].iter())
+    }
+}
+
+/// The recorder: one lane per scheduler thread plus one for consensus
+/// events. Lanes are independently locked, so a scheduler only ever
+/// contends with a concurrent dump, never with its peers.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    lanes: Vec<Mutex<Ring>>,
+}
+
+/// Default per-lane capacity: enough tail to be useful, small enough that
+/// a recorder is a few hundred KB at most.
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+impl FlightRecorder {
+    /// Recorder for `shards` scheduler lanes (+1 internal consensus lane),
+    /// each holding the most recent `capacity` events.
+    pub fn new(shards: usize, capacity: usize) -> Self {
+        assert!(shards > 0 && capacity > 0, "flight recorder needs lanes and capacity");
+        Self { lanes: (0..=shards).map(|_| Mutex::new(Ring::new(capacity))).collect() }
+    }
+
+    /// Number of scheduler lanes (excluding the consensus lane).
+    pub fn n_shards(&self) -> usize {
+        self.lanes.len() - 1
+    }
+
+    /// Record an event into scheduler lane `shard`.
+    pub fn record(&self, shard: usize, ev: FlightEvent) {
+        debug_assert!(shard < self.n_shards(), "lane out of range");
+        self.lanes[shard].lock().unwrap().push(ev);
+    }
+
+    /// Record a consensus event (the shared consensus lane).
+    pub fn record_consensus(&self, ev: FlightEvent) {
+        let lane = self.lanes.len() - 1;
+        self.lanes[lane].lock().unwrap().push(ev);
+    }
+
+    /// Total events ever recorded (including overwritten ones).
+    pub fn total(&self) -> u64 {
+        self.lanes.iter().map(|l| l.lock().unwrap().total).sum()
+    }
+
+    /// Dump every lane as JSONL, oldest-first within each lane (lanes are
+    /// concatenated; consumers sort on `t_ns` if they need a global
+    /// order). Ends with a newline when non-empty.
+    pub fn dump_jsonl(&self) -> String {
+        let mut out = String::new();
+        for lane in &self.lanes {
+            let ring = lane.lock().unwrap();
+            for ev in ring.ordered() {
+                out.push_str(&ev.to_json_line());
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn placement(task: u64) -> FlightEvent {
+        FlightEvent::Placement {
+            t_ns: task * 10,
+            shard: 0,
+            task,
+            probed: vec![(1, 3), (4, 0)],
+            chosen: 4,
+            mu_chosen: 1.5,
+            lambda_hat: 200.0,
+            decision_ns: 420,
+        }
+    }
+
+    #[test]
+    fn probe_trace_captures_and_clears() {
+        let t = ProbeTrace::new();
+        t.push(3, 7);
+        t.push(9, 0);
+        assert_eq!(t.probes(), vec![(3, 7), (9, 0)]);
+        t.clear();
+        assert!(t.probes().is_empty());
+        // Overflow beyond MAX_PROBES is dropped, not panicked on.
+        for i in 0..10 {
+            t.push(i, i);
+        }
+        assert_eq!(t.probes().len(), MAX_PROBES);
+    }
+
+    #[test]
+    fn events_serialize_to_parseable_json_lines() {
+        let line = placement(42).to_json_line();
+        let v = crate::config::parse(&line).expect("placement line must be valid JSON");
+        assert_eq!(v.get("type").unwrap().as_str(), Some("placement"));
+        assert_eq!(v.get("task").unwrap().as_u64(), Some(42));
+        assert_eq!(v.get("chosen").unwrap().as_u64(), Some(4));
+        assert_eq!(v.get("probed").unwrap().as_arr().unwrap().len(), 2);
+        let cons = FlightEvent::Consensus {
+            t_ns: 5,
+            policy: "adaptive",
+            epoch: 9,
+            divergence: 0.125,
+            views: 4,
+            epoch_lag: 3,
+        };
+        let v = crate::config::parse(&cons.to_json_line()).unwrap();
+        assert_eq!(v.get("policy").unwrap().as_str(), Some("adaptive"));
+        assert_eq!(v.get("divergence").unwrap().as_f64(), Some(0.125));
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_keeps_order() {
+        let rec = FlightRecorder::new(1, 4);
+        for task in 0..10 {
+            rec.record(0, placement(task));
+        }
+        assert_eq!(rec.total(), 10);
+        let dump = rec.dump_jsonl();
+        let tasks: Vec<u64> = dump
+            .lines()
+            .map(|l| crate::config::parse(l).unwrap().get("task").unwrap().as_u64().unwrap())
+            .collect();
+        // Capacity 4: the last four events, oldest first.
+        assert_eq!(tasks, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn consensus_lane_is_separate_from_shard_lanes() {
+        let rec = FlightRecorder::new(2, 8);
+        rec.record(1, placement(1));
+        rec.record_consensus(FlightEvent::Consensus {
+            t_ns: 1,
+            policy: "periodic",
+            epoch: 1,
+            divergence: 0.0,
+            views: 2,
+            epoch_lag: 1,
+        });
+        let dump = rec.dump_jsonl();
+        assert_eq!(dump.lines().count(), 2);
+        assert!(dump.contains("\"placement\""));
+        assert!(dump.contains("\"consensus\""));
+    }
+
+    #[test]
+    fn empty_recorder_dumps_empty() {
+        let rec = FlightRecorder::new(3, 16);
+        assert_eq!(rec.dump_jsonl(), "");
+        assert_eq!(rec.total(), 0);
+    }
+}

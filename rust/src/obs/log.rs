@@ -1,0 +1,165 @@
+//! Tiny leveled logger, env-filtered via `ROSELLA_LOG`.
+//!
+//! Off by default so the hot paths and benches pay nothing beyond one
+//! relaxed atomic load per *potential* log site; formatting only happens
+//! when the level is enabled. Set `ROSELLA_LOG=error|warn|info|debug` to
+//! turn it on. Output goes to stderr, prefixed with level and module, so
+//! stdout stays reserved for reports and JSON.
+//!
+//! Use through the crate-root macros:
+//!
+//! ```
+//! rosella::log_info!("pool listening on {}", "127.0.0.1:7411");
+//! ```
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Severity levels, ordered: a configured level enables itself and
+/// everything more severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    /// Logging disabled (the default).
+    Off = 0,
+    /// Unrecoverable or dropped-work conditions.
+    Error = 1,
+    /// Degraded but continuing.
+    Warn = 2,
+    /// Lifecycle events (listeners up, drains, consensus).
+    Info = 3,
+    /// Per-connection / per-epoch chatter.
+    Debug = 4,
+}
+
+/// Parse a `ROSELLA_LOG` value; anything unrecognized is off.
+pub fn parse_level(s: &str) -> Level {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "error" => Level::Error,
+        "warn" | "warning" => Level::Warn,
+        "info" => Level::Info,
+        "debug" | "trace" => Level::Debug,
+        _ => Level::Off,
+    }
+}
+
+static CONFIGURED: OnceLock<u8> = OnceLock::new();
+/// Test override: `u8::MAX` means "use the environment".
+static OVERRIDE: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn configured() -> u8 {
+    *CONFIGURED.get_or_init(|| {
+        std::env::var("ROSELLA_LOG").map(|v| parse_level(&v) as u8).unwrap_or(Level::Off as u8)
+    })
+}
+
+/// Whether `level` is currently enabled.
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    let over = OVERRIDE.load(Ordering::Relaxed);
+    let max = if over == u8::MAX { configured() } else { over };
+    (level as u8) <= max && level != Level::Off
+}
+
+/// Force a level at runtime (tests; `None` restores the env setting).
+pub fn set_level(level: Option<Level>) {
+    OVERRIDE.store(level.map(|l| l as u8).unwrap_or(u8::MAX), Ordering::Relaxed);
+}
+
+/// Write one formatted record to stderr. Called by the macros only after
+/// an `enabled` check, so disabled sites never format.
+pub fn write(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    let tag = match level {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN",
+        Level::Info => "INFO",
+        Level::Debug => "DEBUG",
+        Level::Off => return,
+    };
+    eprintln!("[{tag}] {target}: {args}");
+}
+
+/// Log at error level (enabled by `ROSELLA_LOG=error` and above).
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Error) {
+            $crate::obs::log::write(
+                $crate::obs::log::Level::Error,
+                module_path!(),
+                format_args!($($arg)*),
+            );
+        }
+    };
+}
+
+/// Log at warn level.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Warn) {
+            $crate::obs::log::write(
+                $crate::obs::log::Level::Warn,
+                module_path!(),
+                format_args!($($arg)*),
+            );
+        }
+    };
+}
+
+/// Log at info level.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Info) {
+            $crate::obs::log::write(
+                $crate::obs::log::Level::Info,
+                module_path!(),
+                format_args!($($arg)*),
+            );
+        }
+    };
+}
+
+/// Log at debug level.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Debug) {
+            $crate::obs::log::write(
+                $crate::obs::log::Level::Debug,
+                module_path!(),
+                format_args!($($arg)*),
+            );
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(parse_level("error"), Level::Error);
+        assert_eq!(parse_level("WARN"), Level::Warn);
+        assert_eq!(parse_level(" info "), Level::Info);
+        assert_eq!(parse_level("debug"), Level::Debug);
+        assert_eq!(parse_level("trace"), Level::Debug);
+        assert_eq!(parse_level(""), Level::Off);
+        assert_eq!(parse_level("yes please"), Level::Off);
+    }
+
+    #[test]
+    fn override_controls_enablement() {
+        // Other tests may run concurrently, but only this module touches
+        // the override; restore the env-derived setting when done.
+        set_level(Some(Level::Warn));
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Some(Level::Off));
+        assert!(!enabled(Level::Error));
+        set_level(None);
+    }
+}

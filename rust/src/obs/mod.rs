@@ -1,0 +1,46 @@
+//! Live observability plane: metrics registry, flight recorder, scrape
+//! endpoint, and leveled logging — all dependency-free (`std` only).
+//!
+//! Rosella's premise is a scheduler that *watches* the system (§5:
+//! "monitors total system load and uses the information to dynamically
+//! determine optimal estimation strategy"), yet the end-of-run
+//! `PlaneReport`/`NetReport` JSON can only be inspected post-mortem. This
+//! module makes a live run observable without perturbing it:
+//!
+//! * [`registry`] — a lock-free metrics [`Registry`]: atomic counters,
+//!   f64-bits gauges (the same pattern as the plane's seqlock estimate
+//!   table), and fixed-bucket log2 histograms. Every shard/frontend thread
+//!   writes its own [`ShardSlot`], so the per-decision hot path is O(1),
+//!   allocation-free, and uncontended; readers aggregate across slots on
+//!   scrape (aggregate-on-read, never aggregate-on-write).
+//! * [`flight`] — a bounded per-scheduler ring buffer ([`FlightRecorder`])
+//!   capturing each placement (task id, probed workers and the queue
+//!   lengths seen, chosen worker, μ̂/λ̂ snapshot, decision ns) and each
+//!   consensus event (policy, divergence at trigger, views merged, epoch
+//!   lag), dumped as JSONL on drain or on demand from the scrape endpoint.
+//! * [`scrape`] — a minimal HTTP/1.1 listener ([`MetricsServer`]) over
+//!   `std::net` serving Prometheus text exposition at `/metrics` and the
+//!   flight-recorder JSONL at `/flight` (`--metrics-listen ADDR` on
+//!   `rosella plane`, both in-process and `--listen` server modes).
+//! * [`expo`] — the Prometheus text-exposition encoder (label escaping,
+//!   `# TYPE` headers, cumulative `le` histogram buckets).
+//! * [`log`] — a tiny leveled logger, env-filtered via `ROSELLA_LOG`
+//!   (`error|warn|info|debug`, off by default so benches pay nothing).
+//!
+//! None of this touches an RNG stream or reorders a decision: counters are
+//! relaxed atomics, the flight recorder only *reads* decision state, and
+//! everything beyond the always-on counters is opt-in — which is what keeps
+//! `tests/determinism.rs` bit-exact with instrumentation compiled in, and
+//! the `hotpath` overhead gate (instrumented ≤ 1.10× uninstrumented
+//! decision ns/op) honest.
+
+pub mod expo;
+pub mod flight;
+pub mod log;
+pub mod registry;
+pub mod scrape;
+
+pub use expo::{escape_label_value, valid_metric_name, Expo};
+pub use flight::{FlightEvent, FlightRecorder, ProbeTrace};
+pub use registry::{Counter, Gauge, HistSnapshot, Log2Histogram, Registry, ShardSlot};
+pub use scrape::MetricsServer;

@@ -1,0 +1,428 @@
+//! Lock-free metrics registry.
+//!
+//! Three primitives, all plain atomics (no locks, no allocation after
+//! construction):
+//!
+//! * [`Counter`] — monotone `AtomicU64`;
+//! * [`Gauge`] — an `AtomicU64` holding f64 bit patterns (the same
+//!   atomic-float idiom as [`crate::plane::EstimateTable`]);
+//! * [`Log2Histogram`] — 65 fixed power-of-two buckets over `u64` values.
+//!   Bucket `b ≥ 1` holds `2^(b-1) ≤ v < 2^b`; bucket 0 holds `v = 0`.
+//!   Recording is two relaxed `fetch_add`s plus a `leading_zeros` — a few
+//!   ns, bounded memory, no resizing ever.
+//!
+//! The [`Registry`] pre-allocates one [`ShardSlot`] per scheduler thread.
+//! Each thread only ever writes its own slot, so the hot path is
+//! uncontended (one writer per cache line); scrapes and reports aggregate
+//! across slots on read. The registry is created per run (testable,
+//! no global state) and shared via `Arc`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotone counter. `inc`/`add` are single relaxed atomic RMWs.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Zeroed counter.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one.
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 gauge (stored as bit pattern — never torn).
+#[derive(Debug)]
+pub struct Gauge(AtomicU64);
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Self(AtomicU64::new(0f64.to_bits()))
+    }
+}
+
+impl Gauge {
+    /// Gauge initialized to 0.0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Store a new value.
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Number of buckets: one for zero plus one per possible `floor(log2 v)`.
+pub const LOG2_BUCKETS: usize = 65;
+
+/// Power-of-two bucket index of a value.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        64 - v.leading_zeros() as usize
+    }
+}
+
+/// Inclusive upper bound of bucket `b` (the Prometheus `le` boundary).
+pub fn bucket_upper(b: usize) -> u64 {
+    match b {
+        0 => 0,
+        1..=63 => (1u64 << b) - 1,
+        _ => u64::MAX,
+    }
+}
+
+/// Fixed-bucket log2 histogram over `u64` samples (latency in ns/µs,
+/// queue lengths). Lock-free, bounded, O(1) record.
+#[derive(Debug)]
+pub struct Log2Histogram {
+    counts: [AtomicU64; LOG2_BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Default for Log2Histogram {
+    fn default() -> Self {
+        Self { counts: std::array::from_fn(|_| AtomicU64::new(0)), sum: AtomicU64::new(0) }
+    }
+}
+
+impl Log2Histogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Total samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of recorded values (wrapping on overflow).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Consistent-enough point-in-time copy. Individual bucket loads are
+    /// relaxed, so a snapshot taken mid-record can be off by the in-flight
+    /// sample — fine for scraping, never for accounting invariants.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            counts: self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Accumulate this histogram into an aggregate snapshot
+    /// (aggregate-on-read across shard slots).
+    pub fn merge_into(&self, acc: &mut HistSnapshot) {
+        assert_eq!(acc.counts.len(), LOG2_BUCKETS, "snapshot geometry mismatch");
+        for (a, c) in acc.counts.iter_mut().zip(self.counts.iter()) {
+            *a += c.load(Ordering::Relaxed);
+        }
+        acc.sum = acc.sum.wrapping_add(self.sum.load(Ordering::Relaxed));
+    }
+}
+
+/// Plain (non-atomic) copy of a [`Log2Histogram`], used for aggregation
+/// and rendering.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Per-bucket counts ([`LOG2_BUCKETS`] entries).
+    pub counts: Vec<u64>,
+    /// Sum of recorded values.
+    pub sum: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        Self { counts: vec![0; LOG2_BUCKETS], sum: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Empty snapshot (all-zero buckets).
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Total samples.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Approximate quantile `q ∈ [0, 1]`: the midpoint of the bucket
+    /// holding the target rank (0 for an empty snapshot).
+    pub fn quantile(&self, q: f64) -> u64 {
+        assert!((0.0..=1.0).contains(&q));
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q * total as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return bucket_mid(b);
+            }
+        }
+        bucket_upper(LOG2_BUCKETS - 1)
+    }
+}
+
+/// Representative (midpoint) value of bucket `b`.
+pub fn bucket_mid(b: usize) -> u64 {
+    match b {
+        0 => 0,
+        1 => 1,
+        _ => {
+            let lo = 1u64 << (b - 1);
+            lo + lo / 2
+        }
+    }
+}
+
+/// Per-scheduler-thread metric slot. One thread writes, any thread reads.
+#[derive(Debug, Default)]
+pub struct ShardSlot {
+    /// Scheduling decisions made.
+    pub decisions: Counter,
+    /// Real tasks handed to workers.
+    pub dispatched: Counter,
+    /// Real tasks whose completions this shard has observed.
+    pub completed: Counter,
+    /// Benchmark (fake) tasks dispatched by this shard's learner.
+    pub bench_dispatched: Counter,
+    /// Queue length of the chosen worker at each decision.
+    pub queue_len: Log2Histogram,
+    /// Per-decision latency in nanoseconds (recorded only when the flight
+    /// recorder is on — clock reads are not free).
+    pub decision_ns: Log2Histogram,
+    /// End-to-end task response time in microseconds.
+    pub response_us: Log2Histogram,
+}
+
+/// The run-wide registry: per-shard slots plus cluster-level gauges and
+/// consensus counters. Constructed once per run, shared via `Arc`.
+#[derive(Debug)]
+pub struct Registry {
+    shards: Box<[ShardSlot]>,
+    mu_hat: Box<[Gauge]>,
+    /// Aggregate arrival-rate estimate λ̂ (tasks/second).
+    pub lambda_hat: Gauge,
+    /// Estimate-sync check epochs evaluated.
+    pub sync_epochs: Counter,
+    /// Consensus merge operations performed.
+    pub sync_merges: Counter,
+    /// Sync payloads exported (shared-memory stores or wire frames).
+    pub sync_exports: Counter,
+    /// Estimate-table publications.
+    pub publishes: Counter,
+    /// Arrivals generated by the ingest layer.
+    pub arrivals: Counter,
+}
+
+impl Registry {
+    /// Registry for `shards` scheduler threads over `workers` workers.
+    pub fn new(shards: usize, workers: usize) -> Self {
+        assert!(shards > 0, "registry needs at least one shard slot");
+        Self {
+            shards: (0..shards).map(|_| ShardSlot::default()).collect(),
+            mu_hat: (0..workers).map(|_| Gauge::new()).collect(),
+            lambda_hat: Gauge::new(),
+            sync_epochs: Counter::new(),
+            sync_merges: Counter::new(),
+            sync_exports: Counter::new(),
+            publishes: Counter::new(),
+            arrivals: Counter::new(),
+        }
+    }
+
+    /// Number of shard slots.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Number of worker gauges.
+    pub fn n_workers(&self) -> usize {
+        self.mu_hat.len()
+    }
+
+    /// This thread's slot. Index must be < `n_shards`.
+    #[inline]
+    pub fn shard(&self, i: usize) -> &ShardSlot {
+        &self.shards[i]
+    }
+
+    /// All slots (rendering/aggregation).
+    pub fn shards(&self) -> &[ShardSlot] {
+        &self.shards
+    }
+
+    /// Publish a μ̂ vector into the per-worker gauges (called from the
+    /// publish path, never the decision path).
+    pub fn set_mu_hat(&self, mu: &[f64]) {
+        for (g, &v) in self.mu_hat.iter().zip(mu) {
+            g.set(v);
+        }
+    }
+
+    /// Per-worker μ̂ gauge value.
+    pub fn mu_hat(&self, w: usize) -> f64 {
+        self.mu_hat[w].get()
+    }
+
+    /// Sum of per-shard dispatched counters.
+    pub fn dispatched_total(&self) -> u64 {
+        self.shards.iter().map(|s| s.dispatched.get()).sum()
+    }
+
+    /// Sum of per-shard completed counters.
+    pub fn completed_total(&self) -> u64 {
+        self.shards.iter().map(|s| s.completed.get()).sum()
+    }
+
+    /// Sum of per-shard decision counters.
+    pub fn decisions_total(&self) -> u64 {
+        self.shards.iter().map(|s| s.decisions.get()).sum()
+    }
+
+    /// Aggregate a per-shard histogram across all slots.
+    pub fn aggregate<F: Fn(&ShardSlot) -> &Log2Histogram>(&self, f: F) -> HistSnapshot {
+        let mut acc = HistSnapshot::empty();
+        for s in self.shards.iter() {
+            f(s).merge_into(&mut acc);
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let c = Counter::new();
+        c.inc();
+        c.add(41);
+        assert_eq!(c.get(), 42);
+        let g = Gauge::new();
+        assert_eq!(g.get(), 0.0);
+        g.set(-1.25);
+        assert_eq!(g.get(), -1.25);
+    }
+
+    #[test]
+    fn log2_bucket_boundaries() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), 64);
+        // Upper bounds partition the axis: bucket_of(upper) == b and
+        // bucket_of(upper + 1) == b + 1.
+        for b in 0..LOG2_BUCKETS - 1 {
+            let hi = bucket_upper(b);
+            assert_eq!(bucket_of(hi), b, "upper({b})");
+            assert_eq!(bucket_of(hi + 1), b + 1, "upper({b}) + 1");
+        }
+        assert_eq!(bucket_upper(LOG2_BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_count_sum_quantile() {
+        let h = Log2Histogram::new();
+        for v in [0u64, 1, 1, 7, 100, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.sum(), 1109);
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), 6);
+        // Median rank lands in the bucket of value 1.
+        assert_eq!(snap.quantile(0.5), 1);
+        // Max quantile lands in value-1000's bucket [512, 1024).
+        let q100 = snap.quantile(1.0);
+        assert!((512..1024).contains(&q100), "q100={q100}");
+        assert_eq!(HistSnapshot::empty().quantile(0.99), 0);
+    }
+
+    #[test]
+    fn aggregate_on_read_sums_shard_slots() {
+        let reg = Registry::new(3, 2);
+        for (i, n) in [(0usize, 5u64), (1, 7), (2, 11)] {
+            reg.shard(i).dispatched.add(n);
+            reg.shard(i).completed.add(n - 1);
+            for v in 0..n {
+                reg.shard(i).queue_len.record(v);
+            }
+        }
+        assert_eq!(reg.dispatched_total(), 23);
+        assert_eq!(reg.completed_total(), 20);
+        let agg = reg.aggregate(|s| &s.queue_len);
+        assert_eq!(agg.count(), 23);
+        reg.set_mu_hat(&[1.5, 0.5]);
+        assert_eq!(reg.mu_hat(0), 1.5);
+        assert_eq!(reg.mu_hat(1), 0.5);
+    }
+
+    #[test]
+    fn concurrent_writers_lose_nothing() {
+        let reg = Arc::new(Registry::new(4, 1));
+        let mut threads = Vec::new();
+        for i in 0..4 {
+            let reg = reg.clone();
+            threads.push(std::thread::spawn(move || {
+                let slot = reg.shard(i);
+                for v in 0..10_000u64 {
+                    slot.decisions.inc();
+                    slot.queue_len.record(v % 17);
+                }
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(reg.decisions_total(), 40_000);
+        assert_eq!(reg.aggregate(|s| &s.queue_len).count(), 40_000);
+    }
+}

@@ -1,0 +1,199 @@
+//! `/metrics` scrape endpoint: a minimal HTTP/1.1 listener over
+//! `std::net`, serving whatever the registered handler renders.
+//!
+//! One accept-loop thread, one short-lived request per connection
+//! (`Connection: close`) — exactly what a Prometheus scraper or a `curl`
+//! in the CI loopback smoke needs, and nothing more. The handler is a
+//! closure from request path to `(content type, body)`, so the plane can
+//! route `/metrics` to the exposition renderer and `/flight` to the
+//! flight-recorder JSONL dump without this module knowing about either.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Route handler: path → `Some((content_type, body))` or `None` for 404.
+pub type Handler = dyn Fn(&str) -> Option<(&'static str, String)> + Send + Sync;
+
+/// A running scrape listener. Shut down explicitly with
+/// [`MetricsServer::shutdown`] or implicitly on drop.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for MetricsServer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MetricsServer").field("addr", &self.addr).finish()
+    }
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and serve requests on a background
+    /// thread until shutdown.
+    pub fn spawn(addr: &str, handler: Arc<Handler>) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("rosella-metrics".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if stop_flag.load(Ordering::Acquire) {
+                        break;
+                    }
+                    match stream {
+                        Ok(s) => {
+                            // Serve inline: scrapes are tiny and rare, and a
+                            // stuck client is bounded by the read timeout.
+                            let _ = serve_one(s, &handler);
+                        }
+                        Err(e) => {
+                            crate::log_debug!("metrics accept error: {e}");
+                        }
+                    }
+                }
+            })?;
+        crate::log_info!("metrics endpoint listening on http://{local}/metrics");
+        Ok(Self { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the listener thread.
+    pub fn shutdown(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        if let Some(handle) = self.handle.take() {
+            self.stop.store(true, Ordering::Release);
+            // Wake the blocking accept with a throwaway connection.
+            let _ = TcpStream::connect(self.addr);
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+/// Read one request head, dispatch on its path, write one response.
+fn serve_one(mut stream: TcpStream, handler: &Arc<Handler>) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    let mut head = Vec::with_capacity(512);
+    let mut buf = [0u8; 512];
+    // Read until the end of the request head (or a bounded limit — this
+    // endpoint takes no bodies).
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") {
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        head.extend_from_slice(&buf[..n]);
+        if head.len() > 8192 {
+            return respond(&mut stream, 400, "text/plain", "request too large");
+        }
+    }
+    let text = String::from_utf8_lossy(&head);
+    let mut parts = text.lines().next().unwrap_or("").split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    if method != "GET" {
+        return respond(&mut stream, 405, "text/plain", "method not allowed");
+    }
+    // Strip any query string before routing.
+    let path = path.split('?').next().unwrap_or(path);
+    match handler(path) {
+        Some((content_type, body)) => respond(&mut stream, 200, content_type, &body),
+        None => respond(&mut stream, 404, "text/plain", "not found"),
+    }
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Content type for Prometheus text exposition.
+pub const EXPOSITION_CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        let status: u16 =
+            out.split_whitespace().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+        let body = out.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+        (status, body)
+    }
+
+    #[test]
+    fn serves_routes_and_404s() {
+        let handler: Arc<Handler> = Arc::new(|path: &str| match path {
+            "/metrics" => {
+                Some((EXPOSITION_CONTENT_TYPE, "rosella_up 1\n".to_string()))
+            }
+            "/flight" => Some(("application/jsonl", "{\"ev\":\"x\"}\n".to_string())),
+            _ => None,
+        });
+        let server = MetricsServer::spawn("127.0.0.1:0", handler).unwrap();
+        let addr = server.addr();
+        let (status, body) = get(addr, "/metrics");
+        assert_eq!(status, 200);
+        assert_eq!(body, "rosella_up 1\n");
+        let (status, body) = get(addr, "/flight");
+        assert_eq!(status, 200);
+        assert!(body.starts_with('{'));
+        let (status, _) = get(addr, "/nope");
+        assert_eq!(status, 404);
+        // Query strings are stripped before routing.
+        let (status, _) = get(addr, "/metrics?x=1");
+        assert_eq!(status, 200);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly_and_frees_the_port() {
+        let handler: Arc<Handler> = Arc::new(|_| None);
+        let server = MetricsServer::spawn("127.0.0.1:0", handler).unwrap();
+        let addr = server.addr();
+        server.shutdown();
+        // Port is free again: a new bind on the same address succeeds.
+        let _rebound = TcpListener::bind(addr).unwrap();
+    }
+}

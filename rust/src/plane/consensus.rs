@@ -34,8 +34,8 @@
 
 use super::state::EstimateTable;
 use crate::learner::{
-    merge_estimates_into, merge_payloads_into, EstimateView, SyncDecision, SyncPayload,
-    SyncPolicy,
+    divergence_of, merge_estimates_into, merge_payloads_into, EstimateView, SyncDecision,
+    SyncPayload, SyncPolicy,
 };
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -188,6 +188,14 @@ pub(crate) struct SyncRun {
     pub policy: SyncPolicy,
     pub prior: f64,
     pub start: Instant,
+    /// Metrics registry: the sync thread bumps `sync_epochs` / `sync_merges`
+    /// as it goes (off the decision path — a few writes per second).
+    pub obs: Arc<crate::obs::Registry>,
+    /// Optional flight recorder: every merge lands a
+    /// [`FlightEvent::Consensus`](crate::obs::FlightEvent) in the consensus
+    /// lane (policy, consensus shift, views merged, epochs since the last
+    /// merge).
+    pub flight: Option<Arc<crate::obs::FlightRecorder>>,
 }
 
 /// What the sync thread hands back at drain.
@@ -209,6 +217,14 @@ pub(crate) fn run_sync(mut ctx: SyncRun) -> SyncOutcome {
     let mut payload_buf: Vec<SyncPayload> = Vec::new();
     let mut pair_buf: Vec<SyncPayload> = Vec::new();
     let mut consensus = vec![0.0; ctx.table.n()];
+    // Previous published consensus, kept so each merge's flight event can
+    // report how far the consensus actually moved (relative shift via
+    // [`divergence_of`]). Starts at the prior — the table's initial state.
+    let mut last_consensus = vec![ctx.prior; ctx.table.n()];
+    // Check epochs elapsed since the last merge (the "how stale was the
+    // consensus when we finally merged" signal for adaptive policies).
+    let mut epoch_lag: u64 = 0;
+    let policy_name = ctx.policy.kind().name();
     let check = Duration::from_secs_f64(ctx.policy.check_interval());
     let mut next_check = ctx.start + check;
     while !ctx.stop.load(Ordering::Acquire) {
@@ -224,8 +240,10 @@ pub(crate) fn run_sync(mut ctx: SyncRun) -> SyncOutcome {
             }
             let now_s = ctx.start.elapsed().as_secs_f64();
             let diverged = ctx.views.take_merge_request();
+            ctx.obs.sync_epochs.inc();
             match ctx.policy.on_epoch(now_s, diverged) {
                 SyncDecision::Skip => {
+                    epoch_lag += 1;
                     if diverged {
                         // The policy deferred a shard's divergence trigger
                         // (min-interval suppression): re-raise it so the
@@ -234,13 +252,25 @@ pub(crate) fn run_sync(mut ctx: SyncRun) -> SyncOutcome {
                         ctx.views.request_merge();
                     }
                 }
-                SyncDecision::MergeAll => consensus_step(
-                    &ctx.views,
-                    &ctx.table,
-                    ctx.prior,
-                    &mut payload_buf,
-                    &mut consensus,
-                ),
+                SyncDecision::MergeAll => {
+                    consensus_step(
+                        &ctx.views,
+                        &ctx.table,
+                        ctx.prior,
+                        &mut payload_buf,
+                        &mut consensus,
+                    );
+                    ctx.obs.sync_merges.inc();
+                    record_merge(
+                        &ctx,
+                        policy_name,
+                        &consensus,
+                        &mut last_consensus,
+                        ctx.views.shards() as u32,
+                        epoch_lag,
+                    );
+                    epoch_lag = 0;
+                }
                 SyncDecision::MergePairs(pairs) => {
                     // One plane-wide λ̂ per round, shared by every pair
                     // publish.
@@ -255,6 +285,16 @@ pub(crate) fn run_sync(mut ctx: SyncRun) -> SyncOutcome {
                             &mut pair_buf,
                             &mut consensus,
                         );
+                        ctx.obs.sync_merges.inc();
+                        record_merge(
+                            &ctx,
+                            policy_name,
+                            &consensus,
+                            &mut last_consensus,
+                            2,
+                            epoch_lag,
+                        );
+                        epoch_lag = 0;
                     }
                 }
             }
@@ -264,8 +304,50 @@ pub(crate) fn run_sync(mut ctx: SyncRun) -> SyncOutcome {
             std::thread::sleep(wait.min(Duration::from_millis(5)));
         }
     }
+    // Drain-time epoch: always a full merge of the final views.
     consensus_step(&ctx.views, &ctx.table, ctx.prior, &mut payload_buf, &mut consensus);
+    ctx.obs.sync_epochs.inc();
+    ctx.obs.sync_merges.inc();
+    record_merge(
+        &ctx,
+        policy_name,
+        &consensus,
+        &mut last_consensus,
+        ctx.views.shards() as u32,
+        epoch_lag,
+    );
     SyncOutcome { epochs: ctx.policy.epochs() + 1, merges: ctx.policy.merges() + 1 }
+}
+
+/// Flight-record one consensus merge: how far the published consensus
+/// moved relative to the previous publish, how many views went into it,
+/// and how many check epochs the plane sat on a stale consensus first.
+/// `last` is updated to the new consensus. No-op without a recorder.
+fn record_merge(
+    ctx: &SyncRun,
+    policy: &'static str,
+    consensus: &[f64],
+    last: &mut [f64],
+    views: u32,
+    epoch_lag: u64,
+) {
+    // Mirror the published consensus into the registry gauges — the scrape
+    // endpoint's μ̂/λ̂ view of a per-shard plane.
+    ctx.obs.set_mu_hat(consensus);
+    ctx.obs.lambda_hat.set(ctx.table.lambda());
+    ctx.obs.publishes.inc();
+    if let Some(rec) = ctx.flight.as_deref() {
+        let shift = divergence_of(consensus, last);
+        rec.record_consensus(crate::obs::FlightEvent::Consensus {
+            t_ns: ctx.start.elapsed().as_nanos() as u64,
+            policy,
+            epoch: ctx.policy.epochs(),
+            divergence: shift,
+            views,
+            epoch_lag,
+        });
+    }
+    last.copy_from_slice(consensus);
 }
 
 #[cfg(test)]

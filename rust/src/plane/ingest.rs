@@ -29,6 +29,10 @@ pub struct ArrivalBatcher {
     /// Time of the last generated arrival (seconds since plane start).
     t: f64,
     batch: usize,
+    /// Total arrivals generated over the batcher's lifetime. Plain (not
+    /// atomic): the batcher lives on one shard thread; the shard exports
+    /// the count to the shared [`crate::obs::Registry`] after each fill.
+    generated: u64,
 }
 
 impl ArrivalBatcher {
@@ -41,12 +45,18 @@ impl ArrivalBatcher {
             demand: Exponential::with_mean(mean_demand),
             t: 0.0,
             batch,
+            generated: 0,
         }
     }
 
     /// Configured batch size.
     pub fn batch(&self) -> usize {
         self.batch
+    }
+
+    /// Total arrivals generated so far (ingest-side observability).
+    pub fn generated(&self) -> u64 {
+        self.generated
     }
 
     /// Clear `out` and fill it with the next `batch` arrivals, in
@@ -57,6 +67,7 @@ impl ArrivalBatcher {
             self.t += self.gap.sample(rng);
             out.push(Arrival { at: self.t, demand: self.demand.sample(rng).max(1e-4) });
         }
+        self.generated += self.batch as u64;
     }
 }
 
@@ -119,5 +130,16 @@ mod tests {
     #[should_panic]
     fn zero_batch_rejected() {
         ArrivalBatcher::new(1.0, 0.1, 0);
+    }
+
+    #[test]
+    fn generated_counter_tracks_fills() {
+        let mut b = ArrivalBatcher::new(10.0, 0.1, 16);
+        let mut rng = Rng::new(1);
+        let mut out = Vec::new();
+        assert_eq!(b.generated(), 0);
+        b.fill(&mut rng, &mut out);
+        b.fill(&mut rng, &mut out);
+        assert_eq!(b.generated(), 32);
     }
 }

@@ -29,7 +29,7 @@ use crate::learner::{ArrivalEstimator, EstimateView, FakeJobDispatcher, PerfLear
 use crate::metrics::ResponseRecorder;
 use crate::scheduler::{Policy, PolicyKind};
 use crate::stats::{Exponential, Rng, SplitMix64};
-use crate::types::{JobPlacement, JobSpec, LocalView, TaskKind, WorkerId};
+use crate::types::{ClusterView, JobPlacement, JobSpec, LocalView, TaskKind, WorkerId};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
@@ -163,20 +163,88 @@ impl FrontendCore {
     /// coordinator's path). Single-task jobs are the serving case;
     /// reservation placements degrade to the first probe.
     pub fn decide_local(&mut self, job: &JobSpec, qlen: &[usize]) -> WorkerId {
+        self.decide_local_traced(job, qlen, None)
+    }
+
+    /// [`Self::decide_local`] with an optional probe trace attached
+    /// (decision flight recorder). As with the shared path, the policy code
+    /// and its RNG stream are identical with or without the trace.
+    pub fn decide_local_traced(
+        &mut self,
+        job: &JobSpec,
+        qlen: &[usize],
+        trace: Option<&crate::obs::ProbeTrace>,
+    ) -> WorkerId {
         let view = LocalView {
             queue_len: qlen,
             mu_hat: &self.cache.mu_hat,
             sampler: &self.cache.sampler,
             lambda_hat: self.arrivals.lambda_or(0.0),
         };
-        flatten(self.policy.schedule_job(job, &view, &mut self.rng))
+        let placement = match trace {
+            Some(trace) => {
+                let traced = TracedView { inner: view, trace };
+                self.policy.schedule_job(job, &traced, &mut self.rng)
+            }
+            None => self.policy.schedule_job(job, &view, &mut self.rng),
+        };
+        flatten(placement)
     }
 
     /// Schedule one job against the plane's shared state: atomic probes,
     /// cached estimates, no locks, no copies.
     pub fn decide_shared(&mut self, job: &JobSpec, qlen: &[Arc<AtomicUsize>]) -> WorkerId {
-        let view = SharedView { qlen, est: &self.cache };
+        self.decide_shared_traced(job, qlen, None)
+    }
+
+    /// [`Self::decide_shared`] with an optional probe trace attached to
+    /// the view (decision flight recorder). The policy code and its RNG
+    /// stream are identical with or without the trace — capture is a pure
+    /// side channel on `queue_len` reads.
+    pub fn decide_shared_traced(
+        &mut self,
+        job: &JobSpec,
+        qlen: &[Arc<AtomicUsize>],
+        trace: Option<&crate::obs::ProbeTrace>,
+    ) -> WorkerId {
+        let view = SharedView { qlen, est: &self.cache, trace };
         flatten(self.policy.schedule_job(job, &view, &mut self.rng))
+    }
+}
+
+/// [`ClusterView`] adapter mirroring every queue-length read into a
+/// [`crate::obs::ProbeTrace`] — how the flight recorder captures probes on
+/// the slice-backed [`LocalView`] path without widening [`LocalView`]
+/// itself (its other users — DES, hotpath, policy tests — stay untouched).
+struct TracedView<'a, V> {
+    inner: V,
+    trace: &'a crate::obs::ProbeTrace,
+}
+
+impl<V: ClusterView> ClusterView for TracedView<'_, V> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    #[inline]
+    fn queue_len(&self, w: WorkerId) -> usize {
+        let q = self.inner.queue_len(w);
+        self.trace.push(w, q);
+        q
+    }
+
+    #[inline]
+    fn mu_hat(&self, w: WorkerId) -> f64 {
+        self.inner.mu_hat(w)
+    }
+
+    fn lambda_hat(&self) -> f64 {
+        self.inner.lambda_hat()
+    }
+
+    #[inline]
+    fn sample(&self, rng: &mut crate::stats::Rng) -> WorkerId {
+        self.inner.sample(rng)
     }
 }
 
@@ -235,6 +303,12 @@ pub(crate) struct ShardRun {
     /// Per-shard learning plumbing; `None` runs the legacy shared-learner
     /// shard loop (the aggregator owns all learning state).
     pub learner: Option<ShardLearner>,
+    /// Run-wide metrics registry; this shard writes only slot `id`
+    /// (uncontended relaxed atomics — the always-on telemetry surface).
+    pub obs: Arc<crate::obs::Registry>,
+    /// Decision flight recorder (opt-in; adds two clock reads and a probe
+    /// trace per decision when present).
+    pub flight: Option<Arc<crate::obs::FlightRecorder>>,
 }
 
 /// The channels a per-shard learner consumes and feeds.
@@ -344,6 +418,9 @@ impl ShardLearnState {
         self.perf.on_completion(c.worker, now_s, c.duration.max(1e-6), c.demand);
         if c.kind == TaskKind::Real {
             self.responses.record((now_s - c.sojourn).max(0.0), now_s);
+            let slot = ctx.obs.shard(self.shard);
+            slot.completed.inc();
+            slot.response_us.record((c.sojourn.max(0.0) * 1e6) as u64);
             // Release pairs with the Acquire load in `run_plane`'s stop
             // snapshot: a task counted here already left its queue probe.
             self.completed_real.fetch_add(1, Ordering::Release);
@@ -362,6 +439,7 @@ impl ShardLearnState {
         self.perf.publish(now_s, lambda);
         self.perf.export_views_into(&mut self.view_buf);
         self.views.store(self.shard, &self.view_buf, core.lambda_or(0.0));
+        ctx.obs.sync_exports.inc();
         if let Some(threshold) = ctx.divergence_threshold {
             if self.perf.divergence_from(core.mu_hat()) > threshold {
                 self.views.request_merge();
@@ -377,7 +455,7 @@ impl ShardLearnState {
             self.record(ctx, &c);
         }
         let lambda = self.lambda_global(core);
-        self.benchmarks += super::dispatch_benchmarks(
+        let injected = super::dispatch_benchmarks(
             &self.dispatcher,
             &ctx.workers,
             lambda,
@@ -386,6 +464,10 @@ impl ShardLearnState {
             &mut self.rng,
             &mut self.next_bench,
         );
+        self.benchmarks += injected;
+        if injected > 0 {
+            ctx.obs.shard(self.shard).bench_dispatched.add(injected);
+        }
         if Instant::now() >= self.next_publish {
             self.publish_and_export(ctx, core);
             self.next_publish += Duration::from_secs_f64(self.publish_interval);
@@ -445,9 +527,17 @@ pub(crate) fn run_shard(mut ctx: ShardRun) -> ShardStats {
         .learner
         .take()
         .map(|l| ShardLearnState::new(l, &ctx, core_seed ^ stream_seed ^ 0xFA_CE));
+    // Telemetry: this shard's private registry slot (relaxed atomics, no
+    // contention) and, when the flight recorder is on, the probe trace the
+    // decision view fills in. Neither touches an RNG stream.
+    let obs = ctx.obs.clone();
+    let slot = obs.shard(ctx.id);
+    let flight = ctx.flight.clone();
+    let trace = crate::obs::ProbeTrace::new();
 
     'outer: while !ctx.stop.load(Ordering::Relaxed) {
         batcher.fill(&mut stream_rng, &mut batch);
+        obs.arrivals.add(batch.len() as u64);
         for a in &batch {
             if let Some(maxd) = ctx.max_decisions {
                 if stats.decisions >= maxd {
@@ -480,8 +570,35 @@ pub(crate) fn run_shard(mut ctx: ShardRun) -> ShardStats {
                 }
             }
             job.tasks[0].demand = a.demand;
-            let w = core.decide_shared(&job, &ctx.qlen);
+            let w = match flight.as_deref() {
+                None => core.decide_shared(&job, &ctx.qlen),
+                Some(rec) => {
+                    // Flight-recorded decision: same policy code and RNG
+                    // stream, plus probe capture and a latency clock.
+                    trace.clear();
+                    let t0 = Instant::now();
+                    let w = core.decide_shared_traced(&job, &ctx.qlen, Some(&trace));
+                    let decision_ns = t0.elapsed().as_nanos() as u64;
+                    slot.decision_ns.record(decision_ns);
+                    rec.record(
+                        ctx.id,
+                        crate::obs::FlightEvent::Placement {
+                            t_ns: ctx.start.elapsed().as_nanos() as u64,
+                            shard: ctx.id as u32,
+                            task: encode_job(ctx.id, local_jobs),
+                            probed: trace.probes(),
+                            chosen: w as u32,
+                            mu_chosen: core.mu_hat()[w],
+                            lambda_hat: core.cached_lambda(),
+                            decision_ns,
+                        },
+                    );
+                    w
+                }
+            };
             stats.decisions += 1;
+            slot.decisions.inc();
+            slot.queue_len.record(ctx.qlen[w].load(Ordering::Relaxed) as u64);
             if ctx.record_placements && stats.placements.len() < MAX_RECORDED {
                 stats.placements.push(w);
             }
@@ -494,6 +611,7 @@ pub(crate) fn run_shard(mut ctx: ShardRun) -> ShardStats {
                 });
                 local_jobs += 1;
                 stats.dispatched += 1;
+                slot.dispatched.inc();
             }
             ctx.lambda_slot.store(core.lambda_or(0.0).to_bits(), Ordering::Relaxed);
         }

@@ -104,6 +104,13 @@ impl EstimateTable {
         let (lambda, _) = self.read(&mut mu);
         (mu, lambda)
     }
+
+    /// Current λ̂ alone — one relaxed atomic load, no seqlock round trip.
+    /// Used by the metrics scrape path, where a value torn against μ̂ is
+    /// acceptable (it is a gauge, not an invariant).
+    pub fn lambda(&self) -> f64 {
+        f64::from_bits(self.lambda_bits.load(Ordering::Relaxed))
+    }
 }
 
 /// A frontend's private cache of the last estimate-table read: the μ̂
@@ -132,11 +139,18 @@ impl EstimateCache {
 /// [`ClusterView`] over the plane's shared state: atomic queue-length
 /// probes plus a frontend's estimate cache. No locks, no copies — a
 /// scheduling decision touches exactly the probed workers.
+///
+/// When a [`crate::obs::ProbeTrace`] is attached (flight recorder on),
+/// each `queue_len` probe is captured as it happens — the recorder sees
+/// the workers the policy *actually* probed and the queue lengths it saw,
+/// without any change to the policy trait or its RNG draws.
 pub struct SharedView<'a> {
     /// Per-worker queue-length probes (shared with the worker threads).
     pub qlen: &'a [Arc<AtomicUsize>],
     /// The deciding frontend's estimate cache.
     pub est: &'a EstimateCache,
+    /// Optional probe capture for the decision flight recorder.
+    pub trace: Option<&'a crate::obs::ProbeTrace>,
 }
 
 impl ClusterView for SharedView<'_> {
@@ -146,7 +160,11 @@ impl ClusterView for SharedView<'_> {
 
     #[inline]
     fn queue_len(&self, w: WorkerId) -> usize {
-        self.qlen[w].load(Ordering::Relaxed)
+        let q = self.qlen[w].load(Ordering::Relaxed);
+        if let Some(trace) = self.trace {
+            trace.push(w, q);
+        }
+        q
     }
 
     #[inline]
@@ -245,9 +263,11 @@ mod tests {
         est.mu_hat = vec![0.0, 0.0, 5.0];
         est.sampler = AliasTable::new(&est.mu_hat);
         est.lambda_tasks = 7.0;
-        let view = SharedView { qlen: &qlen, est: &est };
+        let trace = crate::obs::ProbeTrace::new();
+        let view = SharedView { qlen: &qlen, est: &est, trace: Some(&trace) };
         assert_eq!(view.n(), 3);
         assert_eq!(view.queue_len(2), 2);
+        assert_eq!(trace.probes(), vec![(2, 2)], "probe capture missed a read");
         assert_eq!(ClusterView::mu_hat(&view, 2), 5.0);
         assert_eq!(view.lambda_hat(), 7.0);
         let mut rng = Rng::new(9);

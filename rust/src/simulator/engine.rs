@@ -92,6 +92,13 @@ pub struct SimConfig {
     pub learner: LearnerConfig,
     /// Queue-length snapshot interval (None disables queue stats).
     pub queue_sample: Option<f64>,
+    /// Telemetry timeline sampling interval in simulated seconds (`None`
+    /// disables the timeline). Each sample captures λ̂, the installed μ̂
+    /// consensus vs the true speeds, the cross-worker queue-length p99, and
+    /// the job backlog — the registry's gauges as a per-window time series.
+    /// Sampling reads engine state only (no RNG draws, no event
+    /// reordering), so enabling it never perturbs a run's decisions.
+    pub timeline: Option<f64>,
 }
 
 impl SimConfig {
@@ -112,8 +119,49 @@ impl SimConfig {
             },
             learner: LearnerConfig::default(),
             queue_sample: None,
+            timeline: None,
         }
     }
+}
+
+/// One sampled point of the run's telemetry timeline
+/// ([`SimConfig::timeline`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimelinePoint {
+    /// Simulated time of the sample (seconds).
+    pub t: f64,
+    /// λ̂ the learning stack and policy were running on at this instant.
+    pub lambda_hat: f64,
+    /// Installed μ̂ consensus (what the policy decides with).
+    pub mu_hat: Vec<f64>,
+    /// True worker speeds at this instant (volatility moves them).
+    pub speeds: Vec<f64>,
+    /// p99 queue length across workers, through the registry's log2
+    /// histogram geometry (bucket upper bound, like the scrape endpoint).
+    pub queue_p99: u64,
+    /// Jobs in flight (arrived, not yet fully completed).
+    pub backlog: usize,
+}
+
+impl TimelinePoint {
+    /// This point as a JSON object.
+    pub fn to_json(&self) -> crate::config::Json {
+        use crate::config::Json;
+        let nums = |xs: &[f64]| Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect());
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("t".into(), Json::Num(self.t));
+        m.insert("lambda_hat".into(), Json::Num(self.lambda_hat));
+        m.insert("mu_hat".into(), nums(&self.mu_hat));
+        m.insert("speeds".into(), nums(&self.speeds));
+        m.insert("queue_p99".into(), Json::Num(self.queue_p99 as f64));
+        m.insert("backlog".into(), Json::Num(self.backlog as f64));
+        Json::Obj(m)
+    }
+}
+
+/// A whole timeline as a JSON array (`simulate --timeline-json`).
+pub fn timeline_json(points: &[TimelinePoint]) -> crate::config::Json {
+    crate::config::Json::Arr(points.iter().map(TimelinePoint::to_json).collect())
 }
 
 /// Bookkeeping for an in-flight job.
@@ -147,6 +195,9 @@ pub struct SimResult {
     /// Estimate-sync check epochs evaluated (periodic: every one merges;
     /// adaptive: most may skip; gossip: one pairing round each).
     pub sync_epochs: u64,
+    /// Sampled telemetry timeline (empty unless [`SimConfig::timeline`]
+    /// set an interval).
+    pub timeline: Vec<TimelinePoint>,
     /// Consensus merge operations performed: all-to-all installs (including
     /// publish-fused ones at `sync_interval = 0`) count one each, every
     /// gossip pair counts one — the coordination-cost axis of the
@@ -236,6 +287,7 @@ pub struct Simulation {
     responses: ResponseRecorder,
     queues: Option<QueueStats>,
     estimate_error: Vec<(f64, f64)>,
+    timeline: Vec<TimelinePoint>,
     /// Minimum guaranteed total service throughput μ̄ (tasks/sec).
     pub mu_bar_tasks: f64,
 }
@@ -322,6 +374,7 @@ impl Simulation {
             responses: ResponseRecorder::new(cfg.warmup),
             queues: cfg.queue_sample.map(|_| QueueStats::new(n)),
             estimate_error: Vec::new(),
+            timeline: Vec::new(),
             mu_bar_tasks,
             workload,
             cfg,
@@ -368,6 +421,9 @@ impl Simulation {
         if let Some(interval) = self.cfg.queue_sample {
             self.events.push(self.cfg.warmup.max(interval), Event::QueueSample);
         }
+        if let Some(interval) = self.cfg.timeline {
+            self.events.push(interval, Event::TimelineSample);
+        }
         self.events.push(self.cfg.duration, Event::EndOfSimulation);
 
         while let Some((t, ev)) = self.events.pop() {
@@ -381,6 +437,7 @@ impl Simulation {
                 Event::EstimateSync => self.on_sync(),
                 Event::SpeedShock => self.on_shock(),
                 Event::QueueSample => self.on_queue_sample(),
+                Event::TimelineSample => self.on_timeline_sample(),
             }
         }
 
@@ -400,6 +457,7 @@ impl Simulation {
             duration: self.cfg.duration,
             sync_epochs: self.sync.epochs(),
             sync_merges: self.sync.merges() + self.fused_merges,
+            timeline: self.timeline,
         }
     }
 
@@ -820,6 +878,29 @@ impl Simulation {
             q.record(&self.qlen);
         }
     }
+
+    /// One telemetry timeline sample: read-only against engine state (no
+    /// RNG draws, no queue mutation), so the decision stream is identical
+    /// with the timeline on or off.
+    fn on_timeline_sample(&mut self) {
+        if let Some(interval) = self.cfg.timeline {
+            self.events.push(self.now + interval, Event::TimelineSample);
+        }
+        // Cross-worker queue distribution at this instant, through the
+        // same log2 bucket geometry the live registry exposes on /metrics.
+        let hist = crate::obs::Log2Histogram::new();
+        for &q in &self.qlen {
+            hist.record(q as u64);
+        }
+        self.timeline.push(TimelinePoint {
+            t: self.now,
+            lambda_hat: self.lambda_learn(),
+            mu_hat: self.mu_hat.clone(),
+            speeds: self.speeds.clone(),
+            queue_p99: hist.snapshot().quantile(0.99),
+            backlog: self.jobs.len() + self.singles_in_flight,
+        });
+    }
 }
 
 /// Disjoint mutable references to two distinct slice elements.
@@ -856,6 +937,7 @@ mod tests {
             policy: PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
             learner: LearnerConfig::oracle(),
             queue_sample: Some(0.5),
+            timeline: None,
         }
     }
 
@@ -1089,6 +1171,37 @@ mod tests {
         let q = r.queues.unwrap();
         assert!(q.snapshots() > 100);
         assert!(q.mean_max() > 0.0);
+    }
+
+    #[test]
+    fn timeline_sampling_collects_points_without_perturbing_the_run() {
+        let base_run = run(base());
+        let mut cfg = base();
+        cfg.timeline = Some(1.0);
+        let sampled = run(cfg);
+        // Sampling is read-only: the decision stream is bit-identical.
+        assert_eq!(base_run.completed_real, sampled.completed_real);
+        assert_eq!(base_run.completed_bench, sampled.completed_bench);
+        assert!((base_run.responses.mean() - sampled.responses.mean()).abs() < 1e-12);
+        assert!(base_run.timeline.is_empty());
+        // 120 sim-secs at 1 Hz -> ~120 points, each internally consistent.
+        assert!(sampled.timeline.len() >= 100, "points {}", sampled.timeline.len());
+        let n = sampled.timeline[0].mu_hat.len();
+        let mut last_t = -1.0;
+        for p in &sampled.timeline {
+            assert!(p.t > last_t, "timeline must be strictly ordered");
+            last_t = p.t;
+            assert_eq!(p.mu_hat.len(), n);
+            assert_eq!(p.speeds.len(), n);
+            assert!(p.lambda_hat >= 0.0);
+        }
+        // JSON rendering round-trips through the hand-rolled parser.
+        let rendered = crate::config::to_string(&timeline_json(&sampled.timeline));
+        let parsed = crate::config::parse(&rendered).expect("timeline JSON parses");
+        match parsed {
+            crate::config::Json::Arr(items) => assert_eq!(items.len(), sampled.timeline.len()),
+            other => panic!("expected array, got {other:?}"),
+        }
     }
 
     #[test]

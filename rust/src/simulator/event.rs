@@ -52,6 +52,10 @@ pub enum Event {
     SpeedShock,
     /// Periodic queue-length sampling for Figure 13-style distributions.
     QueueSample,
+    /// Periodic telemetry timeline sampling (λ̂, per-worker μ̂ vs true
+    /// speed, queue p99, backlog). Read-only against engine state: never
+    /// draws from an RNG or perturbs the decision stream.
+    TimelineSample,
     /// Hard stop.
     EndOfSimulation,
 }
@@ -66,6 +70,7 @@ const T_SPEED_SHOCK: u64 = 4;
 const T_QUEUE_SAMPLE: u64 = 5;
 const T_END: u64 = 6;
 const T_ESTIMATE_SYNC: u64 = 7;
+const T_TIMELINE_SAMPLE: u64 = 8;
 
 #[inline]
 fn pack_tag(ev: &Event) -> u64 {
@@ -77,6 +82,7 @@ fn pack_tag(ev: &Event) -> u64 {
         Event::EstimateSync => T_ESTIMATE_SYNC << 32,
         Event::SpeedShock => T_SPEED_SHOCK << 32,
         Event::QueueSample => T_QUEUE_SAMPLE << 32,
+        Event::TimelineSample => T_TIMELINE_SAMPLE << 32,
         Event::EndOfSimulation => T_END << 32,
     }
 }
@@ -92,6 +98,7 @@ fn unpack(bits: u64) -> Event {
         T_ESTIMATE_SYNC => Event::EstimateSync,
         T_SPEED_SHOCK => Event::SpeedShock,
         T_QUEUE_SAMPLE => Event::QueueSample,
+        T_TIMELINE_SAMPLE => Event::TimelineSample,
         T_END => Event::EndOfSimulation,
         other => unreachable!("corrupt packed event tag {other}"),
     }

@@ -3,5 +3,5 @@
 pub mod engine;
 pub mod event;
 
-pub use engine::{run, SimConfig, SimResult, Simulation};
+pub use engine::{run, timeline_json, SimConfig, SimResult, Simulation, TimelinePoint};
 pub use event::{Event, EventQueue};

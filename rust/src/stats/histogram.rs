@@ -309,6 +309,78 @@ mod tests {
     }
 
     #[test]
+    fn merged_quantiles_equal_whole_stream_quantiles() {
+        // Split a known stream across two histograms, merge, and compare
+        // against one histogram that saw the whole stream: identical
+        // geometry means identical bucket counts, so every quantile must
+        // agree exactly (bucket representative values, not approximately).
+        let mut whole = LogHistogram::latency();
+        let mut a = LogHistogram::latency();
+        let mut b = LogHistogram::latency();
+        for i in 1..=2000u32 {
+            let v = 1e-3 * 1.004f64.powi(i as i32); // geometric sweep 1ms..~3s
+            whole.record(v);
+            if i % 3 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        for q in [0.0, 0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 0.999, 1.0] {
+            let qa = a.quantile(q);
+            let qw = whole.quantile(q);
+            assert_eq!(
+                qa.to_bits(),
+                qw.to_bits(),
+                "q{q}: merged {qa} != whole-stream {qw}"
+            );
+        }
+        assert!((a.mean() - whole.mean()).abs() < 1e-12);
+        assert_eq!(a.max(), whole.max());
+    }
+
+    #[test]
+    fn merging_empty_is_identity_both_ways() {
+        let mut a = LogHistogram::latency();
+        a.record(0.25);
+        let before = (a.count(), a.quantile(0.5), a.mean(), a.max());
+        a.merge(&LogHistogram::latency());
+        assert_eq!((a.count(), a.quantile(0.5), a.mean(), a.max()), before);
+        let mut empty = LogHistogram::latency();
+        empty.merge(&a);
+        assert_eq!(empty.count(), 1);
+        assert_eq!(empty.quantile(0.5).to_bits(), a.quantile(0.5).to_bits());
+    }
+
+    #[test]
+    fn single_bucket_stream_puts_every_quantile_in_that_bucket() {
+        // All samples identical: every quantile is the one occupied
+        // bucket's representative, for the direct and the merged path.
+        let mut a = LogHistogram::latency();
+        let mut b = LogHistogram::latency();
+        for _ in 0..10 {
+            a.record(0.042);
+            b.record(0.042);
+        }
+        let q_lo = a.quantile(0.001);
+        let q_hi = a.quantile(1.0);
+        assert_eq!(q_lo.to_bits(), q_hi.to_bits(), "single bucket: {q_lo} vs {q_hi}");
+        a.merge(&b);
+        assert_eq!(a.count(), 20);
+        assert_eq!(a.quantile(0.5).to_bits(), q_lo.to_bits());
+    }
+
+    #[test]
+    #[should_panic]
+    fn merge_rejects_mismatched_geometry() {
+        let mut a = LogHistogram::new(1e-4, 1e3, 1.05);
+        let b = LogHistogram::new(1e-4, 1e3, 1.10);
+        a.merge(&b);
+    }
+
+    #[test]
     fn ccdf_is_monotone_decreasing() {
         let mut h = LogHistogram::latency();
         let mut x = 0.001;

@@ -51,6 +51,7 @@ fn golden_cfg(policy: PolicyKind, workload: WorkloadKind) -> SimConfig {
         policy,
         learner: LearnerConfig::default(),
         queue_sample: Some(1.0),
+        timeline: None,
     }
 }
 

@@ -36,6 +36,8 @@ fn quick_cfg(frontends: usize, sync_policy: SyncPolicyConfig) -> NetServerConfig
         sync_interval: 0.1,
         sync_policy,
         read_timeout: Duration::from_secs(10),
+        metrics_listen: None,
+        flight_record: None,
     }
 }
 

@@ -19,6 +19,7 @@ fn base(policy: PolicyKind, load: f64) -> SimConfig {
         policy,
         learner: LearnerConfig::oracle(),
         queue_sample: Some(0.1),
+        timeline: None,
     }
 }
 
@@ -78,6 +79,7 @@ fn example3_ll2_congests_the_fast_worker() {
         policy: PolicyKind::PPoT { tie, late_binding: false },
         learner: LearnerConfig::oracle(),
         queue_sample: Some(0.1),
+        timeline: None,
     };
     let ll2 = run(mk(TieRule::Ll2));
     let sq2 = run(mk(TieRule::Sq2));
@@ -111,6 +113,7 @@ fn lemma5_slow_worker_discarded_fast_workers_estimated() {
         policy: PolicyKind::PPoT { tie: TieRule::Sq2, late_binding: false },
         learner: LearnerConfig::default(),
         queue_sample: None,
+        timeline: None,
     };
     let sim = rosella::simulator::Simulation::new(cfg);
     let n = sim.n();

@@ -97,6 +97,7 @@ fn prop_simulation_conserves_jobs_and_is_deterministic() {
             policy,
             learner: LearnerConfig::oracle(),
             queue_sample: None,
+            timeline: None,
         };
         let a = run(cfg.clone());
         let b = run(cfg);

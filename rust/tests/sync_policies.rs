@@ -37,6 +37,7 @@ fn stable_cfg(sync: SyncPolicyConfig) -> SimConfig {
             ..LearnerConfig::default()
         },
         queue_sample: None,
+        timeline: None,
     }
 }
 
@@ -57,6 +58,7 @@ fn volatile_cfg(sync: SyncPolicyConfig) -> SimConfig {
             ..LearnerConfig::default()
         },
         queue_sample: None,
+        timeline: None,
     }
 }
 
