@@ -1,17 +1,30 @@
 //! Cross-process vs in-process plane: what does the wire cost?
 //!
-//! Runs the same workload twice — the in-process sharded plane
-//! (`plane::run_plane`, per-shard learners) and the loopback cross-process
-//! plane (pool server + k TCP frontends) — and reports aggregate task
-//! throughput and merge counts side by side. The acceptance bar from the
-//! roadmap is comparability, not parity: the net plane pays one RTT of
-//! probe staleness per beat, which this harness makes visible.
+//! Two experiments, one harness:
 //!
-//! `cargo bench --bench bench_net`
+//! 1. **Comparable pair** — the same paced workload run twice, on the
+//!    in-process sharded plane (`plane::run_plane`, per-shard learners)
+//!    and on the loopback cross-process plane (pool server + k TCP
+//!    frontends). At an arrival-paced rate both planes should keep up,
+//!    so the net/in-process ratio is the CI gate that the wire layer
+//!    does not eat the schedule (roadmap bar: ratio ≥ 0.6).
+//!
+//! 2. **Coalescing sweep** — the cross-process plane alone, offered a
+//!    saturating arrival rate so throughput is limited by the dispatch
+//!    path itself, swept over the submit-coalescing batch size
+//!    B ∈ {1, 8, 64, 256}. B=1 is the eager one-frame-per-task protocol
+//!    (one ~33-byte frame and one write syscall per task); larger B
+//!    amortizes headers and syscalls across a `SubmitBatch` frame. The
+//!    CI gate is the headline of this PR: batched (B ≥ 64) must move
+//!    ≥ 2× the tasks/sec of B=1 within the same run of this binary.
+//!
+//! `cargo bench --bench bench_net -- --json BENCH_net.json`
 
+use rosella::config::{to_string, Json};
 use rosella::learner::SyncPolicyConfig;
 use rosella::net::{run_remote_frontend, ConnectConfig, NetServer, NetServerConfig};
 use rosella::plane::{run_plane, LearnerMode, PlaneConfig};
+use std::collections::BTreeMap;
 use std::thread;
 
 fn in_process(k: usize, cfg: &NetServerConfig) -> (f64, u64, u64) {
@@ -51,7 +64,10 @@ fn in_process(k: usize, cfg: &NetServerConfig) -> (f64, u64, u64) {
     }
 }
 
-fn cross_process(k: usize, cfg: &NetServerConfig) -> (f64, u64, u64) {
+/// One loopback cross-process run; `net_batch` overrides the
+/// server-advertised coalescing batch on every frontend (`Some(1)` forces
+/// the eager one-frame-per-task protocol, `None` accepts the server's B).
+fn cross_process(k: usize, cfg: &NetServerConfig, net_batch: Option<usize>) -> (f64, u64, u64) {
     let mut cfg = cfg.clone();
     cfg.frontends = k;
     let server = match NetServer::bind(cfg) {
@@ -66,7 +82,11 @@ fn cross_process(k: usize, cfg: &NetServerConfig) -> (f64, u64, u64) {
     let frontends: Vec<_> = (0..k)
         .map(|shard| {
             let addr = addr.clone();
-            thread::spawn(move || run_remote_frontend(&ConnectConfig::new(addr, shard, k)))
+            thread::spawn(move || {
+                let mut ccfg = ConnectConfig::new(addr, shard, k);
+                ccfg.net_batch = net_batch;
+                run_remote_frontend(&ccfg)
+            })
         })
         .collect();
     for h in frontends {
@@ -85,6 +105,21 @@ fn cross_process(k: usize, cfg: &NetServerConfig) -> (f64, u64, u64) {
 }
 
 fn main() {
+    // Benches are harness = false binaries: `cargo bench` still forwards
+    // libtest-style flags (e.g. `--bench`), so only `--json PATH` is ours
+    // and everything else is ignored.
+    let mut json_path: Option<String> = None;
+    let mut argv = std::env::args().skip(1);
+    while let Some(a) = argv.next() {
+        if a == "--json" {
+            json_path = Some(argv.next().unwrap_or_else(|| {
+                eprintln!("--json needs a path");
+                std::process::exit(2);
+            }));
+        }
+    }
+
+    // -- experiment 1: comparable pair at a paced (non-saturating) rate --
     let base = NetServerConfig {
         listen: "127.0.0.1:0".into(),
         speeds: vec![2.0, 1.0, 1.0, 1.0, 0.5, 0.5, 0.25, 0.25],
@@ -97,13 +132,102 @@ fn main() {
     };
     println!("-- in-process vs cross-process plane ({} workers) --", base.speeds.len());
     println!("k   in-proc tasks/s   net tasks/s   ratio   in-proc merges   net merges");
+    let mut comparable: Option<(f64, f64)> = None;
     for k in [1usize, 2, 4] {
         let (ip_rate, _, ip_merges) = in_process(k, &base);
-        let (net_rate, net_done, net_merges) = cross_process(k, &base);
+        let (net_rate, net_done, net_merges) = cross_process(k, &base, None);
         println!(
             "{k}   {ip_rate:>15.0}   {net_rate:>11.0}   {:>5.2}   {ip_merges:>14}   {net_merges:>10}",
             net_rate / ip_rate.max(1.0)
         );
         assert!(net_done > 0, "cross-process run completed nothing at k={k}");
+        if k == 2 {
+            comparable = Some((ip_rate, net_rate));
+        }
+    }
+    let (comp_ip, comp_net) = comparable.expect("k=2 ran");
+
+    // -- experiment 2: coalescing sweep at a saturating offered rate --
+    //
+    // The offered rate is far above what one frontend can dispatch, so the
+    // arrival loop runs flat out and tasks/sec measures the per-task cost
+    // of the dispatch path (decision + encode + write). Demand is tiny and
+    // the pool wide so the post-stop drain stays bounded; `tasks_per_sec`
+    // divides by the pre-drain elapsed either way.
+    let sweep_base = NetServerConfig {
+        listen: "127.0.0.1:0".into(),
+        speeds: vec![8.0; 32],
+        rate: 1.5e6,
+        duration: 0.5,
+        mean_demand: 0.0004,
+        batch: 1024,
+        sync_interval: 0.2,
+        sync_policy: SyncPolicyConfig::periodic(),
+        ..NetServerConfig::default()
+    };
+    const BATCHES: [usize; 4] = [1, 8, 64, 256];
+    println!();
+    println!(
+        "-- submit coalescing sweep (1 frontend, {} workers, saturating arrivals) --",
+        sweep_base.speeds.len()
+    );
+    println!("B     net tasks/s   completed   speedup vs B=1");
+    let mut points: Vec<(usize, f64, u64)> = Vec::new();
+    for b in BATCHES {
+        let (rate, done, _) = cross_process(1, &sweep_base, Some(b));
+        assert!(done > 0, "sweep run completed nothing at B={b}");
+        let b1 = points.first().map_or(rate, |&(_, r, _)| r);
+        println!("{b:<5} {rate:>11.0}   {done:>9}   {:>13.2}", rate / b1.max(1.0));
+        points.push((b, rate, done));
+    }
+    let eager = points[0].1;
+    let batched = points
+        .iter()
+        .filter(|&&(b, _, _)| b >= 64)
+        .map(|&(_, r, _)| r)
+        .fold(0.0_f64, f64::max);
+    let speedup = batched / eager.max(1.0);
+    println!();
+    println!(
+        "batched (B>=64) vs eager (B=1): {batched:.0} vs {eager:.0} tasks/s ({speedup:.2}x)"
+    );
+
+    if let Some(path) = json_path {
+        let mut comp = BTreeMap::new();
+        comp.insert("frontends".into(), Json::Num(2.0));
+        comp.insert("workers".into(), Json::Num(base.speeds.len() as f64));
+        comp.insert("rate".into(), Json::Num(base.rate));
+        comp.insert("duration".into(), Json::Num(base.duration));
+        comp.insert("in_process_tasks_per_sec".into(), Json::Num(comp_ip.round()));
+        comp.insert("net_tasks_per_sec".into(), Json::Num(comp_net.round()));
+        comp.insert("ratio".into(), Json::Num(comp_net / comp_ip.max(1.0)));
+        let pts: Vec<Json> = points
+            .iter()
+            .map(|&(b, rate, done)| {
+                let mut m = BTreeMap::new();
+                m.insert("net_batch".into(), Json::Num(b as f64));
+                m.insert("tasks_per_sec".into(), Json::Num(rate.round()));
+                m.insert("completed".into(), Json::Num(done as f64));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut sweep = BTreeMap::new();
+        sweep.insert("frontends".into(), Json::Num(1.0));
+        sweep.insert("workers".into(), Json::Num(sweep_base.speeds.len() as f64));
+        sweep.insert("rate".into(), Json::Num(sweep_base.rate));
+        sweep.insert("duration".into(), Json::Num(sweep_base.duration));
+        sweep.insert("points".into(), Json::Arr(pts));
+        sweep.insert("speedup_batched".into(), Json::Num(speedup));
+        let mut top = BTreeMap::new();
+        top.insert("bench".into(), Json::Str("net".into()));
+        top.insert("policy".into(), Json::Str(base.policy.clone()));
+        top.insert("seed".into(), Json::Num(base.seed as f64));
+        top.insert("comparable".into(), Json::Obj(comp));
+        top.insert("sweep".into(), Json::Obj(sweep));
+        if let Err(e) = std::fs::write(&path, to_string(&Json::Obj(top)) + "\n") {
+            eprintln!("writing {path}: {e}");
+            std::process::exit(2);
+        }
+        println!("wrote {path}");
     }
 }

@@ -5,7 +5,7 @@
 //!
 //! ```text
 //! rosella plane --listen 127.0.0.1:7411 --frontends 2 --duration 2 \
-//!     --sync-interval 0.2 --json BENCH_net.json &
+//!     --sync-interval 0.2 --json BENCH_net_smoke.json &
 //! rosella frontend --connect 127.0.0.1:7411 --shard 0/2 &
 //! rosella frontend --connect 127.0.0.1:7411 --shard 1/2
 //! ```

@@ -205,7 +205,8 @@ pub fn sim_config_from_file(path: &str) -> Result<SimConfig, ConfigError> {
 /// ```json
 /// { "net": { "listen": "127.0.0.1:7411", "frontends": 2,
 ///            "connect": "127.0.0.1:7411", "shard": "0/2",
-///            "read_timeout": 30.0 } }
+///            "read_timeout": 30.0,
+///            "batch": 64, "flush_us": 200.0 } }
 /// ```
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct NetOptions {
@@ -219,6 +220,10 @@ pub struct NetOptions {
     pub shard: Option<(usize, usize)>,
     /// Per-read socket timeout in seconds.
     pub read_timeout: Option<f64>,
+    /// Submit-coalescing batch size B (tasks per wire frame).
+    pub batch: Option<usize>,
+    /// Submit-coalescing flush deadline D in microseconds.
+    pub flush_us: Option<f64>,
 }
 
 impl NetOptions {
@@ -233,6 +238,12 @@ impl NetOptions {
         if let Some(t) = self.read_timeout {
             cfg.read_timeout = std::time::Duration::from_secs_f64(t);
         }
+        if let Some(b) = self.batch {
+            cfg.net_batch = b;
+        }
+        if let Some(us) = self.flush_us {
+            cfg.net_flush_us = us;
+        }
     }
 
     /// Overlay these options onto a frontend connection configuration.
@@ -246,6 +257,12 @@ impl NetOptions {
         }
         if let Some(t) = self.read_timeout {
             cfg.read_timeout = std::time::Duration::from_secs_f64(t);
+        }
+        if let Some(b) = self.batch {
+            cfg.net_batch = Some(b);
+        }
+        if let Some(us) = self.flush_us {
+            cfg.net_flush_us = Some(us);
         }
     }
 }
@@ -301,12 +318,34 @@ pub fn net_from_json(v: &Json) -> Result<NetOptions, ConfigError> {
             Some(t)
         }
     };
+    let batch = match v.get("batch") {
+        None => None,
+        Some(x) => {
+            let b = x.as_u64().ok_or_else(|| bad("'net.batch' must be an integer"))? as usize;
+            if b == 0 {
+                return Err(bad("'net.batch' must be at least 1"));
+            }
+            Some(b)
+        }
+    };
+    let flush_us = match v.get("flush_us") {
+        None => None,
+        Some(x) => {
+            let us = x.as_f64().ok_or_else(|| bad("'net.flush_us' must be a number"))?;
+            if !(us.is_finite() && us >= 0.0) {
+                return Err(bad("'net.flush_us' must be finite and non-negative"));
+            }
+            Some(us)
+        }
+    };
     let opts = NetOptions {
         listen: net_addr(v, "listen")?,
         frontends,
         connect: net_addr(v, "connect")?,
         shard,
         read_timeout,
+        batch,
+        flush_us,
     };
     if let (Some((_, k)), Some(f)) = (opts.shard, opts.frontends) {
         if k != f {
@@ -511,13 +550,15 @@ mod tests {
         let opts = net_options_from_str(
             r#"{"net": {"listen": "127.0.0.1:7411", "frontends": 2,
                         "connect": "127.0.0.1:7411", "shard": "1/2",
-                        "read_timeout": 10.0}}"#,
+                        "read_timeout": 10.0, "batch": 128, "flush_us": 50.0}}"#,
         )
         .unwrap();
         assert_eq!(opts.listen.as_deref(), Some("127.0.0.1:7411"));
         assert_eq!(opts.frontends, Some(2));
         assert_eq!(opts.shard, Some((1, 2)));
         assert_eq!(opts.read_timeout, Some(10.0));
+        assert_eq!(opts.batch, Some(128));
+        assert_eq!(opts.flush_us, Some(50.0));
         // The bare block (no "net" wrapper) parses identically.
         let bare = net_options_from_str(r#"{"listen": "0.0.0.0:9000"}"#).unwrap();
         assert_eq!(bare.listen.as_deref(), Some("0.0.0.0:9000"));
@@ -536,6 +577,10 @@ mod tests {
         assert!(net_options_from_str(r#"{"net": {"shard": "0-2"}}"#).is_err());
         assert!(net_options_from_str(r#"{"net": {"read_timeout": 0}}"#).is_err());
         assert!(net_options_from_str(r#"{"net": {"read_timeout": -5}}"#).is_err());
+        assert!(net_options_from_str(r#"{"net": {"batch": 0}}"#).is_err());
+        assert!(net_options_from_str(r#"{"net": {"batch": "many"}}"#).is_err());
+        assert!(net_options_from_str(r#"{"net": {"flush_us": -1.0}}"#).is_err());
+        assert!(net_options_from_str(r#"{"net": {"flush_us": "soon"}}"#).is_err());
         // Cross-field: the shard's k must agree with the frontend count.
         assert!(
             net_options_from_str(r#"{"net": {"frontends": 4, "shard": "0/2"}}"#).is_err()
@@ -547,7 +592,7 @@ mod tests {
         let opts = net_options_from_str(
             r#"{"net": {"listen": "127.0.0.1:7500", "frontends": 3,
                         "connect": "127.0.0.1:7500", "shard": "2/3",
-                        "read_timeout": 5.0}}"#,
+                        "read_timeout": 5.0, "batch": 256, "flush_us": 75.0}}"#,
         )
         .unwrap();
         let mut server = crate::net::NetServerConfig::default();
@@ -555,11 +600,15 @@ mod tests {
         assert_eq!(server.listen, "127.0.0.1:7500");
         assert_eq!(server.frontends, 3);
         assert_eq!(server.read_timeout, std::time::Duration::from_secs_f64(5.0));
+        assert_eq!(server.net_batch, 256);
+        assert_eq!(server.net_flush_us, 75.0);
         let mut fe = crate::net::ConnectConfig::new("x:1", 0, 1);
         opts.apply_frontend(&mut fe);
         assert_eq!(fe.addr, "127.0.0.1:7500");
         assert_eq!((fe.shard, fe.shards), (2, 3));
         assert_eq!(fe.read_timeout, std::time::Duration::from_secs_f64(5.0));
+        assert_eq!(fe.net_batch, Some(256));
+        assert_eq!(fe.net_flush_us, Some(75.0));
     }
 
     #[test]

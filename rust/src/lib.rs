@@ -97,8 +97,10 @@
 //! * a **versioned, length-prefixed binary wire protocol**
 //!   ([`net::wire`]): explicit little-endian encoding, bit-exact float
 //!   round-trips, hard frame-size bounds, and a message set that is
-//!   exactly the §5 coordination surface — task submit/result, queue-probe
-//!   ticks, [`learner::SyncPayload`] exports, worker-pool handshake;
+//!   exactly the §5 coordination surface — task submit/result (single or
+//!   batched: a `SubmitBatch` frame carries up to ~49k dispatches behind
+//!   one header, optionally piggybacking the beat), queue-probe ticks,
+//!   [`learner::SyncPayload`] exports, worker-pool handshake;
 //! * a **`Transport` seam** ([`net::Transport`]): the transport-generic §5
 //!   frontend loop ([`net::run_frontend_loop`], built on
 //!   [`plane::FrontendCore`]) runs over in-process channels
@@ -113,9 +115,23 @@
 //!   decisions over served probes — shipping its sync payloads over the
 //!   wire instead of through shared memory.
 //!
-//! A loopback run (one pool + k frontend processes) emits `BENCH_net.json`
-//! with aggregate throughput and cross-process merge counts; CI smokes it
-//! and `benches/bench_net.rs` compares it against the in-process plane.
+//! Throughput-wise the wire is batched at both ends: frontends coalesce
+//! dispatches under an adaptive flush policy (send at `--net-batch` B
+//! tasks or after `--net-flush-us` D microseconds, whichever first — B
+//! amortizes headers and write syscalls at saturation, D preserves eager
+//! latency under light load; the server advertises defaults in its
+//! `HelloAck`, each frontend may override), and the pool server runs
+//! **one nonblocking poll loop over every connection** — a single
+//! data-plane thread with per-connection read/write buffers instead of a
+//! thread per frontend. `obs`'s `rosella_wire_tasks_per_frame` histogram
+//! reports the realized coalescing.
+//!
+//! A loopback run (one pool + k frontend processes) emits
+//! `BENCH_net_smoke.json` with aggregate throughput and cross-process
+//! merge counts; CI smokes it, and `benches/bench_net.rs` writes
+//! `BENCH_net.json` gating net-vs-in-process parity on a paced workload
+//! (≥ 0.6×) and the coalescing speedup at saturation (B ≥ 64 moving ≥ 2×
+//! the B=1 tasks/sec).
 //!
 //! ## Observability
 //!

@@ -263,6 +263,8 @@ fn cmd_plane(rest: &[String]) -> i32 {
         .opt("sync-threshold", None, "adaptive sync: relative-error divergence trigger")
         .opt("json", None, "write machine-readable results (e.g. BENCH_plane.json)")
         .opt("listen", None, "host the cross-process pool server on this host:port")
+        .opt("net-batch", None, "submit-coalescing batch size B handed to frontends [default: 64]")
+        .opt("net-flush-us", None, "submit-coalescing flush deadline D in µs [default: 200]")
         .opt("net-config", None, "JSON file with a `net` block (overrides net flags)")
         .opt("metrics-listen", None, "serve Prometheus /metrics on this host:port for the run")
         .opt("flight-record", None, "dump the decision flight recorder as JSONL to this path")
@@ -299,6 +301,8 @@ fn cmd_frontend(rest: &[String]) -> i32 {
         .opt("connect", None, "pool server address (host:port)")
         .opt("shard", None, "this scheduler's shard spec i/k (e.g. 0/2)")
         .opt("connect-timeout", None, "seconds to keep retrying the connect [default: 15]")
+        .opt("net-batch", None, "override the server's submit-coalescing batch size B")
+        .opt("net-flush-us", None, "override the server's flush deadline D in µs")
         .opt("config", None, "JSON file with a `net` block (overrides flags)")
         .opt("flight-record", None, "dump this frontend's placement flight record (JSONL)");
     let p = match spec.parse(rest) {

@@ -65,6 +65,10 @@ pub struct RunParams {
     /// Adaptive sync: request a merge when local estimates diverge beyond
     /// this √k-scaled threshold (`None` under periodic/gossip).
     pub divergence_threshold: Option<f64>,
+    /// Submit-coalescing batch size B (tasks per wire frame).
+    pub net_batch: usize,
+    /// Submit-coalescing flush deadline D.
+    pub net_flush: Duration,
 }
 
 impl RunParams {
@@ -87,6 +91,9 @@ impl RunParams {
         if !(ack.publish_interval > 0.0 && ack.publish_interval.is_finite()) {
             return Err("server advertised a non-positive publish interval".into());
         }
+        if !(ack.net_flush_us.is_finite() && ack.net_flush_us >= 0.0) {
+            return Err("server advertised a non-finite or negative flush deadline".into());
+        }
         let policy = PolicyKind::parse(&ack.policy)?;
         let sync_kind = SyncKind::parse(&ack.sync_policy)?;
         let divergence_threshold = (sync_kind == SyncKind::Adaptive).then(|| {
@@ -105,6 +112,8 @@ impl RunParams {
             publish_interval: ack.publish_interval,
             fake_jobs: ack.fake_jobs,
             divergence_threshold,
+            net_batch: (ack.net_batch as usize).max(1),
+            net_flush: Duration::from_secs_f64(ack.net_flush_us * 1e-6),
         })
     }
 }
@@ -384,6 +393,10 @@ pub fn run_frontend_loop<T: Transport>(
                 if elapsed >= a.at {
                     break;
                 }
+                // Idle until the arrival is due: any coalesced submission
+                // past its flush deadline goes out now, so low load never
+                // trades latency for batching.
+                t.flush_due()?;
                 std::thread::sleep(Duration::from_secs_f64((a.at - elapsed).min(1e-3)));
             }
             core.on_arrival(a.at, 1);
@@ -462,11 +475,15 @@ pub struct ConnectConfig {
     /// Dump this frontend's placement flight record as JSONL to this path
     /// at drain (`None` disables recording entirely).
     pub flight_record: Option<String>,
+    /// Override the server-advertised submit-coalescing batch size B.
+    pub net_batch: Option<usize>,
+    /// Override the server-advertised flush deadline D (microseconds).
+    pub net_flush_us: Option<f64>,
 }
 
 impl ConnectConfig {
     /// Defaults: 15 s connect retry window, 30 s read timeout, no flight
-    /// recording.
+    /// recording, and the server's coalescing policy.
     pub fn new(addr: impl Into<String>, shard: usize, shards: usize) -> Self {
         Self {
             addr: addr.into(),
@@ -475,6 +492,8 @@ impl ConnectConfig {
             connect_timeout: Duration::from_secs(15),
             read_timeout: Duration::from_secs(30),
             flight_record: None,
+            net_batch: None,
+            net_flush_us: None,
         }
     }
 }
@@ -515,6 +534,13 @@ pub fn run_remote_frontend(cfg: &ConnectConfig) -> Result<FrontendReport, String
         other => return Err(format!("expected HelloAck, got tag {}", other.tag())),
     };
     let params = RunParams::from_hello_ack(&ack, cfg.shards)?;
+    // The server's HelloAck carries the run's coalescing policy; local
+    // --net-batch/--net-flush-us flags override it for this frontend only.
+    let batch = cfg.net_batch.unwrap_or(params.net_batch);
+    let flush = cfg
+        .net_flush_us
+        .map_or(params.net_flush, |us| Duration::from_secs_f64(us * 1e-6));
+    t.configure_batching(batch, flush);
     match t.recv()? {
         Msg::Start => {}
         other => return Err(format!("expected Start, got tag {}", other.tag())),
@@ -579,6 +605,18 @@ pub fn frontend_cli(p: &crate::cli::Parsed) -> Result<String, String> {
         }
         cfg.connect_timeout = Duration::from_secs_f64(t);
     }
+    if let Some(b) = p.parse_as::<usize>("net-batch")? {
+        if b == 0 {
+            return Err("--net-batch must be at least 1".into());
+        }
+        cfg.net_batch = Some(b);
+    }
+    if let Some(us) = p.parse_as::<f64>("net-flush-us")? {
+        if !(us.is_finite() && us >= 0.0) {
+            return Err("--net-flush-us must be finite and non-negative".into());
+        }
+        cfg.net_flush_us = Some(us);
+    }
     cfg.flight_record = p.get("flight-record").map(str::to_string);
     let report = run_remote_frontend(&cfg)?;
     Ok(report.render())
@@ -592,6 +630,8 @@ mod tests {
         HelloAck {
             workers: 4,
             batch: 32,
+            net_batch: 64,
+            net_flush_us: 200.0,
             seed: 42,
             prior: 0.9375,
             mean_demand: 0.01,
@@ -615,6 +655,8 @@ mod tests {
         assert_eq!(p.n, 4);
         assert_eq!(p.rate_per_shard, 200.0);
         assert_eq!(p.divergence_threshold, None, "periodic sync has no trigger");
+        assert_eq!(p.net_batch, 64);
+        assert_eq!(p.net_flush, Duration::from_micros(200));
         let mut a = ack();
         a.sync_policy = "adaptive".into();
         let p = RunParams::from_hello_ack(&a, 4).unwrap();
@@ -637,6 +679,16 @@ mod tests {
         let mut a = ack();
         a.sync_policy = "nonsense".into();
         assert!(RunParams::from_hello_ack(&a, 2).is_err());
+        let mut a = ack();
+        a.net_flush_us = f64::NAN;
+        assert!(RunParams::from_hello_ack(&a, 2).is_err());
+        let mut a = ack();
+        a.net_batch = 0;
+        assert_eq!(
+            RunParams::from_hello_ack(&a, 2).unwrap().net_batch,
+            1,
+            "B=0 degrades to unbatched"
+        );
         assert!(RunParams::from_hello_ack(&ack(), 0).is_err());
     }
 
@@ -697,6 +749,8 @@ mod tests {
             publish_interval: 0.1,
             fake_jobs: true,
             divergence_threshold: None,
+            net_batch: 64,
+            net_flush: Duration::from_micros(200),
         };
         let t = LocalTransport::new(
             pool.iter().map(|w| w.client.clone()).collect(),

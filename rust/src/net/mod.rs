@@ -11,18 +11,28 @@
 //! Three layers:
 //!
 //! * [`wire`] — the versioned, length-prefixed little-endian framing: task
-//!   submissions and completions, queue-probe/consensus tick exchanges,
+//!   submissions and completions (single `Submit` frames or coalesced
+//!   `SubmitBatch` frames that amortize the header and the write syscall
+//!   across many dispatches, optionally piggybacking the beat), queue-
+//!   probe/consensus tick exchanges,
 //!   [`SyncPayload`](crate::learner::SyncPayload) exports, and run
 //!   handshake/teardown, with hard frame-size bounds and bit-exact float
 //!   round-trips;
 //! * [`transport`] — the [`Transport`] seam the §5 frontend loop runs
 //!   over: [`LocalTransport`] (the plane's own in-process channels and
-//!   atomics) or [`TcpTransport`] (the wire protocol). The consensus side
-//!   needs no seam at all: remote `SyncExport`s land in the same
+//!   atomics) or [`TcpTransport`] (the wire protocol, with an adaptive
+//!   flush policy: a pending batch is sent once it reaches B tasks
+//!   (`--net-batch`) or D microseconds of age (`--net-flush-us`),
+//!   whichever first — saturation gets syscall amortization, light load
+//!   keeps eager-dispatch latency). The consensus side needs no seam at
+//!   all: remote `SyncExport`s land in the same
 //!   [`SharedViews`](crate::plane::SharedViews) slots the in-process
 //!   shards use, so the sync thread is byte-for-byte the plane's;
 //! * [`server`]/[`frontend`] — the two processes: `rosella plane --listen
-//!   ADDR` hosts the pool, seqlock state, and consensus thread;
+//!   ADDR` hosts the pool, seqlock state, and consensus thread, serving
+//!   every frontend connection from **one nonblocking poll-loop thread**
+//!   (per-connection read/write buffers swept over `set_nonblocking`
+//!   sockets — no thread per frontend, no blocking accept loop);
 //!   `rosella frontend --connect ADDR --shard i/k` runs the complete §5
 //!   scheduler stack (private learner, throttled benchmark dispatcher,
 //!   local decisions over served probes) and participates in consensus by
@@ -30,8 +40,10 @@
 //!
 //! A loopback run (`1` server + `k` frontends on one machine) is the
 //! first end-to-end demonstration of the paper's distributed topology;
-//! `benches/bench_net.rs` compares its throughput against the in-process
-//! plane, and CI smoke-tests it (`BENCH_net.json`).
+//! CI smoke-tests it with real OS processes (`BENCH_net_smoke.json`),
+//! and `benches/bench_net.rs` (`BENCH_net.json`) gates both the
+//! net-vs-in-process throughput ratio on a paced workload and the
+//! coalescing speedup (batched vs eager framing) at saturation.
 
 pub mod frontend;
 pub mod server;

@@ -9,17 +9,22 @@
 //! remote scheduler frontends over the
 //! [`wire`](crate::net::wire) protocol.
 //!
-//! Per connection, one handler thread: it enqueues `Submit`s into the pool,
-//! answers `Tick`s with probe snapshots / routed completions / fresh
-//! consensus, lands `SyncExport`s in the shard's view slot, and records the
-//! frontend's `Done` statistics. The run lifecycle is server-driven: the
-//! server stops the run at its deadline, handlers release their pool
-//! ingress so the workers drain and exit, frontends observe
-//! `stop`/`drained` through their tick beats, export final views, and send
-//! `Done`; the drain-time consensus epoch then merges every shard's final
-//! view exactly as the in-process plane does, and the merged [`NetReport`]
-//! is the cross-process analogue of
-//! [`PlaneReport`](crate::plane::PlaneReport).
+//! One data-plane thread, all connections: the serving thread runs a
+//! single nonblocking poll loop (`set_nonblocking` + readiness sweep over
+//! per-connection read/write buffers, `std::net` only) that accepts and
+//! handshakes frontends, enqueues `Submit`/`SubmitBatch` dispatches into
+//! the pool, answers beats with probe snapshots / routed completions /
+//! fresh consensus, lands `SyncExport`s in the shard's view slot, and
+//! records each frontend's `Done` statistics — no per-connection handler
+//! threads, so one pool thread serves dozens of frontends without
+//! context-switch storms. The run lifecycle is server-driven: the loop
+//! stops the run at its deadline, each connection releases its pool
+//! ingress on its first post-stop beat, the pool is joined once every
+//! ingress is released, frontends observe `stop`/`drained` through their
+//! beats, export final views, and send `Done`; the drain-time consensus
+//! epoch then merges every shard's final view exactly as the in-process
+//! plane does, and the merged [`NetReport`] is the cross-process analogue
+//! of [`PlaneReport`](crate::plane::PlaneReport).
 
 use super::transport::{drain_completions, estimates_if_moved, lambda_total};
 use super::wire::{self, DoneStats, HelloAck, Msg, TickReply, WireCompletion};
@@ -67,6 +72,14 @@ pub struct NetServerConfig {
     pub mean_demand: f64,
     /// Arrival ingestion batch size per frontend.
     pub batch: usize,
+    /// Submit-coalescing batch size B advertised to frontends: each
+    /// frontend flushes its pending dispatches as one `SubmitBatch` frame
+    /// once B accumulate (or the flush deadline fires, whichever first).
+    pub net_batch: usize,
+    /// Submit-coalescing flush deadline D in microseconds advertised to
+    /// frontends: a partial batch never waits longer than this, so light
+    /// load keeps eager-dispatch latency.
+    pub net_flush_us: f64,
     /// Run seed.
     pub seed: u64,
     /// Frontend learner publish/export cadence (seconds).
@@ -100,6 +113,8 @@ impl Default for NetServerConfig {
             duration: 3.0,
             mean_demand: 0.01,
             batch: 64,
+            net_batch: 64,
+            net_flush_us: 200.0,
             seed: 42,
             publish_interval: 0.2,
             warmup: 0.0,
@@ -138,6 +153,12 @@ impl NetServerConfig {
         }
         if self.batch == 0 {
             return Err("batch must be at least 1".into());
+        }
+        if self.net_batch == 0 {
+            return Err("net batch must be at least 1".into());
+        }
+        if !(self.net_flush_us >= 0.0 && self.net_flush_us.is_finite()) {
+            return Err("net flush deadline must be finite and non-negative".into());
         }
         if !(self.publish_interval > 0.0 && self.publish_interval.is_finite()) {
             return Err("publish interval must be positive and finite".into());
@@ -260,8 +281,9 @@ impl NetReport {
     }
 }
 
-/// Machine-readable run results (`BENCH_net.json`), shaped like
-/// `BENCH_plane.json` so within-run ratio gates can read both.
+/// Machine-readable run results (`BENCH_net_smoke.json` in the CI
+/// loopback smoke), shaped like `BENCH_plane.json` so within-run ratio
+/// gates can read both.
 pub fn bench_json(cfg: &NetServerConfig, r: &NetReport) -> Json {
     let per: Vec<Json> = r
         .per_frontend
@@ -321,32 +343,99 @@ pub struct NetServer {
     listener: TcpListener,
 }
 
-/// State one connection handler owns.
-struct ConnCtx {
-    stream: TcpStream,
-    shard: usize,
+/// Idle nap between poll sweeps when no socket moved: short enough that a
+/// beat never waits a visible while (the old per-thread design slept
+/// 10 ms in its accept loop; 500 µs keeps worst-case added latency well
+/// under one flush deadline).
+const IDLE_SLEEP: Duration = Duration::from_micros(500);
+
+/// Shared run state every connection's message handling reads; owned by
+/// the poll loop, one instance per run.
+struct PoolCtx {
     n: usize,
-    comp_rx: Receiver<Completion>,
-    clients: Vec<worker::WorkerClient>,
     probes: Vec<Arc<AtomicUsize>>,
     table: Arc<EstimateTable>,
     views: Arc<SharedViews>,
     stop: Arc<AtomicBool>,
     lambda_slots: Vec<Arc<AtomicU64>>,
     start: Instant,
-    /// Shared run registry; this handler owns the slot for its shard.
     obs: Arc<crate::obs::Registry>,
 }
 
-/// What a connection handler reports back at exit.
-struct ConnOut {
+/// Per-connection state the poll loop owns — the replacement for the old
+/// per-connection handler thread. Reads reassemble frames through
+/// `rbuf`/`roff`; replies stage through `wbuf`/`woff` so a peer that is
+/// slow to read never blocks the loop for anyone else.
+struct Conn {
+    stream: TcpStream,
     shard: usize,
+    /// Frame reassembly: bytes land at the tail, frames pop at `roff`.
+    rbuf: Vec<u8>,
+    roff: usize,
+    /// Encoded replies not yet accepted by the socket (`woff` sent so far).
+    wbuf: Vec<u8>,
+    woff: usize,
+    comp_rx: Receiver<Completion>,
+    /// Completions drained from the pool, awaiting the next beat's reply.
+    pending: VecDeque<WireCompletion>,
+    /// Pool ingress; released (set to `None`) on the first post-stop beat.
+    clients: Option<Vec<worker::WorkerClient>>,
+    disconnected: bool,
+    last_activity: Instant,
+    /// `Done` received and acked: the connection is finished.
+    done: bool,
     stats: Option<DoneStats>,
     dispatched: u64,
     submit_dropped: u64,
     /// SyncExport frames this connection landed in the view slots — the
     /// direct proof that consensus payloads crossed the wire.
     sync_exports: u64,
+}
+
+/// Drain whatever the nonblocking socket has ready into `buf`, returning
+/// the bytes read this sweep (0 when the read would block). A clean EOF is
+/// an error: every peer announces departure with `Done` first.
+fn read_available(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    tmp: &mut [u8],
+) -> Result<usize, String> {
+    use std::io::Read;
+    let mut total = 0usize;
+    loop {
+        match stream.read(tmp) {
+            Ok(0) => return Err("connection closed".into()),
+            Ok(got) => {
+                buf.extend_from_slice(&tmp[..got]);
+                total += got;
+                if got < tmp.len() {
+                    return Ok(total);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(total),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(format!("net read: {e}")),
+        }
+    }
+}
+
+/// Try to pop one complete frame off the front of `buf`: the decoded
+/// message plus the bytes it consumed, or `None` while the frame is still
+/// partial. Header validation happens first, so a hostile length field is
+/// rejected from 12 bytes without waiting for (or allocating) a payload.
+fn try_frame(buf: &[u8]) -> Result<Option<(Msg, usize)>, String> {
+    if buf.len() < wire::HEADER_LEN {
+        return Ok(None);
+    }
+    let header: &[u8; wire::HEADER_LEN] =
+        buf[..wire::HEADER_LEN].try_into().expect("sized slice");
+    let need = wire::HEADER_LEN + wire::header_payload_len(header).map_err(|e| e.to_string())?;
+    if buf.len() < need {
+        return Ok(None);
+    }
+    let msg = Msg::decode(&buf[..need]).map_err(|e| e.to_string())?;
+    wire::note_frames_received(1, need as u64);
+    Ok(Some((msg, need)))
 }
 
 impl NetServer {
@@ -375,86 +464,121 @@ impl NetServer {
         let mu_bar = total / cfg.mean_demand;
 
         // Handshake phase: accept until every shard is claimed exactly
-        // once. The accept loop is nonblocking with a progress-refreshed
-        // deadline, so a frontend that never connects fails the run with a
-        // clear error instead of wedging the server in accept() forever.
+        // once, serving every in-flight handshake from this one thread.
+        // Accepts and Hello reads are both nonblocking with a
+        // progress-refreshed deadline, so a frontend that never connects
+        // (or stalls mid-Hello) fails the run with a clear error instead
+        // of wedging the server — and a stalled greeter cannot delay the
+        // accept or handshake of any other frontend.
         listener
             .set_nonblocking(true)
             .map_err(|e| format!("set nonblocking: {e}"))?;
-        let mut conns: Vec<Option<TcpStream>> = (0..k).map(|_| None).collect();
+        let mut conns: Vec<Option<(TcpStream, Vec<u8>)>> = (0..k).map(|_| None).collect();
         let mut scratch = Vec::with_capacity(4096);
+        let mut tmp = vec![0u8; 64 * 1024];
+        let mut greeting: Vec<(TcpStream, SocketAddr, Vec<u8>)> = Vec::new();
         let mut claimed = 0usize;
         let mut accept_deadline = Instant::now() + cfg.read_timeout;
         while claimed < k {
-            let (mut stream, peer) = match listener.accept() {
-                Ok(conn) => conn,
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    if Instant::now() >= accept_deadline {
-                        return Err(format!(
-                            "timed out waiting for frontends: {claimed} of {k} connected \
-                             within {:.0?}",
-                            cfg.read_timeout
-                        ));
-                    }
-                    std::thread::sleep(Duration::from_millis(10));
-                    continue;
+            let mut progress = false;
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    stream
+                        .set_nonblocking(true)
+                        .map_err(|e| format!("set nonblocking: {e}"))?;
+                    stream.set_nodelay(true).map_err(|e| format!("set nodelay: {e}"))?;
+                    greeting.push((stream, peer, Vec::new()));
+                    progress = true;
                 }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
                 Err(e) => return Err(format!("accept: {e}")),
-            };
-            // Each claim refreshes the patience window; accepted sockets
-            // go back to blocking mode (inheritance is platform-specific).
-            accept_deadline = Instant::now() + cfg.read_timeout;
-            stream
-                .set_nonblocking(false)
-                .map_err(|e| format!("set blocking: {e}"))?;
-            stream.set_nodelay(true).map_err(|e| format!("set nodelay: {e}"))?;
-            stream
-                .set_read_timeout(Some(cfg.read_timeout))
-                .map_err(|e| format!("set read timeout: {e}"))?;
-            let (shard, shards) = match wire::read_msg(&mut stream, &mut scratch)
-                .map_err(|e| format!("handshake with {peer}: {e}"))?
-            {
-                Msg::Hello { shard, shards } => (shard as usize, shards as usize),
-                other => {
+            }
+            let mut i = 0;
+            while i < greeting.len() {
+                let claim = {
+                    let (stream, peer, rbuf) = &mut greeting[i];
+                    let got = read_available(stream, rbuf, &mut tmp)
+                        .map_err(|e| format!("handshake with {peer}: {e}"))?;
+                    progress |= got > 0;
+                    match try_frame(rbuf).map_err(|e| format!("handshake with {peer}: {e}"))? {
+                        Some((Msg::Hello { shard, shards }, used)) => {
+                            Some((shard as usize, shards as usize, used))
+                        }
+                        Some((other, _)) => {
+                            return Err(format!(
+                                "handshake with {peer}: expected Hello, got tag {}",
+                                other.tag()
+                            ))
+                        }
+                        None => None,
+                    }
+                };
+                let Some((shard, shards, used)) = claim else {
+                    i += 1;
+                    continue;
+                };
+                let (mut stream, peer, rbuf) = greeting.swap_remove(i);
+                if shards != k {
                     return Err(format!(
-                        "handshake with {peer}: expected Hello, got tag {}",
-                        other.tag()
-                    ))
+                        "frontend {peer} expects {shards} shards but this server runs {k}"
+                    ));
                 }
-            };
-            if shards != k {
-                return Err(format!(
-                    "frontend {peer} expects {shards} shards but this server runs {k}"
-                ));
+                if shard >= k {
+                    return Err(format!("frontend {peer} claimed shard {shard} of {k}"));
+                }
+                if conns[shard].is_some() {
+                    return Err(format!(
+                        "shard {shard} claimed twice (second claim from {peer})"
+                    ));
+                }
+                let ack = Msg::HelloAck(HelloAck {
+                    workers: n as u32,
+                    batch: cfg.batch as u32,
+                    net_batch: cfg.net_batch as u32,
+                    net_flush_us: cfg.net_flush_us,
+                    seed: cfg.seed,
+                    prior,
+                    mean_demand: cfg.mean_demand,
+                    mu_bar,
+                    rate: cfg.rate,
+                    duration: cfg.duration,
+                    warmup: cfg.warmup,
+                    publish_interval: cfg.publish_interval,
+                    sync_interval: cfg.sync_interval,
+                    sync_threshold: cfg.sync_policy.threshold,
+                    fake_jobs: cfg.fake_jobs,
+                    policy: cfg.policy.clone(),
+                    sync_policy: cfg.sync_policy.kind.name().into(),
+                    speeds: cfg.speeds.clone(),
+                });
+                // The ack is a few hundred bytes into a fresh socket whose
+                // send buffer is empty, so a short blocking write keeps the
+                // handshake simple without risking a stall.
+                stream.set_nonblocking(false).map_err(|e| format!("set blocking: {e}"))?;
+                wire::write_msg(&mut stream, &ack, &mut scratch)
+                    .map_err(|e| format!("handshake with {peer}: {e}"))?;
+                stream
+                    .set_nonblocking(true)
+                    .map_err(|e| format!("set nonblocking: {e}"))?;
+                // A well-behaved frontend sends nothing until Start, but
+                // any bytes that did arrive behind the Hello are carried
+                // into the connection's reassembly buffer, not dropped.
+                conns[shard] = Some((stream, rbuf[used..].to_vec()));
+                claimed += 1;
+                progress = true;
             }
-            if shard >= k {
-                return Err(format!("frontend {peer} claimed shard {shard} of {k}"));
+            if progress {
+                accept_deadline = Instant::now() + cfg.read_timeout;
+            } else if claimed < k {
+                if Instant::now() >= accept_deadline {
+                    return Err(format!(
+                        "timed out waiting for frontends: {claimed} of {k} connected \
+                         within {:.0?}",
+                        cfg.read_timeout
+                    ));
+                }
+                std::thread::sleep(IDLE_SLEEP);
             }
-            if conns[shard].is_some() {
-                return Err(format!("shard {shard} claimed twice (second claim from {peer})"));
-            }
-            let ack = Msg::HelloAck(HelloAck {
-                workers: n as u32,
-                batch: cfg.batch as u32,
-                seed: cfg.seed,
-                prior,
-                mean_demand: cfg.mean_demand,
-                mu_bar,
-                rate: cfg.rate,
-                duration: cfg.duration,
-                warmup: cfg.warmup,
-                publish_interval: cfg.publish_interval,
-                sync_interval: cfg.sync_interval,
-                sync_threshold: cfg.sync_policy.threshold,
-                fake_jobs: cfg.fake_jobs,
-                policy: cfg.policy.clone(),
-                sync_policy: cfg.sync_policy.kind.name().into(),
-                speeds: cfg.speeds.clone(),
-            });
-            wire::write_msg(&mut stream, &ack, &mut scratch)
-                .map_err(|e| format!("handshake with {peer}: {e}"))?;
-            conns[shard] = Some(stream);
-            claimed += 1;
         }
 
         // The shared side: worker pool with per-shard completion routing,
@@ -486,11 +610,11 @@ impl NetServer {
             (0..k).map(|_| Arc::new(AtomicU64::new(0f64.to_bits()))).collect();
         let start = Instant::now();
 
-        // Telemetry: one registry for the whole run (handler threads own
-        // their shard slots), an optional flight recorder (the server only
-        // sees consensus events — placements happen at the frontends), and
-        // an optional scrape listener sharing the in-process plane's
-        // endpoint surface.
+        // Telemetry: one registry for the whole run (the poll loop writes
+        // each connection's shard slot), an optional flight recorder (the
+        // server only sees consensus events — placements happen at the
+        // frontends), and an optional scrape listener sharing the
+        // in-process plane's endpoint surface.
         let obs = Arc::new(crate::obs::Registry::new(k, n));
         let flight = cfg.flight_record.as_deref().map(|_| {
             Arc::new(crate::obs::FlightRecorder::new(k, crate::obs::flight::DEFAULT_CAPACITY))
@@ -520,73 +644,54 @@ impl NetServer {
             .spawn(move || run_sync(sync_ctx))
             .map_err(|e| format!("spawn sync thread: {e}"))?;
 
-        // Release every frontend at once, then hand each connection to its
-        // handler thread.
-        for stream in conns.iter_mut().flatten() {
-            wire::write_msg(stream, &Msg::Start, &mut scratch)
-                .map_err(|e| format!("start broadcast: {e}"))?;
-        }
-        let mut handles = Vec::with_capacity(k);
+        // Build per-connection poll state; the Start release rides each
+        // connection's write buffer through the same loop that serves it.
         let mut rx_iter = shard_rxs.into_iter();
+        let mut live: Vec<Conn> = Vec::with_capacity(k);
         for (shard, slot) in conns.into_iter().enumerate() {
-            let ctx = ConnCtx {
-                stream: slot.expect("every shard claimed"),
+            let (stream, rest) = slot.expect("every shard claimed");
+            let mut conn = Conn {
+                stream,
                 shard,
-                n,
+                rbuf: rest,
+                roff: 0,
+                wbuf: Vec::with_capacity(4096),
+                woff: 0,
                 comp_rx: rx_iter.next().expect("one channel per shard"),
-                clients: workers.iter().map(|w| w.client.clone()).collect(),
-                probes: probes.clone(),
-                table: table.clone(),
-                views: views.clone(),
-                stop: stop.clone(),
-                lambda_slots: lambda_slots.clone(),
-                start,
-                obs: obs.clone(),
+                pending: VecDeque::new(),
+                clients: Some(workers.iter().map(|w| w.client.clone()).collect()),
+                disconnected: false,
+                last_activity: Instant::now(),
+                done: false,
+                stats: None,
+                dispatched: 0,
+                submit_dropped: 0,
+                sync_exports: 0,
             };
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("rosella-net-conn-{shard}"))
-                    .spawn(move || handle_conn(ctx))
-                    .map_err(|e| format!("spawn handler {shard}: {e}"))?,
-            );
+            conn.queue_frame(&Msg::Start);
+            live.push(conn);
         }
+        drop(scratch);
 
-        // Serve until the deadline, then stop the run.
-        let deadline = start + Duration::from_secs_f64(cfg.duration);
-        while Instant::now() < deadline {
-            std::thread::sleep(Duration::from_millis(2));
-        }
-        stop.store(true, Ordering::Relaxed);
-        let elapsed = start.elapsed().as_secs_f64();
-
-        // Drain: drop our ingress handles and join the workers. Each
-        // handler releases its own clones on its first post-stop tick, so
-        // the joins complete once every frontend has observed the stop.
-        for w in workers {
-            w.shutdown();
-        }
-
-        // Join every handler before propagating any failure: an early
-        // return here would detach the surviving handler threads and leave
-        // the sync thread spinning forever in a library embedder.
-        let mut joined: Vec<Result<ConnOut, String>> = Vec::with_capacity(k);
-        for h in handles {
-            joined.push(
-                h.join().unwrap_or_else(|_| Err("connection handler panicked".into())),
-            );
-        }
-
-        // Final consensus epoch over the drain-time views, then read the
-        // table: the reported estimates are the published consensus. The
-        // sync thread is stopped unconditionally — even when a handler
-        // failed — so no run leaks it.
+        // The run itself: one nonblocking poll loop over every connection
+        // — the serving thread IS the whole data plane. The sync thread is
+        // stopped unconditionally afterwards — even when the loop failed —
+        // so no run leaks it.
+        let ctx = PoolCtx {
+            n,
+            probes,
+            table: table.clone(),
+            views,
+            stop,
+            lambda_slots,
+            start,
+            obs,
+        };
+        let served = poll_loop(&cfg, &ctx, &mut live, workers, &mut tmp);
         sync_stop.store(true, Ordering::Release);
         let outcome =
             sync_handle.join().map_err(|_| "sync thread panicked".to_string())?;
-        let mut outs: Vec<ConnOut> = Vec::with_capacity(k);
-        for o in joined {
-            outs.push(o?);
-        }
+        let elapsed = served?;
         let (mu, _lambda) = table.snapshot();
         let estimates: Vec<(f64, f64)> =
             cfg.speeds.iter().zip(mu.iter()).map(|(&t, &e)| (t, e)).collect();
@@ -596,12 +701,12 @@ impl NetServer {
         let mut dispatched = 0u64;
         let mut submit_dropped = 0u64;
         let mut sync_exports = 0u64;
-        for o in outs {
-            dispatched += o.dispatched;
-            submit_dropped += o.submit_dropped;
-            sync_exports += o.sync_exports;
-            per_frontend[o.shard] =
-                o.stats.ok_or_else(|| format!("shard {} closed before Done", o.shard))?;
+        for c in live {
+            dispatched += c.dispatched;
+            submit_dropped += c.submit_dropped;
+            sync_exports += c.sync_exports;
+            per_frontend[c.shard] =
+                c.stats.ok_or_else(|| format!("shard {} closed before Done", c.shard))?;
         }
         let decisions: u64 = per_frontend.iter().map(|d| d.decisions).sum();
         let benchmarks: u64 = per_frontend.iter().map(|d| d.benchmarks).sum();
@@ -632,123 +737,204 @@ impl NetServer {
     }
 }
 
-/// One connection handler: the server side of a frontend's protocol loop.
-fn handle_conn(mut ctx: ConnCtx) -> Result<ConnOut, String> {
-    let mut scratch = Vec::with_capacity(4096);
-    let mut pending: VecDeque<WireCompletion> = VecDeque::new();
-    let mut clients = Some(std::mem::take(&mut ctx.clients));
-    let mut disconnected = false;
-    let mut mu_buf = vec![0.0; ctx.n];
-    let mut out = ConnOut {
-        shard: ctx.shard,
-        stats: None,
-        dispatched: 0,
-        submit_dropped: 0,
-        sync_exports: 0,
-    };
-    loop {
-        let msg = wire::read_msg(&mut ctx.stream, &mut scratch)
-            .map_err(|e| format!("shard {}: {e}", ctx.shard))?;
+impl Conn {
+    /// Stage one frame for delivery; the poll loop flushes it as the
+    /// socket accepts bytes, so queueing never blocks.
+    fn queue_frame(&mut self, msg: &Msg) {
+        let before = self.wbuf.len();
+        msg.encode_into(&mut self.wbuf);
+        wire::note_frames_sent(1, (self.wbuf.len() - before) as u64);
+    }
+
+    /// Push staged bytes into the socket until it would block. Returns
+    /// whether anything moved.
+    fn flush_writes(&mut self) -> Result<bool, String> {
+        use std::io::Write;
+        let mut progress = false;
+        while self.woff < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.woff..]) {
+                Ok(0) => {
+                    return Err(format!("shard {}: connection closed mid-write", self.shard))
+                }
+                Ok(sent) => {
+                    self.woff += sent;
+                    progress = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(format!("shard {}: net write: {e}", self.shard)),
+            }
+        }
+        if self.woff > 0 && self.woff == self.wbuf.len() {
+            self.wbuf.clear();
+            self.woff = 0;
+        }
+        Ok(progress)
+    }
+
+    /// Pop the next complete frame from the reassembly buffer, if one has
+    /// fully arrived.
+    fn next_frame(&mut self) -> Result<Option<Msg>, String> {
+        match try_frame(&self.rbuf[self.roff..])
+            .map_err(|e| format!("shard {}: {e}", self.shard))?
+        {
+            Some((msg, used)) => {
+                self.roff += used;
+                if self.roff == self.rbuf.len() {
+                    self.rbuf.clear();
+                    self.roff = 0;
+                }
+                Ok(Some(msg))
+            }
+            None => {
+                // Partial frame: shift it to the front so consumed bytes
+                // cannot accumulate across frames.
+                if self.roff > 0 {
+                    self.rbuf.drain(..self.roff);
+                    self.roff = 0;
+                }
+                Ok(None)
+            }
+        }
+    }
+
+    /// Enqueue one dispatch into the pool — the shared body of `Submit`
+    /// and each `SubmitBatch` item.
+    fn enqueue(
+        &mut self,
+        ctx: &PoolCtx,
+        job: u64,
+        worker: u32,
+        kind: TaskKind,
+        demand: f64,
+    ) -> Result<(), String> {
+        let w = worker as usize;
+        if w >= ctx.n {
+            return Err(format!("shard {}: submit to unknown worker {w}", self.shard));
+        }
+        // Wire floats are untrusted: an infinite demand would panic the
+        // worker thread in Duration::from_secs_f64, and even a finite huge
+        // one would wedge a worker (and the drain join) for the task's
+        // whole service time.
+        if !(demand.is_finite() && demand > 0.0 && demand <= MAX_TASK_DEMAND) {
+            return Err(format!(
+                "shard {}: demand {demand} outside (0, {MAX_TASK_DEMAND}]",
+                self.shard
+            ));
+        }
+        match self.clients.as_ref() {
+            Some(cs) => {
+                cs[w].enqueue(LiveTask {
+                    job,
+                    kind,
+                    demand: demand.max(1e-6),
+                    enqueued: Instant::now(),
+                });
+                let slot = ctx.obs.shard(self.shard);
+                if kind == TaskKind::Real {
+                    self.dispatched += 1;
+                    slot.dispatched.inc();
+                } else {
+                    slot.bench_dispatched.inc();
+                }
+            }
+            // Ingress already released at stop: drop stragglers.
+            None => self.submit_dropped += 1,
+        }
+        Ok(())
+    }
+
+    /// Serve one coordination beat (a `Tick` or a `SubmitBatch`'s
+    /// piggybacked tick): land λ̂ₛ, drain completions, stage the reply.
+    fn beat(
+        &mut self,
+        ctx: &PoolCtx,
+        epoch: u64,
+        lambda_local: f64,
+        mu_buf: &mut Vec<f64>,
+    ) -> Result<(), String> {
+        // A NaN λ̂ₛ stored here would poison the lambda_live sum served to
+        // every other frontend.
+        if !(lambda_local.is_finite() && lambda_local >= 0.0) {
+            return Err(format!(
+                "shard {}: non-finite arrival estimate {lambda_local}",
+                self.shard
+            ));
+        }
+        ctx.lambda_slots[self.shard].store(lambda_local.to_bits(), Ordering::Relaxed);
+        let stopping = ctx.stop.load(Ordering::Relaxed);
+        if stopping {
+            // Release our pool ingress so the workers can drain; every
+            // Submit this frontend sent before observing the stop flag was
+            // already processed (the socket is ordered).
+            self.clients = None;
+        }
+        let slot = ctx.obs.shard(self.shard);
+        let pending = &mut self.pending;
+        drain_completions(&self.comp_rx, &mut self.disconnected, ctx.start, |c| {
+            if c.kind == TaskKind::Real {
+                slot.completed.inc();
+                // The server only knows server-side sojourn (enqueue →
+                // completion); end-to-end response lives at the frontends.
+                slot.response_us.record((c.sojourn.max(0.0) * 1e6) as u64);
+            }
+            pending.push_back(c)
+        });
+        let take = self.pending.len().min(MAX_COMPLETIONS_PER_REPLY);
+        let completions: Vec<WireCompletion> = self.pending.drain(..take).collect();
+        let estimates = estimates_if_moved(&ctx.table, epoch, mu_buf);
+        let reply = Msg::TickReply(TickReply {
+            qlen: ctx.probes.iter().map(|q| q.load(Ordering::Relaxed) as u32).collect(),
+            lambda_live: lambda_total(&ctx.lambda_slots),
+            stop: stopping,
+            drained: stopping
+                && self.clients.is_none()
+                && self.disconnected
+                && self.pending.is_empty(),
+            estimates,
+            completions,
+        });
+        self.queue_frame(&reply);
+        Ok(())
+    }
+
+    /// Dispatch one decoded message — the server side of the frontend's
+    /// protocol loop, minus the socket I/O the poll loop owns.
+    fn handle_msg(
+        &mut self,
+        ctx: &PoolCtx,
+        msg: Msg,
+        mu_buf: &mut Vec<f64>,
+    ) -> Result<(), String> {
         match msg {
             Msg::Submit { job, worker, kind, demand } => {
-                let w = worker as usize;
-                if w >= ctx.n {
-                    return Err(format!(
-                        "shard {}: submit to unknown worker {w}",
-                        ctx.shard
-                    ));
+                ctx.obs.wire_batch.record(1);
+                self.enqueue(ctx, job, worker, kind, demand)
+            }
+            Msg::SubmitBatch { tick, items } => {
+                if !items.is_empty() {
+                    ctx.obs.wire_batch.record(items.len() as u64);
                 }
-                // Wire floats are untrusted: an infinite demand would
-                // panic the worker thread in Duration::from_secs_f64, and
-                // even a finite huge one would wedge a worker (and the
-                // drain join) for the task's whole service time.
-                if !(demand.is_finite() && demand > 0.0 && demand <= MAX_TASK_DEMAND) {
-                    return Err(format!(
-                        "shard {}: demand {demand} outside (0, {MAX_TASK_DEMAND}]",
-                        ctx.shard
-                    ));
+                for it in items {
+                    self.enqueue(ctx, it.job, it.worker, it.kind, it.demand)?;
                 }
-                match clients.as_ref() {
-                    Some(cs) => {
-                        cs[w].enqueue(LiveTask {
-                            job,
-                            kind,
-                            demand: demand.max(1e-6),
-                            enqueued: Instant::now(),
-                        });
-                        let slot = ctx.obs.shard(ctx.shard);
-                        if kind == TaskKind::Real {
-                            out.dispatched += 1;
-                            slot.dispatched.inc();
-                        } else {
-                            slot.bench_dispatched.inc();
-                        }
-                    }
-                    // Ingress already released at stop: drop stragglers.
-                    None => out.submit_dropped += 1,
+                match tick {
+                    Some((epoch, lambda_local)) => self.beat(ctx, epoch, lambda_local, mu_buf),
+                    None => Ok(()),
                 }
             }
-            Msg::Tick { epoch, lambda_local } => {
-                // A NaN λ̂ₛ stored here would poison the lambda_live sum
-                // served to every other frontend.
-                if !(lambda_local.is_finite() && lambda_local >= 0.0) {
-                    return Err(format!(
-                        "shard {}: non-finite arrival estimate {lambda_local}",
-                        ctx.shard
-                    ));
-                }
-                ctx.lambda_slots[ctx.shard].store(lambda_local.to_bits(), Ordering::Relaxed);
-                let stopping = ctx.stop.load(Ordering::Relaxed);
-                if stopping {
-                    // Release our pool ingress so the workers can drain;
-                    // every Submit this frontend sent before observing the
-                    // stop flag was already processed above (the socket is
-                    // ordered).
-                    clients = None;
-                }
-                drain_completions(&ctx.comp_rx, &mut disconnected, ctx.start, |c| {
-                    if c.kind == TaskKind::Real {
-                        let slot = ctx.obs.shard(ctx.shard);
-                        slot.completed.inc();
-                        // The server only knows server-side sojourn
-                        // (enqueue → completion); end-to-end response
-                        // lives at the frontends.
-                        slot.response_us.record((c.sojourn.max(0.0) * 1e6) as u64);
-                    }
-                    pending.push_back(c)
-                });
-                let take = pending.len().min(MAX_COMPLETIONS_PER_REPLY);
-                let completions: Vec<WireCompletion> = pending.drain(..take).collect();
-                let estimates = estimates_if_moved(&ctx.table, epoch, &mut mu_buf);
-                let reply = Msg::TickReply(TickReply {
-                    qlen: ctx
-                        .probes
-                        .iter()
-                        .map(|q| q.load(Ordering::Relaxed) as u32)
-                        .collect(),
-                    lambda_live: lambda_total(&ctx.lambda_slots),
-                    stop: stopping,
-                    drained: stopping
-                        && clients.is_none()
-                        && disconnected
-                        && pending.is_empty(),
-                    estimates,
-                    completions,
-                });
-                wire::write_msg(&mut ctx.stream, &reply, &mut scratch)
-                    .map_err(|e| format!("shard {}: {e}", ctx.shard))?;
-            }
+            Msg::Tick { epoch, lambda_local } => self.beat(ctx, epoch, lambda_local, mu_buf),
             Msg::SyncExport { shard, diverged, lambda_hat, views } => {
-                if shard as usize != ctx.shard {
+                if shard as usize != self.shard {
                     return Err(format!(
                         "shard {} exported a payload claiming shard {shard}",
-                        ctx.shard
+                        self.shard
                     ));
                 }
                 if views.len() != ctx.n {
                     return Err(format!(
                         "shard {}: exported {} views over a {}-worker pool",
-                        ctx.shard,
+                        self.shard,
                         views.len(),
                         ctx.n
                     ));
@@ -760,36 +946,137 @@ fn handle_conn(mut ctx: ConnCtx) -> Result<ConnOut, String> {
                 {
                     return Err(format!(
                         "shard {}: non-finite sync payload (λ̂ₛ {lambda_hat})",
-                        ctx.shard
+                        self.shard
                     ));
                 }
-                ctx.views.store(ctx.shard, &views, lambda_hat);
-                out.sync_exports += 1;
+                ctx.views.store(self.shard, &views, lambda_hat);
+                self.sync_exports += 1;
                 ctx.obs.sync_exports.inc();
                 if diverged {
                     ctx.views.request_merge();
                 }
+                Ok(())
             }
             Msg::Done(stats) => {
                 // The frontends make the scheduling decisions; fold their
                 // final count into the registry so a post-run scrape shows
                 // the whole plane, not just the server's half.
-                ctx.obs.shard(ctx.shard).decisions.add(stats.decisions);
-                out.stats = Some(stats);
-                wire::write_msg(&mut ctx.stream, &Msg::DoneAck, &mut scratch)
-                    .map_err(|e| format!("shard {}: {e}", ctx.shard))?;
-                break;
+                ctx.obs.shard(self.shard).decisions.add(stats.decisions);
+                self.stats = Some(stats);
+                self.queue_frame(&Msg::DoneAck);
+                self.done = true;
+                Ok(())
             }
-            other => {
-                return Err(format!(
-                    "shard {}: unexpected message tag {}",
-                    ctx.shard,
-                    other.tag()
-                ))
+            other => Err(format!(
+                "shard {}: unexpected message tag {}",
+                self.shard,
+                other.tag()
+            )),
+        }
+    }
+}
+
+/// The data plane: serve every connection from the caller's thread until
+/// all of them finish, returning the measured run elapsed. On failure the
+/// pool is still released and joined before the error propagates, so no
+/// run leaks worker threads.
+fn poll_loop(
+    cfg: &NetServerConfig,
+    ctx: &PoolCtx,
+    conns: &mut [Conn],
+    workers: Vec<worker::WorkerHandle>,
+    tmp: &mut [u8],
+) -> Result<f64, String> {
+    let mut pool = Some(workers);
+    let served = poll_loop_inner(cfg, ctx, conns, &mut pool, tmp);
+    if served.is_err() {
+        // Release every ingress before joining: the failing connections
+        // never observed the stop, and the join would otherwise wait on
+        // clients nobody will release.
+        ctx.stop.store(true, Ordering::Relaxed);
+        for c in conns.iter_mut() {
+            c.clients = None;
+        }
+        if let Some(ws) = pool.take() {
+            for w in ws {
+                w.shutdown();
             }
         }
     }
-    Ok(out)
+    served
+}
+
+fn poll_loop_inner(
+    cfg: &NetServerConfig,
+    ctx: &PoolCtx,
+    conns: &mut [Conn],
+    pool: &mut Option<Vec<worker::WorkerHandle>>,
+    tmp: &mut [u8],
+) -> Result<f64, String> {
+    let deadline = ctx.start + Duration::from_secs_f64(cfg.duration);
+    let mut mu_buf = vec![0.0; ctx.n];
+    let mut elapsed = cfg.duration;
+    let mut stopped = false;
+    loop {
+        let mut progress = false;
+        if !stopped && Instant::now() >= deadline {
+            ctx.stop.store(true, Ordering::Relaxed);
+            elapsed = ctx.start.elapsed().as_secs_f64();
+            stopped = true;
+        }
+        for c in conns.iter_mut() {
+            if c.done {
+                // Only the DoneAck can still be in flight; push it out and
+                // otherwise leave the socket alone.
+                if c.woff < c.wbuf.len() {
+                    progress |= c.flush_writes()?;
+                }
+                continue;
+            }
+            progress |= c.flush_writes()?;
+            let got = read_available(&mut c.stream, &mut c.rbuf, tmp)
+                .map_err(|e| format!("shard {}: {e}", c.shard))?;
+            if got > 0 {
+                progress = true;
+                c.last_activity = Instant::now();
+            }
+            while let Some(msg) = c.next_frame()? {
+                progress = true;
+                c.handle_msg(ctx, msg, &mut mu_buf)?;
+                if c.done {
+                    break;
+                }
+            }
+            // Flush once more so replies staged this sweep leave now
+            // instead of waiting out the idle nap.
+            progress |= c.flush_writes()?;
+        }
+        // Join the pool once every connection has released its ingress:
+        // the join blocks only for in-flight task payloads, and it must
+        // happen before any connection can report itself drained (the
+        // completion channels disconnect only when the workers exit).
+        if stopped && pool.is_some() && conns.iter().all(|c| c.done || c.clients.is_none()) {
+            for w in pool.take().expect("checked is_some") {
+                w.shutdown();
+            }
+            progress = true;
+        }
+        if conns.iter().all(|c| c.done && c.woff >= c.wbuf.len()) {
+            return Ok(elapsed);
+        }
+        if !progress {
+            let now = Instant::now();
+            for c in conns.iter() {
+                if !c.done && now.duration_since(c.last_activity) > cfg.read_timeout {
+                    return Err(format!(
+                        "shard {}: no frame within {:.0?}",
+                        c.shard, cfg.read_timeout
+                    ));
+                }
+            }
+            std::thread::sleep(IDLE_SLEEP);
+        }
+    }
 }
 
 /// CLI adapter for `rosella plane --listen`: the pool-server side of the
@@ -822,6 +1109,12 @@ pub fn server_cli(p: &crate::cli::Parsed) -> Result<String, String> {
     }
     if let Some(v) = p.parse_as("batch")? {
         cfg.batch = v;
+    }
+    if let Some(v) = p.parse_as("net-batch")? {
+        cfg.net_batch = v;
+    }
+    if let Some(v) = p.parse_as("net-flush-us")? {
+        cfg.net_flush_us = v;
     }
     if let Some(v) = p.parse_as("seed")? {
         cfg.seed = v;
@@ -876,6 +1169,9 @@ mod tests {
         assert!(bad(|c| c.rate = 0.0).is_err());
         assert!(bad(|c| c.duration = f64::INFINITY).is_err());
         assert!(bad(|c| c.batch = 0).is_err());
+        assert!(bad(|c| c.net_batch = 0).is_err());
+        assert!(bad(|c| c.net_flush_us = f64::NAN).is_err());
+        assert!(bad(|c| c.net_flush_us = -1.0).is_err());
         assert!(bad(|c| c.sync_interval = 0.0).is_err());
         assert!(bad(|c| c.policy = "nonsense".into()).is_err());
         assert!(bad(|c| c.listen.clear()).is_err());

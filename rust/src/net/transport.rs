@@ -23,7 +23,7 @@
 //! additionally bumps its cached probe for each task it submits between
 //! refreshes, so back-to-back decisions do not dogpile one worker).
 
-use super::wire::{self, Estimates, Msg, TickReply, WireCompletion};
+use super::wire::{self, Estimates, Msg, SubmitItem, TickReply, WireCompletion};
 use crate::coordinator::worker::{Completion, LiveTask, WorkerClient};
 use crate::learner::EstimateView;
 use crate::plane::{EstimateTable, SharedViews};
@@ -32,7 +32,14 @@ use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, TryRecvError};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Default submit-coalescing batch size B (tasks per `SubmitBatch` frame).
+pub const DEFAULT_NET_BATCH: usize = 64;
+
+/// Default submit-coalescing flush deadline D in microseconds: how long a
+/// buffered task may wait for company before it is flushed anyway.
+pub const DEFAULT_NET_FLUSH_US: f64 = 200.0;
 
 /// What one coordination beat reports back to the frontend loop.
 #[derive(Debug, Clone, PartialEq, Default)]
@@ -79,6 +86,93 @@ pub trait Transport {
         lambda_hat: f64,
         diverged: bool,
     ) -> Result<(), String>;
+
+    /// Flush any coalesced submissions whose deadline passed. The frontend
+    /// loop calls this from its idle wait so a buffered task never waits
+    /// longer than the flush deadline under low load. No-op for transports
+    /// that dispatch eagerly (the local plane has no frames to amortize).
+    fn flush_due(&mut self) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+/// Frontend-side submit coalescing: buffer dispatches and flush them as
+/// one [`Msg::SubmitBatch`] frame at batch size B or flush deadline D,
+/// whichever comes first. Probe `Tick`s piggyback on the flush instead of
+/// paying their own frame.
+///
+/// At B=1 the coalescer is bit-compatible with the unbatched protocol: a
+/// single pending item flushes as a plain `Submit` frame and an empty
+/// flush carrying a beat emits a plain `Tick`, so the byte stream is
+/// exactly what an unbatched frontend would have written.
+pub struct SubmitCoalescer {
+    pending: Vec<SubmitItem>,
+    /// When the oldest pending item was buffered (meaningful only while
+    /// `pending` is non-empty).
+    first_at: Instant,
+    batch: usize,
+    flush_after: Duration,
+}
+
+impl SubmitCoalescer {
+    /// A coalescer flushing at `batch` items (clamped to the frame bound)
+    /// or `flush_after` after the oldest buffered item, whichever first.
+    pub fn new(batch: usize, flush_after: Duration) -> Self {
+        let batch = batch.clamp(1, wire::MAX_BATCH_ITEMS);
+        Self {
+            pending: Vec::with_capacity(batch),
+            first_at: Instant::now(),
+            batch,
+            flush_after,
+        }
+    }
+
+    /// Buffer one dispatch; returns `true` when the batch is full and the
+    /// caller must flush.
+    pub fn push(&mut self, item: SubmitItem) -> bool {
+        if self.pending.is_empty() {
+            self.first_at = Instant::now();
+        }
+        self.pending.push(item);
+        self.pending.len() >= self.batch
+    }
+
+    /// Whether the oldest buffered item has waited past the deadline.
+    pub fn due(&self) -> bool {
+        !self.pending.is_empty() && self.first_at.elapsed() >= self.flush_after
+    }
+
+    /// Buffered dispatch count.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Whether nothing is buffered.
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Drain the buffer into the frame to send, piggybacking `tick` when
+    /// present. Returns `None` when there is nothing to say (no pending
+    /// items and no beat). Single-item tickless flushes degrade to plain
+    /// `Submit` and empty beat-only flushes to plain `Tick` — the B=1
+    /// bit-compatibility contract.
+    pub fn flush_frame(&mut self, tick: Option<(u64, f64)>) -> Option<Msg> {
+        if self.pending.is_empty() {
+            return tick.map(|(epoch, lambda_local)| Msg::Tick { epoch, lambda_local });
+        }
+        let items = std::mem::replace(&mut self.pending, Vec::with_capacity(self.batch));
+        if items.len() == 1 && tick.is_none() {
+            let it = items[0];
+            return Some(Msg::Submit {
+                job: it.job,
+                worker: it.worker,
+                kind: it.kind,
+                demand: it.demand,
+            });
+        }
+        Some(Msg::SubmitBatch { tick, items })
+    }
 }
 
 /// In-process transport: the sharded plane's own shared state, behind the
@@ -266,20 +360,37 @@ pub(crate) fn to_wire(c: &Completion, start: Instant) -> WireCompletion {
 }
 
 /// TCP transport: the wire protocol over one stream, speaking to a
-/// `rosella plane --listen` pool server.
+/// `rosella plane --listen` pool server. Submissions pass through a
+/// [`SubmitCoalescer`] so a saturated frontend amortizes the frame header
+/// and write syscall over up to B tasks; the beat flush piggybacks the
+/// `Tick` on whatever is buffered.
 pub struct TcpTransport {
     stream: TcpStream,
     scratch: Vec<u8>,
     /// This frontend's shard index (stamped into `SyncExport` frames; the
     /// server cross-checks it against the connection's claimed identity).
     shard: u32,
+    coalescer: SubmitCoalescer,
 }
 
 impl TcpTransport {
     /// Wrap a connected stream for shard `shard` (the caller performs the
-    /// handshake via [`Self::send`]/[`Self::recv`]).
+    /// handshake via [`Self::send`]/[`Self::recv`]). Starts unbatched
+    /// (B=1, bit-compatible with the eager protocol) until
+    /// [`Self::configure_batching`] installs the run's flush policy.
     pub fn new(stream: TcpStream, shard: usize) -> Self {
-        Self { stream, scratch: Vec::with_capacity(4096), shard: shard as u32 }
+        Self {
+            stream,
+            scratch: Vec::with_capacity(4096),
+            shard: shard as u32,
+            coalescer: SubmitCoalescer::new(1, Duration::ZERO),
+        }
+    }
+
+    /// Install the run's coalescing policy: flush at `batch` buffered
+    /// tasks or `flush_after` after the oldest, whichever comes first.
+    pub fn configure_batching(&mut self, batch: usize, flush_after: Duration) {
+        self.coalescer = SubmitCoalescer::new(batch, flush_after);
     }
 
     /// Write one message.
@@ -301,7 +412,14 @@ impl Transport for TcpTransport {
         kind: TaskKind,
         demand: f64,
     ) -> Result<(), String> {
-        self.send(&Msg::Submit { job, worker: worker as u32, kind, demand })
+        let full =
+            self.coalescer.push(SubmitItem { job, worker: worker as u32, kind, demand });
+        if full {
+            if let Some(msg) = self.coalescer.flush_frame(None) {
+                self.send(&msg)?;
+            }
+        }
+        Ok(())
     }
 
     fn tick(
@@ -311,7 +429,11 @@ impl Transport for TcpTransport {
         qlen: &mut [usize],
         completions: &mut Vec<WireCompletion>,
     ) -> Result<TickOutcome, String> {
-        self.send(&Msg::Tick { epoch, lambda_local })?;
+        let beat = self
+            .coalescer
+            .flush_frame(Some((epoch, lambda_local)))
+            .expect("a beat-carrying flush always produces a frame");
+        self.send(&beat)?;
         let reply = match self.recv()? {
             Msg::TickReply(r) => r,
             other => return Err(format!("expected TickReply, got {:?}", other.tag())),
@@ -345,6 +467,15 @@ impl Transport for TcpTransport {
             views: views.to_vec(),
         })
     }
+
+    fn flush_due(&mut self) -> Result<(), String> {
+        if self.coalescer.due() {
+            if let Some(msg) = self.coalescer.flush_frame(None) {
+                self.send(&msg)?;
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -352,6 +483,88 @@ mod tests {
     use super::*;
     use crate::coordinator::worker::{self, CompletionSink, PayloadMode};
     use std::time::Duration;
+
+    fn item(job: u64) -> SubmitItem {
+        SubmitItem { job, worker: 2, kind: TaskKind::Real, demand: 0.004 }
+    }
+
+    #[test]
+    fn coalescer_flushes_at_batch_size() {
+        let mut c = SubmitCoalescer::new(3, Duration::from_secs(3600));
+        assert!(!c.push(item(1)));
+        assert!(!c.push(item(2)));
+        assert!(c.push(item(3)), "third push fills the batch");
+        match c.flush_frame(None) {
+            Some(Msg::SubmitBatch { tick: None, items }) => {
+                assert_eq!(items.iter().map(|i| i.job).collect::<Vec<_>>(), vec![1, 2, 3]);
+            }
+            other => panic!("expected a tickless batch, got {other:?}"),
+        }
+        assert!(c.is_empty());
+        assert_eq!(c.flush_frame(None), None, "nothing pending, no beat: silence");
+    }
+
+    #[test]
+    fn coalescer_flushes_at_deadline() {
+        let mut c = SubmitCoalescer::new(1024, Duration::from_micros(50));
+        assert!(!c.due(), "empty buffer never becomes due");
+        c.push(item(9));
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(c.due(), "oldest item waited past the deadline");
+        // A two-item deadline flush is a batch frame.
+        c.push(item(10));
+        match c.flush_frame(None) {
+            Some(Msg::SubmitBatch { tick: None, items }) => assert_eq!(items.len(), 2),
+            other => panic!("expected a batch, got {other:?}"),
+        }
+        assert!(!c.due(), "flush rearms the deadline");
+    }
+
+    #[test]
+    fn coalescer_piggybacks_the_beat() {
+        let mut c = SubmitCoalescer::new(8, Duration::from_secs(3600));
+        c.push(item(4));
+        match c.flush_frame(Some((7, 12.5))) {
+            Some(Msg::SubmitBatch { tick: Some((7, l)), items }) => {
+                assert_eq!(l, 12.5);
+                assert_eq!(items.len(), 1);
+            }
+            other => panic!("expected a beat-carrying batch, got {other:?}"),
+        }
+        // With nothing buffered the beat degrades to a plain Tick.
+        assert_eq!(
+            c.flush_frame(Some((8, 1.0))),
+            Some(Msg::Tick { epoch: 8, lambda_local: 1.0 })
+        );
+    }
+
+    #[test]
+    fn batch_of_one_is_bit_compatible_with_the_eager_protocol() {
+        // At B=1 the coalescer's byte stream must be exactly what the
+        // unbatched transport wrote: plain Submit frames and plain Ticks.
+        let mut c = SubmitCoalescer::new(1, Duration::ZERO);
+        assert!(c.push(item(77)), "B=1 flushes on every push");
+        let flushed = c.flush_frame(None).expect("one item pending");
+        let eager = Msg::Submit { job: 77, worker: 2, kind: TaskKind::Real, demand: 0.004 };
+        assert_eq!(flushed, eager);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        flushed.encode_into(&mut a);
+        eager.encode_into(&mut b);
+        assert_eq!(a, b, "identical frames on the wire");
+        let beat = c.flush_frame(Some((3, 9.0))).expect("beat");
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        beat.encode_into(&mut a);
+        Msg::Tick { epoch: 3, lambda_local: 9.0 }.encode_into(&mut b);
+        assert_eq!(a, b, "an empty flush carrying a beat is a plain Tick");
+    }
+
+    #[test]
+    fn coalescer_clamps_batch_to_the_frame_bound() {
+        let c = SubmitCoalescer::new(usize::MAX, Duration::ZERO);
+        assert_eq!(c.batch, wire::MAX_BATCH_ITEMS);
+        let c = SubmitCoalescer::new(0, Duration::ZERO);
+        assert_eq!(c.batch, 1, "B=0 degrades to unbatched, not to a stall");
+    }
 
     #[test]
     fn local_transport_submits_probes_and_drains() {

@@ -17,6 +17,9 @@
 //!   configuration (worker speeds, rates, seeds, sync policy), and
 //!   `Start` releases all frontends at once;
 //! * `Submit` — one task dispatch (real or benchmark), fire-and-forget;
+//! * `SubmitBatch` — N coalesced dispatches in one frame, optionally
+//!   piggybacking the `Tick` beat so a saturated frontend pays one frame
+//!   header and one write syscall per batch instead of per task;
 //! * `Tick`/`TickReply` — the coordination beat: queue-length probes,
 //!   routed completions, the live λ̂ bootstrap, fresh consensus estimates
 //!   when the seqlock epoch moved, and the stop/drained run-state flags;
@@ -37,8 +40,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub const MAGIC: [u8; 4] = *b"RSNP";
 
 /// Protocol version. Bumped on any wire-incompatible change; both sides
-/// reject a mismatch at the first frame.
-pub const VERSION: u16 = 1;
+/// reject a mismatch at the first frame. v2 added the `SubmitBatch` frame
+/// and the submit-coalescing policy fields in `HelloAck`.
+pub const VERSION: u16 = 2;
 
 /// Frame header length: magic + version + tag + payload length.
 pub const HEADER_LEN: usize = 12;
@@ -57,6 +61,7 @@ const TAG_TICK_REPLY: u16 = 6;
 const TAG_SYNC_EXPORT: u16 = 7;
 const TAG_DONE: u16 = 8;
 const TAG_DONE_ACK: u16 = 9;
+const TAG_SUBMIT_BATCH: u16 = 10;
 
 /// Why a frame failed to decode.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -128,6 +133,30 @@ pub struct WireCompletion {
 /// Encoded size of one [`WireCompletion`]: u64 + u32 + u8 + 4×f64.
 const COMPLETION_LEN: usize = 8 + 4 + 1 + 4 * 8;
 
+/// One task dispatch inside a [`Msg::SubmitBatch`] frame: the same fields
+/// as a standalone `Submit`, packed back to back so a saturated frontend
+/// amortizes the frame header and the write syscall over N tasks.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SubmitItem {
+    /// Job id (shard bits + local counter; benchmark sentinel allowed).
+    pub job: u64,
+    /// Target worker.
+    pub worker: u32,
+    /// Real or benchmark.
+    pub kind: TaskKind,
+    /// Demand in unit-speed seconds.
+    pub demand: f64,
+}
+
+/// Encoded size of one [`SubmitItem`]: u64 + u32 + u8 + f64.
+const SUBMIT_ITEM_LEN: usize = 8 + 4 + 1 + 8;
+
+/// Most tasks a single `SubmitBatch` frame can carry within
+/// [`MAX_PAYLOAD`] (the worst-case 17-byte piggyback-tick prefix and the
+/// 4-byte item count subtracted first). Coalescers must flush at or below
+/// this bound.
+pub const MAX_BATCH_ITEMS: usize = (MAX_PAYLOAD - 17 - 4) / SUBMIT_ITEM_LEN;
+
 /// Encoded size of one [`EstimateView`]: f64 + u64.
 const VIEW_LEN: usize = 16;
 
@@ -140,6 +169,11 @@ pub struct HelloAck {
     pub workers: u32,
     /// Arrival ingestion batch size per frontend.
     pub batch: u32,
+    /// Submit-coalescing batch size B: tasks buffered per wire frame.
+    pub net_batch: u32,
+    /// Submit-coalescing flush deadline D in microseconds: the longest a
+    /// buffered task may wait before it is flushed regardless of fill.
+    pub net_flush_us: f64,
     /// Run seed (per-shard streams derived via `shard_seeds`).
     pub seed: u64,
     /// Prior speed estimate (mean configured speed).
@@ -236,6 +270,16 @@ pub enum Msg {
         /// Demand in unit-speed seconds.
         demand: f64,
     },
+    /// Frontend → server: N coalesced task dispatches in one frame, with
+    /// an optional piggybacked coordination beat. When `tick` is present
+    /// the server answers with a `TickReply` exactly as for a standalone
+    /// `Tick`; without it the frame is fire-and-forget like `Submit`.
+    SubmitBatch {
+        /// Piggybacked beat: (consensus epoch held, live local λ̂ₛ).
+        tick: Option<(u64, f64)>,
+        /// Coalesced dispatches, submission order preserved.
+        items: Vec<SubmitItem>,
+    },
     /// Frontend → server: one coordination beat.
     Tick {
         /// The consensus epoch the frontend currently holds.
@@ -313,6 +357,16 @@ fn put_views(out: &mut Vec<u8>, views: &[EstimateView]) {
     for v in views {
         put_f64(out, v.mu_hat);
         put_u64(out, v.samples);
+    }
+}
+
+fn put_items(out: &mut Vec<u8>, items: &[SubmitItem]) {
+    put_u32(out, items.len() as u32);
+    for it in items {
+        put_u64(out, it.job);
+        put_u32(out, it.worker);
+        put_kind(out, it.kind);
+        put_f64(out, it.demand);
     }
 }
 
@@ -415,6 +469,20 @@ impl<'a> Cur<'a> {
             .collect()
     }
 
+    fn items(&mut self) -> Result<Vec<SubmitItem>, WireError> {
+        let n = self.count(SUBMIT_ITEM_LEN)?;
+        (0..n)
+            .map(|_| {
+                Ok(SubmitItem {
+                    job: self.u64()?,
+                    worker: self.u32()?,
+                    kind: self.kind()?,
+                    demand: self.f64()?,
+                })
+            })
+            .collect()
+    }
+
     fn completions(&mut self) -> Result<Vec<WireCompletion>, WireError> {
         let n = self.count(COMPLETION_LEN)?;
         (0..n)
@@ -466,6 +534,7 @@ impl Msg {
             Msg::HelloAck(_) => TAG_HELLO_ACK,
             Msg::Start => TAG_START,
             Msg::Submit { .. } => TAG_SUBMIT,
+            Msg::SubmitBatch { .. } => TAG_SUBMIT_BATCH,
             Msg::Tick { .. } => TAG_TICK,
             Msg::TickReply(_) => TAG_TICK_REPLY,
             Msg::SyncExport { .. } => TAG_SYNC_EXPORT,
@@ -497,6 +566,8 @@ impl Msg {
             Msg::HelloAck(a) => {
                 put_u32(out, a.workers);
                 put_u32(out, a.batch);
+                put_u32(out, a.net_batch);
+                put_f64(out, a.net_flush_us);
                 put_u64(out, a.seed);
                 put_f64(out, a.prior);
                 put_f64(out, a.mean_demand);
@@ -518,6 +589,17 @@ impl Msg {
                 put_u32(out, *worker);
                 put_kind(out, *kind);
                 put_f64(out, *demand);
+            }
+            Msg::SubmitBatch { tick, items } => {
+                match tick {
+                    None => out.push(0),
+                    Some((epoch, lambda_local)) => {
+                        out.push(1);
+                        put_u64(out, *epoch);
+                        put_f64(out, *lambda_local);
+                    }
+                }
+                put_items(out, items);
             }
             Msg::Tick { epoch, lambda_local } => {
                 put_u64(out, *epoch);
@@ -583,6 +665,8 @@ impl Msg {
             TAG_HELLO_ACK => Msg::HelloAck(HelloAck {
                 workers: c.u32()?,
                 batch: c.u32()?,
+                net_batch: c.u32()?,
+                net_flush_us: c.f64()?,
                 seed: c.u64()?,
                 prior: c.f64()?,
                 mean_demand: c.f64()?,
@@ -605,6 +689,14 @@ impl Msg {
                 kind: c.kind()?,
                 demand: c.f64()?,
             },
+            TAG_SUBMIT_BATCH => {
+                let tick = match c.u8()? {
+                    0 => None,
+                    1 => Some((c.u64()?, c.f64()?)),
+                    _ => return Err(WireError::Malformed("tick flag out of range")),
+                };
+                Msg::SubmitBatch { tick, items: c.items()? }
+            }
             TAG_TICK => Msg::Tick { epoch: c.u64()?, lambda_local: c.f64()? },
             TAG_TICK_REPLY => {
                 let qlen = c.u32s()?;
@@ -687,6 +779,21 @@ pub fn frame_totals() -> WireTotals {
     }
 }
 
+/// Record `n` frames totalling `bytes` bytes written outside [`write_msg`]
+/// — the nonblocking pool server frames into its own per-connection write
+/// buffers, so it reports traffic here once a frame is fully queued.
+pub fn note_frames_sent(n: u64, bytes: u64) {
+    FRAMES_SENT.fetch_add(n, Ordering::Relaxed);
+    BYTES_SENT.fetch_add(bytes, Ordering::Relaxed);
+}
+
+/// Record `n` frames totalling `bytes` bytes read and decoded outside
+/// [`read_msg`] (the nonblocking poll loop's reassembly path).
+pub fn note_frames_received(n: u64, bytes: u64) {
+    FRAMES_RECEIVED.fetch_add(n, Ordering::Relaxed);
+    BYTES_RECEIVED.fetch_add(bytes, Ordering::Relaxed);
+}
+
 /// Encode `msg` into `scratch` and write the frame to `w`.
 pub fn write_msg<W: Write>(w: &mut W, msg: &Msg, scratch: &mut Vec<u8>) -> Result<(), String> {
     scratch.clear();
@@ -743,6 +850,8 @@ mod tests {
             Msg::HelloAck(HelloAck {
                 workers: 8,
                 batch: 64,
+                net_batch: 64,
+                net_flush_us: 200.0,
                 seed: 42,
                 prior: 0.8125,
                 mean_demand: 0.01,
@@ -766,6 +875,28 @@ mod tests {
                 demand: 0.003,
             },
             Msg::Tick { epoch: 12, lambda_local: 99.5 },
+            Msg::SubmitBatch {
+                tick: Some((12, 99.5)),
+                items: vec![
+                    SubmitItem { job: 7, worker: 3, kind: TaskKind::Real, demand: 0.003 },
+                    SubmitItem {
+                        job: (1u64 << 48) | 9,
+                        worker: 0,
+                        kind: TaskKind::Benchmark,
+                        demand: 0.001,
+                    },
+                ],
+            },
+            Msg::SubmitBatch {
+                tick: None,
+                items: vec![SubmitItem {
+                    job: 1,
+                    worker: 1,
+                    kind: TaskKind::Real,
+                    demand: 0.01,
+                }],
+            },
+            Msg::SubmitBatch { tick: Some((0, 0.0)), items: vec![] },
             Msg::TickReply(TickReply {
                 qlen: vec![0, 3, 1, 7],
                 lambda_live: 123.0,
@@ -894,6 +1025,31 @@ mod tests {
         let n = buf.len();
         buf[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
         assert_eq!(Msg::decode(&buf), Err(WireError::Truncated));
+    }
+
+    #[test]
+    fn hostile_batch_counts_cannot_drive_allocations() {
+        // A SubmitBatch claiming u32::MAX items must fail as Truncated,
+        // not attempt the allocation. The count is the last u32 written
+        // for an empty batch.
+        let mut buf = Vec::new();
+        Msg::SubmitBatch { tick: None, items: vec![] }.encode_into(&mut buf);
+        let n = buf.len();
+        buf[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(Msg::decode(&buf), Err(WireError::Truncated));
+    }
+
+    #[test]
+    fn batch_capacity_fits_the_payload_bound() {
+        // A frame at the documented item ceiling must encode within
+        // MAX_PAYLOAD even with the piggyback tick present.
+        let items =
+            vec![SubmitItem { job: 0, worker: 0, kind: TaskKind::Real, demand: 0.0 }; 4];
+        let mut buf = Vec::new();
+        Msg::SubmitBatch { tick: Some((1, 2.0)), items }.encode_into(&mut buf);
+        let per_item = SUBMIT_ITEM_LEN;
+        let overhead = buf.len() - HEADER_LEN - 4 * per_item;
+        assert!(overhead + MAX_BATCH_ITEMS * per_item <= MAX_PAYLOAD);
     }
 
     #[test]

@@ -174,6 +174,7 @@ pub fn render_into(reg: &Registry, out: &mut Expo) {
     out.histogram("rosella_queue_len", &reg.aggregate(|s| &s.queue_len), 1.0);
     out.histogram("rosella_decision_seconds", &reg.aggregate(|s| &s.decision_ns), 1e-9);
     out.histogram("rosella_response_seconds", &reg.aggregate(|s| &s.response_us), 1e-6);
+    out.histogram("rosella_wire_tasks_per_frame", &reg.wire_batch.snapshot(), 1.0);
 
     out.header("rosella_mu_hat", "gauge");
     for w in 0..reg.n_workers() {
@@ -300,6 +301,7 @@ mod tests {
         reg.set_mu_hat(&[1.0, 2.0, 0.5]);
         reg.lambda_hat.set(123.0);
         reg.sync_merges.add(4);
+        reg.wire_batch.record(64);
         let doc = render(&reg);
         assert!(is_well_formed(&doc), "malformed exposition:\n{doc}");
         for name in [
@@ -308,6 +310,7 @@ mod tests {
             "rosella_decisions_total",
             "rosella_queue_len_bucket",
             "rosella_response_seconds_sum",
+            "rosella_wire_tasks_per_frame_count",
             "rosella_mu_hat",
             "rosella_lambda_hat",
             "rosella_sync_merges_total",

@@ -254,6 +254,10 @@ pub struct Registry {
     pub publishes: Counter,
     /// Arrivals generated by the ingest layer.
     pub arrivals: Counter,
+    /// Tasks carried per submit-carrying wire frame (`Submit` records 1,
+    /// `SubmitBatch` records its item count): the direct measure of how
+    /// well frontend coalescing amortizes headers and write syscalls.
+    pub wire_batch: Log2Histogram,
 }
 
 impl Registry {
@@ -269,6 +273,7 @@ impl Registry {
             sync_exports: Counter::new(),
             publishes: Counter::new(),
             arrivals: Counter::new(),
+            wire_batch: Log2Histogram::new(),
         }
     }
 

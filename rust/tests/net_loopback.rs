@@ -29,6 +29,8 @@ fn quick_cfg(frontends: usize, sync_policy: SyncPolicyConfig) -> NetServerConfig
         duration: 1.2,
         mean_demand: 0.003,
         batch: 32,
+        net_batch: 64,
+        net_flush_us: 200.0,
         seed: 42,
         publish_interval: 0.1,
         warmup: 0.0,
@@ -42,6 +44,16 @@ fn quick_cfg(frontends: usize, sync_policy: SyncPolicyConfig) -> NetServerConfig
 }
 
 fn run_loopback(cfg: NetServerConfig) -> (NetReport, Vec<FrontendReport>) {
+    run_loopback_with(cfg, None)
+}
+
+/// Run one loopback plane, optionally overriding the server-advertised
+/// submit-coalescing batch size on every frontend (`Some(1)` forces the
+/// eager one-frame-per-task protocol).
+fn run_loopback_with(
+    cfg: NetServerConfig,
+    net_batch: Option<usize>,
+) -> (NetReport, Vec<FrontendReport>) {
     let k = cfg.frontends;
     let server = NetServer::bind(cfg).expect("bind loopback");
     let addr = server.local_addr().expect("local addr").to_string();
@@ -49,7 +61,11 @@ fn run_loopback(cfg: NetServerConfig) -> (NetReport, Vec<FrontendReport>) {
     let frontend_handles: Vec<_> = (0..k)
         .map(|shard| {
             let addr = addr.clone();
-            thread::spawn(move || run_remote_frontend(&ConnectConfig::new(addr, shard, k)))
+            thread::spawn(move || {
+                let mut ccfg = ConnectConfig::new(addr, shard, k);
+                ccfg.net_batch = net_batch;
+                run_remote_frontend(&ccfg)
+            })
         })
         .collect();
     let reports: Vec<FrontendReport> = frontend_handles
@@ -138,6 +154,44 @@ fn loopback_run_learns_speed_ordering_across_processes() {
     // Every frontend ends the run holding the published consensus.
     for r in &reports {
         assert_eq!(r.final_estimates.len(), 2);
+    }
+}
+
+#[test]
+fn batched_and_unbatched_runs_agree_on_the_physics() {
+    // The coalescing layer is a transport optimization, not a semantics
+    // change: whether dispatches ride 64-task `SubmitBatch` frames or the
+    // frontends are forced back to the eager one-frame-per-task protocol,
+    // every task completes exactly once, consensus payloads still cross
+    // the wire, and both runs learn the same speed ordering.
+    let cfg = || NetServerConfig {
+        speeds: vec![2.0, 0.25],
+        rate: 200.0,
+        duration: 1.5,
+        mean_demand: 0.004,
+        ..quick_cfg(2, SyncPolicyConfig::periodic())
+    };
+    let (batched, _) = run_loopback_with(cfg(), None);
+    let (eager, _) = run_loopback_with(cfg(), Some(1));
+    for (label, net) in [("batched", &batched), ("eager", &eager)] {
+        assert!(net.dispatched > 50, "{label}: dispatched {}", net.dispatched);
+        assert_eq!(
+            net.completed, net.dispatched,
+            "{label}: tasks lost or duplicated across the wire"
+        );
+        assert_eq!(net.submit_dropped, 0, "{label}: late submits dropped");
+        assert!(net.sync_merges >= 1, "{label}: no sync merge ran");
+        assert!(
+            net.sync_exports >= 2,
+            "{label}: only {} sync payloads crossed the wire",
+            net.sync_exports
+        );
+        let (_, e0) = net.estimates[0];
+        let (_, e1) = net.estimates[1];
+        assert!(
+            e0 > e1,
+            "{label}: consensus failed to order the 8x-apart speeds: {e0} vs {e1}"
+        );
     }
 }
 

@@ -1,0 +1,64 @@
+#!/usr/bin/env bash
+# Profile-guided optimization build flow for the rosella binary.
+#
+# Instrument with -Cprofile-generate, train on the two hot workloads
+# (the `hotpath` microbench sweep and an in-process `plane` run), merge
+# the raw profiles with llvm-profdata, rebuild with -Cprofile-use, and
+# emit BENCH_pgo.json comparing the mean decision-loop ns/op of the
+# plain vs PGO builds measured back-to-back on the same machine.
+#
+# Requires the llvm-tools component for llvm-profdata:
+#   rustup component add llvm-tools-preview
+# and jq for the comparison report. Safe to run from any directory;
+# artifacts land in rust/ (BENCH_pgo.json, target/pgo-*).
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+HOST=$(rustc -vV | sed -n 's/^host: //p')
+PROFDATA="$(rustc --print sysroot)/lib/rustlib/$HOST/bin/llvm-profdata"
+if [ ! -x "$PROFDATA" ]; then
+  echo "llvm-profdata not found at $PROFDATA" >&2
+  echo "install it with: rustup component add llvm-tools-preview" >&2
+  exit 1
+fi
+
+PROFDIR="$(pwd)/target/pgo-profiles"
+rm -rf "$PROFDIR"
+mkdir -p "$PROFDIR"
+
+# Training workloads: the decision/simulator hot paths and a full
+# in-process plane run (learners, consensus, worker pool) so the profile
+# covers both the microbench loops and the real scheduling plane.
+TRAIN_HOTPATH=(hotpath --quick --sizes 8,32 --frontends 1,2 --plane-decisions 5000)
+TRAIN_PLANE=(plane --frontends 2 --duration 1 --rate 200
+             --learners per-shard --sync-interval 0.2)
+
+echo "== 1/4: plain release build + baseline measurement =="
+cargo build --release
+./target/release/rosella "${TRAIN_HOTPATH[@]}" --json BENCH_hotpath_plain.json
+
+echo "== 2/4: instrumented build + training runs =="
+RUSTFLAGS="-Cprofile-generate=$PROFDIR" \
+  cargo build --release --target-dir target/pgo-gen
+./target/pgo-gen/release/rosella "${TRAIN_HOTPATH[@]}" --json BENCH_hotpath_train.json
+./target/pgo-gen/release/rosella "${TRAIN_PLANE[@]}"
+
+echo "== 3/4: merge profiles + PGO rebuild =="
+"$PROFDATA" merge -o "$PROFDIR/merged.profdata" "$PROFDIR"
+RUSTFLAGS="-Cprofile-use=$PROFDIR/merged.profdata" \
+  cargo build --release --target-dir target/pgo-use
+./target/pgo-use/release/rosella "${TRAIN_HOTPATH[@]}" --json BENCH_hotpath_pgo.json
+
+echo "== 4/4: compare plain vs PGO decision loop =="
+PLAIN_NS=$(jq '[.decision[].ns_per_op] | add / length' BENCH_hotpath_plain.json)
+PGO_NS=$(jq '[.decision[].ns_per_op] | add / length' BENCH_hotpath_pgo.json)
+jq -n --argjson plain "$PLAIN_NS" --argjson pgo "$PGO_NS" '{
+  bench: "pgo",
+  plain_decision_ns: $plain,
+  pgo_decision_ns: $pgo,
+  plain_decisions_per_sec: (1e9 / $plain | round),
+  pgo_decisions_per_sec: (1e9 / $pgo | round),
+  speedup: ($plain / $pgo)
+}' > BENCH_pgo.json
+cat BENCH_pgo.json
