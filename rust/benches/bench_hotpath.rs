@@ -12,7 +12,8 @@
 
 use rosella::cluster::{SpeedProfile, Volatility};
 use rosella::hotpath::{
-    alias_rebuild_bench, decision_bench, metrics_overhead_bench, sim_bench, HotpathReport,
+    alias_rebuild_bench, decision_bench, false_sharing_bench, metrics_overhead_bench, sim_bench,
+    HotpathReport,
 };
 use rosella::learner::LearnerConfig;
 use rosella::scheduler::{PolicyKind, TieRule};
@@ -54,8 +55,16 @@ fn main() {
         sims: sim_bench(&sizes, 60.0),
         planes: Vec::new(), // bench_plane owns the plane sweep
         metrics_overhead: Some(metrics_overhead_bench(256, 2_000_000, 3)),
+        topology: None, // the plane half lives in bench_plane; pair printed below
         sizes,
     };
     print!("{}", report.render());
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 8);
+    let (unpadded_ns, padded_ns) = false_sharing_bench(threads, 2_000_000, 3);
+    println!(
+        "probe false sharing ({threads} threads): packed {unpadded_ns:.1} ns  \
+         padded {padded_ns:.1} ns  ratio {:.3}x",
+        unpadded_ns / padded_ns
+    );
     full_learning_stack_bench();
 }

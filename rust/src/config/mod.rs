@@ -224,6 +224,10 @@ pub struct NetOptions {
     pub batch: Option<usize>,
     /// Submit-coalescing flush deadline D in microseconds.
     pub flush_us: Option<f64>,
+    /// Thread pinning mode (`"none"`, `"cores"`, `"sockets"`): worker
+    /// placement on the pool server, decision-thread placement on a
+    /// frontend.
+    pub pin: Option<crate::plane::PinMode>,
 }
 
 impl NetOptions {
@@ -244,6 +248,9 @@ impl NetOptions {
         if let Some(us) = self.flush_us {
             cfg.net_flush_us = us;
         }
+        if let Some(pin) = self.pin {
+            cfg.pin = pin;
+        }
     }
 
     /// Overlay these options onto a frontend connection configuration.
@@ -263,6 +270,9 @@ impl NetOptions {
         }
         if let Some(us) = self.flush_us {
             cfg.net_flush_us = Some(us);
+        }
+        if let Some(pin) = self.pin {
+            cfg.pin = pin;
         }
     }
 }
@@ -338,6 +348,13 @@ pub fn net_from_json(v: &Json) -> Result<NetOptions, ConfigError> {
             Some(us)
         }
     };
+    let pin = match v.get("pin") {
+        None => None,
+        Some(x) => {
+            let s = x.as_str().ok_or_else(|| bad("'net.pin' must be a string"))?;
+            Some(crate::plane::PinMode::parse(s).map_err(|e| bad(format!("'net.pin': {e}")))?)
+        }
+    };
     let opts = NetOptions {
         listen: net_addr(v, "listen")?,
         frontends,
@@ -346,6 +363,7 @@ pub fn net_from_json(v: &Json) -> Result<NetOptions, ConfigError> {
         read_timeout,
         batch,
         flush_us,
+        pin,
     };
     if let (Some((_, k)), Some(f)) = (opts.shard, opts.frontends) {
         if k != f {
@@ -550,7 +568,8 @@ mod tests {
         let opts = net_options_from_str(
             r#"{"net": {"listen": "127.0.0.1:7411", "frontends": 2,
                         "connect": "127.0.0.1:7411", "shard": "1/2",
-                        "read_timeout": 10.0, "batch": 128, "flush_us": 50.0}}"#,
+                        "read_timeout": 10.0, "batch": 128, "flush_us": 50.0,
+                        "pin": "sockets"}}"#,
         )
         .unwrap();
         assert_eq!(opts.listen.as_deref(), Some("127.0.0.1:7411"));
@@ -559,6 +578,7 @@ mod tests {
         assert_eq!(opts.read_timeout, Some(10.0));
         assert_eq!(opts.batch, Some(128));
         assert_eq!(opts.flush_us, Some(50.0));
+        assert_eq!(opts.pin, Some(crate::plane::PinMode::Sockets));
         // The bare block (no "net" wrapper) parses identically.
         let bare = net_options_from_str(r#"{"listen": "0.0.0.0:9000"}"#).unwrap();
         assert_eq!(bare.listen.as_deref(), Some("0.0.0.0:9000"));
@@ -581,6 +601,8 @@ mod tests {
         assert!(net_options_from_str(r#"{"net": {"batch": "many"}}"#).is_err());
         assert!(net_options_from_str(r#"{"net": {"flush_us": -1.0}}"#).is_err());
         assert!(net_options_from_str(r#"{"net": {"flush_us": "soon"}}"#).is_err());
+        assert!(net_options_from_str(r#"{"net": {"pin": "banana"}}"#).is_err());
+        assert!(net_options_from_str(r#"{"net": {"pin": 3}}"#).is_err());
         // Cross-field: the shard's k must agree with the frontend count.
         assert!(
             net_options_from_str(r#"{"net": {"frontends": 4, "shard": "0/2"}}"#).is_err()
@@ -592,7 +614,8 @@ mod tests {
         let opts = net_options_from_str(
             r#"{"net": {"listen": "127.0.0.1:7500", "frontends": 3,
                         "connect": "127.0.0.1:7500", "shard": "2/3",
-                        "read_timeout": 5.0, "batch": 256, "flush_us": 75.0}}"#,
+                        "read_timeout": 5.0, "batch": 256, "flush_us": 75.0,
+                        "pin": "cores"}}"#,
         )
         .unwrap();
         let mut server = crate::net::NetServerConfig::default();
@@ -602,6 +625,7 @@ mod tests {
         assert_eq!(server.read_timeout, std::time::Duration::from_secs_f64(5.0));
         assert_eq!(server.net_batch, 256);
         assert_eq!(server.net_flush_us, 75.0);
+        assert_eq!(server.pin, crate::plane::PinMode::Cores);
         let mut fe = crate::net::ConnectConfig::new("x:1", 0, 1);
         opts.apply_frontend(&mut fe);
         assert_eq!(fe.addr, "127.0.0.1:7500");
@@ -609,6 +633,7 @@ mod tests {
         assert_eq!(fe.read_timeout, std::time::Duration::from_secs_f64(5.0));
         assert_eq!(fe.net_batch, Some(256));
         assert_eq!(fe.net_flush_us, Some(75.0));
+        assert_eq!(fe.pin, crate::plane::PinMode::Cores);
     }
 
     #[test]

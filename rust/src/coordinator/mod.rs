@@ -180,7 +180,7 @@ pub fn serve(cfg: LiveConfig) -> Result<LiveReport, String> {
     let mut benchmarks: u64 = 0;
     // Per-worker atomic probes, shared with the worker threads: a decision
     // reads only the workers it probes — no O(n) snapshot per arrival.
-    let qlen: Vec<Arc<AtomicUsize>> =
+    let qlen: Vec<Arc<crate::plane::CachePadded<AtomicUsize>>> =
         workers.iter().map(|w| w.client.qlen.clone()).collect();
     // Reused single-task request spec: no allocation per arrival.
     let mut job = JobSpec::single(cfg.mean_demand);

@@ -14,6 +14,7 @@
 //! queue-length probe. Enqueue is an mpsc send plus one relaxed
 //! `fetch_add` — no locks on the dispatch path.
 
+use crate::plane::CachePadded;
 use crate::runtime::PayloadRunner;
 use crate::types::TaskKind;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -109,8 +110,10 @@ impl From<Sender<Completion>> for CompletionSink {
 pub struct WorkerClient {
     pub real_tx: Sender<LiveTask>,
     pub bench_tx: Sender<LiveTask>,
-    /// Real entries queued or in service (the probe the policy sees).
-    pub qlen: Arc<AtomicUsize>,
+    /// Real entries queued or in service (the probe the policy sees),
+    /// padded to its own cache line so one worker's enqueue/dequeue
+    /// traffic never invalidates a neighboring worker's probe.
+    pub qlen: Arc<CachePadded<AtomicUsize>>,
     /// Total real tasks this worker has completed (conservation checks).
     pub completed_real: Arc<AtomicU64>,
 }
@@ -159,16 +162,34 @@ pub fn spawn(
     mode: PayloadMode,
     completions: impl Into<CompletionSink>,
 ) -> WorkerHandle {
+    spawn_pinned(id, speed, mode, completions, None)
+}
+
+/// [`spawn`], optionally pinning the worker thread to a CPU. Pinning is
+/// best-effort: a denied `sched_setaffinity` (containers, non-Linux) just
+/// leaves the thread unpinned.
+pub fn spawn_pinned(
+    id: usize,
+    speed: f64,
+    mode: PayloadMode,
+    completions: impl Into<CompletionSink>,
+    cpu: Option<usize>,
+) -> WorkerHandle {
     let completions = completions.into();
     let (real_tx, real_rx) = std::sync::mpsc::channel::<LiveTask>();
     let (bench_tx, bench_rx) = std::sync::mpsc::channel::<LiveTask>();
-    let qlen = Arc::new(AtomicUsize::new(0));
+    let qlen = Arc::new(CachePadded::new(AtomicUsize::new(0)));
     let completed_real = Arc::new(AtomicU64::new(0));
     let q = qlen.clone();
     let done = completed_real.clone();
     let join = std::thread::Builder::new()
         .name(format!("rosella-worker-{id}"))
-        .spawn(move || worker_loop(id, speed, mode, real_rx, bench_rx, q, done, completions))
+        .spawn(move || {
+            if let Some(cpu) = cpu {
+                let _ = crate::plane::pin_current_thread(cpu);
+            }
+            worker_loop(id, speed, mode, real_rx, bench_rx, q, done, completions)
+        })
         .expect("spawn worker thread");
     WorkerHandle { client: WorkerClient { real_tx, bench_tx, qlen, completed_real }, join }
 }
@@ -180,7 +201,7 @@ fn worker_loop(
     mode: PayloadMode,
     real_rx: Receiver<LiveTask>,
     bench_rx: Receiver<LiveTask>,
-    qlen: Arc<AtomicUsize>,
+    qlen: Arc<CachePadded<AtomicUsize>>,
     completed_real: Arc<AtomicU64>,
     completions: CompletionSink,
 ) {

@@ -25,13 +25,15 @@
 use crate::cluster::{SpeedProfile, Volatility};
 use crate::config::Json;
 use crate::learner::LearnerConfig;
-use crate::plane::{run_plane, DispatchMode, LearnerMode, PlaneConfig};
+use crate::plane::{run_plane, CachePadded, DispatchMode, LearnerMode, PinMode, PlaneConfig};
 use crate::scheduler::{PolicyKind, TieRule};
 use crate::simulator::{run as sim_run, SimConfig};
 use crate::stats::{AliasTable, Rng};
 use crate::types::{JobPlacement, JobSpec, LocalView};
 use crate::workload::WorkloadKind;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Barrier;
 use std::time::Instant;
 
 /// Run `f(reps)` once for warmup and `runs` measured times; return the best
@@ -275,9 +277,7 @@ pub fn plane_bench(
     decisions_per_shard: u64,
     learners: LearnerMode,
 ) -> Result<Vec<PlanePoint>, String> {
-    let base_speeds = [2.0, 1.0, 1.0, 1.0, 0.5, 0.5, 0.25, 0.25];
-    let speeds: Vec<f64> =
-        (0..workers.max(1)).map(|i| base_speeds[i % base_speeds.len()]).collect();
+    let speeds = bench_speeds(workers);
     let mut out = Vec::new();
     for &k in frontend_counts {
         let cfg = PlaneConfig {
@@ -300,6 +300,142 @@ pub fn plane_bench(
     Ok(out)
 }
 
+/// The heterogeneous speed mix every plane-throughput bench runs on.
+fn bench_speeds(workers: usize) -> Vec<f64> {
+    let base = [2.0, 1.0, 1.0, 1.0, 0.5, 0.5, 0.25, 0.25];
+    (0..workers.max(1)).map(|i| base[i % base.len()]).collect()
+}
+
+/// The topology section of `BENCH_hotpath.json`: false-sharing cost of the
+/// per-worker probe slots (padded vs packed) and decide-only plane
+/// throughput pinned vs unpinned. Both pairs run back to back in one
+/// process, so the tracked quantities are within-run ratios, not absolute
+/// machine-dependent numbers.
+#[derive(Debug, Clone)]
+pub struct TopologyPoint {
+    /// Contending threads in the probe-hammer loops.
+    pub threads: usize,
+    /// ns per `fetch_add` with every slot packed into one contiguous
+    /// array (neighbouring slots share cache lines).
+    pub unpadded_ns: f64,
+    /// ns per `fetch_add` with each slot in its own [`CachePadded`] line.
+    pub padded_ns: f64,
+    /// Decide-only plane throughput with `--pin none` (today's default).
+    pub unpinned_tasks_per_sec: f64,
+    /// Decide-only plane throughput with `--pin cores`.
+    pub pinned_tasks_per_sec: f64,
+}
+
+impl TopologyPoint {
+    /// Within-run unpadded/padded ratio: ≥ 1.0 means padding pays (the CI
+    /// gate holds it there — padding must never make probes slower).
+    pub fn padded_ratio(&self) -> f64 {
+        if self.padded_ns > 0.0 {
+            self.unpadded_ns / self.padded_ns
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Within-run pinned/unpinned throughput ratio (the CI gate holds it
+    /// ≥ 0.9 — pinning must not cost the plane real throughput even on
+    /// runners where it cannot help).
+    pub fn pinned_ratio(&self) -> f64 {
+        if self.unpinned_tasks_per_sec > 0.0 {
+            self.pinned_tasks_per_sec / self.unpinned_tasks_per_sec
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// One contended-probe round: each thread hammers `fetch_add` on its own
+/// slot behind a barrier, so the only cross-thread traffic is whatever the
+/// slot *layout* forces. Returns the slowest thread's ns/op — false
+/// sharing shows up as every thread dragging, so the max is the honest
+/// number.
+fn hammer_ns(slots: &[&AtomicUsize], reps: u64) -> f64 {
+    let barrier = Barrier::new(slots.len());
+    let mut worst = 0.0f64;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = slots
+            .iter()
+            .map(|&slot| {
+                let barrier = &barrier;
+                s.spawn(move || {
+                    barrier.wait();
+                    let start = Instant::now();
+                    for _ in 0..reps {
+                        slot.fetch_add(1, Ordering::Relaxed);
+                    }
+                    start.elapsed().as_nanos() as f64 / reps as f64
+                })
+            })
+            .collect();
+        for h in handles {
+            worst = worst.max(h.join().expect("hammer thread panicked"));
+        }
+    });
+    worst
+}
+
+/// Measure the probe-slot layouts against each other: `threads` writers,
+/// each owning one slot, packed vs cache-line padded. Best-of `runs` per
+/// layout (same filter [`best_ns_per_op`] applies to the serial benches).
+pub fn false_sharing_bench(threads: usize, reps: u64, runs: usize) -> (f64, f64) {
+    let threads = threads.max(2);
+    let unpadded: Vec<AtomicUsize> = (0..threads).map(|_| AtomicUsize::new(0)).collect();
+    let padded: Vec<CachePadded<AtomicUsize>> =
+        (0..threads).map(|_| CachePadded::new(AtomicUsize::new(0))).collect();
+    let unpadded_refs: Vec<&AtomicUsize> = unpadded.iter().collect();
+    let padded_refs: Vec<&AtomicUsize> = padded.iter().map(|p| &**p).collect();
+    hammer_ns(&unpadded_refs, reps / 10 + 1); // warmup
+    let mut unpadded_ns = f64::INFINITY;
+    let mut padded_ns = f64::INFINITY;
+    for _ in 0..runs.max(1) {
+        unpadded_ns = unpadded_ns.min(hammer_ns(&unpadded_refs, reps));
+        padded_ns = padded_ns.min(hammer_ns(&padded_refs, reps));
+    }
+    (unpadded_ns, padded_ns)
+}
+
+/// The full topology section: the false-sharing pair plus two decide-only
+/// plane runs (pin none, then pin cores) on the same budget.
+pub fn topology_bench(
+    workers: usize,
+    decisions_per_shard: u64,
+    learners: LearnerMode,
+    reps: u64,
+    runs: usize,
+) -> Result<TopologyPoint, String> {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 8);
+    let (unpadded_ns, padded_ns) = false_sharing_bench(threads, reps, runs);
+    let speeds = bench_speeds(workers);
+    let mut throughput = |pin: PinMode| -> Result<f64, String> {
+        let cfg = PlaneConfig {
+            speeds: speeds.clone(),
+            frontends: 2,
+            mode: DispatchMode::DecideOnly,
+            max_decisions: Some(decisions_per_shard),
+            fake_jobs: false,
+            duration: 60.0, // budget, not deadline: shards stop at max_decisions
+            learners,
+            pin,
+            ..PlaneConfig::default()
+        };
+        Ok(run_plane(cfg)?.decisions_per_sec)
+    };
+    let unpinned_tasks_per_sec = throughput(PinMode::None)?;
+    let pinned_tasks_per_sec = throughput(PinMode::Cores)?;
+    Ok(TopologyPoint {
+        threads,
+        unpadded_ns,
+        padded_ns,
+        unpinned_tasks_per_sec,
+        pinned_tasks_per_sec,
+    })
+}
+
 /// Everything one `rosella hotpath` invocation measured.
 #[derive(Debug, Clone)]
 pub struct HotpathReport {
@@ -309,6 +445,7 @@ pub struct HotpathReport {
     pub sims: Vec<SimPoint>,
     pub planes: Vec<PlanePoint>,
     pub metrics_overhead: Option<OverheadPoint>,
+    pub topology: Option<TopologyPoint>,
 }
 
 impl HotpathReport {
@@ -397,6 +534,24 @@ impl HotpathReport {
                 o.ratio()
             ));
         }
+        if let Some(t) = &self.topology {
+            out.push_str("-- topology: false sharing & pinning --\n");
+            out.push_str(&format!(
+                "probe hammer ({} threads): packed {:>8.1} ns  padded {:>8.1} ns  \
+                 ratio {:.3}x\n",
+                t.threads,
+                t.unpadded_ns,
+                t.padded_ns,
+                t.padded_ratio()
+            ));
+            out.push_str(&format!(
+                "plane decide-only: unpinned {:>10.0} tasks/s  pinned {:>10.0} tasks/s  \
+                 ratio {:.3}x\n",
+                t.unpinned_tasks_per_sec,
+                t.pinned_tasks_per_sec,
+                t.pinned_ratio()
+            ));
+        }
         out
     }
 
@@ -475,6 +630,18 @@ impl HotpathReport {
             m.insert("ratio".into(), Json::Num((o.ratio() * 1000.0).round() / 1000.0));
             top.insert("metrics_overhead".into(), Json::Obj(m));
         }
+        if let Some(t) = &self.topology {
+            let mut m = BTreeMap::new();
+            m.insert("threads".into(), Json::Num(t.threads as f64));
+            m.insert("unpadded_ns".into(), Json::Num((t.unpadded_ns * 10.0).round() / 10.0));
+            m.insert("padded_ns".into(), Json::Num((t.padded_ns * 10.0).round() / 10.0));
+            let round3 = |x: f64| (x * 1000.0).round() / 1000.0;
+            m.insert("padded_ratio".into(), Json::Num(round3(t.padded_ratio())));
+            m.insert("unpinned_tasks_per_sec".into(), Json::Num(t.unpinned_tasks_per_sec.round()));
+            m.insert("pinned_tasks_per_sec".into(), Json::Num(t.pinned_tasks_per_sec.round()));
+            m.insert("pinned_ratio".into(), Json::Num(round3(t.pinned_ratio())));
+            top.insert("topology".into(), Json::Obj(m));
+        }
         Json::Obj(top)
     }
 }
@@ -518,6 +685,11 @@ pub fn hotpath_cli(p: &crate::cli::Parsed) -> Result<String, String> {
             reps,
             runs,
         )),
+        topology: if p.flag("no-plane") {
+            None
+        } else {
+            Some(topology_bench(workers, plane_decisions, learners, reps, runs)?)
+        },
         sizes,
     };
 
@@ -542,6 +714,7 @@ mod tests {
             sims: sim_bench(&[4], 2.0),
             planes: Vec::new(),
             metrics_overhead: Some(metrics_overhead_bench(8, 2_000, 1)),
+            topology: None,
             sizes,
         }
     }
@@ -597,6 +770,49 @@ mod tests {
                 "missing/invalid {key}"
             );
         }
+    }
+
+    #[test]
+    fn false_sharing_bench_measures_both_layouts() {
+        let (unpadded_ns, padded_ns) = false_sharing_bench(2, 2_000, 1);
+        assert!(unpadded_ns > 0.0 && unpadded_ns.is_finite());
+        assert!(padded_ns > 0.0 && padded_ns.is_finite());
+    }
+
+    #[test]
+    fn topology_bench_produces_finite_ratios() {
+        let t = topology_bench(4, 500, LearnerMode::Shared, 2_000, 1).expect("topology bench");
+        assert!(t.threads >= 2);
+        assert!(t.padded_ratio() > 0.0 && t.padded_ratio().is_finite());
+        assert!(t.pinned_ratio() > 0.0 && t.pinned_ratio().is_finite());
+        assert!(t.unpinned_tasks_per_sec > 0.0);
+        assert!(t.pinned_tasks_per_sec > 0.0);
+    }
+
+    #[test]
+    fn topology_lands_in_the_tracked_json() {
+        let mut r = tiny_report();
+        r.topology = Some(TopologyPoint {
+            threads: 4,
+            unpadded_ns: 41.7,
+            padded_ns: 12.3,
+            unpinned_tasks_per_sec: 900_000.0,
+            pinned_tasks_per_sec: 910_000.0,
+        });
+        let doc = crate::config::to_string(&r.to_json("test"));
+        let back = crate::config::parse(&doc).expect("hotpath json must parse");
+        let t = back.get("topology").expect("topology key");
+        for key in ["threads", "unpadded_ns", "padded_ns", "padded_ratio", "pinned_ratio"] {
+            assert!(
+                t.get(key).and_then(|j| j.as_f64()).is_some_and(|v| v > 0.0),
+                "missing/invalid {key}"
+            );
+        }
+        // The ratios are the CI-gated quantities; spot-check the rounding.
+        let padded = t.get("padded_ratio").and_then(|j| j.as_f64()).unwrap();
+        assert!((padded - 3.39).abs() < 0.01, "padded_ratio {padded}");
+        let pinned = t.get("pinned_ratio").and_then(|j| j.as_f64()).unwrap();
+        assert!((pinned - 1.011).abs() < 1e-9, "pinned_ratio {pinned}");
     }
 
     #[test]

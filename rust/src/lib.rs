@@ -167,6 +167,37 @@
 //! which is what keeps `tests/determinism.rs` bit-exact with all of it
 //! compiled in.
 //!
+//! ## Topology & pinning
+//!
+//! The plane's shared state is deliberately tiny — per-worker queue
+//! probes, a seqlock estimate table, per-scheduler consensus slots — which
+//! makes its layout, not its volume, the scaling hazard: adjacent atomics
+//! on one cache line turn independent shards into a coherence convoy.
+//! [`plane::topo`] closes that gap dependency-free (std only):
+//!
+//! * **false-sharing-free layout** — every cross-thread hot word sits in a
+//!   [`plane::CachePadded`] (64-byte aligned) slot: worker queue probes,
+//!   the estimate table's seqlock word and λ̂ cell, and each scheduler's
+//!   [`plane::SharedViews`] dirty flag and payload slot. A debug
+//!   assertion pins the alignment; `hotpath`'s false-sharing bench
+//!   measures packed-vs-padded ns/op and CI gates `padded_ratio >= 1.0`.
+//! * **CPU topology discovery** ([`plane::CpuTopology`]) — parsed from
+//!   `/sys/devices/system/cpu/*/topology/` on Linux (fixture-tested
+//!   against checked-in sysfs trees, hostile inputs included), with a
+//!   flat single-package fallback everywhere else.
+//! * **thread pinning** (`--pin {none,cores,sockets}` on `plane` and
+//!   `frontend`) — a [`plane::PlacementPlan`] spreads shards across
+//!   packages and co-locates each shard with workers on its package;
+//!   threads pin via a raw `sched_setaffinity` syscall (no libc crate),
+//!   best-effort: a denied syscall degrades to the unpinned layout, never
+//!   an error. `none` and `cores` are bit-identical to the unpinned
+//!   decision stream (pinned by `tests/determinism.rs`); `sockets`
+//!   additionally partitions workers per package so power-of-two probing
+//!   prefers same-socket workers, spilling cross-socket only when the
+//!   local minimum queue exceeds [`plane::DEFAULT_SPILL_THRESHOLD`]
+//!   (spills counted in `rosella_cross_socket_decisions_total`; realized
+//!   shard placement in the `rosella_shard_cpu` gauge, −1 when unpinned).
+//!
 //! ## Quick start
 //!
 //! ```

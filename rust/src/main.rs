@@ -268,6 +268,7 @@ fn cmd_plane(rest: &[String]) -> i32 {
         .opt("net-config", None, "JSON file with a `net` block (overrides net flags)")
         .opt("metrics-listen", None, "serve Prometheus /metrics on this host:port for the run")
         .opt("flight-record", None, "dump the decision flight recorder as JSONL to this path")
+        .opt("pin", Some("none"), "thread pinning: none | cores | sockets (NUMA-aware placement)")
         .flag("decide-only", "measure raw decision throughput without dispatching")
         .flag("no-fake-jobs", "disable the benchmark-job dispatcher");
     let p = match spec.parse(rest) {
@@ -304,7 +305,8 @@ fn cmd_frontend(rest: &[String]) -> i32 {
         .opt("net-batch", None, "override the server's submit-coalescing batch size B")
         .opt("net-flush-us", None, "override the server's flush deadline D in µs")
         .opt("config", None, "JSON file with a `net` block (overrides flags)")
-        .opt("flight-record", None, "dump this frontend's placement flight record (JSONL)");
+        .opt("flight-record", None, "dump this frontend's placement flight record (JSONL)")
+        .opt("pin", None, "pin this frontend's decision thread: none | cores | sockets");
     let p = match spec.parse(rest) {
         Ok(p) => p,
         Err(e) => {

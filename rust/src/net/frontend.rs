@@ -25,7 +25,10 @@ use crate::learner::{
     EstimateView, FakeJobDispatcher, PerfLearner, SyncKind, SyncPolicyConfig,
 };
 use crate::metrics::ResponseRecorder;
-use crate::plane::{encode_job, shard_seeds, ArrivalBatcher, FrontendCore, BENCH_LOCAL_JOB};
+use crate::plane::{
+    encode_job, pin_current_thread, shard_seeds, ArrivalBatcher, CpuTopology, FrontendCore,
+    PinMode, PlacementPlan, BENCH_LOCAL_JOB,
+};
 use crate::scheduler::PolicyKind;
 use crate::stats::{Exponential, Rng};
 use crate::types::{JobSpec, TaskKind};
@@ -479,6 +482,10 @@ pub struct ConnectConfig {
     pub net_batch: Option<usize>,
     /// Override the server-advertised flush deadline D (microseconds).
     pub net_flush_us: Option<f64>,
+    /// Pin this frontend's decision thread to a CPU chosen from the local
+    /// topology by shard index (best-effort; `None` mode leaves placement
+    /// to the OS).
+    pub pin: PinMode,
 }
 
 impl ConnectConfig {
@@ -494,6 +501,7 @@ impl ConnectConfig {
             flight_record: None,
             net_batch: None,
             net_flush_us: None,
+            pin: PinMode::None,
         }
     }
 }
@@ -521,6 +529,16 @@ pub fn run_remote_frontend(cfg: &ConnectConfig) -> Result<FrontendReport, String
             "shard {}/{} is not a valid shard spec",
             cfg.shard, cfg.shards
         ));
+    }
+    // Best-effort pin before any scheduling work: each remote frontend is
+    // one shard, so it claims the shard slot its global index maps to on
+    // this machine's topology (the pool's workers live in the server
+    // process and are placed there).
+    if cfg.pin != PinMode::None {
+        let plan = PlacementPlan::new(cfg.pin, &CpuTopology::detect(), cfg.shards, 0);
+        if let Some(cpu) = plan.shard_cpus[cfg.shard] {
+            pin_current_thread(cpu);
+        }
     }
     let stream = connect_with_retry(&cfg.addr, cfg.connect_timeout)?;
     stream.set_nodelay(true).map_err(|e| format!("set nodelay: {e}"))?;
@@ -618,6 +636,9 @@ pub fn frontend_cli(p: &crate::cli::Parsed) -> Result<String, String> {
         cfg.net_flush_us = Some(us);
     }
     cfg.flight_record = p.get("flight-record").map(str::to_string);
+    if let Some(mode) = p.get("pin") {
+        cfg.pin = PinMode::parse(mode)?;
+    }
     let report = run_remote_frontend(&cfg)?;
     Ok(report.render())
 }

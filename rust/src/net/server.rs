@@ -32,7 +32,7 @@ use crate::config::Json;
 use crate::coordinator::worker::{self, Completion, CompletionSink, LiveTask, PayloadMode};
 use crate::learner::{SyncPolicy, SyncPolicyConfig};
 use crate::plane::consensus::{run_sync, SyncRun};
-use crate::plane::{EstimateTable, SharedViews};
+use crate::plane::{CachePadded, CpuTopology, EstimateTable, PinMode, PlacementPlan, SharedViews};
 use crate::scheduler::PolicyKind;
 use crate::types::TaskKind;
 use std::collections::{BTreeMap, VecDeque};
@@ -100,6 +100,10 @@ pub struct NetServerConfig {
     /// Dump the decision flight recorder as JSONL to this path at drain
     /// (`None` disables recording entirely).
     pub flight_record: Option<String>,
+    /// Worker-thread pinning: `None` leaves placement to the OS, `Cores`
+    /// and `Sockets` pin each worker thread to a discovered CPU
+    /// (best-effort; a denied affinity syscall degrades to unpinned).
+    pub pin: PinMode,
 }
 
 impl Default for NetServerConfig {
@@ -124,6 +128,7 @@ impl Default for NetServerConfig {
             read_timeout: Duration::from_secs(30),
             metrics_listen: None,
             flight_record: None,
+            pin: PinMode::None,
         }
     }
 }
@@ -353,7 +358,7 @@ const IDLE_SLEEP: Duration = Duration::from_micros(500);
 /// the poll loop, one instance per run.
 struct PoolCtx {
     n: usize,
-    probes: Vec<Arc<AtomicUsize>>,
+    probes: Vec<Arc<CachePadded<AtomicUsize>>>,
     table: Arc<EstimateTable>,
     views: Arc<SharedViews>,
     stop: Arc<AtomicBool>,
@@ -591,14 +596,22 @@ impl NetServer {
             shard_rxs.push(rx);
         }
         let sink = CompletionSink::sharded(txs);
+        // Worker placement: the pool server hosts no shard threads (those
+        // live at the remote frontends), so the plan covers workers only.
+        let plan = match cfg.pin {
+            PinMode::None => PlacementPlan::unpinned(0, n),
+            mode => PlacementPlan::new(mode, &CpuTopology::detect(), 0, n),
+        };
         let workers: Vec<worker::WorkerHandle> = cfg
             .speeds
             .iter()
             .enumerate()
-            .map(|(i, &s)| worker::spawn(i, s, PayloadMode::Sleep, sink.clone()))
+            .map(|(i, &s)| {
+                worker::spawn_pinned(i, s, PayloadMode::Sleep, sink.clone(), plan.worker_cpus[i])
+            })
             .collect();
         drop(sink);
-        let probes: Vec<Arc<AtomicUsize>> =
+        let probes: Vec<Arc<CachePadded<AtomicUsize>>> =
             workers.iter().map(|w| w.client.qlen.clone()).collect();
         let completed_counters: Vec<Arc<AtomicU64>> =
             workers.iter().map(|w| w.client.completed_real.clone()).collect();
@@ -1132,6 +1145,7 @@ pub fn server_cli(p: &crate::cli::Parsed) -> Result<String, String> {
     cfg.fake_jobs = !p.flag("no-fake-jobs");
     cfg.metrics_listen = p.get("metrics-listen").map(str::to_string);
     cfg.flight_record = p.get("flight-record").map(str::to_string);
+    cfg.pin = PinMode::parse(p.get("pin").unwrap_or("none"))?;
     if let Some(path) = p.get("net-config") {
         let opts = crate::config::net_options_from_file(path).map_err(|e| e.to_string())?;
         opts.apply_server(&mut cfg);

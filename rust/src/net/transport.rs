@@ -26,7 +26,7 @@
 use super::wire::{self, Estimates, Msg, SubmitItem, TickReply, WireCompletion};
 use crate::coordinator::worker::{Completion, LiveTask, WorkerClient};
 use crate::learner::EstimateView;
-use crate::plane::{EstimateTable, SharedViews};
+use crate::plane::{CachePadded, EstimateTable, SharedViews};
 use crate::types::TaskKind;
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -182,7 +182,7 @@ pub struct LocalTransport {
     /// the pool can drain and exit.
     workers: Vec<WorkerClient>,
     /// Per-worker atomic queue probes (outlive the ingress handles).
-    probes: Vec<Arc<AtomicUsize>>,
+    probes: Vec<Arc<CachePadded<AtomicUsize>>>,
     /// This shard's completion channel.
     comp_rx: Receiver<Completion>,
     /// Seqlock-published consensus estimates.

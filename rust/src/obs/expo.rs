@@ -170,6 +170,20 @@ pub fn render_into(reg: &Registry, out: &mut Expo) {
             s.bench_dispatched.get() as f64,
         );
     }
+    // Topology surface, rendered in every config (−1 = unpinned shard) so
+    // dashboards keep their series across `--pin` modes.
+    out.header("rosella_shard_cpu", "gauge");
+    for (i, s) in reg.shards().iter().enumerate() {
+        out.sample("rosella_shard_cpu", &[("shard", &shard_labels[i])], s.shard_cpu.get());
+    }
+    out.header("rosella_cross_socket_decisions_total", "counter");
+    for (i, s) in reg.shards().iter().enumerate() {
+        out.sample(
+            "rosella_cross_socket_decisions_total",
+            &[("shard", &shard_labels[i])],
+            s.cross_socket.get() as f64,
+        );
+    }
 
     out.histogram("rosella_queue_len", &reg.aggregate(|s| &s.queue_len), 1.0);
     out.histogram("rosella_decision_seconds", &reg.aggregate(|s| &s.decision_ns), 1e-9);
@@ -314,11 +328,22 @@ mod tests {
             "rosella_mu_hat",
             "rosella_lambda_hat",
             "rosella_sync_merges_total",
+            "rosella_shard_cpu",
+            "rosella_cross_socket_decisions_total",
         ] {
             assert!(doc.contains(name), "missing {name} in:\n{doc}");
         }
         assert!(doc.contains("rosella_tasks_dispatched_total{shard=\"1\"} 5"));
         assert!(doc.contains("rosella_mu_hat{worker=\"2\"} 0.5"));
+        // Topology gauges exist even with pinning disabled: the unpinned
+        // sentinel is rendered, not omitted.
+        assert!(doc.contains("rosella_shard_cpu{shard=\"0\"} -1"));
+        assert!(doc.contains("rosella_cross_socket_decisions_total{shard=\"1\"} 0"));
+        reg.shard(1).shard_cpu.set(5.0);
+        reg.shard(1).cross_socket.inc();
+        let doc = render(&reg);
+        assert!(doc.contains("rosella_shard_cpu{shard=\"1\"} 5"));
+        assert!(doc.contains("rosella_cross_socket_decisions_total{shard=\"1\"} 1"));
     }
 
     #[test]

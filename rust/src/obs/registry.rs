@@ -64,6 +64,11 @@ impl Gauge {
         Self::default()
     }
 
+    /// Gauge initialized to `v` (e.g. −1.0 sentinels for "not set").
+    pub fn with_value(v: f64) -> Self {
+        Self(AtomicU64::new(v.to_bits()))
+    }
+
     /// Store a new value.
     #[inline]
     pub fn set(&self, v: f64) {
@@ -217,7 +222,7 @@ pub fn bucket_mid(b: usize) -> u64 {
 }
 
 /// Per-scheduler-thread metric slot. One thread writes, any thread reads.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ShardSlot {
     /// Scheduling decisions made.
     pub decisions: Counter,
@@ -234,6 +239,29 @@ pub struct ShardSlot {
     pub decision_ns: Log2Histogram,
     /// End-to-end task response time in microseconds.
     pub response_us: Log2Histogram,
+    /// CPU this shard's thread is pinned to; −1 when unpinned (or when the
+    /// pin was requested but denied), so the gauge exists in every config
+    /// and dashboards never see a missing series.
+    pub shard_cpu: Gauge,
+    /// Decisions that spilled past this shard's socket-local worker group
+    /// (`--pin sockets` only; stays 0 in every other mode).
+    pub cross_socket: Counter,
+}
+
+impl Default for ShardSlot {
+    fn default() -> Self {
+        Self {
+            decisions: Counter::new(),
+            dispatched: Counter::new(),
+            completed: Counter::new(),
+            bench_dispatched: Counter::new(),
+            queue_len: Log2Histogram::new(),
+            decision_ns: Log2Histogram::new(),
+            response_us: Log2Histogram::new(),
+            shard_cpu: Gauge::with_value(-1.0),
+            cross_socket: Counter::new(),
+        }
+    }
 }
 
 /// The run-wide registry: per-shard slots plus cluster-level gauges and
@@ -408,6 +436,16 @@ mod tests {
         reg.set_mu_hat(&[1.5, 0.5]);
         assert_eq!(reg.mu_hat(0), 1.5);
         assert_eq!(reg.mu_hat(1), 0.5);
+    }
+
+    #[test]
+    fn shard_cpu_gauge_defaults_to_unpinned_sentinel() {
+        let reg = Registry::new(2, 1);
+        assert_eq!(reg.shard(0).shard_cpu.get(), -1.0);
+        assert_eq!(reg.shard(1).cross_socket.get(), 0);
+        reg.shard(1).shard_cpu.set(3.0);
+        assert_eq!(reg.shard(1).shard_cpu.get(), 3.0);
+        assert_eq!(reg.shard(0).shard_cpu.get(), -1.0, "slots are independent");
     }
 
     #[test]

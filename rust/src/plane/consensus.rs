@@ -32,7 +32,7 @@
 //! decision path stays lock-free: frontends see new consensus exactly the
 //! way they always saw aggregator publishes — one epoch probe per decision.
 
-use super::state::EstimateTable;
+use super::state::{CachePadded, EstimateTable};
 use crate::learner::{
     divergence_of, merge_estimates_into, merge_payloads_into, EstimateView, SyncDecision,
     SyncPayload, SyncPolicy,
@@ -47,13 +47,16 @@ use std::time::{Duration, Instant};
 /// second, never per decision. Dirty flags record which slots changed since
 /// the last collection, and a shared merge-request flag carries shard-side
 /// divergence triggers to the adaptive policy.
+/// Slots and dirty flags are per-scheduler cache-padded: shard `s` writes
+/// only its own slot, and padding keeps one shard's export from bouncing
+/// the line under a neighbor's mutex word or dirty flag.
 #[derive(Debug)]
 pub struct SharedViews {
-    slots: Vec<Mutex<SyncPayload>>,
+    slots: Vec<CachePadded<Mutex<SyncPayload>>>,
     /// Slot re-exported since the last collection — the sync thread skips
     /// a check epoch outright when nothing is dirty (merging unchanged
     /// views would only republish identical state).
-    dirty: Vec<AtomicBool>,
+    dirty: Vec<CachePadded<AtomicBool>>,
     /// Some shard's export diverged beyond the adaptive threshold: it
     /// requests a merge at the next policy check.
     merge_requested: AtomicBool,
@@ -70,8 +73,8 @@ impl SharedViews {
             lambda_hat: 0.0,
         };
         Self {
-            slots: (0..shards).map(|_| Mutex::new(init.clone())).collect(),
-            dirty: (0..shards).map(|_| AtomicBool::new(false)).collect(),
+            slots: (0..shards).map(|_| CachePadded::new(Mutex::new(init.clone()))).collect(),
+            dirty: (0..shards).map(|_| CachePadded::new(AtomicBool::new(false))).collect(),
             merge_requested: AtomicBool::new(false),
         }
     }

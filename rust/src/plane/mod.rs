@@ -95,16 +95,54 @@
 //!   at `/flight`. Off by default — the hot path then takes zero clock
 //!   reads, and nothing here draws RNG or reorders a decision, so the
 //!   pinned decision streams stay bit-exact.
+//!
+//! ## Topology & pinning
+//!
+//! With the algorithmic overhead gone, what remains on the hot path is the
+//! memory system: cache-line ping-pong between cores that share nothing
+//! but false sharing, and cross-socket probe traffic. The [`topo`] layer
+//! addresses both, opt-in via `--pin {none,cores,sockets}`:
+//!
+//! * **discovery** parses `/sys/devices/system/cpu/cpu*/topology/` on
+//!   Linux ([`CpuTopology::detect`]); any missing or garbage sysfs entry
+//!   (containers) degrades to a flat single-package topology over
+//!   `available_parallelism` — never an error, never a panic;
+//! * **pinning** places shard threads round-robin across packages and
+//!   partitions workers per package, then pins each thread with a raw
+//!   `sched_setaffinity` syscall (std-only — no libc crate; a no-op
+//!   returning `false` off Linux or when the container denies it). Which
+//!   CPU each shard landed on is the `rosella_shard_cpu` gauge (−1 =
+//!   unpinned), reported in every mode so dashboards keep their series;
+//! * **padding** ([`CachePadded`]) gives the per-worker queue probes, the
+//!   estimate-table seqlock words, and the consensus view slots a cache
+//!   line each. This needs no `unsafe` and cannot change behavior:
+//!   `#[repr(align(64))]` is a pure layout attribute — every load, store,
+//!   and RMW is the same operation on the same value, only the coherence
+//!   traffic moves;
+//! * **socket-local probing** (`--pin sockets`, ≥ 2 packages) has each
+//!   shard run power-of-two-choices over its same-package worker group,
+//!   spilling to the full-view policy only when the local minimum exceeds
+//!   [`DEFAULT_SPILL_THRESHOLD`] (counted per shard as
+//!   `rosella_cross_socket_decisions_total`).
+//!
+//! `--pin none` (the default) skips discovery entirely and `cores` never
+//! touches a decision input, so both keep the decision stream bit-exact
+//! against the pre-pinning plane (pinned by `tests/determinism.rs`);
+//! `sockets` intentionally trades that identity for locality.
 
 pub mod consensus;
 pub mod ingest;
 pub mod shard;
 pub mod state;
+pub mod topo;
 
 pub use consensus::SharedViews;
 pub use ingest::{Arrival, ArrivalBatcher};
 pub use shard::{encode_job, job_shard, shard_seeds, FrontendCore, BENCH_LOCAL_JOB};
-pub use state::{EstimateCache, EstimateTable, SharedView};
+pub use state::{CachePadded, EstimateCache, EstimateTable, SharedView};
+pub use topo::{
+    pin_current_thread, CpuTopology, PinMode, PlacementPlan, DEFAULT_SPILL_THRESHOLD,
+};
 
 use crate::coordinator::worker::{
     self, Completion, CompletionSink, LiveTask, PayloadMode, WorkerClient, WorkerHandle,
@@ -220,6 +258,10 @@ pub struct PlaneConfig {
     /// Dump the decision flight recorder as JSONL to this path at drain.
     /// `None` = recorder off: the decision path takes zero clock reads.
     pub flight_record: Option<String>,
+    /// Thread placement: `None` (default, topology untouched), `Cores`
+    /// (pin shards and workers, decisions unchanged), or `Sockets`
+    /// (pinning plus socket-local probing).
+    pub pin: PinMode,
 }
 
 impl Default for PlaneConfig {
@@ -247,6 +289,7 @@ impl Default for PlaneConfig {
             sync_policy: SyncPolicyConfig::periodic(),
             metrics_listen: None,
             flight_record: None,
+            pin: PinMode::None,
         }
     }
 }
@@ -583,6 +626,14 @@ pub fn run_plane(cfg: PlaneConfig) -> Result<PlaneReport, String> {
     let mu_bar = total_speed / cfg.mean_demand;
     let policy_name = cfg.policy.build(n).name();
 
+    // Thread placement, computed once before any thread spawns. `--pin
+    // none` skips topology discovery entirely — the pre-pinning plane,
+    // byte-for-byte.
+    let plan = match cfg.pin {
+        PinMode::None => PlacementPlan::unpinned(k, n),
+        mode => PlacementPlan::new(mode, &CpuTopology::detect(), k, n),
+    };
+
     // Completion plumbing: the shared aggregator owns one funnel channel;
     // per-shard learners get one channel each, and every node monitor
     // routes each report to the scheduler that dispatched the task.
@@ -602,15 +653,18 @@ pub fn run_plane(cfg: PlaneConfig) -> Result<PlaneReport, String> {
         CompletionSink::from(tx)
     };
 
-    // The shared worker pool.
+    // The shared worker pool (workers pinned per the placement plan).
     let workers: Vec<WorkerHandle> = cfg
         .speeds
         .iter()
         .enumerate()
-        .map(|(i, &s)| worker::spawn(i, s, PayloadMode::Sleep, sink.clone()))
+        .map(|(i, &s)| {
+            worker::spawn_pinned(i, s, PayloadMode::Sleep, sink.clone(), plan.worker_cpus[i])
+        })
         .collect();
     drop(sink);
-    let qlen: Vec<Arc<AtomicUsize>> = workers.iter().map(|w| w.client.qlen.clone()).collect();
+    let qlen: Vec<Arc<CachePadded<AtomicUsize>>> =
+        workers.iter().map(|w| w.client.qlen.clone()).collect();
 
     // Lock-free shared state.
     let table = Arc::new(EstimateTable::new(n, prior));
@@ -721,6 +775,9 @@ pub fn run_plane(cfg: PlaneConfig) -> Result<PlaneReport, String> {
             workers: workers.iter().map(|w| w.client.clone()).collect(),
             qlen: qlen.clone(),
             table: table.clone(),
+            cpu: plan.shard_cpus[i],
+            group: plan.shard_groups[i].clone(),
+            spill_threshold: DEFAULT_SPILL_THRESHOLD,
             lambda_slot: lambda_slots[i].clone(),
             stop: stop.clone(),
             done_deciding: done_deciding.clone(),
@@ -878,7 +935,7 @@ pub(crate) fn spawn_metrics_server(
     addr: &str,
     obs: Arc<crate::obs::Registry>,
     flight: Option<Arc<crate::obs::FlightRecorder>>,
-    qlen: Vec<Arc<AtomicUsize>>,
+    qlen: Vec<Arc<CachePadded<AtomicUsize>>>,
 ) -> Result<crate::obs::MetricsServer, String> {
     let handler: Arc<crate::obs::scrape::Handler> = Arc::new(move |path: &str| match path {
         "/metrics" => {
@@ -955,6 +1012,12 @@ pub fn bench_json(base: &PlaneConfig, reports: &[PlaneReport]) -> crate::config:
     top.insert("rate".into(), Json::Num(base.rate));
     top.insert("duration".into(), Json::Num(base.duration));
     top.insert("seed".into(), Json::Num(base.seed as f64));
+    let detected = CpuTopology::detect();
+    let mut t = BTreeMap::new();
+    t.insert("cpus".into(), Json::Num(detected.n_cpus() as f64));
+    t.insert("packages".into(), Json::Num(detected.n_packages() as f64));
+    t.insert("pin".into(), Json::Str(base.pin.name().into()));
+    top.insert("topology".into(), Json::Obj(t));
     top.insert("results".into(), Json::Arr(results));
     Json::Obj(top)
 }
@@ -1009,6 +1072,7 @@ pub fn plane_cli(p: &crate::cli::Parsed) -> Result<String, String> {
         },
         metrics_listen: p.get("metrics-listen").map(str::to_string),
         flight_record: p.get("flight-record").map(str::to_string),
+        pin: PinMode::parse(p.get("pin").unwrap_or("none"))?,
         ..PlaneConfig::default()
     };
     let reports = sweep(&base, &frontend_counts)?;
@@ -1126,6 +1190,23 @@ mod tests {
         assert!(report.per_shard_decisions.iter().all(|&d| d > 0), "idle shard");
         // Cross-shard latency merge saw every completed job.
         assert_eq!(report.responses.count() as u64, report.completed);
+    }
+
+    #[test]
+    fn pinned_sockets_plane_conserves_tasks() {
+        // Sockets mode flips on best-effort pinning and (on multi-package
+        // hosts) socket-local probing with cross-socket spill. Whatever the
+        // host looks like — single package, pinning denied by the container,
+        // or a real two-socket box — conservation must hold unchanged.
+        let cfg = PlaneConfig { pin: PinMode::Sockets, ..quick(2, DispatchMode::Execute) };
+        let report = run_plane(cfg).unwrap();
+        assert!(report.dispatched > 100, "dispatched {}", report.dispatched);
+        assert_eq!(
+            report.completed, report.dispatched,
+            "tasks lost or duplicated under socket pinning"
+        );
+        assert_eq!(report.per_shard_decisions.len(), 2);
+        assert!(report.per_shard_decisions.iter().all(|&d| d > 0), "idle shard");
     }
 
     #[test]
@@ -1430,8 +1511,8 @@ mod tests {
                 decision_ns: 80,
             },
         );
-        let qlen: Vec<Arc<AtomicUsize>> =
-            (0..2).map(|i| Arc::new(AtomicUsize::new(i))).collect();
+        let qlen: Vec<Arc<CachePadded<AtomicUsize>>> =
+            (0..2).map(|i| Arc::new(CachePadded::new(AtomicUsize::new(i)))).collect();
         let srv =
             spawn_metrics_server("127.0.0.1:0", obs, Some(flight), qlen).unwrap();
         let addr = srv.addr();
@@ -1440,6 +1521,10 @@ mod tests {
         assert!(body.contains("rosella_tasks_completed_total{shard=\"0\"} 3"));
         assert!(body.contains("rosella_worker_queue_len{worker=\"1\"} 1"));
         assert!(body.contains("rosella_wire_frames_sent_total"));
+        // Topology gauges are served even with pinning off: −1 sentinel,
+        // never a missing series.
+        assert!(body.contains("rosella_shard_cpu{shard=\"0\"} -1"));
+        assert!(body.contains("rosella_cross_socket_decisions_total{shard=\"0\"} 0"));
         let fl = http_get(addr, "/flight");
         assert!(fl.contains("\"chosen\""), "flight route missing event: {fl}");
         assert!(http_get(addr, "/nope").starts_with("HTTP/1.1 404"));

@@ -22,7 +22,7 @@
 
 use super::consensus::SharedViews;
 use super::ingest::ArrivalBatcher;
-use super::state::{EstimateCache, EstimateTable, SharedView};
+use super::state::{CachePadded, EstimateCache, EstimateTable, SharedView};
 use super::DispatchMode;
 use crate::coordinator::worker::{Completion, LiveTask, WorkerClient};
 use crate::learner::{ArrivalEstimator, EstimateView, FakeJobDispatcher, PerfLearner};
@@ -193,7 +193,11 @@ impl FrontendCore {
 
     /// Schedule one job against the plane's shared state: atomic probes,
     /// cached estimates, no locks, no copies.
-    pub fn decide_shared(&mut self, job: &JobSpec, qlen: &[Arc<AtomicUsize>]) -> WorkerId {
+    pub fn decide_shared(
+        &mut self,
+        job: &JobSpec,
+        qlen: &[Arc<CachePadded<AtomicUsize>>],
+    ) -> WorkerId {
         self.decide_shared_traced(job, qlen, None)
     }
 
@@ -204,11 +208,42 @@ impl FrontendCore {
     pub fn decide_shared_traced(
         &mut self,
         job: &JobSpec,
-        qlen: &[Arc<AtomicUsize>],
+        qlen: &[Arc<CachePadded<AtomicUsize>>],
         trace: Option<&crate::obs::ProbeTrace>,
     ) -> WorkerId {
         let view = SharedView { qlen, est: &self.cache, trace };
         flatten(self.policy.schedule_job(job, &view, &mut self.rng))
+    }
+
+    /// Socket-local power-of-two-choices: probe two workers drawn from
+    /// `group` (this shard's same-package partition) and dispatch to the
+    /// shorter queue — touching only package-local cache lines — unless
+    /// that queue exceeds `spill_threshold`, in which case fall back to the
+    /// configured policy over the full view ([`Self::decide_shared`]).
+    /// Returns the chosen worker and whether the decision spilled
+    /// cross-socket. Only the plane's `--pin sockets` mode reaches this
+    /// path; `none`/`cores` keep the exact pre-existing decision stream.
+    pub fn decide_shared_grouped(
+        &mut self,
+        job: &JobSpec,
+        qlen: &[Arc<CachePadded<AtomicUsize>>],
+        group: &[usize],
+        spill_threshold: usize,
+    ) -> (WorkerId, bool) {
+        debug_assert!(!group.is_empty(), "grouped decision over an empty worker group");
+        let a = group[self.rng.gen_index(group.len())];
+        let b = group[self.rng.gen_index(group.len())];
+        let qa = qlen[a].load(Ordering::Relaxed);
+        let qb = qlen[b].load(Ordering::Relaxed);
+        let (w, q) = if qb < qa { (b, qb) } else { (a, qa) };
+        if q <= spill_threshold {
+            (w, false)
+        } else {
+            // Local group backed up: pay the cross-socket probes rather
+            // than pile onto a saturated package (the heterogeneity
+            // argument applied to memory distance).
+            (self.decide_shared(job, qlen), true)
+        }
     }
 }
 
@@ -274,8 +309,16 @@ pub(crate) struct ShardRun {
     pub max_decisions: Option<u64>,
     pub record_placements: bool,
     pub workers: Vec<WorkerClient>,
-    pub qlen: Vec<Arc<AtomicUsize>>,
+    pub qlen: Vec<Arc<CachePadded<AtomicUsize>>>,
     pub table: Arc<EstimateTable>,
+    /// CPU this shard thread pins itself to (`None` = leave to the OS).
+    pub cpu: Option<usize>,
+    /// Same-package worker ids for socket-local probing. Empty = probe the
+    /// full view exactly as before (`--pin none`/`cores`, single socket).
+    pub group: Vec<usize>,
+    /// Local-group queue length above which a grouped decision spills to
+    /// the full cross-socket view.
+    pub spill_threshold: usize,
     /// f64-bit slot where this shard publishes its λ̂ for the sync side.
     pub lambda_slot: Arc<AtomicU64>,
     pub stop: Arc<AtomicBool>,
@@ -503,6 +546,14 @@ impl ShardLearnState {
 
 /// The shard thread body: the full Rosella frontend loop.
 pub(crate) fn run_shard(mut ctx: ShardRun) -> ShardStats {
+    // Best-effort pinning before any work: the gauge reports the CPU only
+    // when the kernel actually accepted the mask (−1 otherwise, so
+    // dashboards can tell "requested but denied" from "pinned").
+    if let Some(cpu) = ctx.cpu {
+        if super::topo::pin_current_thread(cpu) {
+            ctx.obs.shard(ctx.id).shard_cpu.set(cpu as f64);
+        }
+    }
     let (core_seed, stream_seed) = shard_seeds(ctx.seed, ctx.id);
     let mut core =
         FrontendCore::new(&ctx.policy, ctx.n, ctx.prior, ctx.mean_demand, 128, core_seed);
@@ -570,30 +621,43 @@ pub(crate) fn run_shard(mut ctx: ShardRun) -> ShardStats {
                 }
             }
             job.tasks[0].demand = a.demand;
-            let w = match flight.as_deref() {
-                None => core.decide_shared(&job, &ctx.qlen),
-                Some(rec) => {
-                    // Flight-recorded decision: same policy code and RNG
-                    // stream, plus probe capture and a latency clock.
-                    trace.clear();
-                    let t0 = Instant::now();
-                    let w = core.decide_shared_traced(&job, &ctx.qlen, Some(&trace));
-                    let decision_ns = t0.elapsed().as_nanos() as u64;
-                    slot.decision_ns.record(decision_ns);
-                    rec.record(
-                        ctx.id,
-                        crate::obs::FlightEvent::Placement {
-                            t_ns: ctx.start.elapsed().as_nanos() as u64,
-                            shard: ctx.id as u32,
-                            task: encode_job(ctx.id, local_jobs),
-                            probed: trace.probes(),
-                            chosen: w as u32,
-                            mu_chosen: core.mu_hat()[w],
-                            lambda_hat: core.cached_lambda(),
-                            decision_ns,
-                        },
-                    );
-                    w
+            let w = if !ctx.group.is_empty() {
+                // Socket-local probing (`--pin sockets`, ≥ 2 packages):
+                // SQ(2) over this shard's same-package workers, spilling
+                // to the full-view policy only past the threshold.
+                let (w, spilled) =
+                    core.decide_shared_grouped(&job, &ctx.qlen, &ctx.group, ctx.spill_threshold);
+                if spilled {
+                    slot.cross_socket.inc();
+                }
+                w
+            } else {
+                match flight.as_deref() {
+                    None => core.decide_shared(&job, &ctx.qlen),
+                    Some(rec) => {
+                        // Flight-recorded decision: same policy code and
+                        // RNG stream, plus probe capture and a latency
+                        // clock.
+                        trace.clear();
+                        let t0 = Instant::now();
+                        let w = core.decide_shared_traced(&job, &ctx.qlen, Some(&trace));
+                        let decision_ns = t0.elapsed().as_nanos() as u64;
+                        slot.decision_ns.record(decision_ns);
+                        rec.record(
+                            ctx.id,
+                            crate::obs::FlightEvent::Placement {
+                                t_ns: ctx.start.elapsed().as_nanos() as u64,
+                                shard: ctx.id as u32,
+                                task: encode_job(ctx.id, local_jobs),
+                                probed: trace.probes(),
+                                chosen: w as u32,
+                                mu_chosen: core.mu_hat()[w],
+                                lambda_hat: core.cached_lambda(),
+                                decision_ns,
+                            },
+                        );
+                        w
+                    }
                 }
             };
             stats.decisions += 1;
@@ -671,8 +735,8 @@ mod tests {
         let mut a = FrontendCore::new(&kind, n, 1.0, 0.01, 128, 99);
         let mut b = FrontendCore::new(&kind, n, 1.0, 0.01, 128, 99);
         let zeros = vec![0usize; n];
-        let shared: Vec<Arc<AtomicUsize>> =
-            (0..n).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+        let shared: Vec<Arc<CachePadded<AtomicUsize>>> =
+            (0..n).map(|_| Arc::new(CachePadded::new(AtomicUsize::new(0)))).collect();
         let job = JobSpec::single(0.02);
         for k in 0..2_000 {
             let t = k as f64 * 0.001;
@@ -694,8 +758,8 @@ mod tests {
         assert_eq!(core.mu_hat(), &[0.0, 0.0, 9.0]);
         assert!(!core.maybe_refresh(&table), "second refresh must be a no-op");
         // The rebuilt sampler must reflect the new weights.
-        let shared: Vec<Arc<AtomicUsize>> =
-            (0..n).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+        let shared: Vec<Arc<CachePadded<AtomicUsize>>> =
+            (0..n).map(|_| Arc::new(CachePadded::new(AtomicUsize::new(0)))).collect();
         let job = JobSpec::single(0.1);
         for _ in 0..200 {
             assert_eq!(core.decide_shared(&job, &shared), 2, "all estimate mass on worker 2");
@@ -706,9 +770,9 @@ mod tests {
     fn shared_probes_steer_sq2_to_short_queues() {
         let kind = PolicyKind::PPoT { tie: crate::scheduler::TieRule::Sq2, late_binding: false };
         let mut core = FrontendCore::new(&kind, 2, 1.0, 0.1, 64, 11);
-        let shared: Vec<Arc<AtomicUsize>> = vec![
-            Arc::new(AtomicUsize::new(50)),
-            Arc::new(AtomicUsize::new(0)),
+        let shared: Vec<Arc<CachePadded<AtomicUsize>>> = vec![
+            Arc::new(CachePadded::new(AtomicUsize::new(50))),
+            Arc::new(CachePadded::new(AtomicUsize::new(0))),
         ];
         let job = JobSpec::single(0.1);
         let n = 20_000;
@@ -717,5 +781,55 @@ mod tests {
             .count();
         // P(choose worker 1) = 1 − P(both probes hit 0) = 3/4.
         assert!((ones as f64 / n as f64 - 0.75).abs() < 0.01, "frac {}", ones as f64 / n as f64);
+    }
+
+    fn probes(qs: &[usize]) -> Vec<Arc<CachePadded<AtomicUsize>>> {
+        qs.iter().map(|&q| Arc::new(CachePadded::new(AtomicUsize::new(q)))).collect()
+    }
+
+    #[test]
+    fn grouped_decision_stays_local_below_threshold() {
+        let kind = PolicyKind::PPoT { tie: crate::scheduler::TieRule::Sq2, late_binding: false };
+        let mut core = FrontendCore::new(&kind, 4, 1.0, 0.1, 64, 3);
+        // Group {0, 2} idle, group {1, 3} heavily queued: every decision
+        // for the first group's shard must stay in-group and un-spilled.
+        let shared = probes(&[0, 50, 1, 50]);
+        let job = JobSpec::single(0.1);
+        let threshold = super::super::topo::DEFAULT_SPILL_THRESHOLD;
+        for _ in 0..1_000 {
+            let (w, spilled) = core.decide_shared_grouped(&job, &shared, &[0, 2], threshold);
+            assert!(w == 0 || w == 2, "strayed off-group to {w}");
+            assert!(!spilled, "spilled with an idle local group");
+        }
+    }
+
+    #[test]
+    fn grouped_decision_spills_only_above_threshold() {
+        let kind = PolicyKind::PPoT { tie: crate::scheduler::TieRule::Sq2, late_binding: false };
+        let mut core = FrontendCore::new(&kind, 4, 1.0, 0.1, 64, 7);
+        let job = JobSpec::single(0.1);
+        let threshold = 4;
+        // Local group exactly at the threshold: never spills.
+        let shared = probes(&[threshold, 0, threshold, 0]);
+        for _ in 0..500 {
+            let (w, spilled) = core.decide_shared_grouped(&job, &shared, &[0, 2], threshold);
+            assert!(!spilled, "spilled at exactly the threshold");
+            assert!(w == 0 || w == 2);
+        }
+        // Local group one past the threshold, other socket idle: every
+        // decision spills, and the full-view fallback finds the idle
+        // workers the local group cannot see.
+        let shared = probes(&[threshold + 1, 0, threshold + 1, 0]);
+        let mut spills = 0usize;
+        let mut cross = 0usize;
+        for _ in 0..2_000 {
+            let (w, spilled) = core.decide_shared_grouped(&job, &shared, &[0, 2], threshold);
+            spills += spilled as usize;
+            cross += (w == 1 || w == 3) as usize;
+        }
+        assert_eq!(spills, 2_000, "every over-threshold decision must spill");
+        // SQ(2) over the full view lands on an idle off-group worker
+        // whenever at least one probe hits one (P = 3/4).
+        assert!(cross > 1_200, "fallback never reached the idle socket: {cross}");
     }
 }

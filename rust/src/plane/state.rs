@@ -3,9 +3,12 @@
 //! The plane's frontends coordinate through exactly two mechanisms, both
 //! lock-free on the per-decision hot path (§2's "minimum coordination"):
 //!
-//! * **queue-length probes** — each worker owns an `Arc<AtomicUsize>`
-//!   counter (the same probe the live coordinator uses); frontends read it
-//!   with a relaxed atomic load per probe, never copying the whole vector;
+//! * **queue-length probes** — each worker owns an
+//!   `Arc<CachePadded<AtomicUsize>>` counter (the same probe the live
+//!   coordinator uses, padded to its own cache line so one worker's
+//!   enqueue/dequeue traffic never invalidates a neighbor's line);
+//!   frontends read it with a relaxed atomic load per probe, never copying
+//!   the whole vector;
 //! * **the estimate table** — a seqlock-published table of speed estimates
 //!   μ̂ and the aggregate arrival estimate λ̂, written by the single
 //!   aggregator thread and read by every frontend. Frontends poll the
@@ -25,27 +28,76 @@ use crate::types::{ClusterView, WorkerId};
 use std::sync::atomic::{fence, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
+/// Pads its contents to a 64-byte cache line so two [`CachePadded`] values
+/// can never share one.
+///
+/// This is a pure layout attribute: `#[repr(align(64))]` changes where the
+/// value sits in memory, not what any load, store, or RMW on it does, so
+/// wrapping an atomic cannot alter program behavior — only the coherence
+/// traffic pattern. No `unsafe` is involved anywhere. `Deref`/`DerefMut`
+/// make the wrapper transparent at call sites (`padded.load(...)` works).
+#[derive(Debug, Default)]
+#[repr(align(64))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    /// Wrap `value` on its own cache line.
+    pub const fn new(value: T) -> Self {
+        Self { value }
+    }
+
+    /// Unwrap, discarding the alignment.
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> std::ops::Deref for CachePadded<T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> std::ops::DerefMut for CachePadded<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
 /// Seqlock-published estimate table: μ̂ per worker plus the aggregate λ̂.
 ///
-/// Single writer (the plane's aggregator), any number of readers.
+/// Single writer (the plane's aggregator), any number of readers. The
+/// sequence word and λ̂ sit on their own cache lines: `seq` is re-read by
+/// every frontend on every decision, and without padding a publish storing
+/// through the adjacent `mu_bits`/`lambda_bits` words would bounce the
+/// line holding `seq` across every deciding core.
 #[derive(Debug)]
 pub struct EstimateTable {
     /// Sequence counter: even = stable, odd = publish in progress.
-    seq: AtomicU64,
+    seq: CachePadded<AtomicU64>,
     /// f64 bit patterns of μ̂ per worker.
     mu_bits: Box<[AtomicU64]>,
     /// f64 bit pattern of the aggregate λ̂ (tasks/second).
-    lambda_bits: AtomicU64,
+    lambda_bits: CachePadded<AtomicU64>,
 }
 
 impl EstimateTable {
     /// Table for `n` workers, initialized to the prior estimate and λ̂ = 0.
     pub fn new(n: usize, prior: f64) -> Self {
         assert!(n > 0, "estimate table over empty cluster");
+        debug_assert_eq!(
+            std::mem::size_of::<CachePadded<AtomicUsize>>(),
+            64,
+            "CachePadded must occupy exactly one cache line"
+        );
         Self {
-            seq: AtomicU64::new(0),
+            seq: CachePadded::new(AtomicU64::new(0)),
             mu_bits: (0..n).map(|_| AtomicU64::new(prior.to_bits())).collect(),
-            lambda_bits: AtomicU64::new(0f64.to_bits()),
+            lambda_bits: CachePadded::new(AtomicU64::new(0f64.to_bits())),
         }
     }
 
@@ -145,8 +197,9 @@ impl EstimateCache {
 /// the workers the policy *actually* probed and the queue lengths it saw,
 /// without any change to the policy trait or its RNG draws.
 pub struct SharedView<'a> {
-    /// Per-worker queue-length probes (shared with the worker threads).
-    pub qlen: &'a [Arc<AtomicUsize>],
+    /// Per-worker queue-length probes (shared with the worker threads),
+    /// one cache line each.
+    pub qlen: &'a [Arc<CachePadded<AtomicUsize>>],
     /// The deciding frontend's estimate cache.
     pub est: &'a EstimateCache,
     /// Optional probe capture for the decision flight recorder.
@@ -257,8 +310,8 @@ mod tests {
     #[test]
     fn shared_view_reads_probes_and_cache() {
         use crate::stats::Rng;
-        let qlen: Vec<Arc<AtomicUsize>> =
-            (0..3).map(|i| Arc::new(AtomicUsize::new(i))).collect();
+        let qlen: Vec<Arc<CachePadded<AtomicUsize>>> =
+            (0..3).map(|i| Arc::new(CachePadded::new(AtomicUsize::new(i)))).collect();
         let mut est = EstimateCache::new(3, 1.0);
         est.mu_hat = vec![0.0, 0.0, 5.0];
         est.sampler = AliasTable::new(&est.mu_hat);
@@ -276,6 +329,18 @@ mod tests {
         }
         qlen[0].store(9, Ordering::Relaxed);
         assert_eq!(view.queue_len(0), 9, "probe sees live counter updates");
+    }
+
+    #[test]
+    fn cache_padding_fills_exactly_one_line() {
+        assert_eq!(std::mem::size_of::<CachePadded<AtomicUsize>>(), 64);
+        assert_eq!(std::mem::align_of::<CachePadded<AtomicUsize>>(), 64);
+        assert_eq!(std::mem::size_of::<CachePadded<AtomicU64>>(), 64);
+        // Transparent at call sites: atomics work through Deref, and the
+        // wrapper never changes the value it holds.
+        let p = CachePadded::new(AtomicUsize::new(7));
+        assert_eq!(p.fetch_add(1, Ordering::Relaxed), 7);
+        assert_eq!(p.into_inner().into_inner(), 8);
     }
 
     #[test]

@@ -1,0 +1,426 @@
+//! CPU topology discovery and thread pinning for the scheduling plane.
+//!
+//! The paper's throughput argument assumes schedulers run "in parallel on
+//! multiple machines with minimum coordination"; inside one machine the
+//! analogous discipline is *memory distance*: a frontend shard and the
+//! workers it routes to should share a package (socket), and the shared
+//! words they do exchange should never share a cache line with unrelated
+//! traffic. This module supplies the three pieces, dependency-free:
+//!
+//! * **discovery** — [`CpuTopology::detect`] parses
+//!   `/sys/devices/system/cpu/cpu*/topology/{physical_package_id,core_id}`
+//!   on Linux. Any missing or garbage file (containers routinely hide or
+//!   mangle sysfs) degrades to the flat single-package fallback built from
+//!   [`std::thread::available_parallelism`] — discovery never fails and
+//!   never panics;
+//! * **pinning** — [`pin_current_thread`] is a raw `sched_setaffinity`
+//!   syscall (inline asm on `x86_64`/`aarch64` Linux; the repo is std-only
+//!   by policy, so no libc crate). On other OSes/arches it is a no-op
+//!   returning `false`, and a denied syscall (seccomp) is reported the
+//!   same way — callers treat pinning as best-effort;
+//! * **placement** — [`PlacementPlan`] assigns shard and worker threads to
+//!   CPUs (shards round-robin across packages, workers partitioned per
+//!   package) and, under [`PinMode::Sockets`], hands each shard its
+//!   same-package worker group so power-of-two probing prefers local cache
+//!   lines and spills cross-socket only past a queue threshold
+//!   ([`DEFAULT_SPILL_THRESHOLD`]).
+//!
+//! [`PinMode::None`] is the default and is bit-identical to the pre-pinning
+//! plane: no topology is read, no thread is pinned, no RNG stream is
+//! touched (pinned by `tests/determinism.rs`).
+
+use std::path::Path;
+
+/// Queue length above which a socket-local group decision spills to the
+/// full cross-socket view. Small enough that a backed-up local group stops
+/// hoarding work; large enough that transient one-task queues stay local.
+pub const DEFAULT_SPILL_THRESHOLD: usize = 4;
+
+/// How plane threads are placed on the CPU topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PinMode {
+    /// No pinning, no topology discovery — the pre-pinning plane,
+    /// bit-identical decision streams.
+    #[default]
+    None,
+    /// Pin shard and worker threads to CPUs (shards round-robin across
+    /// packages, workers partitioned per package). Decisions unchanged.
+    Cores,
+    /// [`PinMode::Cores`] placement *plus* socket-local probing: each
+    /// shard prefers its same-package worker group and spills cross-socket
+    /// only when the local group is backed up.
+    Sockets,
+}
+
+impl PinMode {
+    /// CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PinMode::None => "none",
+            PinMode::Cores => "cores",
+            PinMode::Sockets => "sockets",
+        }
+    }
+
+    /// Parse the CLI spelling.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "none" => Ok(PinMode::None),
+            "cores" => Ok(PinMode::Cores),
+            "sockets" => Ok(PinMode::Sockets),
+            other => Err(format!("unknown pin mode '{other}' (none | cores | sockets)")),
+        }
+    }
+}
+
+/// One logical CPU's position in the topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CpuSlot {
+    /// Logical CPU id (the `sched_setaffinity` bit).
+    pub cpu: usize,
+    /// Physical package (socket) id, renumbered densely from 0.
+    pub package: usize,
+    /// Core id within the package (SMT siblings share it).
+    pub core: usize,
+}
+
+/// The machine's CPU topology: logical CPUs grouped into packages.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CpuTopology {
+    /// Every online logical CPU, sorted by CPU id.
+    pub cpus: Vec<CpuSlot>,
+    /// CPU ids per package, indexed by dense package id.
+    pub package_cpus: Vec<Vec<usize>>,
+}
+
+impl CpuTopology {
+    /// Discover the topology: sysfs on Linux, flat fallback anywhere the
+    /// tree is absent or hostile. Never fails.
+    pub fn detect() -> Self {
+        Self::from_sysfs(Path::new("/sys/devices/system/cpu")).unwrap_or_else(Self::flat)
+    }
+
+    /// Flat single-package topology over `available_parallelism` CPUs (≥1).
+    pub fn flat() -> Self {
+        let n = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        let cpus: Vec<CpuSlot> =
+            (0..n).map(|i| CpuSlot { cpu: i, package: 0, core: i }).collect();
+        Self { package_cpus: vec![(0..n).collect()], cpus }
+    }
+
+    /// Parse a sysfs CPU tree rooted at `root` (injectable so the fixture
+    /// trees under `tests/fixtures/sysfs/` drive the parser in tests).
+    /// Returns `None` — never panics — on any missing directory, missing
+    /// file, or unparseable content: the caller falls back to [`flat`].
+    ///
+    /// [`flat`]: CpuTopology::flat
+    pub fn from_sysfs(root: &Path) -> Option<Self> {
+        let mut raw: Vec<(usize, usize, usize)> = Vec::new();
+        for entry in std::fs::read_dir(root).ok()? {
+            let entry = entry.ok()?;
+            let name = entry.file_name();
+            let name = name.to_str()?;
+            let id = match name.strip_prefix("cpu") {
+                // Only `cpu<digits>` entries are CPUs (`cpufreq`,
+                // `cpuidle`, `possible`, ... share the directory).
+                Some(d) if !d.is_empty() && d.bytes().all(|b| b.is_ascii_digit()) => {
+                    d.parse::<usize>().ok()?
+                }
+                _ => continue,
+            };
+            let topo = entry.path().join("topology");
+            let package = read_id(&topo.join("physical_package_id"))?;
+            let core = read_id(&topo.join("core_id"))?;
+            raw.push((id, package, core));
+        }
+        if raw.is_empty() {
+            return None;
+        }
+        raw.sort_unstable();
+        // Renumber packages densely in first-seen (= CPU-id) order so
+        // package ids index `package_cpus` directly.
+        let mut packages: Vec<usize> = Vec::new();
+        let mut cpus = Vec::with_capacity(raw.len());
+        let mut package_cpus: Vec<Vec<usize>> = Vec::new();
+        for (cpu, pkg, core) in raw {
+            let dense = match packages.iter().position(|&p| p == pkg) {
+                Some(i) => i,
+                None => {
+                    packages.push(pkg);
+                    package_cpus.push(Vec::new());
+                    packages.len() - 1
+                }
+            };
+            package_cpus[dense].push(cpu);
+            cpus.push(CpuSlot { cpu, package: dense, core });
+        }
+        Some(Self { cpus, package_cpus })
+    }
+
+    /// Number of logical CPUs.
+    pub fn n_cpus(&self) -> usize {
+        self.cpus.len()
+    }
+
+    /// Number of packages (sockets).
+    pub fn n_packages(&self) -> usize {
+        self.package_cpus.len()
+    }
+}
+
+/// Read a small sysfs id file: trimmed non-negative integer or `None`.
+fn read_id(path: &Path) -> Option<usize> {
+    std::fs::read_to_string(path).ok()?.trim().parse::<usize>().ok()
+}
+
+/// Where every plane thread goes, plus the per-shard socket-local worker
+/// groups. Built once before any thread spawns; `None` CPU slots mean
+/// "leave this thread to the OS".
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlacementPlan {
+    /// CPU per frontend shard (index = shard id).
+    pub shard_cpus: Vec<Option<usize>>,
+    /// CPU per worker thread (index = worker id).
+    pub worker_cpus: Vec<Option<usize>>,
+    /// Same-package worker ids per shard. Non-empty only under
+    /// [`PinMode::Sockets`] with ≥ 2 packages — an empty group means the
+    /// shard probes the full view exactly as before.
+    pub shard_groups: Vec<Vec<usize>>,
+}
+
+impl PlacementPlan {
+    /// The no-op plan: nothing pinned, no groups ([`PinMode::None`]).
+    pub fn unpinned(shards: usize, workers: usize) -> Self {
+        Self {
+            shard_cpus: vec![None; shards],
+            worker_cpus: vec![None; workers],
+            shard_groups: vec![Vec::new(); shards],
+        }
+    }
+
+    /// Place `shards` frontend threads and `workers` worker threads on
+    /// `topo`: shard `s` goes to package `s % packages`, worker `w` to
+    /// package `w % packages` (so each package hosts a balanced worker
+    /// partition and every shard's package owns workers), and threads
+    /// within a package rotate through its CPU list. Under
+    /// [`PinMode::Sockets`] each shard also gets its same-package worker
+    /// ids as its local probe group.
+    pub fn new(mode: PinMode, topo: &CpuTopology, shards: usize, workers: usize) -> Self {
+        if mode == PinMode::None || topo.n_cpus() == 0 {
+            return Self::unpinned(shards, workers);
+        }
+        let packages = topo.n_packages();
+        // Per-package rotating cursor: shards claim CPUs first, workers
+        // continue from where the shards left off, wrapping as needed.
+        let mut cursor = vec![0usize; packages];
+        let mut take = |pkg: usize| {
+            let cpus = &topo.package_cpus[pkg];
+            let cpu = cpus[cursor[pkg] % cpus.len()];
+            cursor[pkg] += 1;
+            Some(cpu)
+        };
+        let shard_cpus: Vec<Option<usize>> = (0..shards).map(|s| take(s % packages)).collect();
+        let worker_cpus: Vec<Option<usize>> = (0..workers).map(|w| take(w % packages)).collect();
+        let shard_groups: Vec<Vec<usize>> = (0..shards)
+            .map(|s| {
+                if mode == PinMode::Sockets && packages >= 2 {
+                    (0..workers).filter(|w| w % packages == s % packages).collect()
+                } else {
+                    Vec::new()
+                }
+            })
+            .collect();
+        Self { shard_cpus, worker_cpus, shard_groups }
+    }
+}
+
+/// Pin the calling thread to logical CPU `cpu` via a raw
+/// `sched_setaffinity(0, …)` syscall. Returns whether the kernel accepted
+/// the mask — `false` on non-Linux builds, unsupported architectures,
+/// out-of-range CPUs, and denied syscalls (containers). Never panics:
+/// pinning is an optimization, not a correctness requirement.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn pin_current_thread(cpu: usize) -> bool {
+    // 16 × u64 = 1024 CPUs, the kernel's historical CPU_SETSIZE.
+    let mut mask = [0u64; 16];
+    if cpu >= mask.len() * 64 {
+        return false;
+    }
+    mask[cpu / 64] = 1u64 << (cpu % 64);
+    let ret = unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) };
+    ret == 0
+}
+
+/// Portable fallback: pinning unavailable, report "not pinned".
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub fn pin_current_thread(_cpu: usize) -> bool {
+    false
+}
+
+/// Raw `sched_setaffinity` (syscall 203), x86_64 Linux ABI: number in
+/// `rax`, args in `rdi`/`rsi`/`rdx`, `rcx`/`r11` clobbered by `syscall`.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+unsafe fn sched_setaffinity(pid: usize, len: usize, mask: *const u64) -> isize {
+    let ret: isize;
+    core::arch::asm!(
+        "syscall",
+        inlateout("rax") 203isize => ret,
+        in("rdi") pid,
+        in("rsi") len,
+        in("rdx") mask,
+        lateout("rcx") _,
+        lateout("r11") _,
+        options(nostack),
+    );
+    ret
+}
+
+/// Raw `sched_setaffinity` (syscall 122), aarch64 Linux ABI: number in
+/// `x8`, args in `x0`–`x2`, return in `x0`.
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+unsafe fn sched_setaffinity(pid: usize, len: usize, mask: *const u64) -> isize {
+    let ret: isize;
+    core::arch::asm!(
+        "svc #0",
+        in("x8") 122usize,
+        inlateout("x0") pid => ret,
+        in("x1") len,
+        in("x2") mask,
+        options(nostack),
+    );
+    ret
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn fixture(name: &str) -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/sysfs").join(name)
+    }
+
+    #[test]
+    fn one_socket_fixture_parses() {
+        let topo = CpuTopology::from_sysfs(&fixture("one_socket")).expect("clean tree parses");
+        assert_eq!(topo.n_cpus(), 4);
+        assert_eq!(topo.n_packages(), 1);
+        assert_eq!(topo.package_cpus[0], vec![0, 1, 2, 3]);
+        for (i, c) in topo.cpus.iter().enumerate() {
+            assert_eq!(c.cpu, i);
+            assert_eq!(c.package, 0);
+            assert_eq!(c.core, i);
+        }
+    }
+
+    #[test]
+    fn two_socket_smt_fixture_parses_with_dense_packages() {
+        let topo = CpuTopology::from_sysfs(&fixture("two_socket_smt")).expect("smt tree parses");
+        assert_eq!(topo.n_cpus(), 8);
+        assert_eq!(topo.n_packages(), 2);
+        // Fixture writes raw package ids 3 and 7 — renumbered densely in
+        // CPU-id order.
+        assert_eq!(topo.package_cpus[0], vec![0, 1, 2, 3]);
+        assert_eq!(topo.package_cpus[1], vec![4, 5, 6, 7]);
+        // SMT siblings share a core id within the package.
+        assert_eq!(topo.cpus[0].core, topo.cpus[2].core);
+        assert_eq!(topo.cpus[1].core, topo.cpus[3].core);
+        assert_ne!(topo.cpus[0].core, topo.cpus[1].core);
+    }
+
+    #[test]
+    fn hostile_fixture_falls_back_without_panicking() {
+        // Garbage package file, a cpu with no topology dir, a non-CPU
+        // entry: the parser must return None — never panic — so detect()
+        // degrades to the flat fallback.
+        assert_eq!(CpuTopology::from_sysfs(&fixture("hostile")), None);
+        assert_eq!(CpuTopology::from_sysfs(&fixture("does_not_exist")), None);
+    }
+
+    #[test]
+    fn flat_fallback_is_one_package_over_available_parallelism() {
+        let topo = CpuTopology::flat();
+        assert!(topo.n_cpus() >= 1);
+        assert_eq!(topo.n_packages(), 1);
+        assert_eq!(topo.package_cpus[0].len(), topo.n_cpus());
+        // detect() never fails, whatever this machine's sysfs looks like.
+        let detected = CpuTopology::detect();
+        assert!(detected.n_cpus() >= 1 && detected.n_packages() >= 1);
+    }
+
+    #[test]
+    fn pin_mode_parses_and_round_trips() {
+        for mode in [PinMode::None, PinMode::Cores, PinMode::Sockets] {
+            assert_eq!(PinMode::parse(mode.name()), Ok(mode));
+        }
+        assert!(PinMode::parse("numa").is_err());
+        assert_eq!(PinMode::default(), PinMode::None);
+    }
+
+    #[test]
+    fn unpinned_plan_pins_nothing_and_groups_nothing() {
+        let topo = CpuTopology::from_sysfs(&fixture("two_socket_smt")).unwrap();
+        let plan = PlacementPlan::new(PinMode::None, &topo, 2, 8);
+        assert_eq!(plan, PlacementPlan::unpinned(2, 8));
+        assert!(plan.shard_cpus.iter().all(Option::is_none));
+        assert!(plan.worker_cpus.iter().all(Option::is_none));
+        assert!(plan.shard_groups.iter().all(Vec::is_empty));
+    }
+
+    #[test]
+    fn cores_plan_spreads_shards_across_packages_without_groups() {
+        let topo = CpuTopology::from_sysfs(&fixture("two_socket_smt")).unwrap();
+        let plan = PlacementPlan::new(PinMode::Cores, &topo, 2, 4);
+        // Shard 0 → package 0, shard 1 → package 1.
+        assert_eq!(plan.shard_cpus, vec![Some(0), Some(4)]);
+        // Workers alternate packages, continuing each package's cursor.
+        assert_eq!(plan.worker_cpus, vec![Some(1), Some(5), Some(2), Some(6)]);
+        // Cores mode never partitions probing.
+        assert!(plan.shard_groups.iter().all(Vec::is_empty));
+    }
+
+    #[test]
+    fn sockets_plan_partitions_workers_into_local_groups() {
+        let topo = CpuTopology::from_sysfs(&fixture("two_socket_smt")).unwrap();
+        let plan = PlacementPlan::new(PinMode::Sockets, &topo, 2, 6);
+        assert_eq!(plan.shard_groups, vec![vec![0, 2, 4], vec![1, 3, 5]]);
+        // The groups partition the worker set: disjoint and exhaustive, so
+        // no worker is unreachable and none is double-owned.
+        let mut seen: Vec<usize> = plan.shard_groups.concat();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..6).collect::<Vec<_>>());
+        // Every shard's group lives on the shard's own package.
+        for (s, group) in plan.shard_groups.iter().enumerate() {
+            let shard_pkg = topo.cpus[plan.shard_cpus[s].unwrap()].package;
+            for &w in group {
+                let worker_pkg = topo.cpus[plan.worker_cpus[w].unwrap()].package;
+                assert_eq!(worker_pkg, shard_pkg, "shard {s} group strays off-package");
+            }
+        }
+    }
+
+    #[test]
+    fn sockets_plan_on_one_package_degrades_to_ungrouped() {
+        // One package ⇒ "local" would be everything: keep the standard
+        // full-view probe path instead of a pointless indirection.
+        let topo = CpuTopology::from_sysfs(&fixture("one_socket")).unwrap();
+        let plan = PlacementPlan::new(PinMode::Sockets, &topo, 2, 4);
+        assert!(plan.shard_groups.iter().all(Vec::is_empty));
+        assert!(plan.shard_cpus.iter().all(Option::is_some));
+    }
+
+    #[test]
+    fn more_threads_than_cpus_wraps_instead_of_panicking() {
+        let topo = CpuTopology::from_sysfs(&fixture("one_socket")).unwrap();
+        let plan = PlacementPlan::new(PinMode::Cores, &topo, 3, 16);
+        assert!(plan.shard_cpus.iter().chain(&plan.worker_cpus).all(|c| c.unwrap() < 4));
+    }
+
+    #[test]
+    fn pinning_never_panics_and_out_of_range_is_rejected() {
+        // The syscall may be denied (containers) — both outcomes are
+        // legal; what matters is no panic and an honest bool.
+        let _ = pin_current_thread(0);
+        assert!(!pin_current_thread(1 << 20));
+    }
+}

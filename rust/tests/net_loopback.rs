@@ -40,6 +40,7 @@ fn quick_cfg(frontends: usize, sync_policy: SyncPolicyConfig) -> NetServerConfig
         read_timeout: Duration::from_secs(10),
         metrics_listen: None,
         flight_record: None,
+        ..NetServerConfig::default()
     }
 }
 
