@@ -1,6 +1,6 @@
 //! Cross-process vs in-process plane: what does the wire cost?
 //!
-//! Two experiments, one harness:
+//! Three experiments, one harness:
 //!
 //! 1. **Comparable pair** — the same paced workload run twice, on the
 //!    in-process sharded plane (`plane::run_plane`, per-shard learners)
@@ -15,8 +15,16 @@
 //!    B ∈ {1, 8, 64, 256}. B=1 is the eager one-frame-per-task protocol
 //!    (one ~33-byte frame and one write syscall per task); larger B
 //!    amortizes headers and syscalls across a `SubmitBatch` frame. The
-//!    CI gate is the headline of this PR: batched (B ≥ 64) must move
-//!    ≥ 2× the tasks/sec of B=1 within the same run of this binary.
+//!    CI gate: batched (B ≥ 64) must move ≥ 2× the tasks/sec of B=1
+//!    within the same run of this binary.
+//!
+//! 3. **Poll-shard headline** — four frontends at the same saturating
+//!    offered rate, batched framing fixed at B=64, swept over the server
+//!    poll-shard count P ∈ {1, 2, 4}. P=1 is the old single-poll-loop
+//!    data plane; P ≥ 2 splits the connections across topology-pinned
+//!    epoll shards. The CI gate is the headline of this PR: the best
+//!    sharded point (P ∈ {2, 4}) must move ≥ 1.2× the tasks/sec of P=1
+//!    within the same run of this binary.
 //!
 //! `cargo bench --bench bench_net -- --json BENCH_net.json`
 
@@ -67,7 +75,11 @@ fn in_process(k: usize, cfg: &NetServerConfig) -> (f64, u64, u64) {
 /// One loopback cross-process run; `net_batch` overrides the
 /// server-advertised coalescing batch on every frontend (`Some(1)` forces
 /// the eager one-frame-per-task protocol, `None` accepts the server's B).
-fn cross_process(k: usize, cfg: &NetServerConfig, net_batch: Option<usize>) -> (f64, u64, u64) {
+fn cross_process(
+    k: usize,
+    cfg: &NetServerConfig,
+    net_batch: Option<usize>,
+) -> (f64, u64, u64, u64) {
     let mut cfg = cfg.clone();
     cfg.frontends = k;
     let server = match NetServer::bind(cfg) {
@@ -96,7 +108,7 @@ fn cross_process(k: usize, cfg: &NetServerConfig, net_batch: Option<usize>) -> (
         }
     }
     match server_handle.join().expect("server thread") {
-        Ok(r) => (r.tasks_per_sec, r.completed, r.sync_merges),
+        Ok(r) => (r.tasks_per_sec, r.completed, r.sync_merges, r.poll_wakeups),
         Err(e) => {
             eprintln!("server failed: {e}");
             std::process::exit(2);
@@ -135,7 +147,7 @@ fn main() {
     let mut comparable: Option<(f64, f64)> = None;
     for k in [1usize, 2, 4] {
         let (ip_rate, _, ip_merges) = in_process(k, &base);
-        let (net_rate, net_done, net_merges) = cross_process(k, &base, None);
+        let (net_rate, net_done, net_merges, _) = cross_process(k, &base, None);
         println!(
             "{k}   {ip_rate:>15.0}   {net_rate:>11.0}   {:>5.2}   {ip_merges:>14}   {net_merges:>10}",
             net_rate / ip_rate.max(1.0)
@@ -174,7 +186,7 @@ fn main() {
     println!("B     net tasks/s   completed   speedup vs B=1");
     let mut points: Vec<(usize, f64, u64)> = Vec::new();
     for b in BATCHES {
-        let (rate, done, _) = cross_process(1, &sweep_base, Some(b));
+        let (rate, done, _, _) = cross_process(1, &sweep_base, Some(b));
         assert!(done > 0, "sweep run completed nothing at B={b}");
         let b1 = points.first().map_or(rate, |&(_, r, _)| r);
         println!("{b:<5} {rate:>11.0}   {done:>9}   {:>13.2}", rate / b1.max(1.0));
@@ -190,6 +202,56 @@ fn main() {
     println!();
     println!(
         "batched (B>=64) vs eager (B=1): {batched:.0} vs {eager:.0} tasks/s ({speedup:.2}x)"
+    );
+
+    // -- experiment 3: poll-shard headline at a saturating offered rate --
+    //
+    // Four frontends hammer the pool with batched (B=64) framing — enough
+    // concurrent connections that a single poll shard is the serialization
+    // point — while the server's data plane is swept over P poll shards.
+    // P=1 reproduces the old single-poll-loop plane inside the new code;
+    // P >= 2 is the sharded epoll plane this PR lands.
+    let headline_base = NetServerConfig {
+        listen: "127.0.0.1:0".into(),
+        speeds: vec![8.0; 32],
+        rate: 1.5e6,
+        duration: 0.5,
+        mean_demand: 0.0004,
+        batch: 1024,
+        sync_interval: 0.2,
+        sync_policy: SyncPolicyConfig::periodic(),
+        ..NetServerConfig::default()
+    };
+    const SHARDS: [usize; 3] = [1, 2, 4];
+    println!();
+    println!(
+        "-- poll-shard headline (4 frontends, {} workers, B=64, saturating arrivals) --",
+        headline_base.speeds.len()
+    );
+    println!("P     net tasks/s   completed   wakeups   speedup vs P=1");
+    let mut shard_points: Vec<(usize, f64, u64, u64)> = Vec::new();
+    for p in SHARDS {
+        let mut cfg = headline_base.clone();
+        cfg.poll_shards = Some(p);
+        let (rate, done, _, wakeups) = cross_process(4, &cfg, Some(64));
+        assert!(done > 0, "headline run completed nothing at P={p}");
+        let p1 = shard_points.first().map_or(rate, |&(_, r, _, _)| r);
+        println!(
+            "{p:<5} {rate:>11.0}   {done:>9}   {wakeups:>7}   {:>13.2}",
+            rate / p1.max(1.0)
+        );
+        shard_points.push((p, rate, done, wakeups));
+    }
+    let single = shard_points[0].1;
+    let best_sharded = shard_points
+        .iter()
+        .filter(|&&(p, _, _, _)| p >= 2)
+        .map(|&(_, r, _, _)| r)
+        .fold(0.0_f64, f64::max);
+    let sharded_ratio = best_sharded / single.max(1.0);
+    println!();
+    println!(
+        "best sharded (P in {{2,4}}) vs single shard: {best_sharded:.0} vs {single:.0} tasks/s ({sharded_ratio:.2}x)"
     );
 
     if let Some(path) = json_path {
@@ -218,12 +280,33 @@ fn main() {
         sweep.insert("duration".into(), Json::Num(sweep_base.duration));
         sweep.insert("points".into(), Json::Arr(pts));
         sweep.insert("speedup_batched".into(), Json::Num(speedup));
+        let hpts: Vec<Json> = shard_points
+            .iter()
+            .map(|&(p, rate, done, wakeups)| {
+                let mut m = BTreeMap::new();
+                m.insert("poll_shards".into(), Json::Num(p as f64));
+                m.insert("tasks_per_sec".into(), Json::Num(rate.round()));
+                m.insert("completed".into(), Json::Num(done as f64));
+                m.insert("wakeups".into(), Json::Num(wakeups as f64));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut headline = BTreeMap::new();
+        headline.insert("frontends".into(), Json::Num(4.0));
+        headline.insert("workers".into(), Json::Num(headline_base.speeds.len() as f64));
+        headline.insert("rate".into(), Json::Num(headline_base.rate));
+        headline.insert("duration".into(), Json::Num(headline_base.duration));
+        headline.insert("net_batch".into(), Json::Num(64.0));
+        headline.insert("points".into(), Json::Arr(hpts));
+        headline.insert("tasks_per_sec".into(), Json::Num(best_sharded.round()));
+        headline.insert("sharded_ratio".into(), Json::Num(sharded_ratio));
         let mut top = BTreeMap::new();
         top.insert("bench".into(), Json::Str("net".into()));
         top.insert("policy".into(), Json::Str(base.policy.clone()));
         top.insert("seed".into(), Json::Num(base.seed as f64));
         top.insert("comparable".into(), Json::Obj(comp));
         top.insert("sweep".into(), Json::Obj(sweep));
+        top.insert("headline".into(), Json::Obj(headline));
         if let Err(e) = std::fs::write(&path, to_string(&Json::Obj(top)) + "\n") {
             eprintln!("writing {path}: {e}");
             std::process::exit(2);

@@ -228,6 +228,9 @@ pub struct NetOptions {
     /// placement on the pool server, decision-thread placement on a
     /// frontend.
     pub pin: Option<crate::plane::PinMode>,
+    /// Poll-shard count for the pool server's data plane (absent = auto:
+    /// one per package, capped at 4).
+    pub poll_shards: Option<usize>,
 }
 
 impl NetOptions {
@@ -250,6 +253,9 @@ impl NetOptions {
         }
         if let Some(pin) = self.pin {
             cfg.pin = pin;
+        }
+        if let Some(p) = self.poll_shards {
+            cfg.poll_shards = Some(p);
         }
     }
 
@@ -355,6 +361,17 @@ pub fn net_from_json(v: &Json) -> Result<NetOptions, ConfigError> {
             Some(crate::plane::PinMode::parse(s).map_err(|e| bad(format!("'net.pin': {e}")))?)
         }
     };
+    let poll_shards = match v.get("poll_shards") {
+        None => None,
+        Some(x) => {
+            let p = x.as_u64().ok_or_else(|| bad("'net.poll_shards' must be an integer"))?
+                as usize;
+            if p == 0 {
+                return Err(bad("'net.poll_shards' must be at least 1"));
+            }
+            Some(p)
+        }
+    };
     let opts = NetOptions {
         listen: net_addr(v, "listen")?,
         frontends,
@@ -364,6 +381,7 @@ pub fn net_from_json(v: &Json) -> Result<NetOptions, ConfigError> {
         batch,
         flush_us,
         pin,
+        poll_shards,
     };
     if let (Some((_, k)), Some(f)) = (opts.shard, opts.frontends) {
         if k != f {
@@ -603,6 +621,8 @@ mod tests {
         assert!(net_options_from_str(r#"{"net": {"flush_us": "soon"}}"#).is_err());
         assert!(net_options_from_str(r#"{"net": {"pin": "banana"}}"#).is_err());
         assert!(net_options_from_str(r#"{"net": {"pin": 3}}"#).is_err());
+        assert!(net_options_from_str(r#"{"net": {"poll_shards": 0}}"#).is_err());
+        assert!(net_options_from_str(r#"{"net": {"poll_shards": "all"}}"#).is_err());
         // Cross-field: the shard's k must agree with the frontend count.
         assert!(
             net_options_from_str(r#"{"net": {"frontends": 4, "shard": "0/2"}}"#).is_err()
@@ -615,7 +635,7 @@ mod tests {
             r#"{"net": {"listen": "127.0.0.1:7500", "frontends": 3,
                         "connect": "127.0.0.1:7500", "shard": "2/3",
                         "read_timeout": 5.0, "batch": 256, "flush_us": 75.0,
-                        "pin": "cores"}}"#,
+                        "pin": "cores", "poll_shards": 2}}"#,
         )
         .unwrap();
         let mut server = crate::net::NetServerConfig::default();
@@ -626,6 +646,7 @@ mod tests {
         assert_eq!(server.net_batch, 256);
         assert_eq!(server.net_flush_us, 75.0);
         assert_eq!(server.pin, crate::plane::PinMode::Cores);
+        assert_eq!(server.poll_shards, Some(2));
         let mut fe = crate::net::ConnectConfig::new("x:1", 0, 1);
         opts.apply_frontend(&mut fe);
         assert_eq!(fe.addr, "127.0.0.1:7500");

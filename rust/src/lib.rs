@@ -115,23 +115,32 @@
 //!   decisions over served probes — shipping its sync payloads over the
 //!   wire instead of through shared memory.
 //!
-//! Throughput-wise the wire is batched at both ends: frontends coalesce
-//! dispatches under an adaptive flush policy (send at `--net-batch` B
-//! tasks or after `--net-flush-us` D microseconds, whichever first — B
-//! amortizes headers and write syscalls at saturation, D preserves eager
-//! latency under light load; the server advertises defaults in its
-//! `HelloAck`, each frontend may override), and the pool server runs
-//! **one nonblocking poll loop over every connection** — a single
-//! data-plane thread with per-connection read/write buffers instead of a
-//! thread per frontend. `obs`'s `rosella_wire_tasks_per_frame` histogram
-//! reports the realized coalescing.
+//! Throughput-wise the wire is batched at both ends and event-driven in
+//! the middle: frontends coalesce dispatches under an adaptive flush
+//! policy (send at `--net-batch` B tasks or after `--net-flush-us` D
+//! microseconds, whichever first — B amortizes headers and write
+//! syscalls at saturation, D preserves eager latency under light load;
+//! the server advertises defaults in its `HelloAck`, each frontend may
+//! override), and the pool server runs **N kernel-event-driven poll
+//! shards** ([`net::poll`]: raw-syscall epoll with a portable sweep
+//! fallback) — connections partitioned round-robin at handshake, each
+//! shard thread pinned by the topology plane and owning its
+//! connections' read/write buffers and decode scratch outright, so the
+//! steady-state frame path allocates nothing and idle shards park in
+//! the kernel instead of burning a sweep loop. Default shard count is
+//! one per CPU package capped at 4 (`--net-poll-shards` overrides).
+//! `obs`'s `rosella_wire_tasks_per_frame` histogram reports the
+//! realized coalescing; `rosella_poll_wakeups_total` and
+//! `rosella_poll_events_per_wake` report how busy each shard's poller
+//! runs.
 //!
 //! A loopback run (one pool + k frontend processes) emits
 //! `BENCH_net_smoke.json` with aggregate throughput and cross-process
 //! merge counts; CI smokes it, and `benches/bench_net.rs` writes
 //! `BENCH_net.json` gating net-vs-in-process parity on a paced workload
-//! (≥ 0.6×) and the coalescing speedup at saturation (B ≥ 64 moving ≥ 2×
-//! the B=1 tasks/sec).
+//! (≥ 0.6×), the coalescing speedup at saturation (B ≥ 64 moving ≥ 2×
+//! the B=1 tasks/sec), and the sharded headline (best of 2/4 poll
+//! shards ≥ 1.2× single-shard tasks/sec at saturation).
 //!
 //! ## Observability
 //!

@@ -10,8 +10,9 @@
 //! and it is an in-process shard; over a
 //! [`TcpTransport`](super::transport::TcpTransport)
 //! ([`run_remote_frontend`]) it is `rosella frontend --connect`, a separate
-//! OS process exchanging compact wire messages with the pool server — the
-//! paper's distributed topology made literal.
+//! OS process exchanging compact wire messages with the pool server's
+//! epoll poll shard that owns its connection — the paper's distributed
+//! topology made literal.
 //!
 //! Decisions run against the *cached* probe snapshot from the last
 //! coordination beat (refreshed every [`TICK_INTERVAL`]); each submit bumps

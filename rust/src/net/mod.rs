@@ -8,7 +8,7 @@
 //! *separate OS processes*, coordinating with a shared worker pool over a
 //! compact binary protocol built on `std::net::TcpStream` alone.
 //!
-//! Three layers:
+//! Four layers:
 //!
 //! * [`wire`] — the versioned, length-prefixed little-endian framing: task
 //!   submissions and completions (single `Submit` frames or coalesced
@@ -17,7 +17,15 @@
 //!   probe/consensus tick exchanges,
 //!   [`SyncPayload`](crate::learner::SyncPayload) exports, and run
 //!   handshake/teardown, with hard frame-size bounds and bit-exact float
-//!   round-trips;
+//!   round-trips. Decoding is allocation-free on the steady state: a
+//!   [`wire::DecodeScratch`] pool recycles item/completion vectors and
+//!   string buffers across frames ([`Msg::decode_with`]);
+//! * [`poll`] — a dependency-free readiness-event facility:
+//!   [`poll::Poller`] drives raw `epoll` syscalls (inline asm, same
+//!   no-libc pattern as [`crate::plane`]'s topology probing) so an idle
+//!   shard parks in the kernel instead of sweeping sockets, with a
+//!   portable timed-sweep fallback selected at runtime (or forced via
+//!   `ROSELLA_FORCE_POLL_FALLBACK=1`) behind the identical API;
 //! * [`transport`] — the [`Transport`] seam the §5 frontend loop runs
 //!   over: [`LocalTransport`] (the plane's own in-process channels and
 //!   atomics) or [`TcpTransport`] (the wire protocol, with an adaptive
@@ -30,22 +38,29 @@
 //!   shards use, so the sync thread is byte-for-byte the plane's;
 //! * [`server`]/[`frontend`] — the two processes: `rosella plane --listen
 //!   ADDR` hosts the pool, seqlock state, and consensus thread, serving
-//!   every frontend connection from **one nonblocking poll-loop thread**
-//!   (per-connection read/write buffers swept over `set_nonblocking`
-//!   sockets — no thread per frontend, no blocking accept loop);
-//!   `rosella frontend --connect ADDR --shard i/k` runs the complete §5
-//!   scheduler stack (private learner, throttled benchmark dispatcher,
-//!   local decisions over served probes) and participates in consensus by
-//!   shipping its payloads over the wire.
+//!   frontend connections from **N topology-pinned poll shards** (default
+//!   one per CPU package, capped at 4; `--net-poll-shards` overrides).
+//!   Connections are partitioned round-robin at handshake; each shard
+//!   thread owns its connections outright — private read/write buffers,
+//!   decode scratch, and an epoll instance — so shards share nothing but
+//!   the worker pool and the seqlock state, and completion routing stays
+//!   per-shard. A drain barrier preserves the stop → drain → final-export
+//!   teardown across shards. `rosella frontend --connect ADDR --shard
+//!   i/k` runs the complete §5 scheduler stack (private learner,
+//!   throttled benchmark dispatcher, local decisions over served probes)
+//!   and participates in consensus by shipping its payloads over the
+//!   wire.
 //!
 //! A loopback run (`1` server + `k` frontends on one machine) is the
 //! first end-to-end demonstration of the paper's distributed topology;
 //! CI smoke-tests it with real OS processes (`BENCH_net_smoke.json`),
-//! and `benches/bench_net.rs` (`BENCH_net.json`) gates both the
-//! net-vs-in-process throughput ratio on a paced workload and the
-//! coalescing speedup (batched vs eager framing) at saturation.
+//! and `benches/bench_net.rs` (`BENCH_net.json`) gates the
+//! net-vs-in-process throughput ratio on a paced workload, the
+//! coalescing speedup (batched vs eager framing) at saturation, and the
+//! sharded-vs-single-shard headline ratio of the epoll data plane.
 
 pub mod frontend;
+pub mod poll;
 pub mod server;
 pub mod transport;
 pub mod wire;
@@ -54,6 +69,7 @@ pub use frontend::{
     frontend_cli, parse_shard_spec, run_frontend_loop, run_remote_frontend, ConnectConfig,
     FrontendReport, RunParams,
 };
+pub use poll::{PollEvent, Poller};
 pub use server::{bench_json, server_cli, NetReport, NetServer, NetServerConfig};
 pub use transport::{LocalTransport, TcpTransport, TickOutcome, Transport};
 pub use wire::{

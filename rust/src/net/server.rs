@@ -9,37 +9,49 @@
 //! remote scheduler frontends over the
 //! [`wire`](crate::net::wire) protocol.
 //!
-//! One data-plane thread, all connections: the serving thread runs a
-//! single nonblocking poll loop (`set_nonblocking` + readiness sweep over
-//! per-connection read/write buffers, `std::net` only) that accepts and
-//! handshakes frontends, enqueues `Submit`/`SubmitBatch` dispatches into
-//! the pool, answers beats with probe snapshots / routed completions /
-//! fresh consensus, lands `SyncExport`s in the shard's view slot, and
-//! records each frontend's `Done` statistics — no per-connection handler
-//! threads, so one pool thread serves dozens of frontends without
-//! context-switch storms. The run lifecycle is server-driven: the loop
-//! stops the run at its deadline, each connection releases its pool
-//! ingress on its first post-stop beat, the pool is joined once every
-//! ingress is released, frontends observe `stop`/`drained` through their
-//! beats, export final views, and send `Done`; the drain-time consensus
-//! epoch then merges every shard's final view exactly as the in-process
-//! plane does, and the merged [`NetReport`] is the cross-process analogue
-//! of [`PlaneReport`](crate::plane::PlaneReport).
+//! A sharded, kernel-event-driven data plane: the serving thread
+//! handshakes all `k` frontends, then partitions the connections
+//! round-robin across `N` poll-shard threads (default `min(packages, 4)`,
+//! `--net-poll-shards` to override), each pinned to its package via the
+//! [`PlacementPlan`] when `--pin` is on. Every shard runs a
+//! [`Poller`](crate::net::poll::Poller) — raw `epoll` where available, the
+//! portable readiness sweep otherwise — over nonblocking sockets with
+//! per-connection read reassembly and staged write queues, so a slow peer
+//! never blocks anyone and an idle plane sleeps in the kernel instead of
+//! sweeping. Shards enqueue `Submit`/`SubmitBatch` dispatches into the
+//! pool, answer beats with probe snapshots / routed completions / fresh
+//! consensus, land `SyncExport`s in the shard's view slot, and record each
+//! frontend's `Done` statistics — no per-connection handler threads, and
+//! the hot receive/reply path reuses decode scratch and write-queue slots
+//! so steady state allocates nothing. The run lifecycle is server-driven:
+//! the serving thread stops the run at its deadline, each connection
+//! releases its pool ingress on its first post-stop beat, the pool is
+//! joined (via a cross-shard drain barrier) once every ingress is
+//! released, frontends observe `stop`/`drained` through their beats,
+//! export final views, and send `Done`; the drain-time consensus epoch
+//! then merges every shard's final view exactly as the in-process plane
+//! does, and the merged [`NetReport`] is the cross-process analogue of
+//! [`PlaneReport`](crate::plane::PlaneReport).
 
+use super::poll::{PollEvent, Poller};
 use super::transport::{drain_completions, estimates_if_moved, lambda_total};
-use super::wire::{self, DoneStats, HelloAck, Msg, TickReply, WireCompletion};
+use super::wire::{self, DecodeScratch, DoneStats, HelloAck, Msg, TickReply, WireCompletion};
 use crate::config::Json;
 use crate::coordinator::worker::{self, Completion, CompletionSink, LiveTask, PayloadMode};
 use crate::learner::{SyncPolicy, SyncPolicyConfig};
 use crate::plane::consensus::{run_sync, SyncRun};
-use crate::plane::{CachePadded, CpuTopology, EstimateTable, PinMode, PlacementPlan, SharedViews};
+use crate::plane::{
+    default_poll_shards, pin_current_thread, CachePadded, CpuTopology, EstimateTable, PinMode,
+    PlacementPlan, SharedViews,
+};
 use crate::scheduler::PolicyKind;
 use crate::types::TaskKind;
 use std::collections::{BTreeMap, VecDeque};
+use std::io::IoSlice;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Receiver;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Completions shipped per `TickReply` at most (keeps frames far below the
@@ -104,6 +116,13 @@ pub struct NetServerConfig {
     /// and `Sockets` pin each worker thread to a discovered CPU
     /// (best-effort; a denied affinity syscall degrades to unpinned).
     pub pin: PinMode,
+    /// Poll-shard count for the data plane: `None` picks
+    /// `min(packages, 4)` (clamped to the connection count), `Some(p)`
+    /// forces exactly `p` shards (`--net-poll-shards`).
+    pub poll_shards: Option<usize>,
+    /// Force the portable readiness-sweep poller even where epoll is
+    /// available — the fallback-parity test hook.
+    pub force_poll_fallback: bool,
 }
 
 impl Default for NetServerConfig {
@@ -129,6 +148,8 @@ impl Default for NetServerConfig {
             metrics_listen: None,
             flight_record: None,
             pin: PinMode::None,
+            poll_shards: None,
+            force_poll_fallback: false,
         }
     }
 }
@@ -174,6 +195,9 @@ impl NetServerConfig {
         if !(self.sync_interval > 0.0 && self.sync_interval.is_finite()) {
             return Err("the net plane needs a positive finite sync interval".into());
         }
+        if self.poll_shards == Some(0) {
+            return Err("poll shards must be at least 1".into());
+        }
         self.sync_policy
             .validate(self.sync_interval)
             .map_err(|e| format!("sync policy: {e}"))?;
@@ -218,6 +242,12 @@ pub struct NetReport {
     pub estimates: Vec<(f64, f64)>,
     /// Per-frontend final statistics, indexed by shard.
     pub per_frontend: Vec<DoneStats>,
+    /// Poll shards the data plane ran (after clamping to the frontend
+    /// count).
+    pub poll_shards: usize,
+    /// Poller wakeups summed across shards — with frames sent/received
+    /// this gives events-per-wake, the batching the kernel poller buys.
+    pub poll_wakeups: u64,
 }
 
 impl NetReport {
@@ -260,6 +290,10 @@ impl NetReport {
         out.push_str(&format!(
             "consensus  : {} epochs, {} merges, {} payload exports over the wire\n",
             self.sync_epochs, self.sync_merges, self.sync_exports
+        ));
+        out.push_str(&format!(
+            "data plane : {} poll shards, {} wakeups\n",
+            self.poll_shards, self.poll_wakeups
         ));
         if self.resp_count() > 0 {
             out.push_str(&format!(
@@ -325,6 +359,7 @@ pub fn bench_json(cfg: &NetServerConfig, r: &NetReport) -> Json {
     results.insert("resp_count".into(), Json::Num(r.resp_count() as f64));
     results.insert("mean_ms".into(), Json::Num(r.mean_response() * 1e3));
     results.insert("worst_p95_ms".into(), Json::Num(r.worst_p95() * 1e3));
+    results.insert("poll_wakeups".into(), Json::Num(r.poll_wakeups as f64));
     results.insert("per_frontend".into(), Json::Arr(per));
     let mut top = BTreeMap::new();
     top.insert("bench".into(), Json::Str("net".into()));
@@ -334,6 +369,7 @@ pub fn bench_json(cfg: &NetServerConfig, r: &NetReport) -> Json {
     top.insert("duration".into(), Json::Num(cfg.duration));
     top.insert("seed".into(), Json::Num(cfg.seed as f64));
     top.insert("policy".into(), Json::Str(cfg.policy.clone()));
+    top.insert("poll_shards".into(), Json::Num(r.poll_shards as f64));
     top.insert("sync_policy".into(), Json::Str(cfg.sync_policy.kind.name().into()));
     top.insert("sync_interval".into(), Json::Num(cfg.sync_interval));
     top.insert("sync_threshold".into(), Json::Num(cfg.sync_policy.threshold));
@@ -367,19 +403,127 @@ struct PoolCtx {
     obs: Arc<crate::obs::Registry>,
 }
 
-/// Per-connection state the poll loop owns — the replacement for the old
+/// Most staged frames flushed per `write_vectored` call: a beat's worst
+/// case (TickReply + DoneAck + leftovers) fits comfortably, and a stack
+/// array this size costs nothing to build.
+const MAX_WRITE_IOV: usize = 8;
+
+/// Staged outbound frames, one owned slot per frame, flushed with
+/// `write_vectored` so a TickReply+completions pair (or several frames
+/// that piled up behind a slow socket) costs one syscall. Drained slots
+/// recycle through `spare`, so steady state stages without allocating.
+struct WriteQueue {
+    slots: VecDeque<Vec<u8>>,
+    spare: Vec<Vec<u8>>,
+    /// Bytes of `slots[0]` already accepted by the socket.
+    head_off: usize,
+}
+
+impl WriteQueue {
+    fn new() -> Self {
+        Self { slots: VecDeque::new(), spare: Vec::new(), head_off: 0 }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Encode `msg` into a recycled (or fresh) slot; returns the frame's
+    /// encoded length for wire accounting.
+    fn queue(&mut self, msg: &Msg) -> u64 {
+        let mut slot = self.spare.pop().unwrap_or_default();
+        slot.clear();
+        msg.encode_into(&mut slot);
+        let bytes = slot.len() as u64;
+        self.slots.push_back(slot);
+        bytes
+    }
+
+    /// Push staged frames into the socket until it would block. Returns
+    /// whether anything moved; errors keep the caller's pinned wording by
+    /// omitting the shard prefix (the caller adds it).
+    fn flush(&mut self, stream: &mut TcpStream) -> Result<bool, String> {
+        use std::io::Write;
+        let mut progress = false;
+        while !self.slots.is_empty() {
+            let mut iov = [IoSlice::new(&[]); MAX_WRITE_IOV];
+            let mut n_iov = 0;
+            for (i, slot) in self.slots.iter().take(MAX_WRITE_IOV).enumerate() {
+                iov[i] = if i == 0 {
+                    IoSlice::new(&slot[self.head_off..])
+                } else {
+                    IoSlice::new(slot)
+                };
+                n_iov += 1;
+            }
+            match stream.write_vectored(&iov[..n_iov]) {
+                Ok(0) => return Err("connection closed mid-write".into()),
+                Ok(mut sent) => {
+                    progress = true;
+                    while sent > 0 {
+                        let head_left = self.slots[0].len() - self.head_off;
+                        if sent >= head_left {
+                            sent -= head_left;
+                            self.head_off = 0;
+                            let done = self.slots.pop_front().expect("nonempty");
+                            if self.spare.len() < MAX_WRITE_IOV {
+                                self.spare.push(done);
+                            }
+                        } else {
+                            self.head_off += sent;
+                            sent = 0;
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(format!("net write: {e}")),
+            }
+        }
+        Ok(progress)
+    }
+}
+
+/// Per-shard working buffers: decode scratch, reply assembly, and the
+/// read staging area. One set per shard thread, reused across every
+/// frame that shard serves, so the hot path allocates nothing.
+struct ShardBufs {
+    /// Read staging for `read_available`.
+    tmp: Vec<u8>,
+    /// Estimate snapshot buffer for `estimates_if_moved`.
+    mu: Vec<f64>,
+    /// Queue-length snapshot reused across TickReplies.
+    qlen: Vec<u32>,
+    /// Completion batch reused across TickReplies.
+    completions: Vec<WireCompletion>,
+    /// Decode scratch: SubmitBatch item buffers recycle through here.
+    scratch: DecodeScratch,
+}
+
+impl ShardBufs {
+    fn new(n: usize) -> Self {
+        Self {
+            tmp: vec![0u8; 64 * 1024],
+            mu: vec![0.0; n],
+            qlen: Vec::with_capacity(n),
+            completions: Vec::new(),
+            scratch: DecodeScratch::new(),
+        }
+    }
+}
+
+/// Per-connection state its poll shard owns — the replacement for the old
 /// per-connection handler thread. Reads reassemble frames through
-/// `rbuf`/`roff`; replies stage through `wbuf`/`woff` so a peer that is
-/// slow to read never blocks the loop for anyone else.
+/// `rbuf`/`roff`; replies stage through the write queue so a peer that is
+/// slow to read never blocks the shard for anyone else.
 struct Conn {
     stream: TcpStream,
     shard: usize,
     /// Frame reassembly: bytes land at the tail, frames pop at `roff`.
     rbuf: Vec<u8>,
     roff: usize,
-    /// Encoded replies not yet accepted by the socket (`woff` sent so far).
-    wbuf: Vec<u8>,
-    woff: usize,
+    /// Encoded replies not yet accepted by the socket.
+    wq: WriteQueue,
     comp_rx: Receiver<Completion>,
     /// Completions drained from the pool, awaiting the next beat's reply.
     pending: VecDeque<WireCompletion>,
@@ -389,6 +533,13 @@ struct Conn {
     last_activity: Instant,
     /// `Done` received and acked: the connection is finished.
     done: bool,
+    /// Whether this connection's ingress release has been counted into the
+    /// drain barrier (guards the count against double bumps).
+    released: bool,
+    /// Whether the socket is currently registered with the shard's poller.
+    registered: bool,
+    /// Whether the poller is currently armed for write readiness.
+    want_write: bool,
     stats: Option<DoneStats>,
     dispatched: u64,
     submit_dropped: u64,
@@ -427,8 +578,9 @@ fn read_available(
 /// Try to pop one complete frame off the front of `buf`: the decoded
 /// message plus the bytes it consumed, or `None` while the frame is still
 /// partial. Header validation happens first, so a hostile length field is
-/// rejected from 12 bytes without waiting for (or allocating) a payload.
-fn try_frame(buf: &[u8]) -> Result<Option<(Msg, usize)>, String> {
+/// rejected from 12 bytes without waiting for (or allocating) a payload;
+/// batch payloads decode into `scratch`'s recycled buffers.
+fn try_frame(buf: &[u8], scratch: &mut DecodeScratch) -> Result<Option<(Msg, usize)>, String> {
     if buf.len() < wire::HEADER_LEN {
         return Ok(None);
     }
@@ -438,7 +590,7 @@ fn try_frame(buf: &[u8]) -> Result<Option<(Msg, usize)>, String> {
     if buf.len() < need {
         return Ok(None);
     }
-    let msg = Msg::decode(&buf[..need]).map_err(|e| e.to_string())?;
+    let msg = Msg::decode_with(&buf[..need], scratch).map_err(|e| e.to_string())?;
     wire::note_frames_received(1, need as u64);
     Ok(Some((msg, need)))
 }
@@ -480,6 +632,7 @@ impl NetServer {
             .map_err(|e| format!("set nonblocking: {e}"))?;
         let mut conns: Vec<Option<(TcpStream, Vec<u8>)>> = (0..k).map(|_| None).collect();
         let mut scratch = Vec::with_capacity(4096);
+        let mut dscratch = DecodeScratch::new();
         let mut tmp = vec![0u8; 64 * 1024];
         let mut greeting: Vec<(TcpStream, SocketAddr, Vec<u8>)> = Vec::new();
         let mut claimed = 0usize;
@@ -505,7 +658,9 @@ impl NetServer {
                     let got = read_available(stream, rbuf, &mut tmp)
                         .map_err(|e| format!("handshake with {peer}: {e}"))?;
                     progress |= got > 0;
-                    match try_frame(rbuf).map_err(|e| format!("handshake with {peer}: {e}"))? {
+                    match try_frame(rbuf, &mut dscratch)
+                        .map_err(|e| format!("handshake with {peer}: {e}"))?
+                    {
                         Some((Msg::Hello { shard, shards }, used)) => {
                             Some((shard as usize, shards as usize, used))
                         }
@@ -557,14 +712,42 @@ impl NetServer {
                     speeds: cfg.speeds.clone(),
                 });
                 // The ack is a few hundred bytes into a fresh socket whose
-                // send buffer is empty, so a short blocking write keeps the
-                // handshake simple without risking a stall.
-                stream.set_nonblocking(false).map_err(|e| format!("set blocking: {e}"))?;
-                wire::write_msg(&mut stream, &ack, &mut scratch)
-                    .map_err(|e| format!("handshake with {peer}: {e}"))?;
-                stream
-                    .set_nonblocking(true)
-                    .map_err(|e| format!("set nonblocking: {e}"))?;
+                // send buffer is empty, so it almost always lands in one
+                // write — but the stream stays nonblocking end to end: a
+                // peer that wedged its receive window gets a bounded retry
+                // loop here instead of a blocking write that would stall
+                // every other frontend's handshake.
+                {
+                    use std::io::Write;
+                    scratch.clear();
+                    ack.encode_into(&mut scratch);
+                    let mut off = 0usize;
+                    let write_deadline = Instant::now() + cfg.read_timeout;
+                    while off < scratch.len() {
+                        match stream.write(&scratch[off..]) {
+                            Ok(0) => {
+                                return Err(format!(
+                                    "handshake with {peer}: connection closed mid-write"
+                                ))
+                            }
+                            Ok(sent) => off += sent,
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                if Instant::now() >= write_deadline {
+                                    return Err(format!(
+                                        "handshake with {peer}: ack not accepted within {:.0?}",
+                                        cfg.read_timeout
+                                    ));
+                                }
+                                std::thread::sleep(IDLE_SLEEP);
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                            Err(e) => {
+                                return Err(format!("handshake with {peer}: net write: {e}"))
+                            }
+                        }
+                    }
+                    wire::note_frames_sent(1, scratch.len() as u64);
+                }
                 // A well-behaved frontend sends nothing until Start, but
                 // any bytes that did arrive behind the Hello are carried
                 // into the connection's reassembly buffer, not dropped.
@@ -596,11 +779,15 @@ impl NetServer {
             shard_rxs.push(rx);
         }
         let sink = CompletionSink::sharded(txs);
-        // Worker placement: the pool server hosts no shard threads (those
-        // live at the remote frontends), so the plan covers workers only.
+        // Data-plane sharding: p poll shards partition the k connections
+        // round-robin. The placement plan covers the poll shards and the
+        // workers — under `--pin` each poll shard lands on its own package
+        // (the scheduler-side shard threads live at the remote frontends).
+        let topo = CpuTopology::detect();
+        let p = cfg.poll_shards.unwrap_or_else(|| default_poll_shards(&topo, k));
         let plan = match cfg.pin {
-            PinMode::None => PlacementPlan::unpinned(0, n),
-            mode => PlacementPlan::new(mode, &CpuTopology::detect(), 0, n),
+            PinMode::None => PlacementPlan::unpinned(p, n),
+            mode => PlacementPlan::new(mode, &topo, p, n),
         };
         let workers: Vec<worker::WorkerHandle> = cfg
             .speeds
@@ -628,7 +815,7 @@ impl NetServer {
         // server only sees consensus events — placements happen at the
         // frontends), and an optional scrape listener sharing the
         // in-process plane's endpoint surface.
-        let obs = Arc::new(crate::obs::Registry::new(k, n));
+        let obs = Arc::new(crate::obs::Registry::with_poll_shards(k, n, p));
         let flight = cfg.flight_record.as_deref().map(|_| {
             Arc::new(crate::obs::FlightRecorder::new(k, crate::obs::flight::DEFAULT_CAPACITY))
         });
@@ -668,14 +855,16 @@ impl NetServer {
                 shard,
                 rbuf: rest,
                 roff: 0,
-                wbuf: Vec::with_capacity(4096),
-                woff: 0,
+                wq: WriteQueue::new(),
                 comp_rx: rx_iter.next().expect("one channel per shard"),
                 pending: VecDeque::new(),
                 clients: Some(workers.iter().map(|w| w.client.clone()).collect()),
                 disconnected: false,
                 last_activity: Instant::now(),
                 done: false,
+                released: false,
+                registered: false,
+                want_write: false,
                 stats: None,
                 dispatched: 0,
                 submit_dropped: 0,
@@ -685,11 +874,12 @@ impl NetServer {
             live.push(conn);
         }
         drop(scratch);
+        drop(tmp);
 
-        // The run itself: one nonblocking poll loop over every connection
-        // — the serving thread IS the whole data plane. The sync thread is
-        // stopped unconditionally afterwards — even when the loop failed —
-        // so no run leaks it.
+        // The run itself: p poll-shard threads serve the partitioned
+        // connections until every frontend finishes; the serving thread
+        // keeps the clock. The sync thread is stopped unconditionally
+        // afterwards — even when a shard failed — so no run leaks it.
         let ctx = PoolCtx {
             n,
             probes,
@@ -698,13 +888,71 @@ impl NetServer {
             stop,
             lambda_slots,
             start,
-            obs,
+            obs: obs.clone(),
         };
-        let served = poll_loop(&cfg, &ctx, &mut live, workers, &mut tmp);
+        let barrier = DrainBarrier::new(k, workers);
+        let mut shard_conns: Vec<Vec<Conn>> = (0..p).map(|_| Vec::new()).collect();
+        for conn in live {
+            let sid = conn.shard % p;
+            shard_conns[sid].push(conn);
+        }
+        let deadline = start + Duration::from_secs_f64(cfg.duration);
+        let mut elapsed = cfg.duration;
+        let served: Result<Vec<Conn>, String> = std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(p);
+            for (sid, conns_s) in shard_conns.into_iter().enumerate() {
+                let pin_cpu = plan.shard_cpus[sid];
+                let cfg = &cfg;
+                let ctx = &ctx;
+                let barrier = &barrier;
+                let h = std::thread::Builder::new()
+                    .name(format!("rosella-net-poll-{sid}"))
+                    .spawn_scoped(s, move || {
+                        shard_loop(sid, cfg, ctx, barrier, conns_s, pin_cpu)
+                    })
+                    .expect("spawn poll shard thread");
+                handles.push(h);
+            }
+            // Stop the run at its deadline (or as soon as a shard aborts)
+            // and let the shards drive the drain from there.
+            while Instant::now() < deadline
+                && !ctx.stop.load(Ordering::Relaxed)
+                && !barrier.abort.load(Ordering::Relaxed)
+            {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            ctx.stop.store(true, Ordering::Relaxed);
+            elapsed = ctx.start.elapsed().as_secs_f64();
+            let mut out: Result<Vec<Conn>, String> = Ok(Vec::with_capacity(k));
+            for h in handles {
+                match h.join() {
+                    Ok(Ok(conns_s)) => {
+                        if let Ok(acc) = out.as_mut() {
+                            acc.extend(conns_s);
+                        }
+                    }
+                    Ok(Err(e)) => {
+                        if out.is_ok() {
+                            out = Err(e);
+                        }
+                    }
+                    Err(_) => {
+                        if out.is_ok() {
+                            out = Err("poll shard thread panicked".into());
+                        }
+                    }
+                }
+            }
+            out
+        });
         sync_stop.store(true, Ordering::Release);
         let outcome =
             sync_handle.join().map_err(|_| "sync thread panicked".to_string())?;
-        let elapsed = served?;
+        // No run leaks worker threads: every shard path joins the pool
+        // through the barrier, and this backstop catches a shard that
+        // panicked before releasing (shutdown forces the join).
+        barrier.shutdown_pool();
+        let live = served?;
         let (mu, _lambda) = table.snapshot();
         let estimates: Vec<(f64, f64)> =
             cfg.speeds.iter().zip(mu.iter()).map(|(&t, &e)| (t, e)).collect();
@@ -723,6 +971,7 @@ impl NetServer {
         }
         let decisions: u64 = per_frontend.iter().map(|d| d.decisions).sum();
         let benchmarks: u64 = per_frontend.iter().map(|d| d.benchmarks).sum();
+        let poll_wakeups: u64 = (0..p).map(|s| obs.poll_shard(s).wakeups.get()).sum();
         if let Some(srv) = metrics {
             srv.shutdown();
         }
@@ -746,49 +995,30 @@ impl NetServer {
             sync_exports,
             estimates,
             per_frontend,
+            poll_shards: p,
+            poll_wakeups,
         })
     }
 }
 
 impl Conn {
-    /// Stage one frame for delivery; the poll loop flushes it as the
-    /// socket accepts bytes, so queueing never blocks.
+    /// Stage one frame for delivery; the owning poll shard flushes it as
+    /// the socket accepts bytes, so queueing never blocks.
     fn queue_frame(&mut self, msg: &Msg) {
-        let before = self.wbuf.len();
-        msg.encode_into(&mut self.wbuf);
-        wire::note_frames_sent(1, (self.wbuf.len() - before) as u64);
+        let bytes = self.wq.queue(msg);
+        wire::note_frames_sent(1, bytes);
     }
 
-    /// Push staged bytes into the socket until it would block. Returns
+    /// Push staged frames into the socket until it would block. Returns
     /// whether anything moved.
     fn flush_writes(&mut self) -> Result<bool, String> {
-        use std::io::Write;
-        let mut progress = false;
-        while self.woff < self.wbuf.len() {
-            match self.stream.write(&self.wbuf[self.woff..]) {
-                Ok(0) => {
-                    return Err(format!("shard {}: connection closed mid-write", self.shard))
-                }
-                Ok(sent) => {
-                    self.woff += sent;
-                    progress = true;
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
-                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
-                Err(e) => return Err(format!("shard {}: net write: {e}", self.shard)),
-            }
-        }
-        if self.woff > 0 && self.woff == self.wbuf.len() {
-            self.wbuf.clear();
-            self.woff = 0;
-        }
-        Ok(progress)
+        self.wq.flush(&mut self.stream).map_err(|e| format!("shard {}: {e}", self.shard))
     }
 
     /// Pop the next complete frame from the reassembly buffer, if one has
     /// fully arrived.
-    fn next_frame(&mut self) -> Result<Option<Msg>, String> {
-        match try_frame(&self.rbuf[self.roff..])
+    fn next_frame(&mut self, scratch: &mut DecodeScratch) -> Result<Option<Msg>, String> {
+        match try_frame(&self.rbuf[self.roff..], scratch)
             .map_err(|e| format!("shard {}: {e}", self.shard))?
         {
             Some((msg, used)) => {
@@ -859,12 +1089,15 @@ impl Conn {
 
     /// Serve one coordination beat (a `Tick` or a `SubmitBatch`'s
     /// piggybacked tick): land λ̂ₛ, drain completions, stage the reply.
+    /// The reply's qlen/completion vectors borrow the shard's reusable
+    /// buffers and are reclaimed after encoding, so a steady-state beat
+    /// allocates nothing.
     fn beat(
         &mut self,
         ctx: &PoolCtx,
         epoch: u64,
         lambda_local: f64,
-        mu_buf: &mut Vec<f64>,
+        bufs: &mut ShardBufs,
     ) -> Result<(), String> {
         // A NaN λ̂ₛ stored here would poison the lambda_live sum served to
         // every other frontend.
@@ -894,10 +1127,15 @@ impl Conn {
             pending.push_back(c)
         });
         let take = self.pending.len().min(MAX_COMPLETIONS_PER_REPLY);
-        let completions: Vec<WireCompletion> = self.pending.drain(..take).collect();
-        let estimates = estimates_if_moved(&ctx.table, epoch, mu_buf);
+        let mut completions = std::mem::take(&mut bufs.completions);
+        completions.clear();
+        completions.extend(self.pending.drain(..take));
+        let mut qlen = std::mem::take(&mut bufs.qlen);
+        qlen.clear();
+        qlen.extend(ctx.probes.iter().map(|q| q.load(Ordering::Relaxed) as u32));
+        let estimates = estimates_if_moved(&ctx.table, epoch, &mut bufs.mu);
         let reply = Msg::TickReply(TickReply {
-            qlen: ctx.probes.iter().map(|q| q.load(Ordering::Relaxed) as u32).collect(),
+            qlen,
             lambda_live: lambda_total(&ctx.lambda_slots),
             stop: stopping,
             drained: stopping
@@ -908,16 +1146,20 @@ impl Conn {
             completions,
         });
         self.queue_frame(&reply);
+        if let Msg::TickReply(r) = reply {
+            bufs.qlen = r.qlen;
+            bufs.completions = r.completions;
+        }
         Ok(())
     }
 
     /// Dispatch one decoded message — the server side of the frontend's
-    /// protocol loop, minus the socket I/O the poll loop owns.
+    /// protocol loop, minus the socket I/O the poll shard owns.
     fn handle_msg(
         &mut self,
         ctx: &PoolCtx,
         msg: Msg,
-        mu_buf: &mut Vec<f64>,
+        bufs: &mut ShardBufs,
     ) -> Result<(), String> {
         match msg {
             Msg::Submit { job, worker, kind, demand } => {
@@ -928,15 +1170,23 @@ impl Conn {
                 if !items.is_empty() {
                     ctx.obs.wire_batch.record(items.len() as u64);
                 }
-                for it in items {
-                    self.enqueue(ctx, it.job, it.worker, it.kind, it.demand)?;
+                let mut enq = Ok(());
+                for it in &items {
+                    enq = self.enqueue(ctx, it.job, it.worker, it.kind, it.demand);
+                    if enq.is_err() {
+                        break;
+                    }
                 }
+                // Hand the item buffer back to the decode scratch so the
+                // next SubmitBatch on this shard decodes allocation-free.
+                bufs.scratch.recycle(Msg::SubmitBatch { tick: None, items });
+                enq?;
                 match tick {
-                    Some((epoch, lambda_local)) => self.beat(ctx, epoch, lambda_local, mu_buf),
+                    Some((epoch, lambda_local)) => self.beat(ctx, epoch, lambda_local, bufs),
                     None => Ok(()),
                 }
             }
-            Msg::Tick { epoch, lambda_local } => self.beat(ctx, epoch, lambda_local, mu_buf),
+            Msg::Tick { epoch, lambda_local } => self.beat(ctx, epoch, lambda_local, bufs),
             Msg::SyncExport { shard, diverged, lambda_hat, views } => {
                 if shard as usize != self.shard {
                     return Err(format!(
@@ -989,93 +1239,152 @@ impl Conn {
     }
 }
 
-/// The data plane: serve every connection from the caller's thread until
-/// all of them finish, returning the measured run elapsed. On failure the
-/// pool is still released and joined before the error propagates, so no
-/// run leaks worker threads.
-fn poll_loop(
-    cfg: &NetServerConfig,
-    ctx: &PoolCtx,
-    conns: &mut [Conn],
-    workers: Vec<worker::WorkerHandle>,
-    tmp: &mut [u8],
-) -> Result<f64, String> {
-    let mut pool = Some(workers);
-    let served = poll_loop_inner(cfg, ctx, conns, &mut pool, tmp);
-    if served.is_err() {
-        // Release every ingress before joining: the failing connections
-        // never observed the stop, and the join would otherwise wait on
-        // clients nobody will release.
-        ctx.stop.store(true, Ordering::Relaxed);
-        for c in conns.iter_mut() {
-            c.clients = None;
+/// Cross-shard drain coordination. The pool may be joined only after
+/// every connection has released its ingress clients (otherwise the join
+/// waits on task senders nobody will drop), the release count is spread
+/// across shard threads, and exactly one caller gets to perform the join
+/// — the `Mutex<Option<..>>` hands the pool out once.
+struct DrainBarrier {
+    /// Connections whose ingress release has been counted.
+    released: AtomicUsize,
+    /// Total connections across all shards.
+    total: usize,
+    /// A shard failed: every other shard releases its ingress and exits.
+    abort: AtomicBool,
+    /// The worker pool, taken exactly once for the drain join.
+    pool: Mutex<Option<Vec<worker::WorkerHandle>>>,
+}
+
+impl DrainBarrier {
+    fn new(total: usize, workers: Vec<worker::WorkerHandle>) -> Self {
+        Self {
+            released: AtomicUsize::new(0),
+            total,
+            abort: AtomicBool::new(false),
+            pool: Mutex::new(Some(workers)),
         }
-        if let Some(ws) = pool.take() {
+    }
+
+    /// Count a connection's ingress release exactly once (forcing the
+    /// release if the connection still holds its clients).
+    fn mark_released(&self, c: &mut Conn) {
+        if !c.released {
+            c.clients = None;
+            c.released = true;
+            self.released.fetch_add(1, Ordering::AcqRel);
+        }
+    }
+
+    /// Join the pool once every ingress is released: the join blocks only
+    /// for in-flight task payloads, and it must happen before any
+    /// connection can report itself drained (the completion channels
+    /// disconnect only when the workers exit). Returns whether this call
+    /// performed the join.
+    fn maybe_join_pool(&self) -> bool {
+        if self.released.load(Ordering::Acquire) < self.total {
+            return false;
+        }
+        let taken = self.pool.lock().expect("pool lock").take();
+        match taken {
+            Some(ws) => {
+                for w in ws {
+                    w.shutdown();
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Force the pool join regardless of the release count — the error
+    /// backstop, so no failure path leaks worker threads.
+    fn shutdown_pool(&self) {
+        let taken = self.pool.lock().expect("pool lock").take();
+        if let Some(ws) = taken {
             for w in ws {
                 w.shutdown();
             }
         }
     }
-    served
 }
 
-fn poll_loop_inner(
+/// One poll shard: serve its slice of the connections until every one
+/// finishes, returning them for stats collection. On failure the shard
+/// aborts the run (the other shards release their ingress and exit) and
+/// force-releases its own, so the pool join can never wait on it.
+fn shard_loop(
+    sid: usize,
     cfg: &NetServerConfig,
     ctx: &PoolCtx,
-    conns: &mut [Conn],
-    pool: &mut Option<Vec<worker::WorkerHandle>>,
-    tmp: &mut [u8],
-) -> Result<f64, String> {
-    let deadline = ctx.start + Duration::from_secs_f64(cfg.duration);
-    let mut mu_buf = vec![0.0; ctx.n];
-    let mut elapsed = cfg.duration;
-    let mut stopped = false;
-    loop {
-        let mut progress = false;
-        if !stopped && Instant::now() >= deadline {
+    barrier: &DrainBarrier,
+    mut conns: Vec<Conn>,
+    pin_cpu: Option<usize>,
+) -> Result<Vec<Conn>, String> {
+    match shard_loop_inner(sid, cfg, ctx, barrier, &mut conns, pin_cpu) {
+        Ok(()) => Ok(conns),
+        Err(e) => {
+            barrier.abort.store(true, Ordering::Release);
             ctx.stop.store(true, Ordering::Relaxed);
-            elapsed = ctx.start.elapsed().as_secs_f64();
-            stopped = true;
+            for c in conns.iter_mut() {
+                barrier.mark_released(c);
+            }
+            barrier.maybe_join_pool();
+            Err(e)
         }
+    }
+}
+
+fn shard_loop_inner(
+    sid: usize,
+    cfg: &NetServerConfig,
+    ctx: &PoolCtx,
+    barrier: &DrainBarrier,
+    conns: &mut [Conn],
+    pin_cpu: Option<usize>,
+) -> Result<(), String> {
+    if let Some(cpu) = pin_cpu {
+        // Best-effort, exactly like worker pinning: a denied affinity
+        // syscall leaves the shard unpinned rather than failing the run.
+        pin_current_thread(cpu);
+    }
+    let mut poller =
+        if cfg.force_poll_fallback { Poller::fallback() } else { Poller::new() };
+    let mut bufs = ShardBufs::new(ctx.n);
+    let mut events: Vec<PollEvent> = Vec::new();
+    for (token, c) in conns.iter_mut().enumerate() {
+        poller
+            .register(&c.stream, token, false)
+            .map_err(|e| format!("poll shard {sid}: {e}"))?;
+        c.registered = true;
+    }
+    let slot = ctx.obs.poll_shard(sid);
+    // Initial service pass, forced readable+writable: the Start frames
+    // queued at build time (and any bytes carried over from the
+    // handshake) must be served now — the frontends send nothing until
+    // they see Start, so waiting for socket events first would deadlock
+    // the kernel-backed poller.
+    let mut progress = true;
+    for token in 0..conns.len() {
+        service_conn(&mut conns[token], token, true, true, &mut poller, ctx, &mut bufs)?;
+    }
+    loop {
         for c in conns.iter_mut() {
-            if c.done {
-                // Only the DoneAck can still be in flight; push it out and
-                // otherwise leave the socket alone.
-                if c.woff < c.wbuf.len() {
-                    progress |= c.flush_writes()?;
-                }
-                continue;
+            if c.done || c.clients.is_none() {
+                barrier.mark_released(c);
             }
-            progress |= c.flush_writes()?;
-            let got = read_available(&mut c.stream, &mut c.rbuf, tmp)
-                .map_err(|e| format!("shard {}: {e}", c.shard))?;
-            if got > 0 {
-                progress = true;
-                c.last_activity = Instant::now();
-            }
-            while let Some(msg) = c.next_frame()? {
-                progress = true;
-                c.handle_msg(ctx, msg, &mut mu_buf)?;
-                if c.done {
-                    break;
-                }
-            }
-            // Flush once more so replies staged this sweep leave now
-            // instead of waiting out the idle nap.
-            progress |= c.flush_writes()?;
         }
-        // Join the pool once every connection has released its ingress:
-        // the join blocks only for in-flight task payloads, and it must
-        // happen before any connection can report itself drained (the
-        // completion channels disconnect only when the workers exit).
-        if stopped && pool.is_some() && conns.iter().all(|c| c.done || c.clients.is_none()) {
-            for w in pool.take().expect("checked is_some") {
-                w.shutdown();
-            }
+        if barrier.maybe_join_pool() {
             progress = true;
         }
-        if conns.iter().all(|c| c.done && c.woff >= c.wbuf.len()) {
-            return Ok(elapsed);
+        if conns.iter().all(|c| c.done && c.wq.is_empty()) {
+            return Ok(());
+        }
+        if barrier.abort.load(Ordering::Acquire) {
+            for c in conns.iter_mut() {
+                barrier.mark_released(c);
+            }
+            barrier.maybe_join_pool();
+            return Ok(());
         }
         if !progress {
             let now = Instant::now();
@@ -1087,9 +1396,97 @@ fn poll_loop_inner(
                     ));
                 }
             }
-            std::thread::sleep(IDLE_SLEEP);
+        }
+        // A productive pass polls again immediately; an idle one parks in
+        // the kernel for the nap interval, which also bounds how stale
+        // the stop/abort/drain bookkeeping above can get.
+        let timeout = if progress { Duration::ZERO } else { IDLE_SLEEP };
+        let nev = poller
+            .wait(&mut events, timeout)
+            .map_err(|e| format!("poll shard {sid}: {e}"))?;
+        slot.wakeups.inc();
+        slot.events_per_wake.record(nev as u64);
+        progress = false;
+        for i in 0..nev {
+            let ev = events[i];
+            progress |= service_conn(
+                &mut conns[ev.token],
+                ev.token,
+                ev.readable,
+                ev.writable,
+                &mut poller,
+                ctx,
+                &mut bufs,
+            )?;
         }
     }
+}
+
+/// Serve one connection after a readiness event (or during a forced
+/// pass): flush staged writes, drain readable bytes into frames, and keep
+/// the poller's interest set in sync with the connection's state. Returns
+/// whether anything moved.
+fn service_conn(
+    c: &mut Conn,
+    token: usize,
+    readable: bool,
+    writable: bool,
+    poller: &mut Poller,
+    ctx: &PoolCtx,
+    bufs: &mut ShardBufs,
+) -> Result<bool, String> {
+    let mut progress = false;
+    if c.done {
+        // Only the DoneAck can still be in flight; push it out and
+        // otherwise leave the socket alone.
+        if !c.wq.is_empty() {
+            progress |= c.flush_writes()?;
+        }
+    } else {
+        if writable || !c.wq.is_empty() {
+            progress |= c.flush_writes()?;
+        }
+        if readable {
+            let got = read_available(&mut c.stream, &mut c.rbuf, &mut bufs.tmp)
+                .map_err(|e| format!("shard {}: {e}", c.shard))?;
+            if got > 0 {
+                progress = true;
+                c.last_activity = Instant::now();
+            }
+            while let Some(msg) = c.next_frame(&mut bufs.scratch)? {
+                progress = true;
+                c.handle_msg(ctx, msg, bufs)?;
+                if c.done {
+                    break;
+                }
+            }
+            // Flush replies staged this pass so they leave now instead of
+            // waiting out the next wakeup.
+            progress |= c.flush_writes()?;
+        }
+    }
+    // Keep the poller in sync: a finished connection stops producing
+    // events entirely (a closed peer would otherwise hang up and spin the
+    // level-triggered poller), and write interest tracks whether staged
+    // bytes survived the flush (a nonempty queue means the socket pushed
+    // back, so EPOLLOUT is the wakeup that matters).
+    if c.done && c.wq.is_empty() {
+        if c.registered {
+            poller
+                .deregister(&c.stream, token)
+                .map_err(|e| format!("shard {}: {e}", c.shard))?;
+            c.registered = false;
+        }
+    } else if c.registered {
+        let want = !c.wq.is_empty();
+        if want != c.want_write {
+            poller
+                .set_writable(&c.stream, token, want)
+                .map_err(|e| format!("shard {}: {e}", c.shard))?;
+            c.want_write = want;
+        }
+    }
+    Ok(progress)
 }
 
 /// CLI adapter for `rosella plane --listen`: the pool-server side of the
@@ -1143,6 +1540,9 @@ pub fn server_cli(p: &crate::cli::Parsed) -> Result<String, String> {
         cfg.sync_policy.threshold = t;
     }
     cfg.fake_jobs = !p.flag("no-fake-jobs");
+    if let Some(v) = p.parse_as("net-poll-shards")? {
+        cfg.poll_shards = Some(v);
+    }
     cfg.metrics_listen = p.get("metrics-listen").map(str::to_string);
     cfg.flight_record = p.get("flight-record").map(str::to_string);
     cfg.pin = PinMode::parse(p.get("pin").unwrap_or("none"))?;
@@ -1193,6 +1593,10 @@ mod tests {
         // at config time, not produce a policy that never or always merges.
         assert!(bad(|c| c.sync_policy.threshold = f64::NAN).is_err());
         assert!(bad(|c| c.sync_policy.threshold = -0.5).is_err());
+        // Zero poll shards is degenerate; None (auto) and any positive
+        // count are fine.
+        assert!(bad(|c| c.poll_shards = Some(0)).is_err());
+        assert!(bad(|c| c.poll_shards = Some(3)).is_ok());
     }
 
     #[test]
@@ -1233,6 +1637,8 @@ mod tests {
                     resp_p95: 0.04,
                 },
             ],
+            poll_shards: 2,
+            poll_wakeups: 1234,
         };
         assert_eq!(report.resp_count(), 590);
         assert!((report.mean_response() - 0.013).abs() < 1e-12);
@@ -1243,10 +1649,13 @@ mod tests {
         assert!(results.get("tasks_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
         assert_eq!(results.get("sync_merges").and_then(Json::as_f64), Some(7.0));
         assert_eq!(results.get("sync_exports").and_then(Json::as_f64), Some(14.0));
+        assert_eq!(results.get("poll_wakeups").and_then(Json::as_f64), Some(1234.0));
+        assert_eq!(back.get("poll_shards").and_then(Json::as_f64), Some(2.0));
         let per = results.get("per_frontend").and_then(Json::as_arr).unwrap();
         assert_eq!(per.len(), 2);
         let rendered = report.render();
         assert!(rendered.contains("2 remote frontends"));
         assert!(rendered.contains("payload exports over the wire"));
+        assert!(rendered.contains("2 poll shards"));
     }
 }

@@ -23,7 +23,7 @@
 //! additionally bumps its cached probe for each task it submits between
 //! refreshes, so back-to-back decisions do not dogpile one worker).
 
-use super::wire::{self, Estimates, Msg, SubmitItem, TickReply, WireCompletion};
+use super::wire::{self, DecodeScratch, Estimates, Msg, SubmitItem, WireCompletion};
 use crate::coordinator::worker::{Completion, LiveTask, WorkerClient};
 use crate::learner::EstimateView;
 use crate::plane::{CachePadded, EstimateTable, SharedViews};
@@ -367,6 +367,9 @@ pub(crate) fn to_wire(c: &Completion, start: Instant) -> WireCompletion {
 pub struct TcpTransport {
     stream: TcpStream,
     scratch: Vec<u8>,
+    /// Decode scratch: TickReply completion buffers recycle through here,
+    /// so the steady-state beat loop stops allocating.
+    decode: DecodeScratch,
     /// This frontend's shard index (stamped into `SyncExport` frames; the
     /// server cross-checks it against the connection's claimed identity).
     shard: u32,
@@ -382,6 +385,7 @@ impl TcpTransport {
         Self {
             stream,
             scratch: Vec::with_capacity(4096),
+            decode: DecodeScratch::new(),
             shard: shard as u32,
             coalescer: SubmitCoalescer::new(1, Duration::ZERO),
         }
@@ -399,8 +403,9 @@ impl TcpTransport {
     }
 
     /// Read one message (blocking, subject to the stream's read timeout).
+    /// Hot-path collections draw from the transport's decode scratch.
     pub fn recv(&mut self) -> Result<Msg, String> {
-        wire::read_msg(&mut self.stream, &mut self.scratch)
+        wire::read_msg_with(&mut self.stream, &mut self.scratch, &mut self.decode)
     }
 }
 
@@ -434,24 +439,31 @@ impl Transport for TcpTransport {
             .flush_frame(Some((epoch, lambda_local)))
             .expect("a beat-carrying flush always produces a frame");
         self.send(&beat)?;
-        let reply = match self.recv()? {
+        let mut reply = match self.recv()? {
             Msg::TickReply(r) => r,
             other => return Err(format!("expected TickReply, got {:?}", other.tag())),
         };
-        let TickReply { qlen: probes, lambda_live, stop, drained, estimates, completions: cs } =
-            reply;
-        if probes.len() != qlen.len() {
+        if reply.qlen.len() != qlen.len() {
             return Err(format!(
                 "probe vector length {} does not match the {}-worker cluster",
-                probes.len(),
+                reply.qlen.len(),
                 qlen.len()
             ));
         }
-        for (out, p) in qlen.iter_mut().zip(probes) {
+        for (out, &p) in qlen.iter_mut().zip(reply.qlen.iter()) {
             *out = p as usize;
         }
-        completions.extend_from_slice(&cs);
-        Ok(TickOutcome { lambda_live, estimates, stop, drained })
+        completions.extend_from_slice(&reply.completions);
+        let outcome = TickOutcome {
+            lambda_live: reply.lambda_live,
+            estimates: reply.estimates.take(),
+            stop: reply.stop,
+            drained: reply.drained,
+        };
+        // Hand the completion buffer back to the decode scratch so the
+        // next beat's reply decodes allocation-free.
+        self.decode.recycle(Msg::TickReply(reply));
+        Ok(outcome)
     }
 
     fn export(

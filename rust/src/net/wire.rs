@@ -383,6 +383,46 @@ fn put_completions(out: &mut Vec<u8>, cs: &[WireCompletion]) {
     }
 }
 
+/// Reusable decode buffers for the hot-path message collections:
+/// `SubmitBatch` items and `TickReply` completions. [`Msg::decode_with`]
+/// moves these (cleared, capacity retained) into the decoded message;
+/// [`DecodeScratch::recycle`] reclaims them once the message is handled,
+/// so a connection's steady-state receive loop allocates only until its
+/// buffers reach the high-water frame size.
+#[derive(Debug, Default)]
+pub struct DecodeScratch {
+    items: Vec<SubmitItem>,
+    completions: Vec<WireCompletion>,
+}
+
+impl DecodeScratch {
+    /// Empty scratch; buffers grow to the connection's frame sizes on use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reclaim the hot-path buffers from a handled message. Call with the
+    /// message a prior [`Msg::decode_with`] produced once its contents are
+    /// no longer needed; non-collection messages are a no-op.
+    pub fn recycle(&mut self, msg: Msg) {
+        match msg {
+            Msg::SubmitBatch { items, .. } => {
+                if items.capacity() > self.items.capacity() {
+                    self.items = items;
+                    self.items.clear();
+                }
+            }
+            Msg::TickReply(r) => {
+                if r.completions.capacity() > self.completions.capacity() {
+                    self.completions = r.completions;
+                    self.completions.clear();
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
 /// Bounds-checked little-endian reader over a payload slice.
 struct Cur<'a> {
     buf: &'a [u8],
@@ -446,7 +486,11 @@ impl<'a> Cur<'a> {
 
     fn string(&mut self) -> Result<String, WireError> {
         let n = self.count(1)?;
-        String::from_utf8(self.take(n)?.to_vec())
+        // Validate against the borrowed slice and copy once; going through
+        // `String::from_utf8(to_vec())` would copy before validating and
+        // pay twice for every accepted string.
+        std::str::from_utf8(self.take(n)?)
+            .map(str::to_owned)
             .map_err(|_| WireError::Malformed("string is not utf-8"))
     }
 
@@ -469,35 +513,41 @@ impl<'a> Cur<'a> {
             .collect()
     }
 
-    fn items(&mut self) -> Result<Vec<SubmitItem>, WireError> {
+    /// Decode the item array into `out` (cleared first), reusing its
+    /// capacity — the allocation-free half of [`Msg::decode_with`].
+    fn items_into(&mut self, out: &mut Vec<SubmitItem>) -> Result<(), WireError> {
+        out.clear();
         let n = self.count(SUBMIT_ITEM_LEN)?;
-        (0..n)
-            .map(|_| {
-                Ok(SubmitItem {
-                    job: self.u64()?,
-                    worker: self.u32()?,
-                    kind: self.kind()?,
-                    demand: self.f64()?,
-                })
-            })
-            .collect()
+        out.reserve(n);
+        for _ in 0..n {
+            out.push(SubmitItem {
+                job: self.u64()?,
+                worker: self.u32()?,
+                kind: self.kind()?,
+                demand: self.f64()?,
+            });
+        }
+        Ok(())
     }
 
-    fn completions(&mut self) -> Result<Vec<WireCompletion>, WireError> {
+    /// Decode the completion array into `out` (cleared first), reusing its
+    /// capacity.
+    fn completions_into(&mut self, out: &mut Vec<WireCompletion>) -> Result<(), WireError> {
+        out.clear();
         let n = self.count(COMPLETION_LEN)?;
-        (0..n)
-            .map(|_| {
-                Ok(WireCompletion {
-                    job: self.u64()?,
-                    worker: self.u32()?,
-                    kind: self.kind()?,
-                    demand: self.f64()?,
-                    duration: self.f64()?,
-                    sojourn: self.f64()?,
-                    at: self.f64()?,
-                })
-            })
-            .collect()
+        out.reserve(n);
+        for _ in 0..n {
+            out.push(WireCompletion {
+                job: self.u64()?,
+                worker: self.u32()?,
+                kind: self.kind()?,
+                demand: self.f64()?,
+                duration: self.f64()?,
+                sojourn: self.f64()?,
+                at: self.f64()?,
+            });
+        }
+        Ok(())
     }
 
     fn done(&self) -> Result<(), WireError> {
@@ -641,6 +691,18 @@ impl Msg {
 
     /// Decode exactly one complete frame from `frame`.
     pub fn decode(frame: &[u8]) -> Result<Msg, WireError> {
+        Self::decode_with(frame, &mut DecodeScratch::default())
+    }
+
+    /// Decode exactly one complete frame from `frame`, drawing the decoded
+    /// message's hot-path collections (`SubmitBatch` items, `TickReply`
+    /// completions) from `scratch` instead of fresh allocations. Pair with
+    /// [`DecodeScratch::recycle`] after the message is handled and the
+    /// steady-state receive path stops allocating entirely. Scratch
+    /// buffers are cleared before they are filled, so a reused buffer can
+    /// never leak a previous frame's contents — even when this decode
+    /// fails partway through a hostile or truncated frame.
+    pub fn decode_with(frame: &[u8], scratch: &mut DecodeScratch) -> Result<Msg, WireError> {
         if frame.len() < HEADER_LEN {
             return Err(WireError::Truncated);
         }
@@ -655,10 +717,14 @@ impl Msg {
         if body.len() > len {
             return Err(WireError::Malformed("trailing bytes"));
         }
-        Self::decode_body(tag, body)
+        Self::decode_body(tag, body, scratch)
     }
 
-    fn decode_body(tag: u16, body: &[u8]) -> Result<Msg, WireError> {
+    fn decode_body(
+        tag: u16,
+        body: &[u8],
+        scratch: &mut DecodeScratch,
+    ) -> Result<Msg, WireError> {
         let mut c = Cur { buf: body };
         let msg = match tag {
             TAG_HELLO => Msg::Hello { shard: c.u32()?, shards: c.u32()? },
@@ -695,7 +761,8 @@ impl Msg {
                     1 => Some((c.u64()?, c.f64()?)),
                     _ => return Err(WireError::Malformed("tick flag out of range")),
                 };
-                Msg::SubmitBatch { tick, items: c.items()? }
+                c.items_into(&mut scratch.items)?;
+                Msg::SubmitBatch { tick, items: std::mem::take(&mut scratch.items) }
             }
             TAG_TICK => Msg::Tick { epoch: c.u64()?, lambda_local: c.f64()? },
             TAG_TICK_REPLY => {
@@ -712,7 +779,8 @@ impl Msg {
                     }),
                     _ => return Err(WireError::Malformed("estimates flag out of range")),
                 };
-                let completions = c.completions()?;
+                c.completions_into(&mut scratch.completions)?;
+                let completions = std::mem::take(&mut scratch.completions);
                 Msg::TickReply(TickReply {
                     qlen,
                     lambda_live,
@@ -808,6 +876,18 @@ pub fn write_msg<W: Write>(w: &mut W, msg: &Msg, scratch: &mut Vec<u8>) -> Resul
 /// decode it. Header validation happens before the payload is read, so an
 /// oversized or alien frame is rejected without buffering it.
 pub fn read_msg<R: Read>(r: &mut R, scratch: &mut Vec<u8>) -> Result<Msg, String> {
+    read_msg_with(r, scratch, &mut DecodeScratch::default())
+}
+
+/// [`read_msg`] with caller-owned decode scratch: the decoded message's
+/// hot-path collections draw from `decode` instead of fresh allocations
+/// (pair with [`DecodeScratch::recycle`]), so a transport's steady-state
+/// receive loop stops allocating entirely.
+pub fn read_msg_with<R: Read>(
+    r: &mut R,
+    scratch: &mut Vec<u8>,
+    decode: &mut DecodeScratch,
+) -> Result<Msg, String> {
     let mut header = [0u8; HEADER_LEN];
     r.read_exact(&mut header).map_err(|e| format!("net read header: {e}"))?;
     let len = header_payload_len(&header).map_err(|e| format!("net frame: {e}"))?;
@@ -816,7 +896,7 @@ pub fn read_msg<R: Read>(r: &mut R, scratch: &mut Vec<u8>) -> Result<Msg, String
     scratch.resize(HEADER_LEN + len, 0);
     r.read_exact(&mut scratch[HEADER_LEN..])
         .map_err(|e| format!("net read body: {e}"))?;
-    let msg = Msg::decode(scratch).map_err(|e| format!("net frame: {e}"))?;
+    let msg = Msg::decode_with(scratch, decode).map_err(|e| format!("net frame: {e}"))?;
     FRAMES_RECEIVED.fetch_add(1, Ordering::Relaxed);
     BYTES_RECEIVED.fetch_add(scratch.len() as u64, Ordering::Relaxed);
     Ok(msg)
@@ -1095,5 +1175,107 @@ mod tests {
         assert!(after.frames_received >= before.frames_received + 1);
         assert!(after.bytes_sent >= before.bytes_sent + frame_len);
         assert!(after.bytes_received >= before.bytes_received + frame_len);
+    }
+
+    fn batch_frame(items: Vec<SubmitItem>) -> Vec<u8> {
+        let mut buf = Vec::new();
+        Msg::SubmitBatch { tick: None, items }.encode_into(&mut buf);
+        buf
+    }
+
+    #[test]
+    fn decode_with_matches_decode_and_reuses_recycled_buffers() {
+        let mut scratch = DecodeScratch::new();
+        let big: Vec<SubmitItem> = (0..64)
+            .map(|i| SubmitItem {
+                job: i,
+                worker: (i % 4) as u32,
+                kind: TaskKind::Real,
+                demand: 0.001 * (i + 1) as f64,
+            })
+            .collect();
+        let frame = batch_frame(big.clone());
+        let msg = Msg::decode_with(&frame, &mut scratch).unwrap();
+        assert_eq!(msg, Msg::decode(&frame).unwrap());
+        scratch.recycle(msg);
+        assert!(scratch.items.capacity() >= 64, "recycle dropped the buffer");
+
+        // A smaller batch decoded through the same scratch must contain
+        // exactly its own items — none of the 64 recycled ones.
+        let small = vec![SubmitItem {
+            job: 999,
+            worker: 1,
+            kind: TaskKind::Benchmark,
+            demand: 0.5,
+        }];
+        let frame = batch_frame(small.clone());
+        match Msg::decode_with(&frame, &mut scratch).unwrap() {
+            Msg::SubmitBatch { items, .. } => assert_eq!(items, small),
+            other => panic!("decoded {other:?}"),
+        }
+
+        // Same reuse contract on the completions path.
+        let reply = TickReply {
+            completions: vec![sample_completion(); 32],
+            ..TickReply::default()
+        };
+        let mut frame = Vec::new();
+        Msg::TickReply(reply.clone()).encode_into(&mut frame);
+        let msg = Msg::decode_with(&frame, &mut scratch).unwrap();
+        assert_eq!(msg, Msg::TickReply(reply));
+        scratch.recycle(msg);
+        let mut frame = Vec::new();
+        Msg::TickReply(TickReply::default()).encode_into(&mut frame);
+        match Msg::decode_with(&frame, &mut scratch).unwrap() {
+            Msg::TickReply(r) => assert!(r.completions.is_empty()),
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reused_scratch_never_leaks_across_hostile_or_truncated_frames() {
+        let mut scratch = DecodeScratch::new();
+        let filler: Vec<SubmitItem> = (0..16)
+            .map(|i| SubmitItem {
+                job: 0xDEAD_0000 + i,
+                worker: 0,
+                kind: TaskKind::Real,
+                demand: 1.0,
+            })
+            .collect();
+        let frame = batch_frame(filler);
+        let msg = Msg::decode_with(&frame, &mut scratch).unwrap();
+        scratch.recycle(msg);
+
+        // Hostile count: claims u32::MAX items; must fail without the
+        // allocation and without disturbing the reuse contract.
+        let mut hostile = batch_frame(vec![]);
+        let n = hostile.len();
+        hostile[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(
+            Msg::decode_with(&hostile, &mut scratch),
+            Err(WireError::Truncated)
+        );
+
+        // Truncated frame: every prefix fails.
+        let whole = batch_frame(vec![SubmitItem {
+            job: 1,
+            worker: 0,
+            kind: TaskKind::Real,
+            demand: 0.1,
+        }]);
+        for cut in 0..whole.len() {
+            assert!(Msg::decode_with(&whole[..cut], &mut scratch).is_err());
+        }
+
+        // After the failures, a clean empty batch through the same scratch
+        // holds zero items — nothing from the 16-item fill survived.
+        let frame = batch_frame(vec![]);
+        match Msg::decode_with(&frame, &mut scratch).unwrap() {
+            Msg::SubmitBatch { items, .. } => {
+                assert!(items.is_empty(), "scratch leaked prior contents: {items:?}");
+            }
+            other => panic!("decoded {other:?}"),
+        }
     }
 }

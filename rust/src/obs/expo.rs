@@ -190,6 +190,24 @@ pub fn render_into(reg: &Registry, out: &mut Expo) {
     out.histogram("rosella_response_seconds", &reg.aggregate(|s| &s.response_us), 1e-6);
     out.histogram("rosella_wire_tasks_per_frame", &reg.wire_batch.snapshot(), 1.0);
 
+    // Net data-plane poller surface: per-shard wakeup counters plus the
+    // aggregated events-per-wake histogram (how many sockets one kernel
+    // wakeup served — the sweep fallback reports every socket per pass).
+    out.header("rosella_poll_wakeups_total", "counter");
+    for (i, p) in reg.poll_shards().iter().enumerate() {
+        let label = i.to_string();
+        out.sample(
+            "rosella_poll_wakeups_total",
+            &[("poll_shard", &label)],
+            p.wakeups.get() as f64,
+        );
+    }
+    let mut events_per_wake = HistSnapshot::empty();
+    for p in reg.poll_shards() {
+        p.events_per_wake.merge_into(&mut events_per_wake);
+    }
+    out.histogram("rosella_poll_events_per_wake", &events_per_wake, 1.0);
+
     out.header("rosella_mu_hat", "gauge");
     for w in 0..reg.n_workers() {
         let label = w.to_string();
@@ -306,7 +324,7 @@ mod tests {
 
     #[test]
     fn registry_rendering_is_well_formed_and_covers_surface() {
-        let reg = Registry::new(2, 3);
+        let reg = Registry::with_poll_shards(2, 3, 2);
         reg.shard(0).dispatched.add(10);
         reg.shard(1).dispatched.add(5);
         reg.shard(0).completed.add(9);
@@ -316,6 +334,9 @@ mod tests {
         reg.lambda_hat.set(123.0);
         reg.sync_merges.add(4);
         reg.wire_batch.record(64);
+        reg.poll_shard(1).wakeups.add(7);
+        reg.poll_shard(0).events_per_wake.record(3);
+        reg.poll_shard(1).events_per_wake.record(1);
         let doc = render(&reg);
         assert!(is_well_formed(&doc), "malformed exposition:\n{doc}");
         for name in [
@@ -330,11 +351,17 @@ mod tests {
             "rosella_sync_merges_total",
             "rosella_shard_cpu",
             "rosella_cross_socket_decisions_total",
+            "rosella_poll_wakeups_total",
+            "rosella_poll_events_per_wake_count",
         ] {
             assert!(doc.contains(name), "missing {name} in:\n{doc}");
         }
         assert!(doc.contains("rosella_tasks_dispatched_total{shard=\"1\"} 5"));
         assert!(doc.contains("rosella_mu_hat{worker=\"2\"} 0.5"));
+        // Poll slots render per shard; the histogram aggregates both.
+        assert!(doc.contains("rosella_poll_wakeups_total{poll_shard=\"1\"} 7"));
+        assert!(doc.contains("rosella_poll_wakeups_total{poll_shard=\"0\"} 0"));
+        assert!(doc.contains("rosella_poll_events_per_wake_count 2"));
         // Topology gauges exist even with pinning disabled: the unpinned
         // sentinel is rendered, not omitted.
         assert!(doc.contains("rosella_shard_cpu{shard=\"0\"} -1"));

@@ -264,11 +264,24 @@ impl Default for ShardSlot {
     }
 }
 
+/// Per-poll-shard metric slot for the net server's data plane. One poll
+/// shard thread writes, any thread reads — the same one-writer-per-slot
+/// discipline as [`ShardSlot`].
+#[derive(Debug, Default)]
+pub struct PollSlot {
+    /// Poller wait calls that returned (kernel wakeups or sweep passes).
+    pub wakeups: Counter,
+    /// Readiness events surfaced per wakeup: the batching the kernel
+    /// poller buys — high values mean one wakeup served many sockets.
+    pub events_per_wake: Log2Histogram,
+}
+
 /// The run-wide registry: per-shard slots plus cluster-level gauges and
 /// consensus counters. Constructed once per run, shared via `Arc`.
 #[derive(Debug)]
 pub struct Registry {
     shards: Box<[ShardSlot]>,
+    polls: Box<[PollSlot]>,
     mu_hat: Box<[Gauge]>,
     /// Aggregate arrival-rate estimate λ̂ (tasks/second).
     pub lambda_hat: Gauge,
@@ -289,11 +302,21 @@ pub struct Registry {
 }
 
 impl Registry {
-    /// Registry for `shards` scheduler threads over `workers` workers.
+    /// Registry for `shards` scheduler threads over `workers` workers,
+    /// with one poll slot (the in-process plane has no poll shards; one
+    /// slot keeps the exposition surface uniform).
     pub fn new(shards: usize, workers: usize) -> Self {
+        Self::with_poll_shards(shards, workers, 1)
+    }
+
+    /// Registry for `shards` scheduler threads over `workers` workers and
+    /// `poll_shards` net data-plane poller threads.
+    pub fn with_poll_shards(shards: usize, workers: usize, poll_shards: usize) -> Self {
         assert!(shards > 0, "registry needs at least one shard slot");
+        assert!(poll_shards > 0, "registry needs at least one poll slot");
         Self {
             shards: (0..shards).map(|_| ShardSlot::default()).collect(),
+            polls: (0..poll_shards).map(|_| PollSlot::default()).collect(),
             mu_hat: (0..workers).map(|_| Gauge::new()).collect(),
             lambda_hat: Gauge::new(),
             sync_epochs: Counter::new(),
@@ -308,6 +331,22 @@ impl Registry {
     /// Number of shard slots.
     pub fn n_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Number of poll slots.
+    pub fn n_poll_shards(&self) -> usize {
+        self.polls.len()
+    }
+
+    /// One poll shard's slot. Index must be < `n_poll_shards`.
+    #[inline]
+    pub fn poll_shard(&self, i: usize) -> &PollSlot {
+        &self.polls[i]
+    }
+
+    /// All poll slots (rendering/aggregation).
+    pub fn poll_shards(&self) -> &[PollSlot] {
+        &self.polls
     }
 
     /// Number of worker gauges.
@@ -446,6 +485,20 @@ mod tests {
         reg.shard(1).shard_cpu.set(3.0);
         assert_eq!(reg.shard(1).shard_cpu.get(), 3.0);
         assert_eq!(reg.shard(0).shard_cpu.get(), -1.0, "slots are independent");
+    }
+
+    #[test]
+    fn poll_slots_default_to_one_and_scale_on_request() {
+        let reg = Registry::new(2, 1);
+        assert_eq!(reg.n_poll_shards(), 1);
+        let reg = Registry::with_poll_shards(2, 1, 4);
+        assert_eq!(reg.n_poll_shards(), 4);
+        reg.poll_shard(3).wakeups.inc();
+        reg.poll_shard(3).events_per_wake.record(5);
+        assert_eq!(reg.poll_shard(3).wakeups.get(), 1);
+        assert_eq!(reg.poll_shard(0).wakeups.get(), 0, "slots are independent");
+        let total: u64 = reg.poll_shards().iter().map(|p| p.events_per_wake.count()).sum();
+        assert_eq!(total, 1);
     }
 
     #[test]

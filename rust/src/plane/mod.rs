@@ -141,7 +141,8 @@ pub use ingest::{Arrival, ArrivalBatcher};
 pub use shard::{encode_job, job_shard, shard_seeds, FrontendCore, BENCH_LOCAL_JOB};
 pub use state::{CachePadded, EstimateCache, EstimateTable, SharedView};
 pub use topo::{
-    pin_current_thread, CpuTopology, PinMode, PlacementPlan, DEFAULT_SPILL_THRESHOLD,
+    default_poll_shards, pin_current_thread, CpuTopology, PinMode, PlacementPlan,
+    DEFAULT_SPILL_THRESHOLD,
 };
 
 use crate::coordinator::worker::{

@@ -168,6 +168,15 @@ impl CpuTopology {
     }
 }
 
+/// Default poll-shard count for the net data plane: one shard per package
+/// (each shard pins to its own socket, so the NIC-local package always
+/// hosts one), capped at 4 — beyond that the shards outnumber the
+/// connections' ability to keep them busy — and never more than the
+/// connection count or fewer than 1.
+pub fn default_poll_shards(topo: &CpuTopology, conns: usize) -> usize {
+    topo.n_packages().min(4).min(conns.max(1)).max(1)
+}
+
 /// Read a small sysfs id file: trimmed non-negative integer or `None`.
 fn read_id(path: &Path) -> Option<usize> {
     std::fs::read_to_string(path).ok()?.trim().parse::<usize>().ok()

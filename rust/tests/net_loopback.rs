@@ -197,16 +197,67 @@ fn batched_and_unbatched_runs_agree_on_the_physics() {
 }
 
 #[test]
+fn fallback_poller_matches_epoll_on_the_physics() {
+    // The poll backend is a wakeup mechanism, not a semantics change: with
+    // the kernel-event poller swapped out for the portable timed sweep and
+    // the connections split across two poll shards, every conservation
+    // contract still holds — no task lost or duplicated, consensus payloads
+    // still cross the wire, and the run still learns the 8x speed ordering
+    // — whether dispatches ride batched frames or the eager protocol.
+    let cfg = || NetServerConfig {
+        speeds: vec![2.0, 0.25],
+        rate: 200.0,
+        duration: 1.5,
+        mean_demand: 0.004,
+        force_poll_fallback: true,
+        poll_shards: Some(2),
+        ..quick_cfg(2, SyncPolicyConfig::periodic())
+    };
+    let (batched, reports) = run_loopback_with(cfg(), None);
+    let (eager, _) = run_loopback_with(cfg(), Some(1));
+    for (label, net) in [("batched", &batched), ("eager", &eager)] {
+        assert_eq!(net.poll_shards, 2, "{label}: shard override ignored");
+        assert!(net.dispatched > 50, "{label}: dispatched {}", net.dispatched);
+        assert_eq!(
+            net.completed, net.dispatched,
+            "{label}: tasks lost or duplicated on the fallback poller"
+        );
+        assert_eq!(net.submit_dropped, 0, "{label}: late submits dropped");
+        assert!(net.sync_merges >= 1, "{label}: no sync merge ran");
+        assert!(
+            net.sync_exports >= 2,
+            "{label}: only {} sync payloads crossed the wire",
+            net.sync_exports
+        );
+        assert!(net.poll_wakeups > 0, "{label}: poller never woke");
+        let (_, e0) = net.estimates[0];
+        let (_, e1) = net.estimates[1];
+        assert!(
+            e0 > e1,
+            "{label}: consensus failed to order the 8x-apart speeds: {e0} vs {e1}"
+        );
+    }
+    // Completion routing survives sharding: each frontend's recorder saw
+    // exactly the completions it routed.
+    let recorded: u64 = reports.iter().map(|r| r.responses.count() as u64).sum();
+    assert_eq!(recorded, batched.completed, "latency records diverge across shards");
+}
+
+#[test]
 fn server_times_out_when_frontends_never_connect() {
     // A missing frontend must fail the run with a clear error, not wedge
     // the server in accept() forever.
-    let mut cfg = quick_cfg(2, SyncPolicyConfig::periodic());
-    cfg.read_timeout = Duration::from_millis(300);
-    let server = NetServer::bind(cfg).unwrap();
-    let start = std::time::Instant::now();
-    let err = server.serve().unwrap_err();
-    assert!(err.contains("timed out waiting for frontends"), "{err}");
-    assert!(start.elapsed() < Duration::from_secs(10), "timeout not bounded");
+    // Both pollers must bound the handshake wait identically.
+    for fallback in [false, true] {
+        let mut cfg = quick_cfg(2, SyncPolicyConfig::periodic());
+        cfg.read_timeout = Duration::from_millis(300);
+        cfg.force_poll_fallback = fallback;
+        let server = NetServer::bind(cfg).unwrap();
+        let start = std::time::Instant::now();
+        let err = server.serve().unwrap_err();
+        assert!(err.contains("timed out waiting for frontends"), "{err}");
+        assert!(start.elapsed() < Duration::from_secs(10), "timeout not bounded");
+    }
 }
 
 #[test]
