@@ -231,6 +231,11 @@ pub struct NetOptions {
     /// Poll-shard count for the pool server's data plane (absent = auto:
     /// one per package, capped at 4).
     pub poll_shards: Option<usize>,
+    /// Lifecycle-trace sampling modulus N (trace 1 task in N; 0 = off).
+    /// Accepts `"1/64"`, `64`, or `"off"` in JSON.
+    pub trace_sample: Option<u32>,
+    /// Server-side Chrome trace-event JSON dump path (Perfetto-loadable).
+    pub trace_json: Option<String>,
 }
 
 impl NetOptions {
@@ -256,6 +261,12 @@ impl NetOptions {
         }
         if let Some(p) = self.poll_shards {
             cfg.poll_shards = Some(p);
+        }
+        if let Some(n) = self.trace_sample {
+            cfg.trace_sample = n;
+        }
+        if let Some(path) = &self.trace_json {
+            cfg.trace_json = Some(path.clone());
         }
     }
 
@@ -372,6 +383,30 @@ pub fn net_from_json(v: &Json) -> Result<NetOptions, ConfigError> {
             Some(p)
         }
     };
+    let trace_sample = match v.get("trace_sample") {
+        None => None,
+        Some(x) => {
+            // Accept both the CLI spelling ("1/64", "off") and a bare
+            // integer modulus.
+            let n = if let Some(s) = x.as_str() {
+                crate::obs::trace::parse_sample(s)
+                    .map_err(|e| bad(format!("'net.trace_sample': {e}")))?
+            } else {
+                x.as_u64().ok_or_else(|| {
+                    bad("'net.trace_sample' must be a string like \"1/64\" or an integer")
+                })? as u32
+            };
+            Some(n)
+        }
+    };
+    let trace_json = match v.get("trace_json") {
+        None => None,
+        Some(x) => Some(
+            x.as_str()
+                .ok_or_else(|| bad("'net.trace_json' must be a string path"))?
+                .to_string(),
+        ),
+    };
     let opts = NetOptions {
         listen: net_addr(v, "listen")?,
         frontends,
@@ -382,6 +417,8 @@ pub fn net_from_json(v: &Json) -> Result<NetOptions, ConfigError> {
         flush_us,
         pin,
         poll_shards,
+        trace_sample,
+        trace_json,
     };
     if let (Some((_, k)), Some(f)) = (opts.shard, opts.frontends) {
         if k != f {
@@ -597,6 +634,17 @@ mod tests {
         assert_eq!(opts.batch, Some(128));
         assert_eq!(opts.flush_us, Some(50.0));
         assert_eq!(opts.pin, Some(crate::plane::PinMode::Sockets));
+        // Trace sampling accepts the CLI spelling, a bare modulus, or off.
+        let traced = net_options_from_str(
+            r#"{"net": {"trace_sample": "1/64", "trace_json": "t.json"}}"#,
+        )
+        .unwrap();
+        assert_eq!(traced.trace_sample, Some(64));
+        assert_eq!(traced.trace_json.as_deref(), Some("t.json"));
+        let n = net_options_from_str(r#"{"net": {"trace_sample": 32}}"#).unwrap();
+        assert_eq!(n.trace_sample, Some(32));
+        let off = net_options_from_str(r#"{"net": {"trace_sample": "off"}}"#).unwrap();
+        assert_eq!(off.trace_sample, Some(0));
         // The bare block (no "net" wrapper) parses identically.
         let bare = net_options_from_str(r#"{"listen": "0.0.0.0:9000"}"#).unwrap();
         assert_eq!(bare.listen.as_deref(), Some("0.0.0.0:9000"));
@@ -623,6 +671,9 @@ mod tests {
         assert!(net_options_from_str(r#"{"net": {"pin": 3}}"#).is_err());
         assert!(net_options_from_str(r#"{"net": {"poll_shards": 0}}"#).is_err());
         assert!(net_options_from_str(r#"{"net": {"poll_shards": "all"}}"#).is_err());
+        assert!(net_options_from_str(r#"{"net": {"trace_sample": "2/64"}}"#).is_err());
+        assert!(net_options_from_str(r#"{"net": {"trace_sample": "sometimes"}}"#).is_err());
+        assert!(net_options_from_str(r#"{"net": {"trace_json": 7}}"#).is_err());
         // Cross-field: the shard's k must agree with the frontend count.
         assert!(
             net_options_from_str(r#"{"net": {"frontends": 4, "shard": "0/2"}}"#).is_err()
@@ -635,7 +686,8 @@ mod tests {
             r#"{"net": {"listen": "127.0.0.1:7500", "frontends": 3,
                         "connect": "127.0.0.1:7500", "shard": "2/3",
                         "read_timeout": 5.0, "batch": 256, "flush_us": 75.0,
-                        "pin": "cores", "poll_shards": 2}}"#,
+                        "pin": "cores", "poll_shards": 2,
+                        "trace_sample": "1/128", "trace_json": "spans.json"}}"#,
         )
         .unwrap();
         let mut server = crate::net::NetServerConfig::default();
@@ -647,6 +699,8 @@ mod tests {
         assert_eq!(server.net_flush_us, 75.0);
         assert_eq!(server.pin, crate::plane::PinMode::Cores);
         assert_eq!(server.poll_shards, Some(2));
+        assert_eq!(server.trace_sample, 128);
+        assert_eq!(server.trace_json.as_deref(), Some("spans.json"));
         let mut fe = crate::net::ConnectConfig::new("x:1", 0, 1);
         opts.apply_frontend(&mut fe);
         assert_eq!(fe.addr, "127.0.0.1:7500");

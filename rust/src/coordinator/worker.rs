@@ -48,6 +48,15 @@ pub struct Completion {
     pub at: Instant,
 }
 
+impl Completion {
+    /// Time spent queued before service began (seconds). Sojourn and
+    /// duration are measured by different clock reads, so clamp: a
+    /// zero-queue task can measure a sojourn a few ns under its duration.
+    pub fn queue_wait(&self) -> f64 {
+        (self.sojourn - self.duration).max(0.0)
+    }
+}
+
 /// How workers execute tasks.
 #[derive(Debug, Clone)]
 pub enum PayloadMode {
@@ -302,7 +311,28 @@ mod tests {
         assert!(c.duration < 0.05, "duration {}", c.duration);
         assert_eq!(w.client.qlen.load(Ordering::Relaxed), 0);
         assert_eq!(w.client.completed_real.load(Ordering::Relaxed), 1);
+        // An immediately-served task has near-zero queue wait, and the
+        // decomposition never goes negative on mismatched clock reads.
+        assert!(c.queue_wait() >= 0.0);
+        assert!(c.queue_wait() < c.sojourn, "wait {} sojourn {}", c.queue_wait(), c.sojourn);
         w.shutdown();
+    }
+
+    #[test]
+    fn queue_wait_clamps_mismatched_clock_reads() {
+        let mk = |sojourn: f64| Completion {
+            worker: 0,
+            job: 1,
+            kind: TaskKind::Real,
+            demand: 0.1,
+            duration: 0.02,
+            sojourn,
+            at: Instant::now(),
+        };
+        assert!((mk(0.05).queue_wait() - 0.03).abs() < 1e-12);
+        // Sojourn measured a hair under duration (separate clock reads):
+        // clamp to zero rather than report negative queueing.
+        assert_eq!(mk(0.0199).queue_wait(), 0.0);
     }
 
     #[test]

@@ -207,6 +207,10 @@ pub struct OverheadPoint {
     /// ns per decision plus the plane's per-decision registry writes
     /// (decision counter + chosen-queue-length histogram sample).
     pub instrumented_ns: f64,
+    /// ns per decision with registry writes *and* the lifecycle-trace
+    /// sampling check at 1/1024 (the tracing-on, task-unsampled fast
+    /// path: one hash + compare, no clock read, no allocation).
+    pub traced_ns: f64,
 }
 
 impl OverheadPoint {
@@ -214,6 +218,16 @@ impl OverheadPoint {
     pub fn ratio(&self) -> f64 {
         if self.plain_ns > 0.0 {
             self.instrumented_ns / self.plain_ns
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Within-run traced/plain ratio (the CI gate holds it ≤ 1.10 too:
+    /// sampling at 1/1024 must be invisible on the decision path).
+    pub fn traced_ratio(&self) -> f64 {
+        if self.plain_ns > 0.0 {
+            self.traced_ns / self.plain_ns
         } else {
             f64::INFINITY
         }
@@ -251,9 +265,29 @@ pub fn metrics_overhead_bench(n: usize, reps: u64, runs: usize) -> OverheadPoint
             }
         }
     });
+    // Registry writes plus the tracing sampling gate at 1/1024, the same
+    // check the frontend dispatch loop runs per decision when `--trace-
+    // sample` is on. Unsampled tasks (the 1023/1024 common case) must pay
+    // one hash + compare, nothing more.
+    let mut task_id = 0u64;
+    let mut origin_sink = 0u64;
+    let traced_ns = best_ns_per_op(reps, runs, |reps| {
+        for _ in 0..reps {
+            if let JobPlacement::Single(w) = policy.schedule_job(&job, &view, &mut rng) {
+                sink ^= w;
+                slot.decisions.inc();
+                slot.queue_len.record(qlen[w] as u64);
+                task_id = task_id.wrapping_add(1);
+                if crate::obs::trace::sampled(task_id, 1024) {
+                    origin_sink ^= crate::obs::trace::now_ns();
+                }
+            }
+        }
+    });
     std::hint::black_box(sink);
+    std::hint::black_box(origin_sink);
     std::hint::black_box(&obs);
-    OverheadPoint { n, plain_ns, instrumented_ns }
+    OverheadPoint { n, plain_ns, instrumented_ns, traced_ns }
 }
 
 /// One plane-throughput sample.
@@ -533,6 +567,12 @@ impl HotpathReport {
                 o.instrumented_ns,
                 o.ratio()
             ));
+            out.push_str(&format!(
+                "n={:<5} traced(1/1024) {:>8.1} ns  ratio {:.3}x\n",
+                o.n,
+                o.traced_ns,
+                o.traced_ratio()
+            ));
         }
         if let Some(t) = &self.topology {
             out.push_str("-- topology: false sharing & pinning --\n");
@@ -628,6 +668,11 @@ impl HotpathReport {
                 Json::Num((o.instrumented_ns * 10.0).round() / 10.0),
             );
             m.insert("ratio".into(), Json::Num((o.ratio() * 1000.0).round() / 1000.0));
+            m.insert("traced_ns".into(), Json::Num((o.traced_ns * 10.0).round() / 10.0));
+            m.insert(
+                "traced_ratio".into(),
+                Json::Num((o.traced_ratio() * 1000.0).round() / 1000.0),
+            );
             top.insert("metrics_overhead".into(), Json::Obj(m));
         }
         if let Some(t) = &self.topology {
@@ -756,6 +801,8 @@ mod tests {
         assert!(o.plain_ns > 0.0 && o.plain_ns.is_finite());
         assert!(o.instrumented_ns > 0.0 && o.instrumented_ns.is_finite());
         assert!(o.ratio() > 0.0 && o.ratio().is_finite());
+        assert!(o.traced_ns > 0.0 && o.traced_ns.is_finite());
+        assert!(o.traced_ratio() > 0.0 && o.traced_ratio().is_finite());
     }
 
     #[test]
@@ -764,7 +811,7 @@ mod tests {
         let doc = crate::config::to_string(&r.to_json("test"));
         let back = crate::config::parse(&doc).expect("hotpath json must parse");
         let o = back.get("metrics_overhead").expect("metrics_overhead key");
-        for key in ["plain_ns", "instrumented_ns", "ratio"] {
+        for key in ["plain_ns", "instrumented_ns", "ratio", "traced_ns", "traced_ratio"] {
             assert!(
                 o.get(key).and_then(|j| j.as_f64()).is_some_and(|v| v > 0.0),
                 "missing/invalid {key}"

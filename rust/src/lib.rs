@@ -176,6 +176,40 @@
 //! which is what keeps `tests/determinism.rs` bit-exact with all of it
 //! compiled in.
 //!
+//! ## Tracing
+//!
+//! Aggregates say *that* response time moved; spans say *where*. The
+//! lifecycle tracer ([`obs::Tracer`]) decomposes each sampled task's life
+//! into six stages — `decide` (admission → placement chosen), `coalesce`
+//! (placed → flushed to the wire), `wire` (frontend send → server receive,
+//! clock-aligned), `queue` (worker backlog wait), `service` (execution),
+//! `reply` (completion → frontend observes it) — and publishes them three
+//! ways:
+//!
+//! * **`/metrics`** — per-stage [`obs::Log2Histogram`]s as
+//!   `rosella_stage_us{stage=...}`, plus `rosella_trace_spans_total` and
+//!   the live clock-alignment gauges;
+//! * **`/trace` and `--trace-json PATH`** — raw sampled spans as Chrome
+//!   trace-event JSON (`{"traceEvents": [...]}`, complete `"X"` events),
+//!   loadable directly in [Perfetto](https://ui.perfetto.dev);
+//! * **DES timelines** — `queue_wait_us`/`service_us` p50/p99 per
+//!   [`simulator::TimelinePoint`] window, same decomposition,
+//!   deterministic.
+//!
+//! Sampling is deterministic by task-id hash (`--trace-sample 1/N`, off by
+//! default): both sides of the wire agree on which tasks are traced
+//! without negotiating per task, and a run is reproducible under tracing.
+//! Sampled frames carry a protocol-v3 timestamp appendix; unsampled
+//! frames stay bit-identical to v2 (see [`net`] for the compat matrix).
+//! Cross-process stages subtract the NTP-style offset estimated from the
+//! Hello/HelloAck four-timestamp exchange ([`obs::ClockAlign`], refreshed
+//! on ticks), and each frontend reconciles span stage-sums against its own
+//! measured response times, reporting the worst deviation
+//! (`trace_max_dev_pct`, integration-tested ≤ 5%). With tracing off the
+//! hot path gains no allocations and no timestamp reads; at 1/1024
+//! sampling the `hotpath` bench gates the decision loop at ≤ 1.10× plain
+//! (`traced_ratio`, CI-gated).
+//!
 //! ## Topology & pinning
 //!
 //! The plane's shared state is deliberately tiny — per-worker queue

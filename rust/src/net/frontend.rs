@@ -20,8 +20,9 @@
 //! dogpile one worker. That staleness is exactly the coordination price §2
 //! argues is affordable — and the loopback benchmark measures it.
 
-use super::transport::{TcpTransport, Transport};
-use super::wire::{DoneStats, HelloAck, Msg, WireCompletion};
+use super::transport::{BeatTrace, TcpTransport, Transport};
+use super::wire::{DoneStats, HelloAck, Msg, WireCompletion, WireSpan};
+use crate::obs::trace::{self, ClockAlign};
 use crate::learner::{
     EstimateView, FakeJobDispatcher, PerfLearner, SyncKind, SyncPolicyConfig,
 };
@@ -73,6 +74,9 @@ pub struct RunParams {
     pub net_batch: usize,
     /// Submit-coalescing flush deadline D.
     pub net_flush: Duration,
+    /// Lifecycle-trace sampling: every task whose id hashes to 0 mod N is
+    /// traced (0 = tracing off, the server's negotiated rate).
+    pub trace_sample: u32,
 }
 
 impl RunParams {
@@ -118,6 +122,7 @@ impl RunParams {
             divergence_threshold,
             net_batch: (ack.net_batch as usize).max(1),
             net_flush: Duration::from_secs_f64(ack.net_flush_us * 1e-6),
+            trace_sample: ack.clock.map_or(0, |c| c.sample_n),
         })
     }
 }
@@ -141,6 +146,13 @@ pub struct FrontendReport {
     pub responses: ResponseRecorder,
     /// Final consensus estimates this frontend holds.
     pub final_estimates: Vec<f64>,
+    /// Full lifecycle spans assembled from the server's completion-trace
+    /// echoes (0 unless tracing was negotiated).
+    pub traced: u64,
+    /// Worst stage-sum reconciliation error across assembled spans: how
+    /// far |Σ stages − measured response| drifted, as a percentage of the
+    /// measured response.
+    pub trace_max_dev_pct: f64,
 }
 
 impl FrontendReport {
@@ -181,6 +193,12 @@ impl FrontendReport {
                 self.responses.count()
             ));
         }
+        if self.traced > 0 {
+            out.push_str(&format!(
+                "traced spans: {} (max stage-sum deviation {:.2}%)\n",
+                self.traced, self.trace_max_dev_pct
+            ));
+        }
         let est: Vec<String> =
             self.final_estimates.iter().map(|e| format!("{e:.2}")).collect();
         out.push_str(&format!("final consensus μ̂: [{}]\n", est.join(", ")));
@@ -214,6 +232,15 @@ struct BeatState {
     publish_interval: f64,
     divergence_threshold: Option<f64>,
     shard: usize,
+    /// Cross-process clock-offset estimator (seeded by the handshake
+    /// exchange, refreshed by every plain-Tick beat).
+    clock: ClockAlign,
+    /// Lifecycle-trace sampling rate (0 = off).
+    trace_sample: u32,
+    /// Spans assembled from completion-trace echoes.
+    traced: u64,
+    /// Worst |Σ stages − total| / total seen, in percent.
+    trace_max_dev_pct: f64,
 }
 
 impl BeatState {
@@ -279,6 +306,9 @@ impl BeatState {
                 self.responses.record((c.at - c.sojourn).max(0.0), c.at);
             }
         }
+        if let Some(bt) = out.trace {
+            self.absorb_beat_trace(t, bt);
+        }
         if !self.stop {
             // The same LEARNER-DISPATCHER catch-up pass the in-process
             // plane runs, submitted through the transport instead of a
@@ -304,6 +334,62 @@ impl BeatState {
         }
         self.next_tick = Instant::now() + TICK_INTERVAL;
         Ok(())
+    }
+
+    /// Absorb one beat's trace payload: fold the four-timestamp clock
+    /// exchange into the offset estimator, then assemble a full lifecycle
+    /// span for each completion-trace echo and ship it back for the
+    /// server's aggregator.
+    ///
+    /// Stage sums reconcile with the frontend-measured response because
+    /// the chain is continuous: decide/coalesce come from local submit
+    /// stamps, wire maps the server's receive stamp through θ, queue and
+    /// service are the worker's own sojourn decomposition, and reply maps
+    /// the server's completion-drain stamp back. The only unaccounted gap
+    /// is the server's receive→worker-enqueue dispatch (microseconds), and
+    /// the two θ applications cancel in the sum — so reconciliation error
+    /// is insensitive to the offset estimate itself.
+    fn absorb_beat_trace<T: Transport>(&mut self, t: &mut T, bt: BeatTrace) {
+        if bt.t0_ns != 0 && bt.reply.t1_ns != 0 {
+            self.clock.observe(bt.t0_ns, bt.reply.t1_ns, bt.reply.t2_ns, bt.t3_ns);
+            t.set_clock_estimate(self.clock.offset_ns(), self.clock.error_ns());
+        }
+        if !self.clock.aligned() || bt.reply.traced.is_empty() {
+            return;
+        }
+        let theta = self.clock.offset_ns();
+        let now = trace::now_ns();
+        for ct in &bt.reply.traced {
+            // Echo indices address this beat's completion list; an
+            // out-of-range echo is dropped, not trusted.
+            let Some(c) = self.comp_buf.get(ct.idx as usize) else { continue };
+            let us = |ns: u64| (ns as f64 / 1e3) as u32;
+            let decide = us(ct.enq_ns.saturating_sub(ct.origin_ns));
+            let coalesce = us(ct.send_ns.saturating_sub(ct.enq_ns));
+            // recv/done are server-clock stamps; θ (server − frontend)
+            // maps them onto the local timeline.
+            let wire_us =
+                (((ct.recv_ns as f64 - theta) - ct.send_ns as f64) / 1e3).max(0.0) as u32;
+            let queue = ((c.sojourn - c.duration).max(0.0) * 1e6) as u32;
+            let service = (c.duration.max(0.0) * 1e6) as u32;
+            let reply =
+                ((now as f64 - (ct.done_ns as f64 - theta)) / 1e3).max(0.0) as u32;
+            let stages_us = [decide, coalesce, wire_us, queue, service, reply];
+            let total = (now.saturating_sub(ct.origin_ns) as f64 / 1e3).max(1.0);
+            let sum: f64 = stages_us.iter().map(|&s| s as f64).sum();
+            let dev_pct = (sum - total).abs() / total * 100.0;
+            self.traced += 1;
+            if dev_pct > self.trace_max_dev_pct {
+                self.trace_max_dev_pct = dev_pct;
+            }
+            t.ship_span(WireSpan {
+                job: c.job,
+                // Export on the server's timeline so spans from every
+                // frontend land on one comparable axis.
+                origin_us: ((ct.origin_ns as f64 + theta) / 1e3).max(0.0) as u64,
+                stages_us,
+            });
+        }
     }
 
     /// Publish the local learner and export its sync payload — estimate
@@ -339,6 +425,7 @@ pub fn run_frontend_loop<T: Transport>(
     shard: usize,
     shards: usize,
     flight: Option<&crate::obs::FlightRecorder>,
+    clock: ClockAlign,
 ) -> Result<FrontendReport, String> {
     if shard >= shards {
         return Err(format!("shard {shard} out of range for {shards} shards"));
@@ -375,6 +462,10 @@ pub fn run_frontend_loop<T: Transport>(
         publish_interval: p.publish_interval,
         divergence_threshold: p.divergence_threshold,
         shard,
+        clock,
+        trace_sample: p.trace_sample,
+        traced: 0,
+        trace_max_dev_pct: 0.0,
     };
     let mut decisions = 0u64;
     let mut dispatched = 0u64;
@@ -405,6 +496,13 @@ pub fn run_frontend_loop<T: Transport>(
             }
             core.on_arrival(a.at, 1);
             job.tasks[0].demand = a.demand;
+            let job_id = encode_job(shard, local_jobs);
+            // Sampled tasks stamp their origin before the decision so the
+            // decide stage covers it; everything else stays on the
+            // stamp-free path (one branch, no clock read).
+            let origin_ns = (state.trace_sample != 0
+                && trace::sampled(job_id, state.trace_sample))
+            .then(trace::now_ns);
             let w = match flight {
                 Some(rec) => {
                     trace.clear();
@@ -416,7 +514,7 @@ pub fn run_frontend_loop<T: Transport>(
                         crate::obs::FlightEvent::Placement {
                             t_ns: start.elapsed().as_nanos() as u64,
                             shard: shard as u32,
-                            task: encode_job(shard, local_jobs),
+                            task: job_id,
                             probed: trace.probes(),
                             chosen: w as u32,
                             mu_chosen: core.mu_hat().get(w).copied().unwrap_or(0.0),
@@ -429,7 +527,10 @@ pub fn run_frontend_loop<T: Transport>(
                 None => core.decide_local(&job, &state.qlen),
             };
             decisions += 1;
-            t.submit(encode_job(shard, local_jobs), w, TaskKind::Real, a.demand)?;
+            match origin_ns {
+                Some(o) => t.submit_traced(job_id, w, TaskKind::Real, a.demand, o)?,
+                None => t.submit(job_id, w, TaskKind::Real, a.demand)?,
+            }
             // Optimistic probe bump until the next refresh, so decisions
             // within one beat do not dogpile the same worker.
             state.qlen[w] += 1;
@@ -460,6 +561,8 @@ pub fn run_frontend_loop<T: Transport>(
         completions_seen: state.completions_seen,
         responses: state.responses,
         final_estimates: core.mu_hat().to_vec(),
+        traced: state.traced,
+        trace_max_dev_pct: state.trace_max_dev_pct,
     })
 }
 
@@ -547,11 +650,25 @@ pub fn run_remote_frontend(cfg: &ConnectConfig) -> Result<FrontendReport, String
         .set_read_timeout(Some(cfg.read_timeout))
         .map_err(|e| format!("set read timeout: {e}"))?;
     let mut t = TcpTransport::new(stream, cfg.shard);
-    t.send(&Msg::Hello { shard: cfg.shard as u32, shards: cfg.shards as u32 })?;
+    // The handshake doubles as the first four-timestamp clock exchange:
+    // t0 stamped here, t1/t2 by the server inside the ack, t3 on receipt.
+    let t0 = trace::now_ns();
+    t.send(&Msg::Hello {
+        shard: cfg.shard as u32,
+        shards: cfg.shards as u32,
+        t0_ns: Some(t0),
+    })?;
     let ack = match t.recv()? {
         Msg::HelloAck(a) => a,
         other => return Err(format!("expected HelloAck, got tag {}", other.tag())),
     };
+    let t3 = trace::now_ns();
+    let mut clock = ClockAlign::new();
+    if let Some(c) = ack.clock {
+        if c.t1_ns != 0 {
+            clock.observe(t0, c.t1_ns, c.t2_ns, t3);
+        }
+    }
     let params = RunParams::from_hello_ack(&ack, cfg.shards)?;
     // The server's HelloAck carries the run's coalescing policy; local
     // --net-batch/--net-flush-us flags override it for this frontend only.
@@ -560,6 +677,10 @@ pub fn run_remote_frontend(cfg: &ConnectConfig) -> Result<FrontendReport, String
         .net_flush_us
         .map_or(params.net_flush, |us| Duration::from_secs_f64(us * 1e-6));
     t.configure_batching(batch, flush);
+    if params.trace_sample > 0 {
+        t.configure_tracing(true);
+        t.set_clock_estimate(clock.offset_ns(), clock.error_ns());
+    }
     match t.recv()? {
         Msg::Start => {}
         other => return Err(format!("expected Start, got tag {}", other.tag())),
@@ -567,7 +688,8 @@ pub fn run_remote_frontend(cfg: &ConnectConfig) -> Result<FrontendReport, String
     let flight = cfg.flight_record.as_deref().map(|_| {
         crate::obs::FlightRecorder::new(1, crate::obs::flight::DEFAULT_CAPACITY)
     });
-    let report = run_frontend_loop(&mut t, &params, cfg.shard, cfg.shards, flight.as_ref())?;
+    let report =
+        run_frontend_loop(&mut t, &params, cfg.shard, cfg.shards, flight.as_ref(), clock)?;
     if let (Some(path), Some(rec)) = (cfg.flight_record.as_deref(), flight.as_ref()) {
         std::fs::write(path, rec.dump_jsonl())
             .map_err(|e| format!("write flight record {path}: {e}"))?;
@@ -668,6 +790,7 @@ mod tests {
             policy: "ppot".into(),
             sync_policy: "periodic".into(),
             speeds: vec![2.0, 1.0, 0.5, 0.25],
+            clock: None,
         }
     }
 
@@ -685,6 +808,11 @@ mod tests {
         // The adaptive trigger arrives √k-scaled (k = 4 ⇒ 2×).
         let th = p.divergence_threshold.expect("adaptive sync sets a trigger");
         assert!((th - 0.2).abs() < 1e-12, "threshold {th}");
+        assert_eq!(p.trace_sample, 0, "no clock appendix: tracing off");
+        let mut a = ack();
+        a.clock = Some(crate::net::wire::AckClock { t1_ns: 1, t2_ns: 2, sample_n: 64 });
+        let p = RunParams::from_hello_ack(&a, 2).unwrap();
+        assert_eq!(p.trace_sample, 64, "negotiated sampling rides the ack clock");
     }
 
     #[test]
@@ -773,6 +901,7 @@ mod tests {
             divergence_threshold: None,
             net_batch: 64,
             net_flush: Duration::from_micros(200),
+            trace_sample: 0,
         };
         let t = LocalTransport::new(
             pool.iter().map(|w| w.client.clone()).collect(),
@@ -790,7 +919,7 @@ mod tests {
         let rec_loop = rec.clone();
         let loop_handle = std::thread::spawn(move || {
             let mut t = t;
-            run_frontend_loop(&mut t, &params, 0, 1, Some(&*rec_loop))
+            run_frontend_loop(&mut t, &params, 0, 1, Some(&*rec_loop), ClockAlign::new())
         });
         std::thread::sleep(Duration::from_millis(700));
         stop.store(true, Ordering::Relaxed);

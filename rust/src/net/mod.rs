@@ -58,6 +58,35 @@
 //! net-vs-in-process throughput ratio on a paced workload, the
 //! coalescing speedup (batched vs eager framing) at saturation, and the
 //! sharded-vs-single-shard headline ratio of the epoll data plane.
+//!
+//! ## Protocol v3: trace/clock appendices
+//!
+//! Protocol version 3 adds optional *appendices* to four frames for
+//! lifecycle tracing ([`crate::obs::Tracer`]): `Hello` may carry a `t0`
+//! origin timestamp (opening the NTP-style four-timestamp clock exchange),
+//! `HelloAck` mirrors it with `(t1, t2)` receive/transmit stamps plus the
+//! server's sampling modulus, `Tick`/`TickReply` refresh the offset
+//! estimate mid-run, and batched submissions/completions append per-task
+//! send/receive/done timestamps for tasks selected by the deterministic
+//! task-id-hash sampler. The appendix is *version-iff-present*: a frame
+//! encodes as v3 exactly when its trace appendix is `Some`, and an
+//! appendix-free frame is **byte-identical to v2** — tracing off means the
+//! wire is bit-compatible with the previous release, not merely
+//! semantically compatible.
+//!
+//! Compatibility matrix (`MIN_VERSION` = 2, [`VERSION`] = 3):
+//!
+//! | client \ server | v2 server | v3 server |
+//! |---|---|---|
+//! | v2 client | native | **works** — a `Hello` without `t0` gets a `HelloAck` without a clock appendix (the ack mirrors the hello's version), and the run proceeds untraced |
+//! | v3 client, tracing off | works — emits pure-v2 bytes | native, untraced |
+//! | v3 client, tracing on | **fails at the handshake** — the v2 server rejects the version in the `Hello` header; restart the client with `--trace-sample off` (documented limitation: no version negotiation round, by design one RTT cheaper) |
+//!
+//! Decoders bound-check appendices like any other payload bytes: a
+//! truncated or length-mismatched trace appendix is a
+//! [`WireError`], rejected at the handshake or frame boundary rather
+//! than misread as task data (`tests/net_loopback.rs` pins both
+//! directions of this matrix over real sockets).
 
 pub mod frontend;
 pub mod poll;

@@ -35,8 +35,13 @@
 
 use super::poll::{PollEvent, Poller};
 use super::transport::{drain_completions, estimates_if_moved, lambda_total};
-use super::wire::{self, DecodeScratch, DoneStats, HelloAck, Msg, TickReply, WireCompletion};
+use super::wire::{
+    self, AckClock, CompletionTrace, DecodeScratch, DoneStats, HelloAck, Msg, ReplyTrace,
+    TickReply, TickTrace, WireCompletion,
+};
 use crate::config::Json;
+use crate::obs::trace::{self as obstrace, Tracer};
+use crate::obs::SpanRecord;
 use crate::coordinator::worker::{self, Completion, CompletionSink, LiveTask, PayloadMode};
 use crate::learner::{SyncPolicy, SyncPolicyConfig};
 use crate::plane::consensus::{run_sync, SyncRun};
@@ -46,7 +51,7 @@ use crate::plane::{
 };
 use crate::scheduler::PolicyKind;
 use crate::types::TaskKind;
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::io::IoSlice;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -63,6 +68,11 @@ const MAX_COMPLETIONS_PER_REPLY: usize = 8192;
 /// — for its whole service time, so it is rejected as a protocol
 /// violation rather than clamped.
 const MAX_TASK_DEMAND: f64 = 60.0;
+
+/// Bound on a connection's in-flight trace-stamp map: sampled submits
+/// whose completions never surface (or a hostile stamp flood) stop
+/// accumulating state here instead of growing without bound.
+const MAX_INFLIGHT_TRACES: usize = 65_536;
 
 /// Configuration of one pool-server run.
 #[derive(Debug, Clone)]
@@ -123,6 +133,13 @@ pub struct NetServerConfig {
     /// Force the portable readiness-sweep poller even where epoll is
     /// available — the fallback-parity test hook.
     pub force_poll_fallback: bool,
+    /// Lifecycle-trace sampling 1/N, advertised to v3 frontends in the
+    /// `HelloAck` clock appendix (0 disables tracing entirely; unsampled
+    /// tasks stay on the allocation-free wire path either way).
+    pub trace_sample: u32,
+    /// Dump the run's sampled spans as Chrome trace-event JSON
+    /// (Perfetto-loadable) to this path at drain.
+    pub trace_json: Option<String>,
 }
 
 impl Default for NetServerConfig {
@@ -150,6 +167,8 @@ impl Default for NetServerConfig {
             pin: PinMode::None,
             poll_shards: None,
             force_poll_fallback: false,
+            trace_sample: 0,
+            trace_json: None,
         }
     }
 }
@@ -248,6 +267,10 @@ pub struct NetReport {
     /// Poller wakeups summed across shards — with frames sent/received
     /// this gives events-per-wake, the batching the kernel poller buys.
     pub poll_wakeups: u64,
+    /// Lifecycle spans the trace aggregator recorded (0 with tracing off).
+    pub traced_spans: u64,
+    /// Flight-recorder events overwritten because a ring was full.
+    pub flight_dropped: u64,
 }
 
 impl NetReport {
@@ -295,6 +318,9 @@ impl NetReport {
             "data plane : {} poll shards, {} wakeups\n",
             self.poll_shards, self.poll_wakeups
         ));
+        if self.traced_spans > 0 {
+            out.push_str(&format!("tracing    : {} lifecycle spans\n", self.traced_spans));
+        }
         if self.resp_count() > 0 {
             out.push_str(&format!(
                 "latency ms : mean {:.1} | worst p95 {:.1} ({} jobs)\n",
@@ -360,6 +386,8 @@ pub fn bench_json(cfg: &NetServerConfig, r: &NetReport) -> Json {
     results.insert("mean_ms".into(), Json::Num(r.mean_response() * 1e3));
     results.insert("worst_p95_ms".into(), Json::Num(r.worst_p95() * 1e3));
     results.insert("poll_wakeups".into(), Json::Num(r.poll_wakeups as f64));
+    results.insert("traced_spans".into(), Json::Num(r.traced_spans as f64));
+    results.insert("flight_dropped".into(), Json::Num(r.flight_dropped as f64));
     results.insert("per_frontend".into(), Json::Arr(per));
     let mut top = BTreeMap::new();
     top.insert("bench".into(), Json::Str("net".into()));
@@ -401,6 +429,9 @@ struct PoolCtx {
     lambda_slots: Vec<Arc<AtomicU64>>,
     start: Instant,
     obs: Arc<crate::obs::Registry>,
+    /// Lifecycle-trace aggregator (shared with the scrape endpoint);
+    /// `None` with tracing off.
+    tracer: Option<Arc<Tracer>>,
 }
 
 /// Most staged frames flushed per `write_vectored` call: a beat's worst
@@ -519,6 +550,12 @@ impl ShardBufs {
 struct Conn {
     stream: TcpStream,
     shard: usize,
+    /// v3 tracing negotiated for this connection (client sent a clock
+    /// stamp and the server samples at a non-zero rate).
+    traced: bool,
+    /// Trace stamps of sampled tasks awaiting completion, keyed by job id:
+    /// `[origin, enq, send, recv]` on the nanosecond trace clocks.
+    inflight: HashMap<u64, [u64; 4]>,
     /// Frame reassembly: bytes land at the tail, frames pop at `roff`.
     rbuf: Vec<u8>,
     roff: usize,
@@ -630,7 +667,7 @@ impl NetServer {
         listener
             .set_nonblocking(true)
             .map_err(|e| format!("set nonblocking: {e}"))?;
-        let mut conns: Vec<Option<(TcpStream, Vec<u8>)>> = (0..k).map(|_| None).collect();
+        let mut conns: Vec<Option<(TcpStream, Vec<u8>, bool)>> = (0..k).map(|_| None).collect();
         let mut scratch = Vec::with_capacity(4096);
         let mut dscratch = DecodeScratch::new();
         let mut tmp = vec![0u8; 64 * 1024];
@@ -661,8 +698,11 @@ impl NetServer {
                     match try_frame(rbuf, &mut dscratch)
                         .map_err(|e| format!("handshake with {peer}: {e}"))?
                     {
-                        Some((Msg::Hello { shard, shards }, used)) => {
-                            Some((shard as usize, shards as usize, used))
+                        Some((Msg::Hello { shard, shards, t0_ns }, used)) => {
+                            // t1 of the four-timestamp clock exchange:
+                            // stamped as close to the frame's arrival as
+                            // the handshake loop allows.
+                            Some((shard as usize, shards as usize, t0_ns, obstrace::now_ns(), used))
                         }
                         Some((other, _)) => {
                             return Err(format!(
@@ -673,7 +713,7 @@ impl NetServer {
                         None => None,
                     }
                 };
-                let Some((shard, shards, used)) = claim else {
+                let Some((shard, shards, t0_ns, t1_ns, used)) = claim else {
                     i += 1;
                     continue;
                 };
@@ -710,6 +750,15 @@ impl NetServer {
                     policy: cfg.policy.clone(),
                     sync_policy: cfg.sync_policy.kind.name().into(),
                     speeds: cfg.speeds.clone(),
+                    // Mirror rule: a v2 Hello (no t0) gets a v2 ack (no
+                    // clock appendix), so old frontends see bit-identical
+                    // bytes. A v3 Hello gets the server's t1/t2 stamps and
+                    // the negotiated sampling rate (0 = tracing off).
+                    clock: t0_ns.map(|_| AckClock {
+                        t1_ns,
+                        t2_ns: obstrace::now_ns(),
+                        sample_n: cfg.trace_sample,
+                    }),
                 });
                 // The ack is a few hundred bytes into a fresh socket whose
                 // send buffer is empty, so it almost always lands in one
@@ -751,7 +800,8 @@ impl NetServer {
                 // A well-behaved frontend sends nothing until Start, but
                 // any bytes that did arrive behind the Hello are carried
                 // into the connection's reassembly buffer, not dropped.
-                conns[shard] = Some((stream, rbuf[used..].to_vec()));
+                let traced = t0_ns.is_some() && cfg.trace_sample > 0;
+                conns[shard] = Some((stream, rbuf[used..].to_vec(), traced));
                 claimed += 1;
                 progress = true;
             }
@@ -819,12 +869,14 @@ impl NetServer {
         let flight = cfg.flight_record.as_deref().map(|_| {
             Arc::new(crate::obs::FlightRecorder::new(k, crate::obs::flight::DEFAULT_CAPACITY))
         });
+        let tracer = (cfg.trace_sample > 0).then(|| Arc::new(Tracer::new(cfg.trace_sample)));
         let metrics = match cfg.metrics_listen.as_deref() {
             Some(addr) => Some(crate::plane::spawn_metrics_server(
                 addr,
                 obs.clone(),
                 flight.clone(),
                 probes.clone(),
+                tracer.clone(),
             )?),
             None => None,
         };
@@ -849,10 +901,12 @@ impl NetServer {
         let mut rx_iter = shard_rxs.into_iter();
         let mut live: Vec<Conn> = Vec::with_capacity(k);
         for (shard, slot) in conns.into_iter().enumerate() {
-            let (stream, rest) = slot.expect("every shard claimed");
+            let (stream, rest, traced) = slot.expect("every shard claimed");
             let mut conn = Conn {
                 stream,
                 shard,
+                traced,
+                inflight: HashMap::new(),
                 rbuf: rest,
                 roff: 0,
                 wq: WriteQueue::new(),
@@ -889,6 +943,7 @@ impl NetServer {
             lambda_slots,
             start,
             obs: obs.clone(),
+            tracer: tracer.clone(),
         };
         let barrier = DrainBarrier::new(k, workers);
         let mut shard_conns: Vec<Vec<Conn>> = (0..p).map(|_| Vec::new()).collect();
@@ -979,6 +1034,10 @@ impl NetServer {
             std::fs::write(path, rec.dump_jsonl())
                 .map_err(|e| format!("write flight record {path}: {e}"))?;
         }
+        if let (Some(path), Some(tr)) = (cfg.trace_json.as_deref(), tracer.as_deref()) {
+            tr.dump_chrome_json(path)
+                .map_err(|e| format!("write trace json {path}: {e}"))?;
+        }
         Ok(NetReport {
             frontends: k,
             workers: n,
@@ -997,6 +1056,8 @@ impl NetServer {
             per_frontend,
             poll_shards: p,
             poll_wakeups,
+            traced_spans: tracer.as_deref().map_or(0, |t| t.recorded()),
+            flight_dropped: flight.as_deref().map_or(0, |r| r.dropped()),
         })
     }
 }
@@ -1087,17 +1148,43 @@ impl Conn {
         Ok(())
     }
 
+    /// Remember the trace stamps of one sampled submit so the completion
+    /// echo can carry the full `[origin, enq, send, recv]` chain back.
+    fn note_inflight(&mut self, job: u64, origin_ns: u64, enq_ns: u64, send_ns: u64, recv_ns: u64) {
+        if self.inflight.len() < MAX_INFLIGHT_TRACES {
+            self.inflight.insert(job, [origin_ns, enq_ns, send_ns, recv_ns]);
+        }
+    }
+
+    /// Absorb a beat's incoming trace appendix: completed spans land in
+    /// the run's aggregator, and the frontend's current offset estimate
+    /// becomes the exported clock gauges.
+    fn absorb_tick_trace(&self, ctx: &PoolCtx, t: &TickTrace) {
+        let Some(tracer) = ctx.tracer.as_deref() else { return };
+        tracer.set_clock(t.offset_ns, t.err_ns);
+        for s in &t.spans {
+            tracer.record(SpanRecord {
+                job: s.job,
+                origin_us: s.origin_us,
+                stages_us: s.stages_us,
+            });
+        }
+    }
+
     /// Serve one coordination beat (a `Tick` or a `SubmitBatch`'s
     /// piggybacked tick): land λ̂ₛ, drain completions, stage the reply.
     /// The reply's qlen/completion vectors borrow the shard's reusable
     /// buffers and are reclaimed after encoding, so a steady-state beat
-    /// allocates nothing.
+    /// allocates nothing. `clock_t1` is the receive stamp of a plain
+    /// `Tick` that carried a clock exchange; the reply then stamps t2 and
+    /// completes the four-timestamp round.
     fn beat(
         &mut self,
         ctx: &PoolCtx,
         epoch: u64,
         lambda_local: f64,
         bufs: &mut ShardBufs,
+        clock_t1: Option<u64>,
     ) -> Result<(), String> {
         // A NaN λ̂ₛ stored here would poison the lambda_live sum served to
         // every other frontend.
@@ -1134,6 +1221,39 @@ impl Conn {
         qlen.clear();
         qlen.extend(ctx.probes.iter().map(|q| q.load(Ordering::Relaxed) as u32));
         let estimates = estimates_if_moved(&ctx.table, epoch, &mut bufs.mu);
+        // Completion-trace echoes: every completion in this reply whose
+        // submit left stamps gets its full chain echoed back, with done_ns
+        // recovering the worker's completion instant on the trace clock
+        // (completion `at` is seconds since run start).
+        let trace = if self.traced {
+            let mut traced: Vec<CompletionTrace> = Vec::new();
+            if !self.inflight.is_empty() {
+                let start_ns = obstrace::ns_of(ctx.start) as f64;
+                for (i, c) in completions.iter().enumerate() {
+                    if let Some([origin_ns, enq_ns, send_ns, recv_ns]) =
+                        self.inflight.remove(&c.job)
+                    {
+                        traced.push(CompletionTrace {
+                            idx: i as u32,
+                            origin_ns,
+                            enq_ns,
+                            send_ns,
+                            recv_ns,
+                            done_ns: (start_ns + c.at * 1e9) as u64,
+                        });
+                    }
+                }
+            }
+            let (t1_ns, t2_ns) = match clock_t1 {
+                Some(t1) => (t1, obstrace::now_ns()),
+                None => (0, 0),
+            };
+            // An appendix-free reply stays bit-compatible with v2.
+            (t1_ns != 0 || !traced.is_empty())
+                .then_some(ReplyTrace { t1_ns, t2_ns, traced })
+        } else {
+            None
+        };
         let reply = Msg::TickReply(TickReply {
             qlen,
             lambda_live: lambda_total(&ctx.lambda_slots),
@@ -1144,6 +1264,7 @@ impl Conn {
                 && self.pending.is_empty(),
             estimates,
             completions,
+            trace,
         });
         self.queue_frame(&reply);
         if let Msg::TickReply(r) = reply {
@@ -1162,13 +1283,31 @@ impl Conn {
         bufs: &mut ShardBufs,
     ) -> Result<(), String> {
         match msg {
-            Msg::Submit { job, worker, kind, demand } => {
+            Msg::Submit { job, worker, kind, demand, trace } => {
                 ctx.obs.wire_batch.record(1);
+                if self.traced {
+                    if let Some(st) = trace {
+                        let recv = obstrace::now_ns();
+                        self.note_inflight(job, st.origin_ns, st.enq_ns, st.send_ns, recv);
+                    }
+                }
                 self.enqueue(ctx, job, worker, kind, demand)
             }
-            Msg::SubmitBatch { tick, items } => {
+            Msg::SubmitBatch { tick, items, trace } => {
                 if !items.is_empty() {
                     ctx.obs.wire_batch.record(items.len() as u64);
+                }
+                if self.traced {
+                    if let Some(bt) = &trace {
+                        let recv = obstrace::now_ns();
+                        for &(idx, origin_ns, enq_ns) in &bt.stamps {
+                            // Stamp indices come off the wire: a stamp
+                            // pointing outside the batch is dropped.
+                            if let Some(it) = items.get(idx as usize) {
+                                self.note_inflight(it.job, origin_ns, enq_ns, bt.send_ns, recv);
+                            }
+                        }
+                    }
                 }
                 let mut enq = Ok(());
                 for it in &items {
@@ -1179,14 +1318,24 @@ impl Conn {
                 }
                 // Hand the item buffer back to the decode scratch so the
                 // next SubmitBatch on this shard decodes allocation-free.
-                bufs.scratch.recycle(Msg::SubmitBatch { tick: None, items });
+                bufs.scratch.recycle(Msg::SubmitBatch { tick: None, items, trace: None });
                 enq?;
                 match tick {
-                    Some((epoch, lambda_local)) => self.beat(ctx, epoch, lambda_local, bufs),
+                    Some((epoch, lambda_local)) => {
+                        // A piggybacked beat carries no TickTrace, so no
+                        // clock exchange completes here.
+                        self.beat(ctx, epoch, lambda_local, bufs, None)
+                    }
                     None => Ok(()),
                 }
             }
-            Msg::Tick { epoch, lambda_local } => self.beat(ctx, epoch, lambda_local, bufs),
+            Msg::Tick { epoch, lambda_local, trace } => {
+                let clock_t1 = trace.as_ref().map(|_| obstrace::now_ns());
+                if let Some(t) = &trace {
+                    self.absorb_tick_trace(ctx, t);
+                }
+                self.beat(ctx, epoch, lambda_local, bufs, clock_t1)
+            }
             Msg::SyncExport { shard, diverged, lambda_hat, views } => {
                 if shard as usize != self.shard {
                     return Err(format!(
@@ -1545,6 +1694,10 @@ pub fn server_cli(p: &crate::cli::Parsed) -> Result<String, String> {
     }
     cfg.metrics_listen = p.get("metrics-listen").map(str::to_string);
     cfg.flight_record = p.get("flight-record").map(str::to_string);
+    if let Some(spec) = p.get("trace-sample") {
+        cfg.trace_sample = obstrace::parse_sample(spec)?;
+    }
+    cfg.trace_json = p.get("trace-json").map(str::to_string);
     cfg.pin = PinMode::parse(p.get("pin").unwrap_or("none"))?;
     if let Some(path) = p.get("net-config") {
         let opts = crate::config::net_options_from_file(path).map_err(|e| e.to_string())?;
@@ -1639,6 +1792,8 @@ mod tests {
             ],
             poll_shards: 2,
             poll_wakeups: 1234,
+            traced_spans: 17,
+            flight_dropped: 3,
         };
         assert_eq!(report.resp_count(), 590);
         assert!((report.mean_response() - 0.013).abs() < 1e-12);
@@ -1650,6 +1805,8 @@ mod tests {
         assert_eq!(results.get("sync_merges").and_then(Json::as_f64), Some(7.0));
         assert_eq!(results.get("sync_exports").and_then(Json::as_f64), Some(14.0));
         assert_eq!(results.get("poll_wakeups").and_then(Json::as_f64), Some(1234.0));
+        assert_eq!(results.get("traced_spans").and_then(Json::as_f64), Some(17.0));
+        assert_eq!(results.get("flight_dropped").and_then(Json::as_f64), Some(3.0));
         assert_eq!(back.get("poll_shards").and_then(Json::as_f64), Some(2.0));
         let per = results.get("per_frontend").and_then(Json::as_arr).unwrap();
         assert_eq!(per.len(), 2);
@@ -1657,5 +1814,6 @@ mod tests {
         assert!(rendered.contains("2 remote frontends"));
         assert!(rendered.contains("payload exports over the wire"));
         assert!(rendered.contains("2 poll shards"));
+        assert!(rendered.contains("17 lifecycle spans"));
     }
 }

@@ -23,7 +23,10 @@
 //! additionally bumps its cached probe for each task it submits between
 //! refreshes, so back-to-back decisions do not dogpile one worker).
 
-use super::wire::{self, DecodeScratch, Estimates, Msg, SubmitItem, WireCompletion};
+use super::wire::{
+    self, BatchTrace, DecodeScratch, Estimates, Msg, ReplyTrace, SubmitItem, SubmitTrace,
+    TickTrace, WireCompletion, WireSpan,
+};
 use crate::coordinator::worker::{Completion, LiveTask, WorkerClient};
 use crate::learner::EstimateView;
 use crate::plane::{CachePadded, EstimateTable, SharedViews};
@@ -41,6 +44,21 @@ pub const DEFAULT_NET_BATCH: usize = 64;
 /// buffered task may wait for company before it is flushed anyway.
 pub const DEFAULT_NET_FLUSH_US: f64 = 200.0;
 
+/// Trace data one coordination beat brought back: the four-timestamp
+/// clock exchange (t0/t3 stamped by the transport, t1/t2 by the server)
+/// plus the server's echoed stamps for sampled completions.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct BeatTrace {
+    /// Local trace-clock stamp when this beat's `Tick` was sent (0 when
+    /// no clock exchange rode this beat — e.g. the tick piggybacked on a
+    /// batch frame).
+    pub t0_ns: u64,
+    /// Local trace-clock stamp when the reply arrived.
+    pub t3_ns: u64,
+    /// The server's half: t1/t2 stamps and completion-trace echoes.
+    pub reply: ReplyTrace,
+}
+
 /// What one coordination beat reports back to the frontend loop.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct TickOutcome {
@@ -53,6 +71,9 @@ pub struct TickOutcome {
     pub stop: bool,
     /// Every completion for this shard has been delivered.
     pub drained: bool,
+    /// v3 tracing: clock-exchange stamps and completion-trace echoes
+    /// (TCP transport with tracing negotiated; `None` otherwise).
+    pub trace: Option<BeatTrace>,
 }
 
 /// The coordination surface a §5 frontend needs from its plane.
@@ -65,6 +86,35 @@ pub trait Transport {
         kind: TaskKind,
         demand: f64,
     ) -> Result<(), String>;
+
+    /// [`Self::submit`] for a trace-sampled task: `origin_ns` is the
+    /// task's arrival stamp on the local trace clock. Transports that
+    /// cannot carry stamps (the in-process plane records spans at
+    /// completion intake instead) just submit.
+    fn submit_traced(
+        &mut self,
+        job: u64,
+        worker: usize,
+        kind: TaskKind,
+        demand: f64,
+        origin_ns: u64,
+    ) -> Result<(), String> {
+        let _ = origin_ns;
+        self.submit(job, worker, kind, demand)
+    }
+
+    /// Queue one completed span for shipping to the pool server's trace
+    /// aggregator on a later beat. No-op default (the in-process plane
+    /// aggregates locally).
+    fn ship_span(&mut self, span: WireSpan) {
+        let _ = span;
+    }
+
+    /// Publish the frontend's current clock-offset estimate so it rides
+    /// the next traceable beat. No-op default.
+    fn set_clock_estimate(&mut self, offset_ns: f64, err_ns: f64) {
+        let _ = (offset_ns, err_ns);
+    }
 
     /// One coordination beat: refresh `qlen` probes in place, append this
     /// shard's pending completions to `completions`, and report run state.
@@ -107,6 +157,10 @@ pub trait Transport {
 /// exactly what an unbatched frontend would have written.
 pub struct SubmitCoalescer {
     pending: Vec<SubmitItem>,
+    /// `(index into pending, origin_ns, enq_ns)` stamps of the sampled
+    /// subset; empty for every batch with no sampled task (the common
+    /// case), keeping the flush path allocation-free and v2-compatible.
+    stamps: Vec<(u32, u64, u64)>,
     /// When the oldest pending item was buffered (meaningful only while
     /// `pending` is non-empty).
     first_at: Instant,
@@ -121,6 +175,7 @@ impl SubmitCoalescer {
         let batch = batch.clamp(1, wire::MAX_BATCH_ITEMS);
         Self {
             pending: Vec::with_capacity(batch),
+            stamps: Vec::new(),
             first_at: Instant::now(),
             batch,
             flush_after,
@@ -130,8 +185,18 @@ impl SubmitCoalescer {
     /// Buffer one dispatch; returns `true` when the batch is full and the
     /// caller must flush.
     pub fn push(&mut self, item: SubmitItem) -> bool {
+        self.push_traced(item, None)
+    }
+
+    /// Buffer one dispatch, carrying `(origin_ns, enq_ns)` lifecycle
+    /// stamps when the task is trace-sampled; returns `true` when the
+    /// batch is full and the caller must flush.
+    pub fn push_traced(&mut self, item: SubmitItem, stamp: Option<(u64, u64)>) -> bool {
         if self.pending.is_empty() {
             self.first_at = Instant::now();
+        }
+        if let Some((origin_ns, enq_ns)) = stamp {
+            self.stamps.push((self.pending.len() as u32, origin_ns, enq_ns));
         }
         self.pending.push(item);
         self.pending.len() >= self.batch
@@ -159,9 +224,11 @@ impl SubmitCoalescer {
     /// bit-compatibility contract.
     pub fn flush_frame(&mut self, tick: Option<(u64, f64)>) -> Option<Msg> {
         if self.pending.is_empty() {
-            return tick.map(|(epoch, lambda_local)| Msg::Tick { epoch, lambda_local });
+            return tick
+                .map(|(epoch, lambda_local)| Msg::Tick { epoch, lambda_local, trace: None });
         }
         let items = std::mem::replace(&mut self.pending, Vec::with_capacity(self.batch));
+        let stamps = std::mem::take(&mut self.stamps);
         if items.len() == 1 && tick.is_none() {
             let it = items[0];
             return Some(Msg::Submit {
@@ -169,9 +236,19 @@ impl SubmitCoalescer {
                 worker: it.worker,
                 kind: it.kind,
                 demand: it.demand,
+                trace: stamps.first().map(|&(_, origin_ns, enq_ns)| SubmitTrace {
+                    origin_ns,
+                    enq_ns,
+                    send_ns: crate::obs::trace::now_ns(),
+                }),
             });
         }
-        Some(Msg::SubmitBatch { tick, items })
+        let trace = if stamps.is_empty() {
+            None
+        } else {
+            Some(BatchTrace { send_ns: crate::obs::trace::now_ns(), stamps })
+        };
+        Some(Msg::SubmitBatch { tick, items, trace })
     }
 }
 
@@ -286,6 +363,7 @@ impl Transport for LocalTransport {
             estimates,
             stop,
             drained: stop && self.disconnected,
+            trace: None,
         })
     }
 
@@ -374,7 +452,28 @@ pub struct TcpTransport {
     /// server cross-checks it against the connection's claimed identity).
     shard: u32,
     coalescer: SubmitCoalescer,
+    /// v3 tracing negotiated for this connection.
+    tracing: bool,
+    /// Completed spans awaiting shipment to the server's trace aggregator.
+    /// Spans ride only plain-`Tick` beats (a tick piggybacked on a batch
+    /// frame carries no [`TickTrace`] appendix), so they wait here until
+    /// the next beat whose flush is a bare `Tick`.
+    outbox: Vec<WireSpan>,
+    /// Latest clock-offset estimate (server − frontend), shipped with each
+    /// clock exchange so the server can export it as gauges.
+    offset_ns: f64,
+    /// Half-RTT error bound on `offset_ns`.
+    err_ns: f64,
 }
+
+/// Spans buffered in the trace outbox beyond this are dropped (newest
+/// first) rather than grow without bound when beats keep riding batch
+/// frames.
+const TRACE_OUTBOX_CAP: usize = 8192;
+
+/// At most this many spans ride one `TickTrace` appendix, bounding the
+/// beat frame size.
+const TRACE_SPANS_PER_TICK: usize = 512;
 
 impl TcpTransport {
     /// Wrap a connected stream for shard `shard` (the caller performs the
@@ -388,6 +487,10 @@ impl TcpTransport {
             decode: DecodeScratch::new(),
             shard: shard as u32,
             coalescer: SubmitCoalescer::new(1, Duration::ZERO),
+            tracing: false,
+            outbox: Vec::new(),
+            offset_ns: 0.0,
+            err_ns: 0.0,
         }
     }
 
@@ -395,6 +498,13 @@ impl TcpTransport {
     /// tasks or `flush_after` after the oldest, whichever comes first.
     pub fn configure_batching(&mut self, batch: usize, flush_after: Duration) {
         self.coalescer = SubmitCoalescer::new(batch, flush_after);
+    }
+
+    /// Enable v3 tracing for this connection (called after the handshake
+    /// when the server's `HelloAck` negotiated a non-zero sample rate).
+    /// Beats stamp clock exchanges and the outbox ships spans.
+    pub fn configure_tracing(&mut self, enabled: bool) {
+        self.tracing = enabled;
     }
 
     /// Write one message.
@@ -427,6 +537,39 @@ impl Transport for TcpTransport {
         Ok(())
     }
 
+    fn submit_traced(
+        &mut self,
+        job: u64,
+        worker: usize,
+        kind: TaskKind,
+        demand: f64,
+        origin_ns: u64,
+    ) -> Result<(), String> {
+        if !self.tracing {
+            return self.submit(job, worker, kind, demand);
+        }
+        let item = SubmitItem { job, worker: worker as u32, kind, demand };
+        let full =
+            self.coalescer.push_traced(item, Some((origin_ns, crate::obs::trace::now_ns())));
+        if full {
+            if let Some(msg) = self.coalescer.flush_frame(None) {
+                self.send(&msg)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn ship_span(&mut self, span: WireSpan) {
+        if self.tracing && self.outbox.len() < TRACE_OUTBOX_CAP {
+            self.outbox.push(span);
+        }
+    }
+
+    fn set_clock_estimate(&mut self, offset_ns: f64, err_ns: f64) {
+        self.offset_ns = offset_ns;
+        self.err_ns = err_ns;
+    }
+
     fn tick(
         &mut self,
         epoch: u64,
@@ -434,15 +577,34 @@ impl Transport for TcpTransport {
         qlen: &mut [usize],
         completions: &mut Vec<WireCompletion>,
     ) -> Result<TickOutcome, String> {
-        let beat = self
+        let mut beat = self
             .coalescer
             .flush_frame(Some((epoch, lambda_local)))
             .expect("a beat-carrying flush always produces a frame");
+        // Clock exchanges and span shipment ride only plain-Tick beats:
+        // a tick piggybacked on a batch frame has no TickTrace appendix,
+        // so the outbox waits for the next bare beat (common at any load
+        // where the coalescer flushed before the beat fired).
+        let mut sent_t0 = 0u64;
+        if self.tracing {
+            if let Msg::Tick { trace, .. } = &mut beat {
+                let take = self.outbox.len().min(TRACE_SPANS_PER_TICK);
+                let spans: Vec<WireSpan> = self.outbox.drain(..take).collect();
+                sent_t0 = crate::obs::trace::now_ns();
+                *trace = Some(TickTrace {
+                    t0_ns: sent_t0,
+                    offset_ns: self.offset_ns,
+                    err_ns: self.err_ns,
+                    spans,
+                });
+            }
+        }
         self.send(&beat)?;
         let mut reply = match self.recv()? {
             Msg::TickReply(r) => r,
             other => return Err(format!("expected TickReply, got {:?}", other.tag())),
         };
+        let t3 = if self.tracing { crate::obs::trace::now_ns() } else { 0 };
         if reply.qlen.len() != qlen.len() {
             return Err(format!(
                 "probe vector length {} does not match the {}-worker cluster",
@@ -459,6 +621,10 @@ impl Transport for TcpTransport {
             estimates: reply.estimates.take(),
             stop: reply.stop,
             drained: reply.drained,
+            trace: reply
+                .trace
+                .take()
+                .map(|r| BeatTrace { t0_ns: sent_t0, t3_ns: t3, reply: r }),
         };
         // Hand the completion buffer back to the decode scratch so the
         // next beat's reply decodes allocation-free.
@@ -507,7 +673,7 @@ mod tests {
         assert!(!c.push(item(2)));
         assert!(c.push(item(3)), "third push fills the batch");
         match c.flush_frame(None) {
-            Some(Msg::SubmitBatch { tick: None, items }) => {
+            Some(Msg::SubmitBatch { tick: None, items, trace: None }) => {
                 assert_eq!(items.iter().map(|i| i.job).collect::<Vec<_>>(), vec![1, 2, 3]);
             }
             other => panic!("expected a tickless batch, got {other:?}"),
@@ -526,7 +692,9 @@ mod tests {
         // A two-item deadline flush is a batch frame.
         c.push(item(10));
         match c.flush_frame(None) {
-            Some(Msg::SubmitBatch { tick: None, items }) => assert_eq!(items.len(), 2),
+            Some(Msg::SubmitBatch { tick: None, items, trace: None }) => {
+                assert_eq!(items.len(), 2)
+            }
             other => panic!("expected a batch, got {other:?}"),
         }
         assert!(!c.due(), "flush rearms the deadline");
@@ -537,7 +705,7 @@ mod tests {
         let mut c = SubmitCoalescer::new(8, Duration::from_secs(3600));
         c.push(item(4));
         match c.flush_frame(Some((7, 12.5))) {
-            Some(Msg::SubmitBatch { tick: Some((7, l)), items }) => {
+            Some(Msg::SubmitBatch { tick: Some((7, l)), items, trace: None }) => {
                 assert_eq!(l, 12.5);
                 assert_eq!(items.len(), 1);
             }
@@ -546,7 +714,7 @@ mod tests {
         // With nothing buffered the beat degrades to a plain Tick.
         assert_eq!(
             c.flush_frame(Some((8, 1.0))),
-            Some(Msg::Tick { epoch: 8, lambda_local: 1.0 })
+            Some(Msg::Tick { epoch: 8, lambda_local: 1.0, trace: None })
         );
     }
 
@@ -557,7 +725,13 @@ mod tests {
         let mut c = SubmitCoalescer::new(1, Duration::ZERO);
         assert!(c.push(item(77)), "B=1 flushes on every push");
         let flushed = c.flush_frame(None).expect("one item pending");
-        let eager = Msg::Submit { job: 77, worker: 2, kind: TaskKind::Real, demand: 0.004 };
+        let eager = Msg::Submit {
+            job: 77,
+            worker: 2,
+            kind: TaskKind::Real,
+            demand: 0.004,
+            trace: None,
+        };
         assert_eq!(flushed, eager);
         let (mut a, mut b) = (Vec::new(), Vec::new());
         flushed.encode_into(&mut a);
@@ -566,8 +740,50 @@ mod tests {
         let beat = c.flush_frame(Some((3, 9.0))).expect("beat");
         let (mut a, mut b) = (Vec::new(), Vec::new());
         beat.encode_into(&mut a);
-        Msg::Tick { epoch: 3, lambda_local: 9.0 }.encode_into(&mut b);
+        Msg::Tick { epoch: 3, lambda_local: 9.0, trace: None }.encode_into(&mut b);
         assert_eq!(a, b, "an empty flush carrying a beat is a plain Tick");
+    }
+
+    #[test]
+    fn coalescer_carries_trace_stamps_for_the_sampled_subset() {
+        // Anchor the trace clock before flushing so the send stamps
+        // below are strictly positive.
+        crate::obs::trace::now_ns();
+        // Two of three buffered tasks are trace-sampled: the flushed
+        // batch carries exactly their stamps, indexed into the item list,
+        // with a send stamp no earlier than either enqueue stamp.
+        let mut c = SubmitCoalescer::new(3, Duration::from_secs(3600));
+        c.push_traced(item(1), Some((100, 200)));
+        c.push(item(2));
+        c.push_traced(item(3), Some((300, 400)));
+        match c.flush_frame(None) {
+            Some(Msg::SubmitBatch { tick: None, items, trace: Some(t) }) => {
+                assert_eq!(items.len(), 3);
+                assert_eq!(t.stamps, vec![(0, 100, 200), (2, 300, 400)]);
+                assert!(t.send_ns > 0, "flush stamps the send instant");
+            }
+            other => panic!("expected a stamped batch, got {other:?}"),
+        }
+        assert!(c.is_empty());
+
+        // A sampled single-item tickless flush degrades to Submit and
+        // keeps its stamps as a SubmitTrace appendix.
+        c.push_traced(item(9), Some((7, 8)));
+        match c.flush_frame(None) {
+            Some(Msg::Submit { job: 9, trace: Some(t), .. }) => {
+                assert_eq!((t.origin_ns, t.enq_ns), (7, 8));
+                assert!(t.send_ns > 0, "flush stamps the send instant");
+            }
+            other => panic!("expected a traced Submit, got {other:?}"),
+        }
+
+        // Stamps do not leak across flushes: the next batch is traceless.
+        c.push(item(11));
+        c.push(item(12));
+        match c.flush_frame(None) {
+            Some(Msg::SubmitBatch { trace: None, .. }) => {}
+            other => panic!("expected a traceless batch, got {other:?}"),
+        }
     }
 
     #[test]

@@ -39,10 +39,19 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// Frame magic: the four bytes every Rosella net-plane frame starts with.
 pub const MAGIC: [u8; 4] = *b"RSNP";
 
-/// Protocol version. Bumped on any wire-incompatible change; both sides
-/// reject a mismatch at the first frame. v2 added the `SubmitBatch` frame
-/// and the submit-coalescing policy fields in `HelloAck`.
-pub const VERSION: u16 = 2;
+/// Protocol version this build speaks (and the version stamped on frames
+/// carrying v3-only fields). v2 added the `SubmitBatch` frame and the
+/// submit-coalescing policy fields in `HelloAck`; v3 added the optional
+/// tracing/clock appendices (`SubmitTrace`, `BatchTrace`, `TickTrace`,
+/// `ReplyTrace`, `AckClock`). A frame's version is decided per message:
+/// one with no appendix encodes as [`MIN_VERSION`], byte-identical to a
+/// v2 build's output, so a v2 peer interoperates until the first frame
+/// that actually carries trace data.
+pub const VERSION: u16 = 3;
+
+/// Oldest protocol version this build still accepts (and emits, for
+/// appendix-free frames).
+pub const MIN_VERSION: u16 = 2;
 
 /// Frame header length: magic + version + tag + payload length.
 pub const HEADER_LEN: usize = 12;
@@ -70,7 +79,7 @@ pub enum WireError {
     Truncated,
     /// The first four bytes are not [`MAGIC`].
     BadMagic([u8; 4]),
-    /// Version field differs from [`VERSION`].
+    /// Version field outside [`MIN_VERSION`]`..=`[`VERSION`].
     BadVersion(u16),
     /// Unknown message tag.
     BadTag(u16),
@@ -86,7 +95,7 @@ impl std::fmt::Display for WireError {
             WireError::Truncated => write!(f, "truncated frame"),
             WireError::BadMagic(m) => write!(f, "bad magic {m:?} (not a rosella net frame)"),
             WireError::BadVersion(v) => {
-                write!(f, "protocol version {v} (this build speaks {VERSION})")
+                write!(f, "protocol version {v} (this build speaks {MIN_VERSION}..={VERSION})")
             }
             WireError::BadTag(t) => write!(f, "unknown message tag {t}"),
             WireError::TooLarge(n) => {
@@ -151,14 +160,126 @@ pub struct SubmitItem {
 /// Encoded size of one [`SubmitItem`]: u64 + u32 + u8 + f64.
 const SUBMIT_ITEM_LEN: usize = 8 + 4 + 1 + 8;
 
+/// Encoded size of one [`BatchTrace`] stamp: u32 idx + 2×u64.
+const BATCH_STAMP_LEN: usize = 4 + 8 + 8;
+
+/// Encoded size of one [`WireSpan`]: u64 job + u64 origin + 6×u32 stages.
+const WIRE_SPAN_LEN: usize = 8 + 8 + 6 * 4;
+
+/// Encoded size of one [`CompletionTrace`]: u32 idx + 5×u64 stamps.
+const COMPLETION_TRACE_LEN: usize = 4 + 5 * 8;
+
 /// Most tasks a single `SubmitBatch` frame can carry within
-/// [`MAX_PAYLOAD`] (the worst-case 17-byte piggyback-tick prefix and the
-/// 4-byte item count subtracted first). Coalescers must flush at or below
-/// this bound.
-pub const MAX_BATCH_ITEMS: usize = (MAX_PAYLOAD - 17 - 4) / SUBMIT_ITEM_LEN;
+/// [`MAX_PAYLOAD`]. Worst case subtracted first: the 17-byte
+/// piggyback-tick prefix, the 4-byte item count, the v3 trace appendix
+/// header (8-byte send stamp + 4-byte stamp count), and — at 1/1 sampling
+/// — one 20-byte trace stamp riding along with every item. Coalescers
+/// must flush at or below this bound.
+pub const MAX_BATCH_ITEMS: usize =
+    (MAX_PAYLOAD - 17 - 4 - 8 - 4) / (SUBMIT_ITEM_LEN + BATCH_STAMP_LEN);
 
 /// Encoded size of one [`EstimateView`]: f64 + u64.
 const VIEW_LEN: usize = 16;
+
+/// Server-side handshake clock stamps plus the advertised trace-sampling
+/// policy, appended to a v3 `HelloAck`. Together with the frontend's
+/// `Hello` send stamp and its `HelloAck` receive stamp these form the
+/// first four-timestamp NTP-style exchange seeding
+/// [`ClockAlign`](crate::obs::trace::ClockAlign).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AckClock {
+    /// Server trace-clock stamp at `Hello` receive.
+    pub t1_ns: u64,
+    /// Server trace-clock stamp at `HelloAck` send.
+    pub t2_ns: u64,
+    /// Trace-sampling modulus N the whole run uses (tasks are traced iff
+    /// `sampled(job, N)`; 0 = tracing off).
+    pub sample_n: u32,
+}
+
+/// Frontend-side lifecycle stamps riding a v3 `Submit` of a sampled task:
+/// all nanoseconds on the frontend's trace clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubmitTrace {
+    /// Task arrival (span origin).
+    pub origin_ns: u64,
+    /// Placement decision made / coalescing-buffer enqueue.
+    pub enq_ns: u64,
+    /// Frame send.
+    pub send_ns: u64,
+}
+
+/// Trace appendix of a v3 `SubmitBatch`: one shared frame-send stamp plus
+/// per-item arrival/enqueue stamps for the sampled subset.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct BatchTrace {
+    /// Frame send stamp shared by every item (they flush together).
+    pub send_ns: u64,
+    /// `(item index, origin_ns, enq_ns)` for each sampled item, index
+    /// order matching `items`.
+    pub stamps: Vec<(u32, u64, u64)>,
+}
+
+/// One completed task span shipped frontend → server on a `Tick`, so the
+/// pool server's `/metrics` and `/trace` surfaces aggregate the full
+/// cross-process decomposition. `origin_us` is pre-mapped onto the
+/// *server's* trace timeline via the frontend's clock-offset estimate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireSpan {
+    /// Task id.
+    pub job: u64,
+    /// Span start in µs on the server trace timeline.
+    pub origin_us: u64,
+    /// Per-stage durations in µs (see [`crate::obs::trace::STAGES`]).
+    pub stages_us: [u32; 6],
+}
+
+/// Trace appendix of a v3 `Tick`: a clock-exchange send stamp, the
+/// frontend's current offset estimate (exported as gauges server-side),
+/// and completed spans since the last beat.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TickTrace {
+    /// Frontend trace-clock stamp at `Tick` send (the exchange's t0).
+    pub t0_ns: u64,
+    /// Frontend's current estimate of server−frontend clock offset, ns.
+    pub offset_ns: f64,
+    /// Error bound on `offset_ns`, ns.
+    pub err_ns: f64,
+    /// Completed sampled spans, mapped onto the server timeline.
+    pub spans: Vec<WireSpan>,
+}
+
+/// Echoed lifecycle stamps for one sampled completion inside a v3
+/// `TickReply`: everything the frontend needs to assemble the span
+/// without keeping per-task state of its own.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompletionTrace {
+    /// Index into the reply's `completions` vector.
+    pub idx: u32,
+    /// Frontend stamps echoed back from the `Submit`/`SubmitBatch`.
+    pub origin_ns: u64,
+    /// Frontend enqueue stamp, echoed.
+    pub enq_ns: u64,
+    /// Frontend frame-send stamp, echoed.
+    pub send_ns: u64,
+    /// Server trace-clock stamp at submit-frame receive.
+    pub recv_ns: u64,
+    /// Server trace-clock stamp of the task's completion.
+    pub done_ns: u64,
+}
+
+/// Trace appendix of a v3 `TickReply`: the server's clock-exchange stamps
+/// (t1/t2 of the NTP exchange the `Tick`'s t0 opened) plus echoed stamps
+/// for the sampled completions in this reply.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ReplyTrace {
+    /// Server trace-clock stamp at `Tick` receive.
+    pub t1_ns: u64,
+    /// Server trace-clock stamp at `TickReply` send.
+    pub t2_ns: u64,
+    /// Echoed stamps for sampled completions, `idx`-ascending.
+    pub traced: Vec<CompletionTrace>,
+}
 
 /// The shared run configuration the pool server hands each frontend at
 /// handshake, so `rosella frontend` needs nothing beyond `--connect` and
@@ -202,6 +323,9 @@ pub struct HelloAck {
     pub sync_policy: String,
     /// Configured worker speeds (diagnostics; decisions use estimates).
     pub speeds: Vec<f64>,
+    /// v3: handshake clock stamps + trace-sampling policy. `None` when
+    /// the server answers a v2 frontend (the ack then encodes as v2).
+    pub clock: Option<AckClock>,
 }
 
 /// The coordination beat's reply: everything a remote scheduler needs to
@@ -224,6 +348,9 @@ pub struct TickReply {
     pub estimates: Option<Estimates>,
     /// Completions of tasks this shard routed, oldest first.
     pub completions: Vec<WireCompletion>,
+    /// v3: clock-exchange stamps + echoed stamps for sampled
+    /// completions. `None` on the v2 wire or with tracing off.
+    pub trace: Option<ReplyTrace>,
 }
 
 /// Final per-frontend statistics for the merged cross-process report.
@@ -254,6 +381,9 @@ pub enum Msg {
         shard: u32,
         /// Total scheduler count k.
         shards: u32,
+        /// v3: frontend trace-clock stamp at `Hello` send (t0 of the
+        /// handshake clock exchange). `None` encodes a v2 frame.
+        t0_ns: Option<u64>,
     },
     /// Server → frontend: the shared run configuration.
     HelloAck(HelloAck),
@@ -269,6 +399,9 @@ pub enum Msg {
         kind: TaskKind,
         /// Demand in unit-speed seconds.
         demand: f64,
+        /// v3: lifecycle stamps of a sampled task. `None` (every
+        /// unsampled task) encodes a v2-bit-compatible frame.
+        trace: Option<SubmitTrace>,
     },
     /// Frontend → server: N coalesced task dispatches in one frame, with
     /// an optional piggybacked coordination beat. When `tick` is present
@@ -279,6 +412,9 @@ pub enum Msg {
         tick: Option<(u64, f64)>,
         /// Coalesced dispatches, submission order preserved.
         items: Vec<SubmitItem>,
+        /// v3: stamps for the sampled subset of `items`. `None` (no
+        /// sampled item in the batch) encodes a v2-bit-compatible frame.
+        trace: Option<BatchTrace>,
     },
     /// Frontend → server: one coordination beat.
     Tick {
@@ -286,6 +422,9 @@ pub enum Msg {
         epoch: u64,
         /// The frontend's live local arrival estimate λ̂ₛ.
         lambda_local: f64,
+        /// v3: clock-exchange stamp, offset estimate, and completed
+        /// spans. `None` (tracing off) encodes a v2 frame.
+        trace: Option<TickTrace>,
     },
     /// Server → frontend: reply to `Tick`.
     TickReply(TickReply),
@@ -438,6 +577,11 @@ impl<'a> Cur<'a> {
         Ok(head)
     }
 
+    /// Unconsumed payload remains — a v3 appendix follows.
+    fn has_more(&self) -> bool {
+        !self.buf.is_empty()
+    }
+
     fn u8(&mut self) -> Result<u8, WireError> {
         Ok(self.take(1)?[0])
     }
@@ -566,7 +710,7 @@ pub fn header_payload_len(header: &[u8; HEADER_LEN]) -> Result<usize, WireError>
         return Err(WireError::BadMagic(magic));
     }
     let version = u16::from_le_bytes([header[4], header[5]]);
-    if version != VERSION {
+    if !(MIN_VERSION..=VERSION).contains(&version) {
         return Err(WireError::BadVersion(version));
     }
     let len = u32::from_le_bytes(header[8..12].try_into().expect("sized slice")) as usize;
@@ -593,10 +737,31 @@ impl Msg {
         }
     }
 
+    /// The version this specific message encodes as: [`VERSION`] iff it
+    /// carries a v3 trace/clock appendix, [`MIN_VERSION`] otherwise —
+    /// so appendix-free frames stay byte-identical to a v2 build's
+    /// output and a v2 peer decodes them unchanged.
+    pub fn wire_version(&self) -> u16 {
+        let v3 = match self {
+            Msg::Hello { t0_ns, .. } => t0_ns.is_some(),
+            Msg::HelloAck(a) => a.clock.is_some(),
+            Msg::Submit { trace, .. } => trace.is_some(),
+            Msg::SubmitBatch { trace, .. } => trace.is_some(),
+            Msg::Tick { trace, .. } => trace.is_some(),
+            Msg::TickReply(r) => r.trace.is_some(),
+            _ => false,
+        };
+        if v3 {
+            VERSION
+        } else {
+            MIN_VERSION
+        }
+    }
+
     /// Append one complete frame (header + payload) to `out`.
     pub fn encode_into(&self, out: &mut Vec<u8>) {
         out.extend_from_slice(&MAGIC);
-        put_u16(out, VERSION);
+        put_u16(out, self.wire_version());
         put_u16(out, self.tag());
         let len_at = out.len();
         put_u32(out, 0);
@@ -609,9 +774,12 @@ impl Msg {
 
     fn encode_body(&self, out: &mut Vec<u8>) {
         match self {
-            Msg::Hello { shard, shards } => {
+            Msg::Hello { shard, shards, t0_ns } => {
                 put_u32(out, *shard);
                 put_u32(out, *shards);
+                if let Some(t0) = t0_ns {
+                    put_u64(out, *t0);
+                }
             }
             Msg::HelloAck(a) => {
                 put_u32(out, a.workers);
@@ -632,15 +800,25 @@ impl Msg {
                 put_str(out, &a.policy);
                 put_str(out, &a.sync_policy);
                 put_f64s(out, &a.speeds);
+                if let Some(c) = &a.clock {
+                    put_u64(out, c.t1_ns);
+                    put_u64(out, c.t2_ns);
+                    put_u32(out, c.sample_n);
+                }
             }
             Msg::Start | Msg::DoneAck => {}
-            Msg::Submit { job, worker, kind, demand } => {
+            Msg::Submit { job, worker, kind, demand, trace } => {
                 put_u64(out, *job);
                 put_u32(out, *worker);
                 put_kind(out, *kind);
                 put_f64(out, *demand);
+                if let Some(t) = trace {
+                    put_u64(out, t.origin_ns);
+                    put_u64(out, t.enq_ns);
+                    put_u64(out, t.send_ns);
+                }
             }
-            Msg::SubmitBatch { tick, items } => {
+            Msg::SubmitBatch { tick, items, trace } => {
                 match tick {
                     None => out.push(0),
                     Some((epoch, lambda_local)) => {
@@ -650,10 +828,32 @@ impl Msg {
                     }
                 }
                 put_items(out, items);
+                if let Some(t) = trace {
+                    put_u64(out, t.send_ns);
+                    put_u32(out, t.stamps.len() as u32);
+                    for (idx, origin, enq) in &t.stamps {
+                        put_u32(out, *idx);
+                        put_u64(out, *origin);
+                        put_u64(out, *enq);
+                    }
+                }
             }
-            Msg::Tick { epoch, lambda_local } => {
+            Msg::Tick { epoch, lambda_local, trace } => {
                 put_u64(out, *epoch);
                 put_f64(out, *lambda_local);
+                if let Some(t) = trace {
+                    put_u64(out, t.t0_ns);
+                    put_f64(out, t.offset_ns);
+                    put_f64(out, t.err_ns);
+                    put_u32(out, t.spans.len() as u32);
+                    for s in &t.spans {
+                        put_u64(out, s.job);
+                        put_u64(out, s.origin_us);
+                        for &st in &s.stages_us {
+                            put_u32(out, st);
+                        }
+                    }
+                }
             }
             Msg::TickReply(r) => {
                 put_u32s(out, &r.qlen);
@@ -670,6 +870,19 @@ impl Msg {
                     }
                 }
                 put_completions(out, &r.completions);
+                if let Some(t) = &r.trace {
+                    put_u64(out, t.t1_ns);
+                    put_u64(out, t.t2_ns);
+                    put_u32(out, t.traced.len() as u32);
+                    for ct in &t.traced {
+                        put_u32(out, ct.idx);
+                        put_u64(out, ct.origin_ns);
+                        put_u64(out, ct.enq_ns);
+                        put_u64(out, ct.send_ns);
+                        put_u64(out, ct.recv_ns);
+                        put_u64(out, ct.done_ns);
+                    }
+                }
             }
             Msg::SyncExport { shard, diverged, lambda_hat, views } => {
                 put_u32(out, *shard);
@@ -709,6 +922,7 @@ impl Msg {
         let header: &[u8; HEADER_LEN] =
             frame[..HEADER_LEN].try_into().expect("sized slice");
         let len = header_payload_len(header)?;
+        let version = u16::from_le_bytes([frame[4], frame[5]]);
         let tag = u16::from_le_bytes([frame[6], frame[7]]);
         let body = &frame[HEADER_LEN..];
         if body.len() < len {
@@ -717,43 +931,73 @@ impl Msg {
         if body.len() > len {
             return Err(WireError::Malformed("trailing bytes"));
         }
-        Self::decode_body(tag, body, scratch)
+        Self::decode_body(tag, version, body, scratch)
     }
 
     fn decode_body(
         tag: u16,
+        version: u16,
         body: &[u8],
         scratch: &mut DecodeScratch,
     ) -> Result<Msg, WireError> {
+        // A v3 frame's trace/clock appendix is present iff payload bytes
+        // remain after the v2 fields; a v2 frame with leftover bytes is
+        // malformed (caught by `c.done()` below). A v3 header over an
+        // appendix-free payload is accepted and decodes to `None`.
+        let v3 = version >= VERSION;
         let mut c = Cur { buf: body };
         let msg = match tag {
-            TAG_HELLO => Msg::Hello { shard: c.u32()?, shards: c.u32()? },
-            TAG_HELLO_ACK => Msg::HelloAck(HelloAck {
-                workers: c.u32()?,
-                batch: c.u32()?,
-                net_batch: c.u32()?,
-                net_flush_us: c.f64()?,
-                seed: c.u64()?,
-                prior: c.f64()?,
-                mean_demand: c.f64()?,
-                mu_bar: c.f64()?,
-                rate: c.f64()?,
-                duration: c.f64()?,
-                warmup: c.f64()?,
-                publish_interval: c.f64()?,
-                sync_interval: c.f64()?,
-                sync_threshold: c.f64()?,
-                fake_jobs: c.boolean()?,
-                policy: c.string()?,
-                sync_policy: c.string()?,
-                speeds: c.f64s()?,
-            }),
+            TAG_HELLO => Msg::Hello {
+                shard: c.u32()?,
+                shards: c.u32()?,
+                t0_ns: if v3 && c.has_more() { Some(c.u64()?) } else { None },
+            },
+            TAG_HELLO_ACK => {
+                let mut a = HelloAck {
+                    workers: c.u32()?,
+                    batch: c.u32()?,
+                    net_batch: c.u32()?,
+                    net_flush_us: c.f64()?,
+                    seed: c.u64()?,
+                    prior: c.f64()?,
+                    mean_demand: c.f64()?,
+                    mu_bar: c.f64()?,
+                    rate: c.f64()?,
+                    duration: c.f64()?,
+                    warmup: c.f64()?,
+                    publish_interval: c.f64()?,
+                    sync_interval: c.f64()?,
+                    sync_threshold: c.f64()?,
+                    fake_jobs: c.boolean()?,
+                    policy: c.string()?,
+                    sync_policy: c.string()?,
+                    speeds: c.f64s()?,
+                    clock: None,
+                };
+                if v3 && c.has_more() {
+                    a.clock = Some(AckClock {
+                        t1_ns: c.u64()?,
+                        t2_ns: c.u64()?,
+                        sample_n: c.u32()?,
+                    });
+                }
+                Msg::HelloAck(a)
+            }
             TAG_START => Msg::Start,
             TAG_SUBMIT => Msg::Submit {
                 job: c.u64()?,
                 worker: c.u32()?,
                 kind: c.kind()?,
                 demand: c.f64()?,
+                trace: if v3 && c.has_more() {
+                    Some(SubmitTrace {
+                        origin_ns: c.u64()?,
+                        enq_ns: c.u64()?,
+                        send_ns: c.u64()?,
+                    })
+                } else {
+                    None
+                },
             },
             TAG_SUBMIT_BATCH => {
                 let tick = match c.u8()? {
@@ -762,9 +1006,46 @@ impl Msg {
                     _ => return Err(WireError::Malformed("tick flag out of range")),
                 };
                 c.items_into(&mut scratch.items)?;
-                Msg::SubmitBatch { tick, items: std::mem::take(&mut scratch.items) }
+                let trace = if v3 && c.has_more() {
+                    let send_ns = c.u64()?;
+                    let n = c.count(BATCH_STAMP_LEN)?;
+                    let mut stamps = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        stamps.push((c.u32()?, c.u64()?, c.u64()?));
+                    }
+                    Some(BatchTrace { send_ns, stamps })
+                } else {
+                    None
+                };
+                Msg::SubmitBatch {
+                    tick,
+                    items: std::mem::take(&mut scratch.items),
+                    trace,
+                }
             }
-            TAG_TICK => Msg::Tick { epoch: c.u64()?, lambda_local: c.f64()? },
+            TAG_TICK => Msg::Tick {
+                epoch: c.u64()?,
+                lambda_local: c.f64()?,
+                trace: if v3 && c.has_more() {
+                    let t0_ns = c.u64()?;
+                    let offset_ns = c.f64()?;
+                    let err_ns = c.f64()?;
+                    let n = c.count(WIRE_SPAN_LEN)?;
+                    let mut spans = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let job = c.u64()?;
+                        let origin_us = c.u64()?;
+                        let mut stages_us = [0u32; 6];
+                        for st in &mut stages_us {
+                            *st = c.u32()?;
+                        }
+                        spans.push(WireSpan { job, origin_us, stages_us });
+                    }
+                    Some(TickTrace { t0_ns, offset_ns, err_ns, spans })
+                } else {
+                    None
+                },
+            },
             TAG_TICK_REPLY => {
                 let qlen = c.u32s()?;
                 let lambda_live = c.f64()?;
@@ -781,6 +1062,25 @@ impl Msg {
                 };
                 c.completions_into(&mut scratch.completions)?;
                 let completions = std::mem::take(&mut scratch.completions);
+                let trace = if v3 && c.has_more() {
+                    let t1_ns = c.u64()?;
+                    let t2_ns = c.u64()?;
+                    let n = c.count(COMPLETION_TRACE_LEN)?;
+                    let mut traced = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        traced.push(CompletionTrace {
+                            idx: c.u32()?,
+                            origin_ns: c.u64()?,
+                            enq_ns: c.u64()?,
+                            send_ns: c.u64()?,
+                            recv_ns: c.u64()?,
+                            done_ns: c.u64()?,
+                        });
+                    }
+                    Some(ReplyTrace { t1_ns, t2_ns, traced })
+                } else {
+                    None
+                };
                 Msg::TickReply(TickReply {
                     qlen,
                     lambda_live,
@@ -788,6 +1088,7 @@ impl Msg {
                     drained,
                     estimates,
                     completions,
+                    trace,
                 })
             }
             TAG_SYNC_EXPORT => Msg::SyncExport {
@@ -922,30 +1223,41 @@ mod tests {
         }
     }
 
+    fn sample_ack() -> HelloAck {
+        HelloAck {
+            workers: 8,
+            batch: 64,
+            net_batch: 64,
+            net_flush_us: 200.0,
+            seed: 42,
+            prior: 0.8125,
+            mean_demand: 0.01,
+            mu_bar: 650.0,
+            rate: 400.0,
+            duration: 3.0,
+            warmup: 0.5,
+            publish_interval: 0.2,
+            sync_interval: 0.2,
+            sync_threshold: 0.1,
+            fake_jobs: true,
+            policy: "ppot".into(),
+            sync_policy: "adaptive".into(),
+            speeds: vec![2.0, 1.0, 0.5, 0.25],
+            clock: None,
+        }
+    }
+
     /// One sample message per variant, covering empty and non-empty
-    /// collections and both `estimates` arms.
+    /// collections, both `estimates` arms, and every v3 trace appendix
+    /// in both its present and absent form.
     fn every_variant() -> Vec<Msg> {
         vec![
-            Msg::Hello { shard: 1, shards: 4 },
+            Msg::Hello { shard: 1, shards: 4, t0_ns: None },
+            Msg::Hello { shard: 0, shards: 2, t0_ns: Some(123_456_789) },
+            Msg::HelloAck(sample_ack()),
             Msg::HelloAck(HelloAck {
-                workers: 8,
-                batch: 64,
-                net_batch: 64,
-                net_flush_us: 200.0,
-                seed: 42,
-                prior: 0.8125,
-                mean_demand: 0.01,
-                mu_bar: 650.0,
-                rate: 400.0,
-                duration: 3.0,
-                warmup: 0.5,
-                publish_interval: 0.2,
-                sync_interval: 0.2,
-                sync_threshold: 0.1,
-                fake_jobs: true,
-                policy: "ppot".into(),
-                sync_policy: "adaptive".into(),
-                speeds: vec![2.0, 1.0, 0.5, 0.25],
+                clock: Some(AckClock { t1_ns: 1_000, t2_ns: 2_000, sample_n: 64 }),
+                ..sample_ack()
             }),
             Msg::Start,
             Msg::Submit {
@@ -953,8 +1265,35 @@ mod tests {
                 worker: 3,
                 kind: TaskKind::Benchmark,
                 demand: 0.003,
+                trace: None,
             },
-            Msg::Tick { epoch: 12, lambda_local: 99.5 },
+            Msg::Submit {
+                job: 64,
+                worker: 1,
+                kind: TaskKind::Real,
+                demand: 0.007,
+                trace: Some(SubmitTrace { origin_ns: 10, enq_ns: 20, send_ns: 30 }),
+            },
+            Msg::Tick { epoch: 12, lambda_local: 99.5, trace: None },
+            Msg::Tick {
+                epoch: 13,
+                lambda_local: 50.25,
+                trace: Some(TickTrace {
+                    t0_ns: 5_000,
+                    offset_ns: -250.5,
+                    err_ns: 80.0,
+                    spans: vec![WireSpan {
+                        job: (2u64 << 48) | 5,
+                        origin_us: 1_000,
+                        stages_us: [1, 2, 3, 4, 5, 6],
+                    }],
+                }),
+            },
+            Msg::Tick {
+                epoch: 14,
+                lambda_local: 1.0,
+                trace: Some(TickTrace::default()),
+            },
             Msg::SubmitBatch {
                 tick: Some((12, 99.5)),
                 items: vec![
@@ -966,6 +1305,7 @@ mod tests {
                         demand: 0.001,
                     },
                 ],
+                trace: None,
             },
             Msg::SubmitBatch {
                 tick: None,
@@ -975,8 +1315,20 @@ mod tests {
                     kind: TaskKind::Real,
                     demand: 0.01,
                 }],
+                trace: None,
             },
-            Msg::SubmitBatch { tick: Some((0, 0.0)), items: vec![] },
+            Msg::SubmitBatch {
+                tick: Some((3, 10.0)),
+                items: vec![
+                    SubmitItem { job: 5, worker: 0, kind: TaskKind::Real, demand: 0.02 },
+                    SubmitItem { job: 6, worker: 2, kind: TaskKind::Real, demand: 0.03 },
+                ],
+                trace: Some(BatchTrace {
+                    send_ns: 40,
+                    stamps: vec![(1, 11, 22)],
+                }),
+            },
+            Msg::SubmitBatch { tick: Some((0, 0.0)), items: vec![], trace: None },
             Msg::TickReply(TickReply {
                 qlen: vec![0, 3, 1, 7],
                 lambda_live: 123.0,
@@ -988,6 +1340,23 @@ mod tests {
                     epoch: 14,
                 }),
                 completions: vec![sample_completion()],
+                trace: None,
+            }),
+            Msg::TickReply(TickReply {
+                completions: vec![sample_completion()],
+                trace: Some(ReplyTrace {
+                    t1_ns: 7_000,
+                    t2_ns: 7_500,
+                    traced: vec![CompletionTrace {
+                        idx: 0,
+                        origin_ns: 10,
+                        enq_ns: 20,
+                        send_ns: 30,
+                        recv_ns: 6_000,
+                        done_ns: 6_900,
+                    }],
+                }),
+                ..TickReply::default()
             }),
             Msg::TickReply(TickReply::default()),
             Msg::SyncExport {
@@ -1026,7 +1395,7 @@ mod tests {
         // Bit patterns survive the wire even where PartialEq is useless:
         // infinities, subnormals, negative zero, and NaN.
         for x in [f64::INFINITY, f64::NEG_INFINITY, -0.0, 5e-324, f64::NAN, 0.1 + 0.2] {
-            let msg = Msg::Tick { epoch: 0, lambda_local: x };
+            let msg = Msg::Tick { epoch: 0, lambda_local: x, trace: None };
             let mut buf = Vec::new();
             msg.encode_into(&mut buf);
             match Msg::decode(&buf).unwrap() {
@@ -1113,7 +1482,7 @@ mod tests {
         // not attempt the allocation. The count is the last u32 written
         // for an empty batch.
         let mut buf = Vec::new();
-        Msg::SubmitBatch { tick: None, items: vec![] }.encode_into(&mut buf);
+        Msg::SubmitBatch { tick: None, items: vec![], trace: None }.encode_into(&mut buf);
         let n = buf.len();
         buf[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
         assert_eq!(Msg::decode(&buf), Err(WireError::Truncated));
@@ -1122,20 +1491,144 @@ mod tests {
     #[test]
     fn batch_capacity_fits_the_payload_bound() {
         // A frame at the documented item ceiling must encode within
-        // MAX_PAYLOAD even with the piggyback tick present.
+        // MAX_PAYLOAD even with the piggyback tick present and every
+        // item sampled (one trace stamp per item — the 1/1 worst case).
         let items =
             vec![SubmitItem { job: 0, worker: 0, kind: TaskKind::Real, demand: 0.0 }; 4];
+        let stamps: Vec<(u32, u64, u64)> = (0..4).map(|i| (i, 1, 2)).collect();
         let mut buf = Vec::new();
-        Msg::SubmitBatch { tick: Some((1, 2.0)), items }.encode_into(&mut buf);
-        let per_item = SUBMIT_ITEM_LEN;
+        Msg::SubmitBatch {
+            tick: Some((1, 2.0)),
+            items,
+            trace: Some(BatchTrace { send_ns: 3, stamps }),
+        }
+        .encode_into(&mut buf);
+        let per_item = SUBMIT_ITEM_LEN + BATCH_STAMP_LEN;
         let overhead = buf.len() - HEADER_LEN - 4 * per_item;
         assert!(overhead + MAX_BATCH_ITEMS * per_item <= MAX_PAYLOAD);
     }
 
     #[test]
+    fn traceless_frames_encode_as_v2_bit_compatible() {
+        // The compat contract: any message without a trace/clock appendix
+        // must put MIN_VERSION on the wire — the exact bytes a v2 build
+        // emits — so a v2 peer decodes it unchanged.
+        for msg in every_variant() {
+            let mut buf = Vec::new();
+            msg.encode_into(&mut buf);
+            let ver = u16::from_le_bytes([buf[4], buf[5]]);
+            assert_eq!(ver, msg.wire_version());
+            let has_appendix = ver == VERSION;
+            match &msg {
+                Msg::Hello { t0_ns, .. } => assert_eq!(t0_ns.is_some(), has_appendix),
+                Msg::HelloAck(a) => assert_eq!(a.clock.is_some(), has_appendix),
+                Msg::Submit { trace, .. } => assert_eq!(trace.is_some(), has_appendix),
+                Msg::SubmitBatch { trace, .. } => assert_eq!(trace.is_some(), has_appendix),
+                Msg::Tick { trace, .. } => assert_eq!(trace.is_some(), has_appendix),
+                Msg::TickReply(r) => assert_eq!(r.trace.is_some(), has_appendix),
+                _ => assert_eq!(ver, MIN_VERSION, "{msg:?} must stay v2"),
+            }
+        }
+    }
+
+    #[test]
+    fn v3_header_over_an_appendix_free_payload_decodes_to_none() {
+        // A v3 peer that has nothing to append may still stamp v3; the
+        // payload is the v2 layout and every optional decodes to None.
+        let msgs = [
+            Msg::Hello { shard: 1, shards: 4, t0_ns: None },
+            Msg::Submit { job: 9, worker: 2, kind: TaskKind::Real, demand: 0.01, trace: None },
+            Msg::Tick { epoch: 3, lambda_local: 7.5, trace: None },
+        ];
+        for msg in msgs {
+            let mut buf = Vec::new();
+            msg.encode_into(&mut buf);
+            buf[4..6].copy_from_slice(&VERSION.to_le_bytes());
+            assert_eq!(Msg::decode(&buf).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn v2_header_over_a_trace_appendix_is_rejected() {
+        // A frame claiming v2 but carrying appendix bytes is malformed —
+        // the appendix is only ever parsed under a v3 header.
+        let mut buf = Vec::new();
+        Msg::Submit {
+            job: 1,
+            worker: 0,
+            kind: TaskKind::Real,
+            demand: 0.1,
+            trace: Some(SubmitTrace { origin_ns: 1, enq_ns: 2, send_ns: 3 }),
+        }
+        .encode_into(&mut buf);
+        buf[4..6].copy_from_slice(&MIN_VERSION.to_le_bytes());
+        assert_eq!(Msg::decode(&buf), Err(WireError::Malformed("trailing bytes")));
+    }
+
+    #[test]
+    fn hostile_truncated_trace_appendix_is_rejected() {
+        // A v3 Submit whose appendix is cut mid-stamp (header length
+        // patched to match, so the frame is internally consistent) must
+        // fail as Truncated from the bounds-checked reader.
+        let mut buf = Vec::new();
+        Msg::Submit {
+            job: 1,
+            worker: 0,
+            kind: TaskKind::Real,
+            demand: 0.1,
+            trace: Some(SubmitTrace { origin_ns: 1, enq_ns: 2, send_ns: 3 }),
+        }
+        .encode_into(&mut buf);
+        for chop in 1..24 {
+            let mut cut = buf.clone();
+            cut.truncate(buf.len() - chop);
+            let body_len = (cut.len() - HEADER_LEN) as u32;
+            cut[8..12].copy_from_slice(&body_len.to_le_bytes());
+            let got = Msg::decode(&cut);
+            assert!(
+                got == Err(WireError::Truncated) || got == Err(WireError::Malformed("trailing bytes")),
+                "chop {chop}: {got:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn hostile_span_counts_cannot_drive_allocations() {
+        // A Tick trace claiming u32::MAX spans must fail as Truncated
+        // before any allocation; same for a TickReply's traced count.
+        let mut buf = Vec::new();
+        Msg::Tick { epoch: 1, lambda_local: 2.0, trace: Some(TickTrace::default()) }
+            .encode_into(&mut buf);
+        let n = buf.len();
+        buf[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(Msg::decode(&buf), Err(WireError::Truncated));
+
+        let mut buf = Vec::new();
+        Msg::TickReply(TickReply {
+            trace: Some(ReplyTrace::default()),
+            ..TickReply::default()
+        })
+        .encode_into(&mut buf);
+        let n = buf.len();
+        buf[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(Msg::decode(&buf), Err(WireError::Truncated));
+
+        let mut buf = Vec::new();
+        Msg::SubmitBatch {
+            tick: None,
+            items: vec![],
+            trace: Some(BatchTrace::default()),
+        }
+        .encode_into(&mut buf);
+        let n = buf.len();
+        buf[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(Msg::decode(&buf), Err(WireError::Truncated));
+    }
+
+    #[test]
     fn out_of_range_enums_are_malformed() {
         let mut buf = Vec::new();
-        Msg::Submit { job: 1, worker: 0, kind: TaskKind::Real, demand: 0.1 }
+        Msg::Submit { job: 1, worker: 0, kind: TaskKind::Real, demand: 0.1, trace: None }
             .encode_into(&mut buf);
         // The kind byte sits after job (8) + worker (4).
         buf[HEADER_LEN + 12] = 7;
@@ -1179,7 +1672,7 @@ mod tests {
 
     fn batch_frame(items: Vec<SubmitItem>) -> Vec<u8> {
         let mut buf = Vec::new();
-        Msg::SubmitBatch { tick: None, items }.encode_into(&mut buf);
+        Msg::SubmitBatch { tick: None, items, trace: None }.encode_into(&mut buf);
         buf
     }
 

@@ -234,6 +234,19 @@ impl FlightRecorder {
         self.lanes.iter().map(|l| l.lock().unwrap().total).sum()
     }
 
+    /// Events lost to ring overwrites: recorded minus retained, summed
+    /// across lanes. Exposed as `rosella_flight_dropped_total` so a scrape
+    /// can tell whether the `/flight` tail is the whole story.
+    pub fn dropped(&self) -> u64 {
+        self.lanes
+            .iter()
+            .map(|l| {
+                let ring = l.lock().unwrap();
+                ring.total - ring.buf.len() as u64
+            })
+            .sum()
+    }
+
     /// Dump every lane as JSONL, oldest-first within each lane (lanes are
     /// concatenated; consumers sort on `t_ns` if they need a global
     /// order). Ends with a newline when non-empty.
@@ -310,6 +323,7 @@ mod tests {
             rec.record(0, placement(task));
         }
         assert_eq!(rec.total(), 10);
+        assert_eq!(rec.dropped(), 6, "10 recorded into capacity 4 drops 6");
         let dump = rec.dump_jsonl();
         let tasks: Vec<u64> = dump
             .lines()
@@ -342,5 +356,6 @@ mod tests {
         let rec = FlightRecorder::new(3, 16);
         assert_eq!(rec.dump_jsonl(), "");
         assert_eq!(rec.total(), 0);
+        assert_eq!(rec.dropped(), 0);
     }
 }

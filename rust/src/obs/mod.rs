@@ -26,6 +26,12 @@
 //!   `# TYPE` headers, cumulative `le` histogram buckets).
 //! * [`log`] — a tiny leveled logger, env-filtered via `ROSELLA_LOG`
 //!   (`error|warn|info|debug`, off by default so benches pay nothing).
+//! * [`trace`] — sampled per-task lifecycle tracing ([`Tracer`]): stage
+//!   decomposition histograms (`rosella_stage_us{stage=...}`), a bounded
+//!   raw-span ring rendered as Perfetto-loadable Chrome trace-event JSON
+//!   (`/trace`, `--trace-json`), and the NTP-style [`ClockAlign`]
+//!   cross-process clock-offset estimator. Deterministic 1-in-N sampling
+//!   by task-id hash keeps unsampled tasks on the allocation-free path.
 //!
 //! None of this touches an RNG stream or reorders a decision: counters are
 //! relaxed atomics, the flight recorder only *reads* decision state, and
@@ -39,8 +45,10 @@ pub mod flight;
 pub mod log;
 pub mod registry;
 pub mod scrape;
+pub mod trace;
 
 pub use expo::{escape_label_value, valid_metric_name, Expo};
 pub use flight::{FlightEvent, FlightRecorder, ProbeTrace};
 pub use registry::{Counter, Gauge, HistSnapshot, Log2Histogram, Registry, ShardSlot};
 pub use scrape::MetricsServer;
+pub use trace::{ClockAlign, SpanRecord, Tracer, STAGES};

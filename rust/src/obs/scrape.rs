@@ -7,6 +7,8 @@
 //! closure from request path to `(content type, body)`, so the plane can
 //! route `/metrics` to the exposition renderer and `/flight` to the
 //! flight-recorder JSONL dump without this module knowing about either.
+//! `/healthz` is answered here (200 `ok`) before the handler is consulted,
+//! and unknown paths get a proper 404 with `Content-Length` framing.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -116,6 +118,11 @@ fn serve_one(mut stream: TcpStream, handler: &Arc<Handler>) -> std::io::Result<(
     }
     // Strip any query string before routing.
     let path = path.split('?').next().unwrap_or(path);
+    // Liveness probe, served by every endpoint regardless of handler: a
+    // 200 here means the accept loop is alive, nothing more.
+    if path == "/healthz" {
+        return respond(&mut stream, 200, "text/plain", "ok\n");
+    }
     match handler(path) {
         Some((content_type, body)) => respond(&mut stream, 200, content_type, &body),
         None => respond(&mut stream, 404, "text/plain", "not found"),
@@ -151,11 +158,16 @@ pub const EXPOSITION_CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=ut
 mod tests {
     use super::*;
 
-    fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+    fn get_raw(addr: SocketAddr, path: &str) -> String {
         let mut s = TcpStream::connect(addr).unwrap();
         s.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes()).unwrap();
         let mut out = String::new();
         s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+        let out = get_raw(addr, path);
         let status: u16 =
             out.split_whitespace().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0);
         let body = out.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
@@ -184,6 +196,29 @@ mod tests {
         // Query strings are stripped before routing.
         let (status, _) = get(addr, "/metrics?x=1");
         assert_eq!(status, 200);
+        server.shutdown();
+    }
+
+    #[test]
+    fn healthz_is_built_in_and_404_carries_framing_headers() {
+        // Even a handler that serves nothing still answers the liveness
+        // probe, and its 404s carry a correct Content-Length so keep-alive
+        // clients and proxies can frame the response.
+        let handler: Arc<Handler> = Arc::new(|_| None);
+        let server = MetricsServer::spawn("127.0.0.1:0", handler).unwrap();
+        let addr = server.addr();
+        let (status, body) = get(addr, "/healthz");
+        assert_eq!(status, 200);
+        assert_eq!(body, "ok\n");
+        let raw = get_raw(addr, "/missing");
+        assert!(raw.starts_with("HTTP/1.1 404 Not Found"), "bad status line: {raw}");
+        let body = "not found";
+        assert!(
+            raw.contains(&format!("Content-Length: {}\r\n", body.len())),
+            "404 must declare its body length: {raw}"
+        );
+        assert!(raw.contains("Connection: close\r\n"));
+        assert!(raw.ends_with(body), "404 body mismatch: {raw}");
         server.shutdown();
     }
 

@@ -1,0 +1,575 @@
+//! Sampled per-task lifecycle tracing: where each microsecond of a
+//! task's response time goes.
+//!
+//! A traced task carries monotonic timestamps through every stage of its
+//! life — frontend decision, coalescing-buffer enqueue, frame send,
+//! pool-server frame receive, worker queue, service, and the reply path
+//! back — and the decomposition is rendered two ways:
+//!
+//! * aggregated per-stage [`Log2Histogram`]s, exposed as
+//!   `rosella_stage_us{stage=...}` on the `/metrics` scrape surface;
+//! * raw sampled spans as Chrome trace-event JSON (loadable in Perfetto
+//!   or `chrome://tracing`), served at `/trace` and dumped via
+//!   `--trace-json`.
+//!
+//! Sampling is deterministic by task-id hash ([`sampled`]), so two
+//! processes agree on which tasks are traced without negotiation, and an
+//! unsampled task touches none of this module on the hot path beyond one
+//! branch. Cross-process stamps are aligned by [`ClockAlign`], a
+//! four-timestamp NTP-style offset estimator fed by the Hello/HelloAck
+//! handshake and refreshed on every Tick/TickReply beat.
+//!
+//! All stamps are nanoseconds on a process-wide monotonic timeline
+//! anchored at the first [`now_ns`] call ([`ns_of`] maps an
+//! [`Instant`] captured elsewhere — e.g. a worker's completion stamp —
+//! onto the same timeline).
+
+use super::expo::Expo;
+use super::registry::{bucket_upper, Gauge, HistSnapshot, Log2Histogram, LOG2_BUCKETS};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Lifecycle stage names, in task order. Indexes into
+/// [`SpanRecord::stages_us`].
+pub const STAGES: [&str; 6] = ["decide", "coalesce", "wire", "queue", "service", "reply"];
+
+/// Stage index: arrival → placement decision made.
+pub const STAGE_DECIDE: usize = 0;
+/// Stage index: decision → coalescing-buffer flush (frame send).
+pub const STAGE_COALESCE: usize = 1;
+/// Stage index: frame send → pool-server frame receive (clock-aligned).
+pub const STAGE_WIRE: usize = 2;
+/// Stage index: waiting in the worker's queue.
+pub const STAGE_QUEUE: usize = 3;
+/// Stage index: task service time.
+pub const STAGE_SERVICE: usize = 4;
+/// Stage index: completion → reply received at the frontend.
+pub const STAGE_REPLY: usize = 5;
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Nanoseconds since the process-wide trace epoch. The epoch is anchored
+/// lazily at the first call, so stamps from any thread share one
+/// monotonic timeline.
+#[inline]
+pub fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Map an [`Instant`] captured elsewhere (e.g. a worker completion
+/// stamp) onto the trace timeline. Instants predating the epoch clamp
+/// to 0.
+#[inline]
+pub fn ns_of(at: Instant) -> u64 {
+    at.saturating_duration_since(*EPOCH.get_or_init(Instant::now)).as_nanos() as u64
+}
+
+/// SplitMix64 finalizer: a cheap, well-mixed task-id hash.
+#[inline]
+fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Deterministic 1-in-`n` sampling decision by task-id hash. `n == 0`
+/// disables tracing entirely; `n == 1` traces every task. Both sides of
+/// the wire evaluate this identically, so sampled stamps never need a
+/// per-task negotiation bit.
+#[inline]
+pub fn sampled(job: u64, n: u32) -> bool {
+    n > 0 && splitmix(job) % u64::from(n) == 0
+}
+
+/// Parse a `--trace-sample` spec: `1/N` (the canonical form), a bare
+/// `N`, or `off`/`0` to disable.
+pub fn parse_sample(s: &str) -> Result<u32, String> {
+    let s = s.trim();
+    if s.eq_ignore_ascii_case("off") {
+        return Ok(0);
+    }
+    let n = match s.split_once('/') {
+        Some((num, den)) => {
+            if num.trim() != "1" {
+                return Err(format!("--trace-sample expects 1/N (got '{s}')"));
+            }
+            den.trim().parse::<u32>()
+        }
+        None => s.parse::<u32>(),
+    };
+    n.map_err(|_| format!("--trace-sample expects 1/N, N, or 'off' (got '{s}')"))
+}
+
+/// One accepted clock exchange: estimated remote−local offset and the
+/// round-trip delay it rode on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClockSample {
+    /// Estimated `remote_clock − local_clock`, nanoseconds.
+    pub offset_ns: f64,
+    /// Round-trip delay minus remote processing time, nanoseconds.
+    pub delay_ns: f64,
+}
+
+/// Four-timestamp NTP-style clock-offset estimator.
+///
+/// An exchange stamps `t0` (local send), `t1` (remote receive), `t2`
+/// (remote send), `t3` (local receive). The classic estimate is
+///
+/// ```text
+/// offset θ = ((t1 − t0) + (t2 − t3)) / 2
+/// delay  δ = (t3 − t0) − (t2 − t1)
+/// ```
+///
+/// With one-way delays `a` (outbound) and `b` (return), the estimator's
+/// error is exactly `|a − b| / 2 ≤ δ / 2`, so `δ / 2` is a sound error
+/// bound regardless of asymmetry. The estimator keeps the minimum-delay
+/// exchange seen so far — the exchange whose bound is tightest — and is
+/// refreshed by every Tick/TickReply beat after the handshake seeds it.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ClockAlign {
+    best: Option<ClockSample>,
+    exchanges: u64,
+}
+
+impl ClockAlign {
+    /// Fresh estimator with no exchanges observed.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed one four-timestamp exchange (`t0`/`t3` on the local
+    /// timeline, `t1`/`t2` on the remote one). Keeps it iff its delay
+    /// beats the best so far.
+    pub fn observe(&mut self, t0: u64, t1: u64, t2: u64, t3: u64) {
+        self.exchanges += 1;
+        let (t0, t1, t2, t3) = (t0 as i128, t1 as i128, t2 as i128, t3 as i128);
+        let offset = ((t1 - t0) + (t2 - t3)) as f64 / 2.0;
+        let delay = ((t3 - t0) - (t2 - t1)).max(0) as f64;
+        let keep = match self.best {
+            None => true,
+            Some(b) => delay < b.delay_ns,
+        };
+        if keep {
+            self.best = Some(ClockSample { offset_ns: offset, delay_ns: delay });
+        }
+    }
+
+    /// Best estimate of `remote_clock − local_clock` in nanoseconds
+    /// (0.0 before any exchange).
+    pub fn offset_ns(&self) -> f64 {
+        self.best.map_or(0.0, |b| b.offset_ns)
+    }
+
+    /// Error bound on [`Self::offset_ns`] (half the best round-trip
+    /// delay; 0.0 before any exchange).
+    pub fn error_ns(&self) -> f64 {
+        self.best.map_or(0.0, |b| b.delay_ns / 2.0)
+    }
+
+    /// Exchanges observed (accepted or not).
+    pub fn exchanges(&self) -> u64 {
+        self.exchanges
+    }
+
+    /// Whether at least one exchange seeded the estimate.
+    pub fn aligned(&self) -> bool {
+        self.best.is_some()
+    }
+
+    /// Map a remote-timeline stamp onto the local timeline.
+    pub fn to_local_ns(&self, remote_ns: u64) -> u64 {
+        let v = remote_ns as f64 - self.offset_ns();
+        if v <= 0.0 { 0 } else { v as u64 }
+    }
+
+    /// Map a local-timeline stamp onto the remote timeline.
+    pub fn to_remote_ns(&self, local_ns: u64) -> u64 {
+        let v = local_ns as f64 + self.offset_ns();
+        if v <= 0.0 { 0 } else { v as u64 }
+    }
+}
+
+/// One completed task span: where its response time went, stage by
+/// stage, in microseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Task id (shard in the high bits, sequence below).
+    pub job: u64,
+    /// Span start (task arrival) in µs on the recording process's trace
+    /// timeline.
+    pub origin_us: u64,
+    /// Per-stage durations in µs, indexed by `STAGE_*`.
+    pub stages_us: [u32; 6],
+}
+
+impl SpanRecord {
+    /// Sum of all stage durations, µs.
+    pub fn total_us(&self) -> u64 {
+        self.stages_us.iter().map(|&s| u64::from(s)).sum()
+    }
+}
+
+/// Bounded overwrite ring of raw spans (the Perfetto export surface).
+#[derive(Debug)]
+struct SpanRing {
+    buf: Vec<SpanRecord>,
+    next: usize,
+    cap: usize,
+}
+
+impl SpanRing {
+    fn push(&mut self, rec: SpanRecord) {
+        if self.buf.len() < self.cap {
+            self.buf.push(rec);
+        } else {
+            self.buf[self.next] = rec;
+        }
+        self.next = (self.next + 1) % self.cap;
+    }
+
+    /// Spans oldest-first.
+    fn snapshot(&self) -> Vec<SpanRecord> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        if self.buf.len() == self.cap {
+            out.extend_from_slice(&self.buf[self.next..]);
+            out.extend_from_slice(&self.buf[..self.next]);
+        } else {
+            out.extend_from_slice(&self.buf);
+        }
+        out
+    }
+}
+
+/// Default bound on retained raw spans.
+pub const SPAN_RING_CAP: usize = 4096;
+
+/// Aggregation point for sampled task spans: per-stage histograms (the
+/// `/metrics` surface), a bounded raw-span ring (the `/trace` surface),
+/// and the current cross-process clock estimate.
+#[derive(Debug)]
+pub struct Tracer {
+    sample_n: u32,
+    stages: [Log2Histogram; 6],
+    spans: Mutex<SpanRing>,
+    recorded: AtomicU64,
+    /// Estimated remote−local clock offset, ns (frontend-reported).
+    pub clock_offset_ns: Gauge,
+    /// Error bound on the offset estimate, ns.
+    pub clock_error_ns: Gauge,
+}
+
+impl Tracer {
+    /// Tracer sampling 1-in-`n` tasks (`n == 0` = off — callers gate on
+    /// [`Self::enabled`] and never reach the recording path).
+    pub fn new(sample_n: u32) -> Self {
+        Self::with_capacity(sample_n, SPAN_RING_CAP)
+    }
+
+    /// Tracer with an explicit raw-span ring bound.
+    pub fn with_capacity(sample_n: u32, cap: usize) -> Self {
+        Self {
+            sample_n,
+            stages: std::array::from_fn(|_| Log2Histogram::new()),
+            spans: Mutex::new(SpanRing { buf: Vec::new(), next: 0, cap: cap.max(1) }),
+            recorded: AtomicU64::new(0),
+            clock_offset_ns: Gauge::new(),
+            clock_error_ns: Gauge::new(),
+        }
+    }
+
+    /// Advertised sampling modulus N (tasks are traced iff
+    /// `sampled(job, n)`).
+    pub fn sample_n(&self) -> u32 {
+        self.sample_n
+    }
+
+    /// Whether tracing is on at all.
+    pub fn enabled(&self) -> bool {
+        self.sample_n > 0
+    }
+
+    /// Whether `job` is in the deterministic sample.
+    #[inline]
+    pub fn sampled(&self, job: u64) -> bool {
+        sampled(job, self.sample_n)
+    }
+
+    /// Record one completed span into the stage histograms and the raw
+    /// ring.
+    pub fn record(&self, rec: SpanRecord) {
+        for (h, &us) in self.stages.iter().zip(rec.stages_us.iter()) {
+            h.record(u64::from(us));
+        }
+        self.spans.lock().unwrap().push(rec);
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record the in-process lifecycle of one completed task, sampled by
+    /// task-id hash like the cross-process path. There are no wire legs,
+    /// so only the queue/service/reply stages are populated (decide,
+    /// coalesce and wire stay zero) and the origin is reconstructed by
+    /// rewinding the completion instant by the measured sojourn
+    /// (queue wait + service).
+    pub fn record_completion(&self, job: u64, queue_wait_s: f64, duration_s: f64, done: Instant) {
+        if !self.sampled(job) {
+            return;
+        }
+        let done_ns = ns_of(done);
+        let us = |s: f64| (s.max(0.0) * 1e6).min(u32::MAX as f64) as u32;
+        let queue_us = us(queue_wait_s);
+        let service_us = us(duration_s);
+        let reply_us =
+            (now_ns().saturating_sub(done_ns) / 1_000).min(u64::from(u32::MAX)) as u32;
+        let sojourn_s = (queue_wait_s + duration_s).max(0.0);
+        let origin_ns = done_ns.saturating_sub((sojourn_s * 1e9) as u64);
+        self.record(SpanRecord {
+            job,
+            origin_us: origin_ns / 1_000,
+            stages_us: [0, 0, 0, queue_us, service_us, reply_us],
+        });
+    }
+
+    /// Update the exported clock gauges.
+    pub fn set_clock(&self, offset_ns: f64, error_ns: f64) {
+        self.clock_offset_ns.set(offset_ns);
+        self.clock_error_ns.set(error_ns);
+    }
+
+    /// Spans recorded over the tracer's lifetime (the ring may hold
+    /// fewer).
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the retained raw spans, oldest-first.
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        self.spans.lock().unwrap().snapshot()
+    }
+
+    /// Snapshot one stage histogram.
+    pub fn stage_snapshot(&self, stage: usize) -> HistSnapshot {
+        self.stages[stage].snapshot()
+    }
+
+    /// Append the Prometheus exposition for the trace surface:
+    /// `rosella_stage_us{stage=...}` histograms (cumulative buckets with
+    /// the empty tail collapsed into `+Inf`, like [`Expo::histogram`]),
+    /// the span counter, and the clock gauges.
+    pub fn render_prometheus(&self, out: &mut String) {
+        let mut e = Expo::new();
+        e.header("rosella_stage_us", "histogram");
+        for (i, name) in STAGES.iter().enumerate() {
+            let snap = self.stages[i].snapshot();
+            let hi = snap.counts.iter().rposition(|&c| c > 0).unwrap_or(0);
+            let mut acc = 0u64;
+            for (b, &c) in snap.counts.iter().enumerate().take((hi + 1).min(LOG2_BUCKETS - 1)) {
+                acc += c;
+                let le = format!("{}", bucket_upper(b));
+                e.sample("rosella_stage_us_bucket", &[("stage", name), ("le", &le)], acc as f64);
+            }
+            e.sample(
+                "rosella_stage_us_bucket",
+                &[("stage", name), ("le", "+Inf")],
+                snap.count() as f64,
+            );
+            e.sample("rosella_stage_us_sum", &[("stage", name)], snap.sum as f64);
+            e.sample("rosella_stage_us_count", &[("stage", name)], snap.count() as f64);
+        }
+        e.counter("rosella_trace_spans_total", &[(&[], self.recorded())]);
+        e.gauge("rosella_clock_offset_ns", &[(&[], self.clock_offset_ns.get())]);
+        e.gauge("rosella_clock_error_ns", &[(&[], self.clock_error_ns.get())]);
+        out.push_str(&e.finish());
+    }
+
+    /// Render the retained spans as Chrome trace-event JSON (complete
+    /// `"ph":"X"` events, µs timestamps), loadable in Perfetto. Each
+    /// task renders as six stacked stage events on `pid` = shard id,
+    /// `tid` = low task-sequence bits.
+    pub fn render_chrome_json(&self) -> String {
+        let spans = self.spans();
+        let mut out = String::with_capacity(64 + spans.len() * 6 * 96);
+        out.push_str("{\"traceEvents\":[");
+        let mut first = true;
+        for s in &spans {
+            let pid = (s.job >> 48) as u32;
+            let tid = s.job & 0xFFFF_FFFF;
+            let mut ts = s.origin_us;
+            for (i, name) in STAGES.iter().enumerate() {
+                if !first {
+                    out.push(',');
+                }
+                first = false;
+                out.push_str(&format!(
+                    "{{\"name\":\"{name}\",\"cat\":\"task\",\"ph\":\"X\",\"pid\":{pid},\
+                     \"tid\":{tid},\"ts\":{ts},\"dur\":{dur},\"args\":{{\"job\":{job}}}}}",
+                    dur = s.stages_us[i],
+                    job = s.job,
+                ));
+                ts += u64::from(s.stages_us[i]);
+            }
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Dump [`Self::render_chrome_json`] to a file.
+    pub fn dump_chrome_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.render_chrome_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeline_is_monotonic_and_shared() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+        let c = ns_of(Instant::now());
+        assert!(c >= b);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_roughly_one_in_n() {
+        assert!(!sampled(1, 0), "n=0 must disable sampling");
+        assert!(sampled(17, 1), "n=1 must trace everything");
+        let n = 64u32;
+        let hits = (0..64_000u64).filter(|&j| sampled(j, n)).count();
+        // Deterministic: same answer twice.
+        assert_eq!(hits, (0..64_000u64).filter(|&j| sampled(j, n)).count());
+        // Well-mixed: within a loose factor of the expected 1000.
+        assert!((400..2500).contains(&hits), "1/64 sampling hit {hits} of 64000");
+    }
+
+    #[test]
+    fn sample_spec_parses_canonical_and_bare_forms() {
+        assert_eq!(parse_sample("1/64"), Ok(64));
+        assert_eq!(parse_sample("1024"), Ok(1024));
+        assert_eq!(parse_sample("off"), Ok(0));
+        assert_eq!(parse_sample("0"), Ok(0));
+        assert!(parse_sample("2/64").is_err());
+        assert!(parse_sample("1/").is_err());
+        assert!(parse_sample("fast").is_err());
+    }
+
+    #[test]
+    fn clock_align_recovers_exact_offset_under_symmetric_delay() {
+        // Remote clock runs 5 ms ahead; both legs take 100 µs.
+        let mut c = ClockAlign::new();
+        let (skew, leg) = (5_000_000i64, 100_000u64);
+        let t0 = 1_000_000u64;
+        let t1 = (t0 + leg) as i64 + skew;
+        let t2 = t1 + 30_000; // remote processing
+        let t3 = (t2 - skew) as u64 + leg;
+        c.observe(t0, t1 as u64, t2 as u64, t3);
+        assert!(c.aligned());
+        assert_eq!(c.offset_ns(), skew as f64);
+        assert_eq!(c.error_ns(), leg as f64);
+        // Round-trip mapping is consistent.
+        assert_eq!(c.to_local_ns(c.to_remote_ns(42_000)), 42_000);
+    }
+
+    #[test]
+    fn clock_align_error_is_bounded_by_half_delay_under_asymmetry() {
+        // Outbound 900 µs, return 100 µs: worst-case asymmetric routing.
+        let (skew, a, b) = (2_000_000i64, 900_000u64, 100_000u64);
+        let mut c = ClockAlign::new();
+        let t0 = 500_000u64;
+        let t1 = (t0 + a) as i64 + skew;
+        let t2 = t1 + 10_000;
+        let t3 = (t2 - skew) as u64 + b;
+        c.observe(t0, t1 as u64, t2 as u64, t3);
+        let err = (c.offset_ns() - skew as f64).abs();
+        // Analytically the error is exactly |a − b| / 2, and always
+        // within the advertised δ/2 bound.
+        assert_eq!(err, (a as f64 - b as f64).abs() / 2.0);
+        assert!(err <= c.error_ns() + 1e-9, "error {err} exceeds bound {}", c.error_ns());
+    }
+
+    #[test]
+    fn clock_align_keeps_the_minimum_delay_exchange() {
+        let mut c = ClockAlign::new();
+        // Noisy exchange: huge delay, wildly wrong offset.
+        c.observe(0, 10_000_000, 10_000_000, 20_000_000);
+        let noisy = c.offset_ns();
+        // Clean exchange: tight delay, true offset 1 ms.
+        c.observe(100_000, 1_150_000, 1_160_000, 220_000);
+        assert_ne!(c.offset_ns(), noisy);
+        assert_eq!(c.offset_ns(), 1_000_000.0 - 5_000.0);
+        assert_eq!(c.exchanges(), 2);
+        // A later, worse exchange does not displace the best one.
+        let best = c.offset_ns();
+        c.observe(0, 50_000_000, 50_000_000, 30_000_000);
+        assert_eq!(c.offset_ns(), best);
+    }
+
+    #[test]
+    fn tracer_aggregates_spans_and_bounds_the_ring() {
+        let t = Tracer::with_capacity(1, 4);
+        for j in 0..10u64 {
+            t.record(SpanRecord {
+                job: j,
+                origin_us: j * 100,
+                stages_us: [1, 2, 3, 4, 5, 6],
+            });
+        }
+        assert_eq!(t.recorded(), 10);
+        let spans = t.spans();
+        assert_eq!(spans.len(), 4, "ring must stay bounded");
+        // Oldest-first snapshot of the last 4.
+        assert_eq!(spans[0].job, 6);
+        assert_eq!(spans[3].job, 9);
+        assert_eq!(t.stage_snapshot(STAGE_SERVICE).count(), 10);
+        assert_eq!(t.stage_snapshot(STAGE_SERVICE).sum, 50);
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_stacked_complete_events() {
+        let t = Tracer::with_capacity(64, 8);
+        t.record(SpanRecord {
+            job: (3u64 << 48) | 7,
+            origin_us: 1000,
+            stages_us: [10, 0, 5, 20, 40, 2],
+        });
+        let json = t.render_chrome_json();
+        let v = crate::config::json::parse(&json).expect("chrome export parses as JSON");
+        let events = v.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+        assert_eq!(events.len(), STAGES.len());
+        let mut expect_ts = 1000.0;
+        for (i, ev) in events.iter().enumerate() {
+            assert_eq!(ev.get("ph").and_then(|p| p.as_str()), Some("X"));
+            assert_eq!(
+                ev.get("name").and_then(|n| n.as_str()),
+                Some(STAGES[i]),
+                "stage order preserved"
+            );
+            assert_eq!(ev.get("pid").and_then(|p| p.as_f64()), Some(3.0));
+            assert_eq!(ev.get("ts").and_then(|t| t.as_f64()), Some(expect_ts));
+            expect_ts += ev.get("dur").and_then(|d| d.as_f64()).unwrap();
+        }
+    }
+
+    #[test]
+    fn prometheus_surface_exposes_every_stage_with_labels() {
+        let t = Tracer::new(64);
+        t.record(SpanRecord { job: 1, origin_us: 0, stages_us: [1, 1, 1, 1, 1, 1] });
+        t.set_clock(1234.5, 99.0);
+        let mut out = String::new();
+        t.render_prometheus(&mut out);
+        for s in STAGES {
+            assert!(
+                out.contains(&format!("rosella_stage_us_count{{stage=\"{s}\"}} 1")),
+                "missing stage {s} in:\n{out}"
+            );
+            assert!(out.contains(&format!("rosella_stage_us_bucket{{stage=\"{s}\",le=\"+Inf\"}} 1")));
+        }
+        assert!(out.contains("rosella_trace_spans_total 1"));
+        assert!(out.contains("rosella_clock_offset_ns 1234.5"));
+        assert!(out.contains("rosella_clock_error_ns 99"));
+        assert!(crate::obs::expo::is_well_formed(&out), "malformed exposition:\n{out}");
+    }
+}

@@ -263,6 +263,13 @@ pub struct PlaneConfig {
     /// (pin shards and workers, decisions unchanged), or `Sockets`
     /// (pinning plus socket-local probing).
     pub pin: PinMode,
+    /// Lifecycle-trace sampling: record one task in `trace_sample`
+    /// (deterministic by task-id hash). `0` = tracing off (default): the
+    /// decision and completion paths take zero extra clock reads.
+    pub trace_sample: u32,
+    /// Dump the sampled spans as Chrome trace-event JSON (Perfetto-loadable)
+    /// to this path at drain. Requires `trace_sample > 0`.
+    pub trace_json: Option<String>,
 }
 
 impl Default for PlaneConfig {
@@ -291,6 +298,8 @@ impl Default for PlaneConfig {
             metrics_listen: None,
             flight_record: None,
             pin: PinMode::None,
+            trace_sample: 0,
+            trace_json: None,
         }
     }
 }
@@ -423,6 +432,7 @@ struct AggCtx {
     seed: u64,
     start: Instant,
     obs: Arc<crate::obs::Registry>,
+    tracer: Option<Arc<crate::obs::Tracer>>,
 }
 
 /// What the aggregator hands back at drain.
@@ -510,6 +520,9 @@ fn record_completion(
             let slot = ctx.obs.shard(s);
             slot.completed.inc();
             slot.response_us.record(((now_s - c.sojourn).max(0.0) * 1e6) as u64);
+        }
+        if let Some(tr) = ctx.tracer.as_ref() {
+            tr.record_completion(c.job, c.queue_wait(), c.duration, c.at);
         }
         // Release pairs with the Acquire load in `run_plane`'s stop
         // snapshot: a task counted here already left its queue probe.
@@ -685,10 +698,16 @@ pub fn run_plane(cfg: PlaneConfig) -> Result<PlaneReport, String> {
     let flight = cfg.flight_record.as_deref().map(|_| {
         Arc::new(crate::obs::FlightRecorder::new(k, crate::obs::flight::DEFAULT_CAPACITY))
     });
+    let tracer =
+        (cfg.trace_sample > 0).then(|| Arc::new(crate::obs::Tracer::new(cfg.trace_sample)));
     let metrics = match cfg.metrics_listen.as_deref() {
-        Some(addr) => {
-            Some(spawn_metrics_server(addr, obs.clone(), flight.clone(), qlen.clone())?)
-        }
+        Some(addr) => Some(spawn_metrics_server(
+            addr,
+            obs.clone(),
+            flight.clone(),
+            qlen.clone(),
+            tracer.clone(),
+        )?),
         None => None,
     };
 
@@ -746,6 +765,7 @@ pub fn run_plane(cfg: PlaneConfig) -> Result<PlaneReport, String> {
                 seed: cfg.seed,
                 start,
                 obs: obs.clone(),
+                tracer: tracer.clone(),
             };
             Some(
                 std::thread::Builder::new()
@@ -792,6 +812,7 @@ pub fn run_plane(cfg: PlaneConfig) -> Result<PlaneReport, String> {
                 .then(|| cfg.sync_policy.scaled_threshold(k)),
             obs: obs.clone(),
             flight: flight.clone(),
+            tracer: tracer.clone(),
             learner: shard_rx_iter.next().map(|comp_rx| shard::ShardLearner {
                 comp_rx,
                 views: views.as_ref().expect("per-shard views exist").clone(),
@@ -900,6 +921,9 @@ pub fn run_plane(cfg: PlaneConfig) -> Result<PlaneReport, String> {
         std::fs::write(path, rec.dump_jsonl())
             .map_err(|e| format!("write flight record {path}: {e}"))?;
     }
+    if let (Some(tr), Some(path)) = (tracer.as_ref(), cfg.trace_json.as_ref()) {
+        tr.dump_chrome_json(path).map_err(|e| format!("write trace json {path}: {e}"))?;
+    }
 
     Ok(PlaneReport {
         frontends: k,
@@ -929,14 +953,16 @@ pub fn run_plane(cfg: PlaneConfig) -> Result<PlaneReport, String> {
 /// Start the scrape endpoint over a live registry: `/metrics` serves the
 /// standard exposition plus live per-worker queue gauges and the
 /// process-wide wire-frame counters; `/flight` serves the recorder's
-/// JSONL when a recorder is on (404 otherwise). Shared by the in-process
-/// plane and the `--listen` pool server so both modes expose the same
-/// surface.
+/// JSONL when a recorder is on (404 otherwise); `/trace` serves the
+/// sampled lifecycle spans as Chrome trace-event JSON when tracing is on
+/// (404 otherwise). Shared by the in-process plane and the `--listen`
+/// pool server so both modes expose the same surface.
 pub(crate) fn spawn_metrics_server(
     addr: &str,
     obs: Arc<crate::obs::Registry>,
     flight: Option<Arc<crate::obs::FlightRecorder>>,
     qlen: Vec<Arc<CachePadded<AtomicUsize>>>,
+    tracer: Option<Arc<crate::obs::Tracer>>,
 ) -> Result<crate::obs::MetricsServer, String> {
     let handler: Arc<crate::obs::scrape::Handler> = Arc::new(move |path: &str| match path {
         "/metrics" => {
@@ -956,10 +982,20 @@ pub(crate) fn spawn_metrics_server(
             e.counter("rosella_wire_frames_received_total", &[(&[], wire.frames_received)]);
             e.counter("rosella_wire_bytes_sent_total", &[(&[], wire.bytes_sent)]);
             e.counter("rosella_wire_bytes_received_total", &[(&[], wire.bytes_received)]);
-            Some((crate::obs::scrape::EXPOSITION_CONTENT_TYPE, e.finish()))
+            if let Some(rec) = flight.as_ref() {
+                e.counter("rosella_flight_dropped_total", &[(&[], rec.dropped())]);
+            }
+            let mut body = e.finish();
+            if let Some(tr) = tracer.as_ref() {
+                tr.render_prometheus(&mut body);
+            }
+            Some((crate::obs::scrape::EXPOSITION_CONTENT_TYPE, body))
         }
         "/flight" => {
             flight.as_ref().map(|rec| ("application/x-ndjson", rec.dump_jsonl()))
+        }
+        "/trace" => {
+            tracer.as_ref().map(|tr| ("application/json", tr.render_chrome_json()))
         }
         _ => None,
     });
@@ -1074,6 +1110,11 @@ pub fn plane_cli(p: &crate::cli::Parsed) -> Result<String, String> {
         metrics_listen: p.get("metrics-listen").map(str::to_string),
         flight_record: p.get("flight-record").map(str::to_string),
         pin: PinMode::parse(p.get("pin").unwrap_or("none"))?,
+        trace_sample: match p.get("trace-sample") {
+            Some(spec) => crate::obs::trace::parse_sample(spec)?,
+            None => 0,
+        },
+        trace_json: p.get("trace-json").map(str::to_string),
         ..PlaneConfig::default()
     };
     let reports = sweep(&base, &frontend_counts)?;
@@ -1514,20 +1555,36 @@ mod tests {
         );
         let qlen: Vec<Arc<CachePadded<AtomicUsize>>> =
             (0..2).map(|i| Arc::new(CachePadded::new(AtomicUsize::new(i)))).collect();
-        let srv =
-            spawn_metrics_server("127.0.0.1:0", obs, Some(flight), qlen).unwrap();
+        let tracer = Arc::new(crate::obs::Tracer::new(8));
+        tracer.record(crate::obs::SpanRecord {
+            job: 0,
+            origin_us: 5,
+            stages_us: [1, 2, 3, 4, 5, 6],
+        });
+        let srv = spawn_metrics_server(
+            "127.0.0.1:0",
+            obs,
+            Some(flight),
+            qlen,
+            Some(tracer),
+        )
+        .unwrap();
         let addr = srv.addr();
         let body = http_get(addr, "/metrics");
         assert!(body.starts_with("HTTP/1.1 200"), "bad response: {body}");
         assert!(body.contains("rosella_tasks_completed_total{shard=\"0\"} 3"));
         assert!(body.contains("rosella_worker_queue_len{worker=\"1\"} 1"));
         assert!(body.contains("rosella_wire_frames_sent_total"));
+        assert!(body.contains("rosella_flight_dropped_total 0"));
+        assert!(body.contains("rosella_stage_us"), "stage histograms missing: {body}");
         // Topology gauges are served even with pinning off: −1 sentinel,
         // never a missing series.
         assert!(body.contains("rosella_shard_cpu{shard=\"0\"} -1"));
         assert!(body.contains("rosella_cross_socket_decisions_total{shard=\"0\"} 0"));
         let fl = http_get(addr, "/flight");
         assert!(fl.contains("\"chosen\""), "flight route missing event: {fl}");
+        let tr = http_get(addr, "/trace");
+        assert!(tr.contains("traceEvents"), "trace route missing spans: {tr}");
         assert!(http_get(addr, "/nope").starts_with("HTTP/1.1 404"));
         srv.shutdown();
     }

@@ -352,6 +352,9 @@ pub(crate) struct ShardRun {
     /// Decision flight recorder (opt-in; adds two clock reads and a probe
     /// trace per decision when present).
     pub flight: Option<Arc<crate::obs::FlightRecorder>>,
+    /// Lifecycle tracer (opt-in; records a queue/service/reply span for the
+    /// deterministic 1-in-N sample of completed real tasks).
+    pub tracer: Option<Arc<crate::obs::Tracer>>,
 }
 
 /// The channels a per-shard learner consumes and feeds.
@@ -464,6 +467,9 @@ impl ShardLearnState {
             let slot = ctx.obs.shard(self.shard);
             slot.completed.inc();
             slot.response_us.record((c.sojourn.max(0.0) * 1e6) as u64);
+            if let Some(tr) = ctx.tracer.as_ref() {
+                tr.record_completion(c.job, c.queue_wait(), c.duration, c.at);
+            }
             // Release pairs with the Acquire load in `run_plane`'s stop
             // snapshot: a task counted here already left its queue probe.
             self.completed_real.fetch_add(1, Ordering::Release);

@@ -141,6 +141,17 @@ pub struct TimelinePoint {
     pub queue_p99: u64,
     /// Jobs in flight (arrived, not yet fully completed).
     pub backlog: usize,
+    /// Median task queue-wait in µs over all completions so far (the DES
+    /// counterpart of the live tracer's `queue` stage; log2 bucket upper
+    /// bound, like `queue_p99`).
+    pub queue_wait_us_p50: u64,
+    /// p99 task queue-wait in µs over all completions so far.
+    pub queue_wait_us_p99: u64,
+    /// Median task service time in µs over all completions so far (the
+    /// `service` stage).
+    pub service_us_p50: u64,
+    /// p99 task service time in µs over all completions so far.
+    pub service_us_p99: u64,
 }
 
 impl TimelinePoint {
@@ -155,6 +166,10 @@ impl TimelinePoint {
         m.insert("speeds".into(), nums(&self.speeds));
         m.insert("queue_p99".into(), Json::Num(self.queue_p99 as f64));
         m.insert("backlog".into(), Json::Num(self.backlog as f64));
+        m.insert("queue_wait_us_p50".into(), Json::Num(self.queue_wait_us_p50 as f64));
+        m.insert("queue_wait_us_p99".into(), Json::Num(self.queue_wait_us_p99 as f64));
+        m.insert("service_us_p50".into(), Json::Num(self.service_us_p50 as f64));
+        m.insert("service_us_p99".into(), Json::Num(self.service_us_p99 as f64));
         Json::Obj(m)
     }
 }
@@ -288,6 +303,10 @@ pub struct Simulation {
     queues: Option<QueueStats>,
     estimate_error: Vec<(f64, f64)>,
     timeline: Vec<TimelinePoint>,
+    /// Per-completion stage decomposition (queue-wait µs, service µs),
+    /// recorded only when the timeline is on — the DES counterpart of the
+    /// live tracer's stage histograms.
+    stage_hists: Option<(crate::obs::Log2Histogram, crate::obs::Log2Histogram)>,
     /// Minimum guaranteed total service throughput μ̄ (tasks/sec).
     pub mu_bar_tasks: f64,
 }
@@ -375,6 +394,9 @@ impl Simulation {
             queues: cfg.queue_sample.map(|_| QueueStats::new(n)),
             estimate_error: Vec::new(),
             timeline: Vec::new(),
+            stage_hists: cfg
+                .timeline
+                .map(|_| (crate::obs::Log2Histogram::new(), crate::obs::Log2Histogram::new())),
             mu_bar_tasks,
             workload,
             cfg,
@@ -680,7 +702,14 @@ impl Simulation {
     fn on_completion(&mut self, w: usize) {
         // Stale completions (from before a speed shock) are cancelled at
         // the source inside `EventQueue`; whatever arrives here is live.
-        let (task, duration, _wait) = self.workers[w].complete(self.now);
+        let (task, duration, wait) = self.workers[w].complete(self.now);
+        // Stage decomposition for the telemetry timeline: queue-wait and
+        // service per completion. Read-only against the decision state —
+        // no RNG draw, no queue mutation — so determinism is unaffected.
+        if let Some((qh, sh)) = self.stage_hists.as_ref() {
+            qh.record((wait.max(0.0) * 1e6) as u64);
+            sh.record((duration.max(0.0) * 1e6) as u64);
+        }
         // Every completion (real or benchmark) is a service sample (§5:
         // "when a benchmark or real task completes, the node monitor
         // reports an updated estimation of worker speed"), reported to the
@@ -892,6 +921,14 @@ impl Simulation {
         for &q in &self.qlen {
             hist.record(q as u64);
         }
+        let (queue_wait_us_p50, queue_wait_us_p99, service_us_p50, service_us_p99) =
+            match self.stage_hists.as_ref() {
+                Some((qh, sh)) => {
+                    let (q, s) = (qh.snapshot(), sh.snapshot());
+                    (q.quantile(0.5), q.quantile(0.99), s.quantile(0.5), s.quantile(0.99))
+                }
+                None => (0, 0, 0, 0),
+            };
         self.timeline.push(TimelinePoint {
             t: self.now,
             lambda_hat: self.lambda_learn(),
@@ -899,6 +936,10 @@ impl Simulation {
             speeds: self.speeds.clone(),
             queue_p99: hist.snapshot().quantile(0.99),
             backlog: self.jobs.len() + self.singles_in_flight,
+            queue_wait_us_p50,
+            queue_wait_us_p99,
+            service_us_p50,
+            service_us_p99,
         });
     }
 }
@@ -1194,12 +1235,24 @@ mod tests {
             assert_eq!(p.mu_hat.len(), n);
             assert_eq!(p.speeds.len(), n);
             assert!(p.lambda_hat >= 0.0);
+            // Log2 bucket upper bounds are monotone in the quantile.
+            assert!(p.queue_wait_us_p99 >= p.queue_wait_us_p50);
+            assert!(p.service_us_p99 >= p.service_us_p50);
         }
+        // By the end of a 120 s run the stage decomposition has samples:
+        // service time is never zero for a completed task.
+        let last = sampled.timeline.last().unwrap();
+        assert!(last.service_us_p50 > 0, "no service-stage samples: {last:?}");
         // JSON rendering round-trips through the hand-rolled parser.
         let rendered = crate::config::to_string(&timeline_json(&sampled.timeline));
         let parsed = crate::config::parse(&rendered).expect("timeline JSON parses");
         match parsed {
-            crate::config::Json::Arr(items) => assert_eq!(items.len(), sampled.timeline.len()),
+            crate::config::Json::Arr(items) => {
+                assert_eq!(items.len(), sampled.timeline.len());
+                let p0 = &items[0];
+                assert!(p0.get("service_us_p50").is_some(), "stage keys missing from JSON");
+                assert!(p0.get("queue_wait_us_p99").is_some());
+            }
             other => panic!("expected array, got {other:?}"),
         }
     }

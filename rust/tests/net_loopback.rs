@@ -261,6 +261,134 @@ fn server_times_out_when_frontends_never_connect() {
 }
 
 #[test]
+fn traced_loopback_stage_sums_reconcile_with_response_times() {
+    // The tentpole acceptance: a traced loopback run assembles complete
+    // six-stage lifecycle spans whose stage sums reconcile with the
+    // frontend-measured response time, and the server dumps them as
+    // Perfetto-loadable Chrome trace-event JSON.
+    let trace_path = std::env::temp_dir()
+        .join(format!("rosella_trace_loopback_{}.json", std::process::id()));
+    let cfg = NetServerConfig {
+        speeds: vec![2.0, 0.25],
+        rate: 200.0,
+        duration: 1.5,
+        mean_demand: 0.004,
+        trace_sample: 4,
+        trace_json: Some(trace_path.to_str().unwrap().to_string()),
+        ..quick_cfg(2, SyncPolicyConfig::periodic())
+    };
+    let (net, reports) = run_loopback(cfg);
+    assert_eq!(net.completed, net.dispatched, "tracing must not lose tasks");
+    assert!(net.traced_spans > 0, "server aggregated no lifecycle spans");
+    for (i, r) in reports.iter().enumerate() {
+        assert!(r.traced > 0, "frontend {i} assembled no spans");
+        // Stage decomposition reconciles: decide + coalesce + wire +
+        // queue + service + reply covers the measured lifetime to within
+        // 5% (the only unaccounted gap is the server's receive-to-enqueue
+        // dispatch, microseconds against millisecond tasks).
+        assert!(
+            r.trace_max_dev_pct <= 5.0,
+            "frontend {i}: stage sums deviate {:.2}% from response time",
+            r.trace_max_dev_pct
+        );
+    }
+    // The dump is valid JSON holding complete ("ph":"X") events named
+    // after the lifecycle stages — what Perfetto's Chrome-trace importer
+    // requires.
+    let dump = std::fs::read_to_string(&trace_path).expect("trace json written");
+    let _ = std::fs::remove_file(&trace_path);
+    let doc = rosella::config::parse(&dump).expect("trace json parses");
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("traceEvents array");
+    assert!(events.len() >= 6, "expected at least one full span, got {}", events.len());
+    let stages: Vec<&str> = rosella::obs::STAGES.to_vec();
+    for ev in events {
+        assert_eq!(ev.get("ph").and_then(|p| p.as_str()), Some("X"));
+        let name = ev.get("name").and_then(|n| n.as_str()).expect("event name");
+        assert!(stages.contains(&name), "unknown stage {name}");
+        assert!(ev.get("ts").and_then(|t| t.as_u64()).is_some());
+        assert!(ev.get("dur").and_then(|d| d.as_u64()).is_some());
+    }
+}
+
+#[test]
+fn v2_hello_gets_a_v2_ack_from_a_tracing_server() {
+    // Version negotiation, mirror rule: a v2 client (no Hello timestamp)
+    // talking to a v3 server with tracing ON must receive a byte-level v2
+    // HelloAck — no clock appendix the old decoder would choke on.
+    use rosella::net::wire::{header_payload_len, Msg, HEADER_LEN, MIN_VERSION};
+    use std::io::{Read, Write};
+
+    let mut cfg = quick_cfg(1, SyncPolicyConfig::periodic());
+    cfg.trace_sample = 64;
+    cfg.read_timeout = Duration::from_millis(500);
+    let server = NetServer::bind(cfg).unwrap();
+    let addr = server.local_addr().unwrap();
+    let server_handle = thread::spawn(move || server.serve());
+
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut frame = Vec::new();
+    // t0_ns: None is exactly what a v2 build emits (version-iff-appendix).
+    Msg::Hello { shard: 0, shards: 1, t0_ns: None }.encode_into(&mut frame);
+    assert_eq!(u16::from_le_bytes([frame[4], frame[5]]), MIN_VERSION);
+    s.write_all(&frame).unwrap();
+
+    let mut header = [0u8; HEADER_LEN];
+    s.read_exact(&mut header).unwrap();
+    let len = header_payload_len(&header).expect("valid ack header");
+    // The ack mirrors the client's version: v2 on the wire, not v3.
+    assert_eq!(u16::from_le_bytes([header[4], header[5]]), MIN_VERSION);
+    let mut body = vec![0u8; len];
+    s.read_exact(&mut body).unwrap();
+    let mut whole = header.to_vec();
+    whole.extend_from_slice(&body);
+    match Msg::decode(&whole).expect("ack decodes") {
+        Msg::HelloAck(ack) => {
+            assert!(ack.clock.is_none(), "v2 client must not receive a clock appendix");
+        }
+        other => panic!("expected HelloAck, got {other:?}"),
+    }
+    // Dropping the socket mid-run fails the server cleanly (not a hang).
+    drop(s);
+    assert!(server_handle.join().unwrap().is_err());
+}
+
+#[test]
+fn truncated_trace_appendix_is_rejected_at_the_handshake() {
+    // A hostile v3 Hello that claims a clock timestamp but truncates it
+    // must fail the run with a decode error — never a hang, never a
+    // garbage handshake.
+    use rosella::net::wire::{Msg, HEADER_LEN};
+    use std::io::Write;
+
+    let mut cfg = quick_cfg(1, SyncPolicyConfig::periodic());
+    cfg.read_timeout = Duration::from_millis(500);
+    let server = NetServer::bind(cfg).unwrap();
+    let addr = server.local_addr().unwrap();
+    let server_handle = thread::spawn(move || server.serve());
+
+    let mut frame = Vec::new();
+    Msg::Hello { shard: 0, shards: 1, t0_ns: Some(42) }.encode_into(&mut frame);
+    // Drop half the 8-byte timestamp appendix and shrink the declared
+    // payload length to match: a self-consistent frame whose appendix is
+    // too short to hold the timestamp it promises.
+    frame.truncate(frame.len() - 4);
+    let body_len = (frame.len() - HEADER_LEN) as u32;
+    frame[8..12].copy_from_slice(&body_len.to_le_bytes());
+
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.write_all(&frame).unwrap();
+    let err = server_handle.join().unwrap().unwrap_err();
+    assert!(
+        err.contains("decode") || err.contains("truncated") || err.contains("malformed"),
+        "expected a decode failure, got: {err}"
+    );
+}
+
+#[test]
 fn handshake_rejects_mismatched_topologies() {
     let server = NetServer::bind(quick_cfg(2, SyncPolicyConfig::periodic())).unwrap();
     let addr = server.local_addr().unwrap().to_string();
